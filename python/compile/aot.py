@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` 0.1.6 crate) rejects; the text parser reassigns ids
+and round-trips cleanly. Lowered with return_tuple=True — the Rust side
+unwraps with to_tupleN().
+
+Emits one artifact per tuning configuration (the Table-2 sweep, scaled per
+DESIGN.md §4) plus small self-test artifacts, and a manifest.json the Rust
+runtime uses for discovery.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--data-pow 22] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.minreduce import vmem_bytes
+
+# Table-2 sweep (scaled): data size = units * wg * ts = 2**data_pow.
+# (units, wg) pairs chosen so that, like the paper's Table 2, TS varies at
+# fixed WG (rows 1-3, 4-5, 6-8 ...) and WG varies at fixed global size.
+SWEEP = [
+    (64, 64), (32, 128), (16, 256),      # global 4096,  ts = data/4096
+    (128, 64), (64, 128),                # global 8192
+    (256, 64), (128, 128), (32, 512),    # global 16384
+    (256, 128), (64, 512),               # global 32768
+    (256, 256), (128, 512),              # global 65536
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_min(kind: str, units: int, wg: int, ts: int) -> str:
+    size = units * wg * ts
+    spec = jax.ShapeDtypeStruct((size,), jnp.int32)
+    fn = {"min_device": model.min_device, "min_fused": model.min_fused}[kind]
+    bound = functools.partial(fn, units=units, wg=wg, ts=ts)
+    return to_hlo_text(jax.jit(bound).lower(spec))
+
+
+def lower_abstract(wg: int, ts: int, n_tiles: int) -> str:
+    size = wg * n_tiles * ts
+    spec = jax.ShapeDtypeStruct((size,), jnp.float32)
+    bound = functools.partial(model.abstract_device, wg=wg, ts=ts,
+                              n_tiles=n_tiles)
+    return to_hlo_text(jax.jit(bound).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--data-pow", type=int, default=22,
+                    help="log2 of the Table-2 data size (paper: 4GB; scaled)")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the small self-test artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+
+    def emit(name: str, text: str, meta: dict) -> None:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "file": fname, **meta})
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    # Small artifacts: runtime smoke tests, examples/quickstart.
+    for kind in ("min_device", "min_fused"):
+        u, w, t = 4, 4, 4
+        emit(f"{kind}_small", lower_min(kind, u, w, t), {
+            "kind": kind, "units": u, "wg": w, "ts": t, "size": u * w * t,
+            "dtype": "i32", "vmem_bytes": vmem_bytes(w, t),
+        })
+    emit("abstract_small", lower_abstract(8, 16, 4), {
+        "kind": "abstract", "wg": 8, "ts": 16, "n_tiles": 4,
+        "size": 8 * 16 * 4, "dtype": "f32",
+    })
+
+    if not args.quick:
+        data = 1 << args.data_pow
+        for units, wg in SWEEP:
+            ts = data // (units * wg)
+            assert units * wg * ts == data
+            name = f"min_u{units}_wg{wg}_ts{ts}"
+            emit(name, lower_min("min_device", units, wg, ts), {
+                "kind": "min_device", "units": units, "wg": wg, "ts": ts,
+                "size": data, "dtype": "i32",
+                "vmem_bytes": vmem_bytes(wg, ts),
+            })
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"data_pow": args.data_pow, "artifacts": entries}, f,
+                  indent=2)
+    # Flat TSV for the Rust runtime (no JSON parser needed offline).
+    cols = ["name", "file", "kind", "units", "wg", "ts", "size", "dtype",
+            "vmem_bytes"]
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\t".join(cols) + "\n")
+        for e in entries:
+            row = [str(e.get(c, 0)) for c in cols]
+            f.write("\t".join(row) + "\n")
+    print(f"manifest: {len(entries)} artifacts -> {args.out_dir}/manifest.{{json,tsv}}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel mirroring the paper's *abstract* OpenCL kernel
+(paper §3.2, Listing 2).
+
+Each work item processes size/TS tiles; per tile it stages data to local
+memory (here: the BlockSpec HBM->VMEM copy), then accumulates with one of
+two branch functions selected by b(idx_l) (here: parity — even items fold
+with g1 = sum, odd items with g2 = max), synchronizing on the tile boundary
+(here: the sequential grid dimension is the barrier).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _abstract_kernel(x_ref, o_ref):
+    t = pl.program_id(0)
+    tile = x_ref[...]  # (WG, TS) block for this tile step
+    wg = tile.shape[0]
+    idx_l = jax.lax.broadcasted_iota(jnp.int32, (wg,), 0)
+    g1 = jnp.sum(tile, axis=1)          # branch for b(idx_l) == true
+    g2 = jnp.max(tile, axis=1) * 2.0    # branch for b(idx_l) == false
+    contrib = jnp.where(idx_l % 2 == 0, g1, g2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib
+
+
+def make_abstract(wg: int, ts: int, n_tiles: int, dtype=jnp.float32,
+                  interpret: bool = True):
+    """Abstract kernel for one workgroup of ``wg`` items over ``n_tiles``
+    tiles of ``ts`` elements each (size = wg * n_tiles * ts)."""
+    if wg <= 0 or ts <= 0 or n_tiles <= 0:
+        raise ValueError(f"config must be positive, got {(wg, ts, n_tiles)}")
+
+    def run(x):
+        size = wg * n_tiles * ts
+        if x.shape != (size,):
+            raise ValueError(f"expected {size} elements, got {x.shape}")
+        x2 = x.reshape(wg, n_tiles * ts)
+        return pl.pallas_call(
+            _abstract_kernel,
+            grid=(n_tiles,),
+            in_specs=[pl.BlockSpec((wg, ts), lambda t: (0, t))],
+            out_specs=pl.BlockSpec((wg,), lambda t: (0,)),
+            out_shape=jax.ShapeDtypeStruct((wg,), dtype),
+            interpret=interpret,
+        )(x2)
+
+    return run

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel for the paper's Minimum problem (paper §7.1, Listing 10).
+
+The OpenCL kernel tiles a large array over (units x WG) work items, each
+scanning TS elements (MAP), then work item 0 of each group reduces the
+group's partial minima from local memory (REDUCE local). On TPU the same
+insight maps to: stage HBM->VMEM in (WG, TS) blocks via BlockSpec (the
+analogue of the __local staging array), reduce on the VPU, and emit one
+partial minimum per workgroup; the final REDUCE-global stays on the host
+(the Rust coordinator), exactly like Listing 11.
+
+interpret=True throughout: CPU PJRT cannot execute Mosaic custom-calls, and
+interpret mode lowers to plain HLO that the Rust runtime can load.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _min_kernel(x_ref, o_ref):
+    """One grid step == one workgroup.
+
+    x_ref block: (WG, TS) — row r is work item r's tile.
+    o_ref block: (1,)     — this workgroup's partial minimum.
+    """
+    tile = x_ref[...]
+    # MAP: every work item reduces its TS-element tile (kernel lines 7-9).
+    per_item = jnp.min(tile, axis=1)
+    # REDUCE local: work item 0 folds the group's partials (lines 12-16).
+    o_ref[0] = jnp.min(per_item)
+
+
+def make_min_reduce(units: int, wg: int, ts: int, dtype=jnp.int32,
+                    interpret: bool = True):
+    """Build the tuned min-reduction for a (units, WG, TS) configuration.
+
+    Returns a function mapping a flat array of ``units*wg*ts`` elements to
+    the ``(units,)`` vector of per-workgroup minima.
+    """
+    if units <= 0 or wg <= 0 or ts <= 0:
+        raise ValueError(f"config must be positive, got {(units, wg, ts)}")
+    size = units * wg * ts
+
+    def run(x):
+        if x.shape != (size,):
+            raise ValueError(
+                f"expected flat input of {size} elements for config "
+                f"(units={units}, wg={wg}, ts={ts}), got {x.shape}")
+        x2 = x.reshape(units * wg, ts)
+        return pl.pallas_call(
+            _min_kernel,
+            grid=(units,),
+            in_specs=[pl.BlockSpec((wg, ts), lambda u: (u, 0))],
+            out_specs=pl.BlockSpec((1,), lambda u: (u,)),
+            out_shape=jax.ShapeDtypeStruct((units,), dtype),
+            interpret=interpret,
+        )(x2)
+
+    return run
+
+
+def vmem_bytes(wg: int, ts: int, dtype=jnp.int32) -> int:
+    """Estimated VMEM footprint of one grid step: the staged (WG, TS) input
+    block plus the (WG,) partials and the (1,) output."""
+    isz = jnp.dtype(dtype).itemsize
+    return wg * ts * isz + wg * isz + isz

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def min_reduce_ref(x, units: int, wg: int, ts: int):
+    """Per-workgroup minima of a flat (units*wg*ts,) array."""
+    return jnp.min(x.reshape(units, wg * ts), axis=1)
+
+
+def global_min_ref(x):
+    return jnp.min(x)
+
+
+def abstract_ref(x, wg: int, ts: int, n_tiles: int):
+    """Oracle for kernels.abstract: even items sum their row, odd items
+    accumulate 2*max per tile."""
+    x2 = x.reshape(wg, n_tiles, ts)
+    g1 = jnp.sum(x2, axis=(1, 2))
+    g2 = jnp.sum(jnp.max(x2, axis=2) * 2.0, axis=1)
+    idx = jnp.arange(wg)
+    return jnp.where(idx % 2 == 0, g1, g2)

@@ -1,0 +1,39 @@
+"""L2 JAX model: the Minimum-problem compute graph (paper §7, Listings 10-11)
+and the abstract-kernel graph (paper §3.2, Listing 2), both calling the L1
+Pallas kernels.
+
+These are lowered ONCE by aot.py to HLO text; the Rust coordinator loads the
+artifacts and drives them. The device-side graph mirrors the OpenCL split:
+the kernel produces per-workgroup minima, the host (Rust) does REDUCE-global.
+We additionally emit the fused variant (partials + global min in one call)
+so the runtime can validate its own host-side reduction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.abstract import make_abstract
+from compile.kernels.minreduce import make_min_reduce
+
+
+def min_device(x, *, units: int, wg: int, ts: int, dtype=jnp.int32):
+    """Device-side Minimum: per-workgroup minima (Listing 10). The host-side
+    final reduction (Listing 11, lines 22-24) is performed by the Rust
+    coordinator over this output."""
+    kern = make_min_reduce(units, wg, ts, dtype=dtype)
+    return (kern(x),)
+
+
+def min_fused(x, *, units: int, wg: int, ts: int, dtype=jnp.int32):
+    """Minimum with the global reduction folded into the graph; used by the
+    runtime's self-check (host reduce must agree with this)."""
+    (mins,) = min_device(x, units=units, wg=wg, ts=ts, dtype=dtype)
+    return (mins, jnp.min(mins))
+
+
+def abstract_device(x, *, wg: int, ts: int, n_tiles: int):
+    """Abstract-kernel graph: one workgroup of `wg` items over
+    `n_tiles` x `ts` tiles (Listing 2)."""
+    kern = make_abstract(wg, ts, n_tiles)
+    return (kern(x),)

@@ -1,0 +1,111 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps configurations (units, WG, TS), dtypes and adversarial
+data; every case asserts exact agreement with ref.py (min/sum/max over
+integers and floats are reduction-order-robust at these sizes).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.abstract import make_abstract
+from compile.kernels.minreduce import make_min_reduce, vmem_bytes
+from compile.kernels.ref import (abstract_ref, global_min_ref,
+                                 min_reduce_ref)
+
+POW2 = st.sampled_from([1, 2, 4, 8, 16])
+
+
+def _data(size, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return jnp.asarray(
+            rng.integers(info.min, info.max, size=size, dtype=dtype))
+    return jnp.asarray(rng.standard_normal(size).astype(dtype) * 100)
+
+
+@hypothesis.given(units=POW2, wg=POW2, ts=POW2, seed=st.integers(0, 2**31))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_min_reduce_matches_ref_i32(units, wg, ts, seed):
+    x = _data(units * wg * ts, np.int32, seed)
+    got = make_min_reduce(units, wg, ts)(x)
+    want = min_reduce_ref(x, units, wg, ts)
+    np.testing.assert_array_equal(got, want)
+
+
+@hypothesis.given(units=POW2, wg=POW2, ts=POW2, seed=st.integers(0, 2**31))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_min_reduce_matches_ref_f32(units, wg, ts, seed):
+    x = _data(units * wg * ts, np.float32, seed)
+    got = make_min_reduce(units, wg, ts, dtype=jnp.float32)(x)
+    want = min_reduce_ref(x, units, wg, ts)
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("units,wg,ts", [(1, 1, 1), (1, 8, 1), (8, 1, 1),
+                                         (1, 1, 8), (2, 4, 8)])
+def test_min_reduce_degenerate_shapes(units, wg, ts):
+    x = _data(units * wg * ts, np.int32, 7)
+    got = make_min_reduce(units, wg, ts)(x)
+    np.testing.assert_array_equal(got, min_reduce_ref(x, units, wg, ts))
+
+
+def test_min_reduce_extreme_values():
+    # INT32_MIN must survive the staging + reduce path.
+    x = jnp.full((4 * 4 * 4,), np.int32(np.iinfo(np.int32).max))
+    x = x.at[37].set(np.iinfo(np.int32).min)
+    got = make_min_reduce(4, 4, 4)(x)
+    assert int(jnp.min(got)) == np.iinfo(np.int32).min
+    assert int(global_min_ref(x)) == np.iinfo(np.int32).min
+
+
+def test_min_reduce_all_equal():
+    x = jnp.full((2 * 2 * 4,), np.int32(42))
+    np.testing.assert_array_equal(make_min_reduce(2, 2, 4)(x),
+                                  jnp.full((2,), 42, jnp.int32))
+
+
+def test_min_reduce_rejects_bad_shape():
+    with pytest.raises(ValueError, match="expected flat input"):
+        make_min_reduce(2, 2, 2)(jnp.zeros((9,), jnp.int32))
+    with pytest.raises(ValueError, match="positive"):
+        make_min_reduce(0, 2, 2)
+
+
+def test_min_reduce_workgroup_isolation():
+    # A tiny value in group 0 must not leak into group 1's partial.
+    x = jnp.arange(2 * 2 * 2, dtype=jnp.int32) + 100
+    x = x.at[0].set(-5)
+    got = make_min_reduce(2, 2, 2)(x)
+    assert int(got[0]) == -5
+    assert int(got[1]) == 104
+
+
+@hypothesis.given(wg=st.sampled_from([2, 4, 8]), ts=st.sampled_from([2, 4, 8]),
+                  n_tiles=st.sampled_from([1, 2, 4]),
+                  seed=st.integers(0, 2**31))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_abstract_matches_ref(wg, ts, n_tiles, seed):
+    x = _data(wg * ts * n_tiles, np.float32, seed)
+    got = make_abstract(wg, ts, n_tiles)(x)
+    want = abstract_ref(x, wg, ts, n_tiles)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_abstract_branch_divergence():
+    # Even items use g1 (sum), odd items use g2 (2*max) — verify both arms.
+    wg, ts, n_tiles = 4, 4, 2
+    x = jnp.ones((wg * ts * n_tiles,), jnp.float32)
+    got = np.asarray(make_abstract(wg, ts, n_tiles)(x))
+    np.testing.assert_allclose(got[0::2], 8.0)  # sum of 8 ones
+    np.testing.assert_allclose(got[1::2], 4.0)  # 2 tiles * 2*max(1)
+
+
+def test_vmem_estimate_monotone():
+    assert vmem_bytes(64, 64) < vmem_bytes(128, 64) < vmem_bytes(128, 128)
+    assert vmem_bytes(4, 4) == 4 * 4 * 4 + 4 * 4 + 4

@@ -1,0 +1,54 @@
+//! Checker micro-benchmarks: raw state-exploration throughput (the §Perf
+//! L3 hot path), store insert rates, and property-evaluation overhead.
+
+use mcautotune::checker::{check, CheckOptions, StoreKind, VisitedStore};
+use mcautotune::model::SafetyLtl;
+use mcautotune::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+use mcautotune::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("checker");
+
+    // end-to-end exploration rate on the native models (states/s)
+    let m = AbstractModel::new(256, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let states = check(&m, &p, &CheckOptions::default()).unwrap().stats.states_stored;
+    b.bench_elems(&format!("explore/abstract256-phase ({} states)", states), states, || {
+        check(&m, &p, &CheckOptions::default()).unwrap().stats.states_stored
+    });
+
+    let mt = AbstractModel::new(64, PlatformConfig::default(), Granularity::Tick).unwrap();
+    let states = check(&mt, &p, &CheckOptions::default()).unwrap().stats.states_stored;
+    b.bench_elems(&format!("explore/abstract64-tick ({} states)", states), states, || {
+        check(&mt, &p, &CheckOptions::default()).unwrap().stats.states_stored
+    });
+
+    let mm = MinModel::paper(256, 64).unwrap();
+    let states = check(&mm, &p, &CheckOptions::default()).unwrap().stats.states_stored;
+    b.bench_elems(&format!("explore/minimum256 ({} states)", states), states, || {
+        check(&mm, &p, &CheckOptions::default()).unwrap().stats.states_stored
+    });
+
+    // store insert throughput (100k distinct 24-byte states)
+    let items: Vec<[u8; 24]> = (0..100_000u64)
+        .map(|i| {
+            let mut a = [0u8; 24];
+            a[..8].copy_from_slice(&i.to_le_bytes());
+            a[8..16].copy_from_slice(&(i ^ 0xABCD).to_le_bytes());
+            a
+        })
+        .collect();
+    for kind in [
+        StoreKind::Full,
+        StoreKind::HashCompact,
+        StoreKind::Bitstate { log2_bits: 24, hashes: 3 },
+    ] {
+        b.bench_elems(&format!("store-insert/{}", kind.name()), items.len() as u64, || {
+            let mut s = VisitedStore::new(kind);
+            for it in &items {
+                black_box(s.insert(it));
+            }
+            s.len()
+        });
+    }
+}

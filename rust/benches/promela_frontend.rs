@@ -1,0 +1,46 @@
+//! Promela front-end benchmarks: parse+compile throughput and the
+//! interpreter's successor-generation rate (the §Perf reference-engine
+//! hot path).
+
+use mcautotune::checker::{check, CheckOptions};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::PlatformConfig;
+use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new("promela");
+
+    let src_min = templates::minimum_pml(16, 4, 3);
+    let src_abs = templates::abstract_pml(8, &PlatformConfig { gmt: 2, ..Default::default() });
+
+    b.bench_elems("parse+compile/minimum16", src_min.len() as u64, || {
+        PromelaSystem::from_source(&src_min).unwrap().prog.procs.len()
+    });
+
+    // raw interleaving engine: transitions/s over an exhaustive run
+    for (name, src) in [("minimum16", &src_min), ("abstract8-gmt2", &src_abs)] {
+        let sys = PromelaSystem::from_source(src).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let trans = check(&sys, &p, &CheckOptions::default()).unwrap().stats.transitions;
+        b.bench_elems(&format!("explore/{} ({} transitions)", name, trans), trans, || {
+            check(&sys, &p, &CheckOptions::default()).unwrap().stats.transitions
+        });
+    }
+
+    // successor generation on a fixed mid-run state
+    let sys = PromelaSystem::from_source(&src_min).unwrap();
+    let mut s = sys.initial_states().pop().unwrap();
+    let mut buf = Vec::new();
+    for _ in 0..200 {
+        sys.successors(&s, &mut buf);
+        if buf.is_empty() {
+            break;
+        }
+        s = buf[0].clone();
+    }
+    b.bench("successors/mid-state", || {
+        sys.successors(black_box(&s), &mut buf);
+        buf.len()
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench for the paper's Table 1: auto-tuning the abstract platform model
+//! across input sizes, exhaustive (bisection) vs swarm, plus the Promela
+//! engine on a small size for the SPIN-comparable cost.
+
+use mcautotune::checker::{check, CheckOptions};
+use mcautotune::model::SafetyLtl;
+use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
+use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new("table1");
+    let plat = PlatformConfig::default();
+    let swarm = SwarmConfig {
+        workers: 2,
+        time_budget: Duration::from_millis(1500),
+        ..Default::default()
+    };
+
+    for &size in &[8u32, 32, 128, 512, 1024] {
+        let m = AbstractModel::new(size, plat, Granularity::Phase).unwrap();
+        b.bench(&format!("exhaustive/size{}", size), || {
+            tune(&m, Method::Exhaustive, &CheckOptions::default(), &swarm, None).unwrap().t_min
+        });
+    }
+    for &size in &[256u32, 1024] {
+        let m = AbstractModel::new(size, plat, Granularity::Phase).unwrap();
+        b.bench(&format!("swarm/size{}", size), || {
+            tune(&m, Method::Swarm, &CheckOptions::default(), &swarm, None).unwrap().t_min
+        });
+    }
+    // the SPIN-comparable column: full-interleaving Promela exhaustive
+    for &size in &[8u32] {
+        let sys = PromelaSystem::from_source(&templates::abstract_pml(
+            size,
+            &PlatformConfig { gmt: 2, ..plat },
+        ))
+        .unwrap();
+        let mut o = CheckOptions::default();
+        o.collect_all = true;
+        b.bench(&format!("promela-exhaustive/size{}", size), || {
+            check(&sys, &SafetyLtl::non_termination(), &o).unwrap().violations.len()
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench for the paper's Table 2: the Minimum Pallas kernel executed via
+//! PJRT for every tuning configuration in the sweep. Prints the same
+//! (global size, WG, TS) -> ms / GB/s rows the paper reports.
+//!
+//! Requires `make artifacts`.
+
+use mcautotune::opencl::gen_data;
+use mcautotune::runtime::Engine;
+use mcautotune::util::bench::Bencher;
+
+fn main() {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("table2 bench skipped: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).unwrap();
+    let entries: Vec<_> = engine
+        .manifest()
+        .of_kind("min_device")
+        .filter(|e| !e.name.ends_with("_small"))
+        .cloned()
+        .collect();
+    let n = entries[0].size as usize;
+    let data = gen_data(n, 42);
+    let expected = *data.iter().min().unwrap();
+    let bytes = (n * 4) as u64;
+
+    let mut b = Bencher::new("table2");
+    for e in &entries {
+        // warm-up compiles the executable outside the timed region
+        let out = engine.run_min(&e.name, &data).unwrap();
+        assert_eq!(out.global_min, expected, "{} wrong", e.name);
+        b.bench_elems(
+            &format!("g{}/wg{}/ts{}", e.units * e.wg, e.wg, e.ts),
+            bytes,
+            || engine.run_min(&e.name, &data).unwrap().global_min,
+        );
+    }
+    println!("\n(bandwidth: thrpt column is bytes/s over the {} B input)", bytes);
+}

@@ -1,0 +1,36 @@
+//! Bench for the paper's Table 3: tuning the Minimum model for every
+//! (PEs, data size) group, both methods, plus the Promela engine.
+
+use mcautotune::checker::{check, CheckOptions};
+use mcautotune::model::SafetyLtl;
+use mcautotune::platform::MinModel;
+use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new("table3");
+    let swarm = SwarmConfig {
+        workers: 2,
+        time_budget: Duration::from_millis(1500),
+        ..Default::default()
+    };
+    for &(np, size) in &[(4u32, 16u32), (64, 64), (64, 128), (64, 256)] {
+        let m = MinModel::paper(size, np).unwrap();
+        b.bench(&format!("exhaustive/np{}/size{}", np, size), || {
+            tune(&m, Method::Exhaustive, &CheckOptions::default(), &swarm, None).unwrap().t_min
+        });
+        b.bench(&format!("swarm/np{}/size{}", np, size), || {
+            tune(&m, Method::Swarm, &CheckOptions::default(), &swarm, None).unwrap().t_min
+        });
+    }
+    // Promela engine on the small group
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(16, 4, 3)).unwrap();
+    let mut o = CheckOptions::default();
+    o.collect_all = true;
+    b.bench("promela-exhaustive/np4/size16", || {
+        check(&sys, &SafetyLtl::non_termination(), &o).unwrap().violations.len()
+    });
+}

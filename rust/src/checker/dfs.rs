@@ -1,0 +1,422 @@
+//! The explicit-state search engine — our SPIN.
+//!
+//! Iterative DFS over a [`TransitionSystem`] with a pluggable visited
+//! store, safety-property monitoring at every new state, trail
+//! reconstruction from the DFS stack, multi-error collection (SPIN `-e`),
+//! depth bound (SPIN `-m`), state/memory/time budgets, and optionally
+//! randomized successor order (the diversification knob swarm workers
+//! use).
+
+use super::store::{StoreKind, VisitedStore};
+use crate::model::{SafetyLtl, Trail, TransitionSystem, Violation};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Order {
+    InOrder,
+    /// Fisher-Yates-shuffled successors, seeded (swarm diversification).
+    Random(u64),
+}
+
+#[derive(Debug, Clone)]
+pub struct CheckOptions {
+    pub store: StoreKind,
+    /// SPIN -m: maximum search depth
+    pub max_depth: usize,
+    pub max_states: u64,
+    /// reproduces the paper's physical-RAM ceiling (Table 1: 16 GB M1)
+    pub memory_budget: u64,
+    pub time_budget: Option<Duration>,
+    /// SPIN -e: keep searching after the first violation
+    pub collect_all: bool,
+    pub max_errors: usize,
+    pub order: Order,
+}
+
+impl Default for CheckOptions {
+    fn default() -> Self {
+        Self {
+            store: StoreKind::Full,
+            max_depth: 10_000_000,
+            max_states: u64::MAX,
+            memory_budget: 16 << 30,
+            time_budget: None,
+            collect_all: false,
+            max_errors: 1_000_000,
+            order: Order::InOrder,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Abort {
+    DepthTruncated,
+    StateLimit,
+    MemoryLimit,
+    TimeLimit,
+    ErrorLimit,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    pub states_stored: u64,
+    pub states_matched: u64,
+    pub transitions: u64,
+    pub max_depth_reached: usize,
+    pub bytes_used: u64,
+    pub elapsed: Duration,
+    /// first limit that fired, if any
+    pub abort: Option<Abort>,
+}
+
+#[derive(Debug)]
+pub struct CheckReport<S> {
+    pub violations: Vec<Violation<S>>,
+    pub stats: SearchStats,
+    /// true iff the full reachable space (within no limits) was explored —
+    /// only then is "no counterexample" a proof that the property holds.
+    pub exhausted: bool,
+}
+
+impl<S> CheckReport<S> {
+    pub fn found(&self) -> bool {
+        !self.violations.is_empty()
+    }
+
+    /// Property verdict, SPIN-style: Ok(true) = property holds (proved),
+    /// Ok(false) = violated, Err = search was inconclusive (limits hit,
+    /// nothing found).
+    pub fn verdict(&self) -> Result<bool> {
+        if self.found() {
+            Ok(false)
+        } else if self.exhausted {
+            Ok(true)
+        } else {
+            anyhow::bail!("search inconclusive: no violation found but state space not exhausted ({:?})", self.stats.abort)
+        }
+    }
+}
+
+struct Frame<S> {
+    state: S,
+    succs: Vec<S>,
+    next: usize,
+}
+
+/// Verify `G(prop)` on `model`. Violations carry full trails.
+pub fn check<M: TransitionSystem>(
+    model: &M,
+    prop: &SafetyLtl,
+    opts: &CheckOptions,
+) -> Result<CheckReport<M::State>> {
+    let start = Instant::now();
+    let mut store = VisitedStore::new(opts.store);
+    let mut stats = SearchStats::default();
+    let mut violations = Vec::new();
+    let mut exhausted = true;
+    let mut rng = match opts.order {
+        Order::Random(seed) => Some(Xoshiro256::new(seed)),
+        Order::InOrder => None,
+    };
+    let mut enc = Vec::with_capacity(64);
+
+    // retained across iterations to avoid re-allocating successor vectors
+    let mut stack: Vec<Frame<M::State>> = Vec::new();
+
+    let check_state = |s: &M::State,
+                           depth: usize,
+                           stack: &[Frame<M::State>],
+                           violations: &mut Vec<Violation<M::State>>|
+     -> Result<()> {
+        let lookup = |name: &str| model.eval_var(s, name);
+        if !prop.holds(&lookup)? {
+            let mut states: Vec<M::State> =
+                stack.iter().map(|f| f.state.clone()).collect();
+            states.push(s.clone());
+            violations.push(Violation {
+                trail: Trail { states },
+                depth,
+                found_after: start.elapsed(),
+            });
+        }
+        Ok(())
+    };
+
+    'outer: for init in model.initial_states() {
+        model.encode(&init, &mut enc);
+        if !store.insert(&enc) {
+            stats.states_matched += 1;
+            continue;
+        }
+        stats.states_stored += 1;
+        check_state(&init, 0, &stack, &mut violations)?;
+        if violations.len() >= opts.max_errors || (!opts.collect_all && !violations.is_empty()) {
+            if violations.len() >= opts.max_errors {
+                stats.abort = Some(Abort::ErrorLimit);
+                exhausted = false;
+            }
+            break 'outer;
+        }
+
+        let mut succs = Vec::new();
+        model.successors(&init, &mut succs);
+        stats.transitions += succs.len() as u64;
+        if let Some(r) = rng.as_mut() {
+            r.shuffle(&mut succs);
+        }
+        stack.push(Frame { state: init, succs, next: 0 });
+
+        while let Some(top) = stack.last_mut() {
+            // take successors back-to-front: avoids a clone per transition
+            // (`next` counts consumed successors for stats only)
+            let Some(s) = top.succs.pop() else {
+                stack.pop();
+                continue;
+            };
+            top.next += 1;
+
+            model.encode(&s, &mut enc);
+            if !store.insert(&enc) {
+                stats.states_matched += 1;
+                continue;
+            }
+            stats.states_stored += 1;
+            let depth = stack.len();
+            stats.max_depth_reached = stats.max_depth_reached.max(depth);
+
+            check_state(&s, depth, &stack, &mut violations)?;
+            let err_limit = violations.len() >= opts.max_errors;
+            if err_limit || (!opts.collect_all && !violations.is_empty()) {
+                if err_limit {
+                    stats.abort = Some(Abort::ErrorLimit);
+                    exhausted = false;
+                }
+                break 'outer;
+            }
+
+            // budget checks (amortized: every 4096 stored states)
+            if stats.states_stored % 4096 == 0 {
+                if stats.states_stored >= opts.max_states {
+                    stats.abort = Some(Abort::StateLimit);
+                    exhausted = false;
+                    break 'outer;
+                }
+                if store.bytes_used() >= opts.memory_budget {
+                    stats.abort = Some(Abort::MemoryLimit);
+                    exhausted = false;
+                    break 'outer;
+                }
+                if let Some(tb) = opts.time_budget {
+                    if start.elapsed() >= tb {
+                        stats.abort = Some(Abort::TimeLimit);
+                        exhausted = false;
+                        break 'outer;
+                    }
+                }
+            }
+
+            if depth >= opts.max_depth {
+                // do not expand below the depth bound (SPIN -m semantics)
+                stats.abort.get_or_insert(Abort::DepthTruncated);
+                exhausted = false;
+                continue;
+            }
+
+            let mut succs = Vec::new();
+            model.successors(&s, &mut succs);
+            stats.transitions += succs.len() as u64;
+            if let Some(r) = rng.as_mut() {
+                r.shuffle(&mut succs);
+            }
+            stack.push(Frame { state: s, succs, next: 0 });
+        }
+    }
+
+    // Bitstate storage is inherently partial: a Bloom false positive may
+    // have pruned genuinely new states, so exhaustion cannot be claimed.
+    if matches!(opts.store, StoreKind::Bitstate { .. }) {
+        exhausted = false;
+    }
+    if !opts.collect_all && !violations.is_empty() {
+        exhausted = false; // stopped early by design
+    }
+
+    stats.bytes_used = store.bytes_used();
+    stats.elapsed = start.elapsed();
+    Ok(CheckReport { violations, stats, exhausted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransitionSystem;
+
+    /// Binary tree of depth `d`; leaves are terminal; value = path bits.
+    struct Tree {
+        depth: u32,
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+    struct TState {
+        level: u32,
+        path: u32,
+    }
+
+    impl TransitionSystem for Tree {
+        type State = TState;
+
+        fn initial_states(&self) -> Vec<TState> {
+            vec![TState { level: 0, path: 0 }]
+        }
+
+        fn successors(&self, s: &TState, out: &mut Vec<TState>) {
+            out.clear();
+            if s.level < self.depth {
+                out.push(TState { level: s.level + 1, path: s.path << 1 });
+                out.push(TState { level: s.level + 1, path: (s.path << 1) | 1 });
+            }
+        }
+
+        fn encode(&self, s: &TState, out: &mut Vec<u8>) {
+            out.clear();
+            out.extend_from_slice(&s.level.to_le_bytes());
+            out.extend_from_slice(&s.path.to_le_bytes());
+        }
+
+        fn eval_var(&self, s: &TState, name: &str) -> Option<i64> {
+            match name {
+                "level" => Some(s.level as i64),
+                "path" => Some(s.path as i64),
+                "leaf" => Some((s.level == self.depth) as i64),
+                _ => None,
+            }
+        }
+    }
+
+    #[test]
+    fn explores_full_tree() {
+        let m = Tree { depth: 10 };
+        let p = SafetyLtl::parse("G(level >= 0)").unwrap();
+        let r = check(&m, &p, &CheckOptions::default()).unwrap();
+        assert!(r.exhausted);
+        assert!(!r.found());
+        assert_eq!(r.verdict().unwrap(), true);
+        // 2^11 - 1 nodes
+        assert_eq!(r.stats.states_stored, 2047);
+        assert_eq!(r.stats.max_depth_reached, 10);
+    }
+
+    #[test]
+    fn finds_violation_with_trail() {
+        let m = Tree { depth: 8 };
+        // "no leaf has path 37" is false: path 37 = 0b00100101 exists
+        let p = SafetyLtl::parse("G(leaf -> path != 37)").unwrap();
+        let r = check(&m, &p, &CheckOptions::default()).unwrap();
+        assert!(r.found());
+        assert_eq!(r.verdict().unwrap(), false);
+        let v = &r.violations[0];
+        assert_eq!(v.trail.steps(), 8);
+        assert_eq!(v.trail.final_var(&m, "path"), Some(37));
+        // trail states form a parent-child chain
+        for w in v.trail.states.windows(2) {
+            assert_eq!(w[1].level, w[0].level + 1);
+            assert!(w[1].path >> 1 == w[0].path);
+        }
+    }
+
+    #[test]
+    fn collect_all_errors() {
+        let m = Tree { depth: 6 };
+        // every leaf violates: 64 errors
+        let p = SafetyLtl::parse("G(!leaf)").unwrap();
+        let mut o = CheckOptions::default();
+        o.collect_all = true;
+        let r = check(&m, &p, &o).unwrap();
+        assert_eq!(r.violations.len(), 64);
+        assert!(r.exhausted);
+        o.max_errors = 10;
+        let r = check(&m, &p, &o).unwrap();
+        assert_eq!(r.violations.len(), 10);
+        assert_eq!(r.stats.abort, Some(Abort::ErrorLimit));
+        assert!(!r.exhausted);
+    }
+
+    #[test]
+    fn depth_bound_truncates() {
+        let m = Tree { depth: 12 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.max_depth = 5;
+        let r = check(&m, &p, &o).unwrap();
+        assert!(!r.exhausted);
+        assert_eq!(r.stats.abort, Some(Abort::DepthTruncated));
+        assert!(r.stats.states_stored < 2u64.pow(13));
+        assert!(r.verdict().is_err()); // inconclusive
+    }
+
+    #[test]
+    fn state_limit_aborts() {
+        let m = Tree { depth: 20 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.max_states = 10_000;
+        let r = check(&m, &p, &o).unwrap();
+        assert_eq!(r.stats.abort, Some(Abort::StateLimit));
+        assert!(!r.exhausted);
+    }
+
+    #[test]
+    fn memory_limit_aborts() {
+        let m = Tree { depth: 20 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.memory_budget = 64 << 10; // 64 KB
+        let r = check(&m, &p, &o).unwrap();
+        assert_eq!(r.stats.abort, Some(Abort::MemoryLimit));
+    }
+
+    #[test]
+    fn randomized_order_same_statespace() {
+        let m = Tree { depth: 10 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.order = Order::Random(7);
+        let r = check(&m, &p, &o).unwrap();
+        assert_eq!(r.stats.states_stored, 2047);
+        assert!(r.exhausted);
+    }
+
+    #[test]
+    fn randomized_order_changes_first_hit() {
+        let m = Tree { depth: 10 };
+        let p = SafetyLtl::parse("G(!leaf)").unwrap();
+        let mut first = std::collections::HashSet::new();
+        for seed in 0..8 {
+            let mut o = CheckOptions::default();
+            o.order = Order::Random(seed);
+            let r = check(&m, &p, &o).unwrap();
+            first.insert(r.violations[0].trail.final_var(&m, "path").unwrap());
+        }
+        assert!(first.len() > 1, "seeds should reach different leaves first");
+    }
+
+    #[test]
+    fn bitstate_never_exhaustive() {
+        let m = Tree { depth: 8 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.store = StoreKind::Bitstate { log2_bits: 20, hashes: 3 };
+        let r = check(&m, &p, &o).unwrap();
+        assert!(!r.exhausted);
+        assert!(r.verdict().is_err());
+    }
+
+    #[test]
+    fn unknown_property_var_errors() {
+        let m = Tree { depth: 3 };
+        let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
+        assert!(check(&m, &p, &CheckOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Explicit-state model checker — our from-scratch SPIN counterpart.
+//!
+//! [`check`] runs an exhaustive (or budget-bounded) DFS verifying a
+//! safety-LTL property, with SPIN-analogous knobs: visited-store regime
+//! (full / hash-compact / bitstate), depth bound (`-m`), multi-error
+//! collection (`-e`), and memory/time budgets. Violations carry replayable
+//! trails, from which the tuner extracts parameter configurations.
+
+pub mod dfs;
+pub mod store;
+
+pub use dfs::{check, Abort, CheckOptions, CheckReport, Order, SearchStats};
+pub use store::{StoreKind, VisitedStore};

@@ -1,0 +1,195 @@
+//! Visited-state stores — the checker's memory subsystem.
+//!
+//! Three regimes mirror SPIN's:
+//! - `Full`: exact (stores the encoded state vector) — SPIN's default;
+//! - `HashCompact`: 64-bit hash compaction (SPIN `-DHC`) — exact up to
+//!   hash collisions, 8 bytes/state;
+//! - `Bitstate`: Bloom-filter bitstate hashing (SPIN `-DBITSTATE`, the
+//!   basis of swarm verification) — k probes into a 2^log2_bits bit table.
+//!
+//! `insert` returns whether the state was new. `bytes_used` feeds the
+//! memory budget that reproduces the paper's 16 GB exhaustive-mode ceiling
+//! (Table 1).
+
+use crate::util::hash::{hash_bytes_seeded, FxHashSet};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    Full,
+    HashCompact,
+    Bitstate { log2_bits: u8, hashes: u8 },
+}
+
+impl StoreKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreKind::Full => "full",
+            StoreKind::HashCompact => "hash-compact",
+            StoreKind::Bitstate { .. } => "bitstate",
+        }
+    }
+}
+
+pub enum VisitedStore {
+    Full { set: FxHashSet<Box<[u8]>>, bytes: u64 },
+    HashCompact { set: FxHashSet<u64> },
+    Bitstate { table: Vec<u64>, mask: u64, hashes: u8, set_bits: u64 },
+}
+
+impl VisitedStore {
+    pub fn new(kind: StoreKind) -> Self {
+        match kind {
+            StoreKind::Full => Self::Full { set: FxHashSet::default(), bytes: 0 },
+            StoreKind::HashCompact => Self::HashCompact { set: FxHashSet::default() },
+            StoreKind::Bitstate { log2_bits, hashes } => {
+                let log2 = log2_bits.clamp(10, 40);
+                let words = (1usize << log2) / 64;
+                Self::Bitstate {
+                    table: vec![0u64; words],
+                    mask: (1u64 << log2) - 1,
+                    hashes: hashes.max(1),
+                    set_bits: 0,
+                }
+            }
+        }
+    }
+
+    /// Insert an encoded state; returns true when it was not seen before.
+    /// (Bitstate may return false for genuinely new states — the expected
+    /// Bloom false-positive, which makes the search partial, as in SPIN.)
+    pub fn insert(&mut self, enc: &[u8]) -> bool {
+        match self {
+            Self::Full { set, bytes } => {
+                if set.contains(enc) {
+                    false
+                } else {
+                    *bytes += enc.len() as u64 + 48; // box + set overhead est.
+                    set.insert(enc.to_vec().into_boxed_slice());
+                    true
+                }
+            }
+            Self::HashCompact { set } => set.insert(hash_bytes_seeded(enc, 0)),
+            Self::Bitstate { table, mask, hashes, set_bits } => {
+                let mut new = false;
+                for k in 0..*hashes {
+                    let bit = hash_bytes_seeded(enc, 0x9E37 + k as u64) & *mask;
+                    let (w, b) = ((bit / 64) as usize, bit % 64);
+                    if table[w] & (1 << b) == 0 {
+                        table[w] |= 1 << b;
+                        *set_bits += 1;
+                        new = true;
+                    }
+                }
+                new
+            }
+        }
+    }
+
+    /// Number of distinct states recorded (bitstate: lower-bound estimate
+    /// from bit occupancy).
+    pub fn len(&self) -> u64 {
+        match self {
+            Self::Full { set, .. } => set.len() as u64,
+            Self::HashCompact { set } => set.len() as u64,
+            Self::Bitstate { set_bits, hashes, .. } => set_bits / (*hashes).max(1) as u64,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes_used(&self) -> u64 {
+        match self {
+            Self::Full { bytes, .. } => *bytes,
+            Self::HashCompact { set } => set.len() as u64 * 16,
+            Self::Bitstate { table, .. } => table.len() as u64 * 8,
+        }
+    }
+
+    /// Bloom saturation in [0,1] — swarm workers report this; near 1.0 the
+    /// search degenerates (everything looks visited).
+    pub fn saturation(&self) -> f64 {
+        match self {
+            Self::Bitstate { table, set_bits, .. } => {
+                *set_bits as f64 / (table.len() as f64 * 64.0)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn states(n: u64) -> Vec<Vec<u8>> {
+        (0..n).map(|i| i.to_le_bytes().to_vec()).collect()
+    }
+
+    #[test]
+    fn full_store_exact() {
+        let mut s = VisitedStore::new(StoreKind::Full);
+        for st in states(1000) {
+            assert!(s.insert(&st));
+        }
+        for st in states(1000) {
+            assert!(!s.insert(&st));
+        }
+        assert_eq!(s.len(), 1000);
+        assert!(s.bytes_used() > 1000 * 8);
+    }
+
+    #[test]
+    fn hash_compact_mostly_exact() {
+        let mut s = VisitedStore::new(StoreKind::HashCompact);
+        let mut new = 0;
+        for st in states(100_000) {
+            if s.insert(&st) {
+                new += 1;
+            }
+        }
+        // collisions possible but vanishingly rare at 1e5/2^64
+        assert_eq!(new, 100_000);
+        assert!(!s.insert(&states(1)[0]));
+        assert_eq!(s.bytes_used(), 100_000 * 16);
+    }
+
+    #[test]
+    fn bitstate_no_false_negatives() {
+        // Bloom filters never report "seen" as "new" once inserted.
+        let mut s = VisitedStore::new(StoreKind::Bitstate { log2_bits: 20, hashes: 3 });
+        for st in states(10_000) {
+            s.insert(&st);
+        }
+        for st in states(10_000) {
+            assert!(!s.insert(&st), "false negative in bitstate store");
+        }
+        assert!(s.saturation() > 0.0 && s.saturation() < 0.1);
+    }
+
+    #[test]
+    fn bitstate_fixed_memory() {
+        let s = VisitedStore::new(StoreKind::Bitstate { log2_bits: 24, hashes: 3 });
+        assert_eq!(s.bytes_used(), (1 << 24) / 8);
+    }
+
+    #[test]
+    fn bitstate_saturates_small_table() {
+        let mut s = VisitedStore::new(StoreKind::Bitstate { log2_bits: 10, hashes: 3 });
+        let mut missed = 0u64;
+        for st in states(5000) {
+            if !s.insert(&st) {
+                missed += 1; // false positive: state wrongly "seen"
+            }
+        }
+        assert!(missed > 0, "tiny table must produce false positives");
+        assert!(s.saturation() > 0.5);
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(StoreKind::Full.name(), "full");
+        assert_eq!(StoreKind::Bitstate { log2_bits: 20, hashes: 3 }.name(), "bitstate");
+    }
+}

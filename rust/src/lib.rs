@@ -1,0 +1,47 @@
+//! # mcautotune
+//!
+//! Model-checking-driven auto-tuning of data-parallel (OpenCL-style)
+//! kernels — a Rust + JAX + Pallas reproduction of *"Auto-Tuning
+//! High-Performance Programs Using Model Checking in Promela"*
+//! (Garanina, Staroletov, Gorlatch, 2023).
+//!
+//! The paper's four-step counterexample method:
+//!
+//! 1. **Model** the parallel program + target platform ([`platform`] native
+//!    engines, or [`promela`] — a Promela-subset front end executing the
+//!    shipped `models/*.pml` with full process interleaving);
+//! 2. **State** the over-time property Φo = `G(FIN -> time > T)`
+//!    ([`model::SafetyLtl`]);
+//! 3. **Search** for the minimal termination time with the explicit-state
+//!    [`checker`] + bisection (paper Fig. 1) or [`swarm`] verification +
+//!    the decreasing-T loop (Fig. 5) — both in [`tuner`];
+//! 4. **Extract** the optimal (WG, TS) from the minimal-time
+//!    counterexample trail ([`tuner::extract`]).
+//!
+//! The tuned kernel itself is a Pallas min-reduction, AOT-lowered by
+//! `python/compile/aot.py` to HLO text and executed python-free through
+//! the PJRT [`runtime`]; [`opencl`] is the Table-2 measurement harness and
+//! [`report`] regenerates the paper's Tables 1–3.
+//!
+//! ```no_run
+//! use mcautotune::checker::CheckOptions;
+//! use mcautotune::platform::MinModel;
+//! use mcautotune::swarm::SwarmConfig;
+//! use mcautotune::tuner::{tune, Method};
+//!
+//! let model = MinModel::paper(256, 64).unwrap();
+//! let r = tune(&model, Method::Exhaustive, &CheckOptions::default(),
+//!              &SwarmConfig::default(), None).unwrap();
+//! println!("optimal WG={} TS={} time={}", r.optimal.wg, r.optimal.ts, r.t_min);
+//! ```
+
+pub mod checker;
+pub mod model;
+pub mod opencl;
+pub mod platform;
+pub mod promela;
+pub mod report;
+pub mod runtime;
+pub mod swarm;
+pub mod tuner;
+pub mod util;

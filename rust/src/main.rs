@@ -1,0 +1,473 @@
+//! `mcautotune` CLI — the L3 entrypoint.
+//!
+//! Subcommands map to the paper's workflow:
+//!   simulate   SPIN simulation mode (finds T_ini)            §2 step 3
+//!   verify     one verification run of a safety-LTL property  §4 step 2-3
+//!   tune       full counterexample method (Fig. 1 / Fig. 5)   §4-5
+//!   table1/2/3 regenerate the paper's experiment tables       §6-7
+//!   exec       run an AOT-compiled Pallas kernel via PJRT     §7.1
+//!   gen-models write the pregenerated Promela models          §4, §7.2
+
+use anyhow::{bail, Context, Result};
+use mcautotune::checker::{check, CheckOptions, StoreKind};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::{
+    simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
+};
+use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::report;
+use mcautotune::runtime::Engine;
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::cli::{Args, Spec};
+use mcautotune::util::fmt::{human_bytes, human_duration};
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+mcautotune — model-checking-driven auto-tuning (Garanina/Staroletov/Gorlatch 2023)
+
+usage: mcautotune <command> [options]
+
+commands:
+  tune        find the optimal (WG, TS) via the counterexample method
+  simulate    random simulation of a model (reports terminal time, T_ini)
+  verify      verify a safety-LTL property, print the first counterexample
+  table1      regenerate the paper's Table 1 (abstract-model experiments)
+  table2      regenerate the paper's Table 2 (kernel sweep via PJRT)
+  table3      regenerate the paper's Table 3 (Minimum-model experiments)
+  exec        execute an AOT kernel artifact on PJRT, verify + time it
+  gen-models  write pregenerated Promela models to models/
+  help        show this message
+
+run `mcautotune <command> --help` for per-command options";
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{}", USAGE);
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "tune" => cmd_tune(rest),
+        "simulate" => cmd_simulate(rest),
+        "verify" => cmd_verify(rest),
+        "table1" => cmd_table1(rest),
+        "table2" => cmd_table2(rest),
+        "table3" => cmd_table3(rest),
+        "exec" => cmd_exec(rest),
+        "gen-models" => cmd_gen_models(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown command `{}`\n{}", other, USAGE),
+    }
+}
+
+// ----------------------------------------------------------- model opts --
+
+fn model_spec(spec: Spec) -> Spec {
+    spec.opt("model", "abstract | minimum | path to a .pml file")
+        .opt("size", "input data size, power of two (default 64)")
+        .opt("np", "processing elements per unit (default 4)")
+        .opt("nd", "devices (default 1)")
+        .opt("nu", "units per device (default 1)")
+        .opt("gmt", "global/local memory time ratio (default 10 abstract, 3 minimum)")
+        .opt("granularity", "tick | phase (default phase)")
+        .opt("engine", "native | promela (default native)")
+}
+
+enum AnyModel {
+    Abs(AbstractModel),
+    Min(MinModel),
+    Pml(PromelaSystem),
+}
+
+macro_rules! with_model {
+    ($m:expr, $name:ident, $body:expr) => {
+        match &$m {
+            AnyModel::Abs($name) => $body,
+            AnyModel::Min($name) => $body,
+            AnyModel::Pml($name) => $body,
+        }
+    };
+}
+
+fn build_model(a: &Args) -> Result<AnyModel> {
+    let kind = a.get_or("model", "minimum");
+    let size: u32 = a.get_parsed_or("size", 64)?;
+    let np: u32 = a.get_parsed_or("np", 4)?;
+    let nd: u32 = a.get_parsed_or("nd", 1)?;
+    let nu: u32 = a.get_parsed_or("nu", 1)?;
+    let gran = match a.get_or("granularity", "phase").as_str() {
+        "tick" => Granularity::Tick,
+        "phase" => Granularity::Phase,
+        g => bail!("unknown granularity `{}`", g),
+    };
+    let engine = a.get_or("engine", "native");
+    match kind.as_str() {
+        "abstract" => {
+            let gmt: u32 = a.get_parsed_or("gmt", 10)?;
+            let plat = PlatformConfig { nd, nu, np, gmt };
+            if engine == "promela" {
+                let src = templates::abstract_pml(size, &plat);
+                Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+            } else {
+                Ok(AnyModel::Abs(AbstractModel::new(size, plat, gran)?))
+            }
+        }
+        "minimum" => {
+            let gmt: u32 = a.get_parsed_or("gmt", 3)?;
+            if engine == "promela" {
+                let src = templates::minimum_pml(size, np, gmt);
+                Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+            } else {
+                Ok(AnyModel::Min(MinModel::new(size, np, gmt, DataInit::Descending, gran)?))
+            }
+        }
+        path if path.ends_with(".pml") => {
+            let src = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path))?;
+            Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+        }
+        other => bail!("unknown model `{}` (abstract | minimum | *.pml)", other),
+    }
+}
+
+fn check_opts(a: &Args) -> Result<CheckOptions> {
+    let mut o = CheckOptions::default();
+    o.store = match a.get_or("store", "full").as_str() {
+        "full" => StoreKind::Full,
+        "compact" => StoreKind::HashCompact,
+        "bitstate" => StoreKind::Bitstate {
+            log2_bits: a.get_parsed_or("bits", 27u8)?,
+            hashes: 3,
+        },
+        s => bail!("unknown store `{}` (full | compact | bitstate)", s),
+    };
+    o.max_depth = a.get_parsed_or("max-depth", o.max_depth)?;
+    o.max_states = a.get_parsed_or("max-states", o.max_states)?;
+    o.memory_budget = a.get_parsed_or("memory-budget", o.memory_budget)?;
+    Ok(o)
+}
+
+fn store_spec(spec: Spec) -> Spec {
+    spec.opt("store", "full | compact | bitstate (default full)")
+        .opt("bits", "bitstate table log2 bits (default 27)")
+        .opt("max-depth", "search depth bound (spin -m)")
+        .opt("max-states", "stored-state budget")
+        .opt("memory-budget", "visited-store byte budget (default 16GiB)")
+}
+
+fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
+    Ok(SwarmConfig {
+        workers: a.get_parsed_or("workers", 4)?,
+        seed: a.get_parsed_or("seed", 0x5AFEu64)?,
+        log2_bits: a.get_parsed_or("bits", 27u8)?,
+        time_budget: Duration::from_millis(a.get_parsed_or("budget-ms", 10_000u64)?),
+        ..Default::default()
+    })
+}
+
+// ------------------------------------------------------------- commands --
+
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    let spec = store_spec(model_spec(Spec::new()))
+        .opt("method", "exhaustive | swarm (default exhaustive)")
+        .opt("workers", "swarm workers (default 4)")
+        .opt("seed", "swarm seed")
+        .opt("budget-ms", "per-swarm-round time budget (default 10000)")
+        .opt("t-ini", "initial over-time bound (default: by simulation)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune tune"));
+        return Ok(());
+    }
+    let method: Method = a.get_or("method", "exhaustive").parse()?;
+    let model = build_model(&a)?;
+    let opts = check_opts(&a)?;
+    let sw = swarm_cfg(&a)?;
+    let t_ini = a.get_parsed::<i64>("t-ini")?;
+    let r = with_model!(model, m, tune(m, method, &opts, &sw, t_ini))?;
+    for line in &r.log {
+        println!("  {}", line);
+    }
+    println!();
+    println!("optimal configuration: WG={} TS={}", r.optimal.wg, r.optimal.ts);
+    println!("minimal model time:    {}", r.t_min);
+    if let Some((w, d)) = &r.first_trail {
+        println!(
+            "first trail:           WG={} TS={} time={} (found after {}, optimality {:.0}%)",
+            w.wg,
+            w.ts,
+            w.time,
+            human_duration(*d),
+            r.first_trail_optimality.unwrap_or(1.0) * 100.0
+        );
+    }
+    println!(
+        "search: {} states, peak memory {}, wall time {}",
+        r.states_explored,
+        human_bytes(r.peak_bytes),
+        human_duration(r.elapsed)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let spec = model_spec(Spec::new())
+        .opt("runs", "number of random walks (default 8)")
+        .opt("seed", "rng seed (default 1)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune simulate"));
+        return Ok(());
+    }
+    let runs: u64 = a.get_parsed_or("runs", 8)?;
+    let seed: u64 = a.get_parsed_or("seed", 1)?;
+    let model = build_model(&a)?;
+    let mut t_ini: Option<i64> = None;
+    for r in 0..runs {
+        let (terminated, time) = with_model!(model, m, {
+            let rep = simulate(m, seed + r, 100_000_000);
+            println!(
+                "run {}: steps={} terminated={} time={:?} WG={:?} TS={:?}",
+                r,
+                rep.steps,
+                rep.terminated,
+                rep.time,
+                m.eval_var(&rep.final_state, "WG"),
+                m.eval_var(&rep.final_state, "TS"),
+            );
+            (rep.terminated, rep.time)
+        });
+        if terminated {
+            if let Some(t) = time {
+                t_ini = Some(t_ini.map_or(t, |b: i64| b.max(t)));
+            }
+        }
+    }
+    match t_ini {
+        Some(t) => println!("\nT_ini = {} (max observed terminal time)", t),
+        None => println!("\nno terminating run observed"),
+    }
+    Ok(())
+}
+
+fn cmd_verify(argv: &[String]) -> Result<()> {
+    let spec = store_spec(model_spec(Spec::new()))
+        .opt("prop", "safety LTL formula, e.g. 'G(FIN -> time > 100)'")
+        .opt("trail-limit", "max trail lines to print (default 40)")
+        .flag("all-errors", "keep searching after the first violation (spin -e)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune verify"));
+        return Ok(());
+    }
+    let prop = SafetyLtl::parse(&a.get_or("prop", "G(!FIN)"))?;
+    let model = build_model(&a)?;
+    let mut opts = check_opts(&a)?;
+    opts.collect_all = a.flag("all-errors");
+    let limit: usize = a.get_parsed_or("trail-limit", 40)?;
+    with_model!(model, m, {
+        let rep = check(m, &prop, &opts)?;
+        println!(
+            "property {}: {}",
+            prop,
+            if rep.found() {
+                "VIOLATED (counterexample found)"
+            } else if rep.exhausted {
+                "HOLDS (state space exhausted)"
+            } else {
+                "inconclusive (budget hit)"
+            }
+        );
+        println!(
+            "states stored {}  matched {}  transitions {}  depth {}  memory {}  elapsed {}",
+            rep.stats.states_stored,
+            rep.stats.states_matched,
+            rep.stats.transitions,
+            rep.stats.max_depth_reached,
+            human_bytes(rep.stats.bytes_used),
+            human_duration(rep.stats.elapsed)
+        );
+        if let Some(v) = rep.violations.first() {
+            println!("\ncounterexample trail ({} steps):", v.trail.steps());
+            print!("{}", v.trail.render(m, limit));
+        }
+        if rep.violations.len() > 1 {
+            println!("({} violations total)", rep.violations.len());
+        }
+        Ok(())
+    })
+}
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("sizes", "comma-separated sizes (default 8,16,32,64,128,256,512,1024)")
+        .opt("max-exhaustive", "largest size tuned exhaustively (default 256)")
+        .opt("max-promela", "largest size verified on the Promela engine (default 16)")
+        .opt("np", "PEs per unit (default 4)")
+        .opt("gmt", "memory ratio (default 10)")
+        .opt("workers", "swarm workers (default 4)")
+        .opt("budget-ms", "swarm round budget (default 5000)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune table1"));
+        return Ok(());
+    }
+    let mut opts = report::Table1Opts::default();
+    if let Some(s) = a.get("sizes") {
+        opts.sizes = s
+            .split(',')
+            .map(|x| x.trim().parse::<u32>().context("bad size"))
+            .collect::<Result<_>>()?;
+    }
+    opts.max_exhaustive_size = a.get_parsed_or("max-exhaustive", opts.max_exhaustive_size)?;
+    opts.max_promela_size = a.get_parsed_or("max-promela", opts.max_promela_size)?;
+    opts.plat.np = a.get_parsed_or("np", opts.plat.np)?;
+    opts.plat.gmt = a.get_parsed_or("gmt", opts.plat.gmt)?;
+    opts.swarm.workers = a.get_parsed_or("workers", opts.swarm.workers)?;
+    opts.swarm.time_budget = Duration::from_millis(a.get_parsed_or("budget-ms", 5000u64)?);
+    let (_, rendered) = report::table1(&opts)?;
+    println!(
+        "Table 1 — abstract-model experiments (platform: 1 device, 1 unit, {} PEs, GMT={})",
+        opts.plat.np, opts.plat.gmt
+    );
+    print!("{}", rendered);
+    Ok(())
+}
+
+fn cmd_table2(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("artifacts", "artifacts directory (default artifacts/ or $MCAT_ARTIFACTS)")
+        .opt("repeats", "timed runs per configuration (default 5)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune table2"));
+        return Ok(());
+    }
+    let dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Engine::default_dir);
+    let mut engine = Engine::new(&dir)?;
+    let repeats: u32 = a.get_parsed_or("repeats", 5)?;
+    let (_, rendered) = report::table2(&mut engine, repeats)?;
+    println!("Table 2 — Minimum kernel sweep (PJRT substitute for the paper's P104-100)");
+    print!("{}", rendered);
+    Ok(())
+}
+
+fn cmd_table3(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("gmt", "memory ratio (default 3, the Table-3 calibration)")
+        .opt("top", "best configurations listed per group (default 3)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune table3"));
+        return Ok(());
+    }
+    let gmt: u32 = a.get_parsed_or("gmt", 3)?;
+    let top: usize = a.get_parsed_or("top", 3)?;
+    let (_, rendered) = report::table3(&report::paper_table3_groups(), gmt, top)?;
+    println!("Table 3 — Minimum-model experiments (GMT={})", gmt);
+    print!("{}", rendered);
+    Ok(())
+}
+
+fn cmd_exec(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("artifact", "artifact name from the manifest (default min_device_small)")
+        .opt("artifacts", "artifacts directory")
+        .opt("seed", "data seed (default 42)")
+        .opt("repeats", "timed repetitions (default 3)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune exec"));
+        return Ok(());
+    }
+    let dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Engine::default_dir);
+    let mut engine = Engine::new(&dir)?;
+    let name = a.get_or("artifact", "min_device_small");
+    let seed: u64 = a.get_parsed_or("seed", 42)?;
+    let repeats: u32 = a.get_parsed_or("repeats", 3)?;
+    let entry = engine
+        .manifest()
+        .find(&name)
+        .with_context(|| format!("artifact `{}` not found", name))?
+        .clone();
+    println!(
+        "artifact {}: kind={} units={} WG={} TS={} size={} (vmem est {})",
+        entry.name,
+        entry.kind,
+        entry.units,
+        entry.wg,
+        entry.ts,
+        entry.size,
+        human_bytes(entry.vmem_bytes)
+    );
+    let data = mcautotune::opencl::gen_data(entry.size as usize, seed);
+    let expected = *data.iter().min().unwrap();
+    let mut best = f64::INFINITY;
+    let mut out_min = 0;
+    for _ in 0..repeats.max(1) {
+        let t = std::time::Instant::now();
+        let out = engine.run_min(&name, &data)?;
+        best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        out_min = out.global_min;
+    }
+    println!(
+        "result: min={} (expected {}) {} — best {:.3} ms, {:.2} GB/s",
+        out_min,
+        expected,
+        if out_min == expected { "CORRECT" } else { "WRONG" },
+        best,
+        (entry.size as f64 * 4.0) / (best / 1e3) / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_gen_models(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("out", "output directory (default models/)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune gen-models"));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(a.get_or("out", "models"));
+    std::fs::create_dir_all(&dir)?;
+    let plat = PlatformConfig::default();
+    for (name, src) in [
+        ("abstract_8.pml", templates::abstract_pml(8, &plat)),
+        ("abstract_16.pml", templates::abstract_pml(16, &plat)),
+        ("minimum_16.pml", templates::minimum_pml(16, 4, 3)),
+        ("minimum_32.pml", templates::minimum_pml(32, 4, 3)),
+        ("minimum_64_np64.pml", templates::minimum_pml(64, 64, 3)),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, src)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

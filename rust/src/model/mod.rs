@@ -1,0 +1,72 @@
+//! Core abstractions the checker operates on.
+//!
+//! Everything the paper verifies — the Promela abstract-platform model, the
+//! Minimum-problem model, and our native re-implementations of both — is
+//! exposed to the checker as a [`TransitionSystem`]: a set of initial
+//! states, a successor relation, a stable byte encoding (for hashing /
+//! bitstate storage), and a named-variable observation interface that LTL
+//! properties and the tuner's counterexample extraction read.
+
+pub mod property;
+pub mod trail;
+
+pub use property::{Expr, SafetyLtl};
+pub use trail::{Trail, Violation};
+
+/// A state-transition system explored by the checker.
+pub trait TransitionSystem {
+    type State: Clone + std::fmt::Debug;
+
+    /// Initial states. Several when the model opens with a nondeterministic
+    /// choice (e.g. the tuning-parameter selection in `main`).
+    fn initial_states(&self) -> Vec<Self::State>;
+
+    /// Append all successors of `s` to `out` (which is cleared first).
+    /// A state with no successors is terminal.
+    fn successors(&self, s: &Self::State, out: &mut Vec<Self::State>);
+
+    /// Stable, injective byte encoding of the state, appended to `out`
+    /// (cleared first). Used for the visited store and bitstate hashing.
+    fn encode(&self, s: &Self::State, out: &mut Vec<u8>);
+
+    /// Observe a named model variable (e.g. "time", "FIN", "WG", "TS").
+    /// Booleans are 0/1. Returns None for unknown names.
+    fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64>;
+
+    /// Human-readable one-line description for trail printing.
+    fn describe(&self, s: &Self::State) -> String {
+        format!("{:?}", s)
+    }
+
+    /// Convenience: terminality probe via `successors`.
+    fn is_terminal(&self, s: &Self::State) -> bool {
+        let mut buf = Vec::new();
+        self.successors(s, &mut buf);
+        buf.is_empty()
+    }
+}
+
+/// Blanket impl so `&M` can be passed wherever a system is expected.
+impl<M: TransitionSystem> TransitionSystem for &M {
+    type State = M::State;
+
+    fn initial_states(&self) -> Vec<Self::State> {
+        (**self).initial_states()
+    }
+
+    fn successors(&self, s: &Self::State, out: &mut Vec<Self::State>) {
+        (**self).successors(s, out)
+    }
+
+    fn encode(&self, s: &Self::State, out: &mut Vec<u8>) {
+        (**self).encode(s, out)
+    }
+
+    fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64> {
+        (**self).eval_var(s, name)
+    }
+
+    fn describe(&self, s: &Self::State) -> String {
+        (**self).describe(s)
+    }
+}

@@ -1,0 +1,387 @@
+//! LTL properties — safety fragment.
+//!
+//! The paper verifies two formulas:
+//!   Φo = G(FIN -> time > T)   (over-time property, §4 Step 2)
+//!   Φt = G(!FIN)              (non-termination property, §5)
+//!
+//! Both are *safety* properties: a violation is witnessed by a single
+//! reachable state, so a state monitor suffices and no Büchi construction
+//! is needed. We parse exactly the `G(<boolean state expression>)` fragment
+//! (also written `[](...)`), with integer arithmetic, comparisons, boolean
+//! connectives and `->` implication over named model variables; anything
+//! outside the fragment (nested temporal operators, U, X, F) is rejected
+//! with a clear error. This is the same fragment the paper uses.
+
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expr {
+    Int(i64),
+    Var(String),
+    Not(Box<Expr>),
+    Neg(Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Or,
+    And,
+    Implies,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+}
+
+impl Expr {
+    /// Evaluate with a variable lookup. Booleans are 0/1; any nonzero value
+    /// is truthy (C/Promela convention).
+    pub fn eval(&self, lookup: &dyn Fn(&str) -> Option<i64>) -> Result<i64> {
+        Ok(match self {
+            Expr::Int(v) => *v,
+            Expr::Var(name) => lookup(name)
+                .ok_or_else(|| anyhow!("unknown variable `{}` in property", name))?,
+            Expr::Not(e) => (e.eval(lookup)? == 0) as i64,
+            Expr::Neg(e) => -(e.eval(lookup)?),
+            Expr::Bin(op, a, b) => {
+                use BinOp::*;
+                match op {
+                    And => ((a.eval(lookup)? != 0) && (b.eval(lookup)? != 0)) as i64,
+                    Or => ((a.eval(lookup)? != 0) || (b.eval(lookup)? != 0)) as i64,
+                    Implies => ((a.eval(lookup)? == 0) || (b.eval(lookup)? != 0)) as i64,
+                    _ => {
+                        let (x, y) = (a.eval(lookup)?, b.eval(lookup)?);
+                        match op {
+                            Eq => (x == y) as i64,
+                            Ne => (x != y) as i64,
+                            Lt => (x < y) as i64,
+                            Le => (x <= y) as i64,
+                            Gt => (x > y) as i64,
+                            Ge => (x >= y) as i64,
+                            Add => x.wrapping_add(y),
+                            Sub => x.wrapping_sub(y),
+                            Mul => x.wrapping_mul(y),
+                            Div => {
+                                if y == 0 {
+                                    bail!("division by zero in property");
+                                }
+                                x / y
+                            }
+                            Mod => {
+                                if y == 0 {
+                                    bail!("mod by zero in property");
+                                }
+                                x % y
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                }
+            }
+        })
+    }
+
+    /// Free variables referenced by the expression.
+    pub fn vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Int(_) => {}
+            Expr::Var(n) => {
+                if !out.contains(n) {
+                    out.push(n.clone());
+                }
+            }
+            Expr::Not(e) | Expr::Neg(e) => e.vars(out),
+            Expr::Bin(_, a, b) => {
+                a.vars(out);
+                b.vars(out);
+            }
+        }
+    }
+}
+
+/// `G(body)` — holds on a run iff `body` holds in every state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SafetyLtl {
+    pub body: Expr,
+    pub source: String,
+}
+
+impl SafetyLtl {
+    /// Parse `G(expr)` / `[](expr)` / bare `expr` (treated as G(expr)).
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut p = Parser::new(src);
+        p.skip_ws();
+        let had_g = if p.eat_kw("G") || p.eat_str("[]") {
+            p.skip_ws();
+            if !p.eat_str("(") {
+                bail!("expected '(' after temporal G in `{}`", src);
+            }
+            true
+        } else {
+            false
+        };
+        let body = p.parse_expr(0)?;
+        if had_g {
+            p.skip_ws();
+            if !p.eat_str(")") {
+                bail!("expected closing ')' in `{}`", src);
+            }
+        }
+        p.skip_ws();
+        if !p.rest().is_empty() {
+            bail!("trailing input `{}` in property `{}`", p.rest(), src);
+        }
+        Ok(Self { body, source: src.to_string() })
+    }
+
+    /// The over-time property Φo = G(FIN -> time > T) with a concrete T.
+    pub fn over_time(t: i64) -> Self {
+        Self::parse(&format!("G(FIN -> time > {})", t)).expect("static formula")
+    }
+
+    /// The non-termination property Φt = G(!FIN).
+    pub fn non_termination() -> Self {
+        Self::parse("G(!FIN)").expect("static formula")
+    }
+
+    /// Does the invariant hold in this state? (false = violation here)
+    pub fn holds(&self, lookup: &dyn Fn(&str) -> Option<i64>) -> Result<bool> {
+        Ok(self.body.eval(lookup)? != 0)
+    }
+}
+
+impl fmt::Display for SafetyLtl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.source)
+    }
+}
+
+// ---------------------------------------------------------------- parser --
+
+struct Parser<'a> {
+    src: &'a str,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Self {
+        Self { src, pos: 0 }
+    }
+
+    fn rest(&self) -> &'a str {
+        &self.src[self.pos..]
+    }
+
+    fn skip_ws(&mut self) {
+        while self.rest().starts_with(|c: char| c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat_str(&mut self, s: &str) -> bool {
+        if self.rest().starts_with(s) {
+            self.pos += s.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Eat keyword `s` only when not followed by an identifier char.
+    fn eat_kw(&mut self, s: &str) -> bool {
+        if self.rest().starts_with(s) {
+            let after = &self.rest()[s.len()..];
+            if !after.starts_with(|c: char| c.is_alphanumeric() || c == '_') {
+                self.pos += s.len();
+                return true;
+            }
+        }
+        false
+    }
+
+    // precedence-climbing: higher binds tighter
+    fn peek_binop(&mut self) -> Option<(BinOp, u8)> {
+        self.skip_ws();
+        let r = self.rest();
+        // order matters: match longest first
+        const TABLE: &[(&str, BinOp, u8)] = &[
+            ("->", BinOp::Implies, 1),
+            ("||", BinOp::Or, 2),
+            ("&&", BinOp::And, 3),
+            ("==", BinOp::Eq, 4),
+            ("!=", BinOp::Ne, 4),
+            ("<=", BinOp::Le, 5),
+            (">=", BinOp::Ge, 5),
+            ("<", BinOp::Lt, 5),
+            (">", BinOp::Gt, 5),
+            ("+", BinOp::Add, 6),
+            ("-", BinOp::Sub, 6),
+            ("*", BinOp::Mul, 7),
+            ("/", BinOp::Div, 7),
+            ("%", BinOp::Mod, 7),
+        ];
+        for (tok, op, prec) in TABLE {
+            if r.starts_with(tok) {
+                return Some((*op, *prec));
+            }
+        }
+        None
+    }
+
+    fn parse_expr(&mut self, min_prec: u8) -> Result<Expr> {
+        let mut lhs = self.parse_unary()?;
+        while let Some((op, prec)) = self.peek_binop() {
+            if prec < min_prec {
+                break;
+            }
+            // consume the operator token
+            let tok_len = match op {
+                BinOp::Implies | BinOp::Or | BinOp::And | BinOp::Eq | BinOp::Ne
+                | BinOp::Le | BinOp::Ge => 2,
+                _ => 1,
+            };
+            self.pos += tok_len;
+            // implication is right-associative; the rest left-associative
+            let next_min = if op == BinOp::Implies { prec } else { prec + 1 };
+            let rhs = self.parse_expr(next_min)?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr> {
+        self.skip_ws();
+        if self.eat_str("!") {
+            return Ok(Expr::Not(Box::new(self.parse_unary()?)));
+        }
+        if self.eat_str("-") {
+            return Ok(Expr::Neg(Box::new(self.parse_unary()?)));
+        }
+        if self.eat_str("(") {
+            let e = self.parse_expr(0)?;
+            self.skip_ws();
+            if !self.eat_str(")") {
+                bail!("expected ')' at `{}`", self.rest());
+            }
+            return Ok(e);
+        }
+        let r = self.rest();
+        if r.starts_with(|c: char| c.is_ascii_digit()) {
+            let end = r.find(|c: char| !c.is_ascii_digit()).unwrap_or(r.len());
+            let v: i64 = r[..end].parse()?;
+            self.pos += end;
+            return Ok(Expr::Int(v));
+        }
+        if r.starts_with(|c: char| c.is_alphabetic() || c == '_') {
+            let end = r
+                .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+                .unwrap_or(r.len());
+            let name = &r[..end];
+            // reject temporal operators outside the supported fragment
+            if matches!(name, "U" | "X" | "F" | "W" | "R") {
+                bail!("temporal operator `{}` outside the safety fragment (only G(...) supported)", name);
+            }
+            self.pos += end;
+            if name == "true" {
+                return Ok(Expr::Int(1));
+            }
+            if name == "false" {
+                return Ok(Expr::Int(0));
+            }
+            return Ok(Expr::Var(name.to_string()));
+        }
+        bail!("cannot parse property at `{}`", r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env<'a>(pairs: &'a [(&'a str, i64)]) -> impl Fn(&str) -> Option<i64> + 'a {
+        move |n| pairs.iter().find(|(k, _)| *k == n).map(|(_, v)| *v)
+    }
+
+    #[test]
+    fn parse_over_time() {
+        let p = SafetyLtl::parse("G(FIN -> time > 100)").unwrap();
+        let e = env(&[("FIN", 1), ("time", 101)]);
+        assert!(p.holds(&e).unwrap());
+        let e = env(&[("FIN", 1), ("time", 100)]);
+        assert!(!p.holds(&e).unwrap()); // terminated within T: violation
+        let e = env(&[("FIN", 0), ("time", 5)]);
+        assert!(p.holds(&e).unwrap()); // not terminated: vacuous
+    }
+
+    #[test]
+    fn parse_box_syntax() {
+        let p = SafetyLtl::parse("[](!FIN)").unwrap();
+        assert!(p.holds(&env(&[("FIN", 0)])).unwrap());
+        assert!(!p.holds(&env(&[("FIN", 1)])).unwrap());
+    }
+
+    #[test]
+    fn constructors_match_paper() {
+        let o = SafetyLtl::over_time(44);
+        assert!(!o.holds(&env(&[("FIN", 1), ("time", 44)])).unwrap());
+        assert!(o.holds(&env(&[("FIN", 1), ("time", 45)])).unwrap());
+        let t = SafetyLtl::non_termination();
+        assert!(!t.holds(&env(&[("FIN", 1)])).unwrap());
+    }
+
+    #[test]
+    fn precedence_and_arith() {
+        let p = SafetyLtl::parse("G(a + 2 * 3 == 7 && b % 2 == 0)").unwrap();
+        assert!(p.holds(&env(&[("a", 1), ("b", 4)])).unwrap());
+        assert!(!p.holds(&env(&[("a", 1), ("b", 3)])).unwrap());
+    }
+
+    #[test]
+    fn implies_right_assoc() {
+        // a -> b -> c parses as a -> (b -> c)
+        let p = SafetyLtl::parse("a -> b -> c").unwrap();
+        assert!(p.holds(&env(&[("a", 1), ("b", 1), ("c", 1)])).unwrap());
+        assert!(p.holds(&env(&[("a", 0), ("b", 1), ("c", 0)])).unwrap());
+        assert!(!p.holds(&env(&[("a", 1), ("b", 1), ("c", 0)])).unwrap());
+    }
+
+    #[test]
+    fn unknown_var_is_error() {
+        let p = SafetyLtl::parse("G(nosuch > 0)").unwrap();
+        assert!(p.holds(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn liveness_rejected() {
+        assert!(SafetyLtl::parse("F(FIN)").is_err());
+        assert!(SafetyLtl::parse("G(a U b)").is_err());
+    }
+
+    #[test]
+    fn division_by_zero_is_error() {
+        let p = SafetyLtl::parse("G(1 / a > 0)").unwrap();
+        assert!(p.holds(&env(&[("a", 0)])).is_err());
+    }
+
+    #[test]
+    fn vars_collected() {
+        let p = SafetyLtl::parse("G(FIN -> time > T)").unwrap();
+        let mut vs = Vec::new();
+        p.body.vars(&mut vs);
+        assert_eq!(vs, vec!["FIN".to_string(), "time".into(), "T".into()]);
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        assert!(SafetyLtl::parse("G(FIN) xyz").is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Counterexample trails — the core artifact of the paper's method.
+//!
+//! SPIN writes `.trail` files and replays them in simulation mode to expose
+//! variable values (paper §4 Step 4). Our checker keeps the violating path
+//! in memory; [`Trail`] carries the states, and the tuner reads the tuning
+//! parameters (WG, TS) and the model time off the final state through the
+//! model's `eval_var` interface.
+
+use super::TransitionSystem;
+
+/// A path from an initial state to a (violating) state.
+#[derive(Debug, Clone)]
+pub struct Trail<S> {
+    pub states: Vec<S>,
+}
+
+impl<S> Trail<S> {
+    /// Number of transitions (SPIN's "steps" analogue).
+    pub fn steps(&self) -> usize {
+        self.states.len().saturating_sub(1)
+    }
+
+    pub fn last(&self) -> &S {
+        self.states.last().expect("trail is never empty")
+    }
+
+    /// Read a model variable off the final (violating) state.
+    pub fn final_var<M>(&self, model: &M, name: &str) -> Option<i64>
+    where
+        M: TransitionSystem<State = S>,
+    {
+        model.eval_var(self.last(), name)
+    }
+
+    /// Render the trail like `spin -t` simulation output (one line/state).
+    pub fn render<M>(&self, model: &M, limit: usize) -> String
+    where
+        M: TransitionSystem<State = S>,
+    {
+        let mut out = String::new();
+        let n = self.states.len();
+        for (i, s) in self.states.iter().enumerate() {
+            if n > limit && i >= limit / 2 && i < n - limit / 2 {
+                if i == limit / 2 {
+                    out.push_str(&format!("  ... ({} states elided) ...\n", n - limit));
+                }
+                continue;
+            }
+            out.push_str(&format!("{:>6}: {}\n", i, model.describe(s)));
+        }
+        out
+    }
+}
+
+/// A property violation found by the checker: the trail plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Violation<S> {
+    pub trail: Trail<S>,
+    /// Search depth at which the violation was found.
+    pub depth: usize,
+    /// Seconds since search start when this violation was found.
+    pub found_after: std::time::Duration,
+}
+
+impl<S> Violation<S> {
+    pub fn steps(&self) -> usize {
+        self.trail.steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransitionSystem;
+
+    /// Toy counter system: 0..=3, terminal at 3.
+    struct Counter;
+
+    impl TransitionSystem for Counter {
+        type State = u8;
+
+        fn initial_states(&self) -> Vec<u8> {
+            vec![0]
+        }
+
+        fn successors(&self, s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+            if *s < 3 {
+                out.push(s + 1);
+            }
+        }
+
+        fn encode(&self, s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+            out.push(*s);
+        }
+
+        fn eval_var(&self, s: &u8, name: &str) -> Option<i64> {
+            (name == "c").then_some(*s as i64)
+        }
+    }
+
+    #[test]
+    fn steps_and_final_var() {
+        let t = Trail { states: vec![0u8, 1, 2, 3] };
+        assert_eq!(t.steps(), 3);
+        assert_eq!(t.final_var(&Counter, "c"), Some(3));
+        assert_eq!(t.final_var(&Counter, "bogus"), None);
+    }
+
+    #[test]
+    fn render_elides_long_trails() {
+        let t = Trail { states: (0u8..100).collect() };
+        let r = t.render(&Counter, 10);
+        assert!(r.contains("elided"));
+        assert!(r.lines().count() < 20);
+    }
+}

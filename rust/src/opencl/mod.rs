@@ -1,0 +1,120 @@
+//! "Real execution" harness — the Table 2 counterpart (paper §7.1/§7.3).
+//!
+//! The paper runs the OpenCL Minimum kernel on an Nvidia P104-100 over a
+//! 4 GB array for 12 launch configurations and reports time (ms) and
+//! bandwidth (GB/s). Our testbed substitute (DESIGN.md §4) executes the
+//! AOT-compiled Pallas min-reduction artifacts on the PJRT CPU client over
+//! a scaled array; the *relative* behaviour — bandwidth grows with WG,
+//! is flat in TS — is the reproduction target, not absolute numbers.
+
+use crate::runtime::Engine;
+use crate::util::rng::Xoshiro256;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub name: String,
+    /// total work items = units × WG (Table 2 column "Global size")
+    pub global_size: u32,
+    pub wg: u32,
+    pub ts: u32,
+    pub best_ms: f64,
+    pub mean_ms: f64,
+    pub bandwidth_gbs: f64,
+    /// result verified against the host-side reference
+    pub correct: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub rows: Vec<SweepRow>,
+    pub data_bytes: u64,
+    pub platform: String,
+}
+
+/// Deterministic input array shared by every sweep configuration (all
+/// Table-2 rows process the same data size).
+pub fn gen_data(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64() as i32).collect()
+}
+
+/// Run every `min_device` artifact of the sweep (everything except the
+/// `*_small` self-test entries), `repeats` times each.
+pub fn run_sweep(engine: &mut Engine, repeats: u32, seed: u64) -> Result<SweepReport> {
+    let entries: Vec<_> = engine
+        .manifest()
+        .of_kind("min_device")
+        .filter(|e| !e.name.ends_with("_small"))
+        .cloned()
+        .collect();
+    anyhow::ensure!(!entries.is_empty(), "no sweep artifacts in manifest (run `make artifacts`)");
+    let n = entries[0].size as usize;
+    anyhow::ensure!(
+        entries.iter().all(|e| e.size as usize == n),
+        "sweep artifacts disagree on data size"
+    );
+    let data = gen_data(n, seed);
+    let expected = *data.iter().min().context("empty data")?;
+    let data_bytes = (n * std::mem::size_of::<i32>()) as u64;
+
+    let mut rows = Vec::new();
+    for e in &entries {
+        // warm-up run compiles the executable and faults in buffers
+        let first = engine.run_min(&e.name, &data)?;
+        let mut correct = first.global_min == expected;
+        let mut times = Vec::with_capacity(repeats as usize);
+        for _ in 0..repeats {
+            let t = Instant::now();
+            let out = engine.run_min(&e.name, &data)?;
+            times.push(t.elapsed().as_secs_f64() * 1e3);
+            correct &= out.global_min == expected;
+        }
+        let best = times.iter().copied().fold(f64::INFINITY, f64::min);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        rows.push(SweepRow {
+            name: e.name.clone(),
+            global_size: e.units * e.wg,
+            wg: e.wg,
+            ts: e.ts,
+            best_ms: best,
+            mean_ms: mean,
+            bandwidth_gbs: data_bytes as f64 / (best / 1e3) / 1e9,
+            correct,
+        });
+    }
+    // Table 2 is ordered by global size, then WG
+    rows.sort_by_key(|r| (r.global_size, r.wg, r.ts));
+    Ok(SweepReport { rows, data_bytes, platform: engine.platform() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_data_deterministic() {
+        assert_eq!(gen_data(64, 1), gen_data(64, 1));
+        assert_ne!(gen_data(64, 1), gen_data(64, 2));
+    }
+
+    #[test]
+    fn sweep_runs_and_verifies() {
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = Engine::new(&dir).unwrap();
+        // single repeat keeps the unit test fast; benches do real timing
+        let rep = run_sweep(&mut eng, 1, 42).unwrap();
+        assert_eq!(rep.rows.len(), 12, "Table 2 has 12 sweep rows");
+        assert!(rep.rows.iter().all(|r| r.correct), "kernel results must match host min");
+        assert!(rep.rows.iter().all(|r| r.bandwidth_gbs > 0.0));
+        // sorted by global size
+        for w in rep.rows.windows(2) {
+            assert!(w[0].global_size <= w[1].global_size);
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! Native transition system for the paper's *abstract* OpenCL platform
+//! model (paper §4, Listings 3–9).
+//!
+//! Semantics. `main` nondeterministically picks (WG, TS); the process
+//! network then executes work items in lockstep rounds (the Promela model's
+//! clock only advances when *all* active pexes have reported, so equal-cost
+//! phases keep every pex synchronous — see DESIGN.md §3.1). Per work item
+//! (Listing 8): `size/TS` iterations of [global load `GMT*TS` ticks →
+//! barrier → local compute `TS` ticks → barrier], then a `GMT`-tick global
+//! write. Rounds = ceil(total work items / simultaneously active pexes),
+//! reproducing host/device/unit re-activation (Listings 4–6).
+//!
+//! The only nondeterminism is the tuning choice: given (WG, TS) the model
+//! time is schedule-independent (all interleavings commute on `time`), so
+//! the native model explores a canonical schedule; the Promela front end
+//! retains full interleaving and is cross-checked against this model in
+//! `rust/tests/promela_vs_native.rs`.
+
+use super::config::{enumerate_tunings, geometry, Geometry, PlatformConfig, Tuning};
+use crate::model::TransitionSystem;
+use anyhow::Result;
+
+/// Transition granularity. `Tick` is clock-cycle faithful (one transition
+/// per model-time unit, like the Promela model); `Phase` jumps a whole
+/// long_work phase per transition — identical reachable terminal states,
+/// ~GMT·TS× fewer intermediate states (the checker's optimized hot path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Tick,
+    Phase,
+}
+
+const CFG_NONE: u8 = u8::MAX;
+
+/// Execution phases of one work item (Listing 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    GlobalLoad = 0,
+    LocalCompute = 1,
+    WriteBack = 2,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AbsState {
+    /// index into the tuning table; CFG_NONE before `main` chooses
+    cfg: u8,
+    round: u16,
+    /// tile index within the current work item ("i" in Listing 8 line 15)
+    tile: u16,
+    phase: u8,
+    /// ticks remaining in the current phase
+    ticks_left: u32,
+    pub time: u64,
+    pub fin: bool,
+}
+
+pub struct AbstractModel {
+    pub size: u32,
+    pub plat: PlatformConfig,
+    pub granularity: Granularity,
+    tunings: Vec<Tuning>,
+    geoms: Vec<Geometry>,
+}
+
+impl AbstractModel {
+    pub fn new(size: u32, plat: PlatformConfig, granularity: Granularity) -> Result<Self> {
+        plat.validate()?;
+        let tunings = enumerate_tunings(size)?;
+        anyhow::ensure!(
+            tunings.len() < CFG_NONE as usize,
+            "tuning space too large for u8 index"
+        );
+        let geoms = tunings.iter().map(|&t| geometry(size, t, &plat)).collect();
+        Ok(Self { size, plat, granularity, tunings, geoms })
+    }
+
+    pub fn tunings(&self) -> &[Tuning] {
+        &self.tunings
+    }
+
+    fn tuning(&self, s: &AbsState) -> Option<Tuning> {
+        (s.cfg != CFG_NONE).then(|| self.tunings[s.cfg as usize])
+    }
+
+    fn n_tiles(&self, t: Tuning) -> u32 {
+        self.size / t.ts
+    }
+
+    fn phase_ticks(&self, t: Tuning, phase: Phase) -> u32 {
+        match phase {
+            Phase::GlobalLoad => self.plat.gmt * t.ts,
+            Phase::LocalCompute => t.ts,
+            Phase::WriteBack => self.plat.gmt,
+        }
+    }
+
+    /// Closed-form terminal model time for a tuning choice; the transition
+    /// system must land exactly here (asserted by tests).
+    pub fn predicted_time(&self, t: Tuning) -> u64 {
+        let g = geometry(self.size, t, &self.plat);
+        let per_item = self.n_tiles(t) as u64
+            * (self.phase_ticks(t, Phase::GlobalLoad) as u64
+                + self.phase_ticks(t, Phase::LocalCompute) as u64)
+            + self.plat.gmt as u64;
+        g.rounds as u64 * per_item
+    }
+
+    /// Minimal terminal time over the whole tuning space with an argmin
+    /// witness — the ground truth the checker/tuner must find.
+    pub fn optimum(&self) -> (u64, Tuning) {
+        self.tunings
+            .iter()
+            .map(|&t| (self.predicted_time(t), t))
+            .min_by_key(|&(time, t)| (time, t.wg, t.ts))
+            .expect("non-empty tuning space")
+    }
+
+    /// Advance to the state after the current phase completes; returns the
+    /// follow-on state (with `ticks_left` loaded for the next phase).
+    fn next_phase(&self, s: &AbsState) -> AbsState {
+        let t = self.tunings[s.cfg as usize];
+        let g = self.geoms[s.cfg as usize];
+        let mut n = *s;
+        match s.phase {
+            p if p == Phase::GlobalLoad as u8 => {
+                n.phase = Phase::LocalCompute as u8;
+                n.ticks_left = self.phase_ticks(t, Phase::LocalCompute);
+            }
+            p if p == Phase::LocalCompute as u8 => {
+                if (s.tile as u32) + 1 < self.n_tiles(t) {
+                    n.tile += 1;
+                    n.phase = Phase::GlobalLoad as u8;
+                    n.ticks_left = self.phase_ticks(t, Phase::GlobalLoad);
+                } else {
+                    n.phase = Phase::WriteBack as u8;
+                    n.ticks_left = self.phase_ticks(t, Phase::WriteBack);
+                }
+            }
+            _ => {
+                // WriteBack done: next round or finish
+                if (s.round as u32) + 1 < g.rounds {
+                    n.round += 1;
+                    n.tile = 0;
+                    n.phase = Phase::GlobalLoad as u8;
+                    n.ticks_left = self.phase_ticks(t, Phase::GlobalLoad);
+                } else {
+                    n.fin = true;
+                    n.ticks_left = 0;
+                }
+            }
+        }
+        n
+    }
+}
+
+impl TransitionSystem for AbstractModel {
+    type State = AbsState;
+
+    fn initial_states(&self) -> Vec<AbsState> {
+        vec![AbsState {
+            cfg: CFG_NONE,
+            round: 0,
+            tile: 0,
+            phase: Phase::GlobalLoad as u8,
+            ticks_left: 0,
+            time: 0,
+            fin: false,
+        }]
+    }
+
+    fn successors(&self, s: &AbsState, out: &mut Vec<AbsState>) {
+        out.clear();
+        if s.fin {
+            return; // terminal
+        }
+        if s.cfg == CFG_NONE {
+            // main's nondeterministic select of WG and TS (Listing 3)
+            for (i, t) in self.tunings.iter().enumerate() {
+                let mut n = *s;
+                n.cfg = i as u8;
+                n.ticks_left = self.phase_ticks(*t, Phase::GlobalLoad);
+                out.push(n);
+            }
+            return;
+        }
+        match self.granularity {
+            Granularity::Tick => {
+                let mut n = *s;
+                if s.ticks_left > 1 {
+                    n.ticks_left -= 1;
+                    n.time += 1;
+                    out.push(n);
+                } else {
+                    // final tick of the phase: consume it and roll over
+                    let mut nn = self.next_phase(s);
+                    nn.time = s.time + 1;
+                    out.push(nn);
+                }
+            }
+            Granularity::Phase => {
+                let mut nn = self.next_phase(s);
+                nn.time = s.time + s.ticks_left as u64;
+                out.push(nn);
+            }
+        }
+    }
+
+    fn encode(&self, s: &AbsState, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(s.cfg);
+        out.extend_from_slice(&s.round.to_le_bytes());
+        out.extend_from_slice(&s.tile.to_le_bytes());
+        out.push(s.phase);
+        out.extend_from_slice(&s.ticks_left.to_le_bytes());
+        out.extend_from_slice(&s.time.to_le_bytes());
+        out.push(s.fin as u8);
+    }
+
+    fn eval_var(&self, s: &AbsState, name: &str) -> Option<i64> {
+        match name {
+            "time" => Some(s.time as i64),
+            "FIN" => Some(s.fin as i64),
+            "size" => Some(self.size as i64),
+            "WG" => self.tuning(s).map(|t| t.wg as i64),
+            "TS" => self.tuning(s).map(|t| t.ts as i64),
+            "WGs" => self.tuning(s).map(|t| geometry(self.size, t, &self.plat).wgs as i64),
+            "NWD" => self.tuning(s).map(|t| geometry(self.size, t, &self.plat).nwd as i64),
+            "NWU" => self.tuning(s).map(|t| geometry(self.size, t, &self.plat).nwu as i64),
+            "NWE" => self.tuning(s).map(|t| geometry(self.size, t, &self.plat).nwe as i64),
+            "rounds" => self.tuning(s).map(|t| geometry(self.size, t, &self.plat).rounds as i64),
+            _ => None,
+        }
+    }
+
+    fn describe(&self, s: &AbsState) -> String {
+        match self.tuning(s) {
+            None => "main: selecting WG, TS".to_string(),
+            Some(t) => format!(
+                "WG={} TS={} round={} tile={} phase={} time={}{}",
+                t.wg,
+                t.ts,
+                s.round,
+                s.tile,
+                ["global", "local", "write"][(s.phase as usize).min(2)],
+                s.time,
+                if s.fin { " FIN" } else { "" }
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_to_fin(m: &AbstractModel, cfg_idx: usize) -> (u64, usize) {
+        let init = &m.initial_states()[0];
+        let mut buf = Vec::new();
+        m.successors(init, &mut buf);
+        let mut s = buf[cfg_idx];
+        let mut steps = 1usize;
+        loop {
+            let mut next = Vec::new();
+            m.successors(&s, &mut next);
+            if next.is_empty() {
+                return (s.time, steps);
+            }
+            assert_eq!(next.len(), 1, "post-choice evolution is deterministic");
+            s = next[0];
+            steps += 1;
+        }
+    }
+
+    #[test]
+    fn initial_branches_once_per_tuning() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let mut buf = Vec::new();
+        m.successors(&m.initial_states()[0], &mut buf);
+        assert_eq!(buf.len(), m.tunings().len());
+    }
+
+    #[test]
+    fn terminal_time_matches_formula_phase() {
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        for (i, &t) in m.tunings().iter().enumerate() {
+            let (time, _) = run_to_fin(&m, i);
+            assert_eq!(time, m.predicted_time(t), "tuning {:?}", t);
+        }
+    }
+
+    #[test]
+    fn terminal_time_matches_formula_tick() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Tick).unwrap();
+        for (i, &t) in m.tunings().iter().enumerate() {
+            let (time, steps) = run_to_fin(&m, i);
+            assert_eq!(time, m.predicted_time(t), "tuning {:?}", t);
+            // tick granularity: one transition per time unit (+1 for choice)
+            assert_eq!(steps as u64, time + 1);
+        }
+    }
+
+    #[test]
+    fn granularities_agree_on_terminal_time() {
+        let mp = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let mt = AbstractModel::new(16, PlatformConfig::default(), Granularity::Tick).unwrap();
+        for i in 0..mp.tunings().len() {
+            assert_eq!(run_to_fin(&mp, i).0, run_to_fin(&mt, i).0);
+        }
+    }
+
+    #[test]
+    fn optimum_is_min_over_space() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (best, t) = m.optimum();
+        for &u in m.tunings() {
+            assert!(m.predicted_time(u) >= best);
+        }
+        assert!(m.tunings().contains(&t));
+    }
+
+    #[test]
+    fn eval_vars_exposed() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let init = m.initial_states()[0];
+        assert_eq!(m.eval_var(&init, "FIN"), Some(0));
+        assert_eq!(m.eval_var(&init, "time"), Some(0));
+        assert_eq!(m.eval_var(&init, "WG"), None); // not chosen yet
+        let mut buf = Vec::new();
+        m.successors(&init, &mut buf);
+        assert!(m.eval_var(&buf[0], "WG").is_some());
+        assert!(m.eval_var(&buf[0], "NWE").is_some());
+        assert_eq!(m.eval_var(&buf[0], "nope"), None);
+    }
+
+    #[test]
+    fn encode_is_injective_on_a_run() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Tick).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        let mut buf = Vec::new();
+        m.successors(&m.initial_states()[0], &mut buf);
+        let mut s = buf[0];
+        let mut enc = Vec::new();
+        loop {
+            m.encode(&s, &mut enc);
+            assert!(seen.insert(enc.clone()), "state encoding collision");
+            let mut next = Vec::new();
+            m.successors(&s, &mut next);
+            if next.is_empty() {
+                break;
+            }
+            s = next[0];
+        }
+    }
+
+    #[test]
+    fn larger_tile_never_slower_on_default_platform() {
+        // On the abstract model the compute term is TS-independent and
+        // rounds shrink with TS, so time is monotone non-increasing in TS.
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        for &wg in &[2u32, 4, 8] {
+            let mut prev = u64::MAX;
+            for &ts in &[2u32, 4, 8] {
+                if wg * ts > 64 {
+                    continue;
+                }
+                let time = m.predicted_time(Tuning { wg, ts });
+                assert!(time <= prev, "wg={} ts={} time={} prev={}", wg, ts, time, prev);
+                prev = time;
+            }
+        }
+    }
+}

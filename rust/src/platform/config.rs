@@ -1,0 +1,178 @@
+//! Platform and tuning-parameter configuration (paper §3.1, §4).
+
+use anyhow::{bail, Result};
+
+/// The abstract OpenCL platform: `ND` devices × `NU` units × `NP`
+/// processing elements, with `GMT` = global/local memory access-time ratio
+/// (paper: "usually between one and two orders of magnitude").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlatformConfig {
+    pub nd: u32,
+    pub nu: u32,
+    pub np: u32,
+    pub gmt: u32,
+}
+
+impl Default for PlatformConfig {
+    /// The paper's Table-1 platform: one device, one unit, four PEs.
+    fn default() -> Self {
+        Self { nd: 1, nu: 1, np: 4, gmt: 10 }
+    }
+}
+
+impl PlatformConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.nd == 0 || self.nu == 0 || self.np == 0 {
+            bail!("platform dimensions must be positive: {:?}", self);
+        }
+        if self.gmt == 0 {
+            bail!("GMT must be >= 1 (global memory cannot be faster than local)");
+        }
+        Ok(())
+    }
+}
+
+/// One tuning-parameter configuration: workgroup size and tile size
+/// (both powers of two, paper Listing 3 lines 6-10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tuning {
+    pub wg: u32,
+    pub ts: u32,
+}
+
+/// Derived launch geometry (Listing 3 lines 12-22).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub wgs: u32,
+    pub nwd: u32,
+    pub nwu: u32,
+    pub nwe: u32,
+    /// sequential pex-activation rounds needed to serve all work items
+    pub rounds: u32,
+}
+
+impl Geometry {
+    /// Work items executing simultaneously (Listing 3 line 22).
+    pub fn all_nwe(&self) -> u32 {
+        self.nwd * self.nwu * self.nwe
+    }
+}
+
+pub fn is_pow2(x: u32) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Enumerate the paper's tuning search space for input `size = 2^n`:
+/// `WG = 2^i`, `TS = 2^j`, i,j ∈ 1..=n-1 (Listing 3), restricted to
+/// configurations that launch at least one workgroup (`WGs >= 1`).
+pub fn enumerate_tunings(size: u32) -> Result<Vec<Tuning>> {
+    if !is_pow2(size) || size < 4 {
+        bail!("size must be a power of two >= 4, got {}", size);
+    }
+    let n = size.trailing_zeros();
+    let mut out = Vec::new();
+    for i in 1..n {
+        for j in 1..n {
+            let (wg, ts) = (1u32 << i, 1u32 << j);
+            if (wg as u64) * (ts as u64) <= size as u64 {
+                out.push(Tuning { wg, ts });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Launch geometry for a tuning choice on a platform (Listing 3 semantics,
+/// including the two-step NWD clamp in lines 14-16).
+pub fn geometry(size: u32, t: Tuning, p: &PlatformConfig) -> Geometry {
+    let wgs = size / (t.wg * t.ts);
+    debug_assert!(wgs >= 1, "invalid tuning {:?} for size {}", t, size);
+    // NWD = (WGs <= NU*ND -> WGs/NU : ND); NWD = (WGs/NU -> NWD : 1)
+    let mut nwd = if wgs <= p.nu * p.nd { wgs / p.nu } else { p.nd };
+    if wgs / p.nu == 0 {
+        nwd = 1;
+    }
+    let nwu = wgs.min(p.nu);
+    let nwe = t.wg.min(p.np);
+    let total_items = wgs as u64 * t.wg as u64;
+    let rounds = ceil_div(total_items, (nwd * nwu * nwe) as u64) as u32;
+    Geometry { wgs, nwd, nwu, nwe, rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_and_ceil_div() {
+        assert!(is_pow2(1) && is_pow2(1024));
+        assert!(!is_pow2(0) && !is_pow2(12));
+        assert_eq!(ceil_div(7, 2), 4);
+        assert_eq!(ceil_div(8, 2), 4);
+    }
+
+    #[test]
+    fn enumerate_respects_bounds() {
+        let ts = enumerate_tunings(16).unwrap();
+        // i,j in 1..=3, wg*ts <= 16
+        assert!(ts.iter().all(|t| is_pow2(t.wg) && is_pow2(t.ts)));
+        assert!(ts.iter().all(|t| t.wg >= 2 && t.wg <= 8 && t.ts >= 2 && t.ts <= 8));
+        assert!(ts.iter().all(|t| t.wg * t.ts <= 16));
+        assert!(ts.contains(&Tuning { wg: 8, ts: 2 }));
+        assert!(ts.contains(&Tuning { wg: 2, ts: 8 }));
+        assert!(!ts.contains(&Tuning { wg: 8, ts: 8 })); // WGs would be 0
+    }
+
+    #[test]
+    fn enumerate_rejects_non_pow2() {
+        assert!(enumerate_tunings(12).is_err());
+        assert!(enumerate_tunings(2).is_err());
+    }
+
+    #[test]
+    fn geometry_paper_defaults() {
+        // size 16, WG 4, TS 2 on the Table-1 platform (1 dev, 1 unit, 4 PE)
+        let g = geometry(16, Tuning { wg: 4, ts: 2 }, &PlatformConfig::default());
+        assert_eq!(g.wgs, 2);
+        assert_eq!(g.nwd, 1);
+        assert_eq!(g.nwu, 1);
+        assert_eq!(g.nwe, 4);
+        // 2 workgroups x 4 items / 4 simultaneous = 2 rounds
+        assert_eq!(g.rounds, 2);
+        assert_eq!(g.all_nwe(), 4);
+    }
+
+    #[test]
+    fn geometry_wg_exceeds_np() {
+        let g = geometry(64, Tuning { wg: 16, ts: 2 }, &PlatformConfig::default());
+        assert_eq!(g.wgs, 2);
+        assert_eq!(g.nwe, 4); // capped at NP
+        assert_eq!(g.rounds, 8); // 32 items / 4 simultaneous
+    }
+
+    #[test]
+    fn geometry_multi_device_clamp() {
+        let p = PlatformConfig { nd: 2, nu: 3, np: 4, gmt: 10 };
+        // WGs = 1 <= NU*ND: NWD = WGs/NU = 0 -> clamped to 1
+        let g = geometry(16, Tuning { wg: 4, ts: 4 }, &p);
+        assert_eq!(g.nwd, 1);
+        assert_eq!(g.nwu, 1);
+        // WGs = 8 > NU*ND=6: NWD = ND = 2
+        let g = geometry(64, Tuning { wg: 4, ts: 2 }, &p);
+        assert_eq!(g.wgs, 8);
+        assert_eq!(g.nwd, 2);
+        assert_eq!(g.nwu, 3);
+    }
+
+    #[test]
+    fn platform_validation() {
+        assert!(PlatformConfig::default().validate().is_ok());
+        assert!(PlatformConfig { nd: 0, ..Default::default() }.validate().is_err());
+        assert!(PlatformConfig { gmt: 0, ..Default::default() }.validate().is_err());
+    }
+}

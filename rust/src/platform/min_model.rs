@@ -1,0 +1,397 @@
+//! Native transition system for the paper's Minimum-problem model
+//! (paper §7.2, Listings 12–15).
+//!
+//! One device / one unit (the paper's §5 symmetry abstraction). `main`
+//! loads `glob[i]` and nondeterministically picks (WG, TS); `NWE =
+//! min(WG, NP)` pexes then process `size/TS` work items in rounds; each
+//! element costs `GMT+1` ticks (the `min` + `long_work(GMT)` pair of
+//! Listing 15 lines 15-16); after the last round, pex 0 folds the NWE
+//! local slots ((NWE−1) local ticks, lines 27-30) and writes the result to
+//! global memory (`GMT` ticks, lines 32-33); one setup and one finish
+//! handshake tick bracket the run. Calibration against the paper's
+//! Table 3 (GMT=3): rows 4, 5 and 7 reproduce exactly; see
+//! EXPERIMENTS.md for the full per-row comparison.
+//!
+//! Unlike the abstract model, this model carries *data*: `cur_min` folds
+//! the actual array values as work items complete, and at FIN it must
+//! equal the true minimum — an invariant the checker verifies over every
+//! schedule (tests + `rust/tests/proptests.rs`).
+
+use super::abstract_model::Granularity;
+use super::config::{ceil_div, is_pow2, Tuning};
+use crate::model::TransitionSystem;
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, ensure, Result};
+
+/// How `main` initializes global memory (Listing 12 line 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataInit {
+    /// `glob[i] = size - i` — the paper's initialization; min = 1.
+    Descending,
+    /// pseudorandom i32 values derived from the seed (for property tests)
+    Seeded(u64),
+}
+
+const CFG_NONE: u8 = u8::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Setup = 0,
+    Map = 1,
+    Reduce = 2,
+    Write = 3,
+    Finish = 4,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MinState {
+    cfg: u8,
+    phase: u8,
+    round: u16,
+    ticks_left: u32,
+    pub time: u64,
+    /// running fold of all elements consumed so far (i32 domain)
+    pub cur_min: i32,
+    pub items_done: u32,
+    pub fin: bool,
+}
+
+pub struct MinModel {
+    pub size: u32,
+    pub np: u32,
+    pub gmt: u32,
+    pub data: DataInit,
+    pub granularity: Granularity,
+    tunings: Vec<Tuning>,
+}
+
+impl MinModel {
+    pub fn new(
+        size: u32,
+        np: u32,
+        gmt: u32,
+        data: DataInit,
+        granularity: Granularity,
+    ) -> Result<Self> {
+        if !is_pow2(size) || size < 4 {
+            bail!("size must be a power of two >= 4, got {}", size);
+        }
+        if np == 0 || gmt == 0 {
+            bail!("np and gmt must be positive");
+        }
+        let tunings = super::config::enumerate_tunings(size)?;
+        ensure!(tunings.len() < CFG_NONE as usize, "tuning space too large");
+        Ok(Self { size, np, gmt, data, granularity, tunings })
+    }
+
+    /// The paper's Table-3 setup: GMT = 3 (calibrated; see module docs).
+    pub fn paper(size: u32, np: u32) -> Result<Self> {
+        Self::new(size, np, 3, DataInit::Descending, Granularity::Phase)
+    }
+
+    pub fn tunings(&self) -> &[Tuning] {
+        &self.tunings
+    }
+
+    /// Element value at index i (computed on the fly; the array itself is
+    /// never stored in the state).
+    pub fn elem(&self, i: u32) -> i32 {
+        match self.data {
+            DataInit::Descending => (self.size - i) as i32,
+            DataInit::Seeded(seed) => {
+                let mut sm = SplitMix64::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
+                sm.next_u64() as i32
+            }
+        }
+    }
+
+    /// True minimum of the initialized array — the oracle for FIN states.
+    pub fn true_min(&self) -> i32 {
+        (0..self.size).map(|i| self.elem(i)).min().unwrap()
+    }
+
+    fn nwe(&self, t: Tuning) -> u32 {
+        t.wg.min(self.np)
+    }
+
+    fn items(&self, t: Tuning) -> u32 {
+        self.size / t.ts
+    }
+
+    fn rounds(&self, t: Tuning) -> u32 {
+        ceil_div(self.items(t) as u64, self.nwe(t) as u64) as u32
+    }
+
+    /// Ticks of one map round: each pex scans TS elements at GMT+1 each.
+    fn map_round_ticks(&self, t: Tuning) -> u32 {
+        t.ts * (self.gmt + 1)
+    }
+
+    /// Closed-form terminal time (asserted against the transition system).
+    pub fn predicted_time(&self, t: Tuning) -> u64 {
+        let map = self.rounds(t) as u64 * self.map_round_ticks(t) as u64;
+        map + (self.nwe(t) as u64 - 1) + self.gmt as u64 + 2
+    }
+
+    pub fn optimum(&self) -> (u64, Tuning) {
+        self.tunings
+            .iter()
+            .map(|&t| (self.predicted_time(t), t))
+            .min_by_key(|&(time, t)| (time, t.wg, t.ts))
+            .expect("non-empty tuning space")
+    }
+
+    fn tuning(&self, s: &MinState) -> Option<Tuning> {
+        (s.cfg != CFG_NONE).then(|| self.tunings[s.cfg as usize])
+    }
+
+    /// Fold the elements of work items [first, last) into cur_min.
+    fn fold_items(&self, t: Tuning, first: u32, last: u32, cur: i32) -> i32 {
+        let mut m = cur;
+        for item in first..last {
+            let base = item * t.ts;
+            for k in 0..t.ts {
+                m = m.min(self.elem(base + k));
+            }
+        }
+        m
+    }
+
+    /// Phase rollover once the current phase's ticks are exhausted.
+    fn next_phase(&self, s: &MinState) -> MinState {
+        let t = self.tunings[s.cfg as usize];
+        let mut n = *s;
+        match s.phase {
+            p if p == Phase::Setup as u8 => {
+                n.phase = Phase::Map as u8;
+                n.round = 0;
+                n.ticks_left = self.map_round_ticks(t);
+            }
+            p if p == Phase::Map as u8 => {
+                // round completes: NWE work items finished, fold their data
+                let first = s.round as u32 * self.nwe(t);
+                let last = (first + self.nwe(t)).min(self.items(t));
+                n.cur_min = self.fold_items(t, first, last, s.cur_min);
+                n.items_done = last;
+                if (s.round as u32) + 1 < self.rounds(t) {
+                    n.round += 1;
+                    n.ticks_left = self.map_round_ticks(t);
+                } else {
+                    n.phase = Phase::Reduce as u8;
+                    n.ticks_left = self.nwe(t) - 1;
+                    if n.ticks_left == 0 {
+                        // NWE == 1: nothing to fold locally, go straight on
+                        n.phase = Phase::Write as u8;
+                        n.ticks_left = self.gmt;
+                    }
+                }
+            }
+            p if p == Phase::Reduce as u8 => {
+                n.phase = Phase::Write as u8;
+                n.ticks_left = self.gmt;
+            }
+            p if p == Phase::Write as u8 => {
+                n.phase = Phase::Finish as u8;
+                n.ticks_left = 1;
+            }
+            _ => {
+                n.fin = true;
+                n.ticks_left = 0;
+            }
+        }
+        n
+    }
+}
+
+impl TransitionSystem for MinModel {
+    type State = MinState;
+
+    fn initial_states(&self) -> Vec<MinState> {
+        vec![MinState {
+            cfg: CFG_NONE,
+            phase: Phase::Setup as u8,
+            round: 0,
+            ticks_left: 0,
+            time: 0,
+            cur_min: i32::MAX, // loc[] preset to MAX (Listing 12 line 6)
+            items_done: 0,
+            fin: false,
+        }]
+    }
+
+    fn successors(&self, s: &MinState, out: &mut Vec<MinState>) {
+        out.clear();
+        if s.fin {
+            return;
+        }
+        if s.cfg == CFG_NONE {
+            for i in 0..self.tunings.len() {
+                let mut n = *s;
+                n.cfg = i as u8;
+                n.phase = Phase::Setup as u8;
+                n.ticks_left = 1; // setup handshake tick
+                out.push(n);
+            }
+            return;
+        }
+        match self.granularity {
+            Granularity::Tick => {
+                if s.ticks_left > 1 {
+                    let mut n = *s;
+                    n.ticks_left -= 1;
+                    n.time += 1;
+                    out.push(n);
+                } else {
+                    let mut nn = self.next_phase(s);
+                    nn.time = s.time + 1;
+                    out.push(nn);
+                }
+            }
+            Granularity::Phase => {
+                let mut nn = self.next_phase(s);
+                nn.time = s.time + s.ticks_left as u64;
+                out.push(nn);
+            }
+        }
+    }
+
+    fn encode(&self, s: &MinState, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(s.cfg);
+        out.push(s.phase);
+        out.extend_from_slice(&s.round.to_le_bytes());
+        out.extend_from_slice(&s.ticks_left.to_le_bytes());
+        out.extend_from_slice(&s.time.to_le_bytes());
+        out.extend_from_slice(&s.cur_min.to_le_bytes());
+        out.extend_from_slice(&s.items_done.to_le_bytes());
+        out.push(s.fin as u8);
+    }
+
+    fn eval_var(&self, s: &MinState, name: &str) -> Option<i64> {
+        match name {
+            "time" => Some(s.time as i64),
+            "FIN" => Some(s.fin as i64),
+            "size" => Some(self.size as i64),
+            "result" => Some(s.cur_min as i64),
+            "items_done" => Some(s.items_done as i64),
+            "WG" => self.tuning(s).map(|t| t.wg as i64),
+            "TS" => self.tuning(s).map(|t| t.ts as i64),
+            "NWE" => self.tuning(s).map(|t| self.nwe(t) as i64),
+            "rounds" => self.tuning(s).map(|t| self.rounds(t) as i64),
+            _ => None,
+        }
+    }
+
+    fn describe(&self, s: &MinState) -> String {
+        match self.tuning(s) {
+            None => "main: loading glob[], selecting WG, TS".to_string(),
+            Some(t) => format!(
+                "WG={} TS={} phase={} round={} time={} min={}{}",
+                t.wg,
+                t.ts,
+                ["setup", "map", "reduce", "write", "finish"][(s.phase as usize).min(4)],
+                s.round,
+                s.time,
+                s.cur_min,
+                if s.fin { " FIN" } else { "" }
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_to_fin(m: &MinModel, cfg_idx: usize) -> MinState {
+        let mut buf = Vec::new();
+        m.successors(&m.initial_states()[0], &mut buf);
+        let mut s = buf[cfg_idx];
+        loop {
+            let mut next = Vec::new();
+            m.successors(&s, &mut next);
+            if next.is_empty() {
+                return s;
+            }
+            assert_eq!(next.len(), 1);
+            s = next[0];
+        }
+    }
+
+    #[test]
+    fn descending_data_min_is_one() {
+        let m = MinModel::paper(64, 4).unwrap();
+        assert_eq!(m.elem(0), 64);
+        assert_eq!(m.elem(63), 1);
+        assert_eq!(m.true_min(), 1);
+    }
+
+    #[test]
+    fn fin_state_computes_true_min_all_configs() {
+        for data in [DataInit::Descending, DataInit::Seeded(0xDEAD)] {
+            let m = MinModel::new(64, 4, 3, data, Granularity::Phase).unwrap();
+            for i in 0..m.tunings().len() {
+                let fin = run_to_fin(&m, i);
+                assert!(fin.fin);
+                assert_eq!(fin.cur_min, m.true_min(), "cfg {:?}", m.tunings()[i]);
+                assert_eq!(fin.items_done, m.items(m.tunings()[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn terminal_time_matches_formula_both_granularities() {
+        for g in [Granularity::Phase, Granularity::Tick] {
+            let m = MinModel::new(32, 4, 3, DataInit::Descending, g).unwrap();
+            for (i, &t) in m.tunings().iter().enumerate() {
+                let fin = run_to_fin(&m, i);
+                assert_eq!(fin.time, m.predicted_time(t), "tuning {:?} ({:?})", t, g);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_table3_calibrated_rows() {
+        // Table 3 rows 4, 5, 7 (NP=64) reproduce exactly with GMT=3.
+        let m64 = MinModel::paper(64, 64).unwrap();
+        assert_eq!(m64.predicted_time(Tuning { wg: 16, ts: 4 }), 36); // row 4
+        assert_eq!(m64.predicted_time(Tuning { wg: 8, ts: 8 }), 44); // row 5
+        let m128 = MinModel::paper(128, 64).unwrap();
+        assert_eq!(m128.predicted_time(Tuning { wg: 8, ts: 16 }), 76); // row 7
+    }
+
+    #[test]
+    fn wg_dominates_ts_like_paper() {
+        // Paper §7.3: "the WG parameter affects the run time more
+        // dramatically than TS". At fixed TS, growing WG (up to NP) must
+        // shrink time; at fixed WG, growing TS changes time only mildly.
+        let m = MinModel::paper(256, 64).unwrap();
+        let t_wg2 = m.predicted_time(Tuning { wg: 2, ts: 4 });
+        let t_wg16 = m.predicted_time(Tuning { wg: 16, ts: 4 });
+        assert!(t_wg16 * 4 < t_wg2, "{} vs {}", t_wg16, t_wg2);
+        let a = m.predicted_time(Tuning { wg: 16, ts: 2 });
+        let b = m.predicted_time(Tuning { wg: 16, ts: 8 });
+        let rel = (a as f64 - b as f64).abs() / a as f64;
+        assert!(rel < 0.25, "TS effect too large: {} vs {}", a, b);
+    }
+
+    #[test]
+    fn nwe_one_skips_reduce() {
+        // WG=2, NP=1 -> NWE=1: no local reduce phase, but still terminates
+        let m = MinModel::new(8, 1, 3, DataInit::Descending, Granularity::Phase).unwrap();
+        let idx = m.tunings().iter().position(|t| *t == Tuning { wg: 2, ts: 2 }).unwrap();
+        let fin = run_to_fin(&m, idx);
+        assert!(fin.fin);
+        assert_eq!(fin.cur_min, 1);
+        assert_eq!(fin.time, m.predicted_time(Tuning { wg: 2, ts: 2 }));
+    }
+
+    #[test]
+    fn seeded_data_differs_by_seed() {
+        let a = MinModel::new(16, 4, 3, DataInit::Seeded(1), Granularity::Phase).unwrap();
+        let b = MinModel::new(16, 4, 3, DataInit::Seeded(2), Granularity::Phase).unwrap();
+        let va: Vec<i32> = (0..16).map(|i| a.elem(i)).collect();
+        let vb: Vec<i32> = (0..16).map(|i| b.elem(i)).collect();
+        assert_ne!(va, vb);
+    }
+}

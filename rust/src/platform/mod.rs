@@ -1,0 +1,18 @@
+//! Native (Rust) implementations of the paper's two Promela models — the
+//! abstract OpenCL platform (§4) and the Minimum problem (§7.2) — as
+//! [`crate::model::TransitionSystem`]s, plus SPIN-style random simulation.
+//!
+//! These are the checker's optimized hot path. The Promela front end
+//! (`crate::promela`) executes the shipped `models/*.pml` with full
+//! interleaving as the reference semantics; `rust/tests/promela_vs_native.rs`
+//! pins both to the same reachable terminal (time, WG, TS) sets.
+
+pub mod abstract_model;
+pub mod config;
+pub mod min_model;
+pub mod sim;
+
+pub use abstract_model::{AbstractModel, Granularity};
+pub use config::{enumerate_tunings, geometry, PlatformConfig, Tuning};
+pub use min_model::{DataInit, MinModel};
+pub use sim::{initial_bound, simulate, SimReport};

@@ -1,0 +1,95 @@
+//! Random simulation — SPIN's simulation mode (paper §2 Step 3: the
+//! initial bound `T_ini` "can be specified by simulating the program
+//! model"). A uniformly random walk from an initial state to a terminal
+//! state (or a step bound) reports the terminal observation.
+
+use crate::model::TransitionSystem;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Debug, Clone)]
+pub struct SimReport<S> {
+    pub final_state: S,
+    pub steps: usize,
+    /// value of `time` in the final state, when the model exposes it
+    pub time: Option<i64>,
+    /// true if the walk reached a terminal state (vs hitting max_steps)
+    pub terminated: bool,
+}
+
+/// One random walk. `max_steps` guards against non-terminating models.
+pub fn simulate<M: TransitionSystem>(m: &M, seed: u64, max_steps: usize) -> SimReport<M::State> {
+    let mut rng = Xoshiro256::new(seed);
+    let inits = m.initial_states();
+    let mut state = inits[rng.below(inits.len() as u64) as usize].clone();
+    let mut buf = Vec::new();
+    let mut steps = 0usize;
+    loop {
+        m.successors(&state, &mut buf);
+        if buf.is_empty() || steps >= max_steps {
+            let terminated = buf.is_empty();
+            let time = m.eval_var(&state, "time");
+            return SimReport { final_state: state, steps, time, terminated };
+        }
+        state = buf[rng.below(buf.len() as u64) as usize].clone();
+        steps += 1;
+    }
+}
+
+/// `T_ini` via a handful of simulations: the paper seeds the bisection
+/// with a simulated termination time; we take the max over `runs` walks so
+/// bisection starts from a sound upper region (any observed terminal time
+/// is achievable, hence Cex(T_ini) holds).
+pub fn initial_bound<M: TransitionSystem>(m: &M, runs: u32, seed: u64, max_steps: usize) -> Option<i64> {
+    let mut best: Option<i64> = None;
+    for r in 0..runs {
+        let rep = simulate(m, seed.wrapping_add(r as u64), max_steps);
+        if rep.terminated {
+            if let Some(t) = rep.time {
+                best = Some(best.map_or(t, |b: i64| b.max(t)));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::abstract_model::{AbstractModel, Granularity};
+    use crate::platform::config::PlatformConfig;
+    use crate::platform::min_model::{DataInit, MinModel};
+
+    #[test]
+    fn simulation_terminates_on_abstract_model() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let rep = simulate(&m, 1, 1_000_000);
+        assert!(rep.terminated);
+        assert_eq!(m.eval_var(&rep.final_state, "FIN"), Some(1));
+        assert!(rep.time.unwrap() > 0);
+    }
+
+    #[test]
+    fn initial_bound_is_achievable_time() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let t = initial_bound(&m, 8, 42, 1_000_000).unwrap();
+        // the bound must be one of the model's terminal times
+        let times: Vec<u64> = m.tunings().iter().map(|&u| m.predicted_time(u)).collect();
+        assert!(times.contains(&(t as u64)));
+    }
+
+    #[test]
+    fn different_seeds_explore_different_configs() {
+        let m = MinModel::new(64, 4, 3, DataInit::Descending, Granularity::Phase).unwrap();
+        let times: std::collections::HashSet<i64> =
+            (0..32).map(|s| simulate(&m, s, 1_000_000).time.unwrap()).collect();
+        assert!(times.len() > 1, "walks should sample multiple tunings");
+    }
+
+    #[test]
+    fn max_steps_guard() {
+        let m = AbstractModel::new(1024, PlatformConfig::default(), Granularity::Tick).unwrap();
+        let rep = simulate(&m, 3, 10);
+        assert!(!rep.terminated);
+        assert_eq!(rep.steps, 10);
+    }
+}

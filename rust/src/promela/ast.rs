@@ -1,0 +1,229 @@
+//! AST for the Promela subset.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PExpr {
+    Num(i64),
+    Var(String),
+    Index(String, Box<PExpr>),
+    Unary(UnOp, Box<PExpr>),
+    Bin(PBinOp, Box<PExpr>, Box<PExpr>),
+    /// Promela conditional expression `(c -> a : b)`
+    Cond(Box<PExpr>, Box<PExpr>, Box<PExpr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Not,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Shl,
+    Shr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LValue {
+    Var(String),
+    Index(String, Box<PExpr>),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecvArg {
+    /// bind the received field into a variable
+    Bind(LValue),
+    /// match a constant (mtype name or literal) — message filtered on it
+    Match(PExpr),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VarDecl {
+    pub ty: String,
+    pub name: String,
+    /// array length (None = scalar)
+    pub len: Option<u32>,
+    pub init: Option<PExpr>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChanDecl {
+    pub name: String,
+    pub capacity: u32,
+    pub arity: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Stmt {
+    VarDecl(VarDecl),
+    ChanDecl(ChanDecl),
+    Assign(LValue, PExpr),
+    Inc(LValue),
+    Dec(LValue),
+    /// blocking expression statement
+    ExprStmt(PExpr),
+    Send(String, Vec<PExpr>),
+    Recv(String, Vec<RecvArg>),
+    If(Vec<Vec<Stmt>>, Option<Vec<Stmt>>),
+    Do(Vec<Vec<Stmt>>, Option<Vec<Stmt>>),
+    Atomic(Vec<Stmt>),
+    For(String, PExpr, PExpr, Vec<Stmt>),
+    Select(String, PExpr, PExpr),
+    Run(String, Vec<PExpr>),
+    InlineCall(String, Vec<PExpr>),
+    Break,
+    Skip,
+}
+
+#[derive(Debug, Clone)]
+pub struct Proctype {
+    pub name: String,
+    pub active: bool,
+    pub params: Vec<(String, String)>, // (type-ish: "chan"/"byte"/..., name)
+    pub body: Vec<Stmt>,
+}
+
+#[derive(Debug, Clone)]
+pub struct InlineDef {
+    pub name: String,
+    pub params: Vec<String>,
+    pub body: Vec<Stmt>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub mtypes: Vec<String>,
+    pub globals: Vec<VarDecl>,
+    pub global_chans: Vec<ChanDecl>,
+    pub inlines: Vec<InlineDef>,
+    pub procs: Vec<Proctype>,
+}
+
+/// Substitute identifiers by expressions (inline-macro expansion).
+/// Replaces whole-variable references and, where the substitute is itself a
+/// plain variable, lvalues/channel names too.
+pub fn subst_stmts(stmts: &[Stmt], map: &std::collections::HashMap<String, PExpr>) -> Vec<Stmt> {
+    stmts.iter().map(|s| subst_stmt(s, map)).collect()
+}
+
+fn subst_name(name: &str, map: &std::collections::HashMap<String, PExpr>) -> String {
+    match map.get(name) {
+        Some(PExpr::Var(v)) => v.clone(),
+        _ => name.to_string(),
+    }
+}
+
+fn subst_lval(lv: &LValue, map: &std::collections::HashMap<String, PExpr>) -> LValue {
+    match lv {
+        LValue::Var(n) => LValue::Var(subst_name(n, map)),
+        LValue::Index(n, e) => LValue::Index(subst_name(n, map), Box::new(subst_expr(e, map))),
+    }
+}
+
+pub fn subst_expr(e: &PExpr, map: &std::collections::HashMap<String, PExpr>) -> PExpr {
+    match e {
+        PExpr::Num(n) => PExpr::Num(*n),
+        PExpr::Var(n) => map.get(n).cloned().unwrap_or_else(|| PExpr::Var(n.clone())),
+        PExpr::Index(n, i) => PExpr::Index(subst_name(n, map), Box::new(subst_expr(i, map))),
+        PExpr::Unary(op, a) => PExpr::Unary(*op, Box::new(subst_expr(a, map))),
+        PExpr::Bin(op, a, b) => {
+            PExpr::Bin(*op, Box::new(subst_expr(a, map)), Box::new(subst_expr(b, map)))
+        }
+        PExpr::Cond(c, a, b) => PExpr::Cond(
+            Box::new(subst_expr(c, map)),
+            Box::new(subst_expr(a, map)),
+            Box::new(subst_expr(b, map)),
+        ),
+    }
+}
+
+fn subst_stmt(s: &Stmt, map: &std::collections::HashMap<String, PExpr>) -> Stmt {
+    match s {
+        Stmt::VarDecl(d) => Stmt::VarDecl(VarDecl {
+            ty: d.ty.clone(),
+            name: subst_name(&d.name, map),
+            len: d.len,
+            init: d.init.as_ref().map(|e| subst_expr(e, map)),
+        }),
+        Stmt::ChanDecl(c) => Stmt::ChanDecl(ChanDecl {
+            name: subst_name(&c.name, map),
+            ..c.clone()
+        }),
+        Stmt::Assign(lv, e) => Stmt::Assign(subst_lval(lv, map), subst_expr(e, map)),
+        Stmt::Inc(lv) => Stmt::Inc(subst_lval(lv, map)),
+        Stmt::Dec(lv) => Stmt::Dec(subst_lval(lv, map)),
+        Stmt::ExprStmt(e) => Stmt::ExprStmt(subst_expr(e, map)),
+        Stmt::Send(c, es) => Stmt::Send(
+            subst_name(c, map),
+            es.iter().map(|e| subst_expr(e, map)).collect(),
+        ),
+        Stmt::Recv(c, args) => Stmt::Recv(
+            subst_name(c, map),
+            args.iter()
+                .map(|a| match a {
+                    RecvArg::Bind(lv) => RecvArg::Bind(subst_lval(lv, map)),
+                    RecvArg::Match(e) => RecvArg::Match(subst_expr(e, map)),
+                })
+                .collect(),
+        ),
+        Stmt::If(opts, els) => Stmt::If(
+            opts.iter().map(|o| subst_stmts(o, map)).collect(),
+            els.as_ref().map(|o| subst_stmts(o, map)),
+        ),
+        Stmt::Do(opts, els) => Stmt::Do(
+            opts.iter().map(|o| subst_stmts(o, map)).collect(),
+            els.as_ref().map(|o| subst_stmts(o, map)),
+        ),
+        Stmt::Atomic(body) => Stmt::Atomic(subst_stmts(body, map)),
+        Stmt::For(v, lo, hi, body) => Stmt::For(
+            subst_name(v, map),
+            subst_expr(lo, map),
+            subst_expr(hi, map),
+            subst_stmts(body, map),
+        ),
+        Stmt::Select(v, lo, hi) => {
+            Stmt::Select(subst_name(v, map), subst_expr(lo, map), subst_expr(hi, map))
+        }
+        Stmt::Run(p, es) => {
+            Stmt::Run(p.clone(), es.iter().map(|e| subst_expr(e, map)).collect())
+        }
+        Stmt::InlineCall(n, es) => {
+            Stmt::InlineCall(n.clone(), es.iter().map(|e| subst_expr(e, map)).collect())
+        }
+        Stmt::Break => Stmt::Break,
+        Stmt::Skip => Stmt::Skip,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn subst_replaces_vars_and_channels() {
+        let mut map = HashMap::new();
+        map.insert("gt".to_string(), PExpr::Num(3));
+        map.insert("c".to_string(), PExpr::Var("pex_b".into()));
+        let body = vec![
+            Stmt::Assign(LValue::Var("x".into()), PExpr::Var("gt".into())),
+            Stmt::Send("c".into(), vec![PExpr::Var("gt".into())]),
+        ];
+        let out = subst_stmts(&body, &map);
+        assert_eq!(out[0], Stmt::Assign(LValue::Var("x".into()), PExpr::Num(3)));
+        assert_eq!(out[1], Stmt::Send("pex_b".into(), vec![PExpr::Num(3)]));
+    }
+}

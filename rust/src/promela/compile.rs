@@ -1,0 +1,714 @@
+//! AST → flat instruction program.
+//!
+//! Each proctype compiles to a vector of [`Instr`]s threaded by `next`
+//! indices — the classical SPIN-style process automaton. `if`/`do`/`for`
+//! compile to [`Op::Branch`] whose option executability follows Promela's
+//! first-statement rule; `atomic` marks instructions with `atomic_next` so
+//! the interpreter keeps exclusivity while inside the block; inline macros
+//! are expanded at compile time with parameter substitution.
+
+use super::ast::*;
+use super::parser::const_eval;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+pub const NO_PC: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    Global(u32),
+    Local(u32),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CExpr {
+    Num(i32),
+    Load(Slot),
+    LoadElem(Slot, u32, Box<CExpr>),
+    Un(UnOp, Box<CExpr>),
+    Bin(PBinOp, Box<CExpr>, Box<CExpr>),
+    Cond(Box<CExpr>, Box<CExpr>, Box<CExpr>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CLVal {
+    Scalar(Slot),
+    Elem(Slot, u32, CExpr),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CRecvArg {
+    Bind(CLVal),
+    Match(CExpr),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// blocking expression (also `skip` = Guard(1))
+    Guard(CExpr),
+    Assign(CLVal, CExpr),
+    Send(CExpr, Vec<CExpr>),
+    Recv(CExpr, Vec<CRecvArg>),
+    /// nondeterministic assignment lo..=hi
+    Select(CLVal, CExpr, CExpr),
+    /// option entries + optional else entry
+    Branch(Vec<u32>, Option<u32>),
+    Run(u32, Vec<CExpr>),
+    /// allocate a channel, store its id
+    NewChan(CLVal, u16, u16),
+    Halt,
+}
+
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub op: Op,
+    pub next: u32,
+    /// keep process exclusivity after firing (inside `atomic`)
+    pub atomic_next: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProcDef {
+    pub name: String,
+    pub nparams: u32,
+    pub nlocals: u32,
+    pub code: Vec<Instr>,
+    pub entry: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct VarInfo {
+    pub offset: u32,
+    pub len: u32, // 1 = scalar
+}
+
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub mtypes: Vec<String>,
+    pub global_syms: HashMap<String, VarInfo>,
+    pub globals_init: Vec<i32>,
+    /// (capacity, arity) of channels declared at global scope (ids 0..n)
+    pub global_chans: Vec<(u16, u16)>,
+    pub procs: Vec<ProcDef>,
+    pub active: Vec<u32>,
+}
+
+pub fn compile(model: &Model) -> Result<Program> {
+    // mtype values: index+1 (0 stays "no message")
+    let mtypes = model.mtypes.clone();
+
+    // global symbol table + init image
+    let mut global_syms = HashMap::new();
+    let mut globals_init = Vec::new();
+    for d in &model.globals {
+        let len = d.len.unwrap_or(1);
+        if global_syms.contains_key(&d.name) {
+            bail!("duplicate global `{}`", d.name);
+        }
+        global_syms.insert(d.name.clone(), VarInfo { offset: globals_init.len() as u32, len });
+        let init = match &d.init {
+            None => 0,
+            Some(e) => const_eval(e)
+                .with_context(|| format!("global `{}` initializer must be constant", d.name))?
+                as i32,
+        };
+        for _ in 0..len {
+            globals_init.push(init);
+        }
+    }
+
+    let mut global_chan_ids = HashMap::new();
+    let mut global_chans = Vec::new();
+    for (i, c) in model.global_chans.iter().enumerate() {
+        global_chan_ids.insert(c.name.clone(), i as i32);
+        global_chans.push((c.capacity as u16, c.arity as u16));
+    }
+
+    let proc_ids: HashMap<String, u32> = model
+        .procs
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name.clone(), i as u32))
+        .collect();
+
+    let inlines: HashMap<String, &InlineDef> =
+        model.inlines.iter().map(|d| (d.name.clone(), d)).collect();
+
+    let mut procs = Vec::new();
+    let mut active = Vec::new();
+    for (i, p) in model.procs.iter().enumerate() {
+        let def = ProcCompiler {
+            mtypes: &mtypes,
+            global_syms: &global_syms,
+            global_chan_ids: &global_chan_ids,
+            proc_ids: &proc_ids,
+            inlines: &inlines,
+            local_syms: HashMap::new(),
+            nlocals: 0,
+            code: Vec::new(),
+            break_stack: Vec::new(),
+            inline_depth: 0,
+        }
+        .compile_proc(p)?;
+        if p.active {
+            if !p.params.is_empty() {
+                bail!("active proctype `{}` cannot take parameters", p.name);
+            }
+            active.push(i as u32);
+        }
+        procs.push(def);
+    }
+    if active.is_empty() {
+        bail!("no active proctype — nothing to run");
+    }
+
+    Ok(Program { mtypes, global_syms, globals_init, global_chans, procs, active })
+}
+
+struct ProcCompiler<'a> {
+    mtypes: &'a [String],
+    global_syms: &'a HashMap<String, VarInfo>,
+    global_chan_ids: &'a HashMap<String, i32>,
+    proc_ids: &'a HashMap<String, u32>,
+    inlines: &'a HashMap<String, &'a InlineDef>,
+    local_syms: HashMap<String, VarInfo>,
+    nlocals: u32,
+    code: Vec<Instr>,
+    /// per-loop lists of Guard(true) "break" instrs awaiting exit patch
+    break_stack: Vec<Vec<u32>>,
+    inline_depth: u32,
+}
+
+impl<'a> ProcCompiler<'a> {
+    fn compile_proc(mut self, p: &Proctype) -> Result<ProcDef> {
+        // params occupy the first local slots (all scalar)
+        for (_ty, name) in &p.params {
+            self.alloc_local(name, 1)?;
+        }
+        let nparams = p.params.len() as u32;
+
+        // pre-scan: allocate every local declared anywhere in the body
+        self.prealloc(&p.body)?;
+
+        let (entry, exits) = self.emit_seq(&p.body)?;
+        let halt_pc = self.emit(Op::Halt);
+        self.patch(&exits, halt_pc);
+        let entry = entry.unwrap_or(halt_pc);
+        Ok(ProcDef {
+            name: p.name.clone(),
+            nparams,
+            nlocals: self.nlocals,
+            code: self.code,
+            entry,
+        })
+    }
+
+    fn alloc_local(&mut self, name: &str, len: u32) -> Result<()> {
+        if self.local_syms.contains_key(name) {
+            // Promela proctype scope: a second decl of the same name would
+            // shadow confusingly — reject.
+            bail!("duplicate local `{}`", name);
+        }
+        self.local_syms.insert(name.to_string(), VarInfo { offset: self.nlocals, len });
+        self.nlocals += len;
+        Ok(())
+    }
+
+    fn prealloc(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::VarDecl(d) => {
+                    if !self.local_syms.contains_key(&d.name) {
+                        self.alloc_local(&d.name, d.len.unwrap_or(1))?;
+                    }
+                }
+                Stmt::ChanDecl(c) => {
+                    if !self.local_syms.contains_key(&c.name) {
+                        self.alloc_local(&c.name, 1)?;
+                    }
+                }
+                Stmt::If(opts, els) | Stmt::Do(opts, els) => {
+                    for o in opts {
+                        self.prealloc(o)?;
+                    }
+                    if let Some(e) = els {
+                        self.prealloc(e)?;
+                    }
+                }
+                Stmt::Atomic(b) | Stmt::For(_, _, _, b) => self.prealloc(b)?,
+                Stmt::InlineCall(name, args) => {
+                    // expand to know its decls too
+                    let body = self.expand_inline(name, args)?;
+                    self.inline_depth += 1;
+                    self.prealloc(&body)?;
+                    self.inline_depth -= 1;
+                }
+                _ => {}
+            }
+            // For loop variables may be undeclared in some dialects; the
+            // paper declares them, so we require a declaration.
+        }
+        Ok(())
+    }
+
+    fn expand_inline(&self, name: &str, args: &[PExpr]) -> Result<Vec<Stmt>> {
+        let def = self
+            .inlines
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown statement or inline `{}`", name))?;
+        if def.params.len() != args.len() {
+            bail!("inline `{}` expects {} args, got {}", name, def.params.len(), args.len());
+        }
+        if self.inline_depth > 16 {
+            bail!("inline expansion too deep (recursive inline `{}`?)", name);
+        }
+        let map: HashMap<String, PExpr> = def
+            .params
+            .iter()
+            .cloned()
+            .zip(args.iter().cloned())
+            .collect();
+        Ok(subst_stmts(&def.body, &map))
+    }
+
+    fn emit(&mut self, op: Op) -> u32 {
+        self.code.push(Instr { op, next: NO_PC, atomic_next: false });
+        (self.code.len() - 1) as u32
+    }
+
+    fn patch(&mut self, locs: &[u32], target: u32) {
+        for &l in locs {
+            debug_assert_eq!(self.code[l as usize].next, NO_PC);
+            self.code[l as usize].next = target;
+        }
+    }
+
+    /// Emit a statement sequence; returns (entry pc, dangling exits).
+    fn emit_seq(&mut self, stmts: &[Stmt]) -> Result<(Option<u32>, Vec<u32>)> {
+        let mut entry: Option<u32> = None;
+        let mut exits: Vec<u32> = Vec::new();
+        for s in stmts {
+            let (e, x) = self.emit_stmt(s)?;
+            if let Some(e) = e {
+                self.patch(&exits, e);
+                exits = x;
+                entry.get_or_insert(e);
+            } else {
+                debug_assert!(x.is_empty());
+            }
+        }
+        Ok((entry, exits))
+    }
+
+    /// Like emit_seq but guarantees an entry (inserts `skip` when the
+    /// sequence emits nothing) — needed for branch option targets.
+    fn emit_seq_entry(&mut self, stmts: &[Stmt]) -> Result<(u32, Vec<u32>)> {
+        let (e, x) = self.emit_seq(stmts)?;
+        match e {
+            Some(e) => Ok((e, x)),
+            None => {
+                let pc = self.emit(Op::Guard(CExpr::Num(1)));
+                Ok((pc, vec![pc]))
+            }
+        }
+    }
+
+    fn emit_stmt(&mut self, s: &Stmt) -> Result<(Option<u32>, Vec<u32>)> {
+        match s {
+            Stmt::VarDecl(d) => {
+                // slot already allocated by prealloc; init emits an assign
+                match &d.init {
+                    None => Ok((None, Vec::new())),
+                    Some(e) => {
+                        let lv = self.lval(&LValue::Var(d.name.clone()))?;
+                        let ce = self.expr(e)?;
+                        let pc = self.emit(Op::Assign(lv, ce));
+                        Ok((Some(pc), vec![pc]))
+                    }
+                }
+            }
+            Stmt::ChanDecl(c) => {
+                let lv = self.lval(&LValue::Var(c.name.clone()))?;
+                let pc = self.emit(Op::NewChan(lv, c.capacity as u16, c.arity as u16));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Assign(lv, e) => {
+                let lv = self.lval(lv)?;
+                let ce = self.expr(e)?;
+                let pc = self.emit(Op::Assign(lv, ce));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Inc(lv) | Stmt::Dec(lv) => {
+                let clv = self.lval(lv)?;
+                let load = match &clv {
+                    CLVal::Scalar(s) => CExpr::Load(*s),
+                    CLVal::Elem(s, n, i) => CExpr::LoadElem(*s, *n, Box::new(i.clone())),
+                };
+                let op = if matches!(s, Stmt::Inc(_)) { PBinOp::Add } else { PBinOp::Sub };
+                let pc = self.emit(Op::Assign(
+                    clv,
+                    CExpr::Bin(op, Box::new(load), Box::new(CExpr::Num(1))),
+                ));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::ExprStmt(e) => {
+                let ce = self.expr(e)?;
+                let pc = self.emit(Op::Guard(ce));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Skip => {
+                let pc = self.emit(Op::Guard(CExpr::Num(1)));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Send(chan, args) => {
+                let c = self.chan_expr(chan)?;
+                let mut es = Vec::new();
+                for a in args {
+                    es.push(self.expr(a)?);
+                }
+                let pc = self.emit(Op::Send(c, es));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Recv(chan, args) => {
+                let c = self.chan_expr(chan)?;
+                let mut rs = Vec::new();
+                for a in args {
+                    rs.push(match a {
+                        RecvArg::Bind(lv) => CRecvArg::Bind(self.lval(lv)?),
+                        RecvArg::Match(e) => CRecvArg::Match(self.expr(e)?),
+                    });
+                }
+                let pc = self.emit(Op::Recv(c, rs));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::Run(name, args) => {
+                let pid = *self
+                    .proc_ids
+                    .get(name)
+                    .ok_or_else(|| anyhow!("run of unknown proctype `{}`", name))?;
+                let mut es = Vec::new();
+                for a in args {
+                    es.push(self.expr(a)?);
+                }
+                let pc = self.emit(Op::Run(pid, es));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::InlineCall(name, args) => {
+                let body = self.expand_inline(name, args)?;
+                self.inline_depth += 1;
+                let r = self.emit_seq(&body);
+                self.inline_depth -= 1;
+                r
+            }
+            Stmt::Atomic(body) => {
+                let lo = self.code.len();
+                let (e, x) = self.emit_seq(body)?;
+                let hi = self.code.len();
+                // everything inside keeps exclusivity...
+                for pc in lo..hi {
+                    self.code[pc].atomic_next = true;
+                }
+                // ...except the dangling exits (they leave the block)
+                for &pc in &x {
+                    self.code[pc as usize].atomic_next = false;
+                }
+                Ok((e, x))
+            }
+            Stmt::Select(v, lo, hi) => {
+                let lv = self.lval(&LValue::Var(v.clone()))?;
+                let lo = self.expr(lo)?;
+                let hi = self.expr(hi)?;
+                let pc = self.emit(Op::Select(lv, lo, hi));
+                Ok((Some(pc), vec![pc]))
+            }
+            Stmt::If(opts, els) => {
+                let bpc = self.emit(Op::Branch(Vec::new(), None));
+                let mut targets = Vec::new();
+                let mut exits = Vec::new();
+                for o in opts {
+                    let (e, x) = self.emit_seq_entry(o)?;
+                    targets.push(e);
+                    exits.extend(x);
+                }
+                let else_t = match els {
+                    None => None,
+                    Some(o) => {
+                        let (e, x) = self.emit_seq_entry(o)?;
+                        exits.extend(x);
+                        Some(e)
+                    }
+                };
+                self.code[bpc as usize].op = Op::Branch(targets, else_t);
+                Ok((Some(bpc), exits))
+            }
+            Stmt::Do(opts, els) => {
+                let bpc = self.emit(Op::Branch(Vec::new(), None));
+                self.break_stack.push(Vec::new());
+                let mut targets = Vec::new();
+                for o in opts {
+                    let (e, x) = self.emit_seq_entry(o)?;
+                    targets.push(e);
+                    self.patch(&x, bpc); // loop back
+                }
+                let else_t = match els {
+                    None => None,
+                    Some(o) => {
+                        let (e, x) = self.emit_seq_entry(o)?;
+                        self.patch(&x, bpc);
+                        Some(e)
+                    }
+                };
+                self.code[bpc as usize].op = Op::Branch(targets, else_t);
+                let breaks = self.break_stack.pop().unwrap();
+                Ok((Some(bpc), breaks))
+            }
+            Stmt::For(v, lo, hi, body) => {
+                // i = lo; L: Branch([i<=hi -> body; i++ -> L], else -> exit)
+                let lv = self.lval(&LValue::Var(v.clone()))?;
+                let clo = self.expr(lo)?;
+                let init_pc = self.emit(Op::Assign(lv.clone(), clo));
+                let bpc = self.emit(Op::Branch(Vec::new(), None));
+                self.code[init_pc as usize].next = bpc;
+                self.break_stack.push(Vec::new());
+                let chi = self.expr(hi)?;
+                let load = match &lv {
+                    CLVal::Scalar(s) => CExpr::Load(*s),
+                    CLVal::Elem(..) => bail!("for-loop variable must be scalar"),
+                };
+                let guard_pc =
+                    self.emit(Op::Guard(CExpr::Bin(PBinOp::Le, Box::new(load.clone()), Box::new(chi))));
+                let (body_e, body_x) = self.emit_seq(body)?;
+                let inc_pc = self.emit(Op::Assign(
+                    lv,
+                    CExpr::Bin(PBinOp::Add, Box::new(load), Box::new(CExpr::Num(1))),
+                ));
+                self.code[inc_pc as usize].next = bpc;
+                match body_e {
+                    Some(e) => {
+                        self.code[guard_pc as usize].next = e;
+                        self.patch(&body_x, inc_pc);
+                    }
+                    None => self.code[guard_pc as usize].next = inc_pc,
+                }
+                // else exit of the loop dangles
+                let exit_guard = self.emit(Op::Guard(CExpr::Num(1)));
+                self.code[bpc as usize].op = Op::Branch(vec![guard_pc], Some(exit_guard));
+                let mut exits = vec![exit_guard];
+                exits.extend(self.break_stack.pop().unwrap());
+                Ok((Some(init_pc), exits))
+            }
+            Stmt::Break => {
+                let frame = self
+                    .break_stack
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("break outside of do/for"))?;
+                let pc = self.code.len() as u32;
+                frame.push(pc);
+                self.emit(Op::Guard(CExpr::Num(1)));
+                Ok((Some(pc), Vec::new())) // exit patched via break frame
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- names --
+
+    fn lookup(&self, name: &str) -> Result<(Slot, u32)> {
+        if let Some(v) = self.local_syms.get(name) {
+            return Ok((Slot::Local(v.offset), v.len));
+        }
+        if let Some(v) = self.global_syms.get(name) {
+            return Ok((Slot::Global(v.offset), v.len));
+        }
+        bail!("unknown identifier `{}`", name)
+    }
+
+    fn lval(&mut self, lv: &LValue) -> Result<CLVal> {
+        match lv {
+            LValue::Var(n) => {
+                let (slot, len) = self.lookup(n)?;
+                if len != 1 {
+                    bail!("array `{}` used without index", n);
+                }
+                Ok(CLVal::Scalar(slot))
+            }
+            LValue::Index(n, e) => {
+                let (slot, len) = self.lookup(n)?;
+                if len == 1 {
+                    bail!("`{}` is not an array", n);
+                }
+                Ok(CLVal::Elem(slot, len, self.expr(e)?))
+            }
+        }
+    }
+
+    fn chan_expr(&mut self, name: &str) -> Result<CExpr> {
+        if let Some(id) = self.global_chan_ids.get(name) {
+            return Ok(CExpr::Num(*id));
+        }
+        let (slot, len) = self.lookup(name)?;
+        if len != 1 {
+            bail!("channel `{}` cannot be an array", name);
+        }
+        Ok(CExpr::Load(slot))
+    }
+
+    fn expr(&mut self, e: &PExpr) -> Result<CExpr> {
+        Ok(match e {
+            PExpr::Num(n) => CExpr::Num(*n as i32),
+            PExpr::Var(n) => {
+                // mtype constant?
+                if let Some(i) = self.mtypes.iter().position(|m| m == n) {
+                    return Ok(CExpr::Num(i as i32 + 1));
+                }
+                if let Some(id) = self.global_chan_ids.get(n) {
+                    return Ok(CExpr::Num(*id));
+                }
+                let (slot, len) = self.lookup(n)?;
+                if len != 1 {
+                    bail!("array `{}` used as scalar", n);
+                }
+                CExpr::Load(slot)
+            }
+            PExpr::Index(n, i) => {
+                let (slot, len) = self.lookup(n)?;
+                if len == 1 {
+                    bail!("`{}` is not an array", n);
+                }
+                CExpr::LoadElem(slot, len, Box::new(self.expr(i)?))
+            }
+            PExpr::Unary(op, a) => CExpr::Un(*op, Box::new(self.expr(a)?)),
+            PExpr::Bin(op, a, b) => {
+                CExpr::Bin(*op, Box::new(self.expr(a)?), Box::new(self.expr(b)?))
+            }
+            PExpr::Cond(c, a, b) => CExpr::Cond(
+                Box::new(self.expr(c)?),
+                Box::new(self.expr(a)?),
+                Box::new(self.expr(b)?),
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::promela::parser::parse;
+
+    fn compile_src(src: &str) -> Result<Program> {
+        compile(&parse(src)?)
+    }
+
+    #[test]
+    fn compiles_globals_with_const_inits() {
+        let p = compile_src("int time = 5; byte a[3]; active proctype main() { skip }").unwrap();
+        assert_eq!(p.globals_init, vec![5, 0, 0, 0]);
+        assert_eq!(p.global_syms["a"].len, 3);
+        assert_eq!(p.active, vec![0]);
+    }
+
+    #[test]
+    fn rejects_nonconst_global_init() {
+        assert!(compile_src("int a = 1; int b = a; active proctype main() { skip }").is_err());
+    }
+
+    #[test]
+    fn do_loop_wires_back_edges() {
+        let p = compile_src(
+            "int i; active proctype main() { do :: i < 3 -> i++ :: else -> break od }",
+        )
+        .unwrap();
+        let code = &p.procs[0].code;
+        // find the Branch
+        let bpos = code.iter().position(|i| matches!(i.op, Op::Branch(..))).unwrap();
+        match &code[bpos].op {
+            Op::Branch(opts, els) => {
+                assert_eq!(opts.len(), 1);
+                assert!(els.is_some());
+            }
+            _ => unreachable!(),
+        }
+        // the i++ instr loops back to the branch
+        let inc = code
+            .iter()
+            .find(|i| matches!(&i.op, Op::Assign(_, CExpr::Bin(PBinOp::Add, _, _))))
+            .unwrap();
+        assert_eq!(inc.next, bpos as u32);
+        // everything threads somewhere (no dangling NO_PC except Halt)
+        for (i, ins) in code.iter().enumerate() {
+            if !matches!(ins.op, Op::Halt | Op::Branch(..)) {
+                assert_ne!(ins.next, NO_PC, "instr {} dangles: {:?}", i, ins.op);
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_marks_inner_instrs() {
+        let p = compile_src("int a, b; active proctype main() { atomic { a = 1; b = 2 }; a = 3 }")
+            .unwrap();
+        let code = &p.procs[0].code;
+        let assigns: Vec<&Instr> = code
+            .iter()
+            .filter(|i| matches!(i.op, Op::Assign(..)))
+            .collect();
+        assert_eq!(assigns.len(), 3);
+        assert!(assigns[0].atomic_next, "first atomic instr keeps exclusivity");
+        assert!(!assigns[1].atomic_next, "last atomic instr releases");
+        assert!(!assigns[2].atomic_next);
+    }
+
+    #[test]
+    fn inline_expansion_inlines_body() {
+        let p = compile_src(
+            "int time; inline work(gt) { time = time + gt }\n\
+             active proctype main() { work(5); work(7) }",
+        )
+        .unwrap();
+        let code = &p.procs[0].code;
+        let adds: Vec<i32> = code
+            .iter()
+            .filter_map(|i| match &i.op {
+                Op::Assign(_, CExpr::Bin(PBinOp::Add, _, b)) => match **b {
+                    CExpr::Num(n) => Some(n),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .collect();
+        assert_eq!(adds, vec![5, 7]);
+    }
+
+    #[test]
+    fn mtype_constants_resolve() {
+        let p = compile_src(
+            "mtype = {go, stop};\nint x;\nactive proctype main() { x = stop }",
+        )
+        .unwrap();
+        let code = &p.procs[0].code;
+        assert!(code
+            .iter()
+            .any(|i| matches!(&i.op, Op::Assign(_, CExpr::Num(2)))));
+    }
+
+    #[test]
+    fn unknown_identifier_rejected() {
+        assert!(compile_src("active proctype main() { x = 1 }").is_err());
+        assert!(compile_src("active proctype main() { nosuch(3) }").is_err());
+    }
+
+    #[test]
+    fn break_outside_loop_rejected() {
+        assert!(compile_src("active proctype main() { break }").is_err());
+    }
+
+    #[test]
+    fn run_resolves_proctype() {
+        let p = compile_src(
+            "proctype w(byte i) { skip }\nactive proctype main() { run w(3) }",
+        )
+        .unwrap();
+        assert!(p.procs[1]
+            .code
+            .iter()
+            .any(|i| matches!(&i.op, Op::Run(0, args) if args.len() == 1)));
+    }
+}

@@ -1,0 +1,854 @@
+//! Operational semantics: the compiled Promela program as a
+//! [`TransitionSystem`] with full process interleaving.
+//!
+//! Semantics notes (standard Promela, with documented simplifications):
+//! - a statement is *executable* or blocked; `if`/`do` options follow the
+//!   first-statement rule, `else` fires iff no sibling option is
+//!   executable;
+//! - rendezvous (capacity-0) channels hand over in a single combined
+//!   transition, generated from the sender's side; a receive is
+//!   "executable" for option-selection purposes iff a matching sender is
+//!   ready (and vice versa);
+//! - `atomic` keeps exclusivity while the marked instruction chain stays
+//!   executable; blocking inside an atomic releases exclusivity (as in
+//!   SPIN); after a rendezvous, exclusivity follows the receiver if it is
+//!   inside an atomic, else the sender's flag (SPIN passes control to the
+//!   receiver);
+//! - processes die immediately at the end of their body (we do not model
+//!   SPIN's creation-order death rule — the paper's models never rely on
+//!   it);
+//! - all scalars are i32 with wrapping arithmetic; byte/short are not
+//!   range-truncated (the models stay well within range; documented).
+
+use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot};
+use crate::model::TransitionSystem;
+use anyhow::Result;
+
+pub const MAX_PROCS: usize = 64;
+const MAX_SELECT_FANOUT: i32 = 4096;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ChanState {
+    pub cap: u16,
+    pub arity: u16,
+    /// flattened message queue (len = arity * nmsgs)
+    pub buf: Vec<i32>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProcState {
+    pub ptype: u16,
+    pub pc: u32,
+    pub alive: bool,
+    pub locals: Vec<i32>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PState {
+    pub globals: Vec<i32>,
+    pub chans: Vec<ChanState>,
+    pub procs: Vec<ProcState>,
+    /// process holding atomic exclusivity (-1 = none)
+    pub exclusive: i16,
+}
+
+/// A compiled Promela model, ready for the checker.
+pub struct PromelaSystem {
+    pub prog: Program,
+    /// SPIN-style atomic merging: an `atomic { ... }` chain executes as a
+    /// single transition (intermediate states are not emitted) as long as
+    /// it stays executable. This is both closer to SPIN's semantics and
+    /// the interpreter's main optimization (§Perf: ~5x fewer states on the
+    /// paper's models). Disable for instruction-level debugging.
+    pub coalesce_atomic: bool,
+}
+
+/// Bound on coalesced atomic chains — a guard against `do`-loops inside
+/// `atomic` that never block (would otherwise hang successor generation).
+const MAX_ATOMIC_CHAIN: u32 = 4096;
+
+impl PromelaSystem {
+    pub fn new(prog: Program) -> Self {
+        Self { prog, coalesce_atomic: true }
+    }
+
+    pub fn from_source(src: &str) -> Result<Self> {
+        let model = super::parser::parse(src)?;
+        Ok(Self::new(super::compile::compile(&model)?))
+    }
+
+    /// Instruction-level variant (every atomic step is a visible state).
+    pub fn without_atomic_coalescing(mut self) -> Self {
+        self.coalesce_atomic = false;
+        self
+    }
+
+    /// Emit `ns`, or — when it is mid-atomic and its owner can move —
+    /// continue executing the owner so the whole atomic chain becomes one
+    /// transition (SPIN semantics).
+    fn push_or_continue(&self, ns: PState, out: &mut Vec<PState>, depth: u32) {
+        if self.coalesce_atomic && depth < MAX_ATOMIC_CHAIN && ns.exclusive >= 0 {
+            let p = ns.exclusive as usize;
+            if ns.procs[p].alive && self.enabled(&ns, p, ns.procs[p].pc) {
+                let before = out.len();
+                let pc = ns.procs[p].pc;
+                self.gen_from_d(&ns, p, pc, out, depth + 1);
+                if out.len() > before {
+                    return;
+                }
+            }
+        }
+        out.push(ns);
+    }
+
+    fn code(&self, p: &ProcState) -> &[Instr] {
+        &self.prog.procs[p.ptype as usize].code
+    }
+
+    // ---------------------------------------------------------- expr eval --
+
+    fn load(&self, st: &PState, proc: usize, slot: Slot) -> i32 {
+        match slot {
+            Slot::Global(o) => st.globals[o as usize],
+            Slot::Local(o) => st.procs[proc].locals[o as usize],
+        }
+    }
+
+    fn eval(&self, st: &PState, proc: usize, e: &CExpr) -> i32 {
+        use super::ast::{PBinOp as B, UnOp};
+        match e {
+            CExpr::Num(n) => *n,
+            CExpr::Load(s) => self.load(st, proc, *s),
+            CExpr::LoadElem(s, len, idx) => {
+                let i = self.eval(st, proc, idx);
+                assert!(
+                    i >= 0 && (i as u32) < *len,
+                    "array index {} out of bounds 0..{}",
+                    i,
+                    len
+                );
+                match s {
+                    Slot::Global(o) => st.globals[*o as usize + i as usize],
+                    Slot::Local(o) => st.procs[proc].locals[*o as usize + i as usize],
+                }
+            }
+            CExpr::Un(UnOp::Not, a) => (self.eval(st, proc, a) == 0) as i32,
+            CExpr::Un(UnOp::Neg, a) => self.eval(st, proc, a).wrapping_neg(),
+            CExpr::Bin(op, a, b) => {
+                let x = self.eval(st, proc, a);
+                match op {
+                    B::And => return ((x != 0) && (self.eval(st, proc, b) != 0)) as i32,
+                    B::Or => return ((x != 0) || (self.eval(st, proc, b) != 0)) as i32,
+                    _ => {}
+                }
+                let y = self.eval(st, proc, b);
+                match op {
+                    B::Add => x.wrapping_add(y),
+                    B::Sub => x.wrapping_sub(y),
+                    B::Mul => x.wrapping_mul(y),
+                    B::Div => {
+                        assert!(y != 0, "division by zero in model");
+                        x.wrapping_div(y)
+                    }
+                    B::Mod => {
+                        assert!(y != 0, "mod by zero in model");
+                        x.wrapping_rem(y)
+                    }
+                    B::Shl => x.wrapping_shl(y as u32 & 31),
+                    B::Shr => x.wrapping_shr(y as u32 & 31),
+                    B::Eq => (x == y) as i32,
+                    B::Ne => (x != y) as i32,
+                    B::Lt => (x < y) as i32,
+                    B::Le => (x <= y) as i32,
+                    B::Gt => (x > y) as i32,
+                    B::Ge => (x >= y) as i32,
+                    B::And | B::Or => unreachable!(),
+                }
+            }
+            CExpr::Cond(c, a, b) => {
+                if self.eval(st, proc, c) != 0 {
+                    self.eval(st, proc, a)
+                } else {
+                    self.eval(st, proc, b)
+                }
+            }
+        }
+    }
+
+    fn store(&self, st: &mut PState, proc: usize, lv: &CLVal, v: i32) {
+        match lv {
+            CLVal::Scalar(Slot::Global(o)) => st.globals[*o as usize] = v,
+            CLVal::Scalar(Slot::Local(o)) => st.procs[proc].locals[*o as usize] = v,
+            CLVal::Elem(s, len, idx) => {
+                let i = self.eval(st, proc, idx);
+                assert!(i >= 0 && (i as u32) < *len, "array store out of bounds");
+                match s {
+                    Slot::Global(o) => st.globals[*o as usize + i as usize] = v,
+                    Slot::Local(o) => st.procs[proc].locals[*o as usize + i as usize] = v,
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------- executability --
+
+    /// Is the instruction at (proc, pc) executable in `st`?
+    fn enabled(&self, st: &PState, proc: usize, pc: u32) -> bool {
+        let instr = &self.code(&st.procs[proc])[pc as usize];
+        match &instr.op {
+            Op::Guard(e) => self.eval(st, proc, e) != 0,
+            Op::Assign(..) | Op::NewChan(..) => true,
+            Op::Select(_, lo, hi) => self.eval(st, proc, lo) <= self.eval(st, proc, hi),
+            Op::Run(..) => st.procs.len() < MAX_PROCS,
+            Op::Send(c, args) => {
+                let cid = self.eval(st, proc, c) as usize;
+                let ch = &st.chans[cid];
+                if ch.cap > 0 {
+                    (ch.buf.len() / ch.arity.max(1) as usize) < ch.cap as usize
+                } else {
+                    let msg: Vec<i32> = args.iter().map(|a| self.eval(st, proc, a)).collect();
+                    self.find_ready_recvs(st, proc, cid, &msg).next_some()
+                }
+            }
+            Op::Recv(c, pats) => {
+                let cid = self.eval(st, proc, c) as usize;
+                let ch = &st.chans[cid];
+                if ch.cap > 0 {
+                    if ch.buf.len() < ch.arity as usize {
+                        return false;
+                    }
+                    self.msg_matches(st, proc, pats, &ch.buf[..ch.arity as usize])
+                } else {
+                    self.find_ready_sends(st, proc, cid, pats).next_some()
+                }
+            }
+            Op::Branch(opts, els) => {
+                opts.iter().any(|&o| self.enabled(st, proc, o))
+                    || els.map_or(false, |e| self.enabled(st, proc, e))
+            }
+            Op::Halt => false,
+        }
+    }
+
+    fn msg_matches(&self, st: &PState, proc: usize, pats: &[CRecvArg], msg: &[i32]) -> bool {
+        pats.iter().zip(msg).all(|(p, &v)| match p {
+            CRecvArg::Bind(_) => true,
+            CRecvArg::Match(e) => self.eval(st, proc, e) == v,
+        })
+    }
+
+    /// All (other) processes whose current instruction tree contains a
+    /// matching rendezvous receive on `cid` for message `msg`.
+    fn find_ready_recvs(
+        &self,
+        st: &PState,
+        sender: usize,
+        cid: usize,
+        msg: &[i32],
+    ) -> Matches {
+        let mut out = Vec::new();
+        for q in 0..st.procs.len() {
+            if q == sender || !st.procs[q].alive {
+                continue;
+            }
+            self.collect_recv_pcs(st, q, st.procs[q].pc, cid, msg, &mut out);
+        }
+        Matches(out)
+    }
+
+    fn collect_recv_pcs(
+        &self,
+        st: &PState,
+        q: usize,
+        pc: u32,
+        cid: usize,
+        msg: &[i32],
+        out: &mut Vec<(usize, u32)>,
+    ) {
+        match &self.code(&st.procs[q])[pc as usize].op {
+            Op::Recv(c, pats) => {
+                let ch = self.eval(st, q, c) as usize;
+                if ch == cid
+                    && st.chans[cid].cap == 0
+                    && pats.len() == msg.len()
+                    && self.msg_matches(st, q, pats, msg)
+                {
+                    out.push((q, pc));
+                }
+            }
+            Op::Branch(opts, els) => {
+                for &o in opts {
+                    self.collect_recv_pcs(st, q, o, cid, msg, out);
+                }
+                // an `else` option never opens with a receive in practice;
+                // honour it anyway only if no option matched (Promela rule)
+                if let Some(e) = els {
+                    if out.is_empty() {
+                        self.collect_recv_pcs(st, q, *e, cid, msg, out);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// All (other) processes ready to *send* a matching message on `cid`
+    /// (used only for the executability of a receive heading an option).
+    fn find_ready_sends(&self, st: &PState, recver: usize, cid: usize, pats: &[CRecvArg]) -> Matches {
+        let mut out = Vec::new();
+        for q in 0..st.procs.len() {
+            if q == recver || !st.procs[q].alive {
+                continue;
+            }
+            self.collect_send_pcs(st, recver, q, st.procs[q].pc, cid, pats, &mut out);
+        }
+        Matches(out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn collect_send_pcs(
+        &self,
+        st: &PState,
+        recver: usize,
+        q: usize,
+        pc: u32,
+        cid: usize,
+        pats: &[CRecvArg],
+        out: &mut Vec<(usize, u32)>,
+    ) {
+        match &self.code(&st.procs[q])[pc as usize].op {
+            Op::Send(c, args) => {
+                let ch = self.eval(st, q, c) as usize;
+                if ch == cid && st.chans[cid].cap == 0 && args.len() == pats.len() {
+                    let msg: Vec<i32> = args.iter().map(|a| self.eval(st, q, a)).collect();
+                    if self.msg_matches(st, recver, pats, &msg) {
+                        out.push((q, pc));
+                    }
+                }
+            }
+            Op::Branch(opts, els) => {
+                for &o in opts {
+                    self.collect_send_pcs(st, recver, q, o, cid, pats, out);
+                }
+                if let Some(e) = els {
+                    if out.is_empty() {
+                        self.collect_send_pcs(st, recver, q, *e, cid, pats, out);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // --------------------------------------------------------- transitions --
+
+    /// Generate all transitions of process `p` from instruction `pc`
+    /// (flattening Branch per the first-statement rule).
+    fn gen_from(&self, st: &PState, p: usize, pc: u32, out: &mut Vec<PState>) {
+        self.gen_from_d(st, p, pc, out, 0)
+    }
+
+    fn gen_from_d(&self, st: &PState, p: usize, pc: u32, out: &mut Vec<PState>, depth: u32) {
+        let instr = &self.code(&st.procs[p])[pc as usize];
+        let after = |ns: &mut PState, atomic_next: bool| {
+            ns.exclusive = if atomic_next { p as i16 } else { -1 };
+        };
+        match &instr.op {
+            Op::Branch(opts, els) => {
+                let mut any = false;
+                for &o in opts {
+                    if self.enabled(st, p, o) {
+                        any = true;
+                        self.gen_from_d(st, p, o, out, depth);
+                    }
+                }
+                if !any {
+                    if let Some(e) = els {
+                        if self.enabled(st, p, *e) {
+                            self.gen_from_d(st, p, *e, out, depth);
+                        }
+                    }
+                }
+            }
+            Op::Guard(e) => {
+                if self.eval(st, p, e) != 0 {
+                    let mut ns = st.clone();
+                    ns.procs[p].pc = instr.next;
+                    self.maybe_halt(&mut ns, p);
+                    after(&mut ns, instr.atomic_next);
+                    self.push_or_continue(ns, out, depth);
+                }
+            }
+            Op::Assign(lv, e) => {
+                let v = self.eval(st, p, e);
+                let mut ns = st.clone();
+                self.store(&mut ns, p, lv, v);
+                ns.procs[p].pc = instr.next;
+                self.maybe_halt(&mut ns, p);
+                after(&mut ns, instr.atomic_next);
+                self.push_or_continue(ns, out, depth);
+            }
+            Op::NewChan(lv, cap, arity) => {
+                let mut ns = st.clone();
+                let id = ns.chans.len() as i32;
+                ns.chans.push(ChanState { cap: *cap, arity: *arity, buf: Vec::new() });
+                self.store(&mut ns, p, lv, id);
+                ns.procs[p].pc = instr.next;
+                self.maybe_halt(&mut ns, p);
+                after(&mut ns, instr.atomic_next);
+                self.push_or_continue(ns, out, depth);
+            }
+            Op::Select(lv, lo, hi) => {
+                let (l, h) = (self.eval(st, p, lo), self.eval(st, p, hi));
+                let h = h.min(l.saturating_add(MAX_SELECT_FANOUT));
+                for v in l..=h {
+                    let mut ns = st.clone();
+                    self.store(&mut ns, p, lv, v);
+                    ns.procs[p].pc = instr.next;
+                    self.maybe_halt(&mut ns, p);
+                    after(&mut ns, instr.atomic_next);
+                    self.push_or_continue(ns, out, depth);
+                }
+            }
+            Op::Run(pt, args) => {
+                if st.procs.len() >= MAX_PROCS {
+                    return;
+                }
+                let def = &self.prog.procs[*pt as usize];
+                let mut locals = vec![0i32; def.nlocals as usize];
+                for (i, a) in args.iter().enumerate().take(def.nparams as usize) {
+                    locals[i] = self.eval(st, p, a);
+                }
+                let mut ns = st.clone();
+                ns.procs.push(ProcState {
+                    ptype: *pt as u16,
+                    pc: def.entry,
+                    alive: true,
+                    locals,
+                });
+                // entry could itself be a Halt (empty body)
+                let np = ns.procs.len() - 1;
+                self.maybe_halt(&mut ns, np);
+                ns.procs[p].pc = instr.next;
+                self.maybe_halt(&mut ns, p);
+                after(&mut ns, instr.atomic_next);
+                self.push_or_continue(ns, out, depth);
+            }
+            Op::Send(c, args) => {
+                let cid = self.eval(st, p, c) as usize;
+                let msg: Vec<i32> = args.iter().map(|a| self.eval(st, p, a)).collect();
+                let ch = &st.chans[cid];
+                if ch.cap > 0 {
+                    if (ch.buf.len() / ch.arity.max(1) as usize) < ch.cap as usize {
+                        let mut ns = st.clone();
+                        ns.chans[cid].buf.extend_from_slice(&msg);
+                        ns.procs[p].pc = instr.next;
+                        self.maybe_halt(&mut ns, p);
+                        after(&mut ns, instr.atomic_next);
+                        self.push_or_continue(ns, out, depth);
+                    }
+                } else {
+                    // rendezvous: one combined transition per ready receiver
+                    for (q, rpc) in self.find_ready_recvs(st, p, cid, &msg).0 {
+                        let rinstr = &self.code(&st.procs[q])[rpc as usize];
+                        let pats = match &rinstr.op {
+                            Op::Recv(_, pats) => pats.clone(),
+                            _ => unreachable!(),
+                        };
+                        let mut ns = st.clone();
+                        for (pat, &v) in pats.iter().zip(&msg) {
+                            if let CRecvArg::Bind(lv) = pat {
+                                self.store(&mut ns, q, lv, v);
+                            }
+                        }
+                        ns.procs[p].pc = instr.next;
+                        ns.procs[q].pc = rinstr.next;
+                        self.maybe_halt(&mut ns, p);
+                        self.maybe_halt(&mut ns, q);
+                        // SPIN passes control to the receiver inside atomic
+                        ns.exclusive = if rinstr.atomic_next {
+                            q as i16
+                        } else if instr.atomic_next {
+                            p as i16
+                        } else {
+                            -1
+                        };
+                        self.push_or_continue(ns, out, depth);
+                    }
+                }
+            }
+            Op::Recv(c, pats) => {
+                let cid = self.eval(st, p, c) as usize;
+                let ch = &st.chans[cid];
+                if ch.cap > 0 && ch.buf.len() >= ch.arity as usize {
+                    let head: Vec<i32> = ch.buf[..ch.arity as usize].to_vec();
+                    if self.msg_matches(st, p, pats, &head) {
+                        let mut ns = st.clone();
+                        ns.chans[cid].buf.drain(..ch.arity as usize);
+                        for (pat, &v) in pats.iter().zip(&head) {
+                            if let CRecvArg::Bind(lv) = pat {
+                                self.store(&mut ns, p, lv, v);
+                            }
+                        }
+                        ns.procs[p].pc = instr.next;
+                        self.maybe_halt(&mut ns, p);
+                        after(&mut ns, instr.atomic_next);
+                        self.push_or_continue(ns, out, depth);
+                    }
+                }
+                // rendezvous receives fire from the sender's side only
+            }
+            Op::Halt => {}
+        }
+    }
+
+    /// Kill the process if its pc reached Halt.
+    fn maybe_halt(&self, st: &mut PState, p: usize) {
+        let pc = st.procs[p].pc;
+        if matches!(self.code(&st.procs[p])[pc as usize].op, Op::Halt) {
+            st.procs[p].alive = false;
+            if st.exclusive == p as i16 {
+                st.exclusive = -1;
+            }
+        }
+    }
+}
+
+/// tiny helper so `enabled` can ask "any match?" without allocating twice
+struct Matches(Vec<(usize, u32)>);
+
+impl Matches {
+    fn next_some(&self) -> bool {
+        !self.0.is_empty()
+    }
+}
+
+impl TransitionSystem for PromelaSystem {
+    type State = PState;
+
+    fn initial_states(&self) -> Vec<PState> {
+        let chans = self
+            .prog
+            .global_chans
+            .iter()
+            .map(|&(cap, arity)| ChanState { cap, arity, buf: Vec::new() })
+            .collect();
+        let mut procs = Vec::new();
+        for &a in &self.prog.active {
+            let def = &self.prog.procs[a as usize];
+            procs.push(ProcState {
+                ptype: a as u16,
+                pc: def.entry,
+                alive: true,
+                locals: vec![0i32; def.nlocals as usize],
+            });
+        }
+        vec![PState { globals: self.prog.globals_init.clone(), chans, procs, exclusive: -1 }]
+    }
+
+    fn successors(&self, s: &PState, out: &mut Vec<PState>) {
+        out.clear();
+        // exclusivity: if the exclusive process can move, only it moves
+        if s.exclusive >= 0 {
+            let p = s.exclusive as usize;
+            if s.procs[p].alive {
+                self.gen_from(s, p, s.procs[p].pc, out);
+                if !out.is_empty() {
+                    return;
+                }
+            }
+            // blocked inside atomic: exclusivity is lost (SPIN semantics)
+        }
+        for p in 0..s.procs.len() {
+            if s.procs[p].alive {
+                self.gen_from(s, p, s.procs[p].pc, out);
+            }
+        }
+    }
+
+    fn encode(&self, s: &PState, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(s.exclusive as u8);
+        out.push(s.procs.len() as u8);
+        for g in &s.globals {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        for c in &s.chans {
+            out.push(c.buf.len() as u8);
+            for v in &c.buf {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for p in &s.procs {
+            out.push(p.ptype as u8);
+            out.push(p.alive as u8);
+            out.extend_from_slice(&p.pc.to_le_bytes());
+            for l in &p.locals {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+    }
+
+    fn eval_var(&self, s: &PState, name: &str) -> Option<i64> {
+        let v = self.prog.global_syms.get(name)?;
+        Some(s.globals[v.offset as usize] as i64)
+    }
+
+    fn describe(&self, s: &PState) -> String {
+        let pcs: Vec<String> = s
+            .procs
+            .iter()
+            .map(|p| {
+                let def = &self.prog.procs[p.ptype as usize];
+                if p.alive {
+                    format!("{}@{}", def.name, p.pc)
+                } else {
+                    format!("{}†", def.name)
+                }
+            })
+            .collect();
+        let mut globs: Vec<(&String, i64)> = self
+            .prog
+            .global_syms
+            .iter()
+            .filter(|(_, v)| v.len == 1)
+            .map(|(n, v)| (n, s.globals[v.offset as usize] as i64))
+            .collect();
+        globs.sort();
+        let gs: Vec<String> = globs.iter().map(|(n, v)| format!("{}={}", n, v)).collect();
+        format!("[{}] {}", pcs.join(" "), gs.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::{check, CheckOptions};
+    use crate::model::SafetyLtl;
+
+    fn sys(src: &str) -> PromelaSystem {
+        PromelaSystem::from_source(src).expect("model compiles")
+    }
+
+    /// Run to all terminal states, return their `describe` set sizes etc.
+    fn reachable_terminals(m: &PromelaSystem) -> Vec<PState> {
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let rep = check(m, &p, &CheckOptions::default()).unwrap();
+        assert!(rep.exhausted);
+        // re-walk to collect terminals
+        let mut terminals = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = m.initial_states();
+        let mut buf = Vec::new();
+        let mut enc = Vec::new();
+        while let Some(s) = stack.pop() {
+            m.encode(&s, &mut enc);
+            if !seen.insert(enc.clone()) {
+                continue;
+            }
+            m.successors(&s, &mut buf);
+            if buf.is_empty() {
+                terminals.push(s.clone());
+            }
+            stack.extend(buf.drain(..));
+        }
+        terminals
+    }
+
+    #[test]
+    fn sequential_assignments_execute() {
+        let m = sys("int a; int b; active proctype main() { a = 2; b = a + 3 }");
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "a"), Some(2));
+        assert_eq!(m.eval_var(&ts[0], "b"), Some(5));
+    }
+
+    #[test]
+    fn select_branches() {
+        let m = sys("int x; byte i; active proctype main() { select (i : 1 .. 3); x = i * 10 }");
+        let ts = reachable_terminals(&m);
+        let mut xs: Vec<i64> = ts.iter().map(|t| m.eval_var(t, "x").unwrap()).collect();
+        xs.sort();
+        assert_eq!(xs, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn do_loop_with_break() {
+        let m = sys("int i; active proctype main() { do :: i < 5 -> i++ :: else -> break od }");
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "i"), Some(5));
+    }
+
+    #[test]
+    fn for_loop_sums() {
+        let m = sys(
+            "int s; byte k; active proctype main() { for (k : 1 .. 4) { s = s + k } }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "s"), Some(10));
+    }
+
+    #[test]
+    fn arrays_work() {
+        let m = sys(
+            "int a[4]; int s; byte i; active proctype main() {\
+               for (i : 0 .. 3) { a[i] = i * i }\
+               for (i : 0 .. 3) { s = s + a[i] } }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "s"), Some(0 + 1 + 4 + 9));
+    }
+
+    #[test]
+    fn rendezvous_handshake() {
+        let m = sys(
+            "mtype = {go, done};\nchan c = [0] of {mtype};\nint got;\n\
+             active proctype main() { run w(); c ! go; c ? done }\n\
+             proctype w() { c ? go; got = 1; c ! done }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some(1));
+        // all processes ended
+        assert!(ts[0].procs.iter().all(|p| !p.alive));
+    }
+
+    #[test]
+    fn rendezvous_value_passing() {
+        let m = sys(
+            "chan c = [0] of {byte, byte};\nint sum;\n\
+             active proctype main() { run w(); c ! 3, 4 }\n\
+             proctype w() { byte a; byte b; c ? a, b; sum = a + b }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "sum"), Some(7));
+    }
+
+    #[test]
+    fn rendezvous_match_filters() {
+        // receiver matching `stop` must not accept `go`
+        let m = sys(
+            "mtype = {go, stop};\nchan c = [0] of {mtype};\nint path;\n\
+             active proctype main() { run w(); c ! go }\n\
+             proctype w() { if :: c ? go -> path = 1 :: c ? stop -> path = 2 fi }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "path"), Some(1));
+    }
+
+    #[test]
+    fn buffered_channel_fifo() {
+        let m = sys(
+            "chan c = [2] of {byte};\nint a; int b;\n\
+             active proctype main() { c ! 1; c ! 2; run w() }\n\
+             proctype w() { byte x; c ? x; a = x; c ? x; b = x }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "a"), Some(1));
+        assert_eq!(m.eval_var(&ts[0], "b"), Some(2));
+    }
+
+    #[test]
+    fn else_fires_only_when_blocked() {
+        let m = sys(
+            "int x = 1; int r;\n\
+             active proctype main() { if :: x == 1 -> r = 10 :: else -> r = 20 fi }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "r"), Some(10));
+    }
+
+    #[test]
+    fn interleaving_explores_both_orders() {
+        // two writers race; both final values must be reachable
+        let m = sys(
+            "int x;\n\
+             active proctype main() { run a(); run b() }\n\
+             proctype a() { x = 1 }\n\
+             proctype b() { x = 2 }",
+        );
+        let ts = reachable_terminals(&m);
+        let mut xs: Vec<i64> = ts.iter().map(|t| m.eval_var(t, "x").unwrap()).collect();
+        xs.sort();
+        xs.dedup();
+        assert_eq!(xs, vec![1, 2]);
+    }
+
+    #[test]
+    fn atomic_suppresses_interleaving() {
+        // with the increment pair atomic, the lost-update outcome vanishes
+        let src_atomic = "int x;\n\
+             active proctype main() { run a(); run b() }\n\
+             proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+             proctype b() { int t; atomic { t = x; x = t + 1 } }";
+        let m = sys(src_atomic);
+        let ts = reachable_terminals(&m);
+        let xs: std::collections::HashSet<i64> =
+            ts.iter().map(|t| m.eval_var(t, "x").unwrap()).collect();
+        assert_eq!(xs, [2i64].into_iter().collect(), "atomic increments cannot lose updates");
+
+        // without atomic, x == 1 (lost update) is also reachable
+        let src_racy = src_atomic.replace("atomic { t = x; x = t + 1 }", "t = x; x = t + 1");
+        let m2 = sys(&src_racy);
+        let ts2 = reachable_terminals(&m2);
+        let xs2: std::collections::HashSet<i64> =
+            ts2.iter().map(|t| m2.eval_var(t, "x").unwrap()).collect();
+        assert!(xs2.contains(&1), "racy version must expose the lost update");
+        assert!(xs2.contains(&2));
+    }
+
+    #[test]
+    fn blocking_guard_waits_for_other_process() {
+        let m = sys(
+            "int flag; int r;\n\
+             active proctype main() { run setter(); flag == 1; r = 99 }\n\
+             proctype setter() { flag = 1 }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "r"), Some(99));
+    }
+
+    #[test]
+    fn deadlock_is_terminal_without_fin() {
+        // receiver with no sender: terminal state with r still 0
+        let m = sys("chan c = [0] of {byte};\nint r;\nactive proctype main() { byte x; c ? x; r = 1 }");
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "r"), Some(0));
+        assert!(ts[0].procs[0].alive, "deadlocked, not finished");
+    }
+
+    #[test]
+    fn paper_clock_pattern_ticks() {
+        // miniature of the paper's clock/pex protocol (Listings 8-9)
+        let src = r#"
+            int time; int nrp; int active_n = 2; bool FIN;
+            active proctype main() { atomic { run p(); run p(); run clock() } }
+            proctype p() {
+              byte k; int cur;
+              for (k : 0 .. 2) {
+                atomic { cur = time; nrp = nrp + 1 };
+                time > cur
+              };
+              atomic { active_n = active_n - 1; FIN = (active_n == 0 -> 1 : 0) }
+            }
+            proctype clock() {
+              do
+              :: FIN -> break
+              :: !FIN && nrp >= active_n && active_n > 0 ->
+                   atomic { nrp = 0; time = time + 1 }
+              od
+            }
+        "#;
+        let m = sys(src);
+        let p = SafetyLtl::parse("G(FIN -> time == 3)").unwrap();
+        let rep = check(&m, &p, &CheckOptions::default()).unwrap();
+        assert!(rep.exhausted);
+        assert!(!rep.found(), "every schedule must tick exactly 3 times");
+    }
+}

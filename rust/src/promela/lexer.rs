@@ -1,0 +1,379 @@
+//! Lexer for the Promela subset (paper Listings 3–9, 12–15).
+//!
+//! Handles `//` and `/* */` comments and a one-pass `#define NAME value`
+//! preprocessor (object-like macros only — what the paper's models use).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Num(i64),
+    // keywords
+    Proctype,
+    Active,
+    Run,
+    Chan,
+    Of,
+    Mtype,
+    If,
+    Fi,
+    Do,
+    Od,
+    Atomic,
+    Else,
+    Skip,
+    Break,
+    For,
+    Select,
+    Inline,
+    True,
+    False,
+    TypeName(&'static str), // bit bool byte short int
+    // punctuation / operators
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBrack,
+    RBrack,
+    Semi,
+    Comma,
+    Colon,
+    ColonColon,
+    DotDot,
+    Arrow,  // ->
+    Bang,   // !
+    Quest,  // ?
+    Assign, // =
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Shl,
+    Shr,
+    AndAnd,
+    OrOr,
+    PlusPlus,
+    MinusMinus,
+    Eof,
+}
+
+#[derive(Debug, Clone)]
+pub struct Lexed {
+    pub toks: Vec<(Tok, u32)>, // token + line number
+}
+
+pub fn lex(src: &str) -> Result<Lexed> {
+    // pass 1: collect #define macros, strip directives & comments
+    let mut defines: HashMap<String, String> = HashMap::new();
+    let mut clean = String::with_capacity(src.len());
+    let mut chars = src.chars().peekable();
+    let in_line_comment = false;
+    let mut in_block_comment = false;
+    let line_start = true;
+    let mut line_buf = String::new();
+
+    // simpler: process line by line for directives, then strip comments
+    for line in src.lines() {
+        let trimmed = line.trim_start();
+        if !in_block_comment && trimmed.starts_with("#define") {
+            let rest = trimmed["#define".len()..].trim();
+            let mut parts = rest.splitn(2, char::is_whitespace);
+            let name = parts.next().unwrap_or("").to_string();
+            let val = parts.next().unwrap_or("").trim().to_string();
+            if name.is_empty() {
+                bail!("malformed #define: `{}`", line);
+            }
+            defines.insert(name, val);
+            clean.push('\n');
+            continue;
+        }
+        if !in_block_comment && trimmed.starts_with('#') {
+            bail!("unsupported preprocessor directive: `{}`", trimmed);
+        }
+        clean.push_str(line);
+        clean.push('\n');
+        // track block comments crossing lines (coarse but adequate)
+        let mut i = 0;
+        let b = line.as_bytes();
+        while i + 1 < b.len() + 1 {
+            if in_block_comment {
+                if i + 1 < b.len() && b[i] == b'*' && b[i + 1] == b'/' {
+                    in_block_comment = false;
+                    i += 2;
+                    continue;
+                }
+                i += 1;
+            } else {
+                if i + 1 < b.len() && b[i] == b'/' && b[i + 1] == b'*' {
+                    in_block_comment = true;
+                    i += 2;
+                    continue;
+                }
+                if i + 1 < b.len() && b[i] == b'/' && b[i + 1] == b'/' {
+                    break;
+                }
+                i += 1;
+            }
+        }
+    }
+    let _ = (&mut chars, in_line_comment, line_start, &mut line_buf); // silence
+
+    // expand macros repeatedly (supports macros referencing macros)
+    let expand = |s: &str, defines: &HashMap<String, String>| -> String {
+        let mut out = String::with_capacity(s.len());
+        let mut it = s.char_indices().peekable();
+        let bytes = s;
+        let mut idx = 0;
+        while idx < bytes.len() {
+            let c = bytes[idx..].chars().next().unwrap();
+            if c.is_alphabetic() || c == '_' {
+                let start = idx;
+                while idx < bytes.len() {
+                    let ch = bytes[idx..].chars().next().unwrap();
+                    if ch.is_alphanumeric() || ch == '_' {
+                        idx += ch.len_utf8();
+                    } else {
+                        break;
+                    }
+                }
+                let word = &bytes[start..idx];
+                if let Some(v) = defines.get(word) {
+                    out.push('(');
+                    out.push_str(v);
+                    out.push(')');
+                } else {
+                    out.push_str(word);
+                }
+            } else {
+                out.push(c);
+                idx += c.len_utf8();
+            }
+        }
+        let _ = &mut it;
+        out
+    };
+    let mut text = clean;
+    for _ in 0..8 {
+        let next = expand(&text, &defines);
+        if next == text {
+            break;
+        }
+        text = next;
+    }
+
+    // pass 2: tokenize
+    let mut toks = Vec::new();
+    let b: Vec<char> = text.chars().collect();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < b.len() && !(b[i] == '*' && b[i + 1] == '/') {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                if i + 1 >= b.len() {
+                    bail!("unterminated /* comment (line {})", line);
+                }
+                i += 2;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                toks.push((Tok::Num(s.parse()?), line));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                let t = match s.as_str() {
+                    "proctype" => Tok::Proctype,
+                    "active" => Tok::Active,
+                    "run" => Tok::Run,
+                    "chan" => Tok::Chan,
+                    "of" => Tok::Of,
+                    "mtype" => Tok::Mtype,
+                    "if" => Tok::If,
+                    "fi" => Tok::Fi,
+                    "do" => Tok::Do,
+                    "od" => Tok::Od,
+                    "atomic" => Tok::Atomic,
+                    "else" => Tok::Else,
+                    "skip" => Tok::Skip,
+                    "break" => Tok::Break,
+                    "for" => Tok::For,
+                    "select" => Tok::Select,
+                    "inline" => Tok::Inline,
+                    "true" => Tok::True,
+                    "false" => Tok::False,
+                    "bit" => Tok::TypeName("bit"),
+                    "bool" => Tok::TypeName("bool"),
+                    "byte" => Tok::TypeName("byte"),
+                    "short" => Tok::TypeName("short"),
+                    "int" => Tok::TypeName("int"),
+                    _ => Tok::Ident(s),
+                };
+                toks.push((t, line));
+            }
+            _ => {
+                let two: String = b[i..(i + 2).min(b.len())].iter().collect();
+                let (t, len) = match two.as_str() {
+                    "::" => (Tok::ColonColon, 2),
+                    ".." => (Tok::DotDot, 2),
+                    "->" => (Tok::Arrow, 2),
+                    "==" => (Tok::Eq, 2),
+                    "!=" => (Tok::Ne, 2),
+                    "<=" => (Tok::Le, 2),
+                    ">=" => (Tok::Ge, 2),
+                    "<<" => (Tok::Shl, 2),
+                    ">>" => (Tok::Shr, 2),
+                    "&&" => (Tok::AndAnd, 2),
+                    "||" => (Tok::OrOr, 2),
+                    "++" => (Tok::PlusPlus, 2),
+                    "--" => (Tok::MinusMinus, 2),
+                    _ => match c {
+                        '{' => (Tok::LBrace, 1),
+                        '}' => (Tok::RBrace, 1),
+                        '(' => (Tok::LParen, 1),
+                        ')' => (Tok::RParen, 1),
+                        '[' => (Tok::LBrack, 1),
+                        ']' => (Tok::RBrack, 1),
+                        ';' => (Tok::Semi, 1),
+                        ',' => (Tok::Comma, 1),
+                        ':' => (Tok::Colon, 1),
+                        '!' => (Tok::Bang, 1),
+                        '?' => (Tok::Quest, 1),
+                        '=' => (Tok::Assign, 1),
+                        '<' => (Tok::Lt, 1),
+                        '>' => (Tok::Gt, 1),
+                        '+' => (Tok::Plus, 1),
+                        '-' => (Tok::Minus, 1),
+                        '*' => (Tok::Star, 1),
+                        '/' => (Tok::Slash, 1),
+                        '%' => (Tok::Percent, 1),
+                        _ => bail!("unexpected character `{}` at line {}", c, line),
+                    },
+                };
+                toks.push((t, line));
+                i += len;
+            }
+        }
+    }
+    toks.push((Tok::Eof, line));
+    Ok(Lexed { toks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_basic_tokens() {
+        let l = lex("byte x = 10; x++;").unwrap();
+        let kinds: Vec<&Tok> = l.toks.iter().map(|(t, _)| t).collect();
+        assert!(matches!(kinds[0], Tok::TypeName("byte")));
+        assert!(matches!(kinds[1], Tok::Ident(s) if s == "x"));
+        assert_eq!(*kinds[2], Tok::Assign);
+        assert_eq!(*kinds[3], Tok::Num(10));
+        assert_eq!(*kinds[5], Tok::Ident("x".into()));
+        assert_eq!(*kinds[6], Tok::PlusPlus);
+    }
+
+    #[test]
+    fn lex_comments_stripped() {
+        let l = lex("int a; // trailing\n/* block\nspanning */ int b;").unwrap();
+        let idents: Vec<String> = l
+            .toks
+            .iter()
+            .filter_map(|(t, _)| match t {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn define_expansion() {
+        let l = lex("#define N 4\n#define M (N+1)\nint x = M;").unwrap();
+        // M -> ((4)+1): the numbers 4 and 1 must appear
+        let nums: Vec<i64> = l
+            .toks
+            .iter()
+            .filter_map(|(t, _)| match t {
+                Tok::Num(n) => Some(*n),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec![4, 1]);
+    }
+
+    #[test]
+    fn two_char_operators() {
+        let l = lex(":: x <= 1 -> y = x << 2 .. 3").unwrap();
+        let kinds: Vec<&Tok> = l.toks.iter().map(|(t, _)| t).collect();
+        assert_eq!(*kinds[0], Tok::ColonColon);
+        assert_eq!(*kinds[2], Tok::Le);
+        assert_eq!(*kinds[4], Tok::Arrow);
+        assert!(kinds.contains(&&Tok::Shl));
+        assert!(kinds.contains(&&Tok::DotDot));
+    }
+
+    #[test]
+    fn keywords_recognized() {
+        let l = lex("active proctype main() { do :: skip od }").unwrap();
+        let kinds: Vec<&Tok> = l.toks.iter().map(|(t, _)| t).collect();
+        assert_eq!(*kinds[0], Tok::Active);
+        assert_eq!(*kinds[1], Tok::Proctype);
+        assert!(kinds.contains(&&Tok::Do));
+        assert!(kinds.contains(&&Tok::Skip));
+        assert!(kinds.contains(&&Tok::Od));
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(lex("#include \"x\"").is_err());
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let l = lex("int a;\nint b;").unwrap();
+        let b_line = l
+            .toks
+            .iter()
+            .find(|(t, _)| matches!(t, Tok::Ident(s) if s == "b"))
+            .unwrap()
+            .1;
+        assert_eq!(b_line, 2);
+    }
+}

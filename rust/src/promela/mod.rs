@@ -1,0 +1,21 @@
+//! Promela-subset front end — our stand-in for SPIN's modeling language.
+//!
+//! Pipeline: [`lexer`] -> [`parser`] (AST) -> [`compile`] (flat process
+//! automata) -> [`interp`] (a full-interleaving [`crate::model::TransitionSystem`]).
+//! The subset covers everything the paper's models use: proctypes (active
+//! or run-spawned, with parameters), rendezvous and buffered channels,
+//! atomic, if/do with else, for, select, inline macros, #define, mtype,
+//! arrays, and Promela's conditional expressions.
+//!
+//! `templates` generates the paper's two models (abstract platform &
+//! minimum problem) for arbitrary sizes; pregenerated instances ship in
+//! `models/*.pml`.
+
+pub mod ast;
+pub mod compile;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod templates;
+
+pub use interp::{PromelaSystem, PState};

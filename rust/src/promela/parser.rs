@@ -1,0 +1,725 @@
+//! Recursive-descent parser for the Promela subset.
+//!
+//! Grammar notes (matching the paper's models):
+//! - statement separators are `;` and `->` interchangeably;
+//! - proctype parameter lists separate with `;` or `,`;
+//! - `if`/`do` options open with `::`; an `else` option is supported;
+//! - receive arguments are binds (plain variables) or matches (numbers and
+//!   mtype constants), resolved against the declared mtype set;
+//! - conditional expressions use Promela's `(c -> a : b)`.
+
+use super::ast::*;
+use super::lexer::{lex, Lexed, Tok};
+use anyhow::{bail, Result};
+
+pub fn parse(src: &str) -> Result<Model> {
+    let lexed = lex(src)?;
+    Parser { toks: lexed, pos: 0, model: Model::default() }.parse_model()
+}
+
+struct Parser {
+    toks: Lexed,
+    pos: usize,
+    model: Model,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks.toks[self.pos].0
+    }
+
+    fn peek2(&self) -> &Tok {
+        let i = (self.pos + 1).min(self.toks.toks.len() - 1);
+        &self.toks.toks[i].0
+    }
+
+    fn line(&self) -> u32 {
+        self.toks.toks[self.pos].1
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks.toks[self.pos].0.clone();
+        if self.pos < self.toks.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<()> {
+        if self.peek() == t {
+            self.bump();
+            Ok(())
+        } else {
+            bail!("line {}: expected {:?}, found {:?}", self.line(), t, self.peek())
+        }
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("line {}: expected identifier, found {:?}", self.line(), other),
+        }
+    }
+
+    fn is_mtype_const(&self, name: &str) -> bool {
+        self.model.mtypes.iter().any(|m| m == name)
+    }
+
+    // ------------------------------------------------------------- model --
+
+    fn parse_model(mut self) -> Result<Model> {
+        loop {
+            match self.peek().clone() {
+                Tok::Eof => break,
+                Tok::Mtype if *self.peek2() == Tok::Assign => {
+                    self.bump();
+                    self.expect(&Tok::Assign)?;
+                    self.expect(&Tok::LBrace)?;
+                    loop {
+                        let n = self.ident()?;
+                        self.model.mtypes.push(n);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(&Tok::RBrace)?;
+                    self.eat(&Tok::Semi);
+                }
+                Tok::TypeName(_) | Tok::Mtype => {
+                    let ds = self.parse_var_decls()?;
+                    self.model.globals.extend(ds);
+                    self.eat(&Tok::Semi);
+                }
+                Tok::Chan => {
+                    let c = self.parse_chan_decl()?;
+                    self.model.global_chans.push(c);
+                    self.eat(&Tok::Semi);
+                }
+                Tok::Inline => {
+                    self.bump();
+                    let name = self.ident()?;
+                    self.expect(&Tok::LParen)?;
+                    let mut params = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            params.push(self.ident()?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                        self.expect(&Tok::RParen)?;
+                    }
+                    self.expect(&Tok::LBrace)?;
+                    let body = self.parse_stmts(&[Tok::RBrace])?;
+                    self.expect(&Tok::RBrace)?;
+                    self.model.inlines.push(InlineDef { name, params, body });
+                }
+                Tok::Active | Tok::Proctype => {
+                    let active = self.eat(&Tok::Active);
+                    self.expect(&Tok::Proctype)?;
+                    let name = self.ident()?;
+                    self.expect(&Tok::LParen)?;
+                    let mut params = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            let ty = match self.bump() {
+                                Tok::Chan => "chan".to_string(),
+                                Tok::TypeName(t) => t.to_string(),
+                                Tok::Mtype => "mtype".to_string(),
+                                other => bail!(
+                                    "line {}: expected parameter type, found {:?}",
+                                    self.line(),
+                                    other
+                                ),
+                            };
+                            let pname = self.ident()?;
+                            params.push((ty, pname));
+                            if !(self.eat(&Tok::Semi) || self.eat(&Tok::Comma)) {
+                                break;
+                            }
+                        }
+                        self.expect(&Tok::RParen)?;
+                    }
+                    self.expect(&Tok::LBrace)?;
+                    let body = self.parse_stmts(&[Tok::RBrace])?;
+                    self.expect(&Tok::RBrace)?;
+                    self.model.procs.push(Proctype { name, active, params, body });
+                }
+                other => bail!("line {}: unexpected top-level token {:?}", self.line(), other),
+            }
+        }
+        Ok(self.model)
+    }
+
+    fn parse_var_decls(&mut self) -> Result<Vec<VarDecl>> {
+        let ty = match self.bump() {
+            Tok::TypeName(t) => t.to_string(),
+            Tok::Mtype => "mtype".to_string(),
+            other => bail!("line {}: expected type, found {:?}", self.line(), other),
+        };
+        let mut out = Vec::new();
+        loop {
+            let name = self.ident()?;
+            let len = if self.eat(&Tok::LBrack) {
+                let e = self.parse_expr(0)?;
+                self.expect(&Tok::RBrack)?;
+                match const_eval(&e) {
+                    Some(n) if n > 0 => Some(n as u32),
+                    _ => bail!("line {}: array length must be a positive constant", self.line()),
+                }
+            } else {
+                None
+            };
+            let init = if self.eat(&Tok::Assign) { Some(self.parse_expr(0)?) } else { None };
+            out.push(VarDecl { ty: ty.clone(), name, len, init });
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_chan_decl(&mut self) -> Result<ChanDecl> {
+        self.expect(&Tok::Chan)?;
+        let name = self.ident()?;
+        self.expect(&Tok::Assign)?;
+        self.expect(&Tok::LBrack)?;
+        let cap = match self.bump() {
+            Tok::Num(n) if n >= 0 => n as u32,
+            other => bail!("line {}: channel capacity must be a number, got {:?}", self.line(), other),
+        };
+        self.expect(&Tok::RBrack)?;
+        self.expect(&Tok::Of)?;
+        self.expect(&Tok::LBrace)?;
+        // field list: types, possibly annotated `mtype : action`
+        let mut arity = 0u32;
+        loop {
+            match self.bump() {
+                Tok::TypeName(_) | Tok::Mtype | Tok::Chan => arity += 1,
+                other => bail!("line {}: expected field type, found {:?}", self.line(), other),
+            }
+            // optional `: name` annotation (paper writes `mtype : action`)
+            if self.eat(&Tok::Colon) {
+                self.ident()?;
+            }
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(&Tok::RBrace)?;
+        Ok(ChanDecl { name, capacity: cap, arity })
+    }
+
+    // --------------------------------------------------------- statements --
+
+    /// Parse statements until one of `stop` tokens (not consumed).
+    fn parse_stmts(&mut self, stop: &[Tok]) -> Result<Vec<Stmt>> {
+        let mut out = Vec::new();
+        loop {
+            // skip separators
+            while self.eat(&Tok::Semi) || self.eat(&Tok::Arrow) {}
+            if stop.contains(self.peek()) || *self.peek() == Tok::Eof {
+                break;
+            }
+            out.push(self.parse_stmt()?);
+        }
+        Ok(out)
+    }
+
+    fn parse_options(&mut self, end: &Tok) -> Result<(Vec<Vec<Stmt>>, Option<Vec<Stmt>>)> {
+        let mut opts = Vec::new();
+        let mut els = None;
+        if *self.peek() != Tok::ColonColon {
+            bail!("line {}: expected `::` to open an option", self.line());
+        }
+        while self.eat(&Tok::ColonColon) {
+            if self.eat(&Tok::Else) {
+                // optional ->
+                self.eat(&Tok::Arrow);
+                let body = self.parse_stmts(&[Tok::ColonColon, end.clone()])?;
+                if els.is_some() {
+                    bail!("line {}: duplicate else option", self.line());
+                }
+                els = Some(body);
+            } else {
+                let body = self.parse_stmts(&[Tok::ColonColon, end.clone()])?;
+                if body.is_empty() {
+                    bail!("line {}: empty option", self.line());
+                }
+                opts.push(body);
+            }
+        }
+        self.expect(end)?;
+        Ok((opts, els))
+    }
+
+    fn parse_stmt(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            Tok::TypeName(_) => {
+                let mut ds = self.parse_var_decls()?;
+                if ds.len() == 1 {
+                    Ok(Stmt::VarDecl(ds.pop().unwrap()))
+                } else {
+                    // represent multi-declarator lines as atomic-free group:
+                    // wrap into Atomic for a single Stmt (no blocking inside)
+                    Ok(Stmt::Atomic(ds.into_iter().map(Stmt::VarDecl).collect()))
+                }
+            }
+            Tok::Chan => Ok(Stmt::ChanDecl(self.parse_chan_decl()?)),
+            Tok::Atomic => {
+                self.bump();
+                self.expect(&Tok::LBrace)?;
+                let body = self.parse_stmts(&[Tok::RBrace])?;
+                self.expect(&Tok::RBrace)?;
+                Ok(Stmt::Atomic(body))
+            }
+            Tok::If => {
+                self.bump();
+                let (opts, els) = self.parse_options(&Tok::Fi)?;
+                Ok(Stmt::If(opts, els))
+            }
+            Tok::Do => {
+                self.bump();
+                let (opts, els) = self.parse_options(&Tok::Od)?;
+                Ok(Stmt::Do(opts, els))
+            }
+            Tok::For => {
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let v = self.ident()?;
+                self.expect(&Tok::Colon)?;
+                let lo = self.parse_expr(0)?;
+                self.expect(&Tok::DotDot)?;
+                let hi = self.parse_expr(0)?;
+                self.expect(&Tok::RParen)?;
+                self.expect(&Tok::LBrace)?;
+                let body = self.parse_stmts(&[Tok::RBrace])?;
+                self.expect(&Tok::RBrace)?;
+                Ok(Stmt::For(v, lo, hi, body))
+            }
+            Tok::Select => {
+                self.bump();
+                self.expect(&Tok::LParen)?;
+                let v = self.ident()?;
+                self.expect(&Tok::Colon)?;
+                let lo = self.parse_expr(0)?;
+                self.expect(&Tok::DotDot)?;
+                let hi = self.parse_expr(0)?;
+                self.expect(&Tok::RParen)?;
+                Ok(Stmt::Select(v, lo, hi))
+            }
+            Tok::Run => {
+                self.bump();
+                let name = self.ident()?;
+                self.expect(&Tok::LParen)?;
+                let mut args = Vec::new();
+                if !self.eat(&Tok::RParen) {
+                    loop {
+                        args.push(self.parse_expr(0)?);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(&Tok::RParen)?;
+                }
+                Ok(Stmt::Run(name, args))
+            }
+            Tok::Break => {
+                self.bump();
+                Ok(Stmt::Break)
+            }
+            Tok::Skip => {
+                self.bump();
+                Ok(Stmt::Skip)
+            }
+            Tok::Ident(name) => {
+                // lookahead decides: send/recv/assign/inc/dec/inline/index
+                match self.peek2().clone() {
+                    Tok::Bang => {
+                        self.bump();
+                        self.bump();
+                        let mut args = Vec::new();
+                        loop {
+                            args.push(self.parse_expr(0)?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                        Ok(Stmt::Send(name, args))
+                    }
+                    Tok::Quest => {
+                        self.bump();
+                        self.bump();
+                        let mut args = Vec::new();
+                        loop {
+                            args.push(self.parse_recv_arg()?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                        Ok(Stmt::Recv(name, args))
+                    }
+                    Tok::Assign => {
+                        self.bump();
+                        self.bump();
+                        let e = self.parse_expr(0)?;
+                        Ok(Stmt::Assign(LValue::Var(name), e))
+                    }
+                    Tok::PlusPlus => {
+                        self.bump();
+                        self.bump();
+                        Ok(Stmt::Inc(LValue::Var(name)))
+                    }
+                    Tok::MinusMinus => {
+                        self.bump();
+                        self.bump();
+                        Ok(Stmt::Dec(LValue::Var(name)))
+                    }
+                    Tok::LBrack => {
+                        // array element assign/inc/dec — or an expr stmt
+                        let save = self.pos;
+                        self.bump();
+                        self.bump();
+                        let idx = self.parse_expr(0)?;
+                        self.expect(&Tok::RBrack)?;
+                        match self.peek().clone() {
+                            Tok::Assign => {
+                                self.bump();
+                                let e = self.parse_expr(0)?;
+                                Ok(Stmt::Assign(LValue::Index(name, Box::new(idx)), e))
+                            }
+                            Tok::PlusPlus => {
+                                self.bump();
+                                Ok(Stmt::Inc(LValue::Index(name, Box::new(idx))))
+                            }
+                            Tok::MinusMinus => {
+                                self.bump();
+                                Ok(Stmt::Dec(LValue::Index(name, Box::new(idx))))
+                            }
+                            _ => {
+                                self.pos = save;
+                                let e = self.parse_expr(0)?;
+                                Ok(Stmt::ExprStmt(e))
+                            }
+                        }
+                    }
+                    Tok::LParen => {
+                        // inline call
+                        self.bump();
+                        self.bump();
+                        let mut args = Vec::new();
+                        if !self.eat(&Tok::RParen) {
+                            loop {
+                                args.push(self.parse_expr(0)?);
+                                if !self.eat(&Tok::Comma) {
+                                    break;
+                                }
+                            }
+                            self.expect(&Tok::RParen)?;
+                        }
+                        Ok(Stmt::InlineCall(name, args))
+                    }
+                    _ => {
+                        let e = self.parse_expr(0)?;
+                        Ok(Stmt::ExprStmt(e))
+                    }
+                }
+            }
+            _ => {
+                let e = self.parse_expr(0)?;
+                Ok(Stmt::ExprStmt(e))
+            }
+        }
+    }
+
+    fn parse_recv_arg(&mut self) -> Result<RecvArg> {
+        match self.peek().clone() {
+            Tok::Num(n) => {
+                self.bump();
+                Ok(RecvArg::Match(PExpr::Num(n)))
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if self.is_mtype_const(&name) {
+                    Ok(RecvArg::Match(PExpr::Var(name)))
+                } else if self.eat(&Tok::LBrack) {
+                    let idx = self.parse_expr(0)?;
+                    self.expect(&Tok::RBrack)?;
+                    Ok(RecvArg::Bind(LValue::Index(name, Box::new(idx))))
+                } else {
+                    Ok(RecvArg::Bind(LValue::Var(name)))
+                }
+            }
+            other => bail!("line {}: bad receive argument {:?}", self.line(), other),
+        }
+    }
+
+    // -------------------------------------------------------- expressions --
+
+    fn parse_expr(&mut self, min_prec: u8) -> Result<PExpr> {
+        let mut lhs = self.parse_unary()?;
+        loop {
+            let (op, prec) = match self.peek() {
+                Tok::OrOr => (PBinOp::Or, 1),
+                Tok::AndAnd => (PBinOp::And, 2),
+                Tok::Eq => (PBinOp::Eq, 3),
+                Tok::Ne => (PBinOp::Ne, 3),
+                Tok::Lt => (PBinOp::Lt, 4),
+                Tok::Le => (PBinOp::Le, 4),
+                Tok::Gt => (PBinOp::Gt, 4),
+                Tok::Ge => (PBinOp::Ge, 4),
+                Tok::Shl => (PBinOp::Shl, 5),
+                Tok::Shr => (PBinOp::Shr, 5),
+                Tok::Plus => (PBinOp::Add, 6),
+                Tok::Minus => (PBinOp::Sub, 6),
+                Tok::Star => (PBinOp::Mul, 7),
+                Tok::Slash => (PBinOp::Div, 7),
+                Tok::Percent => (PBinOp::Mod, 7),
+                _ => break,
+            };
+            if prec < min_prec {
+                break;
+            }
+            self.bump();
+            let rhs = self.parse_expr(prec + 1)?;
+            lhs = PExpr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_unary(&mut self) -> Result<PExpr> {
+        match self.peek().clone() {
+            Tok::Bang => {
+                self.bump();
+                Ok(PExpr::Unary(UnOp::Not, Box::new(self.parse_unary()?)))
+            }
+            Tok::Minus => {
+                self.bump();
+                Ok(PExpr::Unary(UnOp::Neg, Box::new(self.parse_unary()?)))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.parse_expr(0)?;
+                if self.eat(&Tok::Arrow) {
+                    // Promela conditional: (c -> a : b)
+                    let a = self.parse_expr(0)?;
+                    self.expect(&Tok::Colon)?;
+                    let b = self.parse_expr(0)?;
+                    self.expect(&Tok::RParen)?;
+                    Ok(PExpr::Cond(Box::new(e), Box::new(a), Box::new(b)))
+                } else {
+                    self.expect(&Tok::RParen)?;
+                    Ok(e)
+                }
+            }
+            Tok::Num(n) => {
+                self.bump();
+                Ok(PExpr::Num(n))
+            }
+            Tok::True => {
+                self.bump();
+                Ok(PExpr::Num(1))
+            }
+            Tok::False => {
+                self.bump();
+                Ok(PExpr::Num(0))
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if self.eat(&Tok::LBrack) {
+                    let idx = self.parse_expr(0)?;
+                    self.expect(&Tok::RBrack)?;
+                    Ok(PExpr::Index(name, Box::new(idx)))
+                } else {
+                    Ok(PExpr::Var(name))
+                }
+            }
+            other => bail!("line {}: cannot parse expression at {:?}", self.line(), other),
+        }
+    }
+}
+
+/// Constant folding for array lengths and similar compile-time contexts.
+pub fn const_eval(e: &PExpr) -> Option<i64> {
+    match e {
+        PExpr::Num(n) => Some(*n),
+        PExpr::Unary(UnOp::Neg, a) => Some(-const_eval(a)?),
+        PExpr::Unary(UnOp::Not, a) => Some((const_eval(a)? == 0) as i64),
+        PExpr::Bin(op, a, b) => {
+            let (x, y) = (const_eval(a)?, const_eval(b)?);
+            Some(match op {
+                PBinOp::Add => x + y,
+                PBinOp::Sub => x - y,
+                PBinOp::Mul => x * y,
+                PBinOp::Div => {
+                    if y == 0 {
+                        return None;
+                    }
+                    x / y
+                }
+                PBinOp::Mod => {
+                    if y == 0 {
+                        return None;
+                    }
+                    x % y
+                }
+                PBinOp::Shl => x << (y & 63),
+                PBinOp::Shr => x >> (y & 63),
+                PBinOp::Eq => (x == y) as i64,
+                PBinOp::Ne => (x != y) as i64,
+                PBinOp::Lt => (x < y) as i64,
+                PBinOp::Le => (x <= y) as i64,
+                PBinOp::Gt => (x > y) as i64,
+                PBinOp::Ge => (x >= y) as i64,
+                PBinOp::And => ((x != 0) && (y != 0)) as i64,
+                PBinOp::Or => ((x != 0) || (y != 0)) as i64,
+            })
+        }
+        PExpr::Cond(c, a, b) => {
+            if const_eval(c)? != 0 {
+                const_eval(a)
+            } else {
+                const_eval(b)
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_globals_and_mtype() {
+        let m = parse("mtype = {go, stop, done};\nint time = 0;\nbool FIN = false;\nbyte arr[4];").unwrap();
+        assert_eq!(m.mtypes, vec!["go", "stop", "done"]);
+        assert_eq!(m.globals.len(), 3);
+        assert_eq!(m.globals[2].len, Some(4));
+    }
+
+    #[test]
+    fn parse_proctype_with_params() {
+        let m = parse(
+            "mtype = {go};\nproctype pex (byte me; chan c) { c ! go; c ? go }",
+        )
+        .unwrap();
+        assert_eq!(m.procs.len(), 1);
+        let p = &m.procs[0];
+        assert_eq!(p.params, vec![("byte".into(), "me".into()), ("chan".into(), "c".into())]);
+        assert!(matches!(p.body[0], Stmt::Send(..)));
+        assert!(matches!(p.body[1], Stmt::Recv(..)));
+    }
+
+    #[test]
+    fn recv_args_bind_vs_match() {
+        let m = parse("mtype = {go};\nproctype u (chan c) { byte x; c ? x, go; c ? 0, go }").unwrap();
+        let body = &m.procs[0].body;
+        match &body[1] {
+            Stmt::Recv(_, args) => {
+                assert!(matches!(args[0], RecvArg::Bind(LValue::Var(ref v)) if v == "x"));
+                assert!(matches!(args[1], RecvArg::Match(PExpr::Var(ref v)) if v == "go"));
+            }
+            other => panic!("expected recv, got {:?}", other),
+        }
+        match &body[2] {
+            Stmt::Recv(_, args) => {
+                assert!(matches!(args[0], RecvArg::Match(PExpr::Num(0))));
+            }
+            other => panic!("expected recv, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn parse_do_with_else_and_break() {
+        let m = parse(
+            "active proctype main() { int i; do :: i < 3 -> i++ :: else -> break od }",
+        )
+        .unwrap();
+        match &m.procs[0].body[1] {
+            Stmt::Do(opts, els) => {
+                assert_eq!(opts.len(), 1);
+                assert!(els.is_some());
+                assert_eq!(els.as_ref().unwrap()[0], Stmt::Break);
+            }
+            other => panic!("expected do, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn parse_listing3_fragment() {
+        // straight from the paper's Listing 3 (abridged)
+        let src = r#"
+            int size, WG, TS, WGs, NWD; byte i;
+            active proctype main() {
+              byte n = 4;
+              size = 1 << n;
+              select (i : 1 .. n-1);
+              WG = size >> (n - i);
+              select (i : 1 .. n-1);
+              TS = size >> (n - i);
+              WGs = size / (WG * TS);
+              NWD = (WGs <= 2 -> WGs : 1);
+              atomic { run host(); }
+            }
+            proctype host() { skip }
+        "#;
+        let m = parse(src).unwrap();
+        assert_eq!(m.procs.len(), 2);
+        assert!(m.procs[0].active);
+        let body = &m.procs[0].body;
+        assert!(body.iter().any(|s| matches!(s, Stmt::Select(..))));
+        assert!(body
+            .iter()
+            .any(|s| matches!(s, Stmt::Assign(LValue::Var(v), PExpr::Cond(..)) if v == "NWD")));
+        assert!(body.iter().any(|s| matches!(s, Stmt::Atomic(..))));
+    }
+
+    #[test]
+    fn parse_inline_def_and_call() {
+        let src = r#"
+            int time;
+            inline long_work(gt, tz) {
+              do :: time > gt * tz -> break :: else -> skip od
+            }
+            proctype pex() { long_work(10, 4) }
+        "#;
+        let m = parse(src).unwrap();
+        assert_eq!(m.inlines.len(), 1);
+        assert_eq!(m.inlines[0].params, vec!["gt", "tz"]);
+        assert!(matches!(m.procs[0].body[0], Stmt::InlineCall(ref n, _) if n == "long_work"));
+    }
+
+    #[test]
+    fn parse_chan_decl_with_annotation() {
+        let m = parse("proctype h() { chan d = [0] of {mtype : action}; chan e = [2] of {byte, mtype} }").unwrap();
+        match (&m.procs[0].body[0], &m.procs[0].body[1]) {
+            (Stmt::ChanDecl(c), Stmt::ChanDecl(e)) => {
+                assert_eq!((c.capacity, c.arity), (0, 1));
+                assert_eq!((e.capacity, e.arity), (2, 2));
+            }
+            other => panic!("expected chan decls, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn parse_for_loop() {
+        let m = parse("proctype h() { byte i; for (i : 0 .. 3) { skip } }").unwrap();
+        assert!(matches!(m.procs[0].body[1], Stmt::For(ref v, _, _, _) if v == "i"));
+    }
+
+    #[test]
+    fn error_on_garbage() {
+        assert!(parse("proctype x() { ??? }").is_err());
+        assert!(parse("if :: fi").is_err());
+    }
+}

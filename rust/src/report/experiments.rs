@@ -1,0 +1,261 @@
+//! Experiment drivers regenerating the paper's Tables 1–3.
+//!
+//! Each driver returns both structured rows and a rendered ASCII table;
+//! the CLI prints them and EXPERIMENTS.md records paper-vs-measured.
+
+use super::table::Table;
+use crate::checker::{check, CheckOptions};
+use crate::model::SafetyLtl;
+use crate::opencl::{run_sweep, SweepReport};
+use crate::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+use crate::promela::{templates, PromelaSystem};
+use crate::runtime::Engine;
+use crate::swarm::SwarmConfig;
+use crate::tuner::{extract_sorted, tune, Method, TuneResult};
+use crate::util::fmt::{human_bytes, human_duration, thousands};
+use anyhow::Result;
+use std::time::Duration;
+
+// ------------------------------------------------------------- Table 1 --
+
+#[derive(Debug)]
+pub struct Table1Row {
+    pub size: u32,
+    pub model_time: i64,
+    pub steps: usize,
+    pub ts: u32,
+    pub wg: u32,
+    /// bytes used by exhaustive verification (Promela engine when run,
+    /// else the native engine); None when skipped (over the budget)
+    pub mem_exhaustive: Option<u64>,
+    pub mem_swarm: u64,
+    pub verification: Duration,
+    pub first_trail: Duration,
+    pub optimality: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Opts {
+    pub sizes: Vec<u32>,
+    pub plat: PlatformConfig,
+    /// largest size verified exhaustively on the native engine
+    pub max_exhaustive_size: u32,
+    /// largest size verified exhaustively on the *Promela* engine
+    /// (full interleaving — the SPIN-comparable memory column)
+    pub max_promela_size: u32,
+    pub swarm: SwarmConfig,
+}
+
+impl Default for Table1Opts {
+    fn default() -> Self {
+        Self {
+            sizes: vec![8, 16, 32, 64, 128, 256, 512, 1024],
+            plat: PlatformConfig::default(),
+            max_exhaustive_size: 256,
+            max_promela_size: 16,
+            swarm: SwarmConfig { time_budget: Duration::from_secs(5), ..Default::default() },
+        }
+    }
+}
+
+pub fn table1(opts: &Table1Opts) -> Result<(Vec<Table1Row>, String)> {
+    let mut rows = Vec::new();
+    for &size in &opts.sizes {
+        let model = AbstractModel::new(size, opts.plat, Granularity::Phase)?;
+
+        // memory of exhaustive verification: prefer the Promela engine
+        // (full interleaving, the honest SPIN analogue) on small sizes;
+        // also harvest its best trail's step count (the column SPIN's
+        // simulation mode reports in the paper's Table 1)
+        let mut pml_steps: Option<usize> = None;
+        let mem_exhaustive = if size <= opts.max_promela_size {
+            let pml = templates::abstract_pml(size, &opts.plat);
+            let sys = PromelaSystem::from_source(&pml)?;
+            let mut co = CheckOptions::default();
+            co.collect_all = true;
+            let rep = check(&sys, &SafetyLtl::non_termination(), &co)?;
+            let ws = crate::tuner::extract_sorted(&sys, rep.violations.iter())?;
+            pml_steps = ws.first().map(|w| w.steps);
+            Some(rep.stats.bytes_used)
+        } else {
+            None
+        };
+
+        // the tuning itself: exhaustive bisection when affordable, swarm always
+        let (result, mem_exh_native): (TuneResult, Option<u64>) =
+            if size <= opts.max_exhaustive_size {
+                let r = tune(&model, Method::Exhaustive, &CheckOptions::default(), &opts.swarm, None)?;
+                let m = r.peak_bytes;
+                (r, Some(m))
+            } else {
+                (tune(&model, Method::Swarm, &CheckOptions::default(), &opts.swarm, None)?, None)
+            };
+        let swarm_result = tune(&model, Method::Swarm, &CheckOptions::default(), &opts.swarm, None)?;
+
+        rows.push(Table1Row {
+            size,
+            // steps: Promela-engine trail length when measured (comparable
+            // to SPIN's simulation step counts); otherwise the native
+            // phase-granularity trail length
+            model_time: result.t_min,
+            steps: pml_steps.unwrap_or(result.optimal.steps),
+            ts: result.optimal.ts,
+            wg: result.optimal.wg,
+            mem_exhaustive: mem_exhaustive.or(mem_exh_native),
+            mem_swarm: swarm_result.peak_bytes,
+            verification: result.elapsed,
+            first_trail: result.first_trail.map(|(_, d)| d).unwrap_or_default(),
+            optimality: result.first_trail_optimality.unwrap_or(1.0),
+        });
+    }
+
+    let mut t = Table::new(vec![
+        "N", "Size", "Model time", "Steps", "TS", "WG", "Mem (exh)", "Mem (swarm)",
+        "Verif time", "1st trail", "1st trail opt",
+    ]);
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            r.size.to_string(),
+            r.model_time.to_string(),
+            thousands(r.steps as u64),
+            r.ts.to_string(),
+            r.wg.to_string(),
+            r.mem_exhaustive.map_or("-".into(), human_bytes),
+            human_bytes(r.mem_swarm),
+            human_duration(r.verification),
+            human_duration(r.first_trail),
+            format!("{:.0}%", r.optimality * 100.0),
+        ]);
+    }
+    Ok((rows, t.render()))
+}
+
+// ------------------------------------------------------------- Table 2 --
+
+pub fn table2(engine: &mut Engine, repeats: u32) -> Result<(SweepReport, String)> {
+    let rep = run_sweep(engine, repeats, 42)?;
+    let mut t = Table::new(vec![
+        "N", "Global size", "WG", "TS", "Time (ms)", "Bandwidth (GB/s)", "Correct",
+    ]);
+    for (i, r) in rep.rows.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            r.global_size.to_string(),
+            r.wg.to_string(),
+            r.ts.to_string(),
+            format!("{:.2}", r.best_ms),
+            format!("{:.2}", r.bandwidth_gbs),
+            if r.correct { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    let header = format!(
+        "platform={} data={} ({} runs/config)\n",
+        rep.platform,
+        human_bytes(rep.data_bytes),
+        repeats
+    );
+    Ok((rep, header + &t.render()))
+}
+
+// ------------------------------------------------------------- Table 3 --
+
+#[derive(Debug)]
+pub struct Table3Row {
+    pub pes: u32,
+    pub size: u32,
+    pub wg: u32,
+    pub ts: u32,
+    pub model_time: i64,
+    pub steps: usize,
+}
+
+/// (NP, size) groups as in the paper's Table 3; `top` best configurations
+/// reported per group (the paper lists 3).
+pub fn table3(groups: &[(u32, u32)], gmt: u32, top: usize) -> Result<(Vec<Table3Row>, String)> {
+    let mut rows = Vec::new();
+    for &(np, size) in groups {
+        let model = MinModel::new(
+            size,
+            np,
+            gmt,
+            crate::platform::DataInit::Descending,
+            Granularity::Phase,
+        )?;
+        let mut co = CheckOptions::default();
+        co.collect_all = true;
+        let rep = check(&model, &SafetyLtl::non_termination(), &co)?;
+        anyhow::ensure!(rep.exhausted, "table3 model must be exhaustible");
+        let ws = extract_sorted(&model, rep.violations.iter())?;
+        for w in ws.iter().take(top) {
+            rows.push(Table3Row {
+                pes: np,
+                size,
+                wg: w.wg,
+                ts: w.ts,
+                model_time: w.time,
+                steps: w.steps,
+            });
+        }
+    }
+    let mut t = Table::new(vec!["N", "PEs", "Data size", "WG", "TS", "Model time", "Steps"]);
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            r.pes.to_string(),
+            r.size.to_string(),
+            r.wg.to_string(),
+            r.ts.to_string(),
+            r.model_time.to_string(),
+            thousands(r.steps as u64),
+        ]);
+    }
+    Ok((rows, t.render()))
+}
+
+/// The paper's Table 3 groups.
+pub fn paper_table3_groups() -> Vec<(u32, u32)> {
+    vec![(4, 16), (64, 64), (64, 128), (64, 256)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_small_sizes() {
+        let opts = Table1Opts {
+            sizes: vec![8, 16],
+            max_promela_size: 0, // promela engine covered by templates tests
+            max_exhaustive_size: 64,
+            swarm: SwarmConfig {
+                workers: 2,
+                time_budget: Duration::from_millis(500),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (rows, rendered) = table1(&opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        // optimal times must match the native ground truth
+        for r in &rows {
+            let m = AbstractModel::new(r.size, opts.plat, Granularity::Phase).unwrap();
+            assert_eq!(r.model_time, m.optimum().0 as i64);
+        }
+        assert!(rows[0].mem_exhaustive.is_some(), "native exhaustive memory recorded");
+        assert!(rendered.contains("Model time"));
+    }
+
+    #[test]
+    fn table3_rows_sorted_and_correct() {
+        let (rows, rendered) = table3(&[(4, 16), (64, 64)], 3, 3).unwrap();
+        assert_eq!(rows.len(), 6);
+        // within each group: ascending model time; best equals optimum
+        let m = MinModel::paper(16, 4).unwrap();
+        assert_eq!(rows[0].model_time, m.optimum().0 as i64);
+        assert!(rows[0].model_time <= rows[1].model_time);
+        let m2 = MinModel::paper(64, 64).unwrap();
+        assert_eq!(rows[3].model_time, m2.optimum().0 as i64);
+        assert!(rendered.contains("PEs"));
+    }
+}

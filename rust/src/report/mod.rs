@@ -1,0 +1,8 @@
+//! Reporting: ASCII tables and the drivers that regenerate the paper's
+//! Tables 1-3 (see DESIGN.md §5 for the experiment index).
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{paper_table3_groups, table1, table2, table3, Table1Opts};
+pub use table::Table;

@@ -1,0 +1,202 @@
+//! Executable loading and typed execution of the Minimum-problem kernels.
+
+use crate::util::manifest::{ArtifactEntry, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its tuning metadata.
+pub struct LoadedKernel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one Minimum-kernel execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MinOutput {
+    /// per-workgroup partial minima (device side, Listing 10)
+    pub partials: Vec<i32>,
+    /// host-side REDUCE-global over the partials (Listing 11 lines 22-24)
+    pub global_min: i32,
+}
+
+/// PJRT engine: one CPU client, lazily compiled executables by name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedKernel>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (default: `artifacts/`
+    /// next to the workspace root, or `$MCAT_ARTIFACTS`).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MCAT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and return the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedKernel> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .find(name)
+                .with_context(|| format!("artifact `{}` not in manifest", name))?
+                .clone();
+            let path = entry.path(&self.manifest.dir);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+            self.cache.insert(name.to_string(), LoadedKernel { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a `min_device` artifact on `data` (flat i32 array of the
+    /// artifact's size) and perform the host-side global reduction.
+    pub fn run_min(&mut self, name: &str, data: &[i32]) -> Result<MinOutput> {
+        let kernel = self.load(name)?;
+        let entry = kernel.entry.clone();
+        if entry.kind != "min_device" && entry.kind != "min_fused" {
+            bail!("artifact `{}` has kind {}, not a minimum kernel", name, entry.kind);
+        }
+        if data.len() as u64 != entry.size {
+            bail!(
+                "artifact `{}` expects {} elements, got {}",
+                name,
+                entry.size,
+                data.len()
+            );
+        }
+        let input = xla::Literal::vec1(data);
+        let result = kernel.exe.execute::<xla::Literal>(&[input]).map_err(to_anyhow)?;
+        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        match entry.kind.as_str() {
+            "min_device" => {
+                let partials_lit = out.to_tuple1().map_err(to_anyhow)?;
+                let partials: Vec<i32> = partials_lit.to_vec().map_err(to_anyhow)?;
+                anyhow::ensure!(
+                    partials.len() == entry.units as usize,
+                    "expected {} partials, got {}",
+                    entry.units,
+                    partials.len()
+                );
+                let global_min = partials.iter().copied().min().context("empty partials")?;
+                Ok(MinOutput { partials, global_min })
+            }
+            _ => {
+                // min_fused: (partials, global_min) — used for self-check
+                let (p, g) = out.to_tuple2().map_err(to_anyhow)?;
+                let partials: Vec<i32> = p.to_vec().map_err(to_anyhow)?;
+                let gv: Vec<i32> = g.to_vec().map_err(to_anyhow)?;
+                let global_min = *gv.first().context("empty fused output")?;
+                Ok(MinOutput { partials, global_min })
+            }
+        }
+    }
+
+    /// Execute an `abstract` artifact on f32 data; returns the per-item
+    /// result vector.
+    pub fn run_abstract(&mut self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+        let kernel = self.load(name)?;
+        let entry = kernel.entry.clone();
+        if entry.kind != "abstract" {
+            bail!("artifact `{}` has kind {}, not abstract", name, entry.kind);
+        }
+        if data.len() as u64 != entry.size {
+            bail!("artifact `{}` expects {} elements, got {}", name, entry.size, data.len());
+        }
+        let input = xla::Literal::vec1(data);
+        let result = kernel.exe.execute::<xla::Literal>(&[input]).map_err(to_anyhow)?;
+        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let v = out.to_tuple1().map_err(to_anyhow)?;
+        v.to_vec().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<PathBuf> {
+        let dir = Engine::default_dir();
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    /// Reference min on the host.
+    fn ref_min(data: &[i32]) -> i32 {
+        data.iter().copied().min().unwrap()
+    }
+
+    #[test]
+    fn run_min_small_matches_host_reference() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eng = Engine::new(&dir).unwrap();
+        let n = eng.manifest().find("min_device_small").unwrap().size as usize;
+        let data: Vec<i32> = (0..n as i32).map(|i| 1000 - 13 * i).collect();
+        let out = eng.run_min("min_device_small", &data).unwrap();
+        assert_eq!(out.global_min, ref_min(&data));
+        assert_eq!(out.partials.len(), 4);
+    }
+
+    #[test]
+    fn fused_and_device_agree() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eng = Engine::new(&dir).unwrap();
+        let n = eng.manifest().find("min_device_small").unwrap().size as usize;
+        let data: Vec<i32> = (0..n as i32).map(|i| (i * 7919) % 101 - 50).collect();
+        let a = eng.run_min("min_device_small", &data).unwrap();
+        let b = eng.run_min("min_fused_small", &data).unwrap();
+        assert_eq!(a.global_min, b.global_min);
+        assert_eq!(a.partials, b.partials);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eng = Engine::new(&dir).unwrap();
+        assert!(eng.run_min("min_device_small", &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eng = Engine::new(&dir).unwrap();
+        assert!(eng.run_min("nope", &[0i32; 4]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime — loads the AOT-compiled Pallas/JAX artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//!
+//! Python is build-time only: `make artifacts` lowers the L2 graphs once;
+//! this module parses the HLO *text* (the interchange format that survives
+//! the jax>=0.5 / xla_extension 0.5.1 proto-id mismatch), compiles each
+//! module on the PJRT CPU client, and caches the loaded executables.
+
+pub mod exec;
+
+pub use exec::{Engine, LoadedKernel, MinOutput};

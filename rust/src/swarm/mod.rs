@@ -1,0 +1,187 @@
+//! Swarm verification (paper §5; Holzmann, Joshi, Groce 2008/2010).
+//!
+//! A fleet of independent, diversified, *bounded* searches: each worker
+//! runs the DFS engine with its own RNG seed (randomized successor order),
+//! a bitstate store (fixed memory), a depth bound and a time budget. The
+//! fleet's counterexamples are merged; the paper then picks the minimal
+//! termination time among them (tuner::swarm_search).
+//!
+//! Workers run on std::thread (the paper uses 1–8 cores).
+
+use crate::checker::{check, CheckOptions, CheckReport, Order, SearchStats, StoreKind};
+use crate::model::{SafetyLtl, TransitionSystem, Violation};
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct SwarmConfig {
+    pub workers: u32,
+    pub seed: u64,
+    /// per-worker bitstate table size (log2 bits); 2^27 bits = 16 MB,
+    /// mirroring the paper's ~115-172 MB swarm footprints across workers
+    pub log2_bits: u8,
+    pub hashes: u8,
+    /// SPIN -m: per-worker depth bound
+    pub max_depth: usize,
+    /// per-worker wall-clock budget
+    pub time_budget: Duration,
+    /// collect every violation on a path (spin -e)
+    pub max_errors_per_worker: usize,
+}
+
+impl Default for SwarmConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            seed: 0x5AFE,
+            log2_bits: 27,
+            hashes: 3,
+            max_depth: 200_000_000, // the paper's final -m 2x10^8
+            time_budget: Duration::from_secs(10),
+            max_errors_per_worker: 256,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct WorkerReport<S> {
+    pub worker: u32,
+    pub violations: Vec<Violation<S>>,
+    pub stats: SearchStats,
+}
+
+#[derive(Debug)]
+pub struct SwarmReport<S> {
+    pub per_worker: Vec<WorkerReport<S>>,
+    pub elapsed: Duration,
+}
+
+impl<S> SwarmReport<S> {
+    pub fn violations(&self) -> impl Iterator<Item = &Violation<S>> {
+        self.per_worker.iter().flat_map(|w| w.violations.iter())
+    }
+
+    pub fn found(&self) -> bool {
+        self.per_worker.iter().any(|w| !w.violations.is_empty())
+    }
+
+    pub fn total_states(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.stats.states_stored).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.stats.bytes_used).sum()
+    }
+
+    /// Earliest wall-clock time at which any worker found its first
+    /// violation (the paper's "1st trail" column).
+    pub fn first_trail_after(&self) -> Option<Duration> {
+        self.violations().map(|v| v.found_after).min()
+    }
+}
+
+fn worker_options(cfg: &SwarmConfig, worker: u32) -> CheckOptions {
+    let mut o = CheckOptions::default();
+    o.store = StoreKind::Bitstate { log2_bits: cfg.log2_bits, hashes: cfg.hashes };
+    o.max_depth = cfg.max_depth;
+    o.time_budget = Some(cfg.time_budget);
+    o.collect_all = true;
+    o.max_errors = cfg.max_errors_per_worker;
+    // diversify: each worker gets an independent exploration order
+    o.order = Order::Random(cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(worker as u64));
+    o
+}
+
+/// Run the swarm against `G(prop)`. The model is shared read-only across
+/// worker threads.
+pub fn swarm<M>(model: &M, prop: &SafetyLtl, cfg: &SwarmConfig) -> Result<SwarmReport<M::State>>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let start = Instant::now();
+    let mut per_worker = Vec::with_capacity(cfg.workers as usize);
+    if cfg.workers <= 1 {
+        let rep = check(model, prop, &worker_options(cfg, 0))?;
+        per_worker.push(to_worker_report(0, rep));
+    } else {
+        let reports: Vec<Result<CheckReport<M::State>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.workers)
+                .map(|w| {
+                    let opts = worker_options(cfg, w);
+                    let prop = prop.clone();
+                    scope.spawn(move || check(model, &prop, &opts))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        for (w, rep) in reports.into_iter().enumerate() {
+            per_worker.push(to_worker_report(w as u32, rep?));
+        }
+    }
+    Ok(SwarmReport { per_worker, elapsed: start.elapsed() })
+}
+
+fn to_worker_report<S>(worker: u32, rep: CheckReport<S>) -> WorkerReport<S> {
+    WorkerReport { worker, violations: rep.violations, stats: rep.stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+
+    #[test]
+    fn swarm_finds_termination_counterexamples() {
+        // Φt = G(!FIN): every terminating run is a counterexample (paper §5)
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let cfg = SwarmConfig {
+            workers: 2,
+            time_budget: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let rep = swarm(&m, &SafetyLtl::non_termination(), &cfg).unwrap();
+        assert!(rep.found());
+        // every violation is a FIN state with a positive time
+        for v in rep.violations() {
+            assert_eq!(v.trail.final_var(&m, "FIN"), Some(1));
+            assert!(v.trail.final_var(&m, "time").unwrap() > 0);
+        }
+        assert!(rep.first_trail_after().is_some());
+    }
+
+    #[test]
+    fn swarm_workers_diversify() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let cfg = SwarmConfig { workers: 4, ..Default::default() };
+        let rep = swarm(&m, &SafetyLtl::non_termination(), &cfg).unwrap();
+        // different workers should hit FIN through different tunings
+        let mut wgs = std::collections::HashSet::new();
+        for v in rep.violations() {
+            wgs.insert(v.trail.final_var(&m, "WG").unwrap());
+        }
+        assert!(wgs.len() > 1, "expected diverse tunings, got {:?}", wgs);
+    }
+
+    #[test]
+    fn swarm_respects_time_budget() {
+        let m = AbstractModel::new(1024, PlatformConfig::default(), Granularity::Tick).unwrap();
+        let cfg = SwarmConfig {
+            workers: 1,
+            time_budget: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let t = Instant::now();
+        let _ = swarm(&m, &SafetyLtl::parse("G(true)").unwrap(), &cfg).unwrap();
+        assert!(t.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn swarm_memory_is_bounded_by_bitstate() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let cfg = SwarmConfig { workers: 2, log2_bits: 20, ..Default::default() };
+        let rep = swarm(&m, &SafetyLtl::non_termination(), &cfg).unwrap();
+        // 2 workers x 2^20 bits / 8 = 256 KB total
+        assert_eq!(rep.total_bytes(), 2 * (1 << 20) / 8);
+    }
+}

@@ -1,0 +1,197 @@
+//! The bisection method for the minimal termination time (paper Fig. 1).
+//!
+//! Predicate `Cex(T)` = "the checker produces a counterexample for
+//! Φo = G(FIN → time > T)", i.e. some run terminates within T. Starting
+//! from a sound upper bound `T_ini` (obtained by simulation, §2 Step 3),
+//! bisect down to the smallest T with `Cex(T)`; `Cex(T_min)` holds and
+//! `Cex(T_min − 1)` provably fails, so T_min is the minimal model time and
+//! its witness trail carries the optimal (WG, TS).
+
+use super::extract::{extract, extract_sorted, TuningWitness};
+use crate::checker::{check, CheckOptions};
+use crate::model::{SafetyLtl, TransitionSystem};
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct BisectionIter {
+    pub t: i64,
+    pub cex_found: bool,
+    pub states_stored: u64,
+    pub elapsed: Duration,
+}
+
+#[derive(Debug)]
+pub struct BisectionResult {
+    pub t_min: i64,
+    pub witness: TuningWitness,
+    pub iterations: Vec<BisectionIter>,
+    /// first counterexample ever found (the paper's "1st trail" column):
+    /// the quickest sub-optimal answer and how long it took
+    pub first_trail: Option<(TuningWitness, Duration)>,
+    pub total_states: u64,
+    pub peak_bytes: u64,
+    pub total_elapsed: Duration,
+}
+
+impl BisectionResult {
+    /// Paper Table 1 last column: optimality of the first trail as the
+    /// ratio of the optimal model time to the first-trail model time.
+    pub fn first_trail_optimality(&self) -> Option<f64> {
+        self.first_trail
+            .as_ref()
+            .map(|(w, _)| self.t_min as f64 / w.time as f64)
+    }
+}
+
+/// Run Fig. 1. `opts` configures each inner verification (store kind,
+/// budgets). `t_ini` must satisfy `Cex(t_ini)`; when it does not (e.g. a
+/// too-small simulation bound), it is doubled until it does.
+pub fn bisection<M: TransitionSystem>(
+    model: &M,
+    opts: &CheckOptions,
+    t_ini: i64,
+) -> Result<BisectionResult> {
+    let start = std::time::Instant::now();
+    let mut iterations = Vec::new();
+    let mut total_states = 0u64;
+    let mut peak_bytes = 0u64;
+    let mut first_trail: Option<(TuningWitness, Duration)> = None;
+    #[allow(unused_assignments)] // initialized for the bail path below
+    let mut best_witness: Option<TuningWitness> = None;
+
+    // collect_all on the *first* conclusive run would be wasteful; each
+    // Cex(T) query stops at the first counterexample.
+    let mut cex = |t: i64| -> Result<Option<TuningWitness>> {
+        let prop = SafetyLtl::over_time(t);
+        let rep = check(model, &prop, opts)
+            .with_context(|| format!("verifying {} failed", prop))?;
+        total_states += rep.stats.states_stored;
+        peak_bytes = peak_bytes.max(rep.stats.bytes_used);
+        let found = rep.found();
+        iterations.push(BisectionIter {
+            t,
+            cex_found: found,
+            states_stored: rep.stats.states_stored,
+            elapsed: rep.stats.elapsed,
+        });
+        if found {
+            let ws = extract_sorted(model, rep.violations.iter())?;
+            let w = ws[0];
+            if first_trail.is_none() {
+                let v0 = &rep.violations[0];
+                first_trail = Some((extract(model, v0)?, start.elapsed()));
+            }
+            Ok(Some(w))
+        } else {
+            // "no counterexample" is only meaningful when exhaustive
+            rep.verdict().context(
+                "Cex(T) inconclusive: raise budgets or use the swarm method",
+            )?;
+            Ok(None)
+        }
+    };
+
+    // establish a valid upper bound
+    let mut hi = t_ini.max(1);
+    let mut grow = 0;
+    loop {
+        match cex(hi)? {
+            Some(w) => {
+                best_witness = Some(w);
+                // the witness time is itself a (possibly much) tighter hi
+                hi = w.time;
+                break;
+            }
+            None => {
+                grow += 1;
+                if grow > 62 {
+                    bail!("no terminating run found below T = 2^62 — model deadlocks?");
+                }
+                hi = hi.saturating_mul(2);
+            }
+        }
+    }
+
+    // bisect: invariant Cex(hi) ∧ ¬Cex(lo)
+    let mut lo = 0i64;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        match cex(mid)? {
+            Some(w) => {
+                best_witness = Some(w);
+                hi = w.time.min(mid); // witness time is ≤ mid and achievable
+            }
+            None => lo = mid,
+        }
+    }
+
+    Ok(BisectionResult {
+        t_min: hi,
+        witness: best_witness.expect("Cex(hi) held at least once"),
+        iterations,
+        first_trail,
+        total_states,
+        peak_bytes,
+        total_elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AbstractModel, DataInit, Granularity, MinModel, PlatformConfig};
+    use crate::platform::sim::initial_bound;
+
+    #[test]
+    fn bisection_finds_exact_optimum_abstract() {
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (opt_time, _) = m.optimum();
+        let t_ini = initial_bound(&m, 4, 7, 10_000_000).unwrap();
+        let r = bisection(&m, &CheckOptions::default(), t_ini).unwrap();
+        assert_eq!(r.t_min, opt_time as i64);
+        // witness achieves the optimum (ties possible among tunings)
+        use crate::platform::Tuning;
+        let w = Tuning { wg: r.witness.wg, ts: r.witness.ts };
+        assert_eq!(m.predicted_time(w), opt_time);
+        assert!(r.iterations.len() >= 2);
+        // last-iteration invariant: Cex(t_min) true was observed
+        assert!(r.iterations.iter().any(|i| i.cex_found && i.t >= r.t_min));
+    }
+
+    #[test]
+    fn bisection_finds_exact_optimum_minimum() {
+        let m = MinModel::new(64, 4, 3, DataInit::Descending, Granularity::Phase).unwrap();
+        let (opt_time, _) = m.optimum();
+        let r = bisection(&m, &CheckOptions::default(), 100_000).unwrap();
+        assert_eq!(r.t_min, opt_time as i64);
+        use crate::platform::Tuning;
+        let w = Tuning { wg: r.witness.wg, ts: r.witness.ts };
+        assert_eq!(m.predicted_time(w), opt_time);
+    }
+
+    #[test]
+    fn bisection_grows_small_t_ini() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (opt_time, _) = m.optimum();
+        // t_ini = 1 is below every terminal time: must grow, then converge
+        let r = bisection(&m, &CheckOptions::default(), 1).unwrap();
+        assert_eq!(r.t_min, opt_time as i64);
+    }
+
+    #[test]
+    fn first_trail_optimality_in_unit_range() {
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let r = bisection(&m, &CheckOptions::default(), 1_000_000).unwrap();
+        let opt = r.first_trail_optimality().unwrap();
+        assert!(opt > 0.0 && opt <= 1.0, "optimality {}", opt);
+    }
+
+    #[test]
+    fn inconclusive_budget_is_an_error_not_a_wrong_answer() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Tick).unwrap();
+        let mut o = CheckOptions::default();
+        o.max_states = 50; // absurdly small
+        assert!(bisection(&m, &o, 10).is_err());
+    }
+}

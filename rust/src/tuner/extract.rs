@@ -1,0 +1,99 @@
+//! Step 4 of the counterexample method (paper §4): read the optimal
+//! configuration of tuning parameters off a counterexample trail.
+//!
+//! SPIN replays the `.trail` in simulation mode and the paper's runner
+//! script greps WG/TS/time out of the simulation output; our trails expose
+//! the final state directly through the model's `eval_var` interface.
+
+use crate::model::{TransitionSystem, Violation};
+use anyhow::{Context, Result};
+
+/// A tuning configuration witnessed by a counterexample, with the model
+/// time it achieves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuningWitness {
+    pub wg: u32,
+    pub ts: u32,
+    pub time: i64,
+    /// transitions on the witnessing trail (SPIN's "steps")
+    pub steps: usize,
+}
+
+impl std::fmt::Display for TuningWitness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WG={} TS={} time={} steps={}", self.wg, self.ts, self.time, self.steps)
+    }
+}
+
+/// Extract (WG, TS, time) from the final state of a violation trail.
+pub fn extract<M: TransitionSystem>(model: &M, v: &Violation<M::State>) -> Result<TuningWitness> {
+    let last = v.trail.last();
+    let get = |name: &str| {
+        model
+            .eval_var(last, name)
+            .with_context(|| format!("counterexample state does not expose `{}`", name))
+    };
+    Ok(TuningWitness {
+        wg: get("WG")? as u32,
+        ts: get("TS")? as u32,
+        time: get("time")?,
+        steps: v.trail.steps(),
+    })
+}
+
+/// Extract every witness from a batch of violations and return them sorted
+/// by (time, steps) — the paper's runner script that sorts all trails.
+pub fn extract_sorted<'a, M, I>(model: &M, violations: I) -> Result<Vec<TuningWitness>>
+where
+    M: TransitionSystem,
+    I: IntoIterator<Item = &'a Violation<M::State>>,
+    M::State: 'a,
+{
+    let mut out = Vec::new();
+    for v in violations {
+        out.push(extract(model, v)?);
+    }
+    out.sort_by_key(|w| (w.time, w.steps, w.wg, w.ts));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::{check, CheckOptions};
+    use crate::model::SafetyLtl;
+    use crate::platform::{AbstractModel, Granularity, PlatformConfig};
+
+    #[test]
+    fn extracts_wg_ts_time_from_trail() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (opt_time, opt_t) = m.optimum();
+        // Φo with T = optimum: the optimal run is a counterexample
+        let p = SafetyLtl::over_time(opt_time as i64);
+        let mut o = CheckOptions::default();
+        o.collect_all = true;
+        let rep = check(&m, &p, &o).unwrap();
+        assert!(rep.found());
+        let ws = extract_sorted(&m, rep.violations.iter()).unwrap();
+        // the best witness is the model optimum
+        assert_eq!(ws[0].time, opt_time as i64);
+        assert_eq!((ws[0].wg, ws[0].ts), (opt_t.wg, opt_t.ts));
+        // sorted ascending
+        for w in ws.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+    }
+
+    #[test]
+    fn extract_fails_without_tuning_vars() {
+        // initial state has no WG yet; craft a violation ending there
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let init = m.initial_states()[0].clone();
+        let v = Violation {
+            trail: crate::model::Trail { states: vec![init] },
+            depth: 0,
+            found_after: std::time::Duration::ZERO,
+        };
+        assert!(extract(&m, &v).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! The auto-tuner — the paper's four-step counterexample method (§2, §4)
+//! as a facade over the checker and the swarm.
+//!
+//! Step 1 (the model) is supplied by the caller (`platform::*` or a
+//! `promela::PromelaSystem`); Step 2 is `SafetyLtl::over_time`; Step 3 is
+//! [`bisection`] (Fig. 1) or [`swarm_search`] (Fig. 5); Step 4 is
+//! [`extract`].
+
+pub mod bisection;
+pub mod extract;
+pub mod swarm_search;
+
+pub use bisection::{bisection, BisectionIter, BisectionResult};
+pub use extract::{extract, extract_sorted, TuningWitness};
+pub use swarm_search::{swarm_search, SwarmIter, SwarmSearchResult};
+
+use crate::checker::CheckOptions;
+use crate::model::TransitionSystem;
+use crate::platform::sim::initial_bound;
+use crate::swarm::SwarmConfig;
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+/// Search strategy (paper §4 vs §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// exhaustive verification + bisection over T (Fig. 1)
+    Exhaustive,
+    /// swarm verification + decreasing-T loop (Fig. 5)
+    Swarm,
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "exhaustive" | "bisection" => Ok(Method::Exhaustive),
+            "swarm" => Ok(Method::Swarm),
+            _ => anyhow::bail!("unknown method `{}` (exhaustive|swarm)", s),
+        }
+    }
+}
+
+/// Unified tuning outcome across both methods.
+#[derive(Debug)]
+pub struct TuneResult {
+    pub method: Method,
+    pub optimal: TuningWitness,
+    pub t_min: i64,
+    pub first_trail: Option<(TuningWitness, Duration)>,
+    pub first_trail_optimality: Option<f64>,
+    pub states_explored: u64,
+    pub peak_bytes: u64,
+    pub elapsed: Duration,
+    /// human-readable per-iteration log (for the CLI and EXPERIMENTS.md)
+    pub log: Vec<String>,
+}
+
+/// Auto-tune `model`: find the minimal model time and its (WG, TS).
+///
+/// `T_ini` is obtained by simulation (paper §2 Step 3) unless overridden.
+pub fn tune<M>(
+    model: &M,
+    method: Method,
+    check_opts: &CheckOptions,
+    swarm_cfg: &SwarmConfig,
+    t_ini_override: Option<i64>,
+) -> Result<TuneResult>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    match method {
+        Method::Exhaustive => {
+            let t_ini = match t_ini_override {
+                Some(t) => t,
+                None => initial_bound(model, 8, 0x51_u64, 100_000_000)
+                    .context("simulation found no terminating run for T_ini")?,
+            };
+            let r = bisection(model, check_opts, t_ini)?;
+            let log = r
+                .iterations
+                .iter()
+                .map(|i| {
+                    format!(
+                        "Cex(T={}) -> {} [{} states, {}]",
+                        i.t,
+                        if i.cex_found { "counterexample" } else { "proved" },
+                        i.states_stored,
+                        crate::util::fmt::human_duration(i.elapsed)
+                    )
+                })
+                .collect();
+            Ok(TuneResult {
+                method,
+                optimal: r.witness,
+                t_min: r.t_min,
+                first_trail_optimality: r.first_trail_optimality(),
+                first_trail: r.first_trail,
+                states_explored: r.total_states,
+                peak_bytes: r.peak_bytes,
+                elapsed: r.total_elapsed,
+                log: log,
+            })
+        }
+        Method::Swarm => {
+            let r = swarm_search(model, swarm_cfg)?;
+            let log = r
+                .iterations
+                .iter()
+                .map(|i| {
+                    format!(
+                        "swarm({}) -> {} cex, best time {:?} [{} states, {}]",
+                        i.bound.map_or("Φt".to_string(), |b| format!("Φo T={}", b)),
+                        i.cex_count,
+                        i.best_time,
+                        i.states,
+                        crate::util::fmt::human_duration(i.elapsed)
+                    )
+                })
+                .collect();
+            Ok(TuneResult {
+                method,
+                optimal: r.witness,
+                t_min: r.t_min,
+                first_trail_optimality: r.first_trail_optimality(),
+                first_trail: r.first_trail,
+                states_explored: r.total_states,
+                peak_bytes: r.total_bytes,
+                elapsed: r.total_elapsed,
+                log,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+
+    #[test]
+    fn both_methods_agree_on_optimum() {
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (opt_time, _) = m.optimum();
+        let ex = tune(&m, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), None).unwrap();
+        let sw = tune(&m, Method::Swarm, &CheckOptions::default(), &SwarmConfig::default(), None).unwrap();
+        assert_eq!(ex.t_min, opt_time as i64);
+        assert_eq!(sw.t_min, opt_time as i64);
+        assert_eq!(ex.optimal.time, sw.optimal.time);
+        assert!(!ex.log.is_empty() && !sw.log.is_empty());
+    }
+
+    #[test]
+    fn tune_min_model_witness_is_valid_tuning() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let r = tune(&m, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), None).unwrap();
+        assert!(m
+            .tunings()
+            .iter()
+            .any(|t| t.wg == r.optimal.wg && t.ts == r.optimal.ts));
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!("exhaustive".parse::<Method>().unwrap(), Method::Exhaustive);
+        assert_eq!("swarm".parse::<Method>().unwrap(), Method::Swarm);
+        assert!("annealing".parse::<Method>().is_err());
+    }
+}

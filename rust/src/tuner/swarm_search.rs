@@ -1,0 +1,188 @@
+//! The swarm search method (paper Fig. 5, §5) — the non-bisection strategy
+//! for inputs whose state space exceeds the exhaustive-mode memory budget.
+//!
+//! 1. Swarm-verify Φt = G(¬FIN): every counterexample is a terminating
+//!    run; take the minimal termination time among them.
+//! 2. Repeatedly swarm Φo = G(FIN → time > T−1) with T the current best:
+//!    a counterexample is a strictly better run. Stop when a swarm round
+//!    finds nothing within (roughly) the previous round's execution time —
+//!    the paper's stopping criterion ("if the swarm does not find a
+//!    counterexample as quickly as at the previous launching, a smaller
+//!    time does not exist with very high probability").
+
+use super::extract::{extract_sorted, TuningWitness};
+use crate::model::{SafetyLtl, TransitionSystem};
+use crate::swarm::{swarm, SwarmConfig};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct SwarmIter {
+    /// bound used this round (None = the initial Φt round)
+    pub bound: Option<i64>,
+    pub cex_count: usize,
+    pub best_time: Option<i64>,
+    pub elapsed: Duration,
+    pub states: u64,
+}
+
+#[derive(Debug)]
+pub struct SwarmSearchResult {
+    pub t_min: i64,
+    pub witness: TuningWitness,
+    pub iterations: Vec<SwarmIter>,
+    pub first_trail: Option<(TuningWitness, Duration)>,
+    pub total_states: u64,
+    pub total_bytes: u64,
+    pub total_elapsed: Duration,
+}
+
+impl SwarmSearchResult {
+    pub fn first_trail_optimality(&self) -> Option<f64> {
+        self.first_trail.as_ref().map(|(w, _)| self.t_min as f64 / w.time as f64)
+    }
+}
+
+/// Run Fig. 5 with `cfg` as the per-round swarm configuration. The per
+/// round time budget adapts: each Φo round gets the previous round's
+/// execution time (clamped to cfg.time_budget as a maximum).
+pub fn swarm_search<M>(model: &M, cfg: &SwarmConfig) -> Result<SwarmSearchResult>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let start = std::time::Instant::now();
+    let mut iterations = Vec::new();
+    let mut total_states = 0u64;
+    let mut total_bytes = 0u64;
+
+    // Round 0: Φt — harvest terminating runs.
+    let rep = swarm(model, &SafetyLtl::non_termination(), cfg)?;
+    total_states += rep.total_states();
+    total_bytes = total_bytes.max(rep.total_bytes());
+    let mut witnesses = extract_sorted(model, rep.violations())?;
+    iterations.push(SwarmIter {
+        bound: None,
+        cex_count: witnesses.len(),
+        best_time: witnesses.first().map(|w| w.time),
+        elapsed: rep.elapsed,
+        states: rep.total_states(),
+    });
+    if witnesses.is_empty() {
+        bail!(
+            "swarm found no terminating run (Φt has no counterexample within \
+             the budget) — increase workers, depth, or time budget"
+        );
+    }
+    let first_trail = {
+        // the first violation in wall-clock order across workers
+        let mut first: Option<(TuningWitness, Duration)> = None;
+        for v in rep.violations() {
+            let w = extract_sorted(model, std::iter::once(v))?[0];
+            if first.as_ref().map_or(true, |(_, d)| v.found_after < *d) {
+                first = Some((w, v.found_after));
+            }
+        }
+        first
+    };
+
+    let mut best = witnesses[0];
+    let mut prev_exec = rep.elapsed;
+
+    // Φo rounds: tighten the bound until a round comes back empty.
+    let mut round_seed_bump = 1u64;
+    loop {
+        if best.time <= 1 {
+            break;
+        }
+        let bound = best.time - 1;
+        let mut round_cfg = cfg.clone();
+        // paper's criterion: give the round the previous execution time
+        round_cfg.time_budget = prev_exec.max(Duration::from_millis(50)).min(cfg.time_budget);
+        // re-seed so each round explores differently
+        round_cfg.seed = cfg.seed.wrapping_add(round_seed_bump);
+        round_seed_bump += 1;
+
+        let prop = SafetyLtl::over_time(bound);
+        let rep = swarm(model, &prop, &round_cfg)?;
+        total_states += rep.total_states();
+        total_bytes = total_bytes.max(rep.total_bytes());
+        witnesses = extract_sorted(model, rep.violations())?;
+        iterations.push(SwarmIter {
+            bound: Some(bound),
+            cex_count: witnesses.len(),
+            best_time: witnesses.first().map(|w| w.time),
+            elapsed: rep.elapsed,
+            states: rep.total_states(),
+        });
+        match witnesses.first() {
+            Some(&w) if w.time < best.time => {
+                best = w;
+                prev_exec = rep.elapsed;
+            }
+            _ => break, // no smaller time found as quickly: stop (Fig. 5)
+        }
+    }
+
+    Ok(SwarmSearchResult {
+        t_min: best.time,
+        witness: best,
+        iterations,
+        first_trail,
+        total_states,
+        total_bytes,
+        total_elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+
+    fn test_cfg() -> SwarmConfig {
+        SwarmConfig {
+            workers: 2,
+            time_budget: Duration::from_secs(5),
+            log2_bits: 22,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn swarm_search_reaches_optimum_on_small_models() {
+        // On small models the swarm covers the whole tuning space, so it
+        // must land on the true optimum.
+        let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let (opt_time, _) = m.optimum();
+        let r = swarm_search(&m, &test_cfg()).unwrap();
+        assert_eq!(r.t_min, opt_time as i64);
+        assert!(r.iterations.len() >= 2, "at least Φt round + one Φo round");
+        // iteration log: first round is Φt, later rounds carry bounds
+        assert!(r.iterations[0].bound.is_none());
+        assert!(r.iterations[1..].iter().all(|i| i.bound.is_some()));
+    }
+
+    #[test]
+    fn swarm_search_min_model() {
+        let m = MinModel::paper(128, 4).unwrap();
+        let (opt_time, _) = m.optimum();
+        let r = swarm_search(&m, &test_cfg()).unwrap();
+        assert_eq!(r.t_min, opt_time as i64);
+        // several tunings may tie at the optimum; the witness must achieve it
+        use crate::platform::Tuning;
+        let w = Tuning { wg: r.witness.wg, ts: r.witness.ts };
+        assert_eq!(m.predicted_time(w), opt_time);
+        assert!(r.first_trail_optimality().unwrap() <= 1.0);
+    }
+
+    #[test]
+    fn bounds_strictly_decrease() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let r = swarm_search(&m, &test_cfg()).unwrap();
+        let bounds: Vec<i64> = r.iterations.iter().filter_map(|i| i.bound).collect();
+        for w in bounds.windows(2) {
+            assert!(w[1] < w[0], "bounds must tighten: {:?}", bounds);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal criterion-style micro-benchmark harness.
+//!
+//! The sandbox has no `criterion` crate offline, so `cargo bench` targets
+//! (declared with `harness = false`) drive this module instead: warmup,
+//! timed iterations, mean / stddev / min, and a text report compatible with
+//! `tee bench_output.txt`. Deterministic iteration counts keep runs
+//! comparable across the perf-pass iterations recorded in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// optional user-supplied throughput unit count per iteration
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} iters={:<6} mean={:>10} min={:>10} max={:>10} stddev={:>10}",
+            self.name,
+            self.iters,
+            super::fmt::human_duration(self.mean),
+            super::fmt::human_duration(self.min),
+            super::fmt::human_duration(self.max),
+            super::fmt::human_duration(self.stddev),
+        );
+        if let Some(n) = self.elements {
+            let per_s = n as f64 / self.mean.as_secs_f64();
+            s.push_str(&format!(" thrpt={:.3}M/s", per_s / 1e6));
+        }
+        s
+    }
+}
+
+pub struct Bencher {
+    opts: BenchOpts,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        let mut opts = BenchOpts::default();
+        // honor quick runs: MCAT_BENCH_FAST=1 shrinks the budget 10x
+        if std::env::var("MCAT_BENCH_FAST").is_ok() {
+            opts.warmup = Duration::from_millis(30);
+            opts.measure = Duration::from_millis(200);
+        }
+        println!("== bench group: {} ==", group);
+        Self { opts, results: Vec::new(), group: group.to_string() }
+    }
+
+    pub fn with_opts(group: &str, opts: BenchOpts) -> Self {
+        println!("== bench group: {} ==", group);
+        Self { opts, results: Vec::new(), group: group.to_string() }
+    }
+
+    /// Benchmark `f`, which must perform one full iteration per call and
+    /// return a value that is black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) {
+        self.bench_n(name, None, f)
+    }
+
+    pub fn bench_elems<T, F: FnMut() -> T>(&mut self, name: &str, elements: u64, f: F) {
+        self.bench_n(name, Some(elements), f)
+    }
+
+    fn bench_n<T, F: FnMut() -> T>(&mut self, name: &str, elements: Option<u64>, mut f: F) {
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.opts.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples: Vec<Duration> = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.opts.measure
+            || (samples.len() as u32) < self.opts.min_iters)
+            && (samples.len() as u32) < self.opts.max_iters
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        let n = samples.len() as u32;
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean.as_secs_f64();
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: n,
+            mean,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+            elements,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// `std::hint::black_box` wrapper (stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::with_opts(
+            "t",
+            BenchOpts {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                min_iters: 3,
+                max_iters: 1000,
+            },
+        );
+        let mut acc = 0u64;
+        b.bench("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.mean && r.mean <= r.max);
+        assert!(r.report().contains("t/noop"));
+    }
+}

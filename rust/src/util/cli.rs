@@ -1,0 +1,193 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed getters and an auto-generated usage string. Unknown options are an
+//! error — the CLI surface stays honest.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    known_opts: Vec<(String, String)>,
+    known_flags: Vec<(String, String)>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+pub struct Spec {
+    opts: Vec<(String, String)>,  // (name, help)
+    flags: Vec<(String, String)>, // (name, help)
+}
+
+impl Spec {
+    pub fn new() -> Self {
+        Self { opts: Vec::new(), flags: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &str, help: &str) -> Self {
+        self.opts.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut s = format!("usage: {}", cmd);
+        for (n, h) in &self.opts {
+            s.push_str(&format!("\n  --{} <v>   {}", n, h));
+        }
+        for (n, h) in &self.flags {
+            s.push_str(&format!("\n  --{}       {}", n, h));
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut a = Args {
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            pos: Vec::new(),
+            known_opts: self.opts.clone(),
+            known_flags: self.flags.clone(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if self.flags.iter().any(|(n, _)| *n == key) {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{} takes no value", key)));
+                    }
+                    a.flags.push(key);
+                } else if self.opts.iter().any(|(n, _)| *n == key) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{} needs a value", key)))?
+                        }
+                    };
+                    a.opts.insert(key, val);
+                } else {
+                    return Err(CliError(format!("unknown option --{}", key)));
+                }
+            } else {
+                a.pos.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(
+            self.known_opts.iter().any(|(n, _)| n == name),
+            "get() of undeclared option --{name}"
+        );
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{}: cannot parse {:?}", name, v))),
+        }
+    }
+
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// Accessor used by help printing.
+    pub fn known(&self) -> (&[(String, String)], &[(String, String)]) {
+        (&self.known_opts, &self.known_flags)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_opts_flags_positionals() {
+        let spec = Spec::new().opt("size", "input size").flag("verbose", "chatty");
+        let a = spec
+            .parse(&sv(&["--size", "64", "--verbose", "model.pml"]))
+            .unwrap();
+        assert_eq!(a.get("size"), Some("64"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["model.pml".to_string()]);
+    }
+
+    #[test]
+    fn parse_equals_form() {
+        let spec = Spec::new().opt("size", "");
+        let a = spec.parse(&sv(&["--size=128"])).unwrap();
+        assert_eq!(a.get_parsed::<u32>("size").unwrap(), Some(128));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let spec = Spec::new().opt("size", "");
+        assert!(spec.parse(&sv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let spec = Spec::new().opt("size", "");
+        assert!(spec.parse(&sv(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn typed_default() {
+        let spec = Spec::new().opt("gmt", "");
+        let a = spec.parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_parsed_or("gmt", 10u64).unwrap(), 10);
+        let a = spec.parse(&sv(&["--gmt", "3"])).unwrap();
+        assert_eq!(a.get_parsed_or("gmt", 10u64).unwrap(), 3);
+        let a = spec.parse(&sv(&["--gmt", "x"])).unwrap();
+        assert!(a.get_parsed_or("gmt", 10u64).is_err());
+    }
+}

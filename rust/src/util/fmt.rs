@@ -1,0 +1,75 @@
+//! Human formatting helpers for reports (memory sizes, durations, tables).
+
+use std::time::Duration;
+
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{}B", b)
+    } else {
+        format!("{:.3}{}", v, UNITS[u])
+    }
+}
+
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.0}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 60.0 {
+        format!("{:.2}s", s)
+    } else if s < 3600.0 {
+        format!("{}m{:02.0}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{}h{:02.0}m", (s / 3600.0) as u64, (s % 3600.0) / 60.0)
+    }
+}
+
+pub fn thousands(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.000KB");
+        assert_eq!(human_bytes(14_767_000_000 / 1000 * 1000), human_bytes(14_767_000_000));
+        assert!(human_bytes(15_852_470_272).starts_with("14.7"));
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(Duration::from_micros(50)), "50us");
+        assert_eq!(human_duration(Duration::from_millis(250)), "250.0ms");
+        assert_eq!(human_duration(Duration::from_secs(25)), "25.00s");
+        assert_eq!(human_duration(Duration::from_secs(90)), "1m30s");
+        assert_eq!(human_duration(Duration::from_secs(7200)), "2h00m");
+    }
+
+    #[test]
+    fn thousands_sep() {
+        assert_eq!(thousands(0), "0");
+        assert_eq!(thousands(999), "999");
+        assert_eq!(thousands(1000), "1,000");
+        assert_eq!(thousands(15_973_533), "15,973,533");
+    }
+}

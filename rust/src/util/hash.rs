@@ -1,0 +1,118 @@
+//! Fast non-cryptographic hashing for state vectors.
+//!
+//! The checker hashes millions of encoded states; std's SipHash is too slow
+//! and the `ahash`/`fxhash` crates are not available offline, so we ship an
+//! FxHash-style 64-bit mixer plus a `BuildHasher` to plug into std maps.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style word-at-a-time hasher (rustc's FxHasher, 64-bit).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf) | ((rem.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+/// One-shot hash of a byte slice with an explicit seed (used by the bitstate
+/// store to derive the k Bloom probes and by swarm workers to diversify).
+#[inline]
+pub fn hash_bytes_seeded(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = FxHasher { hash: seed };
+    h.write(bytes);
+    // final avalanche (splitmix finalizer) — Fx alone is weak in low bits
+    let mut z = h.finish();
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    hash_bytes_seeded(bytes, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(hash_bytes(b"abc"), hash_bytes(b"abc"));
+        assert_ne!(hash_bytes(b"abc"), hash_bytes(b"abd"));
+    }
+
+    #[test]
+    fn seed_changes_hash() {
+        assert_ne!(hash_bytes_seeded(b"abc", 1), hash_bytes_seeded(b"abc", 2));
+    }
+
+    #[test]
+    fn length_extension_distinct() {
+        // trailing zero bytes must not collide with shorter input
+        assert_ne!(hash_bytes(b"a"), hash_bytes(b"a\0"));
+        assert_ne!(hash_bytes(b""), hash_bytes(b"\0"));
+    }
+
+    #[test]
+    fn low_bits_spread() {
+        // bitstate store indexes by low bits: check they vary
+        let mut seen = FxHashSet::default();
+        for i in 0u64..4096 {
+            seen.insert(hash_bytes(&i.to_le_bytes()) & 0xFFF);
+        }
+        assert!(seen.len() > 2500, "low-bit spread too poor: {}", seen.len());
+    }
+}

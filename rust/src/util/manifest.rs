@@ -1,0 +1,125 @@
+//! Artifact-manifest reader.
+//!
+//! aot.py writes both `manifest.json` (human) and `manifest.tsv` (machine).
+//! We parse the TSV here — a full JSON parser is unnecessary for a flat
+//! record table and the TSV is regenerated in the same `make artifacts`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub units: u32,
+    pub wg: u32,
+    pub ts: u32,
+    pub size: u64,
+    pub dtype: String,
+    pub vmem_bytes: u64,
+}
+
+impl ArtifactEntry {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let tsv = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&tsv)
+            .with_context(|| format!("reading {} (run `make artifacts`)", tsv.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty manifest")?;
+        let cols: Vec<&str> = header.split('\t').collect();
+        let idx = |name: &str| -> Result<usize> {
+            cols.iter()
+                .position(|c| *c == name)
+                .with_context(|| format!("manifest missing column {name}"))
+        };
+        let (c_name, c_file, c_kind) = (idx("name")?, idx("file")?, idx("kind")?);
+        let (c_units, c_wg, c_ts) = (idx("units")?, idx("wg")?, idx("ts")?);
+        let (c_size, c_dtype, c_vmem) = (idx("size")?, idx("dtype")?, idx("vmem_bytes")?);
+        let mut entries = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != cols.len() {
+                bail!("manifest line {}: {} fields, expected {}", lineno + 2, f.len(), cols.len());
+            }
+            let p = |i: usize| -> Result<u64> {
+                f[i].parse::<u64>()
+                    .with_context(|| format!("manifest line {}: bad number {:?}", lineno + 2, f[i]))
+            };
+            entries.push(ArtifactEntry {
+                name: f[c_name].to_string(),
+                file: f[c_file].to_string(),
+                kind: f[c_kind].to_string(),
+                units: p(c_units)? as u32,
+                wg: p(c_wg)? as u32,
+                ts: p(c_ts)? as u32,
+                size: p(c_size)?,
+                dtype: f[c_dtype].to_string(),
+                vmem_bytes: p(c_vmem)?,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tfile\tkind\tunits\twg\tts\tsize\tdtype\tvmem_bytes\n\
+        min_small\tmin_small.hlo.txt\tmin_device\t4\t4\t4\t64\ti32\t84\n\
+        min_u64_wg64_ts1024\tmin_u64_wg64_ts1024.hlo.txt\tmin_device\t64\t64\t1024\t4194304\ti32\t262404\n";
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("min_small").unwrap();
+        assert_eq!((e.units, e.wg, e.ts, e.size), (4, 4, 4, 64));
+        assert_eq!(e.path(&m.dir), PathBuf::from("/tmp/a/min_small.hlo.txt"));
+        assert_eq!(m.of_kind("min_device").count(), 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let bad = "name\tfile\tkind\tunits\twg\tts\tsize\tdtype\tvmem_bytes\nx\ty\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_column() {
+        let bad = "name\tfile\nx\ty\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_number() {
+        let bad = "name\tfile\tkind\tunits\twg\tts\tsize\tdtype\tvmem_bytes\n\
+                   a\tb\tc\tNaN\t1\t1\t1\ti32\t1\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Support utilities: deterministic RNG, fast hashing, CLI/bench/property
+//! harnesses (the heavyweight ecosystem crates are unavailable offline),
+//! human formatting, and the artifact manifest reader.
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod hash;
+pub mod manifest;
+pub mod prop;
+pub mod rng;

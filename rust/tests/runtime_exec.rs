@@ -1,0 +1,61 @@
+//! PJRT runtime integration — requires `make artifacts` (tests skip with a
+//! notice when the artifacts are absent, e.g. in a docs-only checkout).
+
+use mcautotune::opencl::{gen_data, run_sweep};
+use mcautotune::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&dir).expect("engine"))
+}
+
+#[test]
+fn engine_loads_manifest_and_platform() {
+    let Some(eng) = engine() else { return };
+    assert!(eng.manifest().entries.len() >= 3);
+    assert_eq!(eng.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn small_kernel_result_matches_host_min_many_seeds() {
+    let Some(mut eng) = engine() else { return };
+    let n = eng.manifest().find("min_device_small").unwrap().size as usize;
+    for seed in 0..16u64 {
+        let data = gen_data(n, seed);
+        let out = eng.run_min("min_device_small", &data).unwrap();
+        assert_eq!(out.global_min, *data.iter().min().unwrap(), "seed {}", seed);
+        // partials pointwise: workgroup g covers data[g*16..(g+1)*16]
+        for (g, &p) in out.partials.iter().enumerate() {
+            let lo = g * (n / out.partials.len());
+            let hi = lo + n / out.partials.len();
+            assert_eq!(p, *data[lo..hi].iter().min().unwrap());
+        }
+    }
+}
+
+#[test]
+fn sweep_covers_all_twelve_configs_and_verifies() {
+    let Some(mut eng) = engine() else { return };
+    let rep = run_sweep(&mut eng, 1, 7).unwrap();
+    assert_eq!(rep.rows.len(), 12);
+    assert!(rep.rows.iter().all(|r| r.correct));
+    // the sweep must vary WG at fixed global size and TS at fixed WG
+    let wgs: std::collections::HashSet<u32> = rep.rows.iter().map(|r| r.wg).collect();
+    let tss: std::collections::HashSet<u32> = rep.rows.iter().map(|r| r.ts).collect();
+    assert!(wgs.len() >= 4);
+    assert!(tss.len() >= 4);
+}
+
+#[test]
+fn abstract_artifact_runs() {
+    let Some(mut eng) = engine() else { return };
+    let e = eng.manifest().find("abstract_small").unwrap().clone();
+    let data: Vec<f32> = (0..e.size).map(|i| (i % 17) as f32 * 0.5).collect();
+    let out = eng.run_abstract("abstract_small", &data).unwrap();
+    assert_eq!(out.len(), e.wg as usize);
+    assert!(out.iter().all(|v| v.is_finite()));
+}

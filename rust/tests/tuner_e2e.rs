@@ -1,0 +1,91 @@
+//! End-to-end tuner behaviour: bisection iteration structure, swarm-search
+//! stopping criterion, and the report drivers.
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+use mcautotune::report::{table1, table3, Table1Opts};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{bisection, swarm_search};
+use std::time::Duration;
+
+#[test]
+fn bisection_iteration_count_is_logarithmic() {
+    let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let r = bisection(&m, &CheckOptions::default(), 1 << 20).unwrap();
+    // ~log2(range) + establishment calls; far fewer than linear scan
+    assert!(r.iterations.len() <= 40, "got {} iterations", r.iterations.len());
+    // every iteration with cex carries T >= t_min; every 'proved' < t_min
+    for it in &r.iterations {
+        if it.cex_found {
+            assert!(it.t >= r.t_min, "cex at T={} below t_min={}", it.t, r.t_min);
+        } else {
+            assert!(it.t < r.t_min, "proved at T={} not below t_min={}", it.t, r.t_min);
+        }
+    }
+}
+
+#[test]
+fn bisection_invariant_under_t_ini_choice() {
+    let m = MinModel::paper(64, 4).unwrap();
+    let r1 = bisection(&m, &CheckOptions::default(), 50).unwrap();
+    let r2 = bisection(&m, &CheckOptions::default(), 5_000).unwrap();
+    let r3 = bisection(&m, &CheckOptions::default(), 1).unwrap();
+    assert_eq!(r1.t_min, r2.t_min);
+    assert_eq!(r2.t_min, r3.t_min);
+}
+
+#[test]
+fn swarm_search_stops_after_unproductive_round() {
+    let m = MinModel::paper(64, 4).unwrap();
+    let cfg = SwarmConfig {
+        workers: 2,
+        time_budget: Duration::from_secs(5),
+        ..Default::default()
+    };
+    let r = swarm_search(&m, &cfg).unwrap();
+    // final round must have found nothing better (that's why it stopped)
+    let last = r.iterations.last().unwrap();
+    assert!(
+        last.best_time.is_none() || last.best_time.unwrap() >= r.t_min,
+        "search stopped while still improving"
+    );
+}
+
+#[test]
+fn table1_rows_internally_consistent() {
+    let opts = Table1Opts {
+        sizes: vec![8, 16, 32],
+        max_promela_size: 0,
+        max_exhaustive_size: 32,
+        swarm: SwarmConfig {
+            workers: 2,
+            time_budget: Duration::from_millis(400),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (rows, _) = table1(&opts).unwrap();
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert!(r.model_time > 0);
+        assert!(r.optimality > 0.0 && r.optimality <= 1.0);
+        assert!(r.wg.is_power_of_two() && r.ts.is_power_of_two());
+        assert!(r.mem_swarm > 0);
+    }
+    // larger input → larger optimal model time (monotone workload)
+    assert!(rows[0].model_time < rows[1].model_time);
+    assert!(rows[1].model_time < rows[2].model_time);
+}
+
+#[test]
+fn table3_reproduces_paper_shape() {
+    // WG dominates TS: within each group the best row never has the
+    // smallest WG available unless it is forced (paper §7.3)
+    let (rows, _) = table3(&[(64, 128), (64, 256)], 3, 3).unwrap();
+    for g in rows.chunks(3) {
+        assert!(g[0].model_time <= g[1].model_time);
+        assert!(g[1].model_time <= g[2].model_time);
+        // the best configuration uses at least 4 PEs worth of WG
+        assert!(g[0].wg >= 4, "best WG {} suspiciously small", g[0].wg);
+    }
+}
