@@ -1,0 +1,51 @@
+//! BATCH TUNING DRIVER — the coordinator layer end to end.
+//!
+//! Parses a multi-job spec (several input sizes and both search methods),
+//! runs it through the sharded work-stealing batch runner with a
+//! persistent result cache, then runs the *same* batch again to show
+//! every job served from the cache with zero additional states explored.
+//!
+//! Run: `cargo run --release --example batch_tune`
+
+use mcautotune::coordinator::{run_batch, BatchOptions, ResultCache, TuningJob};
+use mcautotune::swarm::SwarmConfig;
+use std::time::Duration;
+
+const SPEC: &str = "\
+# the paper's Minimum model at three sizes, plus an abstract-model job
+job minimum size=64 np=4 gmt=3 shards=4
+job minimum size=128 np=4 gmt=3 shards=4
+job minimum size=64 np=64 gmt=3 name=min64-np64
+job abstract size=32 gmt=10 shards=2
+";
+
+fn main() -> mcautotune::util::error::Result<()> {
+    let cache_path = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_example_{}.json", std::process::id()));
+    std::fs::remove_file(&cache_path).ok();
+
+    let jobs = TuningJob::parse_spec(SPEC)?;
+    let mut opts = BatchOptions { workers: 4, ..BatchOptions::default() };
+    opts.swarm = SwarmConfig { workers: 2, time_budget: Duration::from_secs(5), ..SwarmConfig::default() };
+
+    println!("[batch] {} jobs -> sharded work-stealing queue ({} workers)", jobs.len(), opts.workers);
+    let mut cache = ResultCache::open(&cache_path)?;
+    let cold = run_batch(&jobs, &opts, &mut cache)?;
+    print!("{}", cold.render());
+
+    // every optimum must equal the model's closed-form ground truth
+    for o in &cold.outcomes {
+        assert_eq!(o.result.t_min, o.job.optimum_time()? as i64, "job {}", o.job.name);
+    }
+
+    println!("\n[batch] second invocation against the persisted cache ({}):", cache_path.display());
+    let mut cache = ResultCache::open(&cache_path)?;
+    let warm = run_batch(&jobs, &opts, &mut cache)?;
+    print!("{}", warm.render());
+    mcautotune::ensure!(warm.cache_hits == jobs.len() as u64, "warm run must hit on every job");
+    mcautotune::ensure!(warm.total_states() == 0, "warm run must explore zero states");
+
+    std::fs::remove_file(&cache_path).ok();
+    println!("\nBATCH OK: {} jobs tuned once, replayed from the cache for free.", jobs.len());
+    Ok(())
+}

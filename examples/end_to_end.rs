@@ -21,7 +21,7 @@ use mcautotune::swarm::SwarmConfig;
 use mcautotune::tuner::{tune, Method};
 use mcautotune::util::fmt::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mcautotune::util::error::Result<()> {
     // ---- 1. tune the model (no hardware involved) ---------------------
     // Model a device with 64 PEs per unit (the artifact sweep's WG range).
     let model = MinModel::paper(1024, 64)?;
@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
             r.global_size, r.wg, r.ts, r.best_ms, r.bandwidth_gbs, r.correct
         );
     }
-    anyhow::ensure!(sweep.rows.iter().all(|r| r.correct), "kernel results must be correct");
+    mcautotune::ensure!(sweep.rows.iter().all(|r| r.correct), "kernel results must be correct");
 
     // ---- 3. compare model prediction vs measurement --------------------
     // paper §7.3 finding: WG drives performance, TS does not. Check the

@@ -9,7 +9,7 @@ use mcautotune::checker::{check, CheckOptions};
 use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::promela::{templates, PromelaSystem};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mcautotune::util::error::Result<()> {
     let path = std::env::args().nth(1);
     let src = match &path {
         Some(p) => std::fs::read_to_string(p)?,

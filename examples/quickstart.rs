@@ -8,7 +8,7 @@ use mcautotune::platform::MinModel;
 use mcautotune::swarm::SwarmConfig;
 use mcautotune::tuner::{tune, Method};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mcautotune::util::error::Result<()> {
     // Step 1 (paper §2): the model — Minimum problem, 256 elements on a
     // unit with 64 processing elements (the paper's Table-3 setup).
     let model = MinModel::paper(256, 64)?;

@@ -12,7 +12,7 @@ use mcautotune::tuner::{tune, Method};
 use mcautotune::util::fmt::human_bytes;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mcautotune::util::error::Result<()> {
     // Tick granularity inflates the state space like the paper's
     // tick-faithful Promela model.
     let model = AbstractModel::new(1024, PlatformConfig::default(), Granularity::Tick)?;

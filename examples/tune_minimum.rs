@@ -11,7 +11,7 @@ use mcautotune::promela::{templates, PromelaSystem};
 use mcautotune::swarm::SwarmConfig;
 use mcautotune::tuner::{extract_sorted, tune, Method};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mcautotune::util::error::Result<()> {
     let (size, np, gmt) = (64u32, 4u32, 3u32);
 
     // Engine 1: the native transition system (checker hot path)

@@ -1,0 +1,60 @@
+//! Coordinator benchmarks: batch throughput vs worker count, sharding
+//! overhead vs single-shot tuning, the pure cache-hit path, and raw
+//! work-stealing queue overhead.
+
+use mcautotune::coordinator::{run_batch, BatchOptions, JobQueue, ModelKind, ResultCache, TuningJob};
+use mcautotune::util::bench::Bencher;
+
+fn bench_jobs() -> Vec<TuningJob> {
+    let mut jobs = Vec::new();
+    for size in [16u32, 32, 64] {
+        let mut j = TuningJob::new(ModelKind::Minimum, size);
+        j.shards = 4;
+        jobs.push(j);
+    }
+    let mut j = TuningJob::new(ModelKind::Abstract, 32);
+    j.shards = 4;
+    jobs.push(j);
+    jobs
+}
+
+fn main() {
+    let mut b = Bencher::new("coordinator");
+    let jobs = bench_jobs();
+
+    // batch scaling: same job set, 1 vs 4 queue workers (cold cache)
+    for workers in [1u32, 4] {
+        let opts = BatchOptions { workers, ..BatchOptions::default() };
+        b.bench(&format!("batch-cold/{}-jobs/workers{}", jobs.len(), workers), || {
+            let mut cache = ResultCache::in_memory();
+            run_batch(&jobs, &opts, &mut cache).unwrap().total_states()
+        });
+    }
+
+    // sharding overhead: 1 shard vs 4 shards at fixed worker count
+    for shards in [1u32, 4] {
+        let mut sharded = bench_jobs();
+        for j in &mut sharded {
+            j.shards = shards;
+        }
+        let opts = BatchOptions { workers: 4, ..BatchOptions::default() };
+        b.bench(&format!("batch-cold/shards{}", shards), || {
+            let mut cache = ResultCache::in_memory();
+            run_batch(&sharded, &opts, &mut cache).unwrap().total_states()
+        });
+    }
+
+    // the cache-hit path: every job served without verification
+    let opts = BatchOptions::default();
+    let mut warm_cache = ResultCache::in_memory();
+    run_batch(&jobs, &opts, &mut warm_cache).unwrap();
+    b.bench_elems("batch-warm-cache-hits", jobs.len() as u64, || {
+        run_batch(&jobs, &opts, &mut warm_cache).unwrap().cache_hits
+    });
+
+    // raw queue overhead on no-op tasks
+    let q = JobQueue::new(4);
+    b.bench_elems("queue/noop-tasks", 10_000, || {
+        q.run((0..10_000u32).collect(), |x| x).len()
+    });
+}

@@ -10,7 +10,7 @@
 use super::store::{StoreKind, VisitedStore};
 use crate::model::{SafetyLtl, Trail, TransitionSystem, Violation};
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,7 +94,7 @@ impl<S> CheckReport<S> {
         } else if self.exhausted {
             Ok(true)
         } else {
-            anyhow::bail!("search inconclusive: no violation found but state space not exhausted ({:?})", self.stats.abort)
+            crate::bail!("search inconclusive: no violation found but state space not exhausted ({:?})", self.stats.abort)
         }
     }
 }

@@ -1,0 +1,265 @@
+//! Content-addressed, persistent tuning-result cache.
+//!
+//! Entries are keyed by [`crate::util::hash::hash_bytes`] of a job's
+//! canonical description string — (model, platform config,
+//! property/method), see [`super::job::TuningJob::cache_desc`] — and
+//! store the tuned optimum. The cache persists as JSON through
+//! [`crate::util::manifest::Json`], so repeated or overlapping batch jobs
+//! (and repeated `mcautotune batch` / `tune --cache` invocations) skip
+//! verification entirely: a hit reports zero states explored.
+//!
+//! Hash collisions cannot poison results: a stored entry only counts as a
+//! hit when its full description string matches the lookup's.
+
+use crate::tuner::{CachedTune, Method, TuneCache, TuneResult};
+use crate::util::error::{bail, Context, Result};
+use crate::util::hash::{hash_bytes, FxHashMap};
+use crate::util::manifest::Json;
+use std::path::{Path, PathBuf};
+
+/// One persisted tuning result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheEntry {
+    /// canonical job description — the preimage of the content address
+    pub desc: String,
+    pub wg: u32,
+    pub ts: u32,
+    pub t_min: i64,
+    /// transitions on the original witnessing trail
+    pub steps: usize,
+    /// search method of the original run ("exhaustive" | "swarm")
+    pub method: String,
+    /// states explored by the original cold run (reporting only: the
+    /// verification work one hit saves)
+    pub cold_states: u64,
+}
+
+/// The cache: an in-memory map with optional JSON file backing.
+#[derive(Debug, Default)]
+pub struct ResultCache {
+    path: Option<PathBuf>,
+    entries: FxHashMap<u64, CacheEntry>,
+    /// lookup hits since this cache was opened
+    pub hits: u64,
+    /// lookup misses since this cache was opened
+    pub misses: u64,
+}
+
+impl ResultCache {
+    /// A cache with no file backing ([`save`](Self::save) is a no-op).
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    /// Open a persistent cache; a missing file is an empty cache.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut cache = Self { path: Some(path.to_path_buf()), ..Self::default() };
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading result cache {}", path.display()))?;
+            cache
+                .load_json(&text)
+                .with_context(|| format!("parsing result cache {}", path.display()))?;
+        }
+        Ok(cache)
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate entries in unspecified order.
+    pub fn entries(&self) -> impl Iterator<Item = &CacheEntry> {
+        self.entries.values()
+    }
+
+    fn load_json(&mut self, text: &str) -> Result<()> {
+        let doc = Json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_i64).context("missing version")?;
+        if version != 1 {
+            bail!("unsupported result-cache version {}", version);
+        }
+        let entries = doc.get("entries").and_then(Json::as_arr).context("missing entries")?;
+        for e in entries {
+            let string = |key: &str| -> Result<String> {
+                e.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("entry missing string field `{}`", key))
+            };
+            let int = |key: &str| -> Result<i64> {
+                e.get(key)
+                    .and_then(Json::as_i64)
+                    .with_context(|| format!("entry missing integer field `{}`", key))
+            };
+            let entry = CacheEntry {
+                desc: string("desc")?,
+                wg: int("wg")? as u32,
+                ts: int("ts")? as u32,
+                t_min: int("t_min")?,
+                steps: int("steps")? as usize,
+                method: string("method")?,
+                cold_states: int("cold_states")? as u64,
+            };
+            self.entries.insert(hash_bytes(entry.desc.as_bytes()), entry);
+        }
+        Ok(())
+    }
+
+    /// Serialize to the persisted JSON form (entries sorted by
+    /// description, so files are deterministic and diff-friendly).
+    pub fn to_json(&self) -> String {
+        let mut entries: Vec<&CacheEntry> = self.entries.values().collect();
+        entries.sort_by(|a, b| a.desc.cmp(&b.desc));
+        let entries = entries
+            .into_iter()
+            .map(|e| {
+                Json::Obj(vec![
+                    ("key".into(), Json::Str(format!("{:016x}", hash_bytes(e.desc.as_bytes())))),
+                    ("desc".into(), Json::Str(e.desc.clone())),
+                    ("wg".into(), Json::Int(e.wg as i64)),
+                    ("ts".into(), Json::Int(e.ts as i64)),
+                    ("t_min".into(), Json::Int(e.t_min)),
+                    ("steps".into(), Json::Int(e.steps as i64)),
+                    ("method".into(), Json::Str(e.method.clone())),
+                    ("cold_states".into(), Json::Int(e.cold_states as i64)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("version".into(), Json::Int(1)),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+        .render()
+    }
+
+    /// Write back to the backing file (no-op for in-memory caches).
+    pub fn save(&self) -> Result<()> {
+        if let Some(path) = &self.path {
+            std::fs::write(path, self.to_json())
+                .with_context(|| format!("writing result cache {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+impl TuneCache for ResultCache {
+    fn lookup(&mut self, desc: &str) -> Option<CachedTune> {
+        let key = hash_bytes(desc.as_bytes());
+        match self.entries.get(&key) {
+            Some(e) if e.desc == desc => {
+                self.hits += 1;
+                Some(CachedTune { wg: e.wg, ts: e.ts, t_min: e.t_min, steps: e.steps })
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn store(&mut self, desc: &str, result: &TuneResult) {
+        let entry = CacheEntry {
+            desc: desc.to_string(),
+            wg: result.optimal.wg,
+            ts: result.optimal.ts,
+            t_min: result.t_min,
+            steps: result.optimal.steps,
+            method: match result.method {
+                Method::Exhaustive => "exhaustive",
+                Method::Swarm => "swarm",
+            }
+            .to_string(),
+            cold_states: result.states_explored,
+        };
+        self.entries.insert(hash_bytes(desc.as_bytes()), entry);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::{cached_result, Method};
+
+    fn fake_result(wg: u32, ts: u32, t_min: i64) -> TuneResult {
+        cached_result(
+            Method::Exhaustive,
+            CachedTune { wg, ts, t_min, steps: 9 },
+            "synthetic",
+        )
+    }
+
+    fn temp_file(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mcat_cache_{}_{}.json", tag, std::process::id()))
+    }
+
+    #[test]
+    fn store_then_lookup_hits() {
+        let mut c = ResultCache::in_memory();
+        assert!(c.is_empty());
+        assert!(c.lookup("job-a").is_none());
+        c.store("job-a", &fake_result(4, 2, 44));
+        let hit = c.lookup("job-a").unwrap();
+        assert_eq!((hit.wg, hit.ts, hit.t_min, hit.steps), (4, 2, 44, 9));
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_via_file() {
+        let path = temp_file("roundtrip");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.store("model=minimum size=64", &fake_result(8, 2, 36));
+            c.store("model=abstract size=32", &fake_result(4, 4, 528));
+            c.save().unwrap();
+        }
+        let mut c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.len(), 2);
+        let hit = c.lookup("model=minimum size=64").unwrap();
+        assert_eq!((hit.wg, hit.ts, hit.t_min), (8, 2, 36));
+        assert!(c.lookup("model=minimum size=128").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deterministic_serialization() {
+        let mut a = ResultCache::in_memory();
+        let mut b = ResultCache::in_memory();
+        a.store("x", &fake_result(2, 2, 10));
+        a.store("y", &fake_result(4, 4, 20));
+        b.store("y", &fake_result(4, 4, 20));
+        b.store("x", &fake_result(2, 2, 10));
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error_not_a_panic() {
+        let path = temp_file("corrupt");
+        std::fs::write(&path, "{\"version\":1,\"entries\":[{\"desc\":42}]}").unwrap();
+        assert!(ResultCache::open(&path).is_err());
+        std::fs::write(&path, "{\"version\":2,\"entries\":[]}").unwrap();
+        assert!(ResultCache::open(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(ResultCache::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let mut c = ResultCache::in_memory();
+        c.store("k", &fake_result(2, 2, 5));
+        c.save().unwrap();
+        assert!(c.path().is_none());
+        assert_eq!(c.entries().count(), 1);
+    }
+}

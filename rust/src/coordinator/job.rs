@@ -1,0 +1,395 @@
+//! Batch tuning-job specifications.
+//!
+//! A [`TuningJob`] names everything that determines a tuning result —
+//! model kind, input size, platform configuration, transition
+//! granularity, search method — plus the sharding degree (an execution
+//! knob that does *not* affect the result and is therefore excluded from
+//! the cache key). Jobs are parsed from a plain-text spec file, one job
+//! per line:
+//!
+//! ```text
+//! # three jobs; key=value pairs in any order after the model kind
+//! job minimum size=64 np=4 gmt=3 method=exhaustive shards=4
+//! job minimum size=128 np=4 gmt=3 method=swarm name=big-sweep
+//! job abstract size=32 gmt=10 gran=phase
+//! ```
+
+use crate::model::TransitionSystem;
+use crate::platform::abstract_model::AbsState;
+use crate::platform::min_model::MinState;
+use crate::platform::{AbstractModel, DataInit, Granularity, MinModel, PlatformConfig};
+use crate::tuner::Method;
+use crate::util::error::{bail, Context, Result};
+
+/// Which of the paper's models a job tunes (native engines only; the
+/// Promela front end stays on the single-shot `verify`/`tune` path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Abstract,
+    Minimum,
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ModelKind::Abstract => "abstract",
+            ModelKind::Minimum => "minimum",
+        })
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "abstract" => Ok(ModelKind::Abstract),
+            "minimum" => Ok(ModelKind::Minimum),
+            other => bail!("unknown model kind `{}` (abstract | minimum)", other),
+        }
+    }
+}
+
+/// One batch tuning job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TuningJob {
+    pub name: String,
+    pub model: ModelKind,
+    pub size: u32,
+    pub plat: PlatformConfig,
+    pub granularity: Granularity,
+    pub method: Method,
+    /// parameter-space shards this job is split into; 0 = "use the batch
+    /// runner's default" (see `main.rs batch --shards`)
+    pub shards: u32,
+}
+
+impl TuningJob {
+    /// A job with the paper's defaults for `model` (Table-1 platform for
+    /// the abstract model, the GMT=3 Table-3 calibration for Minimum).
+    pub fn new(model: ModelKind, size: u32) -> Self {
+        let plat = match model {
+            ModelKind::Abstract => PlatformConfig::default(),
+            ModelKind::Minimum => PlatformConfig { gmt: 3, ..PlatformConfig::default() },
+        };
+        Self {
+            name: format!("{}-{}", model, size),
+            model,
+            size,
+            plat,
+            granularity: Granularity::Phase,
+            method: Method::Exhaustive,
+            shards: 1,
+        }
+    }
+
+    /// Canonical cache description: everything that determines the result
+    /// and nothing that does not (worker/shard counts are excluded, so a
+    /// sharded run and a single-shot run share cache entries).
+    ///
+    /// Checker store kind and state/memory budgets are deliberately *not*
+    /// part of the key for `Method::Exhaustive`: a bisection that
+    /// completes is exact regardless of them — any lossy or truncated
+    /// `Cex(T)` query fails `CheckReport::verdict` and errors out instead
+    /// of returning, so no approximate exhaustive result can ever reach
+    /// the cache. Swarm results *are* configuration-dependent; use
+    /// [`cache_desc_with`](Self::cache_desc_with) to key those.
+    pub fn cache_desc(&self) -> String {
+        format!(
+            "model={} size={} nd={} nu={} np={} gmt={} gran={} method={} prop=over_time",
+            self.model,
+            self.size,
+            self.plat.nd,
+            self.plat.nu,
+            self.plat.np,
+            self.plat.gmt,
+            match self.granularity {
+                Granularity::Tick => "tick",
+                Granularity::Phase => "phase",
+            },
+            match self.method {
+                Method::Exhaustive => "exhaustive",
+                Method::Swarm => "swarm",
+            },
+        )
+    }
+
+    /// [`cache_desc`](Self::cache_desc), plus the swarm configuration for
+    /// `Method::Swarm` jobs. The swarm is probabilistic: its best-found
+    /// optimum depends on worker count, seed, per-worker store size,
+    /// depth bound and time budget, so those join the key — a swarm hit
+    /// is only exact w.r.t. the configuration that produced it.
+    /// Exhaustive jobs ignore `swarm` entirely and keep the plain key.
+    pub fn cache_desc_with(&self, swarm: &crate::swarm::SwarmConfig) -> String {
+        match self.method {
+            Method::Exhaustive => self.cache_desc(),
+            Method::Swarm => format!(
+                "{} swarm=w{}:s{:#x}:b{}:h{}:d{}:t{}ms:e{}",
+                self.cache_desc(),
+                swarm.workers,
+                swarm.seed,
+                swarm.log2_bits,
+                swarm.hashes,
+                swarm.max_depth,
+                swarm.time_budget.as_millis(),
+                swarm.max_errors_per_worker,
+            ),
+        }
+    }
+
+    /// Content address of the job under [`crate::util::hash`].
+    pub fn key(&self) -> u64 {
+        crate::util::hash::hash_bytes(self.cache_desc().as_bytes())
+    }
+
+    /// Construct the job's native transition system.
+    pub fn build(&self) -> Result<JobModel> {
+        match self.model {
+            ModelKind::Abstract => Ok(JobModel::Abs(AbstractModel::new(
+                self.size,
+                self.plat,
+                self.granularity,
+            )?)),
+            ModelKind::Minimum => Ok(JobModel::Min(MinModel::new(
+                self.size,
+                self.plat.np,
+                self.plat.gmt,
+                DataInit::Descending,
+                self.granularity,
+            )?)),
+        }
+    }
+
+    /// Ground-truth optimal model time (for tests and report checks).
+    pub fn optimum_time(&self) -> Result<u64> {
+        Ok(match self.build()? {
+            JobModel::Abs(m) => m.optimum().0,
+            JobModel::Min(m) => m.optimum().0,
+        })
+    }
+
+    /// Parse a spec file (see the module docs for the format). Jobs that
+    /// do not set `shards=` get `shards = 0`, meaning "runner default".
+    pub fn parse_spec(text: &str) -> Result<Vec<TuningJob>> {
+        let mut jobs = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tokens = line.split_whitespace();
+            let head = tokens.next().expect("non-empty line has a token");
+            if head != "job" {
+                bail!("spec line {}: expected `job <model> [k=v...]`, got `{}`", lineno + 1, line);
+            }
+            let kind: ModelKind = tokens
+                .next()
+                .with_context(|| format!("spec line {}: missing model kind", lineno + 1))?
+                .parse()
+                .with_context(|| format!("spec line {}", lineno + 1))?;
+            let mut job = TuningJob::new(kind, 64);
+            job.shards = 0;
+            let mut named = false;
+            for tok in tokens {
+                let (key, value) = tok
+                    .split_once('=')
+                    .with_context(|| format!("spec line {}: `{}` is not key=value", lineno + 1, tok))?;
+                let int = |what: &str| -> Result<u32> {
+                    value
+                        .parse::<u32>()
+                        .with_context(|| format!("spec line {}: bad {} `{}`", lineno + 1, what, value))
+                };
+                match key {
+                    "name" => {
+                        job.name = value.to_string();
+                        named = true;
+                    }
+                    "size" => job.size = int("size")?,
+                    "np" => job.plat.np = int("np")?,
+                    "nd" => job.plat.nd = int("nd")?,
+                    "nu" => job.plat.nu = int("nu")?,
+                    "gmt" => job.plat.gmt = int("gmt")?,
+                    "shards" => job.shards = int("shards")?,
+                    "gran" | "granularity" => {
+                        job.granularity = match value {
+                            "tick" => Granularity::Tick,
+                            "phase" => Granularity::Phase,
+                            g => bail!("spec line {}: unknown granularity `{}`", lineno + 1, g),
+                        }
+                    }
+                    "method" => {
+                        job.method = value
+                            .parse()
+                            .with_context(|| format!("spec line {}", lineno + 1))?
+                    }
+                    other => bail!("spec line {}: unknown key `{}`", lineno + 1, other),
+                }
+            }
+            if !named {
+                job.name = format!("{}-{}", job.model, job.size);
+            }
+            // fail fast on invalid sizes/platforms instead of mid-batch
+            job.build().with_context(|| format!("spec line {}: invalid job", lineno + 1))?;
+            jobs.push(job);
+        }
+        Ok(jobs)
+    }
+}
+
+/// A constructed native model for a job. The [`TransitionSystem`] impl
+/// dispatches uniformly over both kinds for cold paths (inspection,
+/// tests); hot paths should match on the variant and run the concrete
+/// model directly — the uniform interface costs a temporary successor
+/// buffer per expanded state, which the checker's reused-`out` contract
+/// otherwise avoids (see `run_batch`'s phase 2).
+pub enum JobModel {
+    Abs(AbstractModel),
+    Min(MinModel),
+}
+
+/// State of a [`JobModel`] — tags the underlying model's state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    Abs(AbsState),
+    Min(MinState),
+}
+
+impl TransitionSystem for JobModel {
+    type State = JobState;
+
+    fn initial_states(&self) -> Vec<JobState> {
+        match self {
+            JobModel::Abs(m) => m.initial_states().into_iter().map(JobState::Abs).collect(),
+            JobModel::Min(m) => m.initial_states().into_iter().map(JobState::Min).collect(),
+        }
+    }
+
+    fn successors(&self, s: &JobState, out: &mut Vec<JobState>) {
+        out.clear();
+        match (self, s) {
+            (JobModel::Abs(m), JobState::Abs(s)) => {
+                let mut buf = Vec::new();
+                m.successors(s, &mut buf);
+                out.extend(buf.into_iter().map(JobState::Abs));
+            }
+            (JobModel::Min(m), JobState::Min(s)) => {
+                let mut buf = Vec::new();
+                m.successors(s, &mut buf);
+                out.extend(buf.into_iter().map(JobState::Min));
+            }
+            _ => unreachable!("state kind does not match model kind"),
+        }
+    }
+
+    fn encode(&self, s: &JobState, out: &mut Vec<u8>) {
+        match (self, s) {
+            (JobModel::Abs(m), JobState::Abs(s)) => m.encode(s, out),
+            (JobModel::Min(m), JobState::Min(s)) => m.encode(s, out),
+            _ => unreachable!("state kind does not match model kind"),
+        }
+    }
+
+    fn eval_var(&self, s: &JobState, name: &str) -> Option<i64> {
+        match (self, s) {
+            (JobModel::Abs(m), JobState::Abs(s)) => m.eval_var(s, name),
+            (JobModel::Min(m), JobState::Min(s)) => m.eval_var(s, name),
+            _ => unreachable!("state kind does not match model kind"),
+        }
+    }
+
+    fn describe(&self, s: &JobState) -> String {
+        match (self, s) {
+            (JobModel::Abs(m), JobState::Abs(s)) => m.describe(s),
+            (JobModel::Min(m), JobState::Min(s)) => m.describe(s),
+            _ => unreachable!("state kind does not match model kind"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_jobs_with_defaults_and_overrides() {
+        let jobs = TuningJob::parse_spec(
+            "# comment\n\
+             \n\
+             job minimum size=64 np=4 gmt=3 shards=4\n\
+             job abstract size=32 method=swarm name=sw32\n",
+        )
+        .unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].name, "minimum-64");
+        assert_eq!(jobs[0].shards, 4);
+        assert_eq!(jobs[0].plat.gmt, 3);
+        assert_eq!(jobs[1].name, "sw32");
+        assert_eq!(jobs[1].method, Method::Swarm);
+        assert_eq!(jobs[1].shards, 0, "unset shards defer to the runner default");
+        assert_eq!(jobs[1].plat.gmt, 10, "abstract defaults to the Table-1 GMT");
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(TuningJob::parse_spec("tune minimum\n").is_err());
+        assert!(TuningJob::parse_spec("job warp size=64\n").is_err());
+        assert!(TuningJob::parse_spec("job minimum size\n").is_err());
+        assert!(TuningJob::parse_spec("job minimum size=twelve\n").is_err());
+        assert!(TuningJob::parse_spec("job minimum color=red\n").is_err());
+        assert!(TuningJob::parse_spec("job minimum size=12\n").is_err(), "non-pow2 size");
+    }
+
+    #[test]
+    fn cache_desc_excludes_sharding_and_name() {
+        let mut a = TuningJob::new(ModelKind::Minimum, 64);
+        let mut b = a.clone();
+        b.shards = 8;
+        b.name = "other".into();
+        assert_eq!(a.cache_desc(), b.cache_desc());
+        assert_eq!(a.key(), b.key());
+        a.method = Method::Swarm;
+        assert_ne!(a.cache_desc(), b.cache_desc());
+        assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn swarm_cache_key_tracks_swarm_config_but_exhaustive_does_not() {
+        use crate::swarm::SwarmConfig;
+        let mut job = TuningJob::new(ModelKind::Minimum, 64);
+        let a = SwarmConfig::default();
+        let b = SwarmConfig { seed: 0xBEEF, ..SwarmConfig::default() };
+        // exhaustive results are exact: the swarm config is irrelevant
+        assert_eq!(job.cache_desc_with(&a), job.cache_desc());
+        assert_eq!(job.cache_desc_with(&a), job.cache_desc_with(&b));
+        // swarm results are configuration-dependent: the config joins the key
+        job.method = Method::Swarm;
+        assert_ne!(job.cache_desc_with(&a), job.cache_desc());
+        assert_ne!(job.cache_desc_with(&a), job.cache_desc_with(&b));
+    }
+
+    #[test]
+    fn job_model_dispatches_both_kinds() {
+        for kind in [ModelKind::Abstract, ModelKind::Minimum] {
+            let m = TuningJob::new(kind, 16).build().unwrap();
+            let inits = m.initial_states();
+            assert_eq!(inits.len(), 1);
+            let mut succs = Vec::new();
+            m.successors(&inits[0], &mut succs);
+            assert!(!succs.is_empty());
+            // after the tuning choice, WG/TS are observable
+            assert!(m.eval_var(&succs[0], "WG").is_some());
+            assert!(m.eval_var(&succs[0], "TS").is_some());
+            let mut enc = Vec::new();
+            m.encode(&succs[0], &mut enc);
+            assert!(!enc.is_empty());
+            assert!(!m.describe(&succs[0]).is_empty());
+        }
+    }
+
+    #[test]
+    fn optimum_time_matches_underlying_model() {
+        let job = TuningJob::new(ModelKind::Minimum, 64);
+        let m = MinModel::paper(64, 4).unwrap();
+        assert_eq!(job.optimum_time().unwrap(), m.optimum().0);
+    }
+}

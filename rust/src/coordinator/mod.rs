@@ -1,1 +1,220 @@
-// paper's L3 coordination contribution
+//! The coordinator — the paper's L3 coordination layer grown into a
+//! batch tuning *service*.
+//!
+//! The paper tunes one kernel for one platform and one input size at a
+//! time. Production auto-tuning workloads are batches: many input sizes,
+//! platform configurations and search methods tuned concurrently, with
+//! results reused across jobs. This module supplies that layer:
+//!
+//! - [`TuningJob`] (in [`job`]) — a declarative job spec (model kind,
+//!   size, platform config, granularity, method, sharding degree),
+//!   parseable from a plain-text spec file;
+//! - [`partition`] / [`ShardModel`] (in [`shard`]) — each job's (WG, TS)
+//!   lattice is split into sub-lattices checked independently and merged,
+//!   generalizing the swarm's diversified-*seed* workers to
+//!   partitioned-*space* workers;
+//! - [`JobQueue`] (in [`queue`]) — a work-stealing runner that executes
+//!   the (job × shard) task set across std threads;
+//! - [`ResultCache`] (in [`cache`]) — a content-addressed result store
+//!   keyed by `util::hash` of the job description, persisted to JSON via
+//!   `util::manifest::Json`, so repeated and overlapping jobs skip
+//!   verification entirely;
+//! - [`BatchReport`] (in [`report`]) — per-job optima plus cache/queue
+//!   statistics, rendered for the `mcautotune batch` subcommand.
+//!
+//! [`run_batch`] composes them: cache lookups first (hits and duplicate
+//! jobs complete immediately), then one task per remaining (job, shard),
+//! then per-job merge + cache write-back.
+
+pub mod cache;
+pub mod job;
+pub mod queue;
+pub mod report;
+pub mod shard;
+
+pub use cache::{CacheEntry, ResultCache};
+pub use job::{JobModel, JobState, ModelKind, TuningJob};
+pub use queue::{JobQueue, QueueStats};
+pub use report::{BatchReport, JobOutcome};
+pub use shard::{merge_results, partition, ShardModel, TuningShard};
+
+use crate::checker::CheckOptions;
+use crate::platform::enumerate_tunings;
+use crate::swarm::SwarmConfig;
+use crate::tuner::{cached_result, tune, TuneCache, TuneResult};
+use crate::util::error::{bail, Context, Result};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batch-wide execution options (per-job knobs live on [`TuningJob`]).
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// queue worker threads
+    pub workers: u32,
+    /// shard count for jobs that left `shards` unset (0)
+    pub default_shards: u32,
+    /// per-shard verification options (store kind, budgets)
+    pub check: CheckOptions,
+    /// per-shard swarm configuration (Method::Swarm jobs)
+    pub swarm: SwarmConfig,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            default_shards: 4,
+            check: CheckOptions::default(),
+            swarm: SwarmConfig::default(),
+        }
+    }
+}
+
+/// Run a batch of tuning jobs: serve cache hits (and within-batch
+/// duplicates) without verifying, shard the rest across the work-stealing
+/// queue, merge per-shard optima, write results back to the cache, and
+/// persist it.
+pub fn run_batch(
+    jobs: &[TuningJob],
+    opts: &BatchOptions,
+    cache: &mut ResultCache,
+) -> Result<BatchReport> {
+    let start = Instant::now();
+    let hits_before = cache.hits;
+    let misses_before = cache.misses;
+
+    // Phase 1: cache pass. Hits complete immediately; overlapping jobs
+    // (same cache description) run once and the rest resolve in phase 3.
+    let mut outcomes: Vec<Option<JobOutcome>> = jobs.iter().map(|_| None).collect();
+    let mut tasks: Vec<(usize, TuningShard)> = Vec::new();
+    let mut shard_counts = vec![0u32; jobs.len()];
+    let mut duplicates: Vec<usize> = Vec::new();
+    let mut submitted: HashMap<String, usize> = HashMap::new();
+    for (ji, job) in jobs.iter().enumerate() {
+        let desc = job.cache_desc_with(&opts.swarm);
+        if let Some(hit) = cache.lookup(&desc) {
+            outcomes[ji] = Some(JobOutcome {
+                job: job.clone(),
+                result: cached_result(job.method, hit, &desc),
+                cached: true,
+                shards: 0,
+                wall: Duration::ZERO,
+            });
+            continue;
+        }
+        if submitted.contains_key(&desc) {
+            duplicates.push(ji);
+            continue;
+        }
+        submitted.insert(desc, ji);
+        let tunings = enumerate_tunings(job.size)
+            .with_context(|| format!("job `{}`", job.name))?;
+        let shards = partition(
+            &tunings,
+            if job.shards == 0 { opts.default_shards } else { job.shards },
+        );
+        if shards.is_empty() {
+            bail!("job `{}` has an empty tuning space", job.name);
+        }
+        shard_counts[ji] = shards.len() as u32;
+        tasks.extend(shards.into_iter().map(|s| (ji, s)));
+    }
+
+    // Phase 2: every (job, shard) task through the work-stealing queue.
+    // Dispatch on the concrete model type so the checker's successor
+    // buffers are reused as designed (JobModel's uniform interface costs
+    // an allocation per expanded state — fine for cold paths, not here).
+    let queue = JobQueue::new(opts.workers);
+    let (shard_results, qstats) = queue.run_stats(tasks, |(ji, shard)| {
+        let job = &jobs[ji];
+        let t0 = Instant::now();
+        let result = (|| -> Result<TuneResult> {
+            match job.build()? {
+                JobModel::Abs(m) => {
+                    tune(&ShardModel { inner: &m, shard }, job.method, &opts.check, &opts.swarm, None)
+                }
+                JobModel::Min(m) => {
+                    tune(&ShardModel { inner: &m, shard }, job.method, &opts.check, &opts.swarm, None)
+                }
+            }
+        })();
+        (ji, t0.elapsed(), result)
+    });
+
+    // Phase 3: merge shards per job, write back to the cache. A failing
+    // shard fails its *job*, not the batch: every other job's result is
+    // still merged, cached and persisted before the error propagates, so
+    // completed verification work is never thrown away.
+    let mut per_job: Vec<Vec<TuneResult>> = jobs.iter().map(|_| Vec::new()).collect();
+    let mut per_job_wall = vec![Duration::ZERO; jobs.len()];
+    let mut failures: Vec<(usize, crate::util::error::Error)> = Vec::new();
+    for (ji, wall, result) in shard_results {
+        match result {
+            Ok(r) => {
+                per_job[ji].push(r);
+                per_job_wall[ji] = per_job_wall[ji].max(wall);
+            }
+            Err(e) => failures.push((ji, e)),
+        }
+    }
+    let mut completed = 0usize;
+    for (ji, parts) in per_job.into_iter().enumerate() {
+        if parts.is_empty() || failures.iter().any(|&(fj, _)| fj == ji) {
+            continue; // cached, duplicate, or failed
+        }
+        let merged = merge_results(parts)?;
+        cache.store(&jobs[ji].cache_desc_with(&opts.swarm), &merged);
+        completed += 1;
+        outcomes[ji] = Some(JobOutcome {
+            job: jobs[ji].clone(),
+            result: merged,
+            cached: false,
+            shards: shard_counts[ji],
+            wall: per_job_wall[ji],
+        });
+    }
+    // overlapping duplicates resolve against the freshly stored results
+    // (a duplicate of a failed job stays unresolved and fails with it)
+    for ji in duplicates {
+        let desc = jobs[ji].cache_desc_with(&opts.swarm);
+        if let Some(hit) = cache.lookup(&desc) {
+            outcomes[ji] = Some(JobOutcome {
+                job: jobs[ji].clone(),
+                result: cached_result(jobs[ji].method, hit, &desc),
+                cached: true,
+                shards: 0,
+                wall: Duration::ZERO,
+            });
+        }
+    }
+    cache.save()?;
+    if let Some((ji, e)) = failures.into_iter().next() {
+        return Err(e.context(format!(
+            "job `{}`: a parameter-space shard failed ({} completed job(s) were still cached)",
+            jobs[ji].name, completed
+        )));
+    }
+
+    Ok(BatchReport {
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| o.expect("every job resolves to an outcome"))
+            .collect(),
+        cache_hits: cache.hits - hits_before,
+        cache_misses: cache.misses - misses_before,
+        stolen_tasks: qstats.stolen,
+        total_elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_options_defaults() {
+        let o = BatchOptions::default();
+        assert_eq!(o.workers, 4);
+        assert_eq!(o.default_shards, 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! Work-stealing job queue on `std::thread` (rayon is unavailable
+//! offline, and the checker's swarm already shows scoped std threads are
+//! all the paper's workloads need).
+//!
+//! Tasks are dealt round-robin across per-worker deques. A worker pops
+//! from the *back* of its own deque (LIFO — the task it was just dealt,
+//! cache-warm) and, when starved, steals from the *front* of another
+//! worker's deque (FIFO — the task that has waited longest). Tasks never
+//! spawn tasks, so "every deque empty" is a sound termination test: no
+//! new work can appear after it holds.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Execution statistics of one [`JobQueue::run_stats`] call.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// tasks executed per worker
+    pub executed: Vec<u64>,
+    /// tasks taken from another worker's deque
+    pub stolen: u64,
+}
+
+/// A fixed-width work-stealing task runner.
+#[derive(Debug, Clone, Copy)]
+pub struct JobQueue {
+    workers: usize,
+}
+
+impl JobQueue {
+    pub fn new(workers: u32) -> Self {
+        Self { workers: workers.max(1) as usize }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task, returning results in task order.
+    pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        self.run_stats(tasks, f).0
+    }
+
+    /// [`run`](Self::run) plus per-worker execution counts and steal
+    /// totals. The worker count is clamped to the task count; a worker
+    /// that panics propagates the panic.
+    pub fn run_stats<T, R, F>(&self, tasks: Vec<T>, f: F) -> (Vec<R>, QueueStats)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return (Vec::new(), QueueStats::default());
+        }
+        let workers = self.workers.min(n);
+        let mut deques: Vec<Mutex<VecDeque<(usize, T)>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            deques[i % workers].get_mut().expect("fresh mutex").push_back((i, t));
+        }
+        let deques = &deques;
+        let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let results = &results;
+        let f = &f;
+
+        let mut stats = QueueStats { executed: vec![0; workers], stolen: 0 };
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let mut executed = 0u64;
+                        let mut stolen = 0u64;
+                        loop {
+                            // own deque first (LIFO), then steal (FIFO)
+                            let mut task = deques[w].lock().expect("queue lock").pop_back();
+                            if task.is_none() {
+                                for v in 0..workers {
+                                    if v == w {
+                                        continue;
+                                    }
+                                    task = deques[v].lock().expect("queue lock").pop_front();
+                                    if task.is_some() {
+                                        stolen += 1;
+                                        break;
+                                    }
+                                }
+                            }
+                            match task {
+                                Some((i, t)) => {
+                                    let r = f(t);
+                                    *results[i].lock().expect("result lock") = Some(r);
+                                    executed += 1;
+                                }
+                                None => break, // every deque empty: done
+                            }
+                        }
+                        (executed, stolen)
+                    })
+                })
+                .collect();
+            for (w, h) in handles.into_iter().enumerate() {
+                let (executed, stolen) = h.join().expect("queue worker panicked");
+                stats.executed[w] = executed;
+                stats.stolen += stolen;
+            }
+        });
+
+        let out = results
+            .iter()
+            .map(|m| m.lock().expect("result lock").take().expect("task result missing"))
+            .collect();
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_task_order() {
+        let q = JobQueue::new(4);
+        let (out, stats) = q.run_stats((0..100u32).collect(), |x| x * x);
+        assert_eq!(out, (0..100u32).map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(stats.executed.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn single_worker_drains_everything() {
+        let q = JobQueue::new(1);
+        let (out, stats) = q.run_stats((0..32i32).collect(), |x| x + 1);
+        assert_eq!(out.len(), 32);
+        assert_eq!(stats.executed, vec![32]);
+        assert_eq!(stats.stolen, 0);
+    }
+
+    #[test]
+    fn imbalanced_tasks_get_stolen() {
+        // worker 0's deque holds all the slow tasks (round-robin over 2
+        // workers with slowness on even indices): stealing must kick in
+        let q = JobQueue::new(2);
+        let (out, stats) = q.run_stats(
+            (0..16usize).collect(),
+            |i| {
+                if i % 2 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                i
+            },
+        );
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+        assert!(stats.stolen > 0, "expected steals, got {:?}", stats);
+    }
+
+    #[test]
+    fn empty_and_oversized_worker_counts() {
+        let q = JobQueue::new(8);
+        let (out, stats) = q.run_stats(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+        assert!(stats.executed.is_empty());
+        // more workers than tasks: clamped, still correct
+        let (out, stats) = q.run_stats(vec![1u32, 2], |x| x * 10);
+        assert_eq!(out, vec![10, 20]);
+        assert_eq!(stats.executed.len(), 2);
+    }
+
+    #[test]
+    fn zero_requested_workers_clamps_to_one() {
+        let q = JobQueue::new(0);
+        assert_eq!(q.workers(), 1);
+        assert_eq!(q.run(vec![5u8], |x| x), vec![5]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Batch-level aggregation: per-job outcomes and the rendered summary
+//! table the `mcautotune batch` subcommand prints.
+
+use super::job::TuningJob;
+use crate::report::Table;
+use crate::tuner::{Method, TuneResult};
+use crate::util::fmt::{human_duration, thousands};
+use std::time::Duration;
+
+/// The outcome of one job in a batch.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub job: TuningJob,
+    pub result: TuneResult,
+    /// true when the result was served from the cache (including
+    /// within-batch deduplication of overlapping jobs)
+    pub cached: bool,
+    /// shards the job was split into (0 for cached jobs: nothing ran)
+    pub shards: u32,
+    /// job wall-clock inside the queue (max over its shards; ~0 cached)
+    pub wall: Duration,
+}
+
+/// Aggregate of one [`super::run_batch`] call.
+#[derive(Debug)]
+pub struct BatchReport {
+    /// one outcome per submitted job, in submission order
+    pub outcomes: Vec<JobOutcome>,
+    /// cache hits among this batch's lookups
+    pub cache_hits: u64,
+    /// cache misses among this batch's lookups
+    pub cache_misses: u64,
+    /// tasks the queue moved between workers
+    pub stolen_tasks: u64,
+    /// whole-batch wall clock
+    pub total_elapsed: Duration,
+}
+
+impl BatchReport {
+    /// States explored across the whole batch (cached jobs contribute 0).
+    pub fn total_states(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.result.states_explored).sum()
+    }
+
+    /// ASCII table of per-job optima plus a cache/queue summary line.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(vec![
+            "N", "Job", "Model", "Size", "Method", "Shards", "WG", "TS", "Model time",
+            "States", "Cache", "Time",
+        ]);
+        for (i, o) in self.outcomes.iter().enumerate() {
+            table.row(vec![
+                (i + 1).to_string(),
+                o.job.name.clone(),
+                o.job.model.to_string(),
+                o.job.size.to_string(),
+                match o.result.method {
+                    Method::Exhaustive => "exhaustive".to_string(),
+                    Method::Swarm => "swarm".to_string(),
+                },
+                o.shards.to_string(),
+                o.result.optimal.wg.to_string(),
+                o.result.optimal.ts.to_string(),
+                o.result.t_min.to_string(),
+                thousands(o.result.states_explored),
+                if o.cached { "hit".to_string() } else { "miss".to_string() },
+                human_duration(o.wall),
+            ]);
+        }
+        let mut out = table.render();
+        out.push_str(&format!(
+            "cache: {} hit(s), {} miss(es) | {} states explored | {} task(s) stolen | wall {}\n",
+            self.cache_hits,
+            self.cache_misses,
+            thousands(self.total_states()),
+            self.stolen_tasks,
+            human_duration(self.total_elapsed),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::ModelKind;
+    use crate::tuner::{cached_result, CachedTune};
+
+    #[test]
+    fn render_lists_jobs_and_summary() {
+        let job = TuningJob::new(ModelKind::Minimum, 64);
+        let result =
+            cached_result(Method::Exhaustive, CachedTune { wg: 4, ts: 2, t_min: 44, steps: 7 }, "d");
+        let rep = BatchReport {
+            outcomes: vec![JobOutcome {
+                job,
+                result,
+                cached: true,
+                shards: 0,
+                wall: Duration::ZERO,
+            }],
+            cache_hits: 1,
+            cache_misses: 0,
+            stolen_tasks: 0,
+            total_elapsed: Duration::from_millis(5),
+        };
+        let text = rep.render();
+        assert!(text.contains("minimum-64"));
+        assert!(text.contains("hit"));
+        assert!(text.contains("1 hit(s), 0 miss(es)"));
+        assert_eq!(rep.total_states(), 0);
+    }
+}

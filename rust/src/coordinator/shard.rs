@@ -1,0 +1,250 @@
+//! Parameter-space sharding.
+//!
+//! The swarm (paper §5) diversifies *search order*: every worker explores
+//! the same space with a different seed. Sharding instead partitions the
+//! *space*: the (WG, TS) tuning lattice is split into axis-aligned
+//! sub-lattices ([`TuningShard`]) that are checked completely
+//! independently — each shard sees only the runs whose tuning choice
+//! falls inside it — and the per-shard counterexample optima are merged
+//! ([`merge_results`]). Because the tuning choice is the model's only
+//! nondeterminism, the shard state spaces are disjoint below the choice
+//! point, so sharding loses no behaviour and the merged optimum equals
+//! the unsharded one.
+
+use crate::model::TransitionSystem;
+use crate::platform::Tuning;
+use crate::tuner::TuneResult;
+use crate::util::error::{ensure, Result};
+
+/// An axis-aligned sub-lattice of the tuning space (inclusive bounds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuningShard {
+    pub wg_min: u32,
+    pub wg_max: u32,
+    pub ts_min: u32,
+    pub ts_max: u32,
+}
+
+impl TuningShard {
+    /// The shard covering every tuning.
+    pub fn full() -> Self {
+        Self { wg_min: 0, wg_max: u32::MAX, ts_min: 0, ts_max: u32::MAX }
+    }
+
+    pub fn contains(&self, t: Tuning) -> bool {
+        t.wg >= self.wg_min && t.wg <= self.wg_max && t.ts >= self.ts_min && t.ts <= self.ts_max
+    }
+}
+
+impl std::fmt::Display for TuningShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WG[{}..{}] TS[{}..{}]", self.wg_min, self.wg_max, self.ts_min, self.ts_max)
+    }
+}
+
+/// Split sorted distinct values into `k` balanced contiguous chunks,
+/// returned as (first, last) inclusive ranges.
+fn chunk_ranges(values: &[u32], k: usize) -> Vec<(u32, u32)> {
+    let k = k.min(values.len()).max(1);
+    let base = values.len() / k;
+    let rem = values.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push((values[start], values[start + len - 1]));
+        start += len;
+    }
+    out
+}
+
+/// Partition `tunings` into at most `n` non-empty shards: the distinct WG
+/// values are split into up to `n` contiguous ranges, and when the WG
+/// axis alone cannot supply `n` shards the TS axis is split as well
+/// (a rows × cols grid with rows·cols ≤ n). Cells containing no tuning
+/// are dropped; every tuning lands in exactly one shard.
+pub fn partition(tunings: &[Tuning], n: u32) -> Vec<TuningShard> {
+    if tunings.is_empty() {
+        return Vec::new();
+    }
+    let n = n.max(1) as usize;
+    let mut wgs: Vec<u32> = tunings.iter().map(|t| t.wg).collect();
+    wgs.sort_unstable();
+    wgs.dedup();
+    let mut tss: Vec<u32> = tunings.iter().map(|t| t.ts).collect();
+    tss.sort_unstable();
+    tss.dedup();
+
+    let rows = n.min(wgs.len());
+    let cols = (n / rows).clamp(1, tss.len());
+    let wg_ranges = chunk_ranges(&wgs, rows);
+    let ts_ranges = chunk_ranges(&tss, cols);
+
+    let mut shards = Vec::with_capacity(rows * cols);
+    for &(wg_min, wg_max) in &wg_ranges {
+        for &(ts_min, ts_max) in &ts_ranges {
+            let shard = TuningShard { wg_min, wg_max, ts_min, ts_max };
+            if tunings.iter().any(|&t| shard.contains(t)) {
+                shards.push(shard);
+            }
+        }
+    }
+    shards
+}
+
+/// A transition system restricted to one shard: successors that commit to
+/// a (WG, TS) outside the shard are pruned at the nondeterministic-choice
+/// point. Generic over the model — the only requirement is that states
+/// expose `WG`/`TS` through `eval_var` once (and only once) the tuning is
+/// chosen, which both native models do.
+pub struct ShardModel<'a, M: TransitionSystem> {
+    pub inner: &'a M,
+    pub shard: TuningShard,
+}
+
+impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
+    type State = M::State;
+
+    fn initial_states(&self) -> Vec<M::State> {
+        self.inner.initial_states()
+    }
+
+    fn successors(&self, s: &M::State, out: &mut Vec<M::State>) {
+        self.inner.successors(s, out);
+        // keep states that have not chosen a tuning yet (WG/TS unobservable)
+        out.retain(|n| {
+            match (self.inner.eval_var(n, "WG"), self.inner.eval_var(n, "TS")) {
+                (Some(wg), Some(ts)) => {
+                    self.shard.contains(Tuning { wg: wg as u32, ts: ts as u32 })
+                }
+                _ => true,
+            }
+        });
+    }
+
+    fn encode(&self, s: &M::State, out: &mut Vec<u8>) {
+        self.inner.encode(s, out)
+    }
+
+    fn eval_var(&self, s: &M::State, name: &str) -> Option<i64> {
+        self.inner.eval_var(s, name)
+    }
+
+    fn describe(&self, s: &M::State) -> String {
+        self.inner.describe(s)
+    }
+}
+
+/// Merge per-shard tune results into one job-level result: the optimum is
+/// the minimum over shards (deterministic (time, WG, TS) tie-break), the
+/// first trail is the earliest across shards, state/transition work is
+/// summed, and per-shard logs are concatenated with shard tags.
+/// `peak_bytes` is summed too — shards run concurrently, so their stores
+/// are resident together.
+pub fn merge_results(parts: Vec<TuneResult>) -> Result<TuneResult> {
+    ensure!(!parts.is_empty(), "no shard results to merge");
+    let method = parts[0].method;
+    let mut optimal = None;
+    let mut first_trail: Option<(crate::tuner::TuningWitness, std::time::Duration)> = None;
+    let mut states = 0u64;
+    let mut bytes = 0u64;
+    let mut elapsed = std::time::Duration::ZERO;
+    let mut log = Vec::new();
+    for (i, part) in parts.into_iter().enumerate() {
+        states += part.states_explored;
+        bytes += part.peak_bytes;
+        elapsed += part.elapsed;
+        let better = match &optimal {
+            None => true,
+            Some(best) => {
+                (part.optimal.time, part.optimal.wg, part.optimal.ts)
+                    < (best.time, best.wg, best.ts)
+            }
+        };
+        if better {
+            optimal = Some(part.optimal);
+        }
+        if let Some((w, d)) = part.first_trail {
+            if first_trail.as_ref().map_or(true, |(_, best_d)| d < *best_d) {
+                first_trail = Some((w, d));
+            }
+        }
+        for line in part.log {
+            log.push(format!("[shard {}] {}", i, line));
+        }
+    }
+    let optimal = optimal.expect("at least one shard result");
+    let t_min = optimal.time;
+    Ok(TuneResult {
+        method,
+        optimal,
+        t_min,
+        first_trail_optimality: first_trail.as_ref().map(|(w, _)| t_min as f64 / w.time as f64),
+        first_trail,
+        states_explored: states,
+        peak_bytes: bytes,
+        elapsed,
+        log,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::{check, CheckOptions};
+    use crate::model::SafetyLtl;
+    use crate::platform::{enumerate_tunings, MinModel};
+
+    #[test]
+    fn partition_is_exact_cover() {
+        for size in [16u32, 64, 256] {
+            let tunings = enumerate_tunings(size).unwrap();
+            for n in [1u32, 2, 3, 4, 7, 100] {
+                let shards = partition(&tunings, n);
+                assert!(!shards.is_empty());
+                assert!(shards.len() <= n.max(1) as usize, "size {} n {}", size, n);
+                for &t in &tunings {
+                    let owners = shards.iter().filter(|s| s.contains(t)).count();
+                    assert_eq!(owners, 1, "tuning {:?} owned by {} shards (n={})", t, owners, n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_empty_and_oversized() {
+        assert!(partition(&[], 4).is_empty());
+        let tunings = enumerate_tunings(16).unwrap();
+        // more shards than tunings: every shard still owns >= 1 tuning
+        let shards = partition(&tunings, 1000);
+        assert!(shards.len() <= tunings.len());
+    }
+
+    #[test]
+    fn shard_model_explores_only_its_sublattice() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let shard = TuningShard { wg_min: 2, wg_max: 4, ts_min: 0, ts_max: u32::MAX };
+        let sm = ShardModel { inner: &m, shard };
+        let co = CheckOptions { collect_all: true, ..Default::default() };
+        let rep = check(&sm, &SafetyLtl::non_termination(), &co).unwrap();
+        assert!(rep.found());
+        for v in &rep.violations {
+            let wg = m.eval_var(v.trail.last(), "WG").unwrap();
+            assert!((2..=4).contains(&wg), "WG {} escaped the shard", wg);
+        }
+        // the union of two complementary shards covers every tuning
+        let rest = TuningShard { wg_min: 8, wg_max: u32::MAX, ts_min: 0, ts_max: u32::MAX };
+        let sm2 = ShardModel { inner: &m, shard: rest };
+        let rep2 = check(&sm2, &SafetyLtl::non_termination(), &co).unwrap();
+        assert_eq!(
+            rep.violations.len() + rep2.violations.len(),
+            m.tunings().len(),
+            "each tuning terminates exactly once across complementary shards"
+        );
+    }
+
+    #[test]
+    fn merge_empty_is_error() {
+        assert!(merge_results(Vec::new()).is_err());
+    }
+}

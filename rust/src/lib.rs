@@ -23,6 +23,12 @@
 //! the PJRT [`runtime`]; [`opencl`] is the Table-2 measurement harness and
 //! [`report`] regenerates the paper's Tables 1–3.
 //!
+//! Above the single-shot method sits the [`coordinator`]: batch
+//! tuning-job orchestration (`mcautotune batch`) that shards each job's
+//! (WG, TS) lattice across a work-stealing queue and reuses results
+//! through a content-addressed persistent cache — the layer that turns
+//! the reproduction into a multi-tenant tuning service.
+//!
 //! ```no_run
 //! use mcautotune::checker::CheckOptions;
 //! use mcautotune::platform::MinModel;
@@ -36,6 +42,7 @@
 //! ```
 
 pub mod checker;
+pub mod coordinator;
 pub mod model;
 pub mod opencl;
 pub mod platform;

@@ -4,12 +4,13 @@
 //!   simulate   SPIN simulation mode (finds T_ini)            §2 step 3
 //!   verify     one verification run of a safety-LTL property  §4 step 2-3
 //!   tune       full counterexample method (Fig. 1 / Fig. 5)   §4-5
+//!   batch      sharded batch of tuning jobs + result cache    coordinator
 //!   table1/2/3 regenerate the paper's experiment tables       §6-7
 //!   exec       run an AOT-compiled Pallas kernel via PJRT     §7.1
 //!   gen-models write the pregenerated Promela models          §4, §7.2
 
-use anyhow::{bail, Context, Result};
 use mcautotune::checker::{check, CheckOptions, StoreKind};
+use mcautotune::coordinator::{run_batch, BatchOptions, ModelKind, ResultCache, TuningJob};
 use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::platform::{
     simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
@@ -18,9 +19,11 @@ use mcautotune::promela::{templates, PromelaSystem};
 use mcautotune::report;
 use mcautotune::runtime::Engine;
 use mcautotune::swarm::SwarmConfig;
-use mcautotune::tuner::{tune, Method};
+use mcautotune::tuner::{tune, tune_cached, Method};
 use mcautotune::util::cli::{Args, Spec};
+use mcautotune::util::error::{bail, Context, Result};
 use mcautotune::util::fmt::{human_bytes, human_duration};
+use std::path::Path;
 use std::time::Duration;
 
 fn main() {
@@ -38,6 +41,8 @@ usage: mcautotune <command> [options]
 
 commands:
   tune        find the optimal (WG, TS) via the counterexample method
+  batch       run a spec file of tuning jobs: sharded parameter-space search
+              across a work-stealing queue, with a persistent result cache
   simulate    random simulation of a model (reports terminal time, T_ini)
   verify      verify a safety-LTL property, print the first counterexample
   table1      regenerate the paper's Table 1 (abstract-model experiments)
@@ -57,6 +62,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "tune" => cmd_tune(rest),
+        "batch" => cmd_batch(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "table1" => cmd_table1(rest),
@@ -143,8 +149,8 @@ fn build_model(a: &Args) -> Result<AnyModel> {
 }
 
 fn check_opts(a: &Args) -> Result<CheckOptions> {
-    let mut o = CheckOptions::default();
-    o.store = match a.get_or("store", "full").as_str() {
+    let d = CheckOptions::default();
+    let store = match a.get_or("store", "full").as_str() {
         "full" => StoreKind::Full,
         "compact" => StoreKind::HashCompact,
         "bitstate" => StoreKind::Bitstate {
@@ -153,10 +159,13 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         },
         s => bail!("unknown store `{}` (full | compact | bitstate)", s),
     };
-    o.max_depth = a.get_parsed_or("max-depth", o.max_depth)?;
-    o.max_states = a.get_parsed_or("max-states", o.max_states)?;
-    o.memory_budget = a.get_parsed_or("memory-budget", o.memory_budget)?;
-    Ok(o)
+    Ok(CheckOptions {
+        store,
+        max_depth: a.get_parsed_or("max-depth", d.max_depth)?,
+        max_states: a.get_parsed_or("max-states", d.max_states)?,
+        memory_budget: a.get_parsed_or("memory-budget", d.memory_budget)?,
+        ..d
+    })
 }
 
 fn store_spec(spec: Spec) -> Spec {
@@ -179,6 +188,30 @@ fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
 
 // ------------------------------------------------------------- commands --
 
+/// Reconstruct the coordinator job a native-model `tune` invocation
+/// corresponds to, so `tune --cache` and `batch` share cache entries.
+fn job_from_args(a: &Args, method: Method) -> Result<TuningJob> {
+    let kind: ModelKind = a.get_or("model", "minimum").parse()?;
+    let mut job = TuningJob::new(kind, a.get_parsed_or("size", 64)?);
+    job.plat.np = a.get_parsed_or("np", 4)?;
+    job.plat.nd = a.get_parsed_or("nd", 1)?;
+    job.plat.nu = a.get_parsed_or("nu", 1)?;
+    job.plat.gmt = a.get_parsed_or(
+        "gmt",
+        match kind {
+            ModelKind::Abstract => 10,
+            ModelKind::Minimum => 3,
+        },
+    )?;
+    job.granularity = match a.get_or("granularity", "phase").as_str() {
+        "tick" => Granularity::Tick,
+        "phase" => Granularity::Phase,
+        g => bail!("unknown granularity `{}`", g),
+    };
+    job.method = method;
+    Ok(job)
+}
+
 fn cmd_tune(argv: &[String]) -> Result<()> {
     let spec = store_spec(model_spec(Spec::new()))
         .opt("method", "exhaustive | swarm (default exhaustive)")
@@ -186,6 +219,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         .opt("seed", "swarm seed")
         .opt("budget-ms", "per-swarm-round time budget (default 10000)")
         .opt("t-ini", "initial over-time bound (default: by simulation)")
+        .opt("cache", "result-cache JSON path: reuse/record the optimum")
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
@@ -197,7 +231,24 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     let opts = check_opts(&a)?;
     let sw = swarm_cfg(&a)?;
     let t_ini = a.get_parsed::<i64>("t-ini")?;
-    let r = with_model!(model, m, tune(m, method, &opts, &sw, t_ini))?;
+    let r = if let Some(cache_path) = a.get("cache") {
+        if matches!(model, AnyModel::Pml(_)) {
+            bail!("--cache supports the native models only (abstract | minimum, engine=native)");
+        }
+        let job = job_from_args(&a, method)?;
+        // swarm results are configuration-dependent, so the swarm config
+        // joins the cache key for Method::Swarm (see TuningJob::cache_desc_with)
+        let desc = job.cache_desc_with(&sw);
+        let mut cache = ResultCache::open(Path::new(cache_path))?;
+        let (r, hit) = with_model!(model, m, {
+            tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache)
+        })?;
+        cache.save()?;
+        println!("  cache: {} ({})", if hit { "hit" } else { "miss" }, cache_path);
+        r
+    } else {
+        with_model!(model, m, tune(m, method, &opts, &sw, t_ini))?
+    };
     for line in &r.log {
         println!("  {}", line);
     }
@@ -220,6 +271,58 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         human_bytes(r.peak_bytes),
         human_duration(r.elapsed)
     );
+    Ok(())
+}
+
+fn cmd_batch(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("workers", "queue worker threads (default 4)")
+        .opt("shards", "parameter-space shards for jobs that do not set shards= (default 4)")
+        .opt("cache", "result-cache JSON path (default mcat_cache.json; `none` disables)")
+        .opt("budget-ms", "per-swarm-round time budget for swarm jobs (default 10000)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune batch <spec-file>"));
+        println!(
+            "\nspec file: one `job <model> [k=v...]` per line, e.g.\n\
+             \n  # tune three configurations, sharded 4 ways each\n\
+             \x20 job minimum size=64 np=4 gmt=3 shards=4\n\
+             \x20 job minimum size=128 np=4 gmt=3 method=swarm\n\
+             \x20 job abstract size=32 gmt=10\n\
+             \nkeys: name size np nd nu gmt gran=tick|phase method=exhaustive|swarm shards"
+        );
+        return Ok(());
+    }
+    let Some(spec_path) = a.positionals().first() else {
+        bail!("usage: mcautotune batch <spec-file> [options] (see `mcautotune batch --help`)");
+    };
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("reading spec file {}", spec_path))?;
+    let jobs = TuningJob::parse_spec(&text)?;
+    if jobs.is_empty() {
+        bail!("spec file {} contains no jobs", spec_path);
+    }
+    let mut opts = BatchOptions {
+        workers: a.get_parsed_or("workers", 4)?,
+        default_shards: a.get_parsed_or("shards", 4)?,
+        ..BatchOptions::default()
+    };
+    opts.swarm.time_budget = Duration::from_millis(a.get_parsed_or("budget-ms", 10_000u64)?);
+    let cache_arg = a.get_or("cache", "mcat_cache.json");
+    let mut cache = if cache_arg == "none" {
+        ResultCache::in_memory()
+    } else {
+        ResultCache::open(Path::new(&cache_arg))?
+    };
+    let report = run_batch(&jobs, &opts, &mut cache)?;
+    println!(
+        "batch: {} job(s), {} worker(s), cache {}",
+        jobs.len(),
+        opts.workers,
+        if cache_arg == "none" { "disabled".to_string() } else { cache_arg }
+    );
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -12,7 +12,7 @@
 //! outside the fragment (nested temporal operators, U, X, F) is rejected
 //! with a clear error. This is the same fragment the paper uses.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -9,7 +9,7 @@
 
 use crate::runtime::Engine;
 use crate::util::rng::Xoshiro256;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -49,9 +49,9 @@ pub fn run_sweep(engine: &mut Engine, repeats: u32, seed: u64) -> Result<SweepRe
         .filter(|e| !e.name.ends_with("_small"))
         .cloned()
         .collect();
-    anyhow::ensure!(!entries.is_empty(), "no sweep artifacts in manifest (run `make artifacts`)");
+    crate::ensure!(!entries.is_empty(), "no sweep artifacts in manifest (run `make artifacts`)");
     let n = entries[0].size as usize;
-    anyhow::ensure!(
+    crate::ensure!(
         entries.iter().all(|e| e.size as usize == n),
         "sweep artifacts disagree on data size"
     );

@@ -18,7 +18,7 @@
 
 use super::config::{enumerate_tunings, geometry, Geometry, PlatformConfig, Tuning};
 use crate::model::TransitionSystem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Transition granularity. `Tick` is clock-cycle faithful (one transition
 /// per model-time unit, like the Promela model); `Phase` jumps a whole
@@ -66,7 +66,7 @@ impl AbstractModel {
     pub fn new(size: u32, plat: PlatformConfig, granularity: Granularity) -> Result<Self> {
         plat.validate()?;
         let tunings = enumerate_tunings(size)?;
-        anyhow::ensure!(
+        crate::ensure!(
             tunings.len() < CFG_NONE as usize,
             "tuning space too large for u8 index"
         );

@@ -1,6 +1,6 @@
 //! Platform and tuning-parameter configuration (paper §3.1, §4).
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// The abstract OpenCL platform: `ND` devices × `NU` units × `NP`
 /// processing elements, with `GMT` = global/local memory access-time ratio
@@ -64,7 +64,7 @@ pub fn is_pow2(x: u32) -> bool {
 
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Enumerate the paper's tuning search space for input `size = 2^n`:

@@ -21,7 +21,7 @@ use super::abstract_model::Granularity;
 use super::config::{ceil_div, is_pow2, Tuning};
 use crate::model::TransitionSystem;
 use crate::util::rng::SplitMix64;
-use anyhow::{bail, ensure, Result};
+use crate::util::error::{bail, ensure, Result};
 
 /// How `main` initializes global memory (Listing 12 line 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -9,7 +9,7 @@
 
 use super::ast::*;
 use super::parser::const_eval;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 
 pub const NO_PC: u32 = u32::MAX;

@@ -22,7 +22,7 @@
 
 use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot};
 use crate::model::TransitionSystem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub const MAX_PROCS: usize = 64;
 const MAX_SELECT_FANOUT: i32 = 4096;

@@ -3,7 +3,7 @@
 //! Handles `//` and `/* */` comments and a one-pass `#define NAME value`
 //! preprocessor (object-like macros only — what the paper's models use).
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, PartialEq, Eq)]

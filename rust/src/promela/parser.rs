@@ -10,7 +10,7 @@
 
 use super::ast::*;
 use super::lexer::{lex, Lexed, Tok};
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 pub fn parse(src: &str) -> Result<Model> {
     let lexed = lex(src)?;

@@ -13,7 +13,7 @@ use crate::runtime::Engine;
 use crate::swarm::SwarmConfig;
 use crate::tuner::{extract_sorted, tune, Method, TuneResult};
 use crate::util::fmt::{human_bytes, human_duration, thousands};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::Duration;
 
 // ------------------------------------------------------------- Table 1 --
@@ -71,8 +71,7 @@ pub fn table1(opts: &Table1Opts) -> Result<(Vec<Table1Row>, String)> {
         let mem_exhaustive = if size <= opts.max_promela_size {
             let pml = templates::abstract_pml(size, &opts.plat);
             let sys = PromelaSystem::from_source(&pml)?;
-            let mut co = CheckOptions::default();
-            co.collect_all = true;
+            let co = CheckOptions { collect_all: true, ..CheckOptions::default() };
             let rep = check(&sys, &SafetyLtl::non_termination(), &co)?;
             let ws = crate::tuner::extract_sorted(&sys, rep.violations.iter())?;
             pml_steps = ws.first().map(|w| w.steps);
@@ -182,10 +181,9 @@ pub fn table3(groups: &[(u32, u32)], gmt: u32, top: usize) -> Result<(Vec<Table3
             crate::platform::DataInit::Descending,
             Granularity::Phase,
         )?;
-        let mut co = CheckOptions::default();
-        co.collect_all = true;
+        let co = CheckOptions { collect_all: true, ..CheckOptions::default() };
         let rep = check(&model, &SafetyLtl::non_termination(), &co)?;
-        anyhow::ensure!(rep.exhausted, "table3 model must be exhaustible");
+        crate::ensure!(rep.exhausted, "table3 model must be exhaustible");
         let ws = extract_sorted(&model, rep.violations.iter())?;
         for w in ws.iter().take(top) {
             rows.push(Table3Row {

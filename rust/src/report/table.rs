@@ -35,8 +35,8 @@ impl Table {
         };
         let fmt_row = |cells: &[String]| -> String {
             let mut s = String::from("|");
-            for i in 0..ncol {
-                s.push_str(&format!(" {:>width$} |", cells[i], width = widths[i]));
+            for (cell, width) in cells.iter().zip(&widths).take(ncol) {
+                s.push_str(&format!(" {:>width$} |", cell, width = *width));
             }
             s
         };

@@ -1,7 +1,7 @@
 //! Executable loading and typed execution of the Minimum-problem kernels.
 
 use crate::util::manifest::{ArtifactEntry, Manifest};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -94,7 +94,7 @@ impl Engine {
             "min_device" => {
                 let partials_lit = out.to_tuple1().map_err(to_anyhow)?;
                 let partials: Vec<i32> = partials_lit.to_vec().map_err(to_anyhow)?;
-                anyhow::ensure!(
+                crate::ensure!(
                     partials.len() == entry.units as usize,
                     "expected {} partials, got {}",
                     entry.units,
@@ -133,7 +133,7 @@ impl Engine {
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
+fn to_anyhow(e: xla::Error) -> crate::util::error::Error {
     anyhow!("{e}")
 }
 

@@ -1,0 +1,101 @@
+//! Stub engine for builds without the `pjrt` feature (the external `xla`
+//! crate is unavailable offline). Mirrors `exec.rs`'s API surface:
+//! manifest loading and inspection work, kernel execution errors out with
+//! a pointer at the feature flag. Keeps every caller — the CLI `exec` /
+//! `table2` commands, `opencl::run_sweep`, examples and tests — compiling
+//! unchanged; the artifact-gated tests skip at runtime exactly as they do
+//! when `make artifacts` has not been run.
+
+use crate::util::error::{bail, Result};
+use crate::util::manifest::{ArtifactEntry, Manifest};
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its tuning metadata (stub: metadata only).
+pub struct LoadedKernel {
+    pub entry: ArtifactEntry,
+}
+
+/// Output of one Minimum-kernel execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MinOutput {
+    /// per-workgroup partial minima (device side, Listing 10)
+    pub partials: Vec<i32>,
+    /// host-side REDUCE-global over the partials (Listing 11 lines 22-24)
+    pub global_min: i32,
+}
+
+/// Stub PJRT engine: manifest only, no client.
+pub struct Engine {
+    manifest: Manifest,
+}
+
+const UNAVAILABLE: &str =
+    "PJRT execution unavailable: built without the `pjrt` feature (requires the external `xla` crate)";
+
+impl Engine {
+    /// Create an engine over an artifacts directory (default: `artifacts/`
+    /// next to the workspace root, or `$MCAT_ARTIFACTS`).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Self { manifest })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MCAT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".to_string()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and return the named artifact. Stub: always errors.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedKernel> {
+        bail!("cannot load artifact `{}`: {}", name, UNAVAILABLE)
+    }
+
+    /// Execute a `min_device` artifact. Stub: always errors.
+    pub fn run_min(&mut self, name: &str, _data: &[i32]) -> Result<MinOutput> {
+        bail!("cannot run artifact `{}`: {}", name, UNAVAILABLE)
+    }
+
+    /// Execute an `abstract` artifact. Stub: always errors.
+    pub fn run_abstract(&mut self, name: &str, _data: &[f32]) -> Result<Vec<f32>> {
+        bail!("cannot run artifact `{}`: {}", name, UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_errors() {
+        assert!(Engine::new(Path::new("/nonexistent/mcat/artifacts")).is_err());
+    }
+
+    #[test]
+    fn stub_reads_manifest_but_cannot_execute() {
+        let dir = std::env::temp_dir().join(format!("mcat_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tfile\tkind\tunits\twg\tts\tsize\tdtype\tvmem_bytes\n\
+             m\tm.hlo.txt\tmin_device\t4\t4\t4\t64\ti32\t84\n",
+        )
+        .unwrap();
+        let mut e = Engine::new(&dir).unwrap();
+        assert!(e.manifest().find("m").is_some());
+        assert!(e.platform().contains("stub"));
+        let err = e.run_min("m", &[0; 64]).unwrap_err();
+        assert!(format!("{:#}", err).contains("pjrt"));
+        assert!(e.load("m").is_err());
+        assert!(e.run_abstract("m", &[0.0; 64]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

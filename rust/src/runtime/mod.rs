@@ -5,7 +5,19 @@
 //! this module parses the HLO *text* (the interchange format that survives
 //! the jax>=0.5 / xla_extension 0.5.1 proto-id mismatch), compiles each
 //! module on the PJRT CPU client, and caches the loaded executables.
+//!
+//! The PJRT client comes from the external `xla` crate, which is not
+//! vendored in the offline build. The real engine is therefore gated
+//! behind the `pjrt` cargo feature (enabling it requires providing the
+//! `xla` crate, e.g. as a path dependency); the default build compiles a
+//! stub with the same API whose manifest inspection works but whose
+//! kernel execution returns an actionable error.
 
+#[cfg(feature = "pjrt")]
+pub mod exec;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 
 pub use exec::{Engine, LoadedKernel, MinOutput};

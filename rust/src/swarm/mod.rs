@@ -10,7 +10,7 @@
 
 use crate::checker::{check, CheckOptions, CheckReport, Order, SearchStats, StoreKind};
 use crate::model::{SafetyLtl, TransitionSystem, Violation};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -81,15 +81,18 @@ impl<S> SwarmReport<S> {
 }
 
 fn worker_options(cfg: &SwarmConfig, worker: u32) -> CheckOptions {
-    let mut o = CheckOptions::default();
-    o.store = StoreKind::Bitstate { log2_bits: cfg.log2_bits, hashes: cfg.hashes };
-    o.max_depth = cfg.max_depth;
-    o.time_budget = Some(cfg.time_budget);
-    o.collect_all = true;
-    o.max_errors = cfg.max_errors_per_worker;
-    // diversify: each worker gets an independent exploration order
-    o.order = Order::Random(cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(worker as u64));
-    o
+    CheckOptions {
+        store: StoreKind::Bitstate { log2_bits: cfg.log2_bits, hashes: cfg.hashes },
+        max_depth: cfg.max_depth,
+        time_budget: Some(cfg.time_budget),
+        collect_all: true,
+        max_errors: cfg.max_errors_per_worker,
+        // diversify: each worker gets an independent exploration order
+        order: Order::Random(
+            cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(worker as u64),
+        ),
+        ..CheckOptions::default()
+    }
 }
 
 /// Run the swarm against `G(prop)`. The model is shared read-only across

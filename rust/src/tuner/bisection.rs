@@ -10,7 +10,7 @@
 use super::extract::{extract, extract_sorted, TuningWitness};
 use crate::checker::{check, CheckOptions};
 use crate::model::{SafetyLtl, TransitionSystem};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::time::Duration;
 
 #[derive(Debug, Clone)]

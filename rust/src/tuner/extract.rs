@@ -6,7 +6,7 @@
 //! the final state directly through the model's `eval_var` interface.
 
 use crate::model::{TransitionSystem, Violation};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// A tuning configuration witnessed by a counterexample, with the model
 /// time it achieves.

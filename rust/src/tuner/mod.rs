@@ -18,7 +18,7 @@ use crate::checker::CheckOptions;
 use crate::model::TransitionSystem;
 use crate::platform::sim::initial_bound;
 use crate::swarm::SwarmConfig;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::time::Duration;
 
 /// Search strategy (paper §4 vs §5).
@@ -31,13 +31,13 @@ pub enum Method {
 }
 
 impl std::str::FromStr for Method {
-    type Err = anyhow::Error;
+    type Err = crate::util::error::Error;
 
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "exhaustive" | "bisection" => Ok(Method::Exhaustive),
             "swarm" => Ok(Method::Swarm),
-            _ => anyhow::bail!("unknown method `{}` (exhaustive|swarm)", s),
+            _ => crate::bail!("unknown method `{}` (exhaustive|swarm)", s),
         }
     }
 }
@@ -101,7 +101,7 @@ where
                 states_explored: r.total_states,
                 peak_bytes: r.peak_bytes,
                 elapsed: r.total_elapsed,
-                log: log,
+                log,
             })
         }
         Method::Swarm => {
@@ -133,6 +133,71 @@ where
             })
         }
     }
+}
+
+// ----------------------------------------------------------- caching --
+
+/// The cacheable core of a [`TuneResult`] — what a content-addressed
+/// result cache stores and what a hit reconstructs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CachedTune {
+    pub wg: u32,
+    pub ts: u32,
+    pub t_min: i64,
+    /// transitions on the original witnessing trail
+    pub steps: usize,
+}
+
+/// Cache interface for [`tune_cached`], implemented by
+/// [`crate::coordinator::ResultCache`]. Keys are canonical description
+/// strings of (model, platform config, property/method); how they are
+/// hashed and persisted is the implementation's concern.
+pub trait TuneCache {
+    fn lookup(&mut self, desc: &str) -> Option<CachedTune>;
+    fn store(&mut self, desc: &str, result: &TuneResult);
+}
+
+/// Reconstruct a [`TuneResult`] from a cache hit: the optimum is exact,
+/// and no verification ran — zero states explored, zero bytes, ~zero
+/// elapsed time.
+pub fn cached_result(method: Method, hit: CachedTune, desc: &str) -> TuneResult {
+    TuneResult {
+        method,
+        optimal: TuningWitness { wg: hit.wg, ts: hit.ts, time: hit.t_min, steps: hit.steps },
+        t_min: hit.t_min,
+        first_trail: None,
+        first_trail_optimality: None,
+        states_explored: 0,
+        peak_bytes: 0,
+        elapsed: Duration::ZERO,
+        log: vec![format!("cache hit: {}", desc)],
+    }
+}
+
+/// Cache-aware [`tune`]: a hit short-circuits verification entirely (the
+/// returned result reports zero states explored); a miss runs [`tune`]
+/// and stores the optimum under `cache_desc`. Returns the result and
+/// whether it was served from the cache.
+pub fn tune_cached<M, C>(
+    model: &M,
+    method: Method,
+    check_opts: &CheckOptions,
+    swarm_cfg: &SwarmConfig,
+    t_ini_override: Option<i64>,
+    cache_desc: &str,
+    cache: &mut C,
+) -> Result<(TuneResult, bool)>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+    C: TuneCache + ?Sized,
+{
+    if let Some(hit) = cache.lookup(cache_desc) {
+        return Ok((cached_result(method, hit, cache_desc), true));
+    }
+    let r = tune(model, method, check_opts, swarm_cfg, t_ini_override)?;
+    cache.store(cache_desc, &r);
+    Ok((r, false))
 }
 
 #[cfg(test)]

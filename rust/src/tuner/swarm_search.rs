@@ -13,7 +13,7 @@
 use super::extract::{extract_sorted, TuningWitness};
 use crate::model::{SafetyLtl, TransitionSystem};
 use crate::swarm::{swarm, SwarmConfig};
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::time::Duration;
 
 #[derive(Debug, Clone)]

@@ -31,6 +31,12 @@ pub struct Spec {
     flags: Vec<(String, String)>, // (name, help)
 }
 
+impl Default for Spec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Spec {
     pub fn new() -> Self {
         Self { opts: Vec::new(), flags: Vec::new() }

@@ -1,0 +1,217 @@
+//! Minimal `anyhow`-compatible error handling.
+//!
+//! The build environment is offline (no crates.io), so the crate vendors
+//! the small slice of `anyhow`'s API the codebase uses: an opaque
+//! [`Error`] carrying a chain of context messages, a [`Result`] alias
+//! with a defaulted error type, the [`Context`] extension trait for
+//! `Result` and `Option`, and the [`anyhow!`](crate::anyhow) /
+//! [`bail!`](crate::bail) / [`ensure!`](crate::ensure) macros.
+//!
+//! Formatting mirrors `anyhow`: `{}` prints the outermost message, `{:#}`
+//! the full `outer: inner: root` chain, and `{:?}` a multi-line report
+//! with a `Caused by:` section.
+
+use std::fmt;
+
+/// An error message plus an optional chain of underlying causes.
+///
+/// Unlike `std` error types this deliberately does **not** implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion below coherent (the same trick `anyhow` uses), so `?`
+/// converts any std error into an [`Error`] automatically.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error in an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: ctx.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cause = self.cause.as_deref();
+        while let Some(e) = cause {
+            out.push(e.msg.as_str());
+            cause = e.cause.as_deref();
+        }
+        out
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        *self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cause = self.cause.as_deref();
+            while let Some(e) = cause {
+                write!(f, ": {}", e.msg)?;
+                cause = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cause = self.cause.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {}", e.msg)?;
+            cause = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts via `?`, preserving its `source()` chain as
+/// context layers.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs: Vec<String> = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error { msg: msgs.pop().expect("at least one message"), cause: None };
+        while let Some(m) = msgs.pop() {
+            err = Error { msg: m, cause: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option` (the `anyhow`
+/// surface the codebase relies on).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make the crate-root macros importable alongside the types:
+// `use crate::util::error::{anyhow, bail, Context, Result};`
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_result() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_chains_format() {
+        let e = fails(false).context("checking the flag").unwrap_err();
+        assert_eq!(format!("{}", e), "checking the flag");
+        assert_eq!(format!("{:#}", e), "checking the flag: flag was false");
+        let dbg = format!("{:?}", e);
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("flag was false"));
+        assert_eq!(e.chain(), vec!["checking the flag", "flag was false"]);
+        assert_eq!(e.root_cause(), "flag was false");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "value")).unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn std_errors_convert_with_source_chain() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/mcat/error/test")?)
+        }
+        let e = io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let n: std::result::Result<i32, _> = "xyz".parse::<i32>();
+        let e: Error = n.unwrap_err().into();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stop at {}", 42);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop at 42");
+    }
+}

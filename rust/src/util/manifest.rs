@@ -1,10 +1,15 @@
-//! Artifact-manifest reader.
+//! Artifact-manifest reader and a minimal JSON value.
 //!
 //! aot.py writes both `manifest.json` (human) and `manifest.tsv` (machine).
 //! We parse the TSV here — a full JSON parser is unnecessary for a flat
 //! record table and the TSV is regenerated in the same `make artifacts`.
+//!
+//! [`Json`] is the small JSON reader/writer the coordinator's persistent
+//! [`crate::coordinator::ResultCache`] serializes through (the `serde`
+//! ecosystem is unavailable offline). Integers only — every number the
+//! repo persists is integral.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -83,6 +88,342 @@ impl Manifest {
 
     pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
         self.entries.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+// ---------------------------------------------------------------- JSON --
+
+/// A JSON value (integers only; floats are not needed by any persisted
+/// record). Objects preserve insertion order so rendered files are
+/// deterministic and diff-friendly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object-field lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Serialize without insignificant whitespace.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {} of JSON document", p.pos);
+        }
+        Ok(v)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected `{}` at byte {} of JSON document", b as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            bail!("bad JSON literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().context("unexpected end of JSON document")? {
+            b'n' => self.literal("null", Json::Null),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected `{}` at byte {} of JSON document", c as char, self.pos),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if matches!(self.peek(), Some(b'.') | Some(b'e') | Some(b'E')) {
+            bail!("floating-point JSON numbers are not supported (byte {})", self.pos);
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).expect("digits are ASCII");
+        s.parse::<i64>().map(Json::Int).map_err(|_| anyhow!("bad JSON number `{}`", s))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            match self.peek().context("unterminated JSON string")? {
+                b'"' => {
+                    self.pos += 1;
+                    return String::from_utf8(buf)
+                        .map_err(|_| anyhow!("invalid UTF-8 in JSON string"));
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.peek().context("unterminated JSON escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => buf.push(b'"'),
+                        b'\\' => buf.push(b'\\'),
+                        b'/' => buf.push(b'/'),
+                        b'b' => buf.push(0x08),
+                        b'f' => buf.push(0x0C),
+                        b'n' => buf.push(b'\n'),
+                        b'r' => buf.push(b'\r'),
+                        b't' => buf.push(b'\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| anyhow!("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow!("bad \\u escape `{}`", hex))?;
+                            self.pos += 4;
+                            let c = char::from_u32(cp)
+                                .context("surrogate \\u escapes are not supported")?;
+                            let mut tmp = [0u8; 4];
+                            buf.extend_from_slice(c.encode_utf8(&mut tmp).as_bytes());
+                        }
+                        c => bail!("unknown JSON escape `\\{}`", c as char),
+                    }
+                }
+                _ => {
+                    // copy raw UTF-8 bytes through unchanged
+                    buf.push(self.bytes[self.pos]);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek().context("unterminated JSON array")? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                c => bail!("expected `,` or `]`, got `{}` at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek().context("unterminated JSON object")? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => bail!("expected `,` or `}}`, got `{}` at byte {}", c as char, self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let v = Json::Obj(vec![
+            ("version".into(), Json::Int(1)),
+            (
+                "entries".into(),
+                Json::Arr(vec![
+                    Json::Obj(vec![
+                        ("desc".into(), Json::Str("model=minimum size=64".into())),
+                        ("t_min".into(), Json::Int(-3)),
+                        ("ok".into(), Json::Bool(true)),
+                        ("none".into(), Json::Null),
+                    ]),
+                    Json::Arr(vec![]),
+                ]),
+            ),
+        ]);
+        let text = v.render();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1}π".into());
+        let parsed = Json::parse(&v.render()).unwrap();
+        assert_eq!(parsed, v);
+    }
+
+    #[test]
+    fn parses_whitespace_and_unicode_escapes() {
+        let v = Json::parse(" { \"a\" : [ 1 , 2 ] , \"b\" : \"\\u00e9\" } ").unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_arr).unwrap().len(), 2);
+        assert_eq!(v.get("b").and_then(Json::as_str), Some("é"));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0].as_i64(), Some(1));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1.5").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{} garbage").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse("{\"k\":7}").unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_i64), Some(7));
+        assert!(v.get("missing").is_none());
+        assert!(Json::Int(1).get("k").is_none());
+        assert!(Json::Int(1).as_str().is_none());
     }
 }
 

@@ -1,9 +1,11 @@
-//! Support utilities: deterministic RNG, fast hashing, CLI/bench/property
-//! harnesses (the heavyweight ecosystem crates are unavailable offline),
-//! human formatting, and the artifact manifest reader.
+//! Support utilities: error handling, deterministic RNG, fast hashing,
+//! CLI/bench/property harnesses (the heavyweight ecosystem crates are
+//! unavailable offline), human formatting, and the artifact manifest +
+//! JSON reader/writer.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod fmt;
 pub mod hash;
 pub mod manifest;

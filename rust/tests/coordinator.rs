@@ -1,0 +1,207 @@
+//! Coordinator integration: sharded batch orchestration, the
+//! work-stealing queue, and the persistent result cache — including the
+//! acceptance properties (batch optima match single-job `tune`; a second
+//! invocation serves cache hits with zero additional states explored).
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::coordinator::{
+    partition, run_batch, BatchOptions, JobQueue, ModelKind, ResultCache, ShardModel, TuningJob,
+};
+use mcautotune::platform::MinModel;
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, tune_cached, Method};
+use std::path::PathBuf;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mcat_coord_{}_{}.json", tag, std::process::id()))
+}
+
+#[test]
+fn cache_hit_returns_identical_result_with_zero_states() {
+    let m = MinModel::paper(64, 4).unwrap();
+    let mut cache = ResultCache::in_memory();
+    let desc = TuningJob::new(ModelKind::Minimum, 64).cache_desc();
+    let (cold, was_hit) = tune_cached(
+        &m,
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        None,
+        &desc,
+        &mut cache,
+    )
+    .unwrap();
+    assert!(!was_hit);
+    assert!(cold.states_explored > 0);
+
+    let (warm, was_hit) = tune_cached(
+        &m,
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        None,
+        &desc,
+        &mut cache,
+    )
+    .unwrap();
+    assert!(was_hit);
+    assert_eq!(warm.states_explored, 0, "a hit must not explore any state");
+    assert_eq!(warm.peak_bytes, 0);
+    assert_eq!(
+        (warm.optimal.wg, warm.optimal.ts, warm.t_min, warm.optimal.steps),
+        (cold.optimal.wg, cold.optimal.ts, cold.t_min, cold.optimal.steps),
+        "hit and cold run must agree on the optimum"
+    );
+    assert_eq!((cache.hits, cache.misses), (1, 1));
+}
+
+#[test]
+fn sharded_search_agrees_with_exhaustive_optimum() {
+    // satellite requirement: sharded search == Method::Exhaustive optimum
+    // on MinModel::paper(64, 4)
+    let m = MinModel::paper(64, 4).unwrap();
+    let (opt_time, _) = m.optimum();
+    let unsharded = tune(
+        &m,
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(unsharded.t_min, opt_time as i64);
+
+    let shards = partition(m.tunings(), 4);
+    assert!(shards.len() >= 2, "64-element lattice must split: {:?}", shards);
+    let mut best = i64::MAX;
+    for &shard in &shards {
+        let sharded = ShardModel { inner: &m, shard };
+        let r = tune(
+            &sharded,
+            Method::Exhaustive,
+            &CheckOptions::default(),
+            &SwarmConfig::default(),
+            None,
+        )
+        .unwrap();
+        best = best.min(r.t_min);
+    }
+    assert_eq!(best, unsharded.t_min, "merged shard optimum == unsharded optimum");
+}
+
+#[test]
+fn queue_drains_under_one_worker() {
+    let q = JobQueue::new(1);
+    let (out, stats) = q.run_stats((0..64u64).collect(), |x| x + 1);
+    assert_eq!(out, (1..=64).collect::<Vec<_>>());
+    assert_eq!(stats.executed, vec![64], "one worker executes every task");
+    assert_eq!(stats.stolen, 0);
+}
+
+#[test]
+fn batch_matches_single_job_tune_and_second_run_hits_cache() {
+    let path = temp_path("batch");
+    std::fs::remove_file(&path).ok();
+
+    let jobs = TuningJob::parse_spec(
+        "job minimum size=64 np=4 gmt=3 shards=4\n\
+         job minimum size=32 np=4 gmt=3\n\
+         job abstract size=16 gmt=10 shards=2\n",
+    )
+    .unwrap();
+    assert_eq!(jobs.len(), 3);
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+
+    // cold run: everything misses, optima match the ground truth
+    let mut cache = ResultCache::open(&path).unwrap();
+    let report = run_batch(&jobs, &opts, &mut cache).unwrap();
+    assert_eq!(report.outcomes.len(), 3);
+    assert_eq!((report.cache_hits, report.cache_misses), (0, 3));
+    assert!(report.total_states() > 0);
+    for outcome in &report.outcomes {
+        assert!(!outcome.cached);
+        assert!(outcome.shards >= 1);
+        assert_eq!(
+            outcome.result.t_min,
+            outcome.job.optimum_time().unwrap() as i64,
+            "job `{}` batch optimum != model optimum",
+            outcome.job.name
+        );
+    }
+    let rendered = report.render();
+    assert!(rendered.contains("minimum-64") && rendered.contains("miss"));
+
+    // warm run from a fresh cache object (exercises the JSON reload):
+    // every job hits, zero additional states explored
+    let mut cache2 = ResultCache::open(&path).unwrap();
+    assert_eq!(cache2.len(), 3);
+    let report2 = run_batch(&jobs, &opts, &mut cache2).unwrap();
+    assert_eq!((report2.cache_hits, report2.cache_misses), (3, 0));
+    assert_eq!(report2.total_states(), 0, "cached batch explores zero states");
+    for (cold, warm) in report.outcomes.iter().zip(&report2.outcomes) {
+        assert!(warm.cached);
+        assert_eq!(warm.result.t_min, cold.result.t_min);
+        assert_eq!(warm.result.optimal.wg, cold.result.optimal.wg);
+        assert_eq!(warm.result.optimal.ts, cold.result.optimal.ts);
+        assert_eq!(warm.result.states_explored, 0);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn overlapping_jobs_in_one_batch_run_once() {
+    // two jobs with the same cache description: the second resolves from
+    // the first's freshly stored result
+    let jobs = vec![
+        TuningJob::new(ModelKind::Minimum, 32),
+        TuningJob { name: "same-again".into(), ..TuningJob::new(ModelKind::Minimum, 32) },
+    ];
+    assert_eq!(jobs[0].cache_desc(), jobs[1].cache_desc());
+    let mut cache = ResultCache::in_memory();
+    let report =
+        run_batch(&jobs, &BatchOptions { workers: 2, ..BatchOptions::default() }, &mut cache)
+            .unwrap();
+    assert!(!report.outcomes[0].cached);
+    assert!(report.outcomes[1].cached, "duplicate must be served from the batch's own result");
+    assert_eq!(report.outcomes[1].result.states_explored, 0);
+    assert_eq!(report.outcomes[0].result.t_min, report.outcomes[1].result.t_min);
+    // both submission lookups missed; the duplicate's resolution hit
+    assert_eq!((report.cache_hits, report.cache_misses), (1, 2));
+}
+
+#[test]
+fn failing_job_does_not_discard_completed_work() {
+    use mcautotune::tuner::TuneCache;
+    let good = TuningJob::new(ModelKind::Minimum, 32);
+    let mut bad = TuningJob::new(ModelKind::Minimum, 64);
+    bad.method = Method::Swarm;
+    let mut opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    // depth bound 1: swarm workers can never reach FIN, so the swarm job
+    // deterministically fails while the exhaustive job succeeds
+    opts.swarm.max_depth = 1;
+    let mut cache = ResultCache::in_memory();
+    let err = run_batch(&[good.clone(), bad], &opts, &mut cache).unwrap_err();
+    let msg = format!("{:#}", err);
+    assert!(msg.contains("shard failed"), "unexpected error: {}", msg);
+    // the completed job's result was still merged and cached
+    assert_eq!(cache.len(), 1);
+    assert!(cache.lookup(&good.cache_desc()).is_some());
+}
+
+#[test]
+fn sharded_swarm_job_reaches_the_optimum() {
+    // swarm method composes with sharding (partitioned-space workers on
+    // top of diversified-seed workers)
+    let mut job = TuningJob::new(ModelKind::Minimum, 64);
+    job.method = Method::Swarm;
+    job.shards = 2;
+    let mut opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    opts.swarm = SwarmConfig {
+        workers: 2,
+        time_budget: std::time::Duration::from_secs(5),
+        ..SwarmConfig::default()
+    };
+    let mut cache = ResultCache::in_memory();
+    let report = run_batch(&[job.clone()], &opts, &mut cache).unwrap();
+    assert_eq!(report.outcomes[0].result.t_min, job.optimum_time().unwrap() as i64);
+}
