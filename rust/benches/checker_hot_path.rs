@@ -1,0 +1,137 @@
+//! Checker hot-path benchmarks: sequential vs parallel exhaustive search,
+//! compiled vs interpreted property evaluation, and arena store inserts.
+//!
+//! Emits `BENCH_checker.json` (path override: `MCAT_BENCH_JSON`) so the
+//! perf trajectory is tracked across PRs — run via `scripts/bench.sh`.
+//! `MCAT_BENCH_SIZE` shrinks the model for smoke runs (CI uses 128);
+//! `MCAT_BENCH_FAST=1` shrinks the measurement budget (see util::bench).
+
+use mcautotune::checker::{check_parallel, check_sequential, CheckOptions, StoreKind, VisitedStore};
+use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
+use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
+use mcautotune::util::bench::{black_box, Bencher};
+
+fn env_u32(name: &str, default: u32) -> u32 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+type AbsState = <AbstractModel as TransitionSystem>::State;
+
+/// Breadth-first state corpus for the property-evaluation benches.
+fn collect_states(m: &AbstractModel, limit: usize) -> Vec<AbsState> {
+    let mut out = m.initial_states();
+    let mut i = 0;
+    let mut succs = Vec::new();
+    while i < out.len() && out.len() < limit {
+        let s = out[i];
+        m.successors(&s, &mut succs);
+        out.extend(succs.drain(..).take(limit - out.len()));
+        i += 1;
+    }
+    out
+}
+
+fn main() {
+    let size = env_u32("MCAT_BENCH_SIZE", 1024);
+    let mut b = Bencher::new("checker_hot_path");
+
+    // --- end-to-end exploration: sequential vs parallel (states/s) ------
+    let m = AbstractModel::new(size, PlatformConfig::default(), Granularity::Tick).unwrap();
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let seq_opts = CheckOptions::default();
+    let states = check_sequential(&m, &p, &seq_opts).unwrap().stats.states_stored;
+    println!("model: abstract size={} tick — {} states", size, states);
+    b.bench_elems("explore/seq", states, || {
+        check_sequential(&m, &p, &seq_opts).unwrap().stats.states_stored
+    });
+    for threads in [2u32, 4, 8] {
+        let o = CheckOptions { threads, ..CheckOptions::default() };
+        let got = check_parallel(&m, &p, &o).unwrap().stats.states_stored;
+        assert_eq!(got, states, "parallel explored a different state count");
+        b.bench_elems(&format!("explore/par{}", threads), states, || {
+            check_parallel(&m, &p, &o).unwrap().stats.states_stored
+        });
+    }
+
+    // --- property monitor: compiled bytecode vs interpreted AST ---------
+    let small = AbstractModel::new(size.min(256), PlatformConfig::default(), Granularity::Phase)
+        .unwrap();
+    let corpus = collect_states(&small, 20_000);
+    let prop = SafetyLtl::parse("G(FIN -> time > 1000)").unwrap();
+    let compiled = prop.compile(&small).unwrap();
+    let mut scratch = EvalScratch::default();
+    b.bench_elems("prop-eval/compiled", corpus.len() as u64, || {
+        let mut holds = 0u64;
+        for s in &corpus {
+            holds += compiled.holds_state(&small, s, &mut scratch).unwrap() as u64;
+        }
+        holds
+    });
+    b.bench_elems("prop-eval/interpreted", corpus.len() as u64, || {
+        let mut holds = 0u64;
+        for s in &corpus {
+            let lookup = |n: &str| small.eval_var(s, n);
+            holds += prop.holds(&lookup).unwrap() as u64;
+        }
+        holds
+    });
+
+    // --- arena Full-store inserts (fresh + duplicate probes) ------------
+    let items: Vec<[u8; 24]> = (0..100_000u64)
+        .map(|i| {
+            let mut a = [0u8; 24];
+            a[..8].copy_from_slice(&i.to_le_bytes());
+            a[8..16].copy_from_slice(&(i ^ 0xABCD).to_le_bytes());
+            a
+        })
+        .collect();
+    b.bench_elems("store-insert/full-arena", 2 * items.len() as u64, || {
+        let mut s = VisitedStore::new(StoreKind::Full);
+        for it in &items {
+            black_box(s.insert(it));
+        }
+        for it in &items {
+            black_box(s.insert(it)); // duplicate probe path
+        }
+        s.len()
+    });
+
+    // --- BENCH_checker.json ---------------------------------------------
+    let path = std::env::var("MCAT_BENCH_JSON").unwrap_or_else(|_| "../BENCH_checker.json".into());
+    let mean_of = |name: &str| {
+        b.results()
+            .iter()
+            .find(|r| r.name.ends_with(name))
+            .map(|r| r.mean.as_secs_f64())
+    };
+    let speedup4 = match (mean_of("explore/seq"), mean_of("explore/par4")) {
+        (Some(s), Some(p4)) if p4 > 0.0 => s / p4,
+        _ => 0.0,
+    };
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"checker_hot_path\",\n");
+    json.push_str(&format!("  \"model\": \"abstract size={} tick\",\n", size));
+    json.push_str(&format!("  \"states\": {},\n", states));
+    json.push_str(&format!("  \"speedup_par4_vs_seq\": {:.3},\n", speedup4));
+    json.push_str("  \"results\": [\n");
+    let n = b.results().len();
+    for (i, r) in b.results().iter().enumerate() {
+        let thrpt = r
+            .elements
+            .map(|e| e as f64 / r.mean.as_secs_f64())
+            .unwrap_or(0.0);
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"per_sec\": {:.1}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean.as_nanos(),
+            thrpt,
+            if i + 1 < n { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path),
+        Err(e) => eprintln!("could not write {}: {}", path, e),
+    }
+}

@@ -1,4 +1,4 @@
-//! The explicit-state search engine — our SPIN.
+//! The sequential explicit-state search engine — our SPIN.
 //!
 //! Iterative DFS over a [`TransitionSystem`] with a pluggable visited
 //! store, safety-property monitoring at every new state, trail
@@ -6,11 +6,19 @@
 //! depth bound (SPIN `-m`), state/memory/time budgets, and optionally
 //! randomized successor order (the diversification knob swarm workers
 //! use).
+//!
+//! Hot-path discipline: the property is compiled once
+//! ([`SafetyLtl::compile`]) so per-state monitoring is a bulk slot read
+//! plus a linear bytecode pass (no string lookups, no AST recursion), and
+//! successor buffers are recycled through a freelist so the steady-state
+//! loop performs no allocation. The `Full` store bump-allocates encodings
+//! into an arena (see [`super::store`]). The multi-threaded engine built
+//! on the same report types lives in [`super::parallel`].
 
 use super::store::{StoreKind, VisitedStore};
-use crate::model::{SafetyLtl, Trail, TransitionSystem, Violation};
-use crate::util::rng::Xoshiro256;
+use crate::model::{EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};
 use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +41,11 @@ pub struct CheckOptions {
     pub collect_all: bool,
     pub max_errors: usize,
     pub order: Order,
+    /// worker threads for exhaustive search (1 = sequential DFS; 0 = one
+    /// per available core). `checker::check` dispatches to the parallel
+    /// engine when this exceeds 1 and the store is exact (full/compact);
+    /// bitstate searches always run per-worker (see `swarm`).
+    pub threads: u32,
 }
 
 impl Default for CheckOptions {
@@ -46,6 +59,18 @@ impl Default for CheckOptions {
             collect_all: false,
             max_errors: 1_000_000,
             order: Order::InOrder,
+            threads: 1,
+        }
+    }
+}
+
+impl CheckOptions {
+    /// Resolve `threads`: 0 means one worker per available core.
+    pub fn effective_threads(&self) -> u32 {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(1)
+        } else {
+            self.threads
         }
     }
 }
@@ -65,6 +90,9 @@ pub struct SearchStats {
     pub states_matched: u64,
     pub transitions: u64,
     pub max_depth_reached: usize,
+    /// visited-store footprint (the DFS stack is budgeted separately
+    /// against `memory_budget` but not reported here, so store regimes
+    /// stay comparable across engines)
     pub bytes_used: u64,
     pub elapsed: Duration,
     /// first limit that fired, if any
@@ -102,16 +130,18 @@ impl<S> CheckReport<S> {
 struct Frame<S> {
     state: S,
     succs: Vec<S>,
-    next: usize,
 }
 
-/// Verify `G(prop)` on `model`. Violations carry full trails.
+/// Verify `G(prop)` on `model`, single-threaded. Violations carry full
+/// trails. (`checker::check` dispatches here for `threads <= 1`.)
 pub fn check<M: TransitionSystem>(
     model: &M,
     prop: &SafetyLtl,
     opts: &CheckOptions,
 ) -> Result<CheckReport<M::State>> {
     let start = Instant::now();
+    let compiled = prop.compile(model)?;
+    let mut scratch = EvalScratch::default();
     let mut store = VisitedStore::new(opts.store);
     let mut stats = SearchStats::default();
     let mut violations = Vec::new();
@@ -122,16 +152,22 @@ pub fn check<M: TransitionSystem>(
     };
     let mut enc = Vec::with_capacity(64);
 
-    // retained across iterations to avoid re-allocating successor vectors
     let mut stack: Vec<Frame<M::State>> = Vec::new();
+    // retired successor buffers, reused by later expansions (zero
+    // steady-state allocation: `successors` clears its out-param)
+    let mut freelist: Vec<Vec<M::State>> = Vec::new();
+    // heap bytes held by successor buffers (stack + freelist), maintained
+    // incrementally so the budget check below stays O(1)
+    let mut succ_heap: usize = 0;
+    let state_size = std::mem::size_of::<M::State>();
 
-    let check_state = |s: &M::State,
-                           depth: usize,
-                           stack: &[Frame<M::State>],
-                           violations: &mut Vec<Violation<M::State>>|
+    let record = |s: &M::State,
+                  depth: usize,
+                  stack: &[Frame<M::State>],
+                  violations: &mut Vec<Violation<M::State>>,
+                  scratch: &mut EvalScratch|
      -> Result<()> {
-        let lookup = |name: &str| model.eval_var(s, name);
-        if !prop.holds(&lookup)? {
+        if !compiled.holds_state(model, s, scratch)? {
             let mut states: Vec<M::State> =
                 stack.iter().map(|f| f.state.clone()).collect();
             states.push(s.clone());
@@ -151,7 +187,7 @@ pub fn check<M: TransitionSystem>(
             continue;
         }
         stats.states_stored += 1;
-        check_state(&init, 0, &stack, &mut violations)?;
+        record(&init, 0, &stack, &mut violations, &mut scratch)?;
         if violations.len() >= opts.max_errors || (!opts.collect_all && !violations.is_empty()) {
             if violations.len() >= opts.max_errors {
                 stats.abort = Some(Abort::ErrorLimit);
@@ -160,22 +196,23 @@ pub fn check<M: TransitionSystem>(
             break 'outer;
         }
 
-        let mut succs = Vec::new();
+        let mut succs = freelist.pop().unwrap_or_default();
+        let cap_before = succs.capacity();
         model.successors(&init, &mut succs);
+        succ_heap += (succs.capacity() - cap_before) * state_size;
         stats.transitions += succs.len() as u64;
         if let Some(r) = rng.as_mut() {
             r.shuffle(&mut succs);
         }
-        stack.push(Frame { state: init, succs, next: 0 });
+        stack.push(Frame { state: init, succs });
 
         while let Some(top) = stack.last_mut() {
             // take successors back-to-front: avoids a clone per transition
-            // (`next` counts consumed successors for stats only)
             let Some(s) = top.succs.pop() else {
-                stack.pop();
+                let f = stack.pop().expect("stack nonempty inside loop");
+                freelist.push(f.succs);
                 continue;
             };
-            top.next += 1;
 
             model.encode(&s, &mut enc);
             if !store.insert(&enc) {
@@ -186,7 +223,7 @@ pub fn check<M: TransitionSystem>(
             let depth = stack.len();
             stats.max_depth_reached = stats.max_depth_reached.max(depth);
 
-            check_state(&s, depth, &stack, &mut violations)?;
+            record(&s, depth, &stack, &mut violations, &mut scratch)?;
             let err_limit = violations.len() >= opts.max_errors;
             if err_limit || (!opts.collect_all && !violations.is_empty()) {
                 if err_limit {
@@ -196,14 +233,22 @@ pub fn check<M: TransitionSystem>(
                 break 'outer;
             }
 
-            // budget checks (amortized: every 4096 stored states)
+            // state budget: checked on every insert (one compare), so both
+            // engines abort at the same threshold regardless of cadence
+            if stats.states_stored >= opts.max_states {
+                stats.abort = Some(Abort::StateLimit);
+                exhausted = false;
+                break 'outer;
+            }
+
+            // expensive budget checks (amortized: every 4096 stored states)
             if stats.states_stored % 4096 == 0 {
-                if stats.states_stored >= opts.max_states {
-                    stats.abort = Some(Abort::StateLimit);
-                    exhausted = false;
-                    break 'outer;
-                }
-                if store.bytes_used() >= opts.memory_budget {
+                // the DFS stack counts against the budget too: frames plus
+                // the successor buffers they (and the freelist) retain
+                let stack_bytes = (succ_heap
+                    + stack.capacity() * std::mem::size_of::<Frame<M::State>>())
+                    as u64;
+                if store.bytes_used() + stack_bytes >= opts.memory_budget {
                     stats.abort = Some(Abort::MemoryLimit);
                     exhausted = false;
                     break 'outer;
@@ -224,13 +269,15 @@ pub fn check<M: TransitionSystem>(
                 continue;
             }
 
-            let mut succs = Vec::new();
+            let mut succs = freelist.pop().unwrap_or_default();
+            let cap_before = succs.capacity();
             model.successors(&s, &mut succs);
+            succ_heap += (succs.capacity() - cap_before) * state_size;
             stats.transitions += succs.len() as u64;
             if let Some(r) = rng.as_mut() {
                 r.shuffle(&mut succs);
             }
-            stack.push(Frame { state: s, succs, next: 0 });
+            stack.push(Frame { state: s, succs });
         }
     }
 
@@ -302,7 +349,7 @@ mod tests {
         let r = check(&m, &p, &CheckOptions::default()).unwrap();
         assert!(r.exhausted);
         assert!(!r.found());
-        assert_eq!(r.verdict().unwrap(), true);
+        assert!(r.verdict().unwrap());
         // 2^11 - 1 nodes
         assert_eq!(r.stats.states_stored, 2047);
         assert_eq!(r.stats.max_depth_reached, 10);
@@ -315,7 +362,7 @@ mod tests {
         let p = SafetyLtl::parse("G(leaf -> path != 37)").unwrap();
         let r = check(&m, &p, &CheckOptions::default()).unwrap();
         assert!(r.found());
-        assert_eq!(r.verdict().unwrap(), false);
+        assert!(!r.verdict().unwrap());
         let v = &r.violations[0];
         assert_eq!(v.trail.steps(), 8);
         assert_eq!(v.trail.final_var(&m, "path"), Some(37));
@@ -418,5 +465,15 @@ mod tests {
         let m = Tree { depth: 3 };
         let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
         assert!(check(&m, &p, &CheckOptions::default()).is_err());
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        let mut o = CheckOptions::default();
+        assert_eq!(o.effective_threads(), 1);
+        o.threads = 3;
+        assert_eq!(o.effective_threads(), 3);
+        o.threads = 0;
+        assert!(o.effective_threads() >= 1);
     }
 }

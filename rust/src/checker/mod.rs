@@ -1,13 +1,48 @@
 //! Explicit-state model checker — our from-scratch SPIN counterpart.
 //!
-//! [`check`] runs an exhaustive (or budget-bounded) DFS verifying a
+//! [`check`] runs an exhaustive (or budget-bounded) search verifying a
 //! safety-LTL property, with SPIN-analogous knobs: visited-store regime
 //! (full / hash-compact / bitstate), depth bound (`-m`), multi-error
 //! collection (`-e`), and memory/time budgets. Violations carry replayable
 //! trails, from which the tuner extracts parameter configurations.
+//!
+//! Two engines share the report types: the sequential DFS ([`dfs`],
+//! exported as [`check_sequential`]) and the lock-sharded parallel
+//! frontier search ([`parallel`], exported as [`check_parallel`]).
+//! [`check`] dispatches on [`CheckOptions::threads`]: exact stores
+//! (full/compact) with `threads > 1` (or `0` = all cores) run parallel;
+//! everything else — including bitstate, whose parallel form is the
+//! one-filter-per-worker [`crate::swarm`] — runs the sequential engine.
 
 pub mod dfs;
+pub mod parallel;
 pub mod store;
 
-pub use dfs::{check, Abort, CheckOptions, CheckReport, Order, SearchStats};
+pub use dfs::{check as check_sequential, Abort, CheckOptions, CheckReport, Order, SearchStats};
+pub use parallel::check_parallel;
 pub use store::{StoreKind, VisitedStore};
+
+use crate::model::{SafetyLtl, TransitionSystem};
+use crate::util::error::Result;
+
+/// Verify `G(prop)` on `model`, dispatching on `opts.threads` (see module
+/// docs). On full explorations both engines return identical
+/// `states_stored`, verdict and `exhausted`; budget-limited runs abort at
+/// the same thresholds, though the parallel engine may store a few extra
+/// states before the stop flag propagates (and its per-state backlink
+/// bookkeeping charges the memory budget slightly earlier).
+pub fn check<M>(
+    model: &M,
+    prop: &SafetyLtl,
+    opts: &CheckOptions,
+) -> Result<CheckReport<M::State>>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    if opts.effective_threads() > 1 && !matches!(opts.store, StoreKind::Bitstate { .. }) {
+        parallel::check_parallel(model, prop, opts)
+    } else {
+        dfs::check(model, prop, opts)
+    }
+}

@@ -1,0 +1,676 @@
+//! Parallel exhaustive search — one verification run scaled across cores.
+//!
+//! The sequential engine ([`super::dfs`]) explores depth-first with a
+//! single visited store. This engine keeps the *same semantics and report*
+//! (`states_stored`, violations-found verdict, `exhausted` flag) but
+//! splits the work two ways:
+//!
+//! - **Lock-sharded visited store** ([`ShardedStore`]): N independently
+//!   mutexed shards (N = threads × 8, rounded to a power of two), routed
+//!   by the top bits of the state hash — the store index probes use the
+//!   low bits, so shard routing costs no extra hashing and inserts on
+//!   different shards never contend. Supports the exact regimes: `Full`
+//!   (arena store + backlink map) and `HashCompact` (the backlink map's
+//!   key set doubles as the visited set). `Bitstate` is deliberately *not*
+//!   sharded: a shared Bloom filter would make every worker's false
+//!   positives prune every other worker's frontier, destroying the
+//!   independence that gives swarm verification its coverage guarantees —
+//!   bitstate search stays one-filter-per-worker in [`crate::swarm`].
+//! - **Work-stealing frontier**: each worker expands states off a private
+//!   stack and steals batches from a shared pool when it runs dry; workers
+//!   with surplus push half their stack to the pool whenever a peer is
+//!   idle. Termination is detected when every worker is idle and the pool
+//!   is empty ([`Queue::fetch`]).
+//!
+//! Counterexample trails cannot be read off a DFS stack here, so every
+//! stored state records a parent-hash backlink in its shard; a violation's
+//! trail is reconstructed after the search by walking backlinks to an
+//! initial state and replaying `successors` forward along the hash chain
+//! ([`reconstruct`]).
+//!
+//! Determinism: on a full (un-aborted, un-stopped) exploration the set of
+//! stored states — and therefore `states_stored`, `states_matched`,
+//! `transitions` and the verdict — is identical to the sequential
+//! engine's, regardless of scheduling. Exploration *order* is not
+//! deterministic, so with `collect_all` the violations arrive unordered
+//! (they are sorted by discovery time) and early-stop runs may store a few
+//! more states than the sequential engine before the stop flag propagates.
+
+use super::dfs::{self, Abort, CheckOptions, CheckReport, Order, SearchStats};
+use super::store::{FullStore, StoreKind};
+use crate::model::{CompiledProp, EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};
+use crate::util::error::{Error, Result};
+use crate::util::hash::{hash_bytes, FxHashMap};
+use crate::util::rng::Xoshiro256;
+use std::collections::hash_map::Entry;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Parent-hash sentinel for initial states.
+const ROOT: u64 = u64::MAX;
+
+/// Steal granularity and local-stack overflow threshold.
+const BATCH: usize = 64;
+const LOCAL_MAX: usize = 2 * BATCH;
+
+/// One shard: a state-hash → parent-hash backlink map (for trail
+/// reconstruction), plus — in the `Full` regime — the exact arena store.
+/// In the `HashCompact` regime the backlink map's key set *is* the visited
+/// set, so the 64-bit state hashes are not stored twice.
+struct Shard {
+    /// exact byte-level dedup (None = HashCompact: dedup by map key)
+    full: Option<FullStore>,
+    parents: FxHashMap<u64, u64>,
+}
+
+/// The lock-sharded concurrent visited store (see module docs).
+pub struct ShardedStore {
+    shards: Vec<Mutex<Shard>>,
+    shift: u32,
+    /// running per-insert footprint estimate, so the workers' amortized
+    /// memory-budget check is one relaxed load instead of sweeping every
+    /// shard lock (exact accounting via `bytes_used` runs once, at the end)
+    approx_bytes: AtomicU64,
+}
+
+impl ShardedStore {
+    fn new(kind: StoreKind, want_shards: usize) -> Self {
+        let n = want_shards.max(2).next_power_of_two();
+        let full = matches!(kind, StoreKind::Full);
+        let shards = (0..n)
+            .map(|_| {
+                Mutex::new(Shard {
+                    full: full.then(FullStore::new),
+                    parents: FxHashMap::default(),
+                })
+            })
+            .collect();
+        Self { shards, shift: 64 - n.trailing_zeros(), approx_bytes: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn shard_of(&self, h: u64) -> usize {
+        (h >> self.shift) as usize
+    }
+
+    /// Insert an encoded state (hash precomputed); records the parent
+    /// backlink when new. Returns true when the state was not seen before.
+    fn insert(&self, enc: &[u8], h: u64, parent: u64) -> bool {
+        let mut guard = self.shards[self.shard_of(h)].lock().expect("shard poisoned");
+        let sh = &mut *guard; // reborrow so the two fields split cleanly
+        let new = match &mut sh.full {
+            Some(fs) => {
+                if fs.insert_hashed(enc, h) {
+                    // on a (astronomically rare) 64-bit collision keep the
+                    // first backlink so existing chains stay intact
+                    sh.parents.entry(h).or_insert(parent);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => match sh.parents.entry(h) {
+                Entry::Occupied(_) => false,
+                Entry::Vacant(v) => {
+                    v.insert(parent);
+                    true
+                }
+            },
+        };
+        if new {
+            // arena bytes + entry + table slot (Full only) + backlink entry
+            let delta = if sh.full.is_some() { enc.len() as u64 + 28 + 24 } else { 24 };
+            self.approx_bytes.fetch_add(delta, Ordering::Relaxed);
+        }
+        new
+    }
+
+    fn approx_bytes(&self) -> u64 {
+        self.approx_bytes.load(Ordering::Relaxed)
+    }
+
+    fn parent_of(&self, h: u64) -> Option<u64> {
+        self.shards[self.shard_of(h)]
+            .lock()
+            .expect("shard poisoned")
+            .parents
+            .get(&h)
+            .copied()
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                let sh = s.lock().expect("shard poisoned");
+                // ~24 B/entry for the backlink map (key + value + bucket)
+                sh.full.as_ref().map_or(0, |fs| fs.bytes_used())
+                    + sh.parents.len() as u64 * 24
+            })
+            .sum()
+    }
+}
+
+struct Task<S> {
+    state: S,
+    hash: u64,
+    depth: u32,
+}
+
+struct QueueInner<S> {
+    tasks: Vec<Task<S>>,
+    idle: usize,
+    done: bool,
+}
+
+struct Queue<S> {
+    inner: Mutex<QueueInner<S>>,
+    cv: Condvar,
+}
+
+impl<S> Queue<S> {
+    /// Refill `local` from the shared pool, or block until work appears.
+    /// Returns None when the search is over (stop flag, or every worker
+    /// idle on an empty pool).
+    fn fetch(&self, ctl: &Control, n_workers: usize, local: &mut Vec<Task<S>>) -> Option<Task<S>> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if g.done || ctl.stop.load(Ordering::Relaxed) {
+                g.done = true;
+                self.cv.notify_all();
+                return None;
+            }
+            if !g.tasks.is_empty() {
+                let take = (g.tasks.len() / 2).clamp(1, BATCH);
+                let at = g.tasks.len() - take;
+                local.extend(g.tasks.drain(at..));
+                return local.pop();
+            }
+            g.idle += 1;
+            ctl.idle.fetch_add(1, Ordering::Relaxed);
+            if g.idle == n_workers {
+                g.done = true;
+                self.cv.notify_all();
+                ctl.idle.fetch_sub(1, Ordering::Relaxed);
+                return None;
+            }
+            g = self.cv.wait(g).expect("queue poisoned");
+            g.idle -= 1;
+            ctl.idle.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Donate the older (shallower) half of `local` to the shared pool —
+    /// shallow states root the larger unexplored subtrees, so peers get
+    /// the most work per steal.
+    fn share(&self, local: &mut Vec<Task<S>>) {
+        let donate = local.len() / 2;
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.tasks.extend(local.drain(..donate));
+        self.cv.notify_all();
+    }
+
+    /// Wake everyone and mark the search finished (stop flag already set).
+    fn close(&self) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.done = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Dropped when a worker exits for any reason — normal completion, error,
+/// or panic unwind. Stops and wakes every peer so one dying worker can
+/// never leave the rest blocked in [`Queue::fetch`] (the panic itself
+/// still propagates through the scope join). On a normal exit the search
+/// is already done, so the extra stop/close is a no-op.
+struct ReleasePeersOnExit<'a, S> {
+    queue: &'a Queue<S>,
+    ctl: &'a Control,
+}
+
+impl<S> Drop for ReleasePeersOnExit<'_, S> {
+    fn drop(&mut self) {
+        self.ctl.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+    }
+}
+
+struct Control {
+    stop: AtomicBool,
+    /// workers currently blocked waiting for work (sharing heuristic)
+    idle: AtomicUsize,
+    /// global stored-state count (budget enforcement; exact)
+    states_stored: AtomicU64,
+    /// first hard limit that fired
+    abort: Mutex<Option<Abort>>,
+    /// some state hit the depth bound (soft: only reported when no hard
+    /// limit fired, mirroring the sequential engine)
+    truncated: AtomicBool,
+}
+
+impl Control {
+    fn hard_abort(&self, a: Abort) {
+        self.abort.lock().expect("abort poisoned").get_or_insert(a);
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+struct Pending<S> {
+    state: S,
+    hash: u64,
+    depth: u32,
+    found_after: Duration,
+}
+
+#[derive(Default)]
+struct LocalStats {
+    stored: u64,
+    matched: u64,
+    transitions: u64,
+    max_depth: usize,
+}
+
+/// Verify `G(prop)` on `model` with `opts.threads` workers. Same report
+/// semantics as the sequential [`dfs::check`]; requires an exact store
+/// (`Full` or `HashCompact` — see module docs for why bitstate refuses).
+pub fn check_parallel<M>(
+    model: &M,
+    prop: &SafetyLtl,
+    opts: &CheckOptions,
+) -> Result<CheckReport<M::State>>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    if matches!(opts.store, StoreKind::Bitstate { .. }) {
+        crate::bail!(
+            "parallel exhaustive search requires an exact store (full | compact); \
+             bitstate parallelism is one independent filter per worker — use swarm::swarm"
+        );
+    }
+    let threads = opts.effective_threads().max(1);
+    if threads == 1 {
+        return dfs::check(model, prop, opts);
+    }
+
+    let start = Instant::now();
+    let compiled = prop.compile(model)?;
+    let store = ShardedStore::new(opts.store, threads as usize * 8);
+    let ctl = Control {
+        stop: AtomicBool::new(false),
+        idle: AtomicUsize::new(0),
+        states_stored: AtomicU64::new(0),
+        abort: Mutex::new(None),
+        truncated: AtomicBool::new(false),
+    };
+    let pending: Mutex<Vec<Pending<M::State>>> = Mutex::new(Vec::new());
+    let mut seed_stats = LocalStats::default();
+
+    // seed: insert + monitor the initial states on this thread, exactly
+    // like the sequential engine's outer loop preamble
+    let mut seed_tasks: Vec<Task<M::State>> = Vec::new();
+    {
+        let mut enc = Vec::with_capacity(64);
+        let mut scratch = EvalScratch::default();
+        for init in model.initial_states() {
+            model.encode(&init, &mut enc);
+            let h = hash_bytes(&enc);
+            if !store.insert(&enc, h, ROOT) {
+                seed_stats.matched += 1;
+                continue;
+            }
+            seed_stats.stored += 1;
+            ctl.states_stored.fetch_add(1, Ordering::Relaxed);
+            if !compiled.holds_state(model, &init, &mut scratch)? {
+                let n = {
+                    let mut p = pending.lock().expect("pending poisoned");
+                    p.push(Pending {
+                        state: init.clone(),
+                        hash: h,
+                        depth: 0,
+                        found_after: start.elapsed(),
+                    });
+                    p.len()
+                };
+                if n >= opts.max_errors {
+                    ctl.hard_abort(Abort::ErrorLimit);
+                    break;
+                }
+                if !opts.collect_all {
+                    ctl.stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+            seed_tasks.push(Task { state: init, hash: h, depth: 0 });
+        }
+    }
+
+    let queue = Queue {
+        inner: Mutex::new(QueueInner { tasks: seed_tasks, idle: 0, done: false }),
+        cv: Condvar::new(),
+    };
+
+    let n_workers = threads as usize;
+    let worker_results: Vec<Result<LocalStats>> = std::thread::scope(|scope| {
+        let compiled = &compiled;
+        let store = &store;
+        let ctl = &ctl;
+        let pending = &pending;
+        let queue = &queue;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let _release = ReleasePeersOnExit { queue, ctl };
+                    worker_loop(
+                        model, compiled, opts, store, queue, ctl, pending, start, n_workers, w,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("checker worker panicked"))
+            .collect()
+    });
+
+    let mut stats = SearchStats {
+        states_stored: seed_stats.stored,
+        states_matched: seed_stats.matched,
+        transitions: seed_stats.transitions,
+        max_depth_reached: seed_stats.max_depth,
+        ..SearchStats::default()
+    };
+    let mut first_err: Option<Error> = None;
+    for r in worker_results {
+        match r {
+            Ok(ls) => {
+                stats.states_stored += ls.stored;
+                stats.states_matched += ls.matched;
+                stats.transitions += ls.transitions;
+                stats.max_depth_reached = stats.max_depth_reached.max(ls.max_depth);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    // resolve violations: order by discovery time, honor the error caps
+    let mut pend = pending.into_inner().expect("pending poisoned");
+    pend.sort_by_key(|p| p.found_after);
+    if !opts.collect_all {
+        pend.truncate(1);
+    }
+    pend.truncate(opts.max_errors);
+    let violations: Vec<Violation<M::State>> =
+        pend.iter().map(|p| reconstruct(model, &store, p)).collect();
+
+    let hard_abort = *ctl.abort.lock().expect("abort poisoned");
+    let truncated = ctl.truncated.load(Ordering::Relaxed);
+    stats.abort = hard_abort.or(if truncated { Some(Abort::DepthTruncated) } else { None });
+    let mut exhausted = hard_abort.is_none() && !truncated;
+    if !opts.collect_all && !violations.is_empty() {
+        exhausted = false; // stopped early by design
+    }
+    stats.bytes_used = store.bytes_used();
+    stats.elapsed = start.elapsed();
+    Ok(CheckReport { violations, stats, exhausted })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<M>(
+    model: &M,
+    compiled: &CompiledProp,
+    opts: &CheckOptions,
+    store: &ShardedStore,
+    queue: &Queue<M::State>,
+    ctl: &Control,
+    pending: &Mutex<Vec<Pending<M::State>>>,
+    start: Instant,
+    n_workers: usize,
+    worker: u32,
+) -> Result<LocalStats>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let mut stats = LocalStats::default();
+    let mut local: Vec<Task<M::State>> = Vec::new();
+    let mut succs: Vec<M::State> = Vec::new();
+    let mut enc: Vec<u8> = Vec::with_capacity(64);
+    let mut scratch = EvalScratch::default();
+    let mut rng = match opts.order {
+        Order::Random(seed) => Some(Xoshiro256::new(
+            seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )),
+        Order::InOrder => None,
+    };
+    let mut processed: u32 = 0;
+
+    loop {
+        let task = match local.pop() {
+            Some(t) => t,
+            None => match queue.fetch(ctl, n_workers, &mut local) {
+                Some(t) => t,
+                None => break,
+            },
+        };
+        if ctl.stop.load(Ordering::Relaxed) {
+            break;
+        }
+
+        model.successors(&task.state, &mut succs);
+        stats.transitions += succs.len() as u64;
+        if let Some(r) = rng.as_mut() {
+            r.shuffle(&mut succs);
+        }
+        let child_depth = task.depth + 1;
+        for s in succs.drain(..) {
+            model.encode(&s, &mut enc);
+            let h = hash_bytes(&enc);
+            if !store.insert(&enc, h, task.hash) {
+                stats.matched += 1;
+                continue;
+            }
+            stats.stored += 1;
+            stats.max_depth = stats.max_depth.max(child_depth as usize);
+            let total = ctl.states_stored.fetch_add(1, Ordering::Relaxed) + 1;
+
+            if !compiled.holds_state(model, &s, &mut scratch)? {
+                let n = {
+                    let mut p = pending.lock().expect("pending poisoned");
+                    p.push(Pending {
+                        state: s.clone(),
+                        hash: h,
+                        depth: child_depth,
+                        found_after: start.elapsed(),
+                    });
+                    p.len()
+                };
+                if n >= opts.max_errors {
+                    ctl.hard_abort(Abort::ErrorLimit);
+                    queue.close();
+                } else if !opts.collect_all {
+                    ctl.stop.store(true, Ordering::Relaxed);
+                    queue.close();
+                }
+            }
+
+            if total >= opts.max_states {
+                ctl.hard_abort(Abort::StateLimit);
+                queue.close();
+            }
+
+            if (child_depth as usize) < opts.max_depth {
+                local.push(Task { state: s, hash: h, depth: child_depth });
+            } else {
+                // stored but not expanded (SPIN -m semantics)
+                ctl.truncated.store(true, Ordering::Relaxed);
+            }
+        }
+
+        // donate work whenever a peer is starving (or we are hoarding)
+        if local.len() >= 2
+            && (local.len() > LOCAL_MAX || ctl.idle.load(Ordering::Relaxed) > 0)
+        {
+            queue.share(&mut local);
+        }
+
+        // amortized checks: a clock read and one relaxed atomic load every
+        // 256 tasks; a capacity-exact sweep (locks every shard, so it also
+        // catches Vec/hash-table slack the estimate misses) every 64k
+        processed = processed.wrapping_add(1);
+        if processed % 256 == 0 {
+            if let Some(tb) = opts.time_budget {
+                if start.elapsed() >= tb {
+                    ctl.hard_abort(Abort::TimeLimit);
+                    queue.close();
+                }
+            }
+            let over = if processed % 65_536 == 0 {
+                store.bytes_used() >= opts.memory_budget
+            } else {
+                store.approx_bytes() >= opts.memory_budget
+            };
+            if over {
+                ctl.hard_abort(Abort::MemoryLimit);
+                queue.close();
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Rebuild a violation trail from parent-hash backlinks: walk hashes back
+/// to an initial state, then replay `successors` forward matching each
+/// hash on the chain. Falls back to a single-state trail if the chain
+/// cannot be replayed (possible only under 64-bit hash collisions).
+fn reconstruct<M: TransitionSystem>(
+    model: &M,
+    store: &ShardedStore,
+    p: &Pending<M::State>,
+) -> Violation<M::State> {
+    let fallback = |state: &M::State| Violation {
+        trail: Trail { states: vec![state.clone()] },
+        depth: p.depth as usize,
+        found_after: p.found_after,
+    };
+
+    let mut chain = vec![p.hash];
+    let mut cur = p.hash;
+    loop {
+        match store.parent_of(cur) {
+            Some(ROOT) => break,
+            Some(parent) => {
+                chain.push(parent);
+                cur = parent;
+            }
+            None => return fallback(&p.state), // broken link: give up
+        }
+    }
+    chain.reverse();
+
+    let mut enc = Vec::with_capacity(64);
+    let mut states: Vec<M::State> = Vec::with_capacity(chain.len());
+    let mut cur_state = None;
+    for init in model.initial_states() {
+        model.encode(&init, &mut enc);
+        if hash_bytes(&enc) == chain[0] {
+            cur_state = Some(init);
+            break;
+        }
+    }
+    let Some(mut cs) = cur_state else {
+        return fallback(&p.state);
+    };
+    states.push(cs.clone());
+    let mut succs = Vec::new();
+    for &want in &chain[1..] {
+        model.successors(&cs, &mut succs);
+        let mut found = None;
+        for s in succs.drain(..) {
+            model.encode(&s, &mut enc);
+            if hash_bytes(&enc) == want {
+                found = Some(s);
+                break;
+            }
+        }
+        match found {
+            Some(s) => {
+                states.push(s.clone());
+                cs = s;
+            }
+            None => return fallback(&p.state),
+        }
+    }
+    Violation {
+        trail: Trail { states },
+        depth: p.depth as usize,
+        found_after: p.found_after,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AbstractModel, Granularity, PlatformConfig};
+
+    fn popts(threads: u32) -> CheckOptions {
+        CheckOptions { threads, ..CheckOptions::default() }
+    }
+
+    #[test]
+    fn parallel_explores_same_space_as_sequential() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let seq = dfs::check(&m, &p, &CheckOptions::default()).unwrap();
+        let par = check_parallel(&m, &p, &popts(4)).unwrap();
+        assert_eq!(par.stats.states_stored, seq.stats.states_stored);
+        assert_eq!(par.stats.states_matched, seq.stats.states_matched);
+        assert_eq!(par.stats.transitions, seq.stats.transitions);
+        assert!(par.exhausted);
+        assert!(par.verdict().unwrap());
+    }
+
+    #[test]
+    fn parallel_rejects_bitstate() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = popts(4);
+        o.store = StoreKind::Bitstate { log2_bits: 20, hashes: 3 };
+        assert!(check_parallel(&m, &p, &o).is_err());
+    }
+
+    #[test]
+    fn parallel_single_thread_falls_back_to_dfs() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let r = check_parallel(&m, &p, &popts(1)).unwrap();
+        assert!(r.exhausted);
+    }
+
+    #[test]
+    fn parallel_state_limit_aborts() {
+        let m = AbstractModel::new(256, PlatformConfig::default(), Granularity::Tick).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = popts(4);
+        o.max_states = 1000;
+        let r = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(r.stats.abort, Some(Abort::StateLimit));
+        assert!(!r.exhausted);
+        assert!(r.verdict().is_err());
+    }
+
+    #[test]
+    fn parallel_unknown_var_is_error() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
+        assert!(check_parallel(&m, &p, &popts(4)).is_err());
+    }
+}

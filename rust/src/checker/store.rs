@@ -1,17 +1,23 @@
 //! Visited-state stores — the checker's memory subsystem.
 //!
 //! Three regimes mirror SPIN's:
-//! - `Full`: exact (stores the encoded state vector) — SPIN's default;
+//! - `Full`: exact (stores the encoded state vector) — SPIN's default.
+//!   Backed by [`FullStore`]: encoded states are bump-appended to one
+//!   contiguous byte arena and deduplicated through a hand-rolled
+//!   open-addressing table, so an insert costs one hash and one probe
+//!   sequence with **no per-state allocation** (the seed version boxed
+//!   every state and hashed it twice via `contains` + `insert`);
 //! - `HashCompact`: 64-bit hash compaction (SPIN `-DHC`) — exact up to
 //!   hash collisions, 8 bytes/state;
 //! - `Bitstate`: Bloom-filter bitstate hashing (SPIN `-DBITSTATE`, the
 //!   basis of swarm verification) — k probes into a 2^log2_bits bit table.
 //!
-//! `insert` returns whether the state was new. `bytes_used` feeds the
-//! memory budget that reproduces the paper's 16 GB exhaustive-mode ceiling
-//! (Table 1).
+//! `insert` returns whether the state was new; `insert_hashed` is the same
+//! with a caller-supplied hash (the parallel engine hashes once for shard
+//! selection and reuses it). `bytes_used` feeds the memory budget that
+//! reproduces the paper's 16 GB exhaustive-mode ceiling (Table 1).
 
-use crate::util::hash::{hash_bytes_seeded, FxHashSet};
+use crate::util::hash::{hash_bytes, hash_bytes_seeded, FxHashSet};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StoreKind {
@@ -30,8 +36,92 @@ impl StoreKind {
     }
 }
 
+#[derive(Clone, Copy)]
+struct FullEntry {
+    hash: u64,
+    pos: usize,
+    len: u32,
+}
+
+/// Arena-backed exact store: one byte arena, one entry record per state,
+/// one open-addressing index (slot = entry index + 1, 0 = empty).
+pub struct FullStore {
+    data: Vec<u8>,
+    entries: Vec<FullEntry>,
+    table: Vec<u32>,
+    mask: usize,
+}
+
+const FULL_INIT_SLOTS: usize = 1 << 10;
+
+impl FullStore {
+    pub(crate) fn new() -> Self {
+        Self {
+            data: Vec::new(),
+            entries: Vec::new(),
+            table: vec![0u32; FULL_INIT_SLOTS],
+            mask: FULL_INIT_SLOTS - 1,
+        }
+    }
+
+    #[inline]
+    fn entry_bytes(&self, e: &FullEntry) -> &[u8] {
+        &self.data[e.pos..e.pos + e.len as usize]
+    }
+
+    /// Single-probe insert: hash once (caller-supplied), walk one linear
+    /// probe sequence, and either match an existing entry or append to the
+    /// arena in place.
+    pub(crate) fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
+        let mut i = (h as usize) & self.mask;
+        loop {
+            let slot = self.table[i];
+            if slot == 0 {
+                let e = FullEntry { hash: h, pos: self.data.len(), len: enc.len() as u32 };
+                self.data.extend_from_slice(enc);
+                self.entries.push(e);
+                self.table[i] = self.entries.len() as u32;
+                // grow at 7/8 load so probe sequences stay short
+                if self.entries.len() * 8 >= self.table.len() * 7 {
+                    self.grow();
+                }
+                return true;
+            }
+            let e = self.entries[slot as usize - 1];
+            if e.hash == h && e.len as usize == enc.len() && self.entry_bytes(&e) == enc {
+                return false;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_len = self.table.len() * 2;
+        self.mask = new_len - 1;
+        self.table.clear();
+        self.table.resize(new_len, 0);
+        for (idx, e) in self.entries.iter().enumerate() {
+            let mut i = (e.hash as usize) & self.mask;
+            while self.table[i] != 0 {
+                i = (i + 1) & self.mask;
+            }
+            self.table[i] = (idx + 1) as u32;
+        }
+    }
+
+    pub(crate) fn len(&self) -> u64 {
+        self.entries.len() as u64
+    }
+
+    pub(crate) fn bytes_used(&self) -> u64 {
+        (self.data.capacity()
+            + self.entries.capacity() * std::mem::size_of::<FullEntry>()
+            + self.table.len() * std::mem::size_of::<u32>()) as u64
+    }
+}
+
 pub enum VisitedStore {
-    Full { set: FxHashSet<Box<[u8]>>, bytes: u64 },
+    Full(FullStore),
     HashCompact { set: FxHashSet<u64> },
     Bitstate { table: Vec<u64>, mask: u64, hashes: u8, set_bits: u64 },
 }
@@ -39,7 +129,7 @@ pub enum VisitedStore {
 impl VisitedStore {
     pub fn new(kind: StoreKind) -> Self {
         match kind {
-            StoreKind::Full => Self::Full { set: FxHashSet::default(), bytes: 0 },
+            StoreKind::Full => Self::Full(FullStore::new()),
             StoreKind::HashCompact => Self::HashCompact { set: FxHashSet::default() },
             StoreKind::Bitstate { log2_bits, hashes } => {
                 let log2 = log2_bits.clamp(10, 40);
@@ -59,37 +149,46 @@ impl VisitedStore {
     /// Bloom false-positive, which makes the search partial, as in SPIN.)
     pub fn insert(&mut self, enc: &[u8]) -> bool {
         match self {
-            Self::Full { set, bytes } => {
-                if set.contains(enc) {
-                    false
-                } else {
-                    *bytes += enc.len() as u64 + 48; // box + set overhead est.
-                    set.insert(enc.to_vec().into_boxed_slice());
-                    true
-                }
-            }
-            Self::HashCompact { set } => set.insert(hash_bytes_seeded(enc, 0)),
-            Self::Bitstate { table, mask, hashes, set_bits } => {
-                let mut new = false;
-                for k in 0..*hashes {
-                    let bit = hash_bytes_seeded(enc, 0x9E37 + k as u64) & *mask;
-                    let (w, b) = ((bit / 64) as usize, bit % 64);
-                    if table[w] & (1 << b) == 0 {
-                        table[w] |= 1 << b;
-                        *set_bits += 1;
-                        new = true;
-                    }
-                }
-                new
+            Self::Full(f) => f.insert_hashed(enc, hash_bytes(enc)),
+            Self::HashCompact { set } => set.insert(hash_bytes(enc)),
+            Self::Bitstate { .. } => self.insert_bitstate(enc),
+        }
+    }
+
+    /// [`insert`](Self::insert) with a caller-precomputed `hash_bytes(enc)`
+    /// — the parallel engine hashes once for shard routing and passes the
+    /// value through. Bitstate ignores the hint (its k Bloom probes use
+    /// independent seeds).
+    pub fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
+        match self {
+            Self::Full(f) => f.insert_hashed(enc, h),
+            Self::HashCompact { set } => set.insert(h),
+            Self::Bitstate { .. } => self.insert_bitstate(enc),
+        }
+    }
+
+    fn insert_bitstate(&mut self, enc: &[u8]) -> bool {
+        let Self::Bitstate { table, mask, hashes, set_bits } = self else {
+            unreachable!("insert_bitstate on non-bitstate store");
+        };
+        let mut new = false;
+        for k in 0..*hashes {
+            let bit = hash_bytes_seeded(enc, 0x9E37 + k as u64) & *mask;
+            let (w, b) = ((bit / 64) as usize, bit % 64);
+            if table[w] & (1 << b) == 0 {
+                table[w] |= 1 << b;
+                *set_bits += 1;
+                new = true;
             }
         }
+        new
     }
 
     /// Number of distinct states recorded (bitstate: lower-bound estimate
     /// from bit occupancy).
     pub fn len(&self) -> u64 {
         match self {
-            Self::Full { set, .. } => set.len() as u64,
+            Self::Full(f) => f.len(),
             Self::HashCompact { set } => set.len() as u64,
             Self::Bitstate { set_bits, hashes, .. } => set_bits / (*hashes).max(1) as u64,
         }
@@ -101,7 +200,7 @@ impl VisitedStore {
 
     pub fn bytes_used(&self) -> u64 {
         match self {
-            Self::Full { bytes, .. } => *bytes,
+            Self::Full(f) => f.bytes_used(),
             Self::HashCompact { set } => set.len() as u64 * 16,
             Self::Bitstate { table, .. } => table.len() as u64 * 8,
         }
@@ -138,6 +237,39 @@ mod tests {
         }
         assert_eq!(s.len(), 1000);
         assert!(s.bytes_used() > 1000 * 8);
+    }
+
+    #[test]
+    fn full_store_survives_table_growth() {
+        // cross several grow() boundaries, with variable-length encodings
+        let mut s = VisitedStore::new(StoreKind::Full);
+        let mut items: Vec<Vec<u8>> = Vec::new();
+        for i in 0u64..20_000 {
+            let mut v = i.to_le_bytes().to_vec();
+            v.truncate(1 + (i % 8) as usize);
+            v.push((i / 251) as u8); // disambiguate truncated prefixes
+            items.push(v);
+        }
+        items.sort();
+        items.dedup();
+        for it in &items {
+            assert!(s.insert(it), "fresh item reported as seen");
+        }
+        for it in &items {
+            assert!(!s.insert(it), "seen item reported as fresh after growth");
+        }
+        assert_eq!(s.len(), items.len() as u64);
+    }
+
+    #[test]
+    fn full_store_insert_hashed_consistent_with_insert() {
+        let mut a = VisitedStore::new(StoreKind::Full);
+        let mut b = VisitedStore::new(StoreKind::Full);
+        for st in states(500) {
+            let h = hash_bytes(&st);
+            assert_eq!(a.insert(&st), b.insert_hashed(&st, h));
+        }
+        assert_eq!(a.len(), b.len());
     }
 
     #[test]

@@ -130,6 +130,14 @@ impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
         self.inner.eval_var(s, name)
     }
 
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        self.inner.resolve_slot(name)
+    }
+
+    fn eval_slots(&self, s: &M::State, ids: &[u32], out: &mut [i64]) -> u64 {
+        self.inner.eval_slots(s, ids, out)
+    }
+
     fn describe(&self, s: &M::State) -> String {
         self.inner.describe(s)
     }

@@ -164,6 +164,7 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         max_depth: a.get_parsed_or("max-depth", d.max_depth)?,
         max_states: a.get_parsed_or("max-states", d.max_states)?,
         memory_budget: a.get_parsed_or("memory-budget", d.memory_budget)?,
+        threads: a.get_parsed_or("threads", d.threads)?,
         ..d
     })
 }
@@ -174,6 +175,7 @@ fn store_spec(spec: Spec) -> Spec {
         .opt("max-depth", "search depth bound (spin -m)")
         .opt("max-states", "stored-state budget")
         .opt("memory-budget", "visited-store byte budget (default 16GiB)")
+        .opt("threads", "exhaustive-search worker threads (default 1; 0 = all cores)")
 }
 
 fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
@@ -278,6 +280,10 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     let spec = Spec::new()
         .opt("workers", "queue worker threads (default 4)")
         .opt("shards", "parameter-space shards for jobs that do not set shards= (default 4)")
+        .opt(
+            "threads",
+            "checker threads per shard (default 1; 0 = all cores; multiplies with --workers)",
+        )
         .opt("cache", "result-cache JSON path (default mcat_cache.json; `none` disables)")
         .opt("budget-ms", "per-swarm-round time budget for swarm jobs (default 10000)")
         .flag("help", "show options");
@@ -308,7 +314,14 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         default_shards: a.get_parsed_or("shards", 4)?,
         ..BatchOptions::default()
     };
+    opts.check.threads = a.get_parsed_or("threads", opts.check.threads)?;
     opts.swarm.time_budget = Duration::from_millis(a.get_parsed_or("budget-ms", 10_000u64)?);
+    // SwarmConfig defaults to one worker per core; shards already run on
+    // `--workers` queue threads, so split the swarm fleet among them to
+    // avoid ~workers x oversubscription (and workers x 16 MiB bitstate
+    // tables) on swarm-method jobs. Floor of 2: swarm coverage comes from
+    // seed-diversified workers, so never collapse a job to a single seed.
+    opts.swarm.workers = (opts.swarm.workers / opts.workers.max(1)).max(2);
     let cache_arg = a.get_or("cache", "mcat_cache.json");
     let mut cache = if cache_arg == "none" {
         ResultCache::in_memory()

@@ -10,7 +10,7 @@
 pub mod property;
 pub mod trail;
 
-pub use property::{Expr, SafetyLtl};
+pub use property::{CompiledProp, EvalScratch, Expr, SafetyLtl};
 pub use trail::{Trail, Violation};
 
 /// A state-transition system explored by the checker.
@@ -32,6 +32,31 @@ pub trait TransitionSystem {
     /// Observe a named model variable (e.g. "time", "FIN", "WG", "TS").
     /// Booleans are 0/1. Returns None for unknown names.
     fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64>;
+
+    /// Resolve a variable name to a model-private dense slot id, once, at
+    /// property-compile time ([`SafetyLtl::compile`]). Models that override
+    /// this (together with [`eval_slots`](Self::eval_slots)) give the
+    /// checker a string-free observation path: the per-state cost becomes
+    /// one integer-dispatched bulk read instead of one name lookup per
+    /// variable. The default advertises no slots, which makes the compiled
+    /// evaluator fall back to `eval_var` — existing models keep working
+    /// unchanged.
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        let _ = name;
+        None
+    }
+
+    /// Fill `out[i]` with the value of pre-resolved slot `ids[i]` in `s`,
+    /// returning a bitmask with bit `i` set when that slot has no value in
+    /// this state (e.g. `WG` before the tuning choice). A masked slot only
+    /// becomes an error if the property actually reads it — mirroring the
+    /// lazy `eval_var` lookups of the interpreted evaluator. Callers
+    /// guarantee `ids.len() == out.len() <= 64` and that every id came
+    /// from [`resolve_slot`](Self::resolve_slot) on the same model.
+    fn eval_slots(&self, s: &Self::State, ids: &[u32], out: &mut [i64]) -> u64 {
+        let _ = (s, ids, out);
+        u64::MAX
+    }
 
     /// Human-readable one-line description for trail printing.
     fn describe(&self, s: &Self::State) -> String {
@@ -64,6 +89,14 @@ impl<M: TransitionSystem> TransitionSystem for &M {
 
     fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64> {
         (**self).eval_var(s, name)
+    }
+
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        (**self).resolve_slot(name)
+    }
+
+    fn eval_slots(&self, s: &Self::State, ids: &[u32], out: &mut [i64]) -> u64 {
+        (**self).eval_slots(s, ids, out)
     }
 
     fn describe(&self, s: &Self::State) -> String {

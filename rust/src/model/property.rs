@@ -12,7 +12,8 @@
 //! outside the fragment (nested temporal operators, U, X, F) is rejected
 //! with a clear error. This is the same fragment the paper uses.
 
-use crate::util::error::{anyhow, bail, Result};
+use crate::model::TransitionSystem;
+use crate::util::error::{anyhow, bail, ensure, Result};
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -157,11 +158,314 @@ impl SafetyLtl {
     pub fn holds(&self, lookup: &dyn Fn(&str) -> Option<i64>) -> Result<bool> {
         Ok(self.body.eval(lookup)? != 0)
     }
+
+    /// Compile the body to a flat bytecode program with variable names
+    /// resolved against `model` once — the checker's per-state hot path
+    /// then runs [`CompiledProp::holds_state`] with no string matching and
+    /// no recursive AST dispatch. Equivalent to [`Expr::eval`] on every
+    /// input, including short-circuit laziness (see [`CompiledProp`]).
+    pub fn compile<M: TransitionSystem + ?Sized>(&self, model: &M) -> Result<CompiledProp> {
+        CompiledProp::new(self, model)
+    }
 }
 
 impl fmt::Display for SafetyLtl {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}", self.source)
+    }
+}
+
+// ------------------------------------------------------ compiled evaluator --
+
+/// One bytecode instruction of a [`CompiledProp`]. Binary connectives are
+/// compiled to conditional jumps so the program short-circuits exactly like
+/// [`Expr::eval`]: the right operand of `&&` / `||` / `->` is neither
+/// evaluated nor error-checked when the left operand decides the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Const(i64),
+    /// push the value of variable slot `i` (errors if unavailable in state)
+    Var(u8),
+    Not,
+    Neg,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// top = (top != 0) — normalizes connective operands to 0/1
+    Norm,
+    /// if top == 0 jump to target keeping top, else pop and fall through
+    Jz(u16),
+    /// if top != 0 jump to target keeping top, else pop and fall through
+    Jnz(u16),
+}
+
+#[derive(Debug, Clone)]
+struct VarBinding {
+    name: String,
+    slot: Option<u32>,
+}
+
+/// A [`SafetyLtl`] body lowered to postfix bytecode with variables resolved
+/// to dense slot indices — the checker's allocation-free per-state monitor.
+///
+/// Variable access: at compile time each distinct name is bound either to a
+/// native model slot ([`TransitionSystem::resolve_slot`]) or, as a
+/// fallback, to a per-state `eval_var` lookup by name. When *all* names
+/// resolve natively, evaluation performs a single
+/// [`TransitionSystem::eval_slots`] bulk read per state and never touches a
+/// string. Unavailable variables are detected at fill time but error only
+/// when the program actually reads them, so short-circuited subexpressions
+/// behave exactly as in the interpreted evaluator.
+#[derive(Debug, Clone)]
+pub struct CompiledProp {
+    ops: Vec<Op>,
+    vars: Vec<VarBinding>,
+    /// ids aligned with `vars`, present iff every variable resolved natively
+    slot_ids: Option<Vec<u32>>,
+    source: String,
+}
+
+/// Reusable per-worker evaluation buffers (slot values + operand stack) so
+/// the checker's inner loop performs zero allocation after warmup.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    vals: Vec<i64>,
+    stack: Vec<i64>,
+}
+
+impl CompiledProp {
+    fn new<M: TransitionSystem + ?Sized>(prop: &SafetyLtl, model: &M) -> Result<Self> {
+        let mut names = Vec::new();
+        prop.body.vars(&mut names);
+        ensure!(
+            names.len() <= 64,
+            "property `{}` references {} variables (compiled evaluator supports at most 64)",
+            prop.source,
+            names.len()
+        );
+        let vars: Vec<VarBinding> = names
+            .into_iter()
+            .map(|name| {
+                let slot = model.resolve_slot(&name);
+                VarBinding { name, slot }
+            })
+            .collect();
+        let slot_ids = vars.iter().map(|v| v.slot).collect::<Option<Vec<u32>>>();
+        let mut ops = Vec::new();
+        emit(&prop.body, &vars, &mut ops);
+        ensure!(
+            ops.len() <= u16::MAX as usize,
+            "property `{}` compiles to {} ops (max {})",
+            prop.source,
+            ops.len(),
+            u16::MAX
+        );
+        Ok(Self { ops, vars, slot_ids, source: prop.source.clone() })
+    }
+
+    /// The property source this program was compiled from.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// Evaluate the body in state `s`. With native slots: one bulk
+    /// `eval_slots` read, then a linear bytecode pass. Without (fallback):
+    /// each `Var` op performs one lazy `eval_var` lookup at read time, so
+    /// short-circuited variables are never looked up — exactly the
+    /// interpreter's cost and error behavior.
+    pub fn eval_state<M: TransitionSystem + ?Sized>(
+        &self,
+        model: &M,
+        s: &M::State,
+        scratch: &mut EvalScratch,
+    ) -> Result<i64> {
+        let EvalScratch { vals, stack } = scratch;
+        if let Some(ids) = &self.slot_ids {
+            vals.clear();
+            vals.resize(self.vars.len(), 0);
+            let missing = model.eval_slots(s, ids, vals);
+            let vars = &self.vars;
+            self.run(
+                |i| {
+                    if missing & (1u64 << i) != 0 {
+                        Err(anyhow!(
+                            "unknown variable `{}` in property",
+                            vars[i as usize].name
+                        ))
+                    } else {
+                        Ok(vals[i as usize])
+                    }
+                },
+                stack,
+            )
+        } else {
+            let vars = &self.vars;
+            self.run(
+                |i| {
+                    let name = &vars[i as usize].name;
+                    model
+                        .eval_var(s, name)
+                        .ok_or_else(|| anyhow!("unknown variable `{}` in property", name))
+                },
+                stack,
+            )
+        }
+    }
+
+    /// Does the invariant hold in `s`? (false = violation here)
+    pub fn holds_state<M: TransitionSystem + ?Sized>(
+        &self,
+        model: &M,
+        s: &M::State,
+        scratch: &mut EvalScratch,
+    ) -> Result<bool> {
+        Ok(self.eval_state(model, s, scratch)? != 0)
+    }
+
+    fn run<F: FnMut(u8) -> Result<i64>>(&self, mut var: F, stack: &mut Vec<i64>) -> Result<i64> {
+        stack.clear();
+        let mut pc = 0usize;
+        while pc < self.ops.len() {
+            match self.ops[pc] {
+                Op::Const(v) => stack.push(v),
+                Op::Var(i) => stack.push(var(i)?),
+                Op::Not => {
+                    let t = stack.last_mut().expect("compiled stack underflow");
+                    *t = (*t == 0) as i64;
+                }
+                Op::Neg => {
+                    let t = stack.last_mut().expect("compiled stack underflow");
+                    *t = -*t; // same overflow behavior as the interpreter's `-`
+                }
+                Op::Norm => {
+                    let t = stack.last_mut().expect("compiled stack underflow");
+                    *t = (*t != 0) as i64;
+                }
+                Op::Jz(target) => {
+                    if *stack.last().expect("compiled stack underflow") == 0 {
+                        pc = target as usize;
+                        continue;
+                    }
+                    stack.pop();
+                }
+                Op::Jnz(target) => {
+                    if *stack.last().expect("compiled stack underflow") != 0 {
+                        pc = target as usize;
+                        continue;
+                    }
+                    stack.pop();
+                }
+                op => {
+                    let b = stack.pop().expect("compiled stack underflow");
+                    let a = stack.last_mut().expect("compiled stack underflow");
+                    *a = match op {
+                        Op::Add => a.wrapping_add(b),
+                        Op::Sub => a.wrapping_sub(b),
+                        Op::Mul => a.wrapping_mul(b),
+                        Op::Div => {
+                            if b == 0 {
+                                bail!("division by zero in property");
+                            }
+                            *a / b
+                        }
+                        Op::Mod => {
+                            if b == 0 {
+                                bail!("mod by zero in property");
+                            }
+                            *a % b
+                        }
+                        Op::Eq => (*a == b) as i64,
+                        Op::Ne => (*a != b) as i64,
+                        Op::Lt => (*a < b) as i64,
+                        Op::Le => (*a <= b) as i64,
+                        Op::Gt => (*a > b) as i64,
+                        Op::Ge => (*a >= b) as i64,
+                        _ => unreachable!("non-binary op in binary dispatch"),
+                    };
+                }
+            }
+            pc += 1;
+        }
+        Ok(stack.pop().expect("compiled program left an empty stack"))
+    }
+}
+
+fn emit(e: &Expr, vars: &[VarBinding], ops: &mut Vec<Op>) {
+    match e {
+        Expr::Int(v) => ops.push(Op::Const(*v)),
+        Expr::Var(n) => {
+            let i = vars
+                .iter()
+                .position(|v| v.name == *n)
+                .expect("every variable is collected before emission");
+            ops.push(Op::Var(i as u8));
+        }
+        Expr::Not(a) => {
+            emit(a, vars, ops);
+            ops.push(Op::Not);
+        }
+        Expr::Neg(a) => {
+            emit(a, vars, ops);
+            ops.push(Op::Neg);
+        }
+        Expr::Bin(op, a, b) => match op {
+            BinOp::And => {
+                emit(a, vars, ops);
+                ops.push(Op::Norm);
+                let j = ops.len();
+                ops.push(Op::Jz(0));
+                emit(b, vars, ops);
+                ops.push(Op::Norm);
+                ops[j] = Op::Jz(ops.len() as u16);
+            }
+            BinOp::Or => {
+                emit(a, vars, ops);
+                ops.push(Op::Norm);
+                let j = ops.len();
+                ops.push(Op::Jnz(0));
+                emit(b, vars, ops);
+                ops.push(Op::Norm);
+                ops[j] = Op::Jnz(ops.len() as u16);
+            }
+            BinOp::Implies => {
+                // (a == 0) || (b != 0): Not normalizes, Jnz short-circuits
+                emit(a, vars, ops);
+                ops.push(Op::Not);
+                let j = ops.len();
+                ops.push(Op::Jnz(0));
+                emit(b, vars, ops);
+                ops.push(Op::Norm);
+                ops[j] = Op::Jnz(ops.len() as u16);
+            }
+            _ => {
+                emit(a, vars, ops);
+                emit(b, vars, ops);
+                ops.push(match op {
+                    BinOp::Add => Op::Add,
+                    BinOp::Sub => Op::Sub,
+                    BinOp::Mul => Op::Mul,
+                    BinOp::Div => Op::Div,
+                    BinOp::Mod => Op::Mod,
+                    BinOp::Eq => Op::Eq,
+                    BinOp::Ne => Op::Ne,
+                    BinOp::Lt => Op::Lt,
+                    BinOp::Le => Op::Le,
+                    BinOp::Gt => Op::Gt,
+                    BinOp::Ge => Op::Ge,
+                    BinOp::And | BinOp::Or | BinOp::Implies => {
+                        unreachable!("connectives handled above")
+                    }
+                });
+            }
+        },
     }
 }
 
@@ -383,5 +687,152 @@ mod tests {
     #[test]
     fn trailing_garbage_rejected() {
         assert!(SafetyLtl::parse("G(FIN) xyz").is_err());
+    }
+
+    // ------------------------------------------- compiled evaluator --
+
+    /// Single-state model exposing `pairs` by name only (fallback path).
+    struct EnvModel {
+        pairs: Vec<(String, i64)>,
+    }
+
+    impl EnvModel {
+        fn new(pairs: &[(&str, i64)]) -> Self {
+            Self { pairs: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect() }
+        }
+    }
+
+    impl TransitionSystem for EnvModel {
+        type State = u8;
+
+        fn initial_states(&self) -> Vec<u8> {
+            vec![0]
+        }
+
+        fn successors(&self, _s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+        }
+
+        fn encode(&self, s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+            out.push(*s);
+        }
+
+        fn eval_var(&self, _s: &u8, name: &str) -> Option<i64> {
+            self.pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+        }
+    }
+
+    /// Same environment, exposed through the native slot interface; `None`
+    /// values resolve but are unavailable in the state (like WG pre-choice).
+    struct SlotEnvModel {
+        pairs: Vec<(String, Option<i64>)>,
+    }
+
+    impl TransitionSystem for SlotEnvModel {
+        type State = u8;
+
+        fn initial_states(&self) -> Vec<u8> {
+            vec![0]
+        }
+
+        fn successors(&self, _s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+        }
+
+        fn encode(&self, s: &u8, out: &mut Vec<u8>) {
+            out.clear();
+            out.push(*s);
+        }
+
+        fn eval_var(&self, _s: &u8, name: &str) -> Option<i64> {
+            self.pairs.iter().find(|(k, _)| k == name).and_then(|(_, v)| *v)
+        }
+
+        fn resolve_slot(&self, name: &str) -> Option<u32> {
+            self.pairs.iter().position(|(k, _)| k == name).map(|i| i as u32)
+        }
+
+        fn eval_slots(&self, _s: &u8, ids: &[u32], out: &mut [i64]) -> u64 {
+            let mut missing = 0u64;
+            for (i, &id) in ids.iter().enumerate() {
+                match self.pairs[id as usize].1 {
+                    Some(v) => out[i] = v,
+                    None => missing |= 1u64 << i,
+                }
+            }
+            missing
+        }
+    }
+
+    fn both_ways(src: &str, pairs: &[(&str, i64)]) -> (Result<i64>, Result<i64>) {
+        let p = SafetyLtl::parse(src).unwrap();
+        let lookup = |n: &str| pairs.iter().find(|(k, _)| *k == n).map(|(_, v)| *v);
+        let interp = p.body.eval(&lookup);
+        let m = EnvModel::new(pairs);
+        let c = p.compile(&m).unwrap();
+        let compiled = c.eval_state(&m, &0, &mut EvalScratch::default());
+        (interp, compiled)
+    }
+
+    #[test]
+    fn compiled_matches_interpreter() {
+        for (src, pairs) in [
+            ("G(FIN -> time > 100)", &[("FIN", 1i64), ("time", 101)][..]),
+            ("G(FIN -> time > 100)", &[("FIN", 1), ("time", 100)][..]),
+            ("G(FIN -> time > 100)", &[("FIN", 0), ("time", 5)][..]),
+            ("G(a + 2 * 3 == 7 && b % 2 == 0)", &[("a", 1), ("b", 4)][..]),
+            ("G(a + 2 * 3 == 7 && b % 2 == 0)", &[("a", 1), ("b", 3)][..]),
+            ("a -> b -> c", &[("a", 1), ("b", 1), ("c", 0)][..]),
+            ("G(-a == 0 - a)", &[("a", 17)][..]),
+            ("G(!(a < b) || a / b >= 1)", &[("a", 9), ("b", 3)][..]),
+        ] {
+            let (i, c) = both_ways(src, pairs);
+            assert_eq!(i.unwrap(), c.unwrap(), "{} on {:?}", src, pairs);
+        }
+    }
+
+    #[test]
+    fn compiled_short_circuits_like_interpreter() {
+        // unknown variable behind a short circuit: neither path errors
+        let (i, c) = both_ways("G(FIN -> nosuch > 0)", &[("FIN", 0)]);
+        assert_eq!(i.unwrap(), 1);
+        assert_eq!(c.unwrap(), 1);
+        // ... and both error once the guard is hot
+        let (i, c) = both_ways("G(FIN -> nosuch > 0)", &[("FIN", 1)]);
+        assert!(i.is_err() && c.is_err());
+        // division by zero guarded by && never evaluates
+        let (i, c) = both_ways("G(x != 0 && 10 / x > 1)", &[("x", 0)]);
+        assert_eq!(i.unwrap(), 0);
+        assert_eq!(c.unwrap(), 0);
+        // unguarded division by zero errors in both
+        let (i, c) = both_ways("G(10 / x > 1)", &[("x", 0)]);
+        assert!(i.is_err() && c.is_err());
+    }
+
+    #[test]
+    fn compiled_slot_path_matches_fallback() {
+        let p = SafetyLtl::parse("G(FIN -> time > 40)").unwrap();
+        let m = SlotEnvModel {
+            pairs: vec![("FIN".into(), Some(1)), ("time".into(), Some(44))],
+        };
+        let c = p.compile(&m).unwrap();
+        let mut scratch = EvalScratch::default();
+        assert_eq!(c.eval_state(&m, &0, &mut scratch).unwrap(), 1);
+        // unavailable slot behind a false guard is not an error
+        let m = SlotEnvModel { pairs: vec![("FIN".into(), Some(0)), ("time".into(), None)] };
+        let c = p.compile(&m).unwrap();
+        assert_eq!(c.eval_state(&m, &0, &mut scratch).unwrap(), 1);
+        // ... but errors when read
+        let m = SlotEnvModel { pairs: vec![("FIN".into(), Some(1)), ("time".into(), None)] };
+        let c = p.compile(&m).unwrap();
+        assert!(c.eval_state(&m, &0, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn compiled_reports_source() {
+        let p = SafetyLtl::parse("G(!FIN)").unwrap();
+        let m = EnvModel::new(&[("FIN", 0)]);
+        assert_eq!(p.compile(&m).unwrap().source(), "G(!FIN)");
     }
 }

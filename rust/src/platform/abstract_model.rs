@@ -232,6 +232,42 @@ impl TransitionSystem for AbstractModel {
         }
     }
 
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        // ids match the eval_var arm order; eval_slots dispatches on the
+        // integer so the checker's hot loop never touches the names
+        ["time", "FIN", "size", "WG", "TS", "WGs", "NWD", "NWU", "NWE", "rounds"]
+            .iter()
+            .position(|n| *n == name)
+            .map(|i| i as u32)
+    }
+
+    fn eval_slots(&self, s: &AbsState, ids: &[u32], out: &mut [i64]) -> u64 {
+        let mut missing = 0u64;
+        // tuning + precomputed geometry (no per-state geometry math)
+        let chosen = (s.cfg != CFG_NONE)
+            .then(|| (self.tunings[s.cfg as usize], self.geoms[s.cfg as usize]));
+        for (i, &id) in ids.iter().enumerate() {
+            let v = match id {
+                0 => Some(s.time as i64),
+                1 => Some(s.fin as i64),
+                2 => Some(self.size as i64),
+                3 => chosen.map(|(t, _)| t.wg as i64),
+                4 => chosen.map(|(t, _)| t.ts as i64),
+                5 => chosen.map(|(_, g)| g.wgs as i64),
+                6 => chosen.map(|(_, g)| g.nwd as i64),
+                7 => chosen.map(|(_, g)| g.nwu as i64),
+                8 => chosen.map(|(_, g)| g.nwe as i64),
+                9 => chosen.map(|(_, g)| g.rounds as i64),
+                _ => None,
+            };
+            match v {
+                Some(v) => out[i] = v,
+                None => missing |= 1u64 << i,
+            }
+        }
+        missing
+    }
+
     fn describe(&self, s: &AbsState) -> String {
         match self.tuning(s) {
             None => "main: selecting WG, TS".to_string(),

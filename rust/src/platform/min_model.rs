@@ -282,6 +282,38 @@ impl TransitionSystem for MinModel {
         }
     }
 
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        // ids match the eval_var arm order (see eval_slots)
+        ["time", "FIN", "size", "result", "items_done", "WG", "TS", "NWE", "rounds"]
+            .iter()
+            .position(|n| *n == name)
+            .map(|i| i as u32)
+    }
+
+    fn eval_slots(&self, s: &MinState, ids: &[u32], out: &mut [i64]) -> u64 {
+        let mut missing = 0u64;
+        let tuning = self.tuning(s);
+        for (i, &id) in ids.iter().enumerate() {
+            let v = match id {
+                0 => Some(s.time as i64),
+                1 => Some(s.fin as i64),
+                2 => Some(self.size as i64),
+                3 => Some(s.cur_min as i64),
+                4 => Some(s.items_done as i64),
+                5 => tuning.map(|t| t.wg as i64),
+                6 => tuning.map(|t| t.ts as i64),
+                7 => tuning.map(|t| self.nwe(t) as i64),
+                8 => tuning.map(|t| self.rounds(t) as i64),
+                _ => None,
+            };
+            match v {
+                Some(v) => out[i] = v,
+                None => missing |= 1u64 << i,
+            }
+        }
+        missing
+    }
+
     fn describe(&self, s: &MinState) -> String {
         match self.tuning(s) {
             None => "main: loading glob[], selecting WG, TS".to_string(),

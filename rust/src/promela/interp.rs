@@ -594,6 +594,18 @@ impl TransitionSystem for PromelaSystem {
         Some(s.globals[v.offset as usize] as i64)
     }
 
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        // slot id = offset into the flat globals array, resolved once
+        self.prog.global_syms.get(name).map(|v| v.offset)
+    }
+
+    fn eval_slots(&self, s: &PState, ids: &[u32], out: &mut [i64]) -> u64 {
+        for (i, &id) in ids.iter().enumerate() {
+            out[i] = s.globals[id as usize] as i64;
+        }
+        0
+    }
+
     fn describe(&self, s: &PState) -> String {
         let pcs: Vec<String> = s
             .procs

@@ -32,7 +32,13 @@ pub struct SwarmConfig {
 impl Default for SwarmConfig {
     fn default() -> Self {
         Self {
-            workers: 4,
+            // one diversified worker per core (the paper uses 1-8); capped
+            // at 32 so the default per-worker bitstate tables (2^27 bits =
+            // 16 MB each) stay bounded on very wide machines
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get() as u32)
+                .unwrap_or(4)
+                .clamp(1, 32),
             seed: 0x5AFE,
             log2_bits: 27,
             hashes: 3,

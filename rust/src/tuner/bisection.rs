@@ -45,13 +45,14 @@ impl BisectionResult {
 }
 
 /// Run Fig. 1. `opts` configures each inner verification (store kind,
-/// budgets). `t_ini` must satisfy `Cex(t_ini)`; when it does not (e.g. a
-/// too-small simulation bound), it is doubled until it does.
-pub fn bisection<M: TransitionSystem>(
-    model: &M,
-    opts: &CheckOptions,
-    t_ini: i64,
-) -> Result<BisectionResult> {
+/// budgets, `threads` — each `Cex(T)` query runs on the parallel engine
+/// when enabled). `t_ini` must satisfy `Cex(t_ini)`; when it does not
+/// (e.g. a too-small simulation bound), it is doubled until it does.
+pub fn bisection<M>(model: &M, opts: &CheckOptions, t_ini: i64) -> Result<BisectionResult>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
     let start = std::time::Instant::now();
     let mut iterations = Vec::new();
     let mut total_states = 0u64;

@@ -1,0 +1,387 @@
+//! Parallel-vs-sequential engine equivalence and compiled-evaluator
+//! equivalence (ISSUE 2 acceptance criteria).
+//!
+//! The parallel engine must report the same `states_stored`,
+//! violations-found verdict and `exhausted` flag as the sequential DFS on
+//! every deterministic model; the compiled property evaluator must agree
+//! with the interpreted `Expr::eval` on a generated expression corpus,
+//! including error cases (unknown variables, division by zero).
+
+use mcautotune::checker::{check, check_parallel, check_sequential, Abort, CheckOptions, StoreKind};
+use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
+use mcautotune::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
+use mcautotune::util::rng::Xoshiro256;
+
+// ------------------------------------------------------------ test models --
+
+/// Binary tree of depth `d` (wide state space, good parallel fan-out),
+/// exposing its variables through the native slot interface.
+struct Tree {
+    depth: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct TState {
+    level: u32,
+    path: u32,
+}
+
+impl TransitionSystem for Tree {
+    type State = TState;
+
+    fn initial_states(&self) -> Vec<TState> {
+        vec![TState { level: 0, path: 0 }]
+    }
+
+    fn successors(&self, s: &TState, out: &mut Vec<TState>) {
+        out.clear();
+        if s.level < self.depth {
+            out.push(TState { level: s.level + 1, path: s.path << 1 });
+            out.push(TState { level: s.level + 1, path: (s.path << 1) | 1 });
+        }
+    }
+
+    fn encode(&self, s: &TState, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&s.level.to_le_bytes());
+        out.extend_from_slice(&s.path.to_le_bytes());
+    }
+
+    fn eval_var(&self, s: &TState, name: &str) -> Option<i64> {
+        match name {
+            "level" => Some(s.level as i64),
+            "path" => Some(s.path as i64),
+            "leaf" => Some((s.level == self.depth) as i64),
+            _ => None,
+        }
+    }
+
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        ["level", "path", "leaf"].iter().position(|n| *n == name).map(|i| i as u32)
+    }
+
+    fn eval_slots(&self, s: &TState, ids: &[u32], out: &mut [i64]) -> u64 {
+        for (i, &id) in ids.iter().enumerate() {
+            out[i] = match id {
+                0 => s.level as i64,
+                1 => s.path as i64,
+                _ => (s.level == self.depth) as i64,
+            };
+        }
+        0
+    }
+}
+
+fn popts(threads: u32) -> CheckOptions {
+    CheckOptions { threads, ..CheckOptions::default() }
+}
+
+fn assert_reports_match<S, T>(
+    seq: &mcautotune::checker::CheckReport<S>,
+    par: &mcautotune::checker::CheckReport<T>,
+) {
+    assert_eq!(par.stats.states_stored, seq.stats.states_stored, "states_stored");
+    assert_eq!(par.stats.states_matched, seq.stats.states_matched, "states_matched");
+    assert_eq!(par.stats.transitions, seq.stats.transitions, "transitions");
+    assert_eq!(par.exhausted, seq.exhausted, "exhausted");
+    assert_eq!(par.found(), seq.found(), "found");
+}
+
+// --------------------------------------------- parallel == sequential --
+
+#[test]
+fn tree_parallel_matches_sequential() {
+    let m = Tree { depth: 12 };
+    let p = SafetyLtl::parse("G(level >= 0)").unwrap();
+    let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    for threads in [2, 4] {
+        let par = check_parallel(&m, &p, &popts(threads)).unwrap();
+        assert_reports_match(&seq, &par);
+        assert_eq!(par.stats.states_stored, (1u64 << 13) - 1);
+        assert!(par.verdict().unwrap());
+    }
+}
+
+#[test]
+fn minmodel_parallel_matches_sequential() {
+    let m = MinModel::paper(64, 4).unwrap();
+    // the checker proves the data invariant over every schedule
+    let p = SafetyLtl::parse("G(FIN -> result == 1)").unwrap();
+    let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    let par = check_parallel(&m, &p, &popts(4)).unwrap();
+    assert_reports_match(&seq, &par);
+    assert!(par.verdict().unwrap());
+}
+
+#[test]
+fn abstract_parallel_matches_sequential_collect_all() {
+    let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let p = SafetyLtl::non_termination();
+    let mut o = popts(4);
+    o.collect_all = true;
+    let so = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let seq = check_sequential(&m, &p, &so).unwrap();
+    let par = check_parallel(&m, &p, &o).unwrap();
+    assert_reports_match(&seq, &par);
+    // one FIN state per tuning, found by both engines
+    assert_eq!(par.violations.len(), seq.violations.len());
+    assert_eq!(par.violations.len(), m.tunings().len());
+    assert!(par.exhausted);
+}
+
+#[test]
+fn abstract_parallel_verdict_on_violated_property() {
+    let m = AbstractModel::new(32, PlatformConfig::default(), Granularity::Phase).unwrap();
+    let (opt_time, _) = m.optimum();
+    let p = SafetyLtl::over_time(opt_time as i64);
+    let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    let par = check_parallel(&m, &p, &popts(4)).unwrap();
+    assert!(!seq.verdict().unwrap());
+    assert!(!par.verdict().unwrap());
+    assert!(!par.exhausted);
+    // the violating state exposes a real tuning at a real time
+    let v = &par.violations[0];
+    assert!(v.trail.final_var(&m, "WG").is_some());
+    assert_eq!(v.trail.final_var(&m, "FIN"), Some(1));
+}
+
+#[test]
+fn hashcompact_parallel_matches_sequential() {
+    let m = Tree { depth: 12 };
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let so = CheckOptions { store: StoreKind::HashCompact, ..CheckOptions::default() };
+    let mut po = popts(4);
+    po.store = StoreKind::HashCompact;
+    let seq = check_sequential(&m, &p, &so).unwrap();
+    let par = check_parallel(&m, &p, &po).unwrap();
+    assert_reports_match(&seq, &par);
+}
+
+#[test]
+fn parallel_trail_is_a_valid_parent_chain() {
+    let m = Tree { depth: 8 };
+    let p = SafetyLtl::parse("G(leaf -> path != 37)").unwrap();
+    let par = check_parallel(&m, &p, &popts(4)).unwrap();
+    assert!(par.found());
+    assert_eq!(par.violations.len(), 1, "first-violation mode returns one trail");
+    let v = &par.violations[0];
+    assert_eq!(v.trail.steps(), 8, "trail reconstructed back to the root");
+    assert_eq!(v.trail.final_var(&m, "path"), Some(37));
+    for w in v.trail.states.windows(2) {
+        assert_eq!(w[1].level, w[0].level + 1);
+        assert_eq!(w[1].path >> 1, w[0].path);
+    }
+}
+
+#[test]
+fn parallel_collect_all_trails_are_valid() {
+    let m = Tree { depth: 6 };
+    let p = SafetyLtl::parse("G(!leaf)").unwrap();
+    let mut o = popts(4);
+    o.collect_all = true;
+    let par = check_parallel(&m, &p, &o).unwrap();
+    assert_eq!(par.violations.len(), 64);
+    assert!(par.exhausted);
+    for v in &par.violations {
+        assert_eq!(v.trail.steps(), 6);
+        for w in v.trail.states.windows(2) {
+            assert_eq!(w[1].level, w[0].level + 1);
+            assert_eq!(w[1].path >> 1, w[0].path);
+        }
+    }
+}
+
+#[test]
+fn parallel_budget_abort_is_inconclusive() {
+    let m = Tree { depth: 22 };
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let mut o = popts(4);
+    o.max_states = 5_000;
+    let r = check_parallel(&m, &p, &o).unwrap();
+    assert_eq!(r.stats.abort, Some(Abort::StateLimit));
+    assert!(!r.exhausted);
+    assert!(r.verdict().is_err());
+}
+
+#[test]
+fn parallel_max_errors_caps_violations() {
+    let m = Tree { depth: 6 };
+    let p = SafetyLtl::parse("G(!leaf)").unwrap();
+    let mut o = popts(4);
+    o.collect_all = true;
+    o.max_errors = 10;
+    let r = check_parallel(&m, &p, &o).unwrap();
+    assert!(r.violations.len() <= 10);
+    assert!(!r.violations.is_empty());
+    assert_eq!(r.stats.abort, Some(Abort::ErrorLimit));
+    assert!(!r.exhausted);
+}
+
+#[test]
+fn dispatcher_routes_on_threads_and_store() {
+    let m = Tree { depth: 10 };
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    // threads=4 exact store: parallel path, same count
+    let r = check(&m, &p, &popts(4)).unwrap();
+    assert_eq!(r.stats.states_stored, 2047);
+    assert!(r.exhausted);
+    // threads=0 resolves to all cores
+    let r = check(&m, &p, &popts(0)).unwrap();
+    assert_eq!(r.stats.states_stored, 2047);
+    // bitstate + threads>1 falls back to the sequential engine (partial)
+    let mut o = popts(4);
+    o.store = StoreKind::Bitstate { log2_bits: 20, hashes: 3 };
+    let r = check(&m, &p, &o).unwrap();
+    assert!(!r.exhausted);
+}
+
+#[test]
+fn parallel_unknown_variable_errors_like_sequential() {
+    let m = Tree { depth: 4 };
+    let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
+    assert!(check_sequential(&m, &p, &CheckOptions::default()).is_err());
+    assert!(check_parallel(&m, &p, &popts(4)).is_err());
+}
+
+// ------------------------------------------- evaluator equivalence --
+
+/// Single-state model exposing an environment by name only (the compiled
+/// evaluator's fallback path).
+struct EnvModel {
+    pairs: Vec<(&'static str, i64)>,
+}
+
+impl TransitionSystem for EnvModel {
+    type State = u8;
+
+    fn initial_states(&self) -> Vec<u8> {
+        vec![0]
+    }
+
+    fn successors(&self, _s: &u8, out: &mut Vec<u8>) {
+        out.clear();
+    }
+
+    fn encode(&self, s: &u8, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(*s);
+    }
+
+    fn eval_var(&self, _s: &u8, name: &str) -> Option<i64> {
+        self.pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| *v)
+    }
+}
+
+/// Same environment through the native slot interface.
+struct SlotEnvModel {
+    pairs: Vec<(&'static str, i64)>,
+}
+
+impl TransitionSystem for SlotEnvModel {
+    type State = u8;
+
+    fn initial_states(&self) -> Vec<u8> {
+        vec![0]
+    }
+
+    fn successors(&self, _s: &u8, out: &mut Vec<u8>) {
+        out.clear();
+    }
+
+    fn encode(&self, s: &u8, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(*s);
+    }
+
+    fn eval_var(&self, _s: &u8, name: &str) -> Option<i64> {
+        self.pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| *v)
+    }
+
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        self.pairs.iter().position(|(k, _)| *k == name).map(|i| i as u32)
+    }
+
+    fn eval_slots(&self, _s: &u8, ids: &[u32], out: &mut [i64]) -> u64 {
+        for (i, &id) in ids.iter().enumerate() {
+            out[i] = self.pairs[id as usize].1;
+        }
+        0
+    }
+}
+
+/// Random expression source over known vars (a, b, c), the occasionally
+/// unknown `q`, and integer literals (including 0, so `/` and `%` exercise
+/// the error paths).
+fn gen_expr(r: &mut Xoshiro256, depth: u32) -> String {
+    if depth == 0 || r.chance(1, 3) {
+        return match r.below(3) {
+            0 => (*r.pick(&["a", "b", "c", "a", "b", "c", "q"])).to_string(),
+            1 => r.range_i64(-4, 4).to_string(),
+            _ => (*r.pick(&["true", "false"])).to_string(),
+        };
+    }
+    match r.below(17) {
+        0 => format!("(!{})", gen_expr(r, depth - 1)),
+        1 => format!("(-{})", gen_expr(r, depth - 1)),
+        n => {
+            let op = ["&&", "||", "->", "==", "!=", "<", "<=", ">", ">=", "+", "-", "*", "/", "%"]
+                [(n - 2) as usize % 14];
+            format!("({} {} {})", gen_expr(r, depth - 1), op, gen_expr(r, depth - 1))
+        }
+    }
+}
+
+#[test]
+fn compiled_evaluator_matches_interpreter_on_generated_corpus() {
+    let mut r = Xoshiro256::new(0xC0FFEE);
+    let mut scratch = EvalScratch::default();
+    let mut err_cases = 0u32;
+    let mut unknown_cases = 0u32;
+    for case in 0..500 {
+        let src = gen_expr(&mut r, 4);
+        let env = [("a", r.range_i64(-6, 6)), ("b", r.range_i64(-6, 6)), ("c", r.range_i64(-6, 6))];
+        let Ok(p) = SafetyLtl::parse(&src) else {
+            panic!("generated expression failed to parse: {}", src);
+        };
+        if src.contains('q') {
+            unknown_cases += 1;
+        }
+        let lookup = |n: &str| env.iter().find(|(k, _)| *k == n).map(|(_, v)| *v);
+        let interp = p.body.eval(&lookup);
+
+        let fallback = EnvModel { pairs: env.to_vec() };
+        let slotted = SlotEnvModel { pairs: env.to_vec() };
+        let c_fb = p.compile(&fallback).unwrap();
+        let c_sl = p.compile(&slotted).unwrap();
+        let got_fb = c_fb.eval_state(&fallback, &0, &mut scratch);
+        let got_sl = c_sl.eval_state(&slotted, &0, &mut scratch);
+
+        match interp {
+            Ok(v) => {
+                assert_eq!(got_fb.as_ref().ok(), Some(&v), "case {}: `{}` fallback", case, src);
+                assert_eq!(got_sl.as_ref().ok(), Some(&v), "case {}: `{}` slotted", case, src);
+            }
+            Err(_) => {
+                err_cases += 1;
+                assert!(got_fb.is_err(), "case {}: `{}` should error (fallback)", case, src);
+                assert!(got_sl.is_err(), "case {}: `{}` should error (slotted)", case, src);
+            }
+        }
+    }
+    // the corpus must actually exercise the interesting regions
+    assert!(err_cases > 10, "too few error cases generated ({})", err_cases);
+    assert!(unknown_cases > 10, "too few unknown-variable cases ({})", unknown_cases);
+}
+
+#[test]
+fn compiled_evaluator_agrees_inside_the_checker() {
+    // same property, interpreted via eval_var vs checked end-to-end: the
+    // check() verdict must match a brute-force interpreted sweep
+    let m = Tree { depth: 9 };
+    for src in ["G(leaf -> path != 100)", "G(path % 7 != 6 || level < 20)", "G(level <= 9)"] {
+        let p = SafetyLtl::parse(src).unwrap();
+        let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+        let par = check_parallel(&m, &p, &popts(4)).unwrap();
+        assert_eq!(seq.found(), par.found(), "{}", src);
+    }
+}

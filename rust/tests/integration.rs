@@ -75,7 +75,7 @@ fn over_time_property_boundary_is_exact() {
         check(&m, &SafetyLtl::over_time(t_min as i64 - 1), &CheckOptions::default()).unwrap();
     assert!(!hold.found());
     assert!(hold.exhausted);
-    assert_eq!(hold.verdict().unwrap(), true);
+    assert!(hold.verdict().unwrap());
 }
 
 #[test]

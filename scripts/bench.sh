@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Checker perf trajectory: run the hot-path bench suite and emit
+# BENCH_checker.json at the repo root (or at $1).
+#
+#   scripts/bench.sh                 # full run, writes BENCH_checker.json
+#   scripts/bench.sh out.json        # custom output path
+#   MCAT_BENCH_FAST=1 scripts/bench.sh   # 10x smaller measurement budget
+#   MCAT_BENCH_SIZE=128 scripts/bench.sh # smaller model (CI smoke)
+#
+# JSON format: {bench, model, states, speedup_par4_vs_seq,
+# results: [{name, iters, mean_ns, per_sec}]} — one entry per bench case,
+# sequential + parallel exploration throughput first.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+out="${1:-../BENCH_checker.json}"
+MCAT_BENCH_JSON="$out" cargo bench --bench checker_hot_path
+echo "bench results written to $out"
