@@ -28,6 +28,23 @@ pub enum Order {
     Random(u64),
 }
 
+/// How the *parallel* engine schedules its exploration frontier (the
+/// sequential DFS ignores this — its order is already deterministic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontier {
+    /// Asynchronous work stealing: fastest, but the global exploration
+    /// order — and therefore which violation is found *first* — depends
+    /// on OS scheduling.
+    Async,
+    /// Depth-synchronous deterministic BFS: the exploration order, the
+    /// violation sequence, and every early-stop state count are identical
+    /// run-to-run and across thread counts (`Order::Random` still
+    /// diversifies, keyed per-state instead of per-worker). Trades some
+    /// scalability for reproducible first-trail identity (the paper's
+    /// Table 1 "1st trail" column).
+    Deterministic,
+}
+
 #[derive(Debug, Clone)]
 pub struct CheckOptions {
     pub store: StoreKind,
@@ -46,6 +63,14 @@ pub struct CheckOptions {
     /// engine when this exceeds 1 and the store is exact (full/compact);
     /// bitstate searches always run per-worker (see `swarm`).
     pub threads: u32,
+    /// estimated stored-state count (0 = unknown). Both engines pre-size
+    /// their visited stores from it so the hot loop never rehashes — in
+    /// the parallel engine a rehash runs *under a shard lock* and stalls
+    /// every worker probing that shard. Purely a performance hint: a bad
+    /// estimate only changes allocation, never results.
+    pub expected_states: u64,
+    /// parallel frontier scheduling (see [`Frontier`])
+    pub frontier: Frontier,
 }
 
 impl Default for CheckOptions {
@@ -60,6 +85,8 @@ impl Default for CheckOptions {
             max_errors: 1_000_000,
             order: Order::InOrder,
             threads: 1,
+            expected_states: 0,
+            frontier: Frontier::Async,
         }
     }
 }
@@ -72,6 +99,15 @@ impl CheckOptions {
         } else {
             self.threads
         }
+    }
+
+    /// `expected_states` clamped so the up-front reservation (~36 B per
+    /// expected state, and reserved capacity counts toward `bytes_used`)
+    /// stays a sliver of `memory_budget` — this is what keeps the hint
+    /// *purely* a performance hint: an over-estimate must never trip
+    /// `Abort::MemoryLimit` on a run that would otherwise fit.
+    pub fn presize_hint(&self) -> u64 {
+        self.expected_states.min(self.memory_budget / 256)
     }
 }
 
@@ -142,7 +178,7 @@ pub fn check<M: TransitionSystem>(
     let start = Instant::now();
     let compiled = prop.compile(model)?;
     let mut scratch = EvalScratch::default();
-    let mut store = VisitedStore::new(opts.store);
+    let mut store = VisitedStore::with_capacity(opts.store, opts.presize_hint());
     let mut stats = SearchStats::default();
     let mut violations = Vec::new();
     let mut exhausted = true;

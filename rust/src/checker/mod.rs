@@ -18,19 +18,25 @@ pub mod dfs;
 pub mod parallel;
 pub mod store;
 
-pub use dfs::{check as check_sequential, Abort, CheckOptions, CheckReport, Order, SearchStats};
+pub use dfs::{
+    check as check_sequential, Abort, CheckOptions, CheckReport, Frontier, Order, SearchStats,
+};
 pub use parallel::check_parallel;
 pub use store::{StoreKind, VisitedStore};
 
 use crate::model::{SafetyLtl, TransitionSystem};
 use crate::util::error::Result;
 
-/// Verify `G(prop)` on `model`, dispatching on `opts.threads` (see module
-/// docs). On full explorations both engines return identical
-/// `states_stored`, verdict and `exhausted`; budget-limited runs abort at
-/// the same thresholds, though the parallel engine may store a few extra
-/// states before the stop flag propagates (and its per-state backlink
-/// bookkeeping charges the memory budget slightly earlier).
+/// Verify `G(prop)` on `model`, dispatching on `opts.threads` and
+/// `opts.frontier` (see module docs). On full explorations both engines
+/// return identical `states_stored`, verdict and `exhausted`;
+/// budget-limited runs abort at the same thresholds, though the
+/// asynchronous parallel engine may store a few extra states before the
+/// stop flag propagates (and its per-state backlink bookkeeping charges
+/// the memory budget slightly earlier). `Frontier::Deterministic` always
+/// routes to the parallel module (even at one thread) so the exploration
+/// order is reproducible across thread counts; bitstate stays sequential
+/// regardless.
 pub fn check<M>(
     model: &M,
     prop: &SafetyLtl,
@@ -40,7 +46,9 @@ where
     M: TransitionSystem + Sync,
     M::State: Send,
 {
-    if opts.effective_threads() > 1 && !matches!(opts.store, StoreKind::Bitstate { .. }) {
+    let parallel_engine =
+        opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic;
+    if parallel_engine && !matches!(opts.store, StoreKind::Bitstate { .. }) {
         parallel::check_parallel(model, prop, opts)
     } else {
         dfs::check(model, prop, opts)

@@ -23,10 +23,11 @@
 //!   is empty ([`Queue::fetch`]).
 //!
 //! Counterexample trails cannot be read off a DFS stack here, so every
-//! stored state records a parent-hash backlink in its shard; a violation's
-//! trail is reconstructed after the search by walking backlinks to an
-//! initial state and replaying `successors` forward along the hash chain
-//! ([`reconstruct`]).
+//! stored state records a parent-hash backlink in its shard; violation
+//! trails are reconstructed after the search by walking backlinks to an
+//! initial state and replaying `successors` forward along the hash
+//! chains, with replayed states memoized across violations
+//! ([`reconstruct_all`]).
 //!
 //! Determinism: on a full (un-aborted, un-stopped) exploration the set of
 //! stored states — and therefore `states_stored`, `states_matched`,
@@ -35,9 +36,14 @@
 //! deterministic, so with `collect_all` the violations arrive unordered
 //! (they are sorted by discovery time) and early-stop runs may store a few
 //! more states than the sequential engine before the stop flag propagates.
+//! When run-to-run reproducibility matters more than peak throughput —
+//! e.g. the paper's Table 1 "1st trail" timing — `Frontier::Deterministic`
+//! switches to the depth-synchronous engine ([`check_deterministic`]),
+//! whose exploration order is independent of scheduling *and* thread
+//! count.
 
-use super::dfs::{self, Abort, CheckOptions, CheckReport, Order, SearchStats};
-use super::store::{FullStore, StoreKind};
+use super::dfs::{self, Abort, CheckOptions, CheckReport, Frontier, Order, SearchStats};
+use super::store::{FullStore, StoreKind, VisitedStore};
 use crate::model::{CompiledProp, EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};
 use crate::util::error::{Error, Result};
 use crate::util::hash::{hash_bytes, FxHashMap};
@@ -75,14 +81,27 @@ pub struct ShardedStore {
 }
 
 impl ShardedStore {
-    fn new(kind: StoreKind, want_shards: usize) -> Self {
+    /// `expected_states` (0 = unknown) pre-sizes every shard: hash routing
+    /// spreads states uniformly, so each shard expects `total / n` states
+    /// (plus 25% slack for imbalance) and its arena table starts at the
+    /// matching power of two — the first inserts never rehash under the
+    /// shard lock.
+    fn new(kind: StoreKind, want_shards: usize, expected_states: u64) -> Self {
         let n = want_shards.max(2).next_power_of_two();
+        let per_shard =
+            ((expected_states / n as u64).saturating_mul(5) / 4).min(1 << 24) as usize;
         let full = matches!(kind, StoreKind::Full);
         let shards = (0..n)
             .map(|_| {
                 Mutex::new(Shard {
-                    full: full.then(FullStore::new),
-                    parents: FxHashMap::default(),
+                    full: full.then(|| {
+                        if per_shard > 0 {
+                            FullStore::with_capacity(per_shard)
+                        } else {
+                            FullStore::new()
+                        }
+                    }),
+                    parents: FxHashMap::with_capacity_and_hasher(per_shard, Default::default()),
                 })
             })
             .collect();
@@ -289,6 +308,9 @@ where
              bitstate parallelism is one independent filter per worker — use swarm::swarm"
         );
     }
+    if opts.frontier == Frontier::Deterministic {
+        return check_deterministic(model, prop, opts);
+    }
     let threads = opts.effective_threads().max(1);
     if threads == 1 {
         return dfs::check(model, prop, opts);
@@ -296,7 +318,7 @@ where
 
     let start = Instant::now();
     let compiled = prop.compile(model)?;
-    let store = ShardedStore::new(opts.store, threads as usize * 8);
+    let store = ShardedStore::new(opts.store, threads as usize * 8, opts.presize_hint());
     let ctl = Control {
         stop: AtomicBool::new(false),
         idle: AtomicUsize::new(0),
@@ -408,8 +430,7 @@ where
         pend.truncate(1);
     }
     pend.truncate(opts.max_errors);
-    let violations: Vec<Violation<M::State>> =
-        pend.iter().map(|p| reconstruct(model, &store, p)).collect();
+    let violations = reconstruct_all(model, |h| store.parent_of(h), &pend);
 
     let hard_abort = *ctl.abort.lock().expect("abort poisoned");
     let truncated = ctl.truncated.load(Ordering::Relaxed);
@@ -547,15 +568,282 @@ where
     Ok(stats)
 }
 
-/// Rebuild a violation trail from parent-hash backlinks: walk hashes back
-/// to an initial state, then replay `successors` forward matching each
-/// hash on the chain. Falls back to a single-state trail if the chain
-/// cannot be replayed (possible only under 64-bit hash collisions).
-fn reconstruct<M: TransitionSystem>(
+/// Deterministic-frontier engine ([`Frontier::Deterministic`]): a
+/// depth-synchronous parallel BFS.
+///
+/// Each level's states are expanded concurrently (contiguous chunks, one
+/// per worker — `successors` is the dominant cost on the Promela engine),
+/// but deduplication, property monitoring and violation recording run in
+/// one sequential merge pass in a scheduling-independent order: chunk
+/// order × task order × successor order. Consequences:
+///
+/// - the violation sequence, the *first* violation, and the states-stored
+///   count at every early stop (`!collect_all`, `max_states`,
+///   `max_errors`) are identical run-to-run and across thread counts;
+/// - `Order::Random(seed)` still diversifies, but the shuffle is keyed by
+///   `seed ^ parent_hash` instead of per-worker, so it too is
+///   reproducible;
+/// - parent backlinks are first-come in merge order, so reconstructed
+///   trails are stable as well;
+/// - budget aborts (time/memory) are still checked — between levels, so a
+///   run that aborts does so at a level boundary (wall-clock aborts remain
+///   inherently timing-dependent).
+///
+/// On a full exploration the report (`states_stored`, `states_matched`,
+/// `transitions`, verdict, `exhausted`) matches the sequential engine's.
+fn check_deterministic<M>(
     model: &M,
-    store: &ShardedStore,
+    prop: &SafetyLtl,
+    opts: &CheckOptions,
+) -> Result<CheckReport<M::State>>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    /// one chunk's expansion: (parent hash, child) pairs + transition count
+    type Expansion<S> = (Vec<(u64, S)>, u64);
+
+    /// Dedup + backlink in one step. In the `HashCompact` regime the
+    /// backlink map's key set *is* the visited set (as in [`Shard`]), so
+    /// the store is bypassed — no duplicate 8-byte key, no second probe.
+    fn insert_det(
+        compact: bool,
+        store: &mut VisitedStore,
+        parents: &mut FxHashMap<u64, u64>,
+        enc: &[u8],
+        h: u64,
+        parent: u64,
+    ) -> bool {
+        if compact {
+            match parents.entry(h) {
+                Entry::Occupied(_) => false,
+                Entry::Vacant(v) => {
+                    v.insert(parent);
+                    true
+                }
+            }
+        } else if store.insert_hashed(enc, h) {
+            parents.insert(h, parent);
+            true
+        } else {
+            false
+        }
+    }
+
+    let start = Instant::now();
+    let threads = opts.effective_threads().max(1) as usize;
+    let compiled = prop.compile(model)?;
+    let compact = matches!(opts.store, StoreKind::HashCompact);
+    let store_hint = if compact { 0 } else { opts.presize_hint() };
+    let mut store = VisitedStore::with_capacity(opts.store, store_hint);
+    let mut parents: FxHashMap<u64, u64> = FxHashMap::with_capacity_and_hasher(
+        opts.presize_hint().min(1 << 24) as usize,
+        Default::default(),
+    );
+    let mut stats = SearchStats::default();
+    let mut pend: Vec<Pending<M::State>> = Vec::new();
+    let mut truncated = false;
+    let mut stop = false;
+    let mut scratch = EvalScratch::default();
+    let mut enc = Vec::with_capacity(64);
+    let mut frontier: Vec<Task<M::State>> = Vec::new();
+
+    // seed level: monitor the initial states in declaration order
+    for init in model.initial_states() {
+        model.encode(&init, &mut enc);
+        let h = hash_bytes(&enc);
+        if !insert_det(compact, &mut store, &mut parents, &enc, h, ROOT) {
+            stats.states_matched += 1;
+            continue;
+        }
+        stats.states_stored += 1;
+        if !compiled.holds_state(model, &init, &mut scratch)? {
+            pend.push(Pending {
+                state: init.clone(),
+                hash: h,
+                depth: 0,
+                found_after: start.elapsed(),
+            });
+            if pend.len() >= opts.max_errors {
+                stats.abort = Some(Abort::ErrorLimit);
+                stop = true;
+                break;
+            }
+            if !opts.collect_all {
+                stop = true;
+                break;
+            }
+        }
+        frontier.push(Task { state: init, hash: h, depth: 0 });
+    }
+
+    while !stop && !frontier.is_empty() {
+        // parallel expansion of the whole level, chunk order preserved
+        let chunk = frontier.len().div_ceil(threads);
+        let expanded: Vec<Expansion<M::State>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = frontier
+                .chunks(chunk)
+                .map(|tasks| {
+                    scope.spawn(move || -> Expansion<M::State> {
+                        let mut out: Vec<(u64, M::State)> = Vec::new();
+                        let mut succs: Vec<M::State> = Vec::new();
+                        let mut trans = 0u64;
+                        for t in tasks {
+                            model.successors(&t.state, &mut succs);
+                            trans += succs.len() as u64;
+                            if let Order::Random(seed) = opts.order {
+                                // per-state seeding keeps the shuffle
+                                // independent of which worker expands it
+                                Xoshiro256::new(seed ^ t.hash).shuffle(&mut succs);
+                            }
+                            out.extend(succs.drain(..).map(|s| (t.hash, s)));
+                        }
+                        (out, trans)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("deterministic-frontier worker panicked"))
+                .collect()
+        });
+
+        let depth = frontier[0].depth + 1;
+        frontier.clear();
+        // sequential merge: dedup, backlinks, monitoring — deterministic
+        let mut level_children = 0u64;
+        'merge: for (children, trans) in expanded {
+            level_children += trans;
+            stats.transitions += trans;
+            for (parent, s) in children {
+                model.encode(&s, &mut enc);
+                let h = hash_bytes(&enc);
+                if !insert_det(compact, &mut store, &mut parents, &enc, h, parent) {
+                    stats.states_matched += 1;
+                    continue;
+                }
+                stats.states_stored += 1;
+                stats.max_depth_reached = stats.max_depth_reached.max(depth as usize);
+                if !compiled.holds_state(model, &s, &mut scratch)? {
+                    pend.push(Pending {
+                        state: s.clone(),
+                        hash: h,
+                        depth,
+                        found_after: start.elapsed(),
+                    });
+                    if pend.len() >= opts.max_errors {
+                        stats.abort = Some(Abort::ErrorLimit);
+                        stop = true;
+                        break 'merge;
+                    }
+                    if !opts.collect_all {
+                        stop = true;
+                        break 'merge;
+                    }
+                }
+                if stats.states_stored >= opts.max_states {
+                    stats.abort = Some(Abort::StateLimit);
+                    stop = true;
+                    break 'merge;
+                }
+                if (depth as usize) < opts.max_depth {
+                    frontier.push(Task { state: s, hash: h, depth });
+                } else {
+                    // stored but not expanded (SPIN -m semantics)
+                    truncated = true;
+                }
+            }
+        }
+        if stop {
+            break;
+        }
+        // budgets, at level granularity (~24 B/backlink entry, as in the
+        // sharded store's accounting). The frontier and the next level's
+        // expansion buffers are resident alongside the stores, so charge
+        // them shallowly too — as dfs charges its stack — using this
+        // level's child count as the estimate for the next expansion.
+        // All inputs are deterministic, so MemoryLimit aborts stay
+        // reproducible across runs and thread counts.
+        if let Some(tb) = opts.time_budget {
+            if start.elapsed() >= tb {
+                stats.abort = Some(Abort::TimeLimit);
+                break;
+            }
+        }
+        let frontier_bytes =
+            frontier.capacity() as u64 * std::mem::size_of::<Task<M::State>>() as u64;
+        let expansion_bytes =
+            level_children * std::mem::size_of::<(u64, M::State)>() as u64;
+        if store.bytes_used() + parents.len() as u64 * 24 + frontier_bytes + expansion_bytes
+            >= opts.memory_budget
+        {
+            stats.abort = Some(Abort::MemoryLimit);
+            break;
+        }
+    }
+
+    if stats.abort.is_none() && truncated {
+        stats.abort = Some(Abort::DepthTruncated);
+    }
+    let mut exhausted = stats.abort.is_none();
+    if !opts.collect_all && !pend.is_empty() {
+        exhausted = false; // stopped early by design
+        pend.truncate(1);
+    }
+    pend.truncate(opts.max_errors);
+    let violations = reconstruct_all(model, |h| parents.get(&h).copied(), &pend);
+    stats.bytes_used = store.bytes_used() + parents.len() as u64 * 24;
+    stats.elapsed = start.elapsed();
+    Ok(CheckReport { violations, stats, exhausted })
+}
+
+/// Rebuild violation trails from parent-hash backlinks, batched. Replayed
+/// states are memoized by hash, so `successors` runs at most once per
+/// distinct trail state across *all* violations — `collect_all` runs
+/// whose violations share trail prefixes (the common case: every tuning
+/// branch forks off one initial segment) replay each shared edge once
+/// instead of once per violation, which was quadratic. Backlinks are read
+/// through `parent_of` so both parallel engines (sharded store / plain
+/// map) share the replay.
+fn reconstruct_all<M, F>(
+    model: &M,
+    parent_of: F,
+    pend: &[Pending<M::State>],
+) -> Vec<Violation<M::State>>
+where
+    M: TransitionSystem,
+    F: Fn(u64) -> Option<u64>,
+{
+    // hash -> already-replayed state, seeded with the initial states
+    let mut known: FxHashMap<u64, M::State> = FxHashMap::default();
+    let mut enc = Vec::with_capacity(64);
+    for init in model.initial_states() {
+        model.encode(&init, &mut enc);
+        known.insert(hash_bytes(&enc), init);
+    }
+    let mut succs: Vec<M::State> = Vec::new();
+    pend.iter()
+        .map(|p| reconstruct_one(model, &parent_of, p, &mut known, &mut succs, &mut enc))
+        .collect()
+}
+
+/// One trail: walk backlinks root-ward (cheap map lookups), then replay
+/// forward, serving memoized states and replaying `successors` only for
+/// hashes not seen on an earlier trail. Falls back to a single-state
+/// trail if the chain cannot be replayed (possible only under 64-bit hash
+/// collisions).
+fn reconstruct_one<M, F>(
+    model: &M,
+    parent_of: &F,
     p: &Pending<M::State>,
-) -> Violation<M::State> {
+    known: &mut FxHashMap<u64, M::State>,
+    succs: &mut Vec<M::State>,
+    enc: &mut Vec<u8>,
+) -> Violation<M::State>
+where
+    M: TransitionSystem,
+    F: Fn(u64) -> Option<u64>,
+{
     let fallback = |state: &M::State| Violation {
         trail: Trail { states: vec![state.clone()] },
         depth: p.depth as usize,
@@ -565,7 +853,7 @@ fn reconstruct<M: TransitionSystem>(
     let mut chain = vec![p.hash];
     let mut cur = p.hash;
     loop {
-        match store.parent_of(cur) {
+        match parent_of(cur) {
             Some(ROOT) => break,
             Some(parent) => {
                 chain.push(parent);
@@ -576,35 +864,30 @@ fn reconstruct<M: TransitionSystem>(
     }
     chain.reverse();
 
-    let mut enc = Vec::with_capacity(64);
     let mut states: Vec<M::State> = Vec::with_capacity(chain.len());
-    let mut cur_state = None;
-    for init in model.initial_states() {
-        model.encode(&init, &mut enc);
-        if hash_bytes(&enc) == chain[0] {
-            cur_state = Some(init);
-            break;
-        }
+    match known.get(&chain[0]) {
+        Some(s) => states.push(s.clone()),
+        None => return fallback(&p.state), // root hash not an initial state
     }
-    let Some(mut cs) = cur_state else {
-        return fallback(&p.state);
-    };
-    states.push(cs.clone());
-    let mut succs = Vec::new();
     for &want in &chain[1..] {
-        model.successors(&cs, &mut succs);
+        if let Some(s) = known.get(&want) {
+            states.push(s.clone());
+            continue;
+        }
+        let prev = states.last().expect("chain starts with a state");
+        model.successors(prev, succs);
         let mut found = None;
         for s in succs.drain(..) {
-            model.encode(&s, &mut enc);
-            if hash_bytes(&enc) == want {
+            model.encode(&s, enc);
+            if hash_bytes(enc) == want {
                 found = Some(s);
                 break;
             }
         }
         match found {
             Some(s) => {
-                states.push(s.clone());
-                cs = s;
+                known.insert(want, s.clone());
+                states.push(s);
             }
             None => return fallback(&p.state),
         }

@@ -64,6 +64,25 @@ impl FullStore {
         }
     }
 
+    /// A store pre-sized for `expected` states: the index table starts at
+    /// the power of two that keeps `expected` entries under the 7/8 load
+    /// cap, so a well-estimated search never pays a `grow()` rehash (the
+    /// parallel engine would otherwise rehash under a shard lock, stalling
+    /// every worker probing that shard). A low estimate only means later
+    /// growth — correctness is unaffected.
+    pub(crate) fn with_capacity(expected: usize) -> Self {
+        let slots = (expected.saturating_mul(8) / 7 + 1)
+            .next_power_of_two()
+            .max(FULL_INIT_SLOTS);
+        Self {
+            // ~8 B/state arena headroom; encodings beyond that grow normally
+            data: Vec::with_capacity(expected.saturating_mul(8)),
+            entries: Vec::with_capacity(expected),
+            table: vec![0u32; slots],
+            mask: slots - 1,
+        }
+    }
+
     #[inline]
     fn entry_bytes(&self, e: &FullEntry) -> &[u8] {
         &self.data[e.pos..e.pos + e.len as usize]
@@ -126,7 +145,28 @@ pub enum VisitedStore {
     Bitstate { table: Vec<u64>, mask: u64, hashes: u8, set_bits: u64 },
 }
 
+/// Cap on pre-sized entry counts: a wild over-estimate must not allocate
+/// unbounded memory up front (1 << 26 entries ≈ 64 M states).
+const PRESIZE_CAP: u64 = 1 << 26;
+
 impl VisitedStore {
+    /// [`new`](Self::new) pre-sized for an `expected` state count
+    /// (0 = unknown: identical to `new`). Bitstate tables are fixed-size
+    /// by construction and ignore the hint.
+    pub fn with_capacity(kind: StoreKind, expected: u64) -> Self {
+        let expected = expected.min(PRESIZE_CAP) as usize;
+        if expected == 0 {
+            return Self::new(kind);
+        }
+        match kind {
+            StoreKind::Full => Self::Full(FullStore::with_capacity(expected)),
+            StoreKind::HashCompact => Self::HashCompact {
+                set: FxHashSet::with_capacity_and_hasher(expected, Default::default()),
+            },
+            StoreKind::Bitstate { .. } => Self::new(kind),
+        }
+    }
+
     pub fn new(kind: StoreKind) -> Self {
         match kind {
             StoreKind::Full => Self::Full(FullStore::new()),
@@ -317,6 +357,25 @@ mod tests {
         }
         assert!(missed > 0, "tiny table must produce false positives");
         assert!(s.saturation() > 0.5);
+    }
+
+    #[test]
+    fn presized_store_agrees_with_default() {
+        for kind in [StoreKind::Full, StoreKind::HashCompact] {
+            let mut a = VisitedStore::new(kind);
+            let mut b = VisitedStore::with_capacity(kind, 2000);
+            for st in states(2000) {
+                assert_eq!(a.insert(&st), b.insert(&st));
+            }
+            for st in states(2000) {
+                assert!(!b.insert(&st));
+            }
+            assert_eq!(a.len(), b.len());
+        }
+        // 0 = unknown, and bitstate ignores the hint
+        assert_eq!(VisitedStore::with_capacity(StoreKind::Full, 0).len(), 0);
+        let s = VisitedStore::with_capacity(StoreKind::Bitstate { log2_bits: 20, hashes: 3 }, 999);
+        assert_eq!(s.bytes_used(), (1 << 20) / 8);
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //!
 //! Hash collisions cannot poison results: a stored entry only counts as a
 //! hit when its full description string matches the lookup's.
+//!
+//! `engine: promela` jobs embed a content hash of their Promela source in
+//! the description (`pml=<16 hex>`, see `TuningJob::cache_desc`), so an
+//! edited model never hits the entry its previous revision stored — the
+//! stale entry simply becomes unreachable and ages out of use.
 
 use crate::tuner::{CachedTune, Method, TuneCache, TuneResult};
 use crate::util::error::{bail, Context, Result};

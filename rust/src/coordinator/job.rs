@@ -1,28 +1,40 @@
 //! Batch tuning-job specifications.
 //!
 //! A [`TuningJob`] names everything that determines a tuning result —
-//! model kind, input size, platform configuration, transition
-//! granularity, search method — plus the sharding degree (an execution
-//! knob that does *not* affect the result and is therefore excluded from
-//! the cache key). Jobs are parsed from a plain-text spec file, one job
-//! per line:
+//! model kind, verification engine, input size, platform configuration,
+//! transition granularity, search method — plus the sharding degree (an
+//! execution knob that does *not* affect the result and is therefore
+//! excluded from the cache key). Jobs are parsed from a plain-text spec
+//! file, one job per line:
 //!
 //! ```text
-//! # three jobs; key=value pairs in any order after the model kind
+//! # four jobs; key=value pairs in any order after the model kind
 //! job minimum size=64 np=4 gmt=3 method=exhaustive shards=4
 //! job minimum size=128 np=4 gmt=3 method=swarm name=big-sweep
 //! job abstract size=32 gmt=10 gran=phase
+//! # the paper's own artifact: a Promela model, batch-tuned
+//! job minimum size=16 engine=promela
 //! ```
+//!
+//! `engine=promela` runs the job through the Promela front end
+//! ([`crate::promela`]) instead of the native transition systems: the
+//! model is the template `crate::promela::templates` generates for
+//! (model, size, platform) — or, with `src=path/to/model.pml`, an
+//! external source file. Promela jobs are cached under a **content hash
+//! of the Promela source** (see [`TuningJob::cache_desc`]), so editing a
+//! model can never serve a stale cached optimum.
 
 use crate::model::TransitionSystem;
 use crate::platform::abstract_model::AbsState;
 use crate::platform::min_model::MinState;
-use crate::platform::{AbstractModel, DataInit, Granularity, MinModel, PlatformConfig};
+use crate::platform::{
+    enumerate_tunings, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig, Tuning,
+};
+use crate::promela::{source_hash, templates, PromelaSystem, PState};
 use crate::tuner::Method;
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 
-/// Which of the paper's models a job tunes (native engines only; the
-/// Promela front end stays on the single-shot `verify`/`tune` path).
+/// Which of the paper's models a job tunes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
     Abstract,
@@ -50,11 +62,54 @@ impl std::str::FromStr for ModelKind {
     }
 }
 
+/// Which verification engine executes a job's model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobEngine {
+    /// the optimized native transition systems (`crate::platform`)
+    #[default]
+    Native,
+    /// the Promela front end (`crate::promela`) with full process
+    /// interleaving — the paper's actual artifact, orders of magnitude
+    /// more states than the native engines for the same model
+    Promela,
+}
+
+impl std::fmt::Display for JobEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            JobEngine::Native => "native",
+            JobEngine::Promela => "promela",
+        })
+    }
+}
+
+impl std::str::FromStr for JobEngine {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(JobEngine::Native),
+            "promela" => Ok(JobEngine::Promela),
+            other => bail!("unknown engine `{}` (native | promela)", other),
+        }
+    }
+}
+
 /// One batch tuning job.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TuningJob {
     pub name: String,
     pub model: ModelKind,
+    /// verification engine; `Promela` runs the generated template (or
+    /// [`source`](Self::source)) through the front end
+    pub engine: JobEngine,
+    /// explicit Promela source text (`src=` spec key). `None` with
+    /// `engine=promela` means "generate the [`model`](Self::model)
+    /// template for (size, platform)". Ignored by the native engine.
+    /// External sources must select (WG, TS) within the lattice `size`
+    /// enumerates — sharding partitions *that* lattice, and a tuning
+    /// outside it would be pruned from every shard.
+    pub source: Option<String>,
     pub size: u32,
     pub plat: PlatformConfig,
     pub granularity: Granularity,
@@ -75,11 +130,30 @@ impl TuningJob {
         Self {
             name: format!("{}-{}", model, size),
             model,
+            engine: JobEngine::Native,
+            source: None,
             size,
             plat,
             granularity: Granularity::Phase,
             method: Method::Exhaustive,
             shards: 1,
+        }
+    }
+
+    /// The Promela source this job verifies (engine=promela only): the
+    /// explicit [`source`](Self::source) when given, else the model-kind
+    /// template for (size, platform). Callers must have validated the job
+    /// ([`build`](Self::build) does) — the template generators assert on
+    /// invalid sizes.
+    fn promela_source_text(&self) -> String {
+        match &self.source {
+            Some(src) => src.clone(),
+            None => match self.model {
+                ModelKind::Abstract => templates::abstract_pml(self.size, &self.plat),
+                ModelKind::Minimum => {
+                    templates::minimum_pml(self.size, self.plat.np, self.plat.gmt)
+                }
+            },
         }
     }
 
@@ -94,7 +168,29 @@ impl TuningJob {
     /// of returning, so no approximate exhaustive result can ever reach
     /// the cache. Swarm results *are* configuration-dependent; use
     /// [`cache_desc_with`](Self::cache_desc_with) to key those.
+    ///
+    /// Promela jobs key on a **content hash of the Promela source**
+    /// (template-generated or explicit) instead of the structural fields:
+    /// the source bytes fully determine the model (the templates embed
+    /// size and platform, and the front end ignores `granularity`), so the
+    /// hash subsumes them — placeholder fields alongside `src=` cannot
+    /// fragment the key, a template job and an external file with
+    /// byte-identical content share entries, and any edit to a model —
+    /// even a comment — changes the key, so an edited model can never be
+    /// served a stale entry. The native engines are keyed structurally and
+    /// stay byte-compatible with pre-existing cache files.
     pub fn cache_desc(&self) -> String {
+        let method = match self.method {
+            Method::Exhaustive => "exhaustive",
+            Method::Swarm => "swarm",
+        };
+        if self.engine == JobEngine::Promela {
+            return format!(
+                "engine=promela pml={:016x} method={} prop=over_time",
+                source_hash(&self.promela_source_text()),
+                method,
+            );
+        }
         format!(
             "model={} size={} nd={} nu={} np={} gmt={} gran={} method={} prop=over_time",
             self.model,
@@ -107,10 +203,7 @@ impl TuningJob {
                 Granularity::Tick => "tick",
                 Granularity::Phase => "phase",
             },
-            match self.method {
-                Method::Exhaustive => "exhaustive",
-                Method::Swarm => "swarm",
-            },
+            method,
         )
     }
 
@@ -142,29 +235,90 @@ impl TuningJob {
         crate::util::hash::hash_bytes(self.cache_desc().as_bytes())
     }
 
-    /// Construct the job's native transition system.
+    /// Construct the job's transition system.
     pub fn build(&self) -> Result<JobModel> {
-        match self.model {
-            ModelKind::Abstract => Ok(JobModel::Abs(AbstractModel::new(
-                self.size,
-                self.plat,
-                self.granularity,
-            )?)),
-            ModelKind::Minimum => Ok(JobModel::Min(MinModel::new(
+        match self.engine {
+            JobEngine::Promela => {
+                if self.source.is_none() {
+                    // validate before template generation (the generators
+                    // assert instead of erroring on bad sizes/platforms)
+                    enumerate_tunings(self.size)?;
+                    self.plat.validate()?;
+                }
+                Ok(JobModel::Pml(PromelaSystem::from_source(&self.promela_source_text())?))
+            }
+            JobEngine::Native => match self.model {
+                ModelKind::Abstract => Ok(JobModel::Abs(AbstractModel::new(
+                    self.size,
+                    self.plat,
+                    self.granularity,
+                )?)),
+                ModelKind::Minimum => Ok(JobModel::Min(MinModel::new(
+                    self.size,
+                    self.plat.np,
+                    self.plat.gmt,
+                    DataInit::Descending,
+                    self.granularity,
+                )?)),
+            },
+        }
+    }
+
+    /// Ground-truth optimal model time (for tests and report checks).
+    /// Valid for Promela *template* jobs too — the templates are pinned to
+    /// the native models' `predicted_time` by the equivalence tests — but
+    /// not for external `src=` sources, which have no closed form.
+    pub fn optimum_time(&self) -> Result<u64> {
+        ensure!(
+            self.source.is_none(),
+            "an external Promela source has no closed-form optimum"
+        );
+        Ok(match self.model {
+            ModelKind::Abstract => {
+                AbstractModel::new(self.size, self.plat, self.granularity)?.optimum().0
+            }
+            ModelKind::Minimum => MinModel::new(
                 self.size,
                 self.plat.np,
                 self.plat.gmt,
                 DataInit::Descending,
                 self.granularity,
-            )?)),
-        }
+            )?
+            .optimum()
+            .0,
+        })
     }
 
-    /// Ground-truth optimal model time (for tests and report checks).
-    pub fn optimum_time(&self) -> Result<u64> {
-        Ok(match self.build()? {
-            JobModel::Abs(m) => m.optimum().0,
-            JobModel::Min(m) => m.optimum().0,
+    /// Per-tuning state-space cost estimates over the job's (WG, TS)
+    /// lattice — the input to shard weighting ([`super::shard::plan_shards`])
+    /// and adaptive shard counts. The estimate is the native model's
+    /// closed-form `predicted_time`: the number of states the checker
+    /// stores along one tuning branch is proportional to that branch's
+    /// tick count in every engine (ticks for `Tick` granularity, phases
+    /// for `Phase`, interleavings-per-tick for Promela — all monotone in
+    /// it), and only the *relative* weights matter for budget splits.
+    /// External Promela sources have no closed form and fall back to
+    /// uniform weights over the size-derived lattice.
+    pub fn tuning_costs(&self) -> Result<Vec<(Tuning, u64)>> {
+        let tunings = enumerate_tunings(self.size)?;
+        if self.source.is_some() {
+            return Ok(tunings.into_iter().map(|t| (t, 1)).collect());
+        }
+        Ok(match self.model {
+            ModelKind::Abstract => {
+                let m = AbstractModel::new(self.size, self.plat, self.granularity)?;
+                tunings.into_iter().map(|t| (t, m.predicted_time(t).max(1))).collect()
+            }
+            ModelKind::Minimum => {
+                let m = MinModel::new(
+                    self.size,
+                    self.plat.np,
+                    self.plat.gmt,
+                    DataInit::Descending,
+                    self.granularity,
+                )?;
+                tunings.into_iter().map(|t| (t, m.predicted_time(t).max(1))).collect()
+            }
         })
     }
 
@@ -210,6 +364,18 @@ impl TuningJob {
                     "nu" => job.plat.nu = int("nu")?,
                     "gmt" => job.plat.gmt = int("gmt")?,
                     "shards" => job.shards = int("shards")?,
+                    "engine" => {
+                        job.engine = value
+                            .parse()
+                            .with_context(|| format!("spec line {}", lineno + 1))?
+                    }
+                    "src" => {
+                        let text = std::fs::read_to_string(value).with_context(|| {
+                            format!("spec line {}: reading Promela source `{}`", lineno + 1, value)
+                        })?;
+                        job.engine = JobEngine::Promela; // src= implies the engine
+                        job.source = Some(text);
+                    }
                     "gran" | "granularity" => {
                         job.granularity = match value {
                             "tick" => Granularity::Tick,
@@ -236,8 +402,8 @@ impl TuningJob {
     }
 }
 
-/// A constructed native model for a job. The [`TransitionSystem`] impl
-/// dispatches uniformly over both kinds for cold paths (inspection,
+/// A constructed model for a job. The [`TransitionSystem`] impl
+/// dispatches uniformly over the kinds for cold paths (inspection,
 /// tests); hot paths should match on the variant and run the concrete
 /// model directly — the uniform interface costs a temporary successor
 /// buffer per expanded state, which the checker's reused-`out` contract
@@ -245,13 +411,15 @@ impl TuningJob {
 pub enum JobModel {
     Abs(AbstractModel),
     Min(MinModel),
+    Pml(PromelaSystem),
 }
 
 /// State of a [`JobModel`] — tags the underlying model's state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum JobState {
     Abs(AbsState),
     Min(MinState),
+    Pml(PState),
 }
 
 impl TransitionSystem for JobModel {
@@ -261,6 +429,7 @@ impl TransitionSystem for JobModel {
         match self {
             JobModel::Abs(m) => m.initial_states().into_iter().map(JobState::Abs).collect(),
             JobModel::Min(m) => m.initial_states().into_iter().map(JobState::Min).collect(),
+            JobModel::Pml(m) => m.initial_states().into_iter().map(JobState::Pml).collect(),
         }
     }
 
@@ -277,6 +446,11 @@ impl TransitionSystem for JobModel {
                 m.successors(s, &mut buf);
                 out.extend(buf.into_iter().map(JobState::Min));
             }
+            (JobModel::Pml(m), JobState::Pml(s)) => {
+                let mut buf = Vec::new();
+                m.successors(s, &mut buf);
+                out.extend(buf.into_iter().map(JobState::Pml));
+            }
             _ => unreachable!("state kind does not match model kind"),
         }
     }
@@ -285,6 +459,7 @@ impl TransitionSystem for JobModel {
         match (self, s) {
             (JobModel::Abs(m), JobState::Abs(s)) => m.encode(s, out),
             (JobModel::Min(m), JobState::Min(s)) => m.encode(s, out),
+            (JobModel::Pml(m), JobState::Pml(s)) => m.encode(s, out),
             _ => unreachable!("state kind does not match model kind"),
         }
     }
@@ -293,6 +468,7 @@ impl TransitionSystem for JobModel {
         match (self, s) {
             (JobModel::Abs(m), JobState::Abs(s)) => m.eval_var(s, name),
             (JobModel::Min(m), JobState::Min(s)) => m.eval_var(s, name),
+            (JobModel::Pml(m), JobState::Pml(s)) => m.eval_var(s, name),
             _ => unreachable!("state kind does not match model kind"),
         }
     }
@@ -301,6 +477,7 @@ impl TransitionSystem for JobModel {
         match (self, s) {
             (JobModel::Abs(m), JobState::Abs(s)) => m.describe(s),
             (JobModel::Min(m), JobState::Min(s)) => m.describe(s),
+            (JobModel::Pml(m), JobState::Pml(s)) => m.describe(s),
             _ => unreachable!("state kind does not match model kind"),
         }
     }
@@ -391,5 +568,61 @@ mod tests {
         let job = TuningJob::new(ModelKind::Minimum, 64);
         let m = MinModel::paper(64, 4).unwrap();
         assert_eq!(job.optimum_time().unwrap(), m.optimum().0);
+    }
+
+    #[test]
+    fn spec_parses_promela_engine_jobs() {
+        let jobs = TuningJob::parse_spec(
+            "job minimum size=16 engine=promela shards=2\n\
+             job abstract size=8 engine=promela np=2 gmt=2\n\
+             job minimum size=16\n",
+        )
+        .unwrap();
+        assert_eq!(jobs[0].engine, JobEngine::Promela);
+        assert_eq!(jobs[1].engine, JobEngine::Promela);
+        assert_eq!(jobs[2].engine, JobEngine::Native);
+        assert!(matches!(jobs[0].build().unwrap(), JobModel::Pml(_)));
+        assert!(matches!(jobs[2].build().unwrap(), JobModel::Min(_)));
+        // bad engine value and invalid promela sizes are spec errors, not panics
+        assert!(TuningJob::parse_spec("job minimum engine=spin\n").is_err());
+        assert!(TuningJob::parse_spec("job minimum size=12 engine=promela\n").is_err());
+    }
+
+    #[test]
+    fn promela_cache_key_is_content_addressed() {
+        let mut a = TuningJob::new(ModelKind::Minimum, 16);
+        assert!(!a.cache_desc().contains("pml="), "native keys stay byte-compatible");
+        a.engine = JobEngine::Promela;
+        let template_desc = a.cache_desc();
+        assert!(template_desc.contains("engine=promela pml="));
+        // an explicit source with identical bytes shares the key...
+        let mut b = a.clone();
+        b.source = Some(crate::promela::templates::minimum_pml(16, 4, 3));
+        assert_eq!(b.cache_desc(), template_desc);
+        // ...and any edit — even a comment — changes it
+        let mut c = a.clone();
+        c.source = Some(format!("// edited\n{}", crate::promela::templates::minimum_pml(16, 4, 3)));
+        assert_ne!(c.cache_desc(), template_desc);
+        // sharding degree still never touches the key
+        let mut d = a.clone();
+        d.shards = 7;
+        assert_eq!(d.cache_desc(), template_desc);
+    }
+
+    #[test]
+    fn tuning_costs_track_predicted_time() {
+        let job = TuningJob::new(ModelKind::Minimum, 64);
+        let m = MinModel::paper(64, 4).unwrap();
+        let costs = job.tuning_costs().unwrap();
+        assert_eq!(costs.len(), m.tunings().len());
+        for &(t, c) in &costs {
+            assert_eq!(c, m.predicted_time(t).max(1));
+        }
+        // external sources: uniform weights over the assumed lattice
+        let mut ext = job.clone();
+        ext.engine = JobEngine::Promela;
+        ext.source = Some("int x; active proctype main() { x = 1 }".into());
+        assert!(ext.tuning_costs().unwrap().iter().all(|&(_, c)| c == 1));
+        assert!(ext.optimum_time().is_err(), "no closed form for external sources");
     }
 }

@@ -7,24 +7,33 @@
 //! results reused across jobs. This module supplies that layer:
 //!
 //! - [`TuningJob`] (in [`job`]) — a declarative job spec (model kind,
-//!   size, platform config, granularity, method, sharding degree),
-//!   parseable from a plain-text spec file;
+//!   engine, size, platform config, granularity, method, sharding
+//!   degree), parseable from a plain-text spec file. `engine: promela`
+//!   jobs run the paper's actual artifact — a Promela model with full
+//!   process interleaving — through the same batch machinery as the
+//!   native engines, cached under a content hash of the Promela source;
 //! - [`partition`] / [`ShardModel`] (in [`shard`]) — each job's (WG, TS)
 //!   lattice is split into sub-lattices checked independently and merged,
 //!   generalizing the swarm's diversified-*seed* workers to
-//!   partitioned-*space* workers;
+//!   partitioned-*space* workers. [`plan_shards`] turns the job-level
+//!   budgets into *shard-aware* budgets: time/memory/max_states scale
+//!   with each sub-lattice's estimated state-space size
+//!   ([`TuningJob::tuning_costs`]), and the same estimate pre-sizes the
+//!   checker's visited stores and — via [`adaptive_shard_count`] — picks
+//!   the shard count when neither the job nor `--shards` pins one;
 //! - [`JobQueue`] (in [`queue`]) — a work-stealing runner that executes
 //!   the (job × shard) task set across std threads;
 //! - [`ResultCache`] (in [`cache`]) — a content-addressed result store
 //!   keyed by `util::hash` of the job description, persisted to JSON via
 //!   `util::manifest::Json`, so repeated and overlapping jobs skip
 //!   verification entirely;
-//! - [`BatchReport`] (in [`report`]) — per-job optima plus cache/queue
-//!   statistics, rendered for the `mcautotune batch` subcommand.
+//! - [`BatchReport`] (in [`report`]) — per-job optima, per-shard budget
+//!   plans, and cache/queue statistics, rendered for the
+//!   `mcautotune batch` subcommand.
 //!
 //! [`run_batch`] composes them: cache lookups first (hits and duplicate
-//! jobs complete immediately), then one task per remaining (job, shard),
-//! then per-job merge + cache write-back.
+//! jobs complete immediately), then one task per remaining (job, shard)
+//! with its planned budget, then per-job merge + cache write-back.
 
 pub mod cache;
 pub mod job;
@@ -33,13 +42,16 @@ pub mod report;
 pub mod shard;
 
 pub use cache::{CacheEntry, ResultCache};
-pub use job::{JobModel, JobState, ModelKind, TuningJob};
+pub use job::{JobEngine, JobModel, JobState, ModelKind, TuningJob};
 pub use queue::{JobQueue, QueueStats};
 pub use report::{BatchReport, JobOutcome};
-pub use shard::{merge_results, partition, ShardModel, TuningShard};
+pub use shard::{
+    adaptive_shard_count, merge_results, partition, plan_shards, shard_weight, ShardModel,
+    ShardPlan, TuningShard,
+};
 
 use crate::checker::CheckOptions;
-use crate::platform::enumerate_tunings;
+use crate::platform::Tuning;
 use crate::swarm::SwarmConfig;
 use crate::tuner::{cached_result, tune, TuneCache, TuneResult};
 use crate::util::error::{bail, Context, Result};
@@ -51,9 +63,13 @@ use std::time::{Duration, Instant};
 pub struct BatchOptions {
     /// queue worker threads
     pub workers: u32,
-    /// shard count for jobs that left `shards` unset (0)
+    /// shard count for jobs that left `shards` unset (0). 0 here too =
+    /// adaptive: derive each job's count from its estimated state-space
+    /// size ([`adaptive_shard_count`]).
     pub default_shards: u32,
-    /// per-shard verification options (store kind, budgets)
+    /// *job-level* verification options. Budgets (time/memory/max_states)
+    /// are split across each job's shards proportionally to estimated
+    /// sub-lattice size — see [`plan_shards`] — not handed out uniformly.
     pub check: CheckOptions,
     /// per-shard swarm configuration (Method::Swarm jobs)
     pub swarm: SwarmConfig,
@@ -63,7 +79,7 @@ impl Default for BatchOptions {
     fn default() -> Self {
         Self {
             workers: 4,
-            default_shards: 4,
+            default_shards: 0,
             check: CheckOptions::default(),
             swarm: SwarmConfig::default(),
         }
@@ -85,13 +101,20 @@ pub fn run_batch(
 
     // Phase 1: cache pass. Hits complete immediately; overlapping jobs
     // (same cache description) run once and the rest resolve in phase 3.
+    // Cache misses are planned: per-tuning cost estimates weight the
+    // sub-lattices, the weights derive the shard count (when unset) and
+    // scale the job-level budgets into per-shard budgets.
     let mut outcomes: Vec<Option<JobOutcome>> = jobs.iter().map(|_| None).collect();
-    let mut tasks: Vec<(usize, TuningShard)> = Vec::new();
+    let mut tasks: Vec<(usize, ShardPlan)> = Vec::new();
     let mut shard_counts = vec![0u32; jobs.len()];
     let mut duplicates: Vec<usize> = Vec::new();
     let mut submitted: HashMap<String, usize> = HashMap::new();
+    // one description per job: for Promela jobs cache_desc regenerates
+    // and rehashes the template source, so don't recompute it per phase
+    let descs: Vec<String> =
+        jobs.iter().map(|job| job.cache_desc_with(&opts.swarm)).collect();
     for (ji, job) in jobs.iter().enumerate() {
-        let desc = job.cache_desc_with(&opts.swarm);
+        let desc = descs[ji].clone();
         if let Some(hit) = cache.lookup(&desc) {
             outcomes[ji] = Some(JobOutcome {
                 job: job.clone(),
@@ -99,6 +122,7 @@ pub fn run_batch(
                 cached: true,
                 shards: 0,
                 wall: Duration::ZERO,
+                plan: Vec::new(),
             });
             continue;
         }
@@ -107,38 +131,57 @@ pub fn run_batch(
             continue;
         }
         submitted.insert(desc, ji);
-        let tunings = enumerate_tunings(job.size)
-            .with_context(|| format!("job `{}`", job.name))?;
-        let shards = partition(
-            &tunings,
-            if job.shards == 0 { opts.default_shards } else { job.shards },
-        );
-        if shards.is_empty() {
+        let costs = job.tuning_costs().with_context(|| format!("job `{}`", job.name))?;
+        let tunings: Vec<Tuning> = costs.iter().map(|&(t, _)| t).collect();
+        let want = if job.shards != 0 {
+            job.shards
+        } else if opts.default_shards != 0 {
+            opts.default_shards
+        } else {
+            let total: u64 = costs.iter().map(|&(_, c)| c).sum();
+            adaptive_shard_count(total, opts.workers, tunings.len())
+        };
+        let plans = plan_shards(partition(&tunings, want), &costs, &opts.check);
+        if plans.is_empty() {
             bail!("job `{}` has an empty tuning space", job.name);
         }
-        shard_counts[ji] = shards.len() as u32;
-        tasks.extend(shards.into_iter().map(|s| (ji, s)));
+        shard_counts[ji] = plans.len() as u32;
+        tasks.extend(plans.into_iter().map(|p| (ji, p)));
     }
 
-    // Phase 2: every (job, shard) task through the work-stealing queue.
-    // Dispatch on the concrete model type so the checker's successor
-    // buffers are reused as designed (JobModel's uniform interface costs
-    // an allocation per expanded state — fine for cold paths, not here).
+    // Phase 2: every (job, shard) task through the work-stealing queue,
+    // each under its planned budget. Dispatch on the concrete model type
+    // so the checker's successor buffers are reused as designed
+    // (JobModel's uniform interface costs an allocation per expanded
+    // state — fine for cold paths, not here). Each task builds its own
+    // model: that repeats Promela parse+compile once per shard, but keeps
+    // build failures scoped to their job (not the batch) and costs
+    // microseconds against the shard's verification work.
     let queue = JobQueue::new(opts.workers);
-    let (shard_results, qstats) = queue.run_stats(tasks, |(ji, shard)| {
+    let (shard_results, qstats) = queue.run_stats(tasks, |(ji, plan)| {
         let job = &jobs[ji];
         let t0 = Instant::now();
+        // t_ini comes from the plan, never from random simulation: a
+        // sharded model can dead-end a simulation walk in a pruned branch
+        // (see ShardPlan::t_ini), and the plan's bound is sound anyway.
+        let t_ini = Some(plan.t_ini);
         let result = (|| -> Result<TuneResult> {
             match job.build()? {
                 JobModel::Abs(m) => {
-                    tune(&ShardModel { inner: &m, shard }, job.method, &opts.check, &opts.swarm, None)
+                    let sm = ShardModel::new(&m, plan.shard);
+                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
                 }
                 JobModel::Min(m) => {
-                    tune(&ShardModel { inner: &m, shard }, job.method, &opts.check, &opts.swarm, None)
+                    let sm = ShardModel::new(&m, plan.shard);
+                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
+                }
+                JobModel::Pml(m) => {
+                    let sm = ShardModel::new(&m, plan.shard);
+                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
                 }
             }
         })();
-        (ji, t0.elapsed(), result)
+        (ji, plan, t0.elapsed(), result)
     });
 
     // Phase 3: merge shards per job, write back to the cache. A failing
@@ -146,12 +189,14 @@ pub fn run_batch(
     // still merged, cached and persisted before the error propagates, so
     // completed verification work is never thrown away.
     let mut per_job: Vec<Vec<TuneResult>> = jobs.iter().map(|_| Vec::new()).collect();
+    let mut per_job_plans: Vec<Vec<ShardPlan>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_wall = vec![Duration::ZERO; jobs.len()];
     let mut failures: Vec<(usize, crate::util::error::Error)> = Vec::new();
-    for (ji, wall, result) in shard_results {
+    for (ji, plan, wall, result) in shard_results {
         match result {
             Ok(r) => {
                 per_job[ji].push(r);
+                per_job_plans[ji].push(plan);
                 per_job_wall[ji] = per_job_wall[ji].max(wall);
             }
             Err(e) => failures.push((ji, e)),
@@ -163,27 +208,33 @@ pub fn run_batch(
             continue; // cached, duplicate, or failed
         }
         let merged = merge_results(parts)?;
-        cache.store(&jobs[ji].cache_desc_with(&opts.swarm), &merged);
+        cache.store(&descs[ji], &merged);
         completed += 1;
+        // queue completion order is nondeterministic; report plans in
+        // lattice order
+        let mut plan = std::mem::take(&mut per_job_plans[ji]);
+        plan.sort_by_key(|p| (p.shard.wg_min, p.shard.ts_min));
         outcomes[ji] = Some(JobOutcome {
             job: jobs[ji].clone(),
             result: merged,
             cached: false,
             shards: shard_counts[ji],
             wall: per_job_wall[ji],
+            plan,
         });
     }
     // overlapping duplicates resolve against the freshly stored results
     // (a duplicate of a failed job stays unresolved and fails with it)
     for ji in duplicates {
-        let desc = jobs[ji].cache_desc_with(&opts.swarm);
-        if let Some(hit) = cache.lookup(&desc) {
+        let desc = &descs[ji];
+        if let Some(hit) = cache.lookup(desc) {
             outcomes[ji] = Some(JobOutcome {
                 job: jobs[ji].clone(),
-                result: cached_result(jobs[ji].method, hit, &desc),
+                result: cached_result(jobs[ji].method, hit, desc),
                 cached: true,
                 shards: 0,
                 wall: Duration::ZERO,
+                plan: Vec::new(),
             });
         }
     }
@@ -215,6 +266,6 @@ mod tests {
     fn batch_options_defaults() {
         let o = BatchOptions::default();
         assert_eq!(o.workers, 4);
-        assert_eq!(o.default_shards, 4);
+        assert_eq!(o.default_shards, 0, "0 = adaptive from the state-space estimate");
     }
 }

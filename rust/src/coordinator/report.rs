@@ -2,9 +2,10 @@
 //! table the `mcautotune batch` subcommand prints.
 
 use super::job::TuningJob;
+use super::shard::ShardPlan;
 use crate::report::Table;
 use crate::tuner::{Method, TuneResult};
-use crate::util::fmt::{human_duration, thousands};
+use crate::util::fmt::{human_bytes, human_duration, thousands};
 use std::time::Duration;
 
 /// The outcome of one job in a batch.
@@ -19,6 +20,11 @@ pub struct JobOutcome {
     pub shards: u32,
     /// job wall-clock inside the queue (max over its shards; ~0 cached)
     pub wall: Duration,
+    /// the per-shard budget plan the job ran under, in lattice order
+    /// (empty for cached jobs: nothing ran) — budgets scale with each
+    /// sub-lattice's estimated state-space weight, see
+    /// [`super::shard::plan_shards`]
+    pub plan: Vec<ShardPlan>,
 }
 
 /// Aggregate of one [`super::run_batch`] call.
@@ -68,6 +74,31 @@ impl BatchReport {
             ]);
         }
         let mut out = table.render();
+        // shard-aware budget plans: weight = estimated sub-lattice
+        // state-space size; budgets are the job budget scaled by weight
+        for o in &self.outcomes {
+            if o.plan.len() < 2 {
+                continue; // single-shard and cached jobs have no split to show
+            }
+            out.push_str(&format!(
+                "shard budgets `{}` (~ estimated sub-lattice size):\n",
+                o.job.name
+            ));
+            for p in &o.plan {
+                out.push_str(&format!(
+                    "  {}: weight {}, max_states {}, memory {}, time {}\n",
+                    p.shard,
+                    thousands(p.weight),
+                    if p.check.max_states == u64::MAX {
+                        "unlimited".to_string()
+                    } else {
+                        thousands(p.check.max_states)
+                    },
+                    human_bytes(p.check.memory_budget),
+                    p.check.time_budget.map_or("unlimited".to_string(), human_duration),
+                ));
+            }
+        }
         out.push_str(&format!(
             "cache: {} hit(s), {} miss(es) | {} states explored | {} task(s) stolen | wall {}\n",
             self.cache_hits,
@@ -98,6 +129,7 @@ mod tests {
                 cached: true,
                 shards: 0,
                 wall: Duration::ZERO,
+                plan: Vec::new(),
             }],
             cache_hits: 1,
             cache_misses: 0,

@@ -11,10 +11,12 @@
 //! point, so sharding loses no behaviour and the merged optimum equals
 //! the unsharded one.
 
+use crate::checker::CheckOptions;
 use crate::model::TransitionSystem;
 use crate::platform::Tuning;
 use crate::tuner::TuneResult;
 use crate::util::error::{ensure, Result};
+use std::time::Duration;
 
 /// An axis-aligned sub-lattice of the tuning space (inclusive bounds).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,11 +97,51 @@ pub fn partition(tunings: &[Tuning], n: u32) -> Vec<TuningShard> {
 /// A transition system restricted to one shard: successors that commit to
 /// a (WG, TS) outside the shard are pruned at the nondeterministic-choice
 /// point. Generic over the model — the only requirement is that states
-/// expose `WG`/`TS` through `eval_var` once (and only once) the tuning is
-/// chosen, which both native models do.
+/// expose `WG`/`TS` once the tuning is chosen. "Not chosen yet" is either
+/// an *absent* observation (the native models return `None` / a masked
+/// slot before the choice) or a *non-positive* value (the Promela engine's
+/// globals exist from the start, initialized to 0; real tunings are
+/// powers of two >= 2, so 0 is unambiguous).
 pub struct ShardModel<'a, M: TransitionSystem> {
     pub inner: &'a M,
     pub shard: TuningShard,
+    /// pre-resolved (WG, TS) dense-slot ids when the model supports them —
+    /// the per-successor prune then skips the string lookups (PromelaSystem
+    /// resolves names through a hash map; this is its pruning hot path)
+    slots: Option<(u32, u32)>,
+}
+
+impl<'a, M: TransitionSystem> ShardModel<'a, M> {
+    pub fn new(inner: &'a M, shard: TuningShard) -> Self {
+        let slots = match (inner.resolve_slot("WG"), inner.resolve_slot("TS")) {
+            (Some(w), Some(t)) => Some((w, t)),
+            _ => None,
+        };
+        Self { inner, shard, slots }
+    }
+
+    /// The (WG, TS) a state has committed to, or `None` before the choice.
+    fn observed_tuning(&self, s: &M::State) -> Option<Tuning> {
+        let (wg, ts) = match self.slots {
+            Some((w, t)) => {
+                let ids = [w, t];
+                let mut out = [0i64; 2];
+                if self.inner.eval_slots(s, &ids, &mut out) & 0b11 != 0 {
+                    return None;
+                }
+                (out[0], out[1])
+            }
+            None => match (self.inner.eval_var(s, "WG"), self.inner.eval_var(s, "TS")) {
+                (Some(wg), Some(ts)) => (wg, ts),
+                _ => return None,
+            },
+        };
+        if wg > 0 && ts > 0 {
+            Some(Tuning { wg: wg as u32, ts: ts as u32 })
+        } else {
+            None
+        }
+    }
 }
 
 impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
@@ -111,14 +153,10 @@ impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
 
     fn successors(&self, s: &M::State, out: &mut Vec<M::State>) {
         self.inner.successors(s, out);
-        // keep states that have not chosen a tuning yet (WG/TS unobservable)
-        out.retain(|n| {
-            match (self.inner.eval_var(n, "WG"), self.inner.eval_var(n, "TS")) {
-                (Some(wg), Some(ts)) => {
-                    self.shard.contains(Tuning { wg: wg as u32, ts: ts as u32 })
-                }
-                _ => true,
-            }
+        // keep states that have not chosen a tuning yet
+        out.retain(|n| match self.observed_tuning(n) {
+            Some(t) => self.shard.contains(t),
+            None => true,
         });
     }
 
@@ -141,6 +179,104 @@ impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
     fn describe(&self, s: &M::State) -> String {
         self.inner.describe(s)
     }
+}
+
+/// One shard's execution plan: the sub-lattice, its estimated state-space
+/// weight, and the budgets derived from it (see [`plan_shards`]).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shard: TuningShard,
+    /// estimated state-space weight: sum of per-tuning cost estimates of
+    /// the tunings this shard owns (see `TuningJob::tuning_costs`)
+    pub weight: u64,
+    /// initial over-time bound for the shard's bisection: the largest
+    /// per-tuning cost in the shard. For closed-form jobs the costs *are*
+    /// the terminal times, so `Cex(t_ini)` holds immediately; for uniform
+    /// costs (external Promela sources) bisection's doubling loop takes
+    /// over. Either way the batch runner never needs random simulation on
+    /// a sharded model — where a walk can dead-end in a pruned branch
+    /// (Promela assigns WG before TS, so a wrong-WG prefix only prunes at
+    /// the TS choice) and make `T_ini` discovery flaky.
+    pub t_ini: i64,
+    /// the shard's verification options — job-level budgets scaled by
+    /// `weight / total_weight`, plus `expected_states` for store pre-sizing
+    pub check: CheckOptions,
+}
+
+/// Estimated state-space weight of one shard under `costs`.
+pub fn shard_weight(costs: &[(Tuning, u64)], shard: &TuningShard) -> u64 {
+    costs
+        .iter()
+        .filter(|&&(t, _)| shard.contains(t))
+        .map(|&(_, c)| c)
+        .sum::<u64>()
+        .max(1)
+}
+
+/// Split the *job-level* budgets in `base` across `shards` proportionally
+/// to each shard's estimated state-space weight, instead of handing every
+/// shard the full (or a uniform) budget:
+///
+/// - `max_states`, `memory_budget` and `time_budget` scale by
+///   `weight / total`, floored at a 1/(4·n) share so estimate error can
+///   never starve a shard outright (`u64::MAX` max_states and an unset
+///   time budget stay unlimited);
+/// - `expected_states` is set to the shard's weight, pre-sizing its
+///   visited store (`checker`'s arena shards never rehash under lock when
+///   the estimate holds).
+///
+/// Shards run concurrently, so the proportional split makes the *sum* of
+/// live budgets equal the job budget — uniform per-shard budgets would
+/// multiply it by the shard count. Swarm-method jobs are budgeted by
+/// `SwarmConfig` and ignore these knobs.
+pub fn plan_shards(
+    shards: Vec<TuningShard>,
+    costs: &[(Tuning, u64)],
+    base: &CheckOptions,
+) -> Vec<ShardPlan> {
+    let weights: Vec<u64> = shards.iter().map(|sh| shard_weight(costs, sh)).collect();
+    let total = weights.iter().sum::<u64>().max(1);
+    let n = shards.len().max(1) as u64;
+    shards
+        .into_iter()
+        .zip(weights)
+        .map(|(shard, weight)| {
+            let share = |budget: u64| -> u64 {
+                let scaled = (budget as u128 * weight as u128 / total as u128) as u64;
+                scaled.max(budget / (4 * n)).max(1)
+            };
+            let t_ini = costs
+                .iter()
+                .filter(|&&(t, _)| shard.contains(t))
+                .map(|&(_, c)| c)
+                .max()
+                .unwrap_or(1)
+                .max(1) as i64;
+            let mut check = base.clone();
+            check.expected_states = weight;
+            if base.max_states != u64::MAX {
+                check.max_states = share(base.max_states);
+            }
+            check.memory_budget = share(base.memory_budget);
+            if let Some(tb) = base.time_budget {
+                check.time_budget = Some(Duration::from_nanos(share(
+                    tb.as_nanos().min(u64::MAX as u128) as u64,
+                )));
+            }
+            ShardPlan { shard, weight, t_ini, check }
+        })
+        .collect()
+}
+
+/// Derive a default shard count from a job's total estimated state-space
+/// weight (used when neither the job spec nor `--shards` pins one): one
+/// shard per ~256 weight units, at least 1, at most `2 × workers` (more
+/// shards than that only add merge overhead) and never more than the
+/// tuning count (a shard must own at least one tuning).
+pub fn adaptive_shard_count(total_weight: u64, workers: u32, n_tunings: usize) -> u32 {
+    const TARGET_WEIGHT_PER_SHARD: u64 = 256;
+    let cap = (workers.max(1) * 2).min(n_tunings.max(1) as u32);
+    (total_weight / TARGET_WEIGHT_PER_SHARD).clamp(1, cap as u64) as u32
 }
 
 /// Merge per-shard tune results into one job-level result: the optimum is
@@ -232,7 +368,7 @@ mod tests {
     fn shard_model_explores_only_its_sublattice() {
         let m = MinModel::paper(64, 4).unwrap();
         let shard = TuningShard { wg_min: 2, wg_max: 4, ts_min: 0, ts_max: u32::MAX };
-        let sm = ShardModel { inner: &m, shard };
+        let sm = ShardModel::new(&m, shard);
         let co = CheckOptions { collect_all: true, ..Default::default() };
         let rep = check(&sm, &SafetyLtl::non_termination(), &co).unwrap();
         assert!(rep.found());
@@ -242,7 +378,7 @@ mod tests {
         }
         // the union of two complementary shards covers every tuning
         let rest = TuningShard { wg_min: 8, wg_max: u32::MAX, ts_min: 0, ts_max: u32::MAX };
-        let sm2 = ShardModel { inner: &m, shard: rest };
+        let sm2 = ShardModel::new(&m, rest);
         let rep2 = check(&sm2, &SafetyLtl::non_termination(), &co).unwrap();
         assert_eq!(
             rep.violations.len() + rep2.violations.len(),
@@ -254,5 +390,67 @@ mod tests {
     #[test]
     fn merge_empty_is_error() {
         assert!(merge_results(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn plan_shards_budgets_scale_with_weight() {
+        let tunings = enumerate_tunings(64).unwrap();
+        // synthetic costs: weight grows with WG so shard weights differ
+        let costs: Vec<(crate::platform::Tuning, u64)> =
+            tunings.iter().map(|&t| (t, (t.wg * 10) as u64)).collect();
+        let mut base = CheckOptions::default();
+        base.max_states = 1_000_000;
+        base.memory_budget = 1 << 30;
+        base.time_budget = Some(Duration::from_secs(10));
+        let plans = plan_shards(partition(&tunings, 4), &costs, &base);
+        assert!(plans.len() >= 2);
+        let total: u64 = plans.iter().map(|p| p.weight).sum();
+        for p in &plans {
+            assert_eq!(p.check.expected_states, p.weight);
+            assert!(p.check.max_states <= base.max_states);
+            assert!(p.check.memory_budget <= base.memory_budget);
+            // t_ini = the largest in-shard cost (a sound over-time bound)
+            let max_cost = costs
+                .iter()
+                .filter(|&&(t, _)| p.shard.contains(t))
+                .map(|&(_, c)| c)
+                .max()
+                .unwrap();
+            assert_eq!(p.t_ini, max_cost as i64);
+        }
+        // monotone: a heavier shard never gets a smaller budget
+        let mut sorted = plans.clone();
+        sorted.sort_by_key(|p| p.weight);
+        for w in sorted.windows(2) {
+            assert!(w[1].check.max_states >= w[0].check.max_states);
+            assert!(w[1].check.memory_budget >= w[0].check.memory_budget);
+            assert!(w[1].check.time_budget.unwrap() >= w[0].check.time_budget.unwrap());
+        }
+        // proportionality: the heaviest shard's state budget is close to
+        // its weight share (floors only lift the small shards)
+        let heaviest = sorted.last().unwrap();
+        let expect = (base.max_states as u128 * heaviest.weight as u128 / total as u128) as u64;
+        assert_eq!(heaviest.check.max_states, expect);
+        // unlimited budgets stay unlimited
+        let plans = plan_shards(partition(&tunings, 4), &costs, &CheckOptions::default());
+        assert!(plans.iter().all(|p| p.check.max_states == u64::MAX));
+        assert!(plans.iter().all(|p| p.check.time_budget.is_none()));
+    }
+
+    #[test]
+    fn adaptive_shard_count_scales_and_clamps() {
+        // tiny jobs: one shard; growing weight: more shards; capped
+        assert_eq!(adaptive_shard_count(10, 4, 16), 1);
+        assert_eq!(adaptive_shard_count(1024, 4, 16), 4);
+        assert_eq!(adaptive_shard_count(u64::MAX / 2, 4, 16), 8, "capped at 2x workers");
+        assert_eq!(adaptive_shard_count(u64::MAX / 2, 4, 3), 3, "capped at tuning count");
+        assert_eq!(adaptive_shard_count(0, 0, 0), 1);
+        // monotone in weight
+        let mut last = 0;
+        for w in [0u64, 300, 600, 1200, 2400, 1 << 40] {
+            let n = adaptive_shard_count(w, 8, 1000);
+            assert!(n >= last);
+            last = n;
+        }
     }
 }

@@ -9,8 +9,10 @@
 //!   exec       run an AOT-compiled Pallas kernel via PJRT     §7.1
 //!   gen-models write the pregenerated Promela models          §4, §7.2
 
-use mcautotune::checker::{check, CheckOptions, StoreKind};
-use mcautotune::coordinator::{run_batch, BatchOptions, ModelKind, ResultCache, TuningJob};
+use mcautotune::checker::{check, CheckOptions, Frontier, StoreKind};
+use mcautotune::coordinator::{
+    run_batch, BatchOptions, JobEngine, ModelKind, ResultCache, TuningJob,
+};
 use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::platform::{
     simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
@@ -118,12 +120,14 @@ fn build_model(a: &Args) -> Result<AnyModel> {
         "phase" => Granularity::Phase,
         g => bail!("unknown granularity `{}`", g),
     };
-    let engine = a.get_or("engine", "native");
+    // strict parse: a typo like `--engine promla` must error, not
+    // silently tune the native model (and cache it under a native key)
+    let engine: JobEngine = a.get_or("engine", "native").parse()?;
     match kind.as_str() {
         "abstract" => {
             let gmt: u32 = a.get_parsed_or("gmt", 10)?;
             let plat = PlatformConfig { nd, nu, np, gmt };
-            if engine == "promela" {
+            if engine == JobEngine::Promela {
                 let src = templates::abstract_pml(size, &plat);
                 Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
             } else {
@@ -132,7 +136,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
         }
         "minimum" => {
             let gmt: u32 = a.get_parsed_or("gmt", 3)?;
-            if engine == "promela" {
+            if engine == JobEngine::Promela {
                 let src = templates::minimum_pml(size, np, gmt);
                 Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
             } else {
@@ -145,6 +149,14 @@ fn build_model(a: &Args) -> Result<AnyModel> {
             Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
         }
         other => bail!("unknown model `{}` (abstract | minimum | *.pml)", other),
+    }
+}
+
+fn parse_frontier(a: &Args) -> Result<Frontier> {
+    match a.get_or("frontier", "async").as_str() {
+        "async" => Ok(Frontier::Async),
+        "det" | "deterministic" => Ok(Frontier::Deterministic),
+        f => bail!("unknown frontier `{}` (async | det)", f),
     }
 }
 
@@ -165,6 +177,7 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         max_states: a.get_parsed_or("max-states", d.max_states)?,
         memory_budget: a.get_parsed_or("memory-budget", d.memory_budget)?,
         threads: a.get_parsed_or("threads", d.threads)?,
+        frontier: parse_frontier(a)?,
         ..d
     })
 }
@@ -176,6 +189,11 @@ fn store_spec(spec: Spec) -> Spec {
         .opt("max-states", "stored-state budget")
         .opt("memory-budget", "visited-store byte budget (default 16GiB)")
         .opt("threads", "exhaustive-search worker threads (default 1; 0 = all cores)")
+        .opt(
+            "frontier",
+            "async | det (det: deterministic parallel exploration — reproducible \
+             trails and first-trail identity across runs and thread counts)",
+        )
 }
 
 fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
@@ -190,11 +208,26 @@ fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
 
 // ------------------------------------------------------------- commands --
 
-/// Reconstruct the coordinator job a native-model `tune` invocation
-/// corresponds to, so `tune --cache` and `batch` share cache entries.
+/// Reconstruct the coordinator job a `tune` invocation corresponds to, so
+/// `tune --cache` and `batch` share cache entries. Promela jobs (via
+/// `--engine promela` or a `.pml` model path) are keyed on a content hash
+/// of their source; for `.pml` paths the model kind is a placeholder that
+/// only supplies defaults — the hash carries the identity.
 fn job_from_args(a: &Args, method: Method) -> Result<TuningJob> {
-    let kind: ModelKind = a.get_or("model", "minimum").parse()?;
+    let model_arg = a.get_or("model", "minimum");
+    let (kind, source) = if model_arg.ends_with(".pml") {
+        let src = std::fs::read_to_string(&model_arg)
+            .with_context(|| format!("reading {}", model_arg))?;
+        (ModelKind::Minimum, Some(src))
+    } else {
+        (model_arg.parse::<ModelKind>()?, None)
+    };
     let mut job = TuningJob::new(kind, a.get_parsed_or("size", 64)?);
+    job.engine = a.get_or("engine", "native").parse()?;
+    if source.is_some() {
+        job.engine = JobEngine::Promela; // a .pml model implies the engine
+    }
+    job.source = source;
     job.plat.np = a.get_parsed_or("np", 4)?;
     job.plat.nd = a.get_parsed_or("nd", 1)?;
     job.plat.nu = a.get_parsed_or("nu", 1)?;
@@ -234,9 +267,6 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     let sw = swarm_cfg(&a)?;
     let t_ini = a.get_parsed::<i64>("t-ini")?;
     let r = if let Some(cache_path) = a.get("cache") {
-        if matches!(model, AnyModel::Pml(_)) {
-            bail!("--cache supports the native models only (abstract | minimum, engine=native)");
-        }
         let job = job_from_args(&a, method)?;
         // swarm results are configuration-dependent, so the swarm config
         // joins the cache key for Method::Swarm (see TuningJob::cache_desc_with)
@@ -279,11 +309,16 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
 fn cmd_batch(argv: &[String]) -> Result<()> {
     let spec = Spec::new()
         .opt("workers", "queue worker threads (default 4)")
-        .opt("shards", "parameter-space shards for jobs that do not set shards= (default 4)")
+        .opt(
+            "shards",
+            "parameter-space shards for jobs that do not set shards= \
+             (default 0 = adaptive from each job's state-space estimate)",
+        )
         .opt(
             "threads",
             "checker threads per shard (default 1; 0 = all cores; multiplies with --workers)",
         )
+        .opt("frontier", "async | det checker frontier (see `verify --help`)")
         .opt("cache", "result-cache JSON path (default mcat_cache.json; `none` disables)")
         .opt("budget-ms", "per-swarm-round time budget for swarm jobs (default 10000)")
         .flag("help", "show options");
@@ -292,11 +327,19 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         println!("{}", spec.usage("mcautotune batch <spec-file>"));
         println!(
             "\nspec file: one `job <model> [k=v...]` per line, e.g.\n\
-             \n  # tune three configurations, sharded 4 ways each\n\
+             \n  # tune four configurations; the last runs the Promela engine\n\
              \x20 job minimum size=64 np=4 gmt=3 shards=4\n\
              \x20 job minimum size=128 np=4 gmt=3 method=swarm\n\
              \x20 job abstract size=32 gmt=10\n\
-             \nkeys: name size np nd nu gmt gran=tick|phase method=exhaustive|swarm shards"
+             \x20 job minimum size=16 engine=promela\n\
+             \nkeys: name size np nd nu gmt gran=tick|phase method=exhaustive|swarm\n\
+             \x20     shards engine=native|promela src=<file.pml>\n\
+             \nengine=promela verifies the generated Promela model (full process\n\
+             interleaving) instead of the native transition system; src= supplies\n\
+             an external .pml source (implies engine=promela). Promela results are\n\
+             cached under a content hash of the source, so edited models never\n\
+             reuse stale optima. Job budgets (--max-states/memory/time of `tune`)\n\
+             are split across shards proportionally to estimated sub-lattice size."
         );
         return Ok(());
     }
@@ -311,10 +354,11 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     }
     let mut opts = BatchOptions {
         workers: a.get_parsed_or("workers", 4)?,
-        default_shards: a.get_parsed_or("shards", 4)?,
+        default_shards: a.get_parsed_or("shards", 0)?,
         ..BatchOptions::default()
     };
     opts.check.threads = a.get_parsed_or("threads", opts.check.threads)?;
+    opts.check.frontier = parse_frontier(&a)?;
     opts.swarm.time_budget = Duration::from_millis(a.get_parsed_or("budget-ms", 10_000u64)?);
     // SwarmConfig defaults to one worker per core; shards already run on
     // `--workers` queue threads, so split the swarm fleet among them to

@@ -23,6 +23,15 @@
 use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot};
 use crate::model::TransitionSystem;
 use crate::util::error::Result;
+use crate::util::hash::hash_bytes;
+
+/// Content hash of a Promela source text — the identity under which the
+/// coordinator caches `engine: promela` tuning results (see
+/// `coordinator::job::TuningJob::cache_desc`): any edit to a model yields
+/// a new hash, so stale cache entries are unreachable by construction.
+pub fn source_hash(src: &str) -> u64 {
+    hash_bytes(src.as_bytes())
+}
 
 pub const MAX_PROCS: usize = 64;
 const MAX_SELECT_FANOUT: i32 = 4096;

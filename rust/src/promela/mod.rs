@@ -18,4 +18,4 @@ pub mod lexer;
 pub mod parser;
 pub mod templates;
 
-pub use interp::{PromelaSystem, PState};
+pub use interp::{source_hash, PromelaSystem, PState};

@@ -7,7 +7,9 @@
 //! with the interpreted `Expr::eval` on a generated expression corpus,
 //! including error cases (unknown variables, division by zero).
 
-use mcautotune::checker::{check, check_parallel, check_sequential, Abort, CheckOptions, StoreKind};
+use mcautotune::checker::{
+    check, check_parallel, check_sequential, Abort, CheckOptions, Frontier, Order, StoreKind,
+};
 use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
 use mcautotune::platform::{AbstractModel, Granularity, MinModel, PlatformConfig};
 use mcautotune::util::rng::Xoshiro256;
@@ -241,6 +243,161 @@ fn parallel_unknown_variable_errors_like_sequential() {
     let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
     assert!(check_sequential(&m, &p, &CheckOptions::default()).is_err());
     assert!(check_parallel(&m, &p, &popts(4)).is_err());
+}
+
+// ------------------------------------------- deterministic frontier --
+
+fn dopts(threads: u32) -> CheckOptions {
+    CheckOptions { threads, frontier: Frontier::Deterministic, ..CheckOptions::default() }
+}
+
+#[test]
+fn deterministic_frontier_matches_sequential_on_full_exploration() {
+    let m = Tree { depth: 12 };
+    let p = SafetyLtl::parse("G(level >= 0)").unwrap();
+    let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    for threads in [1, 2, 4] {
+        let det = check_parallel(&m, &p, &dopts(threads)).unwrap();
+        assert_reports_match(&seq, &det);
+        assert!(det.verdict().unwrap());
+    }
+}
+
+#[test]
+fn deterministic_frontier_is_reproducible_across_runs_and_thread_counts() {
+    // with Order::Random the async engine's first violation depends on
+    // scheduling; the deterministic frontier must pin the full violation
+    // sequence — across repeated runs AND across thread counts
+    let m = Tree { depth: 10 };
+    let p = SafetyLtl::parse("G(!leaf)").unwrap();
+    let run = |threads: u32| -> Vec<i64> {
+        let mut o = dopts(threads);
+        o.order = Order::Random(0xD5EED);
+        o.collect_all = true;
+        let r = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(r.violations.len(), 1024);
+        r.violations.iter().map(|v| v.trail.final_var(&m, "path").unwrap()).collect()
+    };
+    let baseline = run(4);
+    assert_eq!(run(4), baseline, "same thread count must reproduce exactly");
+    assert_eq!(run(2), baseline, "thread count must not change the order");
+    assert_eq!(run(1), baseline);
+    // the shuffle actually diversifies (it is not secretly in-order)
+    let mut o = dopts(4);
+    o.collect_all = true;
+    let inorder = check_parallel(&m, &p, &o).unwrap();
+    let inorder_paths: Vec<i64> =
+        inorder.violations.iter().map(|v| v.trail.final_var(&m, "path").unwrap()).collect();
+    assert_ne!(inorder_paths, baseline, "Random order should differ from InOrder");
+}
+
+#[test]
+fn deterministic_frontier_first_trail_is_stable() {
+    let m = Tree { depth: 10 };
+    let p = SafetyLtl::parse("G(!leaf)").unwrap();
+    let first = |threads: u32| {
+        let mut o = dopts(threads);
+        o.order = Order::Random(7);
+        let r = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(r.violations.len(), 1, "first-violation mode");
+        assert!(!r.exhausted);
+        (r.violations[0].trail.final_var(&m, "path").unwrap(), r.stats.states_stored)
+    };
+    let (path, stored) = first(4);
+    for _ in 0..3 {
+        assert_eq!(first(4), (path, stored));
+    }
+    assert_eq!(first(2), (path, stored), "early-stop state count is thread-independent");
+}
+
+#[test]
+fn deterministic_frontier_trails_and_budgets() {
+    // trails are valid parent chains, and deterministic aborts fire at
+    // exactly the configured threshold
+    let m = Tree { depth: 8 };
+    let p = SafetyLtl::parse("G(leaf -> path != 37)").unwrap();
+    let r = check_parallel(&m, &p, &dopts(4)).unwrap();
+    assert!(r.found());
+    let v = &r.violations[0];
+    assert_eq!(v.trail.steps(), 8);
+    assert_eq!(v.trail.final_var(&m, "path"), Some(37));
+    for w in v.trail.states.windows(2) {
+        assert_eq!(w[1].level, w[0].level + 1);
+        assert_eq!(w[1].path >> 1, w[0].path);
+    }
+
+    let big = Tree { depth: 20 };
+    let q = SafetyLtl::parse("G(true)").unwrap();
+    let mut o = dopts(4);
+    o.max_states = 5_000;
+    let a = check_parallel(&big, &q, &o).unwrap();
+    let b = check_parallel(&big, &q, &o).unwrap();
+    assert_eq!(a.stats.abort, Some(Abort::StateLimit));
+    assert_eq!(a.stats.states_stored, 5_000, "deterministic abort at the exact threshold");
+    assert_eq!(b.stats.states_stored, 5_000);
+    assert!(a.verdict().is_err());
+
+    // error limit, deterministically
+    let m6 = Tree { depth: 6 };
+    let leafy = SafetyLtl::parse("G(!leaf)").unwrap();
+    let mut o = dopts(4);
+    o.collect_all = true;
+    o.max_errors = 10;
+    let r = check_parallel(&m6, &leafy, &o).unwrap();
+    assert_eq!(r.violations.len(), 10);
+    assert_eq!(r.stats.abort, Some(Abort::ErrorLimit));
+}
+
+#[test]
+fn deterministic_frontier_on_minmodel_matches_sequential() {
+    let m = MinModel::paper(64, 4).unwrap();
+    let p = SafetyLtl::parse("G(FIN -> result == 1)").unwrap();
+    let seq = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    let det = check_parallel(&m, &p, &dopts(3)).unwrap();
+    assert_reports_match(&seq, &det);
+    assert!(det.verdict().unwrap());
+}
+
+#[test]
+fn dispatcher_routes_deterministic_even_single_threaded() {
+    // Frontier::Deterministic pins the exploration order regardless of
+    // thread count, so check() must route it to the parallel module even
+    // at threads=1 (BFS, not the DFS fallback)
+    let m = Tree { depth: 6 };
+    let p = SafetyLtl::parse("G(!leaf)").unwrap();
+    let mut o = dopts(1);
+    o.order = Order::Random(99);
+    o.collect_all = true;
+    let one = check(&m, &p, &o).unwrap();
+    let mut o4 = o.clone();
+    o4.threads = 4;
+    let four = check(&m, &p, &o4).unwrap();
+    let paths = |r: &mcautotune::checker::CheckReport<_>| -> Vec<i64> {
+        r.violations.iter().map(|v| v.trail.final_var(&m, "path").unwrap()).collect()
+    };
+    assert_eq!(paths(&one), paths(&four));
+}
+
+// --------------------------------------------------- store pre-sizing --
+
+#[test]
+fn presized_stores_do_not_change_results() {
+    let m = Tree { depth: 12 };
+    let p = SafetyLtl::parse("G(level >= 0)").unwrap();
+    let baseline = check_sequential(&m, &p, &CheckOptions::default()).unwrap();
+    for estimate in [1u64, 8_191, 1 << 13, 1 << 20] {
+        // sequential, async parallel, deterministic parallel — all presized
+        let mut o = CheckOptions::default();
+        o.expected_states = estimate;
+        let seq = check_sequential(&m, &p, &o).unwrap();
+        assert_reports_match(&baseline, &seq);
+        o.threads = 4;
+        let par = check_parallel(&m, &p, &o).unwrap();
+        assert_reports_match(&baseline, &par);
+        o.frontier = Frontier::Deterministic;
+        let det = check_parallel(&m, &p, &o).unwrap();
+        assert_reports_match(&baseline, &det);
+    }
 }
 
 // ------------------------------------------- evaluator equivalence --

@@ -1,13 +1,17 @@
 //! Coordinator integration: sharded batch orchestration, the
 //! work-stealing queue, and the persistent result cache — including the
 //! acceptance properties (batch optima match single-job `tune`; a second
-//! invocation serves cache hits with zero additional states explored).
+//! invocation serves cache hits with zero additional states explored;
+//! Promela-engine batch jobs match `tune --engine promela`; shard budgets
+//! scale with estimated sub-lattice size).
 
 use mcautotune::checker::CheckOptions;
 use mcautotune::coordinator::{
-    partition, run_batch, BatchOptions, JobQueue, ModelKind, ResultCache, ShardModel, TuningJob,
+    partition, run_batch, BatchOptions, JobEngine, JobQueue, ModelKind, ResultCache, ShardModel,
+    TuningJob,
 };
 use mcautotune::platform::MinModel;
+use mcautotune::promela::{templates, PromelaSystem};
 use mcautotune::swarm::SwarmConfig;
 use mcautotune::tuner::{tune, tune_cached, Method};
 use std::path::PathBuf;
@@ -75,7 +79,7 @@ fn sharded_search_agrees_with_exhaustive_optimum() {
     assert!(shards.len() >= 2, "64-element lattice must split: {:?}", shards);
     let mut best = i64::MAX;
     for &shard in &shards {
-        let sharded = ShardModel { inner: &m, shard };
+        let sharded = ShardModel::new(&m, shard);
         let r = tune(
             &sharded,
             Method::Exhaustive,
@@ -186,6 +190,143 @@ fn failing_job_does_not_discard_completed_work() {
     // the completed job's result was still merged and cached
     assert_eq!(cache.len(), 1);
     assert!(cache.lookup(&good.cache_desc()).is_some());
+}
+
+#[test]
+fn promela_batch_job_matches_native_job_and_single_shot_tune() {
+    // ISSUE 3 acceptance: a batch draining one `engine: promela` job and
+    // one native job produces a merged report whose Promela-job optimum
+    // matches `tune --engine promela` on the same model
+    let (size, np, gmt) = (16u32, 4u32, 3u32);
+    let spec = format!(
+        "job minimum size={s} np={np} gmt={g} engine=promela shards=2 name=pml\n\
+         job minimum size={s} np={np} gmt={g} name=native\n",
+        s = size,
+        np = np,
+        g = gmt
+    );
+    let jobs = TuningJob::parse_spec(&spec).unwrap();
+    assert_eq!(jobs[0].engine, JobEngine::Promela);
+    assert_ne!(
+        jobs[0].cache_desc(),
+        jobs[1].cache_desc(),
+        "promela and native runs of the same model are distinct cache entries"
+    );
+    let mut cache = ResultCache::in_memory();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let report = run_batch(&jobs, &opts, &mut cache).unwrap();
+
+    // single-shot tune through the Promela engine (the CLI's
+    // `tune --engine promela` path)
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(size, np, gmt)).unwrap();
+    let single = tune(
+        &sys,
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        Some(10_000),
+    )
+    .unwrap();
+
+    let pml = &report.outcomes[0];
+    let native = &report.outcomes[1];
+    assert_eq!(pml.result.t_min, single.t_min, "batched == single-shot Promela optimum");
+    assert_eq!(pml.result.t_min, native.result.t_min, "promela == native optimum");
+    assert_eq!(
+        (pml.result.optimal.wg, pml.result.optimal.ts),
+        (native.result.optimal.wg, native.result.optimal.ts)
+    );
+    assert_eq!(pml.result.t_min, jobs[0].optimum_time().unwrap() as i64);
+    assert!(
+        pml.result.states_explored > native.result.states_explored,
+        "full interleaving explores more states than the canonical schedule"
+    );
+    // the second drain of the same spec is served entirely from the cache
+    let report2 = run_batch(&jobs, &opts, &mut cache).unwrap();
+    assert!(report2.outcomes.iter().all(|o| o.cached));
+    assert_eq!(report2.total_states(), 0);
+}
+
+#[test]
+fn promela_cache_distinguishes_edited_sources() {
+    // run a template job, then "edit" the model (explicit source with one
+    // changed byte): the edited job must miss, not reuse the stale entry
+    let mut job = TuningJob::new(ModelKind::Minimum, 16);
+    job.engine = JobEngine::Promela;
+    job.shards = 1;
+    let mut cache = ResultCache::in_memory();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    run_batch(std::slice::from_ref(&job), &opts, &mut cache).unwrap();
+    assert_eq!(cache.len(), 1);
+
+    // identical source text (explicit rather than template): hit
+    let mut same = job.clone();
+    same.source = Some(templates::minimum_pml(16, 4, 3));
+    let r = run_batch(std::slice::from_ref(&same), &opts, &mut cache).unwrap();
+    assert!(r.outcomes[0].cached, "byte-identical source must share the cache entry");
+
+    // edited source: miss, fresh verification
+    let mut edited = job.clone();
+    edited.source = Some(format!("// tweaked\n{}", templates::minimum_pml(16, 4, 3)));
+    let r = run_batch(std::slice::from_ref(&edited), &opts, &mut cache).unwrap();
+    assert!(!r.outcomes[0].cached, "an edited model must never hit a stale entry");
+    assert_eq!(cache.len(), 2);
+}
+
+#[test]
+fn batch_shard_budgets_scale_with_sublattice_size() {
+    let mut job = TuningJob::new(ModelKind::Minimum, 64);
+    job.shards = 4;
+    let mut opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    opts.check.max_states = 10_000_000; // finite, so the split is observable
+    opts.check.time_budget = Some(std::time::Duration::from_secs(60));
+    let mut cache = ResultCache::in_memory();
+    let report = run_batch(std::slice::from_ref(&job), &opts, &mut cache).unwrap();
+    let plan = &report.outcomes[0].plan;
+    assert!(plan.len() >= 2, "expected a real split, got {:?}", plan.len());
+    let mut sorted: Vec<_> = plan.iter().collect();
+    sorted.sort_by_key(|p| p.weight);
+    assert!(
+        sorted.first().unwrap().weight < sorted.last().unwrap().weight,
+        "the Minimum lattice is cost-skewed; shards must not weigh equal"
+    );
+    for w in sorted.windows(2) {
+        assert!(
+            w[1].check.max_states >= w[0].check.max_states,
+            "larger sub-lattice must get a larger (or equal) state budget"
+        );
+        assert!(w[1].check.time_budget.unwrap() >= w[0].check.time_budget.unwrap());
+    }
+    // budgets sum to at most the job budget plus floor slack
+    assert!(plan.iter().map(|p| p.check.max_states).sum::<u64>() <= opts.check.max_states * 2);
+    // the rendered report surfaces the plan
+    let rendered = report.render();
+    assert!(rendered.contains("shard budgets"), "plan missing from report:\n{}", rendered);
+    assert!(rendered.contains("weight "));
+}
+
+#[test]
+fn adaptive_shard_count_kicks_in_when_unset() {
+    // default_shards = 0 (adaptive): a size-64 Minimum job has enough
+    // estimated weight to split, and the plan lands within the cap
+    let job = TuningJob::new(ModelKind::Minimum, 64); // shards = 1 by construction
+    let mut unset = job.clone();
+    unset.shards = 0;
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let mut cache = ResultCache::in_memory();
+    let report = run_batch(std::slice::from_ref(&unset), &opts, &mut cache).unwrap();
+    let shards = report.outcomes[0].shards;
+    assert!(
+        (1..=4).contains(&shards),
+        "adaptive count must stay within [1, 2 x workers], got {}",
+        shards
+    );
+    // an explicit shards= on the job still wins over the adaptive default
+    let mut pinned = job.clone();
+    pinned.shards = 2;
+    let mut cache = ResultCache::in_memory();
+    let report = run_batch(std::slice::from_ref(&pinned), &opts, &mut cache).unwrap();
+    assert_eq!(report.outcomes[0].shards, 2);
 }
 
 #[test]

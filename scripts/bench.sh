@@ -11,6 +11,11 @@
 # results: [{name, iters, mean_ns, per_sec}]} — one entry per bench case,
 # sequential + parallel exploration throughput first.
 set -euo pipefail
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "error: cargo not found — measuring BENCH_checker.json needs a Rust toolchain" >&2
+  echo "       (the committed file stays a schema placeholder until one is available)" >&2
+  exit 1
+fi
 cd "$(dirname "$0")/../rust"
 out="${1:-../BENCH_checker.json}"
 MCAT_BENCH_JSON="$out" cargo bench --bench checker_hot_path
