@@ -4,10 +4,14 @@
 //! runs it through the sharded work-stealing batch runner with a
 //! persistent result cache, then runs the *same* batch again to show
 //! every job served from the cache with zero additional states explored.
+//! Finally replays the batch through **worker mode**: the plan serialized
+//! as durable task manifests, drained by two concurrent workers (stand-ins
+//! for two terminals — or two machines sharing the directory), and merged
+//! into the identical report.
 //!
 //! Run: `cargo run --release --example batch_tune`
 
-use mcautotune::coordinator::{run_batch, BatchOptions, ResultCache, TuningJob};
+use mcautotune::coordinator::{run_batch, BatchOptions, ResultCache, TaskDir, TuningJob};
 use mcautotune::swarm::SwarmConfig;
 use std::time::Duration;
 
@@ -49,6 +53,58 @@ fn main() -> mcautotune::util::error::Result<()> {
     mcautotune::ensure!(warm.cache_hits == jobs.len() as u64, "warm run must hit on every job");
     mcautotune::ensure!(warm.total_states() == 0, "warm run must explore zero states");
 
+    // ---- worker mode: the same batch drained across processes --------
+    //
+    // In production this is three commands on any machines that share the
+    // directory (the planner participates too unless --plan-only):
+    //
+    //   terminal 0:  mcautotune batch jobs.spec --task-dir tasks/ --plan-only
+    //   terminal 1:  mcautotune worker tasks/
+    //   terminal 2:  mcautotune worker tasks/
+    //   any:         mcautotune merge tasks/
+    //
+    // Here the two "terminals" are two threads, each draining through the
+    // same public API the CLI uses.
+    let task_dir = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_tasks_{}", std::process::id()));
+    std::fs::remove_dir_all(&task_dir).ok();
+    let fresh_cache = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_dist_{}.json", std::process::id()));
+    std::fs::remove_file(&fresh_cache).ok();
+
+    let td = TaskDir::new(&task_dir);
+    let mut dist_cache = ResultCache::open(&fresh_cache)?;
+    let summary = td.plan(&jobs, &opts, &mut dist_cache)?;
+    println!(
+        "\n[worker mode] planned {} durable task(s) into {}",
+        summary.tasks,
+        task_dir.display()
+    );
+    std::thread::scope(|s| {
+        let w1 = s.spawn(|| TaskDir::new(&task_dir).drain(1, false));
+        let w2 = s.spawn(|| TaskDir::new(&task_dir).drain(1, false));
+        let s1 = w1.join().expect("worker 1 panicked").expect("worker 1 failed");
+        let s2 = w2.join().expect("worker 2 panicked").expect("worker 2 failed");
+        println!(
+            "[worker mode] worker 1 drained {} task(s), worker 2 drained {} task(s)",
+            s1.executed, s2.executed
+        );
+        assert_eq!(s1.executed + s2.executed, summary.tasks as u64);
+    });
+    let dist = td.merge(&mut dist_cache)?;
+    for (a, b) in cold.outcomes.iter().zip(&dist.outcomes) {
+        assert_eq!(a.result.t_min, b.result.t_min, "job {}", a.job.name);
+        assert_eq!(
+            (a.result.optimal.wg, a.result.optimal.ts),
+            (b.result.optimal.wg, b.result.optimal.ts),
+            "job {}",
+            a.job.name
+        );
+    }
+    println!("[worker mode] merged report matches the single-process run.");
+
+    std::fs::remove_dir_all(&task_dir).ok();
+    std::fs::remove_file(&fresh_cache).ok();
     std::fs::remove_file(&cache_path).ok();
     println!("\nBATCH OK: {} jobs tuned once, replayed from the cache for free.", jobs.len());
     Ok(())

@@ -45,7 +45,7 @@ pub enum Frontier {
     Deterministic,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CheckOptions {
     pub store: StoreKind,
     /// SPIN -m: maximum search depth

@@ -15,11 +15,18 @@
 //! the description (`pml=<16 hex>`, see `TuningJob::cache_desc`), so an
 //! edited model never hits the entry its previous revision stored — the
 //! stale entry simply becomes unreachable and ages out of use.
+//!
+//! A corrupt or truncated cache file (disk trouble, an interrupted
+//! legacy writer) never aborts the batch that opens it:
+//! [`ResultCache::open`] quarantines the unreadable file as
+//! `<file>.corrupt` and rebuilds from empty. A cleanly parsed file with
+//! an unsupported `version` stays a hard error — it belongs to a newer
+//! binary, not to the garbage pile.
 
 use crate::tuner::{CachedTune, Method, TuneCache, TuneResult};
 use crate::util::error::{bail, Context, Result};
 use crate::util::hash::{hash_bytes, FxHashMap};
-use crate::util::manifest::Json;
+use crate::util::manifest::{write_atomic, Json};
 use std::path::{Path, PathBuf};
 
 /// One persisted tuning result.
@@ -48,6 +55,9 @@ pub struct ResultCache {
     pub hits: u64,
     /// lookup misses since this cache was opened
     pub misses: u64,
+    /// where a corrupt backing file was moved, if [`open`](Self::open)
+    /// had to quarantine one
+    quarantined: Option<PathBuf>,
 }
 
 impl ResultCache {
@@ -57,20 +67,62 @@ impl ResultCache {
     }
 
     /// Open a persistent cache; a missing file is an empty cache.
+    ///
+    /// A corrupt or truncated backing file must not abort the batch that
+    /// opens it: the unreadable file is **quarantined** — renamed to
+    /// `<file>.corrupt`, preserving the bytes for inspection — and the
+    /// cache starts empty and rebuilds on the next [`save`](Self::save).
+    /// [`quarantined`](Self::quarantined) reports the quarantine path so
+    /// callers can warn. Two failure classes deliberately stay hard
+    /// errors: I/O problems (permissions, unreadable directory — the
+    /// cache would be unusable for write-back too), and a cleanly parsed
+    /// file with an **unsupported version** — worker mode shares cache
+    /// files across machines, and an old binary must not destroy a newer
+    /// binary's perfectly valid cache by "quarantining" it.
     pub fn open(path: &Path) -> Result<Self> {
         let mut cache = Self { path: Some(path.to_path_buf()), ..Self::default() };
         if path.exists() {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading result cache {}", path.display()))?;
-            cache
-                .load_json(&text)
-                .with_context(|| format!("parsing result cache {}", path.display()))?;
+            if let Err(parse_err) = cache.load_json(&text) {
+                cache.entries.clear(); // drop any partially loaded entries
+                let future_version = Json::parse(&text).ok().is_some_and(|doc| {
+                    doc.get("version").and_then(Json::as_i64).is_some_and(|v| v != 1)
+                });
+                if future_version {
+                    return Err(parse_err)
+                        .with_context(|| format!("result cache {}", path.display()));
+                }
+                let quarantine = PathBuf::from(format!("{}.corrupt", path.display()));
+                match std::fs::rename(path, &quarantine) {
+                    Ok(()) => {}
+                    // a concurrent opener of the same shared cache won the
+                    // quarantine race; the file is already moved aside
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "quarantining corrupt result cache {} (unreadable: {:#})",
+                                path.display(),
+                                parse_err
+                            )
+                        })
+                    }
+                }
+                cache.quarantined = Some(quarantine);
+            }
         }
         Ok(cache)
     }
 
     pub fn path(&self) -> Option<&Path> {
         self.path.as_deref()
+    }
+
+    /// Where [`open`](Self::open) moved a corrupt backing file, if it had
+    /// to quarantine one.
+    pub fn quarantined(&self) -> Option<&Path> {
+        self.quarantined.as_deref()
     }
 
     pub fn len(&self) -> usize {
@@ -147,10 +199,15 @@ impl ResultCache {
     }
 
     /// Write back to the backing file (no-op for in-memory caches).
+    ///
+    /// The write is atomic (temp file + rename): worker mode makes cache
+    /// files *shared* — the merge step and concurrent `tune --cache`
+    /// runs may open one mid-save — and a reader must never observe a
+    /// half-written file (it would quarantine a perfectly healthy cache).
     pub fn save(&self) -> Result<()> {
         if let Some(path) = &self.path {
-            std::fs::write(path, self.to_json())
-                .with_context(|| format!("writing result cache {}", path.display()))?;
+            write_atomic(path, &self.to_json())
+                .with_context(|| format!("saving result cache {}", path.display()))?;
         }
         Ok(())
     }
@@ -248,15 +305,52 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_file_is_an_error_not_a_panic() {
+    fn corrupt_file_is_quarantined_not_fatal() {
+        // regression: a corrupt/truncated cache used to abort the whole
+        // batch; it must quarantine and rebuild instead
         let path = temp_file("corrupt");
-        std::fs::write(&path, "{\"version\":1,\"entries\":[{\"desc\":42}]}").unwrap();
-        assert!(ResultCache::open(&path).is_err());
+        let quarantine = PathBuf::from(format!("{}.corrupt", path.display()));
+        for bad in [
+            "{\"version\":1,\"entries\":[{\"desc\":42}]}", // wrong field type
+            "not json",                                    // garbage
+            "{\"version\":1,\"entries\":[{\"desc\":\"x\"", // truncated mid-write
+        ] {
+            std::fs::remove_file(&quarantine).ok();
+            std::fs::write(&path, bad).unwrap();
+            let c = ResultCache::open(&path).unwrap();
+            assert!(c.is_empty(), "no entry may survive a corrupt load: {}", bad);
+            assert_eq!(c.quarantined(), Some(quarantine.as_path()));
+            assert!(!path.exists(), "the corrupt file must be moved aside");
+            let preserved = std::fs::read_to_string(&quarantine).unwrap();
+            assert_eq!(preserved, bad, "quarantine preserves the original bytes");
+        }
+        std::fs::remove_file(&quarantine).ok();
+        // a *future-versioned* file is not corruption: it belongs to a
+        // newer binary sharing the cache, and must never be destroyed
         std::fs::write(&path, "{\"version\":2,\"entries\":[]}").unwrap();
         assert!(ResultCache::open(&path).is_err());
-        std::fs::write(&path, "not json").unwrap();
-        assert!(ResultCache::open(&path).is_err());
+        assert!(path.exists(), "a future-versioned cache must stay in place");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quarantined_cache_rebuilds_on_save() {
+        let path = temp_file("rebuild");
+        std::fs::write(&path, "truncated{").unwrap();
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            assert!(c.quarantined().is_some());
+            assert!(c.lookup("model=minimum size=64").is_none());
+            c.store("model=minimum size=64", &fake_result(8, 2, 36));
+            c.save().unwrap();
+        }
+        // the rebuilt file parses cleanly and serves the entry
+        let mut c = ResultCache::open(&path).unwrap();
+        assert!(c.quarantined().is_none());
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup("model=minimum size=64").is_some());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(format!("{}.corrupt", path.display())).ok();
     }
 
     #[test]

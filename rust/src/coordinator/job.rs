@@ -297,12 +297,27 @@ impl TuningJob {
     /// tick count in every engine (ticks for `Tick` granularity, phases
     /// for `Phase`, interleavings-per-tick for Promela — all monotone in
     /// it), and only the *relative* weights matter for budget splits.
-    /// External Promela sources have no closed form and fall back to
-    /// uniform weights over the size-derived lattice.
+    ///
+    /// External Promela sources have no closed form; they are estimated
+    /// by a cheap bounded **guided-simulation sweep**: one short walk per
+    /// tuning with off-target (WG, TS) choices pruned at the selection
+    /// point, weighting the tuning by its observed terminal `time` (an
+    /// *achievable* time, so the derived `ShardPlan::t_ini` is a sound
+    /// `Cex` bound) with the walked step count as fallback. Skewed models
+    /// therefore get proportional shard budgets instead of the uniform
+    /// weights they used to.
     pub fn tuning_costs(&self) -> Result<Vec<(Tuning, u64)>> {
         let tunings = enumerate_tunings(self.size)?;
-        if self.source.is_some() {
-            return Ok(tunings.into_iter().map(|t| (t, 1)).collect());
+        if let Some(src) = &self.source {
+            let sys = PromelaSystem::from_source(src)?;
+            // 20k steps bounds plan latency on cyclic models (a walk that
+            // never terminates costs runs x 20k interpreter steps, not
+            // unbounded); one interleaving of the bundled templates runs
+            // a few thousand steps, far under the bound
+            return Ok(tunings
+                .into_iter()
+                .map(|t| (t, guided_sim_cost(&sys, t, 2, 20_000)))
+                .collect());
         }
         Ok(match self.model {
             ModelKind::Abstract => {
@@ -400,6 +415,79 @@ impl TuningJob {
         }
         Ok(jobs)
     }
+}
+
+/// True when `s` has not committed to a (WG, TS) incompatible with `t`:
+/// each observable is either unset (absent or non-positive — Promela
+/// globals read 0 before the select) or equal to the target. `slots` are
+/// the pre-resolved dense slot ids for (WG, TS) — this runs per successor
+/// on the walk's hot path, and `PromelaSystem::eval_var` is a string-hash
+/// lookup (same reasoning as `ShardModel::new`).
+fn compatible(sys: &PromelaSystem, s: &PState, t: Tuning, slots: Option<(u32, u32)>) -> bool {
+    let ok = |v: Option<i64>, want: u32| !matches!(v, Some(x) if x > 0 && x != want as i64);
+    match slots {
+        Some((w, ts)) => {
+            let ids = [w, ts];
+            let mut out = [0i64; 2];
+            let missing = sys.eval_slots(s, &ids, &mut out);
+            ok((missing & 0b01 == 0).then_some(out[0]), t.wg)
+                && ok((missing & 0b10 == 0).then_some(out[1]), t.ts)
+        }
+        None => ok(sys.eval_var(s, "WG"), t.wg) && ok(sys.eval_var(s, "TS"), t.ts),
+    }
+}
+
+/// Bounded guided simulation of an external Promela source pinned to `t`:
+/// a random walk that, at every nondeterministic choice, follows only
+/// successors [`compatible`] with the target tuning — unlike a walk on a
+/// sharded model it can never dead-end in an off-target branch, because
+/// the target branch itself always remains. The cost is the maximum over
+/// `runs` walks of the observed terminal `time` (positive terminal times
+/// are achievable for `t`, which is exactly what `ShardPlan::t_ini`
+/// needs) with the walked step count as fallback for models that do not
+/// expose `time`, hit `max_steps`, or cannot reach `t` at all. Seeds are
+/// fixed per (tuning, run), so estimates — and therefore shard plans —
+/// are reproducible across processes.
+fn guided_sim_cost(sys: &PromelaSystem, t: Tuning, runs: u64, max_steps: u64) -> u64 {
+    use crate::util::rng::Xoshiro256;
+    let slots = match (sys.resolve_slot("WG"), sys.resolve_slot("TS")) {
+        (Some(w), Some(ts)) => Some((w, ts)),
+        _ => None,
+    };
+    let mut best = 0u64;
+    let mut buf: Vec<PState> = Vec::new();
+    for run in 0..runs {
+        let seed =
+            0x5EED_0000_0000_0000u64 ^ ((t.wg as u64) << 32) ^ ((t.ts as u64) << 8) ^ run;
+        let mut rng = Xoshiro256::new(seed);
+        let inits = sys.initial_states();
+        if inits.is_empty() {
+            return 1;
+        }
+        let mut state = inits[rng.below(inits.len() as u64) as usize].clone();
+        let mut steps = 0u64;
+        let cost = loop {
+            sys.successors(&state, &mut buf);
+            if buf.is_empty() {
+                // terminal: the observed time was reached by a real run
+                break match sys.eval_var(&state, "time") {
+                    Some(time) if time > 0 => time as u64,
+                    _ => steps,
+                };
+            }
+            if steps >= max_steps {
+                break steps;
+            }
+            buf.retain(|s| compatible(sys, s, t, slots));
+            if buf.is_empty() {
+                break steps; // `t` unreachable along any continuation
+            }
+            state = buf[rng.below(buf.len() as u64) as usize].clone();
+            steps += 1;
+        };
+        best = best.max(cost);
+    }
+    best.max(1)
 }
 
 /// A constructed model for a job. The [`TransitionSystem`] impl
@@ -618,11 +706,42 @@ mod tests {
         for &(t, c) in &costs {
             assert_eq!(c, m.predicted_time(t).max(1));
         }
-        // external sources: uniform weights over the assumed lattice
+        // external sources: estimated by the guided-simulation sweep. A
+        // model that never reads (WG, TS) walks identically for every
+        // tuning, so its weights stay uniform (and positive)
         let mut ext = job.clone();
         ext.engine = JobEngine::Promela;
         ext.source = Some("int x; active proctype main() { x = 1 }".into());
-        assert!(ext.tuning_costs().unwrap().iter().all(|&(_, c)| c == 1));
+        let ext_costs = ext.tuning_costs().unwrap();
+        assert!(ext_costs.iter().all(|&(_, c)| c >= 1));
+        assert!(
+            ext_costs.windows(2).all(|w| w[0].1 == w[1].1),
+            "tuning-independent model must weigh uniform: {:?}",
+            ext_costs
+        );
         assert!(ext.optimum_time().is_err(), "no closed form for external sources");
+    }
+
+    #[test]
+    fn external_source_costs_are_simulation_weighted_and_deterministic() {
+        // a *skewed* external model — the Minimum template, whose runtime
+        // depends strongly on (WG, TS) — must get non-uniform weights,
+        // and the observed terminal times must be achievable (they equal
+        // real walk outcomes, so each weight is a sound Cex bound)
+        let mut job = TuningJob::new(ModelKind::Minimum, 16);
+        job.engine = JobEngine::Promela;
+        job.source = Some(crate::promela::templates::minimum_pml(16, 4, 3));
+        let costs = job.tuning_costs().unwrap();
+        assert!(costs.len() > 1);
+        assert!(costs.iter().all(|&(_, c)| c >= 1));
+        assert!(
+            costs.windows(2).any(|w| w[0].1 != w[1].1),
+            "the Minimum model is cost-skewed; the sweep must see it: {:?}",
+            costs
+        );
+        // fixed seeds: the estimate (and every shard plan derived from
+        // it) is reproducible across processes — worker mode depends on
+        // the planner and a single-process run agreeing
+        assert_eq!(costs, job.tuning_costs().unwrap());
     }
 }

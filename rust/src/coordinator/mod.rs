@@ -29,17 +29,27 @@
 //!   verification entirely;
 //! - [`BatchReport`] (in [`report`]) — per-job optima, per-shard budget
 //!   plans, and cache/queue statistics, rendered for the
-//!   `mcautotune batch` subcommand.
+//!   `mcautotune batch` subcommand;
+//! - [`TaskDir`] (in [`task`]) — **worker mode**: the same plan serialized
+//!   as durable JSON task manifests that any number of processes (or
+//!   machines sharing the directory) lease with atomic rename-based lock
+//!   files, execute, and merge back into the identical [`BatchReport`]
+//!   and cache a single-process run produces.
 //!
-//! [`run_batch`] composes them: cache lookups first (hits and duplicate
-//! jobs complete immediately), then one task per remaining (job, shard)
-//! with its planned budget, then per-job merge + cache write-back.
+//! [`run_batch`] composes the phases in-process: [`plan_batch`] (cache
+//! lookups first — hits and duplicate jobs complete immediately — then
+//! one task per remaining (job, shard) with its planned budget),
+//! [`run_shard_task`] per task across the queue, then [`finish_batch`]
+//! (per-job merge + cache write-back). Worker mode runs the same three
+//! phases split across processes: `mcautotune batch --task-dir` plans,
+//! `mcautotune worker` executes, `mcautotune merge` finishes.
 
 pub mod cache;
 pub mod job;
 pub mod queue;
 pub mod report;
 pub mod shard;
+pub mod task;
 
 pub use cache::{CacheEntry, ResultCache};
 pub use job::{JobEngine, JobModel, JobState, ModelKind, TuningJob};
@@ -49,6 +59,7 @@ pub use shard::{
     adaptive_shard_count, merge_results, partition, plan_shards, shard_weight, ShardModel,
     ShardPlan, TuningShard,
 };
+pub use task::{DrainStats, LeasedTask, PlanSummary, TaskDir, TaskSpec};
 
 use crate::checker::CheckOptions;
 use crate::platform::Tuning;
@@ -86,24 +97,37 @@ impl Default for BatchOptions {
     }
 }
 
-/// Run a batch of tuning jobs: serve cache hits (and within-batch
-/// duplicates) without verifying, shard the rest across the work-stealing
-/// queue, merge per-shard optima, write results back to the cache, and
-/// persist it.
-pub fn run_batch(
+/// The cache-resolved, budget-planned decomposition of a batch — the
+/// output of [`plan_batch`] (phase 1 of [`run_batch`]). The in-process
+/// runner feeds [`tasks`](Self::tasks) straight into the work-stealing
+/// queue; worker mode ([`task::TaskDir::plan`]) serializes them as durable
+/// JSON manifests that any process can lease and execute.
+#[derive(Debug)]
+pub struct BatchPlan {
+    /// canonical cache description per job ([`TuningJob::cache_desc_with`])
+    pub descs: Vec<String>,
+    /// outcomes already resolved at plan time (cache hits); `None` slots
+    /// are filled by [`finish_batch`]
+    pub outcomes: Vec<Option<JobOutcome>>,
+    /// every (job index, shard plan) that still needs verification
+    pub tasks: Vec<(usize, ShardPlan)>,
+    /// shards per job (0 = cached or duplicate: nothing runs)
+    pub shard_counts: Vec<u32>,
+    /// indices of jobs that duplicate an earlier job's description and
+    /// resolve against its freshly stored result at merge time
+    pub duplicates: Vec<usize>,
+}
+
+/// Phase 1: cache pass + budget planning. Hits complete immediately;
+/// overlapping jobs (same cache description) run once and the rest
+/// resolve at merge time. Cache misses are planned: per-tuning cost
+/// estimates weight the sub-lattices, the weights derive the shard count
+/// (when unset) and scale the job-level budgets into per-shard budgets.
+pub fn plan_batch(
     jobs: &[TuningJob],
     opts: &BatchOptions,
     cache: &mut ResultCache,
-) -> Result<BatchReport> {
-    let start = Instant::now();
-    let hits_before = cache.hits;
-    let misses_before = cache.misses;
-
-    // Phase 1: cache pass. Hits complete immediately; overlapping jobs
-    // (same cache description) run once and the rest resolve in phase 3.
-    // Cache misses are planned: per-tuning cost estimates weight the
-    // sub-lattices, the weights derive the shard count (when unset) and
-    // scale the job-level budgets into per-shard budgets.
+) -> Result<BatchPlan> {
     let mut outcomes: Vec<Option<JobOutcome>> = jobs.iter().map(|_| None).collect();
     let mut tasks: Vec<(usize, ShardPlan)> = Vec::new();
     let mut shard_counts = vec![0u32; jobs.len()];
@@ -148,46 +172,60 @@ pub fn run_batch(
         shard_counts[ji] = plans.len() as u32;
         tasks.extend(plans.into_iter().map(|p| (ji, p)));
     }
+    Ok(BatchPlan { descs, outcomes, tasks, shard_counts, duplicates })
+}
 
-    // Phase 2: every (job, shard) task through the work-stealing queue,
-    // each under its planned budget. Dispatch on the concrete model type
-    // so the checker's successor buffers are reused as designed
-    // (JobModel's uniform interface costs an allocation per expanded
-    // state — fine for cold paths, not here). Each task builds its own
-    // model: that repeats Promela parse+compile once per shard, but keeps
-    // build failures scoped to their job (not the batch) and costs
-    // microseconds against the shard's verification work.
-    let queue = JobQueue::new(opts.workers);
-    let (shard_results, qstats) = queue.run_stats(tasks, |(ji, plan)| {
-        let job = &jobs[ji];
-        let t0 = Instant::now();
-        // t_ini comes from the plan, never from random simulation: a
-        // sharded model can dead-end a simulation walk in a pruned branch
-        // (see ShardPlan::t_ini), and the plan's bound is sound anyway.
-        let t_ini = Some(plan.t_ini);
-        let result = (|| -> Result<TuneResult> {
-            match job.build()? {
-                JobModel::Abs(m) => {
-                    let sm = ShardModel::new(&m, plan.shard);
-                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
-                }
-                JobModel::Min(m) => {
-                    let sm = ShardModel::new(&m, plan.shard);
-                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
-                }
-                JobModel::Pml(m) => {
-                    let sm = ShardModel::new(&m, plan.shard);
-                    tune(&sm, job.method, &plan.check, &opts.swarm, t_ini)
-                }
-            }
-        })();
-        (ji, plan, t0.elapsed(), result)
-    });
+/// Execute one planned (job, shard) task — the per-task body of phase 2,
+/// shared between the in-process queue and cross-process workers
+/// ([`task::TaskDir`]). Dispatches on the concrete model type so the
+/// checker's successor buffers are reused as designed (JobModel's uniform
+/// interface costs an allocation per expanded state — fine for cold
+/// paths, not here). Each task builds its own model: that repeats Promela
+/// parse+compile once per shard, but keeps build failures scoped to their
+/// job (not the batch) and costs microseconds against the shard's
+/// verification work.
+pub fn run_shard_task(
+    job: &TuningJob,
+    plan: &ShardPlan,
+    swarm: &SwarmConfig,
+) -> Result<TuneResult> {
+    // t_ini comes from the plan, never from random simulation: a sharded
+    // model can dead-end a simulation walk in a pruned branch (see
+    // ShardPlan::t_ini), and the plan's bound is sound anyway.
+    let t_ini = Some(plan.t_ini);
+    match job.build()? {
+        JobModel::Abs(m) => {
+            let sm = ShardModel::new(&m, plan.shard);
+            tune(&sm, job.method, &plan.check, swarm, t_ini)
+        }
+        JobModel::Min(m) => {
+            let sm = ShardModel::new(&m, plan.shard);
+            tune(&sm, job.method, &plan.check, swarm, t_ini)
+        }
+        JobModel::Pml(m) => {
+            let sm = ShardModel::new(&m, plan.shard);
+            tune(&sm, job.method, &plan.check, swarm, t_ini)
+        }
+    }
+}
 
-    // Phase 3: merge shards per job, write back to the cache. A failing
-    // shard fails its *job*, not the batch: every other job's result is
-    // still merged, cached and persisted before the error propagates, so
-    // completed verification work is never thrown away.
+/// Phase 3: merge per-shard results per job, write back to the cache,
+/// resolve within-batch duplicates, and persist. A failing shard fails
+/// its *job*, not the batch: every other job's result is still merged,
+/// cached and persisted before the error propagates, so completed
+/// verification work is never thrown away. `shard_results` must be in
+/// task order (the order [`plan_batch`] emitted them) so merge folds —
+/// shard log tags, first-trail tie-breaks — are identical no matter which
+/// process executed which shard.
+pub(crate) fn finish_batch(
+    jobs: &[TuningJob],
+    descs: &[String],
+    mut outcomes: Vec<Option<JobOutcome>>,
+    shard_counts: &[u32],
+    duplicates: &[usize],
+    shard_results: Vec<(usize, ShardPlan, Duration, Result<TuneResult>)>,
+    cache: &mut ResultCache,
+) -> Result<Vec<JobOutcome>> {
     let mut per_job: Vec<Vec<TuneResult>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_plans: Vec<Vec<ShardPlan>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_wall = vec![Duration::ZERO; jobs.len()];
@@ -225,7 +263,7 @@ pub fn run_batch(
     }
     // overlapping duplicates resolve against the freshly stored results
     // (a duplicate of a failed job stays unresolved and fails with it)
-    for ji in duplicates {
+    for &ji in duplicates {
         let desc = &descs[ji];
         if let Some(hit) = cache.lookup(desc) {
             outcomes[ji] = Some(JobOutcome {
@@ -245,12 +283,49 @@ pub fn run_batch(
             jobs[ji].name, completed
         )));
     }
+    Ok(outcomes
+        .into_iter()
+        .map(|o| o.expect("every job resolves to an outcome"))
+        .collect())
+}
+
+/// Run a batch of tuning jobs: serve cache hits (and within-batch
+/// duplicates) without verifying, shard the rest across the work-stealing
+/// queue, merge per-shard optima, write results back to the cache, and
+/// persist it. For cross-process draining of the same plan, see
+/// [`task::TaskDir`] (worker mode).
+pub fn run_batch(
+    jobs: &[TuningJob],
+    opts: &BatchOptions,
+    cache: &mut ResultCache,
+) -> Result<BatchReport> {
+    let start = Instant::now();
+    let hits_before = cache.hits;
+    let misses_before = cache.misses;
+
+    let plan = plan_batch(jobs, opts, cache)?;
+
+    // Phase 2: every (job, shard) task through the work-stealing queue,
+    // each under its planned budget.
+    let queue = JobQueue::new(opts.workers);
+    let (shard_results, qstats) = queue.run_stats(plan.tasks, |(ji, shard_plan)| {
+        let t0 = Instant::now();
+        let result = run_shard_task(&jobs[ji], &shard_plan, &opts.swarm);
+        (ji, shard_plan, t0.elapsed(), result)
+    });
+
+    let outcomes = finish_batch(
+        jobs,
+        &plan.descs,
+        plan.outcomes,
+        &plan.shard_counts,
+        &plan.duplicates,
+        shard_results,
+        cache,
+    )?;
 
     Ok(BatchReport {
-        outcomes: outcomes
-            .into_iter()
-            .map(|o| o.expect("every job resolves to an outcome"))
-            .collect(),
+        outcomes,
         cache_hits: cache.hits - hits_before,
         cache_misses: cache.misses - misses_before,
         stolen_tasks: qstats.stolen,

@@ -9,7 +9,9 @@
 //! spawn tasks, so "every deque empty" is a sound termination test: no
 //! new work can appear after it holds.
 
+use crate::util::error::Result;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Execution statistics of one [`JobQueue::run_stats`] call.
@@ -118,6 +120,49 @@ impl JobQueue {
             .collect();
         (out, stats)
     }
+
+    /// Run tasks pulled on demand from `source` until every worker sees
+    /// `None`. Unlike [`run_stats`](Self::run_stats), the task set need
+    /// not be known up front — cross-process draining
+    /// ([`super::task::TaskDir::drain`]) leases tasks from a shared
+    /// directory as it goes, and `source` itself is the arbiter (it may
+    /// block/poll internally and return `None` only when no work will
+    /// ever appear again). There is nothing to steal: the source hands
+    /// each task to exactly one worker. Returns the total executed task
+    /// count; the first error from `source` or `f` propagates after every
+    /// worker has stopped (workers that already pulled a task finish it).
+    pub fn run_source<T, S, F>(&self, source: S, f: F) -> Result<u64>
+    where
+        T: Send,
+        S: Fn() -> Result<Option<T>> + Sync,
+        F: Fn(T) -> Result<()> + Sync,
+    {
+        let executed = AtomicU64::new(0);
+        let (source, f, executed_ref) = (&source, &f, &executed);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.workers)
+                .map(|_| {
+                    scope.spawn(move || -> Result<()> {
+                        while let Some(task) = source()? {
+                            f(task)?;
+                            executed_ref.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            let mut first_err = None;
+            for h in handles {
+                if let Err(e) = h.join().expect("queue worker panicked") {
+                    first_err.get_or_insert(e);
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(executed.load(Ordering::Relaxed)),
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +214,50 @@ mod tests {
         let (out, stats) = q.run_stats(vec![1u32, 2], |x| x * 10);
         assert_eq!(out, vec![10, 20]);
         assert_eq!(stats.executed.len(), 2);
+    }
+
+    #[test]
+    fn run_source_drains_a_shared_counter() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = JobQueue::new(4);
+        let next = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        let executed = q
+            .run_source(
+                || {
+                    let n = next.fetch_add(1, Ordering::Relaxed);
+                    Ok(if n < 100 { Some(n) } else { None })
+                },
+                |n| {
+                    sum.fetch_add(n, Ordering::Relaxed);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(executed, 100);
+        assert_eq!(sum.load(Ordering::Relaxed), (0..100u64).sum());
+    }
+
+    #[test]
+    fn run_source_propagates_errors() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = JobQueue::new(2);
+        let next = AtomicU64::new(0);
+        let err = q.run_source(
+            || {
+                let n = next.fetch_add(1, Ordering::Relaxed);
+                Ok(if n < 8 { Some(n) } else { None })
+            },
+            |n| {
+                if n == 3 {
+                    crate::bail!("task {} exploded", n)
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("exploded"));
     }
 
     #[test]

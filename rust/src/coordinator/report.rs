@@ -51,14 +51,15 @@ impl BatchReport {
     /// ASCII table of per-job optima plus a cache/queue summary line.
     pub fn render(&self) -> String {
         let mut table = Table::new(vec![
-            "N", "Job", "Model", "Size", "Method", "Shards", "WG", "TS", "Model time",
-            "States", "Cache", "Time",
+            "N", "Job", "Model", "Engine", "Size", "Method", "Shards", "WG", "TS",
+            "Model time", "States", "Cache", "Time",
         ]);
         for (i, o) in self.outcomes.iter().enumerate() {
             table.row(vec![
                 (i + 1).to_string(),
                 o.job.name.clone(),
                 o.job.model.to_string(),
+                o.job.engine.to_string(),
                 o.job.size.to_string(),
                 match o.result.method {
                     Method::Exhaustive => "exhaustive".to_string(),

@@ -183,7 +183,7 @@ impl<'a, M: TransitionSystem> TransitionSystem for ShardModel<'a, M> {
 
 /// One shard's execution plan: the sub-lattice, its estimated state-space
 /// weight, and the budgets derived from it (see [`plan_shards`]).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardPlan {
     pub shard: TuningShard,
     /// estimated state-space weight: sum of per-tuning cost estimates of
@@ -191,12 +191,14 @@ pub struct ShardPlan {
     pub weight: u64,
     /// initial over-time bound for the shard's bisection: the largest
     /// per-tuning cost in the shard. For closed-form jobs the costs *are*
-    /// the terminal times, so `Cex(t_ini)` holds immediately; for uniform
-    /// costs (external Promela sources) bisection's doubling loop takes
-    /// over. Either way the batch runner never needs random simulation on
-    /// a sharded model — where a walk can dead-end in a pruned branch
-    /// (Promela assigns WG before TS, so a wrong-WG prefix only prunes at
-    /// the TS choice) and make `T_ini` discovery flaky.
+    /// the terminal times, so `Cex(t_ini)` holds immediately; external
+    /// Promela sources are weighted by guided-simulation terminal times
+    /// (also achievable, hence also sound), and whenever a walk fell back
+    /// to step counts bisection's doubling loop takes over. Either way
+    /// the batch runner never needs random simulation on a sharded model
+    /// — where a walk can dead-end in a pruned branch (Promela assigns WG
+    /// before TS, so a wrong-WG prefix only prunes at the TS choice) and
+    /// make `T_ini` discovery flaky.
     pub t_ini: i64,
     /// the shard's verification options — job-level budgets scaled by
     /// `weight / total_weight`, plus `expected_states` for store pre-sizing

@@ -1,0 +1,1285 @@
+//! Worker mode — the durable cross-process task protocol.
+//!
+//! [`super::run_batch`] drains a batch inside one process. This module
+//! turns the same three phases into a protocol over a shared directory so
+//! any number of processes (or machines sharing the filesystem) can drain
+//! one batch:
+//!
+//! 1. **Plan** ([`TaskDir::plan`], CLI `mcautotune batch --task-dir`):
+//!    phase 1 runs once in the planning process; every remaining
+//!    (job, shard) task — engine, inlined source, sub-lattice bounds, and
+//!    its [`ShardPlan`] budget slice — is serialized as a JSON
+//!    [`TaskSpec`] manifest (`<id>.task.json`), and `batch.json` records
+//!    the job list, cache descriptions, plan-time cache hits and the
+//!    authoritative task-id list. `batch.json` is written last (via
+//!    atomic rename), so its presence guarantees every manifest is in
+//!    place.
+//! 2. **Lease + execute** ([`TaskDir::lease`] / [`TaskDir::drain`], CLI
+//!    `mcautotune worker`): a worker claims a task by atomically renaming
+//!    `<id>.task.json` to `<id>.lease.json` — exactly one process wins the
+//!    rename — then freshens the lease's mtime (the TTL clock starts at
+//!    lease time) and heartbeats it while the task runs. A lease whose
+//!    mtime is older than the TTL is presumed crashed and re-leased: any
+//!    worker may rename it back to `<id>.task.json` (again one winner) and
+//!    claim it. Completed tasks publish `<id>.result.json` via
+//!    write-to-temp + rename.
+//! 3. **Merge** ([`TaskDir::merge`], CLI `mcautotune merge`): once every
+//!    task has a result, any process folds the partials through
+//!    [`super::merge_results`] — in plan order, so shard log tags and
+//!    first-trail tie-breaks are reproduced — into the same
+//!    [`BatchReport`] and [`ResultCache`] entries a single-process
+//!    [`super::run_batch`] of the same spec produces. The planning process
+//!    runs this implicitly when it observes all tasks complete.
+//!
+//! Leases are a *liveness* mechanism, not a correctness one: if a slow
+//! worker is mistaken for a crashed one (mtime race, heartbeat stall),
+//! two workers may execute the same task. That is benign — task execution
+//! is deterministic (the plan pins `t_ini`, budgets and the exploration
+//! order; multi-threaded plans are upgraded to the deterministic frontier
+//! at plan time, see [`TaskDir::plan`]), both compute the same result,
+//! and the atomic result rename makes the publication last-writer-wins
+//! with identical content. The one exception is `method=swarm` jobs,
+//! whose results are wall-clock-budgeted — duplicate executions of a
+//! swarm shard may publish different (all individually valid) bests.
+//! The planner's TTL is recorded in `batch.json` and adopted by workers
+//! that do not override it, so one fleet shares one staleness clock. The
+//! differential conformance suite (`rust/tests/batch_distributed.rs`)
+//! pins multi-process drains — including crash-and-re-lease schedules —
+//! to the single-process engine.
+
+use super::{
+    finish_batch, plan_batch, run_shard_task, BatchOptions, BatchReport, JobEngine, JobOutcome,
+    JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
+};
+use crate::checker::{CheckOptions, Frontier, Order, StoreKind};
+use crate::platform::{Granularity, PlatformConfig};
+use crate::swarm::SwarmConfig;
+use crate::tuner::{Method, TuneResult, TuningWitness};
+use crate::util::error::{anyhow, bail, ensure, Context, Result};
+use crate::util::manifest::Json;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant, SystemTime};
+
+const HEADER: &str = "batch.json";
+const TASK_SUFFIX: &str = ".task.json";
+const LEASE_SUFFIX: &str = ".lease.json";
+const RESULT_SUFFIX: &str = ".result.json";
+const DEFAULT_TTL: Duration = Duration::from_secs(30);
+
+// ------------------------------------------------------- serialization --
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// u64 as JSON: an integer when it fits `i64`, a decimal string above
+/// (`max_states = u64::MAX` must round-trip losslessly).
+fn ju64(v: u64) -> Json {
+    if v <= i64::MAX as u64 {
+        Json::Int(v as i64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn jnanos(d: Duration) -> Json {
+    ju64(d.as_nanos().min(u64::MAX as u128) as u64)
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).with_context(|| format!("missing field `{}`", key))
+}
+
+fn arr_field<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(v, key)?
+        .as_arr()
+        .with_context(|| format!("field `{}` is not an array", key))
+}
+
+fn u64_of(f: &Json, key: &str) -> Result<u64> {
+    match f {
+        Json::Int(i) if *i >= 0 => Ok(*i as u64),
+        Json::Str(s) => s
+            .parse::<u64>()
+            .with_context(|| format!("field `{}`: `{}` is not a u64", key, s)),
+        _ => bail!("field `{}` is not a u64", key),
+    }
+}
+
+fn gu64(v: &Json, key: &str) -> Result<u64> {
+    u64_of(field(v, key)?, key)
+}
+
+fn gi64(v: &Json, key: &str) -> Result<i64> {
+    field(v, key)?.as_i64().with_context(|| format!("field `{}` is not an integer", key))
+}
+
+fn gu32(v: &Json, key: &str) -> Result<u32> {
+    let raw = gu64(v, key)?;
+    u32::try_from(raw).with_context(|| format!("field `{}`: {} overflows u32", key, raw))
+}
+
+fn gu8(v: &Json, key: &str) -> Result<u8> {
+    let raw = gu64(v, key)?;
+    u8::try_from(raw).with_context(|| format!("field `{}`: {} overflows u8", key, raw))
+}
+
+fn gusize(v: &Json, key: &str) -> Result<usize> {
+    let raw = gu64(v, key)?;
+    usize::try_from(raw).with_context(|| format!("field `{}`: {} overflows usize", key, raw))
+}
+
+fn gbool(v: &Json, key: &str) -> Result<bool> {
+    field(v, key)?.as_bool().with_context(|| format!("field `{}` is not a bool", key))
+}
+
+fn gstr(v: &Json, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .with_context(|| format!("field `{}` is not a string", key))?
+        .to_string())
+}
+
+fn method_name(m: Method) -> &'static str {
+    match m {
+        Method::Exhaustive => "exhaustive",
+        Method::Swarm => "swarm",
+    }
+}
+
+fn check_to_json(c: &CheckOptions) -> Json {
+    let mut fields = vec![(
+        "store",
+        Json::Str(
+            match c.store {
+                StoreKind::Full => "full",
+                StoreKind::HashCompact => "compact",
+                StoreKind::Bitstate { .. } => "bitstate",
+            }
+            .to_string(),
+        ),
+    )];
+    if let StoreKind::Bitstate { log2_bits, hashes } = c.store {
+        fields.push(("store_bits", Json::Int(log2_bits as i64)));
+        fields.push(("store_hashes", Json::Int(hashes as i64)));
+    }
+    fields.push(("max_depth", ju64(c.max_depth as u64)));
+    fields.push(("max_states", ju64(c.max_states)));
+    fields.push(("memory_budget", ju64(c.memory_budget)));
+    fields.push((
+        "time_budget_nanos",
+        c.time_budget.map_or(Json::Null, jnanos),
+    ));
+    fields.push(("collect_all", Json::Bool(c.collect_all)));
+    fields.push(("max_errors", ju64(c.max_errors as u64)));
+    match c.order {
+        Order::InOrder => fields.push(("order", Json::Str("in-order".into()))),
+        Order::Random(seed) => {
+            fields.push(("order", Json::Str("random".into())));
+            fields.push(("order_seed", ju64(seed)));
+        }
+    }
+    fields.push(("threads", Json::Int(c.threads as i64)));
+    fields.push(("expected_states", ju64(c.expected_states)));
+    fields.push((
+        "frontier",
+        Json::Str(
+            match c.frontier {
+                Frontier::Async => "async",
+                Frontier::Deterministic => "det",
+            }
+            .to_string(),
+        ),
+    ));
+    obj(fields)
+}
+
+fn check_from_json(v: &Json) -> Result<CheckOptions> {
+    let store = match gstr(v, "store")?.as_str() {
+        "full" => StoreKind::Full,
+        "compact" => StoreKind::HashCompact,
+        "bitstate" => StoreKind::Bitstate {
+            log2_bits: gu8(v, "store_bits")?,
+            hashes: gu8(v, "store_hashes")?,
+        },
+        s => bail!("unknown store kind `{}`", s),
+    };
+    let order = match gstr(v, "order")?.as_str() {
+        "in-order" => Order::InOrder,
+        "random" => Order::Random(gu64(v, "order_seed")?),
+        s => bail!("unknown successor order `{}`", s),
+    };
+    let frontier = match gstr(v, "frontier")?.as_str() {
+        "async" => Frontier::Async,
+        "det" => Frontier::Deterministic,
+        s => bail!("unknown frontier `{}`", s),
+    };
+    let time_budget = match field(v, "time_budget_nanos")? {
+        Json::Null => None,
+        f => Some(Duration::from_nanos(u64_of(f, "time_budget_nanos")?)),
+    };
+    Ok(CheckOptions {
+        store,
+        max_depth: gusize(v, "max_depth")?,
+        max_states: gu64(v, "max_states")?,
+        memory_budget: gu64(v, "memory_budget")?,
+        time_budget,
+        collect_all: gbool(v, "collect_all")?,
+        max_errors: gusize(v, "max_errors")?,
+        order,
+        threads: gu32(v, "threads")?,
+        expected_states: gu64(v, "expected_states")?,
+        frontier,
+    })
+}
+
+fn swarm_to_json(s: &SwarmConfig) -> Json {
+    obj(vec![
+        ("workers", Json::Int(s.workers as i64)),
+        ("seed", ju64(s.seed)),
+        ("log2_bits", Json::Int(s.log2_bits as i64)),
+        ("hashes", Json::Int(s.hashes as i64)),
+        ("max_depth", ju64(s.max_depth as u64)),
+        ("time_budget_nanos", jnanos(s.time_budget)),
+        ("max_errors_per_worker", ju64(s.max_errors_per_worker as u64)),
+    ])
+}
+
+fn swarm_from_json(v: &Json) -> Result<SwarmConfig> {
+    Ok(SwarmConfig {
+        workers: gu32(v, "workers")?,
+        seed: gu64(v, "seed")?,
+        log2_bits: gu8(v, "log2_bits")?,
+        hashes: gu8(v, "hashes")?,
+        max_depth: gusize(v, "max_depth")?,
+        time_budget: Duration::from_nanos(gu64(v, "time_budget_nanos")?),
+        max_errors_per_worker: gusize(v, "max_errors_per_worker")?,
+    })
+}
+
+fn job_to_json(j: &TuningJob) -> Json {
+    obj(vec![
+        ("name", Json::Str(j.name.clone())),
+        ("model", Json::Str(j.model.to_string())),
+        ("engine", Json::Str(j.engine.to_string())),
+        // the source text is inlined so a worker machine needs no access
+        // to the original .pml path
+        ("source", j.source.as_ref().map_or(Json::Null, |s| Json::Str(s.clone()))),
+        ("size", Json::Int(j.size as i64)),
+        ("nd", Json::Int(j.plat.nd as i64)),
+        ("nu", Json::Int(j.plat.nu as i64)),
+        ("np", Json::Int(j.plat.np as i64)),
+        ("gmt", Json::Int(j.plat.gmt as i64)),
+        (
+            "granularity",
+            Json::Str(
+                match j.granularity {
+                    Granularity::Tick => "tick",
+                    Granularity::Phase => "phase",
+                }
+                .to_string(),
+            ),
+        ),
+        ("method", Json::Str(method_name(j.method).to_string())),
+        ("shards", Json::Int(j.shards as i64)),
+    ])
+}
+
+fn job_from_json(v: &Json) -> Result<TuningJob> {
+    let source = match field(v, "source")? {
+        Json::Null => None,
+        f => Some(f.as_str().context("field `source` is not a string")?.to_string()),
+    };
+    let granularity = match gstr(v, "granularity")?.as_str() {
+        "tick" => Granularity::Tick,
+        "phase" => Granularity::Phase,
+        g => bail!("unknown granularity `{}`", g),
+    };
+    Ok(TuningJob {
+        name: gstr(v, "name")?,
+        model: gstr(v, "model")?.parse::<ModelKind>()?,
+        engine: gstr(v, "engine")?.parse::<JobEngine>()?,
+        source,
+        size: gu32(v, "size")?,
+        plat: PlatformConfig {
+            nd: gu32(v, "nd")?,
+            nu: gu32(v, "nu")?,
+            np: gu32(v, "np")?,
+            gmt: gu32(v, "gmt")?,
+        },
+        granularity,
+        method: gstr(v, "method")?.parse::<Method>()?,
+        shards: gu32(v, "shards")?,
+    })
+}
+
+fn plan_to_json(p: &ShardPlan) -> Json {
+    obj(vec![
+        ("wg_min", Json::Int(p.shard.wg_min as i64)),
+        ("wg_max", Json::Int(p.shard.wg_max as i64)),
+        ("ts_min", Json::Int(p.shard.ts_min as i64)),
+        ("ts_max", Json::Int(p.shard.ts_max as i64)),
+        ("weight", ju64(p.weight)),
+        ("t_ini", Json::Int(p.t_ini)),
+        ("check", check_to_json(&p.check)),
+    ])
+}
+
+fn plan_from_json(v: &Json) -> Result<ShardPlan> {
+    Ok(ShardPlan {
+        shard: TuningShard {
+            wg_min: gu32(v, "wg_min")?,
+            wg_max: gu32(v, "wg_max")?,
+            ts_min: gu32(v, "ts_min")?,
+            ts_max: gu32(v, "ts_max")?,
+        },
+        weight: gu64(v, "weight")?,
+        t_ini: gi64(v, "t_ini")?,
+        check: check_from_json(field(v, "check")?)?,
+    })
+}
+
+fn witness_to_json(w: &TuningWitness) -> Json {
+    obj(vec![
+        ("wg", Json::Int(w.wg as i64)),
+        ("ts", Json::Int(w.ts as i64)),
+        ("time", Json::Int(w.time)),
+        ("steps", ju64(w.steps as u64)),
+    ])
+}
+
+fn witness_from_json(v: &Json) -> Result<TuningWitness> {
+    Ok(TuningWitness {
+        wg: gu32(v, "wg")?,
+        ts: gu32(v, "ts")?,
+        time: gi64(v, "time")?,
+        steps: gusize(v, "steps")?,
+    })
+}
+
+fn result_to_json(r: &TuneResult) -> Json {
+    obj(vec![
+        ("method", Json::Str(method_name(r.method).to_string())),
+        ("optimal", witness_to_json(&r.optimal)),
+        ("t_min", Json::Int(r.t_min)),
+        (
+            "first_trail",
+            r.first_trail.as_ref().map_or(Json::Null, |(w, d)| {
+                let Json::Obj(mut fields) = witness_to_json(w) else { unreachable!() };
+                fields.push(("found_after_nanos".to_string(), jnanos(*d)));
+                Json::Obj(fields)
+            }),
+        ),
+        ("states_explored", ju64(r.states_explored)),
+        ("peak_bytes", ju64(r.peak_bytes)),
+        ("elapsed_nanos", jnanos(r.elapsed)),
+        ("log", Json::Arr(r.log.iter().map(|l| Json::Str(l.clone())).collect())),
+    ])
+}
+
+fn result_from_json(v: &Json) -> Result<TuneResult> {
+    let method = gstr(v, "method")?.parse::<Method>()?;
+    let t_min = gi64(v, "t_min")?;
+    let first_trail = match field(v, "first_trail")? {
+        Json::Null => None,
+        f => Some((
+            witness_from_json(f)?,
+            Duration::from_nanos(gu64(f, "found_after_nanos")?),
+        )),
+    };
+    let log = field(v, "log")?
+        .as_arr()
+        .context("field `log` is not an array")?
+        .iter()
+        .map(|l| {
+            l.as_str().map(str::to_string).context("log line is not a string")
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TuneResult {
+        method,
+        optimal: witness_from_json(field(v, "optimal")?)?,
+        t_min,
+        // derived exactly as bisection/merge_results derive it, so a
+        // round-trip reproduces the original value
+        first_trail_optimality: first_trail
+            .as_ref()
+            .map(|(w, _)| t_min as f64 / w.time as f64),
+        first_trail,
+        states_explored: gu64(v, "states_explored")?,
+        peak_bytes: gu64(v, "peak_bytes")?,
+        elapsed: Duration::from_nanos(gu64(v, "elapsed_nanos")?),
+        log,
+    })
+}
+
+// ------------------------------------------------------------ TaskSpec --
+
+/// One durable (job, shard) task: everything a worker process on another
+/// machine needs to execute the shard — the job (with any Promela source
+/// inlined), the sub-lattice bounds, the [`ShardPlan`] budget slice and
+/// the swarm configuration — plus the job's cache description so the
+/// merge step can write the result back under the right key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// filesystem-safe id, `j<job>-s<shard>`
+    pub id: String,
+    pub job_index: usize,
+    /// position among the job's shards, in plan (lattice-partition) order
+    pub shard_index: usize,
+    /// the job's canonical cache description (swarm-config-aware),
+    /// computed once at plan time
+    pub desc: String,
+    pub job: TuningJob,
+    pub plan: ShardPlan,
+    pub swarm: SwarmConfig,
+}
+
+impl TaskSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::Int(1)),
+            ("id", Json::Str(self.id.clone())),
+            ("job_index", ju64(self.job_index as u64)),
+            ("shard_index", ju64(self.shard_index as u64)),
+            ("desc", Json::Str(self.desc.clone())),
+            ("job", job_to_json(&self.job)),
+            ("plan", plan_to_json(&self.plan)),
+            ("swarm", swarm_to_json(&self.swarm)),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<TaskSpec> {
+        let v = Json::parse(text)?;
+        let version = gi64(&v, "version")?;
+        ensure!(version == 1, "unsupported task-manifest version {}", version);
+        Ok(TaskSpec {
+            id: gstr(&v, "id")?,
+            job_index: gusize(&v, "job_index")?,
+            shard_index: gusize(&v, "shard_index")?,
+            desc: gstr(&v, "desc")?,
+            job: job_from_json(field(&v, "job")?)?,
+            plan: plan_from_json(field(&v, "plan")?)?,
+            swarm: swarm_from_json(field(&v, "swarm")?)?,
+        })
+    }
+}
+
+// -------------------------------------------------------------- header --
+
+/// The per-batch record (`batch.json`): what the merge step needs beyond
+/// the task results themselves.
+#[derive(Debug)]
+struct Header {
+    jobs: Vec<TuningJob>,
+    descs: Vec<String>,
+    shard_counts: Vec<u32>,
+    duplicates: Vec<usize>,
+    /// plan-time cache hits, resolved before any task was written
+    cached: Vec<(usize, TuneResult)>,
+    plan_hits: u64,
+    plan_misses: u64,
+    /// authoritative task ids, in plan order
+    task_ids: Vec<String>,
+    /// the planning process's cache file (merge defaults to it)
+    cache_path: Option<String>,
+    /// the planner's lease TTL in ms — workers that do not override the
+    /// TTL adopt it, so the whole fleet shares one staleness clock
+    ttl_ms: u64,
+}
+
+impl Header {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::Int(1)),
+            ("jobs", Json::Arr(self.jobs.iter().map(job_to_json).collect())),
+            (
+                "descs",
+                Json::Arr(self.descs.iter().map(|d| Json::Str(d.clone())).collect()),
+            ),
+            (
+                "shard_counts",
+                Json::Arr(self.shard_counts.iter().map(|&c| Json::Int(c as i64)).collect()),
+            ),
+            (
+                "duplicates",
+                Json::Arr(self.duplicates.iter().map(|&d| ju64(d as u64)).collect()),
+            ),
+            (
+                "cached",
+                Json::Arr(
+                    self.cached
+                        .iter()
+                        .map(|(ji, r)| {
+                            obj(vec![
+                                ("job_index", ju64(*ji as u64)),
+                                ("result", result_to_json(r)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("plan_hits", ju64(self.plan_hits)),
+            ("plan_misses", ju64(self.plan_misses)),
+            (
+                "task_ids",
+                Json::Arr(self.task_ids.iter().map(|t| Json::Str(t.clone())).collect()),
+            ),
+            (
+                "cache_path",
+                self.cache_path.as_ref().map_or(Json::Null, |p| Json::Str(p.clone())),
+            ),
+            ("ttl_ms", ju64(self.ttl_ms)),
+        ])
+    }
+
+    fn parse(text: &str) -> Result<Header> {
+        let v = Json::parse(text)?;
+        let version = gi64(&v, "version")?;
+        ensure!(version == 1, "unsupported batch-header version {}", version);
+        let jobs =
+            arr_field(&v, "jobs")?.iter().map(job_from_json).collect::<Result<Vec<_>>>()?;
+        let descs = arr_field(&v, "descs")?
+            .iter()
+            .map(|d| d.as_str().map(str::to_string).context("desc is not a string"))
+            .collect::<Result<Vec<_>>>()?;
+        let shard_counts = arr_field(&v, "shard_counts")?
+            .iter()
+            .map(|c| Ok(u64_of(c, "shard_counts")? as u32))
+            .collect::<Result<Vec<_>>>()?;
+        let duplicates = arr_field(&v, "duplicates")?
+            .iter()
+            .map(|d| Ok(u64_of(d, "duplicates")? as usize))
+            .collect::<Result<Vec<_>>>()?;
+        let cached = arr_field(&v, "cached")?
+            .iter()
+            .map(|e| {
+                Ok((gusize(e, "job_index")?, result_from_json(field(e, "result")?)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let task_ids = arr_field(&v, "task_ids")?
+            .iter()
+            .map(|t| t.as_str().map(str::to_string).context("task id is not a string"))
+            .collect::<Result<Vec<_>>>()?;
+        let cache_path = match field(&v, "cache_path")? {
+            Json::Null => None,
+            f => Some(f.as_str().context("field `cache_path` is not a string")?.to_string()),
+        };
+        ensure!(jobs.len() == descs.len(), "jobs/descs length mismatch");
+        ensure!(jobs.len() == shard_counts.len(), "jobs/shard_counts length mismatch");
+        for &ji in duplicates.iter().chain(cached.iter().map(|(ji, _)| ji)) {
+            ensure!(ji < jobs.len(), "job index {} out of range", ji);
+        }
+        Ok(Header {
+            jobs,
+            descs,
+            shard_counts,
+            duplicates,
+            cached,
+            plan_hits: gu64(&v, "plan_hits")?,
+            plan_misses: gu64(&v, "plan_misses")?,
+            task_ids,
+            cache_path,
+            ttl_ms: gu64(&v, "ttl_ms")?,
+        })
+    }
+}
+
+// ------------------------------------------------------------- TaskDir --
+
+/// A leased task: the parsed [`TaskSpec`] plus the lease file the holder
+/// heartbeats and removes on completion. Dropping a `LeasedTask` without
+/// [`TaskDir::complete`] simulates a crashed worker — the lease goes
+/// stale after the TTL and is re-leased.
+#[derive(Debug)]
+pub struct LeasedTask {
+    pub spec: TaskSpec,
+    /// true when this lease was obtained by re-leasing an expired
+    /// (crashed or stalled) worker's lease
+    pub reclaimed: bool,
+    lease_path: PathBuf,
+}
+
+/// What one [`TaskDir::drain`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainStats {
+    /// tasks this process actually executed (claims skipped because a
+    /// duplicate executor already published the result are not counted)
+    pub executed: u64,
+    /// tasks claimed by re-leasing an expired lease
+    pub reclaimed: u64,
+    /// true when every task in the batch has a result (not necessarily
+    /// all produced by this process)
+    pub complete: bool,
+}
+
+/// What [`TaskDir::plan`] wrote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanSummary {
+    pub jobs: usize,
+    /// task manifests written (one per non-cached, non-duplicate shard)
+    pub tasks: usize,
+    /// jobs resolved from the cache at plan time (no task written)
+    pub cached: usize,
+}
+
+/// A task directory: the durable home of one planned batch.
+#[derive(Debug, Clone)]
+pub struct TaskDir {
+    dir: PathBuf,
+    /// explicit TTL override; `None` = the plan's recorded TTL when
+    /// draining (falling back to [`DEFAULT_TTL`] elsewhere)
+    ttl: Option<Duration>,
+    poll: Duration,
+}
+
+impl TaskDir {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), ttl: None, poll: Duration::from_millis(100) }
+    }
+
+    /// Lease time-to-live: a lease whose mtime is older than this is
+    /// presumed crashed and re-leased. Must comfortably exceed the
+    /// heartbeat period (ttl/4); sub-second values are for tests. When
+    /// not set, [`drain`](Self::drain) adopts the TTL the planner
+    /// recorded in `batch.json` — a fleet must share one staleness clock,
+    /// or a short-TTL worker would steal live leases from healthy peers
+    /// heartbeating at a longer period.
+    pub fn with_ttl(mut self, ttl: Duration) -> Self {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    fn effective_ttl(&self) -> Duration {
+        self.ttl.unwrap_or(DEFAULT_TTL)
+    }
+
+    /// How long [`drain`](Self::drain) sleeps between scans when no task
+    /// is leasable but the batch is incomplete.
+    pub fn with_poll(mut self, poll: Duration) -> Self {
+        self.poll = poll;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn task_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{}{}", id, TASK_SUFFIX))
+    }
+
+    fn lease_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{}{}", id, LEASE_SUFFIX))
+    }
+
+    fn result_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{}{}", id, RESULT_SUFFIX))
+    }
+
+    fn header_path(&self) -> PathBuf {
+        self.dir.join(HEADER)
+    }
+
+    fn write_atomic(&self, name: &str, text: &str) -> Result<()> {
+        crate::util::manifest::write_atomic(&self.dir.join(name), text)
+    }
+
+    /// Phase 1 across processes: plan the batch (cache pass + budget
+    /// split) and serialize every remaining (job, shard) task as a
+    /// manifest in the directory, the `batch.json` header last.
+    ///
+    /// Multi-threaded plans (`check.threads != 1`) are upgraded from the
+    /// async to the deterministic frontier: duplicate execution under
+    /// lease stealing must publish identical bytes, and async
+    /// multi-threaded exploration is scheduler-dependent while
+    /// `Frontier::Deterministic` is reproducible across runs and thread
+    /// counts by construction.
+    pub fn plan(
+        &self,
+        jobs: &[TuningJob],
+        opts: &BatchOptions,
+        cache: &mut ResultCache,
+    ) -> Result<PlanSummary> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating task dir {}", self.dir.display()))?;
+        ensure!(
+            !self.header_path().exists(),
+            "{} already holds a planned batch — merge or remove it before planning another",
+            self.dir.display()
+        );
+        // also refuse headerless leftovers (a planner that died mid-plan):
+        // workers lease by directory scan, so orphan manifests from an
+        // earlier attempt would be executed alongside the new batch
+        let leftovers = self.scan()?;
+        ensure!(
+            leftovers.available.is_empty()
+                && leftovers.leases.is_empty()
+                && leftovers.results.is_empty(),
+            "{} contains task files from an earlier (unfinished) plan — remove them first",
+            self.dir.display()
+        );
+        let mut opts = opts.clone();
+        // raw `threads != 1`, not effective_threads(): `0` (= all cores)
+        // must upgrade even when the *planner* machine is single-core —
+        // it is the worker machines that resolve the thread count
+        if opts.check.threads != 1 && opts.check.frontier == Frontier::Async {
+            opts.check.frontier = Frontier::Deterministic;
+        }
+        let opts = &opts;
+        let hits_before = cache.hits;
+        let misses_before = cache.misses;
+        let plan = plan_batch(jobs, opts, cache)?;
+        let mut next_shard = vec![0usize; jobs.len()];
+        let mut task_ids = Vec::with_capacity(plan.tasks.len());
+        for (ji, shard_plan) in &plan.tasks {
+            let si = next_shard[*ji];
+            next_shard[*ji] += 1;
+            let id = format!("j{:03}-s{:03}", ji, si);
+            self.write_task(&TaskSpec {
+                id: id.clone(),
+                job_index: *ji,
+                shard_index: si,
+                desc: plan.descs[*ji].clone(),
+                job: jobs[*ji].clone(),
+                plan: shard_plan.clone(),
+                swarm: opts.swarm.clone(),
+            })?;
+            task_ids.push(id);
+        }
+        let cached: Vec<(usize, TuneResult)> = plan
+            .outcomes
+            .into_iter()
+            .enumerate()
+            .filter_map(|(ji, o)| o.map(|o| (ji, o.result)))
+            .collect();
+        let summary =
+            PlanSummary { jobs: jobs.len(), tasks: task_ids.len(), cached: cached.len() };
+        let header = Header {
+            jobs: jobs.to_vec(),
+            descs: plan.descs,
+            shard_counts: plan.shard_counts,
+            duplicates: plan.duplicates,
+            cached,
+            plan_hits: cache.hits - hits_before,
+            plan_misses: cache.misses - misses_before,
+            task_ids,
+            cache_path: cache.path().map(|p| p.display().to_string()),
+            ttl_ms: self.effective_ttl().as_millis().min(u64::MAX as u128) as u64,
+        };
+        self.write_atomic(HEADER, &header.to_json().render())?;
+        Ok(summary)
+    }
+
+    /// Write one task manifest (exposed for tests and tools; `plan` is
+    /// the normal author).
+    pub fn write_task(&self, spec: &TaskSpec) -> Result<()> {
+        ensure!(
+            !spec.id.is_empty()
+                && spec
+                    .id
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "task id `{}` is not filesystem-safe",
+            spec.id
+        );
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating task dir {}", self.dir.display()))?;
+        self.write_atomic(
+            &format!("{}{}", spec.id, TASK_SUFFIX),
+            &spec.to_json().render(),
+        )
+    }
+
+    fn header(&self) -> Result<Header> {
+        let path = self.header_path();
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — not a planned task dir? (plan with `mcautotune batch <spec> --task-dir {}`)",
+                path.display(),
+                self.dir.display()
+            )
+        })?;
+        Header::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// (tasks without a result yet, total tasks).
+    pub fn outstanding(&self) -> Result<(usize, usize)> {
+        let h = self.header()?;
+        Ok((self.remaining(&h.task_ids)?, h.task_ids.len()))
+    }
+
+    /// The cache file the planning process used (the natural default for
+    /// `mcautotune merge`).
+    pub fn planned_cache_path(&self) -> Result<Option<String>> {
+        Ok(self.header()?.cache_path)
+    }
+
+    fn remaining(&self, ids: &[String]) -> Result<usize> {
+        Ok(ids.iter().filter(|id| !self.result_path(id).exists()).count())
+    }
+
+    fn scan(&self) -> Result<Scan> {
+        let mut s = Scan::default();
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("scanning task dir {}", self.dir.display()))?;
+        for entry in entries {
+            // files vanish mid-scan by design (leases move, temps rename)
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(id) = name.strip_suffix(TASK_SUFFIX) {
+                s.available.push(id.to_string());
+            } else if let Some(id) = name.strip_suffix(LEASE_SUFFIX) {
+                if let Ok(mtime) = entry.metadata().and_then(|m| m.modified()) {
+                    s.leases.push((id.to_string(), mtime));
+                }
+            } else if let Some(id) = name.strip_suffix(RESULT_SUFFIX) {
+                s.results.insert(id.to_string());
+            }
+        }
+        s.available.sort();
+        Ok(s)
+    }
+
+    /// Try to claim one task: atomically rename an available
+    /// `<id>.task.json` to `<id>.lease.json` (exactly one process wins).
+    /// When nothing is available, expired leases (mtime older than the
+    /// TTL) are renamed back to task files — again one winner per lease —
+    /// and the scan retries. `Ok(None)` means nothing is currently
+    /// leasable: the batch may be complete, or every remaining task is
+    /// held by a live worker.
+    pub fn lease(&self) -> Result<Option<LeasedTask>> {
+        // ids this call renamed back from expired leases; a win on one of
+        // them is flagged `reclaimed`. Attribution is best-effort under
+        // concurrency: a racer may win a task someone else renamed back.
+        let mut renamed: HashSet<String> = HashSet::new();
+        loop {
+            let scan = self.scan()?;
+            for id in &scan.available {
+                if scan.results.contains(id) {
+                    // a re-leased task whose original worker had already
+                    // published the result before dying: nothing to run
+                    let _ = std::fs::remove_file(self.task_path(id));
+                    continue;
+                }
+                if let Some(mut leased) = self.try_lease(id)? {
+                    leased.reclaimed = renamed.contains(id.as_str());
+                    return Ok(Some(leased));
+                }
+            }
+            let now = SystemTime::now();
+            let mut progressed = false;
+            for (id, mtime) in &scan.leases {
+                if scan.results.contains(id) {
+                    // crashed between result publication and lease removal
+                    let _ = std::fs::remove_file(self.lease_path(id));
+                    continue;
+                }
+                let age = now.duration_since(*mtime).unwrap_or(Duration::ZERO);
+                if age >= self.effective_ttl()
+                    && std::fs::rename(self.lease_path(id), self.task_path(id)).is_ok()
+                {
+                    renamed.insert(id.clone());
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return Ok(None);
+            }
+        }
+    }
+
+    fn try_lease(&self, id: &str) -> Result<Option<LeasedTask>> {
+        let lease = self.lease_path(id);
+        if std::fs::rename(self.task_path(id), &lease).is_err() {
+            return Ok(None); // another worker won the rename
+        }
+        // The TTL clock starts at lease time, not plan time (rename keeps
+        // the old mtime). A failed touch is tolerated: the lease merely
+        // looks older than it is, and duplicate execution is benign.
+        let _ = touch(&lease);
+        let text = match std::fs::read_to_string(&lease) {
+            Ok(t) => t,
+            // stolen between our win and the read by an aggressive
+            // reclaimer (tiny TTL): treat as a lost race
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading lease {}", lease.display()))
+            }
+        };
+        let spec = TaskSpec::parse(&text)
+            .with_context(|| format!("parsing leased task {}", lease.display()))?;
+        ensure!(
+            spec.id == id,
+            "task file for `{}` claims id `{}`",
+            id,
+            spec.id
+        );
+        Ok(Some(LeasedTask { spec, reclaimed: false, lease_path: lease }))
+    }
+
+    /// Execute one leased task and publish its result (or its error) as
+    /// `<id>.result.json`, heartbeating the lease while it runs. A task
+    /// whose result already exists (a duplicate execution lost the race)
+    /// is skipped; the return value says whether the task actually ran
+    /// (`false` = skipped), so drain statistics stay honest.
+    pub fn run(&self, leased: &LeasedTask) -> Result<bool> {
+        if self.result_path(&leased.spec.id).exists() {
+            let _ = std::fs::remove_file(&leased.lease_path);
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        let stop = AtomicBool::new(false);
+        let outcome = std::thread::scope(|scope| {
+            // heartbeat: keep the lease mtime fresh so a long-running task
+            // is not mistaken for a crashed worker and re-leased mid-run
+            let hb = scope.spawn(|| {
+                let tick = (self.effective_ttl() / 4).max(Duration::from_millis(10));
+                let step = tick.min(Duration::from_millis(25));
+                let mut since = Duration::ZERO;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(step);
+                    since += step;
+                    if since >= tick {
+                        let _ = touch(&leased.lease_path);
+                        since = Duration::ZERO;
+                    }
+                }
+            });
+            let r = run_shard_task(&leased.spec.job, &leased.spec.plan, &leased.spec.swarm);
+            stop.store(true, Ordering::Relaxed);
+            let _ = hb.join();
+            r
+        });
+        self.complete(leased, t0.elapsed(), outcome)?;
+        Ok(true)
+    }
+
+    /// Publish a task outcome (success or failure) atomically and release
+    /// the lease. Failures are recorded in the result file — the merge
+    /// step turns them into the same "shard failed" job error a
+    /// single-process run reports — so a worker keeps draining after a
+    /// bad task instead of stalling the batch.
+    pub fn complete(
+        &self,
+        leased: &LeasedTask,
+        wall: Duration,
+        outcome: Result<TuneResult>,
+    ) -> Result<()> {
+        let spec = &leased.spec;
+        let mut fields = vec![
+            ("version", Json::Int(1)),
+            ("id", Json::Str(spec.id.clone())),
+            ("job_index", ju64(spec.job_index as u64)),
+            ("shard_index", ju64(spec.shard_index as u64)),
+            ("wall_nanos", jnanos(wall)),
+            ("plan", plan_to_json(&spec.plan)),
+        ];
+        match &outcome {
+            Ok(r) => fields.push(("result", result_to_json(r))),
+            Err(e) => fields.push(("error", Json::Str(format!("{:#}", e)))),
+        }
+        self.write_atomic(
+            &format!("{}{}", spec.id, RESULT_SUFFIX),
+            &obj(fields).render(),
+        )?;
+        let _ = std::fs::remove_file(&leased.lease_path);
+        Ok(())
+    }
+
+    /// Lease-and-execute until the batch is fully drained (every task has
+    /// a result, whoever produced it), across `workers` threads. With
+    /// `oneshot`, stop as soon as nothing is leasable instead of polling
+    /// for re-leasable work from crashed peers.
+    pub fn drain(&self, workers: u32, oneshot: bool) -> Result<DrainStats> {
+        let header = self.header()?;
+        // no explicit TTL override: adopt the planner's, so every worker
+        // in the fleet applies the same staleness clock
+        let me = TaskDir {
+            dir: self.dir.clone(),
+            ttl: Some(self.ttl.unwrap_or(Duration::from_millis(header.ttl_ms))),
+            poll: self.poll,
+        };
+        let ids = header.task_ids;
+        let reclaimed = AtomicU64::new(0);
+        let executed = AtomicU64::new(0);
+        let queue = JobQueue::new(workers);
+        queue.run_source(
+            || -> Result<Option<LeasedTask>> {
+                loop {
+                    // lease first: a successful claim already proves the
+                    // batch is incomplete, so the O(tasks) remaining()
+                    // stat pass only runs when nothing is leasable
+                    match me.lease()? {
+                        Some(l) => {
+                            if l.reclaimed {
+                                reclaimed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Ok(Some(l));
+                        }
+                        None => {
+                            if oneshot || me.remaining(&ids)? == 0 {
+                                return Ok(None);
+                            }
+                            std::thread::sleep(me.poll);
+                        }
+                    }
+                }
+            },
+            |leased| {
+                if me.run(&leased)? {
+                    executed.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            },
+        )?;
+        Ok(DrainStats {
+            executed: executed.load(Ordering::Relaxed),
+            reclaimed: reclaimed.load(Ordering::Relaxed),
+            complete: me.remaining(&ids)? == 0,
+        })
+    }
+
+    /// Phase 3 across processes: fold every task result through the same
+    /// merge/cache-write path as [`super::run_batch`], producing an
+    /// identical [`BatchReport`] and identical cache entries. Errors if
+    /// any task still has no result.
+    pub fn merge(&self, cache: &mut ResultCache) -> Result<BatchReport> {
+        let start = Instant::now();
+        let h = self.header()?;
+        let hits_before = cache.hits;
+        let misses_before = cache.misses;
+        let mut shard_results: Vec<(usize, ShardPlan, Duration, Result<TuneResult>)> =
+            Vec::with_capacity(h.task_ids.len());
+        let mut outstanding = 0usize;
+        // iterate in plan order: finish_batch's merge folds (shard log
+        // tags, first-trail tie-breaks) must match the in-process runner
+        for id in &h.task_ids {
+            let path = self.result_path(id);
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    outstanding += 1;
+                    continue;
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("reading {}", path.display()))
+                }
+            };
+            let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+            let ji = gusize(&v, "job_index")?;
+            ensure!(ji < h.jobs.len(), "{}: job index {} out of range", path.display(), ji);
+            let plan = plan_from_json(field(&v, "plan")?)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let wall = Duration::from_nanos(gu64(&v, "wall_nanos")?);
+            let outcome = match v.get("error") {
+                Some(e) => Err(anyhow!(
+                    "{}",
+                    e.as_str().unwrap_or("unrecorded worker error")
+                )),
+                None => Ok(result_from_json(field(&v, "result")?)
+                    .with_context(|| format!("parsing {}", path.display()))?),
+            };
+            shard_results.push((ji, plan, wall, outcome));
+        }
+        ensure!(
+            outstanding == 0,
+            "{} of {} task(s) in {} still have no result — keep `mcautotune worker {}` running, then merge again",
+            outstanding,
+            h.task_ids.len(),
+            self.dir.display(),
+            self.dir.display()
+        );
+        let mut outcomes: Vec<Option<JobOutcome>> = h.jobs.iter().map(|_| None).collect();
+        for (ji, result) in h.cached {
+            outcomes[ji] = Some(JobOutcome {
+                job: h.jobs[ji].clone(),
+                result,
+                cached: true,
+                shards: 0,
+                wall: Duration::ZERO,
+                plan: Vec::new(),
+            });
+        }
+        let outcomes = finish_batch(
+            &h.jobs,
+            &h.descs,
+            outcomes,
+            &h.shard_counts,
+            &h.duplicates,
+            shard_results,
+            cache,
+        )?;
+        Ok(BatchReport {
+            outcomes,
+            cache_hits: h.plan_hits + (cache.hits - hits_before),
+            cache_misses: h.plan_misses + (cache.misses - misses_before),
+            stolen_tasks: 0,
+            total_elapsed: start.elapsed(),
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+struct Scan {
+    available: Vec<String>,
+    leases: Vec<(String, SystemTime)>,
+    results: HashSet<String>,
+}
+
+fn touch(path: &Path) -> std::io::Result<()> {
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)?
+        .set_modified(SystemTime::now())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::{cached_result, CachedTune};
+    use std::sync::atomic::AtomicU32;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "mcat_taskdir_{}_{}_{}",
+            tag,
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_spec(id: &str, job_index: usize) -> TaskSpec {
+        let mut job = TuningJob::new(ModelKind::Minimum, 16);
+        job.name = "π \"quoted\"\nname".into(); // stress JSON escaping
+        job.source = Some("int x;\nactive proctype main() { x = 1 }".into());
+        job.engine = JobEngine::Promela;
+        let check = CheckOptions {
+            store: StoreKind::Bitstate { log2_bits: 21, hashes: 5 },
+            max_states: u64::MAX,
+            time_budget: Some(Duration::from_millis(1234)),
+            order: Order::Random(0xDEAD_BEEF_DEAD_BEEF),
+            expected_states: 77,
+            frontier: Frontier::Deterministic,
+            ..CheckOptions::default()
+        };
+        TaskSpec {
+            id: id.to_string(),
+            job_index,
+            shard_index: 1,
+            desc: "engine=promela pml=0123456789abcdef method=exhaustive".into(),
+            job,
+            plan: ShardPlan {
+                shard: TuningShard { wg_min: 2, wg_max: u32::MAX, ts_min: 0, ts_max: 8 },
+                weight: 42,
+                t_ini: 99,
+                check,
+            },
+            swarm: SwarmConfig { seed: u64::MAX - 3, ..SwarmConfig::default() },
+        }
+    }
+
+    fn fake_result() -> TuneResult {
+        cached_result(Method::Exhaustive, CachedTune { wg: 4, ts: 2, t_min: 44, steps: 9 }, "d")
+    }
+
+    #[test]
+    fn task_spec_roundtrips_through_json() {
+        let spec = sample_spec("j000-s001", 0);
+        let text = spec.to_json().render();
+        let back = TaskSpec::parse(&text).unwrap();
+        assert_eq!(spec, back);
+        // u64::MAX budgets survive (encoded as strings beyond i64)
+        assert_eq!(back.plan.check.max_states, u64::MAX);
+        assert!(TaskSpec::parse("{\"version\":2}").is_err());
+        assert!(TaskSpec::parse("not json").is_err());
+    }
+
+    #[test]
+    fn lease_is_exclusive_and_complete_publishes_result() {
+        let dir = temp_dir("lease");
+        let td = TaskDir::new(&dir);
+        td.write_task(&sample_spec("a", 0)).unwrap();
+        td.write_task(&sample_spec("b", 1)).unwrap();
+
+        let first = td.lease().unwrap().expect("a task is available");
+        let second = td.lease().unwrap().expect("the other task is available");
+        assert_ne!(first.spec.id, second.spec.id);
+        assert!(td.lease().unwrap().is_none(), "both tasks are leased (and fresh)");
+
+        td.complete(&first, Duration::from_millis(5), Ok(fake_result())).unwrap();
+        assert!(dir.join(format!("{}{}", first.spec.id, RESULT_SUFFIX)).exists());
+        assert!(
+            !dir.join(format!("{}{}", first.spec.id, LEASE_SUFFIX)).exists(),
+            "completion releases the lease"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_leases_are_reclaimed() {
+        let dir = temp_dir("reclaim");
+        let td = TaskDir::new(&dir);
+        td.write_task(&sample_spec("a", 0)).unwrap();
+        let abandoned = td.lease().unwrap().expect("leasable");
+        assert!(!abandoned.reclaimed);
+        // the holder "crashes": no heartbeat, no completion. With ttl = 0
+        // the lease is immediately stale for a second worker.
+        let thief = TaskDir::new(&dir).with_ttl(Duration::ZERO);
+        let stolen = thief.lease().unwrap().expect("stale lease must be re-leasable");
+        assert_eq!(stolen.spec.id, "a");
+        assert!(stolen.reclaimed, "the claim came from reclaiming an expired lease");
+        // with a fresh mtime and a sane ttl it is held again
+        assert!(td.lease().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_skips_tasks_whose_result_already_exists() {
+        let dir = temp_dir("dupexec");
+        let td = TaskDir::new(&dir);
+        // an invalid job (non-pow2 size): executing it would publish an
+        // error result, so an intact success result proves run() skipped
+        let mut spec = sample_spec("a", 0);
+        spec.job.engine = JobEngine::Native;
+        spec.job.source = None;
+        spec.job.size = 12;
+        td.write_task(&spec).unwrap();
+        let leased = td.lease().unwrap().unwrap();
+        td.complete(&leased, Duration::ZERO, Ok(fake_result())).unwrap();
+        // simulate the duplicate executor racing in after the result
+        let dup = LeasedTask {
+            spec: leased.spec.clone(),
+            reclaimed: true,
+            lease_path: td.lease_path("a"),
+        };
+        assert!(!td.run(&dup).unwrap(), "a skip must not report as executed");
+        let text = std::fs::read_to_string(td.result_path("a")).unwrap();
+        assert!(text.contains("\"result\""), "published result survived: {}", text);
+        assert!(!text.contains("\"error\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_refuses_outstanding_tasks() {
+        let dir = temp_dir("outstanding");
+        let td = TaskDir::new(&dir);
+        let jobs = vec![TuningJob::new(ModelKind::Minimum, 16)];
+        let mut cache = ResultCache::in_memory();
+        let summary = td.plan(&jobs, &BatchOptions::default(), &mut cache).unwrap();
+        assert_eq!(summary.jobs, 1);
+        assert!(summary.tasks >= 1);
+        let (open, total) = td.outstanding().unwrap();
+        assert_eq!((open, total), (summary.tasks, summary.tasks));
+        let err = td.merge(&mut cache).unwrap_err();
+        assert!(format!("{:#}", err).contains("still have no result"));
+        // planning twice into the same dir is refused
+        assert!(td.plan(&jobs, &BatchOptions::default(), &mut cache).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

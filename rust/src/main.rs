@@ -11,7 +11,7 @@
 
 use mcautotune::checker::{check, CheckOptions, Frontier, StoreKind};
 use mcautotune::coordinator::{
-    run_batch, BatchOptions, JobEngine, ModelKind, ResultCache, TuningJob,
+    run_batch, BatchOptions, JobEngine, ModelKind, ResultCache, TaskDir, TuningJob,
 };
 use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::platform::{
@@ -45,6 +45,11 @@ commands:
   tune        find the optimal (WG, TS) via the counterexample method
   batch       run a spec file of tuning jobs: sharded parameter-space search
               across a work-stealing queue, with a persistent result cache
+              (--task-dir serializes the plan for cross-process draining)
+  worker      lease and execute tasks from a --task-dir batch plan; any
+              number of worker processes/machines can drain one batch
+  merge       fold a drained task dir's partial results into the batch
+              report + result cache (identical to a single-process run)
   simulate    random simulation of a model (reports terminal time, T_ini)
   verify      verify a safety-LTL property, print the first counterexample
   table1      regenerate the paper's Table 1 (abstract-model experiments)
@@ -65,6 +70,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "tune" => cmd_tune(rest),
         "batch" => cmd_batch(rest),
+        "worker" => cmd_worker(rest),
+        "merge" => cmd_merge(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "table1" => cmd_table1(rest),
@@ -272,6 +279,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         // joins the cache key for Method::Swarm (see TuningJob::cache_desc_with)
         let desc = job.cache_desc_with(&sw);
         let mut cache = ResultCache::open(Path::new(cache_path))?;
+        warn_quarantined(&cache);
         let (r, hit) = with_model!(model, m, {
             tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache)
         })?;
@@ -321,6 +329,16 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         .opt("frontier", "async | det checker frontier (see `verify --help`)")
         .opt("cache", "result-cache JSON path (default mcat_cache.json; `none` disables)")
         .opt("budget-ms", "per-swarm-round time budget for swarm jobs (default 10000)")
+        .opt(
+            "task-dir",
+            "serialize every (job, shard) task into <dir> as durable JSON manifests; \
+             `mcautotune worker <dir>` processes drain them, `mcautotune merge <dir>` folds",
+        )
+        .opt(
+            "ttl-ms",
+            "with --task-dir: lease TTL before a crashed worker's task is re-leased (default 30000)",
+        )
+        .flag("plan-only", "with --task-dir: write the plan and exit without draining or merging")
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
@@ -372,12 +390,136 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     } else {
         ResultCache::open(Path::new(&cache_arg))?
     };
+    warn_quarantined(&cache);
+
+    // Worker mode: serialize the plan instead of draining it in-process.
+    if let Some(dir) = a.get("task-dir") {
+        let start = std::time::Instant::now();
+        let ttl = Duration::from_millis(a.get_parsed_or("ttl-ms", 30_000u64)?);
+        let td = TaskDir::new(dir).with_ttl(ttl);
+        let summary = td.plan(&jobs, &opts, &mut cache)?;
+        println!(
+            "planned {} task(s) for {} job(s) into {} ({} job(s) served from cache at plan time)",
+            summary.tasks, summary.jobs, dir, summary.cached
+        );
+        if a.flag("plan-only") {
+            println!("drain:  mcautotune worker {}   (any number of processes/machines)", dir);
+            println!("merge:  mcautotune merge {}", dir);
+            return Ok(());
+        }
+        // participate in the drain, then fold once all tasks complete
+        let stats = td.drain(opts.workers, false)?;
+        println!(
+            "drained {} task(s) in this process ({} reclaimed from expired leases)",
+            stats.executed, stats.reclaimed
+        );
+        let mut report = td.merge(&mut cache)?;
+        // merge() only times the fold; this invocation also planned and
+        // drained, and the summary line should say so
+        report.total_elapsed = start.elapsed();
+        println!(
+            "batch: {} job(s), {} worker(s), cache {} (task dir {})",
+            jobs.len(),
+            opts.workers,
+            if cache_arg == "none" { "disabled".to_string() } else { cache_arg },
+            dir
+        );
+        print!("{}", report.render());
+        return Ok(());
+    }
+
     let report = run_batch(&jobs, &opts, &mut cache)?;
     println!(
         "batch: {} job(s), {} worker(s), cache {}",
         jobs.len(),
         opts.workers,
         if cache_arg == "none" { "disabled".to_string() } else { cache_arg }
+    );
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn warn_quarantined(cache: &ResultCache) {
+    if let Some(q) = cache.quarantined() {
+        eprintln!(
+            "warning: result cache was corrupt; original quarantined at {} and the cache rebuilt",
+            q.display()
+        );
+    }
+}
+
+fn cmd_worker(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("ttl-ms", "lease TTL before an expired lease is re-leased (default: the plan's)")
+        .opt("poll-ms", "sleep between scans while waiting for leasable work (default 100)")
+        .opt("workers", "concurrent tasks in this worker process (default 1)")
+        .flag("oneshot", "exit when nothing is leasable instead of waiting for the batch to finish")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune worker <task-dir>"));
+        println!(
+            "\nLeases tasks planned by `mcautotune batch <spec> --task-dir <dir>` with\n\
+             atomic rename-based lock files, runs them, and publishes partial results\n\
+             any process can merge. Crash-safe: a lease whose mtime exceeds the TTL is\n\
+             re-leased by the next worker. By default the worker waits until every task\n\
+             in the batch has a result (so crashed peers' work is picked up), then exits."
+        );
+        return Ok(());
+    }
+    let Some(dir) = a.positionals().first() else {
+        bail!("usage: mcautotune worker <task-dir> [options] (see `mcautotune worker --help`)");
+    };
+    let mut td =
+        TaskDir::new(dir).with_poll(Duration::from_millis(a.get_parsed_or("poll-ms", 100u64)?));
+    if let Some(ms) = a.get_parsed::<u64>("ttl-ms")? {
+        td = td.with_ttl(Duration::from_millis(ms));
+    }
+    let workers: u32 = a.get_parsed_or("workers", 1)?;
+    let stats = td.drain(workers, a.flag("oneshot"))?;
+    println!(
+        "worker {}: drained {} task(s), {} reclaimed from expired leases{}",
+        std::process::id(),
+        stats.executed,
+        stats.reclaimed,
+        if stats.complete { " — batch complete" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_merge(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .opt("cache", "result-cache JSON path (default: the planning process's; `none` disables)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") {
+        println!("{}", spec.usage("mcautotune merge <task-dir>"));
+        println!(
+            "\nFolds a fully drained task dir's partial results into the same batch\n\
+             report and result-cache entries a single-process `mcautotune batch` of\n\
+             the spec produces. Errors (listing the count) while tasks are outstanding."
+        );
+        return Ok(());
+    }
+    let Some(dir) = a.positionals().first() else {
+        bail!("usage: mcautotune merge <task-dir> [options] (see `mcautotune merge --help`)");
+    };
+    let td = TaskDir::new(dir);
+    let cache_arg = match a.get("cache") {
+        Some(c) => Some(c.to_string()),
+        None => td.planned_cache_path()?,
+    };
+    let mut cache = match cache_arg.as_deref() {
+        None | Some("none") => ResultCache::in_memory(),
+        Some(path) => ResultCache::open(Path::new(path))?,
+    };
+    warn_quarantined(&cache);
+    let report = td.merge(&mut cache)?;
+    println!(
+        "merge: {} ({} job(s), cache {})",
+        dir,
+        report.outcomes.len(),
+        cache_arg.unwrap_or_else(|| "disabled".into())
     );
     print!("{}", report.render());
     Ok(())

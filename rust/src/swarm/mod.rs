@@ -13,7 +13,7 @@ use crate::model::{SafetyLtl, TransitionSystem, Violation};
 use crate::util::error::Result;
 use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SwarmConfig {
     pub workers: u32,
     pub seed: u64,

@@ -12,6 +12,27 @@
 use crate::util::error::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Atomically publish `text` at `path`: write a unique sibling temp file
+/// (pid + per-process sequence, so concurrent writers — even within one
+/// process — never share a temp), then rename over the target. Readers
+/// can never observe a partial file; concurrent publishes are
+/// last-writer-wins. Shared by the coordinator's task protocol and the
+/// persistent result cache.
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = PathBuf::from(format!(
+        "{}.tmp.{}.{}",
+        path.display(),
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactEntry {
     pub name: String,
@@ -118,6 +139,13 @@ impl Json {
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -424,12 +452,25 @@ mod json_tests {
         assert!(v.get("missing").is_none());
         assert!(Json::Int(1).get("k").is_none());
         assert!(Json::Int(1).as_str().is_none());
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert!(Json::Int(1).as_bool().is_none());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn write_atomic_publishes_and_replaces() {
+        let path = std::env::temp_dir()
+            .join(format!("mcat_atomic_{}.txt", std::process::id()));
+        write_atomic(&path, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello");
+        write_atomic(&path, "world").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "world");
+        std::fs::remove_file(&path).ok();
+    }
 
     const SAMPLE: &str = "name\tfile\tkind\tunits\twg\tts\tsize\tdtype\tvmem_bytes\n\
         min_small\tmin_small.hlo.txt\tmin_device\t4\t4\t4\t64\ti32\t84\n\

@@ -1,0 +1,246 @@
+//! Differential conformance: cross-process batch draining (worker mode)
+//! must be indistinguishable from the single-process engine.
+//!
+//! The acceptance property: an N-worker multi-process drain of a batch —
+//! spawned as real `mcautotune` processes on the test binary's own
+//! executable — yields best-configs, verdicts and cache entries identical
+//! to a single-process `run_batch` on the same specs, including after a
+//! simulated worker crash mid-lease (the stale lease is re-leased and the
+//! final report is unchanged).
+
+use mcautotune::coordinator::{
+    run_batch, BatchOptions, BatchReport, ResultCache, TaskDir, TuningJob,
+};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Duration;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mcautotune");
+
+fn temp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "mcat_dist_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// The differential workload: multiple engines, an adaptive-shard job, a
+/// within-batch duplicate, and a Promela job whose source must survive
+/// the trip through the task manifests.
+const SPEC: &str = "\
+job minimum size=64 np=4 gmt=3 shards=4
+job minimum size=32 np=4 gmt=3
+job minimum size=32 np=4 gmt=3 name=dup-of-32
+job abstract size=16 gmt=10 shards=2
+job minimum size=16 engine=promela shards=2 name=pml16
+";
+
+/// A smaller workload for the crash-recovery schedule.
+const CRASH_SPEC: &str = "\
+job minimum size=32 np=4 gmt=3 shards=3
+job abstract size=16 gmt=10
+";
+
+fn reference_report(spec: &str, cache_path: &Path) -> BatchReport {
+    let jobs = TuningJob::parse_spec(spec).unwrap();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let mut cache = ResultCache::open(cache_path).unwrap();
+    run_batch(&jobs, &opts, &mut cache).unwrap()
+}
+
+/// Everything the differential suite pins. Wall-clock-dependent fields
+/// (elapsed, first-trail discovery latency, queue steal counts) are
+/// legitimately nondeterministic and excluded.
+fn assert_reports_identical(single: &BatchReport, multi: &BatchReport) {
+    assert_eq!(single.outcomes.len(), multi.outcomes.len());
+    for (s, m) in single.outcomes.iter().zip(&multi.outcomes) {
+        assert_eq!(s.job, m.job, "job specs must round-trip");
+        assert_eq!(s.cached, m.cached, "job `{}`: cached flag", s.job.name);
+        assert_eq!(s.shards, m.shards, "job `{}`: shard count", s.job.name);
+        assert_eq!(s.result.method, m.result.method, "job `{}`", s.job.name);
+        assert_eq!(s.result.t_min, m.result.t_min, "job `{}`: verdict (t_min)", s.job.name);
+        let (so, mo) = (&s.result.optimal, &m.result.optimal);
+        assert_eq!(
+            (so.wg, so.ts, so.time, so.steps),
+            (mo.wg, mo.ts, mo.time, mo.steps),
+            "job `{}`: best config",
+            s.job.name
+        );
+        assert_eq!(
+            s.result.states_explored, m.result.states_explored,
+            "job `{}`: exploration is deterministic, so states must agree",
+            s.job.name
+        );
+        assert_eq!(s.plan, m.plan, "job `{}`: shard budget plans", s.job.name);
+        assert_eq!(
+            s.result.log.len(),
+            m.result.log.len(),
+            "job `{}`: merged shard logs",
+            s.job.name
+        );
+    }
+    assert_eq!(single.cache_hits, multi.cache_hits);
+    assert_eq!(single.cache_misses, multi.cache_misses);
+}
+
+fn assert_cache_files_identical(a: &Path, b: &Path) {
+    let a_text = std::fs::read_to_string(a).unwrap();
+    let b_text = std::fs::read_to_string(b).unwrap();
+    assert_eq!(a_text, b_text, "cache files must be byte-identical");
+}
+
+fn run_bin(args: &[&str]) -> String {
+    let out = Command::new(BIN).args(args).output().expect("spawn mcautotune");
+    assert!(
+        out.status.success(),
+        "mcautotune {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn two_worker_processes_match_single_process_run_batch() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, SPEC).unwrap();
+    let cache_single = temp("cache_single");
+    let cache_multi = temp("cache_multi");
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+
+    let single = reference_report(SPEC, &cache_single);
+
+    // plan → two concurrent worker processes → merge
+    let plan_out = run_bin(&[
+        "batch",
+        spec_path.to_str().unwrap(),
+        "--task-dir",
+        dir_s,
+        "--plan-only",
+        "--cache",
+        cache_multi.to_str().unwrap(),
+        "--workers",
+        "2",
+    ]);
+    assert!(plan_out.contains("planned"), "unexpected plan output: {}", plan_out);
+    let workers: Vec<_> = (0..2)
+        .map(|_| Command::new(BIN).args(["worker", dir_s]).spawn().expect("spawn worker"))
+        .collect();
+    for mut w in workers {
+        let status = w.wait().expect("worker wait");
+        assert!(status.success(), "worker process failed");
+    }
+    let merge_out = run_bin(&["merge", dir_s]);
+    assert!(merge_out.contains("pml16"), "merged report missing jobs: {}", merge_out);
+
+    // re-merge through the library for a structural comparison (the merge
+    // is idempotent: same results, same cache entries)
+    let mut cache = ResultCache::open(&cache_multi).unwrap();
+    let multi = TaskDir::new(&dir).merge(&mut cache).unwrap();
+    assert_reports_identical(&single, &multi);
+    assert_cache_files_identical(&cache_single, &cache_multi);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache_single).ok();
+    std::fs::remove_file(&cache_multi).ok();
+}
+
+#[test]
+fn in_process_drain_matches_run_batch() {
+    // the protocol itself (no subprocesses): plan → 2-thread drain → merge
+    let cache_single = temp("cache_single");
+    let cache_multi = temp("cache_multi");
+    let dir = temp("tasks");
+
+    let single = reference_report(CRASH_SPEC, &cache_single);
+
+    let jobs = TuningJob::parse_spec(CRASH_SPEC).unwrap();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let td = TaskDir::new(&dir);
+    let mut cache = ResultCache::open(&cache_multi).unwrap();
+    let summary = td.plan(&jobs, &opts, &mut cache).unwrap();
+    assert!(summary.tasks >= 4, "3 pinned shards + at least one more: {:?}", summary);
+    let stats = td.drain(2, false).unwrap();
+    assert!(stats.complete);
+    assert_eq!(stats.executed, summary.tasks as u64, "this drain ran every task");
+    let multi = td.merge(&mut cache).unwrap();
+
+    assert_reports_identical(&single, &multi);
+    assert_cache_files_identical(&cache_single, &cache_multi);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&cache_single).ok();
+    std::fs::remove_file(&cache_multi).ok();
+}
+
+#[test]
+fn crash_mid_lease_is_re_leased_and_report_stays_identical() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, CRASH_SPEC).unwrap();
+    let cache_single = temp("cache_single");
+    let cache_multi = temp("cache_multi");
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+
+    let single = reference_report(CRASH_SPEC, &cache_single);
+
+    run_bin(&[
+        "batch",
+        spec_path.to_str().unwrap(),
+        "--task-dir",
+        dir_s,
+        "--plan-only",
+        "--cache",
+        cache_multi.to_str().unwrap(),
+        "--workers",
+        "2",
+    ]);
+
+    // a worker leases a task and "crashes": no heartbeat, no result. The
+    // lease file stays behind with a fresh mtime.
+    let crashed = TaskDir::new(&dir);
+    let abandoned = crashed.lease().unwrap().expect("a task to abandon");
+    let abandoned_id = abandoned.spec.id.clone();
+    drop(abandoned);
+
+    // a real process is killed mid-drain too (whatever it was doing)
+    let mut victim = Command::new(BIN)
+        .args(["worker", dir_s, "--ttl-ms", "400", "--poll-ms", "50"])
+        .spawn()
+        .expect("spawn victim worker");
+    std::thread::sleep(Duration::from_millis(200));
+    let _ = victim.kill();
+    let _ = victim.wait();
+
+    // recovery: a fresh worker with a short TTL must re-lease the stale
+    // leases (the abandoned one is not stale until 400ms after its claim,
+    // and no other process is alive to finish it) and drain to completion
+    let out = run_bin(&["worker", dir_s, "--ttl-ms", "400", "--poll-ms", "50"]);
+    assert!(out.contains("batch complete"), "recovery worker did not finish: {}", out);
+    assert!(
+        !out.contains(" 0 reclaimed"),
+        "recovery must have re-leased at least the abandoned task: {}",
+        out
+    );
+    assert!(
+        dir.join(format!("{}.result.json", abandoned_id)).exists(),
+        "the abandoned task must have been re-leased and completed"
+    );
+
+    let mut cache = ResultCache::open(&cache_multi).unwrap();
+    let multi = TaskDir::new(&dir).merge(&mut cache).unwrap();
+    assert_reports_identical(&single, &multi);
+    assert_cache_files_identical(&cache_single, &cache_multi);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache_single).ok();
+    std::fs::remove_file(&cache_multi).ok();
+}

@@ -330,6 +330,81 @@ fn adaptive_shard_count_kicks_in_when_unset() {
 }
 
 #[test]
+fn batch_survives_a_corrupt_cache_file() {
+    // cache lifecycle edge: a truncated/corrupt cache JSON (e.g. a kill
+    // mid-write outside the atomic-rename path) must not abort the batch
+    // — it is quarantined as <file>.corrupt and rebuilt
+    let path = temp_path("corrupt_batch");
+    std::fs::write(&path, "{\"version\":1,\"entries\":[{\"de").unwrap();
+    let jobs = vec![TuningJob::new(ModelKind::Minimum, 16)];
+    let mut cache = ResultCache::open(&path).unwrap();
+    let quarantine = std::path::PathBuf::from(format!("{}.corrupt", path.display()));
+    assert_eq!(cache.quarantined(), Some(quarantine.as_path()));
+    let report =
+        run_batch(&jobs, &BatchOptions { workers: 2, ..BatchOptions::default() }, &mut cache)
+            .unwrap();
+    assert!(!report.outcomes[0].cached);
+    assert_eq!(report.outcomes[0].result.t_min, jobs[0].optimum_time().unwrap() as i64);
+    // the rebuilt cache file is valid again and serves the job
+    let mut reopened = ResultCache::open(&path).unwrap();
+    assert!(reopened.quarantined().is_none());
+    let report2 = run_batch(&jobs, &BatchOptions::default(), &mut reopened).unwrap();
+    assert!(report2.outcomes[0].cached);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&quarantine).ok();
+}
+
+#[test]
+fn external_pml_source_gets_proportional_shard_budgets() {
+    // satellite acceptance: a skewed external .pml model (the Minimum
+    // template read as an external source) must produce non-uniform
+    // simulation-swept tuning costs, and plan_shards must scale the
+    // budgets proportionally to the resulting sub-lattice weights
+    use mcautotune::coordinator::{plan_shards, shard_weight};
+    let mut job = TuningJob::new(ModelKind::Minimum, 16);
+    job.engine = JobEngine::Promela;
+    job.source = Some(templates::minimum_pml(16, 4, 3));
+    job.shards = 3;
+    let costs = job.tuning_costs().unwrap();
+    assert!(
+        costs.windows(2).any(|w| w[0].1 != w[1].1),
+        "skewed model must not weigh uniform: {:?}",
+        costs
+    );
+    let tunings: Vec<_> = costs.iter().map(|&(t, _)| t).collect();
+    let mut base = CheckOptions::default();
+    base.max_states = 1_000_000;
+    base.time_budget = Some(std::time::Duration::from_secs(30));
+    let plans = plan_shards(partition(&tunings, 3), &costs, &base);
+    assert!(plans.len() >= 2);
+    for p in &plans {
+        assert_eq!(p.weight, shard_weight(&costs, &p.shard));
+        assert_eq!(p.check.expected_states, p.weight, "presize follows the estimate");
+    }
+    let mut sorted = plans.clone();
+    sorted.sort_by_key(|p| p.weight);
+    assert!(
+        sorted.first().unwrap().weight < sorted.last().unwrap().weight,
+        "shard weights must differ on a skewed model"
+    );
+    for w in sorted.windows(2) {
+        assert!(
+            w[1].check.max_states >= w[0].check.max_states,
+            "heavier sub-lattice must get a larger (or equal) state budget"
+        );
+        assert!(w[1].check.time_budget.unwrap() >= w[0].check.time_budget.unwrap());
+    }
+    // end to end: the batch planner accepts the same job and its report
+    // carries the proportional plan
+    let mut cache = ResultCache::in_memory();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let report = run_batch(std::slice::from_ref(&job), &opts, &mut cache).unwrap();
+    let outcome_plan = &report.outcomes[0].plan;
+    assert_eq!(report.outcomes[0].shards as usize, outcome_plan.len());
+    assert!(outcome_plan.iter().any(|p| p.weight != outcome_plan[0].weight));
+}
+
+#[test]
 fn sharded_swarm_job_reaches_the_optimum() {
     // swarm method composes with sharding (partitioned-space workers on
     // top of diversified-seed workers)

@@ -214,3 +214,164 @@ fn prop_ltl_parser_roundtrips_random_formulas() {
         },
     );
 }
+
+#[test]
+fn prop_task_manifests_roundtrip() {
+    // worker mode: every TaskSpec serialized to a JSON manifest and
+    // re-parsed must be equal — across engines, inlined sources with
+    // JSON-hostile bytes, store kinds, beyond-i64 budgets and unset
+    // time budgets
+    use mcautotune::checker::Frontier;
+    use mcautotune::coordinator::{
+        JobEngine, ModelKind, ShardPlan, TaskSpec, TuningJob, TuningShard,
+    };
+    use mcautotune::swarm::SwarmConfig;
+    use mcautotune::tuner::Method;
+    use std::time::Duration;
+
+    fn gen_spec(r: &mut Xoshiro256) -> TaskSpec {
+        let mut job = TuningJob::new(
+            if r.chance(1, 2) { ModelKind::Minimum } else { ModelKind::Abstract },
+            pow2(r, 2, 8),
+        );
+        job.name = match r.below(3) {
+            0 => format!("job-{}", r.below(100)),
+            1 => format!("π \"{}\"\n\ttricky\\name", r.below(100)),
+            _ => String::new(),
+        };
+        job.engine = if r.chance(1, 2) { JobEngine::Promela } else { JobEngine::Native };
+        job.source = match r.below(3) {
+            0 => None,
+            1 => Some("int x;\nactive proctype main() { x = 1 }".into()),
+            _ => Some(format!("/* π \"escaped\" */\nint y = {};", r.below(1000))),
+        };
+        job.plat.nd = r.range_i64(1, 4) as u32;
+        job.plat.gmt = r.range_i64(1, 20) as u32;
+        job.method = if r.chance(1, 2) { Method::Exhaustive } else { Method::Swarm };
+        job.granularity =
+            if r.chance(1, 2) { Granularity::Tick } else { Granularity::Phase };
+        job.shards = r.below(9) as u32;
+        let store = match r.below(3) {
+            0 => StoreKind::Full,
+            1 => StoreKind::HashCompact,
+            _ => StoreKind::Bitstate {
+                log2_bits: r.range_i64(10, 30) as u8,
+                hashes: r.range_i64(1, 7) as u8,
+            },
+        };
+        let check = CheckOptions {
+            store,
+            max_depth: r.below(1 << 30) as usize,
+            max_states: if r.chance(1, 3) { u64::MAX } else { r.next_u64() },
+            memory_budget: r.next_u64() >> (r.below(32) as u32),
+            time_budget: if r.chance(1, 2) {
+                None
+            } else {
+                Some(Duration::from_nanos(r.next_u64() >> 16))
+            },
+            collect_all: r.chance(1, 2),
+            max_errors: r.below(1 << 20) as usize,
+            order: if r.chance(1, 2) {
+                mcautotune::checker::Order::InOrder
+            } else {
+                mcautotune::checker::Order::Random(r.next_u64())
+            },
+            threads: r.below(64) as u32,
+            expected_states: r.next_u64(),
+            frontier: if r.chance(1, 2) { Frontier::Async } else { Frontier::Deterministic },
+        };
+        TaskSpec {
+            id: format!("j{:03}-s{:03}", r.below(40), r.below(16)),
+            job_index: r.below(40) as usize,
+            shard_index: r.below(16) as usize,
+            desc: format!("model=minimum size={} \"quoted\" π", r.below(1 << 20)),
+            job,
+            plan: ShardPlan {
+                shard: TuningShard {
+                    wg_min: r.below(1 << 10) as u32,
+                    wg_max: if r.chance(1, 2) { u32::MAX } else { r.below(1 << 10) as u32 },
+                    ts_min: r.below(1 << 10) as u32,
+                    ts_max: if r.chance(1, 2) { u32::MAX } else { r.below(1 << 10) as u32 },
+                },
+                weight: r.next_u64(),
+                t_ini: r.range_i64(1, i64::MAX / 2),
+                check,
+            },
+            swarm: SwarmConfig {
+                workers: r.range_i64(1, 32) as u32,
+                seed: r.next_u64(),
+                log2_bits: r.range_i64(10, 30) as u8,
+                hashes: r.range_i64(1, 7) as u8,
+                max_depth: r.below(1 << 30) as usize,
+                time_budget: Duration::from_millis(r.below(1 << 20)),
+                max_errors_per_worker: r.below(1 << 10) as usize,
+            },
+        }
+    }
+
+    forall(
+        "task-manifest-roundtrip",
+        Config { cases: 64, ..Default::default() },
+        gen_spec,
+        |spec| {
+            let text = spec.to_json().render();
+            let back = TaskSpec::parse(&text).map_err(|e| format!("{:#}", e))?;
+            prop_assert_eq!(*spec, back);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lease_atomicity_exactly_one_winner_per_task_under_racing_threads() {
+    // 8 threads race lease() on one directory: every task must be won by
+    // exactly one thread (the atomic task->lease rename is the lock)
+    use mcautotune::coordinator::{
+        ModelKind, ShardPlan, TaskDir, TaskSpec, TuningJob, TuningShard,
+    };
+    use mcautotune::swarm::SwarmConfig;
+    use std::sync::Mutex;
+
+    let dir = std::env::temp_dir()
+        .join(format!("mcat_lease_race_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let td = TaskDir::new(&dir); // default TTL: nothing goes stale mid-test
+    let n_tasks = 24usize;
+    for i in 0..n_tasks {
+        td.write_task(&TaskSpec {
+            id: format!("t{:03}", i),
+            job_index: i,
+            shard_index: 0,
+            desc: format!("race task {}", i),
+            job: TuningJob::new(ModelKind::Minimum, 16),
+            plan: ShardPlan {
+                shard: TuningShard::full(),
+                weight: 1,
+                t_ini: 1,
+                check: CheckOptions::default(),
+            },
+            swarm: SwarmConfig::default(),
+        })
+        .unwrap();
+    }
+
+    let winners: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                let mine = TaskDir::new(&dir);
+                let mut won = Vec::new();
+                while let Some(leased) = mine.lease().unwrap() {
+                    won.push(leased.spec.id.clone());
+                }
+                winners.lock().unwrap().extend(won);
+            });
+        }
+    });
+
+    let mut won = winners.into_inner().unwrap();
+    won.sort();
+    let expected: Vec<String> = (0..n_tasks).map(|i| format!("t{:03}", i)).collect();
+    assert_eq!(won, expected, "every task leased exactly once across 8 racers");
+    std::fs::remove_dir_all(&dir).ok();
+}
