@@ -9,6 +9,7 @@
 use mcautotune::checker::{check_parallel, check_sequential, CheckOptions, StoreKind, VisitedStore};
 use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
 use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
+use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
 use mcautotune::util::bench::{black_box, Bencher};
 
 fn env_u32(name: &str, default: u32) -> u32 {
@@ -26,6 +27,22 @@ fn collect_states(m: &AbstractModel, limit: usize) -> Vec<AbsState> {
         let s = out[i];
         m.successors(&s, &mut succs);
         out.extend(succs.drain(..).take(limit - out.len()));
+        i += 1;
+    }
+    out
+}
+
+/// Generic breadth-first corpus (no dedup — both Promela engines expand
+/// in the identical order, so corpora correspond index-for-index).
+fn bfs_corpus<M: TransitionSystem>(m: &M, limit: usize) -> Vec<M::State> {
+    let mut out = m.initial_states();
+    let mut i = 0;
+    let mut succs = Vec::new();
+    while i < out.len() && out.len() < limit {
+        let s = out[i].clone();
+        m.successors(&s, &mut succs);
+        let room = limit - out.len();
+        out.extend(succs.drain(..).take(room));
         i += 1;
     }
     out
@@ -76,6 +93,40 @@ fn main() {
         holds
     });
 
+    // --- Promela successor generation: interpreter vs bytecode VM -------
+    // (the engine=promela batch hot path; promela-succ/vm over interp is
+    // the VM speedup tracked across PRs)
+    let pml_size = size.clamp(4, 16); // promela state spaces explode past 16
+    let pml_src = templates::minimum_pml(pml_size, 4, 3);
+    let pml_interp = PromelaSystem::from_source(&pml_src).unwrap();
+    let pml_vm = PromelaVm::from_source(&pml_src).unwrap();
+    let interp_corpus = bfs_corpus(&pml_interp, 4_000);
+    let vm_corpus = bfs_corpus(&pml_vm, 4_000);
+    assert_eq!(
+        interp_corpus.len(),
+        vm_corpus.len(),
+        "the two engines must expand identical corpora"
+    );
+    println!("promela: minimum size={} — {} corpus states", pml_size, interp_corpus.len());
+    b.bench_elems("promela-succ/interp", interp_corpus.len() as u64, || {
+        let mut buf = Vec::new();
+        let mut n = 0u64;
+        for s in &interp_corpus {
+            pml_interp.successors(s, &mut buf);
+            n += buf.len() as u64;
+        }
+        n
+    });
+    b.bench_elems("promela-succ/vm", vm_corpus.len() as u64, || {
+        let mut buf = Vec::new();
+        let mut n = 0u64;
+        for s in &vm_corpus {
+            pml_vm.successors(s, &mut buf);
+            n += buf.len() as u64;
+        }
+        n
+    });
+
     // --- arena Full-store inserts (fresh + duplicate probes) ------------
     let items: Vec<[u8; 24]> = (0..100_000u64)
         .map(|i| {
@@ -108,11 +159,16 @@ fn main() {
         (Some(s), Some(p4)) if p4 > 0.0 => s / p4,
         _ => 0.0,
     };
+    let vm_speedup = match (mean_of("promela-succ/interp"), mean_of("promela-succ/vm")) {
+        (Some(i), Some(v)) if v > 0.0 => i / v,
+        _ => 0.0,
+    };
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"checker_hot_path\",\n");
     json.push_str(&format!("  \"model\": \"abstract size={} tick\",\n", size));
     json.push_str(&format!("  \"states\": {},\n", states));
     json.push_str(&format!("  \"speedup_par4_vs_seq\": {:.3},\n", speedup4));
+    json.push_str(&format!("  \"speedup_promela_vm_vs_interp\": {:.3},\n", vm_speedup));
     json.push_str("  \"results\": [\n");
     let n = b.results().len();
     for (i, r) in b.results().iter().enumerate() {

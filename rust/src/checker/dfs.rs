@@ -11,9 +11,12 @@
 //! ([`SafetyLtl::compile`]) so per-state monitoring is a bulk slot read
 //! plus a linear bytecode pass (no string lookups, no AST recursion), and
 //! successor buffers are recycled through a freelist so the steady-state
-//! loop performs no allocation. The `Full` store bump-allocates encodings
-//! into an arena (see [`super::store`]). The multi-threaded engine built
-//! on the same report types lives in [`super::parallel`].
+//! loop performs no allocation — models fill them in place per the
+//! [`TransitionSystem::successors`] buffer contract (the Promela VM's
+//! packed states make each appended successor one memcpy). The `Full`
+//! store bump-allocates encodings into an arena (see [`super::store`]).
+//! The multi-threaded engine built on the same report types lives in
+//! [`super::parallel`].
 
 use super::store::{StoreKind, VisitedStore};
 use crate::model::{EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};

@@ -572,7 +572,9 @@ where
 /// depth-synchronous parallel BFS.
 ///
 /// Each level's states are expanded concurrently (contiguous chunks, one
-/// per worker — `successors` is the dominant cost on the Promela engine),
+/// per worker — `successors` is the dominant cost on the Promela engines;
+/// each worker reuses one successor buffer the model fills in place, per
+/// the `TransitionSystem::successors` buffer contract),
 /// but deduplication, property monitoring and violation recording run in
 /// one sequential merge pass in a scheduling-independent order: chunk
 /// order × task order × successor order. Consequences:

@@ -138,6 +138,24 @@ impl ResultCache {
         self.entries.values()
     }
 
+    /// Entries sorted by description — the order [`to_json`](Self::to_json)
+    /// persists and `mcautotune cache ls` lists.
+    pub fn entries_sorted(&self) -> Vec<&CacheEntry> {
+        let mut entries: Vec<&CacheEntry> = self.entries.values().collect();
+        entries.sort_by(|a, b| a.desc.cmp(&b.desc));
+        entries
+    }
+
+    /// Drop every entry whose description contains `needle`, or whose
+    /// 16-hex-digit content key equals it (`mcautotune cache rm`). Returns
+    /// the number removed; the caller persists with [`save`](Self::save).
+    pub fn remove_matching(&mut self, needle: &str) -> usize {
+        let before = self.entries.len();
+        self.entries
+            .retain(|key, e| !(e.desc.contains(needle) || format!("{:016x}", key) == needle));
+        before - self.entries.len()
+    }
+
     fn load_json(&mut self, text: &str) -> Result<()> {
         let doc = Json::parse(text)?;
         let version = doc.get("version").and_then(Json::as_i64).context("missing version")?;
@@ -171,12 +189,12 @@ impl ResultCache {
         Ok(())
     }
 
-    /// Serialize to the persisted JSON form (entries sorted by
-    /// description, so files are deterministic and diff-friendly).
+    /// Serialize to the persisted JSON form (entries in
+    /// [`entries_sorted`](Self::entries_sorted) order, so files are
+    /// deterministic and diff-friendly).
     pub fn to_json(&self) -> String {
-        let mut entries: Vec<&CacheEntry> = self.entries.values().collect();
-        entries.sort_by(|a, b| a.desc.cmp(&b.desc));
-        let entries = entries
+        let entries = self
+            .entries_sorted()
             .into_iter()
             .map(|e| {
                 Json::Obj(vec![
@@ -351,6 +369,30 @@ mod tests {
         assert!(c.lookup("model=minimum size=64").is_some());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(format!("{}.corrupt", path.display())).ok();
+    }
+
+    #[test]
+    fn remove_matching_by_desc_substring_and_key() {
+        let mut c = ResultCache::in_memory();
+        c.store("model=minimum size=64", &fake_result(8, 2, 36));
+        c.store("model=minimum size=128", &fake_result(8, 4, 40));
+        c.store("model=abstract size=32", &fake_result(4, 4, 528));
+        assert_eq!(c.remove_matching("nosuch"), 0);
+        assert_eq!(c.remove_matching("model=minimum"), 2);
+        assert_eq!(c.len(), 1);
+        // removal by exact content key
+        let key = format!("{:016x}", hash_bytes(b"model=abstract size=32"));
+        assert_eq!(c.remove_matching(&key), 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn entries_sorted_matches_persisted_order() {
+        let mut c = ResultCache::in_memory();
+        c.store("b", &fake_result(2, 2, 1));
+        c.store("a", &fake_result(2, 2, 1));
+        let descs: Vec<&str> = c.entries_sorted().iter().map(|e| e.desc.as_str()).collect();
+        assert_eq!(descs, vec!["a", "b"]);
     }
 
     #[test]

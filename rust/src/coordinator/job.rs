@@ -24,13 +24,16 @@
 //! of the Promela source** (see [`TuningJob::cache_desc`]), so editing a
 //! model can never serve a stale cached optimum.
 
+use super::shard::TuningShard;
 use crate::model::TransitionSystem;
 use crate::platform::abstract_model::AbsState;
 use crate::platform::min_model::MinState;
 use crate::platform::{
     enumerate_tunings, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig, Tuning,
 };
-use crate::promela::{source_hash, templates, PromelaSystem, PState};
+use crate::promela::{
+    source_hash, templates, vm::tuning_committed_at_init, PromelaSystem, PromelaVm, PState,
+};
 use crate::tuner::Method;
 use crate::util::error::{bail, ensure, Context, Result};
 
@@ -264,6 +267,38 @@ impl TuningJob {
         }
     }
 
+    /// Build the job's execution model for one (WG, TS) sub-lattice —
+    /// the form phase 2 ([`super::run_shard_task`]) actually runs.
+    ///
+    /// Native models return as-is (the caller wraps them in the generic
+    /// [`super::ShardModel`] re-filter; their closed-form successor
+    /// generation is too cheap for specialization to pay). Promela jobs
+    /// compile a **shard-specialized bytecode VM**: the bounds travel
+    /// through batch planning and worker-mode manifests as four plain
+    /// integers (`TaskSpec.plan.shard`) and are baked into the compiled
+    /// program here, on whichever process executes the task — no
+    /// serialized code, and every executor derives the identical
+    /// specialized program. Sources whose initial image already commits
+    /// a tuning violate the specialization contract and fall back to the
+    /// unspecialized VM behind the generic wrapper.
+    pub fn build_sharded(&self, shard: &TuningShard) -> Result<ShardedExec> {
+        Ok(match self.build()? {
+            JobModel::Abs(m) => ShardedExec::Abs(m),
+            JobModel::Min(m) => ShardedExec::Min(m),
+            JobModel::Pml(m) => {
+                let prog = m.prog;
+                if tuning_committed_at_init(&prog) {
+                    ShardedExec::PmlWrapped(PromelaVm::new(prog)?)
+                } else {
+                    ShardedExec::PmlSpecialized(PromelaVm::specialized(
+                        prog,
+                        Some(shard.promela_bounds()),
+                    )?)
+                }
+            }
+        })
+    }
+
     /// Ground-truth optimal model time (for tests and report checks).
     /// Valid for Promela *template* jobs too — the templates are pinned to
     /// the native models' `predicted_time` by the equivalence tests — but
@@ -495,11 +530,24 @@ fn guided_sim_cost(sys: &PromelaSystem, t: Tuning, runs: u64, max_steps: u64) ->
 /// tests); hot paths should match on the variant and run the concrete
 /// model directly — the uniform interface costs a temporary successor
 /// buffer per expanded state, which the checker's reused-`out` contract
-/// otherwise avoids (see `run_batch`'s phase 2).
+/// otherwise avoids (see `run_batch`'s phase 2). `Pml` carries the
+/// stage-one program through the front end; shard execution lowers it to
+/// the bytecode VM via [`TuningJob::build_sharded`].
 pub enum JobModel {
     Abs(AbstractModel),
     Min(MinModel),
     Pml(PromelaSystem),
+}
+
+/// A job model prepared for one shard (see [`TuningJob::build_sharded`]).
+pub enum ShardedExec {
+    Abs(AbstractModel),
+    Min(MinModel),
+    /// unspecialized VM — run behind the generic [`super::ShardModel`]
+    /// re-filter (initial-image-committed fallback)
+    PmlWrapped(PromelaVm),
+    /// shard bounds compiled into the program — run directly
+    PmlSpecialized(PromelaVm),
 }
 
 /// State of a [`JobModel`] — tags the underlying model's state.
@@ -695,6 +743,26 @@ mod tests {
         let mut d = a.clone();
         d.shards = 7;
         assert_eq!(d.cache_desc(), template_desc);
+    }
+
+    #[test]
+    fn build_sharded_specializes_promela_and_passes_natives_through() {
+        let shard = TuningShard { wg_min: 2, wg_max: 2, ts_min: 0, ts_max: u32::MAX };
+        let native = TuningJob::new(ModelKind::Minimum, 16);
+        assert!(matches!(native.build_sharded(&shard).unwrap(), ShardedExec::Min(_)));
+        let mut pml = native.clone();
+        pml.engine = JobEngine::Promela;
+        match pml.build_sharded(&shard).unwrap() {
+            ShardedExec::PmlSpecialized(vm) => assert!(vm.is_specialized()),
+            _ => panic!("promela job must compile a shard-specialized VM"),
+        }
+        // a source whose initial image already commits the tuning violates
+        // the specialization contract and falls back to the wrapped VM
+        let mut preset = pml.clone();
+        preset.source = Some(
+            "int WG = 2; int TS = 2; bool FIN; active proctype main() { FIN = true }".into(),
+        );
+        assert!(matches!(preset.build_sharded(&shard).unwrap(), ShardedExec::PmlWrapped(_)));
     }
 
     #[test]

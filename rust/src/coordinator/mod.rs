@@ -20,7 +20,11 @@
 //!   with each sub-lattice's estimated state-space size
 //!   ([`TuningJob::tuning_costs`]), and the same estimate pre-sizes the
 //!   checker's visited stores and — via [`adaptive_shard_count`] — picks
-//!   the shard count when neither the job nor `--shards` pins one;
+//!   the shard count when neither the job nor `--shards` pins one.
+//!   Promela jobs skip the re-filtering wrapper entirely: each shard's
+//!   bounds are compiled into a specialized bytecode program
+//!   ([`crate::promela::PromelaVm`]) that never generates off-shard
+//!   successors (see [`run_shard_task`]);
 //! - [`JobQueue`] (in [`queue`]) — a work-stealing runner that executes
 //!   the (job × shard) task set across std threads;
 //! - [`ResultCache`] (in [`cache`]) — a content-addressed result store
@@ -52,14 +56,14 @@ pub mod shard;
 pub mod task;
 
 pub use cache::{CacheEntry, ResultCache};
-pub use job::{JobEngine, JobModel, JobState, ModelKind, TuningJob};
+pub use job::{JobEngine, JobModel, JobState, ModelKind, ShardedExec, TuningJob};
 pub use queue::{JobQueue, QueueStats};
 pub use report::{BatchReport, JobOutcome};
 pub use shard::{
     adaptive_shard_count, merge_results, partition, plan_shards, shard_weight, ShardModel,
     ShardPlan, TuningShard,
 };
-pub use task::{DrainStats, LeasedTask, PlanSummary, TaskDir, TaskSpec};
+pub use task::{DrainStats, LeaseInfo, LeasedTask, PlanSummary, TaskDir, TaskSpec, TaskStatus};
 
 use crate::checker::CheckOptions;
 use crate::platform::Tuning;
@@ -184,6 +188,18 @@ pub fn plan_batch(
 /// parse+compile once per shard, but keeps build failures scoped to their
 /// job (not the batch) and costs microseconds against the shard's
 /// verification work.
+///
+/// Promela jobs compile a **shard-specialized bytecode VM**
+/// ([`crate::promela::PromelaVm`]): the sub-lattice bounds the plan
+/// carries (and worker-mode manifests ship, see [`task::TaskSpec`]) are
+/// baked into the compiled program, which prunes off-shard (WG, TS)
+/// commitments at the choice point instead of generating every successor
+/// and re-filtering it through [`ShardModel`]. The explored state space —
+/// and therefore every result, state count and cache entry — is
+/// byte-identical to the re-filtering path; only the wasted successor
+/// materialization disappears. Sources whose initial image already
+/// commits a tuning fall back to the generic wrapper (the specialization
+/// contract needs the choice to happen at runtime).
 pub fn run_shard_task(
     job: &TuningJob,
     plan: &ShardPlan,
@@ -193,19 +209,20 @@ pub fn run_shard_task(
     // model can dead-end a simulation walk in a pruned branch (see
     // ShardPlan::t_ini), and the plan's bound is sound anyway.
     let t_ini = Some(plan.t_ini);
-    match job.build()? {
-        JobModel::Abs(m) => {
+    match job.build_sharded(&plan.shard)? {
+        ShardedExec::Abs(m) => {
             let sm = ShardModel::new(&m, plan.shard);
             tune(&sm, job.method, &plan.check, swarm, t_ini)
         }
-        JobModel::Min(m) => {
+        ShardedExec::Min(m) => {
             let sm = ShardModel::new(&m, plan.shard);
             tune(&sm, job.method, &plan.check, swarm, t_ini)
         }
-        JobModel::Pml(m) => {
-            let sm = ShardModel::new(&m, plan.shard);
+        ShardedExec::PmlWrapped(vm) => {
+            let sm = ShardModel::new(&vm, plan.shard);
             tune(&sm, job.method, &plan.check, swarm, t_ini)
         }
+        ShardedExec::PmlSpecialized(vm) => tune(&vm, job.method, &plan.check, swarm, t_ini),
     }
 }
 

@@ -36,6 +36,23 @@ impl TuningShard {
     pub fn contains(&self, t: Tuning) -> bool {
         t.wg >= self.wg_min && t.wg <= self.wg_max && t.ts >= self.ts_min && t.ts <= self.ts_max
     }
+
+    /// These bounds as compile-time constants for the Promela VM
+    /// ([`crate::promela::vm::PromelaVm::specialized`]): the compiled
+    /// program prunes off-shard (WG, TS) commitments at the choice point
+    /// instead of this module's [`ShardModel`] re-filtering every
+    /// generated successor. Both paths explore the identical state space
+    /// (see the VM module docs for the contract), so results, state
+    /// counts and cache entries are unchanged — only the wasted successor
+    /// materialization disappears.
+    pub fn promela_bounds(&self) -> crate::promela::TuningBounds {
+        crate::promela::TuningBounds {
+            wg_min: self.wg_min,
+            wg_max: self.wg_max,
+            ts_min: self.ts_min,
+            ts_max: self.ts_max,
+        }
+    }
 }
 
 impl std::fmt::Display for TuningShard {
@@ -95,13 +112,22 @@ pub fn partition(tunings: &[Tuning], n: u32) -> Vec<TuningShard> {
 }
 
 /// A transition system restricted to one shard: successors that commit to
-/// a (WG, TS) outside the shard are pruned at the nondeterministic-choice
-/// point. Generic over the model — the only requirement is that states
-/// expose `WG`/`TS` once the tuning is chosen. "Not chosen yet" is either
-/// an *absent* observation (the native models return `None` / a masked
-/// slot before the choice) or a *non-positive* value (the Promela engine's
-/// globals exist from the start, initialized to 0; real tunings are
-/// powers of two >= 2, so 0 is unambiguous).
+/// a (WG, TS) outside the shard are pruned *after generation*, by
+/// re-filtering the successor buffer. Generic over the model — the only
+/// requirement is that states expose `WG`/`TS` once the tuning is chosen.
+/// "Not chosen yet" is either an *absent* observation (the native models
+/// return `None` / a masked slot before the choice) or a *non-positive*
+/// value (the Promela engine's globals exist from the start, initialized
+/// to 0; real tunings are powers of two >= 2, so 0 is unambiguous).
+///
+/// Promela batch jobs no longer run through this wrapper: the VM compiles
+/// the shard bounds into the program ([`TuningShard::promela_bounds`]) and
+/// never generates off-shard states in the first place. This wrapper
+/// remains the generic path for the native models (whose successor
+/// generation is closed-form cheap) and the reference path the
+/// differential suite compares the specialized VM against — plus the
+/// fallback for pathological Promela sources whose initial image already
+/// commits a tuning (see `promela::vm::tuning_committed_at_init`).
 pub struct ShardModel<'a, M: TransitionSystem> {
     pub inner: &'a M,
     pub shard: TuningShard,

@@ -421,6 +421,11 @@ fn result_from_json(v: &Json) -> Result<TuneResult> {
 /// inlined), the sub-lattice bounds, the [`ShardPlan`] budget slice and
 /// the swarm configuration — plus the job's cache description so the
 /// merge step can write the result back under the right key.
+///
+/// For Promela jobs the shard bounds double as the **specialized-program
+/// recipe**: the executing worker compiles them into a shard-specialized
+/// bytecode VM ([`super::run_shard_task`]), so the manifest carries the
+/// specialization across processes without serializing compiled code.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
     /// filesystem-safe id, `j<job>-s<shard>`
@@ -917,6 +922,21 @@ impl TaskDir {
             id,
             spec.id
         );
+        // Tag the lease with its owner so `worker --status` can attribute
+        // it. Atomic (tmp + rename, like every other publish in this
+        // protocol): a crash mid-write must never leave a truncated lease
+        // that re-leases as an unparseable task and wedges the batch.
+        // Best-effort beyond that: a failed write just leaves the owner
+        // unknown (TaskSpec::parse ignores the extra field), and the
+        // rewrite doubles as a second mtime freshen.
+        let Json::Obj(mut fields) = spec.to_json() else {
+            unreachable!("TaskSpec::to_json always builds an object")
+        };
+        fields.push(("owner".to_string(), Json::Str(owner_tag())));
+        let _ = self.write_atomic(
+            &format!("{}{}", spec.id, LEASE_SUFFIX),
+            &Json::Obj(fields).render(),
+        );
         Ok(Some(LeasedTask { spec, reclaimed: false, lease_path: lease }))
     }
 
@@ -1122,6 +1142,93 @@ impl TaskDir {
     }
 }
 
+/// One live lease as seen by [`TaskDir::status`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaseInfo {
+    pub id: String,
+    /// the `pid@host` tag the leasing worker wrote into the lease file
+    /// (`None`: written by an older binary, or the tag write failed)
+    pub owner: Option<String>,
+    /// time since the last heartbeat (mtime)
+    pub age: Duration,
+}
+
+/// One-shot progress view of a planned batch (CLI `worker --status`).
+#[derive(Debug, Clone)]
+pub struct TaskStatus {
+    /// authoritative task count from `batch.json` (falls back to
+    /// available + leased + done for a header-less synthetic dir)
+    pub total: usize,
+    /// tasks nobody holds (`*.task.json`)
+    pub available: usize,
+    /// tasks with a published result (`*.result.json`)
+    pub done: usize,
+    /// live leases, sorted by task id
+    pub leases: Vec<LeaseInfo>,
+}
+
+impl TaskStatus {
+    /// Leases held per owner tag, sorted by owner (`?` = unknown owner).
+    pub fn per_owner(&self) -> Vec<(String, usize)> {
+        let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+        for l in &self.leases {
+            *counts.entry(l.owner.clone().unwrap_or_else(|| "?".into())).or_insert(0) += 1;
+        }
+        counts.into_iter().collect()
+    }
+}
+
+impl TaskDir {
+    /// Snapshot the batch's progress: tasks available / leased (with the
+    /// holder's owner tag and heartbeat age) / done. Read-only — safe to
+    /// run next to live workers; counts are a best-effort snapshot since
+    /// files move mid-scan by design.
+    pub fn status(&self) -> Result<TaskStatus> {
+        let scan = self.scan()?;
+        let total = match self.header() {
+            Ok(h) => h.task_ids.len(),
+            Err(_) => scan.available.len() + scan.leases.len() + scan.results.len(),
+        };
+        let now = SystemTime::now();
+        let mut leases: Vec<LeaseInfo> = scan
+            .leases
+            .iter()
+            .map(|(id, mtime)| LeaseInfo {
+                id: id.clone(),
+                owner: std::fs::read_to_string(self.lease_path(id))
+                    .ok()
+                    .and_then(|t| Json::parse(&t).ok())
+                    .and_then(|v| {
+                        v.get("owner").and_then(Json::as_str).map(str::to_string)
+                    }),
+                age: now.duration_since(*mtime).unwrap_or(Duration::ZERO),
+            })
+            .collect();
+        leases.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(TaskStatus {
+            total,
+            available: scan.available.len(),
+            done: scan.results.len(),
+            leases,
+        })
+    }
+}
+
+/// `pid@host` identity a worker stamps into the leases it holds. The
+/// hostname comes from the kernel (HOSTNAME is a shell-internal variable
+/// that services and cron jobs never see) with env-var fallbacks, so
+/// multi-machine fleets stay distinguishable in `worker --status`.
+fn owner_tag() -> String {
+    let host = std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .ok()
+        .map(|h| h.trim().to_string())
+        .filter(|h| !h.is_empty())
+        .or_else(|| std::env::var("HOSTNAME").ok())
+        .or_else(|| std::env::var("COMPUTERNAME").ok())
+        .unwrap_or_else(|| "localhost".into());
+    format!("{}@{}", std::process::id(), host)
+}
+
 #[derive(Debug, Default)]
 struct Scan {
     available: Vec<String>,
@@ -1262,6 +1369,42 @@ mod tests {
         let text = std::fs::read_to_string(td.result_path("a")).unwrap();
         assert!(text.contains("\"result\""), "published result survived: {}", text);
         assert!(!text.contains("\"error\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn status_reports_available_leased_done_per_owner() {
+        let dir = temp_dir("status");
+        let td = TaskDir::new(&dir);
+        td.write_task(&sample_spec("a", 0)).unwrap();
+        td.write_task(&sample_spec("b", 1)).unwrap();
+        td.write_task(&sample_spec("c", 2)).unwrap();
+        let st = td.status().unwrap();
+        assert_eq!((st.total, st.available, st.done), (3, 3, 0));
+        assert!(st.leases.is_empty());
+
+        let held = td.lease().unwrap().expect("leasable");
+        let finished = td.lease().unwrap().expect("leasable");
+        td.complete(&finished, Duration::ZERO, Ok(fake_result())).unwrap();
+
+        let st = td.status().unwrap();
+        assert_eq!((st.total, st.available, st.done), (3, 1, 1));
+        assert_eq!(st.leases.len(), 1);
+        assert_eq!(st.leases[0].id, held.spec.id);
+        let owner = st.leases[0].owner.clone().expect("lease carries its owner tag");
+        assert!(
+            owner.starts_with(&std::process::id().to_string()),
+            "owner `{}` should start with this pid",
+            owner
+        );
+        assert_eq!(st.per_owner(), vec![(owner, 1)]);
+        // the owner tag must not break re-parsing (extra fields ignored)
+        let text = std::fs::read_to_string(dir.join(format!(
+            "{}{}",
+            held.spec.id, LEASE_SUFFIX
+        )))
+        .unwrap();
+        assert_eq!(TaskSpec::parse(&text).unwrap(), held.spec);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,7 +9,9 @@
 //!
 //! 1. **Model** the parallel program + target platform ([`platform`] native
 //!    engines, or [`promela`] — a Promela-subset front end executing the
-//!    shipped `models/*.pml` with full process interleaving);
+//!    shipped `models/*.pml` with full process interleaving, compiled to a
+//!    bytecode VM over flat packed states with a tree-walking reference
+//!    interpreter behind it);
 //! 2. **State** the over-time property Φo = `G(FIN -> time > T)`
 //!    ([`model::SafetyLtl`]);
 //! 3. **Search** for the minimal termination time with the explicit-state

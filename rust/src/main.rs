@@ -17,7 +17,7 @@ use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::platform::{
     simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
 };
-use mcautotune::promela::{templates, PromelaSystem};
+use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
 use mcautotune::report;
 use mcautotune::runtime::Engine;
 use mcautotune::swarm::SwarmConfig;
@@ -50,6 +50,8 @@ commands:
               number of worker processes/machines can drain one batch
   merge       fold a drained task dir's partial results into the batch
               report + result cache (identical to a single-process run)
+  cache       inspect a result-cache file: `cache ls <file>` lists entries,
+              `cache rm <file> <needle>` drops matching entries
   simulate    random simulation of a model (reports terminal time, T_ini)
   verify      verify a safety-LTL property, print the first counterexample
   table1      regenerate the paper's Table 1 (abstract-model experiments)
@@ -72,6 +74,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "batch" => cmd_batch(rest),
         "worker" => cmd_worker(rest),
         "merge" => cmd_merge(rest),
+        "cache" => cmd_cache(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "table1" => cmd_table1(rest),
@@ -98,12 +101,19 @@ fn model_spec(spec: Spec) -> Spec {
         .opt("gmt", "global/local memory time ratio (default 10 abstract, 3 minimum)")
         .opt("granularity", "tick | phase (default phase)")
         .opt("engine", "native | promela (default native)")
+        .opt(
+            "promela-exec",
+            "vm | interp — Promela execution engine (default vm: compiled \
+             bytecode over flat packed states; interp: the reference \
+             tree-walking interpreter the differential suite pins the VM to)",
+        )
 }
 
 enum AnyModel {
     Abs(AbstractModel),
     Min(MinModel),
     Pml(PromelaSystem),
+    Vm(PromelaVm),
 }
 
 macro_rules! with_model {
@@ -112,8 +122,18 @@ macro_rules! with_model {
             AnyModel::Abs($name) => $body,
             AnyModel::Min($name) => $body,
             AnyModel::Pml($name) => $body,
+            AnyModel::Vm($name) => $body,
         }
     };
+}
+
+/// Build the selected Promela execution engine for a source text.
+fn promela_model(a: &Args, src: &str) -> Result<AnyModel> {
+    match a.get_or("promela-exec", "vm").as_str() {
+        "vm" => Ok(AnyModel::Vm(PromelaVm::from_source(src)?)),
+        "interp" | "interpreter" => Ok(AnyModel::Pml(PromelaSystem::from_source(src)?)),
+        other => bail!("unknown promela-exec `{}` (vm | interp)", other),
+    }
 }
 
 fn build_model(a: &Args) -> Result<AnyModel> {
@@ -135,8 +155,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
             let gmt: u32 = a.get_parsed_or("gmt", 10)?;
             let plat = PlatformConfig { nd, nu, np, gmt };
             if engine == JobEngine::Promela {
-                let src = templates::abstract_pml(size, &plat);
-                Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+                promela_model(a, &templates::abstract_pml(size, &plat))
             } else {
                 Ok(AnyModel::Abs(AbstractModel::new(size, plat, gran)?))
             }
@@ -144,8 +163,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
         "minimum" => {
             let gmt: u32 = a.get_parsed_or("gmt", 3)?;
             if engine == JobEngine::Promela {
-                let src = templates::minimum_pml(size, np, gmt);
-                Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+                promela_model(a, &templates::minimum_pml(size, np, gmt))
             } else {
                 Ok(AnyModel::Min(MinModel::new(size, np, gmt, DataInit::Descending, gran)?))
             }
@@ -153,7 +171,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
         path if path.ends_with(".pml") => {
             let src = std::fs::read_to_string(path)
                 .with_context(|| format!("reading {}", path))?;
-            Ok(AnyModel::Pml(PromelaSystem::from_source(&src)?))
+            promela_model(a, &src)
         }
         other => bail!("unknown model `{}` (abstract | minimum | *.pml)", other),
     }
@@ -454,6 +472,10 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         .opt("poll-ms", "sleep between scans while waiting for leasable work (default 100)")
         .opt("workers", "concurrent tasks in this worker process (default 1)")
         .flag("oneshot", "exit when nothing is leasable instead of waiting for the batch to finish")
+        .flag(
+            "status",
+            "print a one-shot batch progress view (available/leased/done, per lease owner) and exit",
+        )
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
@@ -463,13 +485,38 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
              atomic rename-based lock files, runs them, and publishes partial results\n\
              any process can merge. Crash-safe: a lease whose mtime exceeds the TTL is\n\
              re-leased by the next worker. By default the worker waits until every task\n\
-             in the batch has a result (so crashed peers' work is picked up), then exits."
+             in the batch has a result (so crashed peers' work is picked up), then exits.\n\
+             `--status` instead prints what the fleet is doing — tasks still available,\n\
+             leases per worker (pid@host, heartbeat age) and published results."
         );
         return Ok(());
     }
     let Some(dir) = a.positionals().first() else {
         bail!("usage: mcautotune worker <task-dir> [options] (see `mcautotune worker --help`)");
     };
+    if a.flag("status") {
+        let st = TaskDir::new(dir).status()?;
+        println!(
+            "batch {}: {} task(s) — {} available, {} leased, {} done",
+            dir,
+            st.total,
+            st.available,
+            st.leases.len(),
+            st.done
+        );
+        for (owner, n) in st.per_owner() {
+            println!("  worker {}: {} lease(s)", owner, n);
+        }
+        for l in &st.leases {
+            println!(
+                "    {} held by {} (heartbeat {} ago)",
+                l.id,
+                l.owner.as_deref().unwrap_or("?"),
+                human_duration(l.age)
+            );
+        }
+        return Ok(());
+    }
     let mut td =
         TaskDir::new(dir).with_poll(Duration::from_millis(a.get_parsed_or("poll-ms", 100u64)?));
     if let Some(ms) = a.get_parsed::<u64>("ttl-ms")? {
@@ -523,6 +570,76 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
     );
     print!("{}", report.render());
     Ok(())
+}
+
+fn cmd_cache(argv: &[String]) -> Result<()> {
+    let spec = Spec::new().flag("help", "show options");
+    let a = spec.parse(argv)?;
+    let pos = a.positionals();
+    if a.flag("help") || pos.is_empty() {
+        println!("{}", spec.usage("mcautotune cache <ls|rm> <file> [needle]"));
+        println!(
+            "\nInspect or edit a result-cache JSON file (cache lifecycle tooling):\n\
+             \x20 ls <file>           list entries: content key, optimum, method,\n\
+             \x20                     cold-run states, canonical description\n\
+             \x20 rm <file> <needle>  drop entries whose description contains <needle>\n\
+             \x20                     (or whose 16-hex-digit key equals it) and rewrite\n\
+             \x20                     the file atomically"
+        );
+        return Ok(());
+    }
+    match pos[0].as_str() {
+        "ls" => {
+            let Some(file) = pos.get(1) else {
+                bail!("usage: mcautotune cache ls <file>");
+            };
+            let cache = ResultCache::open(Path::new(file))?;
+            warn_quarantined(&cache);
+            let n = cache.len();
+            println!("{}: {} entr{}", file, n, if n == 1 { "y" } else { "ies" });
+            for e in cache.entries_sorted() {
+                println!(
+                    "  {:016x}  WG={} TS={} t_min={} steps={} method={} cold_states={}\n\
+                     \x20           {}",
+                    mcautotune::util::hash::hash_bytes(e.desc.as_bytes()),
+                    e.wg,
+                    e.ts,
+                    e.t_min,
+                    e.steps,
+                    e.method,
+                    e.cold_states,
+                    e.desc
+                );
+            }
+            Ok(())
+        }
+        "rm" => {
+            let (Some(file), Some(needle)) = (pos.get(1), pos.get(2)) else {
+                bail!("usage: mcautotune cache rm <file> <needle>");
+            };
+            let path = Path::new(file);
+            if !path.exists() {
+                bail!("result cache {} does not exist", file);
+            }
+            let mut cache = ResultCache::open(path)?;
+            warn_quarantined(&cache);
+            let removed = cache.remove_matching(needle);
+            cache.save()?;
+            println!(
+                "removed {} entr{} matching `{}` from {} ({} left)",
+                removed,
+                if removed == 1 { "y" } else { "ies" },
+                needle,
+                file,
+                cache.len()
+            );
+            Ok(())
+        }
+        other => bail!(
+            "unknown cache action `{}` (ls | rm — see `mcautotune cache --help`)",
+            other
+        ),
+    }
 }
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {

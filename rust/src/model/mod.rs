@@ -23,6 +23,13 @@ pub trait TransitionSystem {
 
     /// Append all successors of `s` to `out` (which is cleared first).
     /// A state with no successors is terminal.
+    ///
+    /// Buffer contract: implementations fill the *caller's* buffer in
+    /// place — both checker engines recycle these buffers (freelists in
+    /// the DFS, per-worker buffers in the parallel frontier), so
+    /// steady-state exploration performs no per-call allocation beyond
+    /// the successor states themselves. Engines with flat packed states
+    /// (e.g. `promela::vm`) make each appended successor a single memcpy.
     fn successors(&self, s: &Self::State, out: &mut Vec<Self::State>);
 
     /// Stable, injective byte encoding of the state, appended to `out`

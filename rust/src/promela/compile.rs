@@ -1,11 +1,19 @@
-//! AST → flat instruction program.
+//! AST → flat instruction program (stage one of the two-stage compile).
 //!
 //! Each proctype compiles to a vector of [`Instr`]s threaded by `next`
 //! indices — the classical SPIN-style process automaton. `if`/`do`/`for`
 //! compile to [`Op::Branch`] whose option executability follows Promela's
 //! first-statement rule; `atomic` marks instructions with `atomic_next` so
-//! the interpreter keeps exclusivity while inside the block; inline macros
-//! are expanded at compile time with parameter substitution.
+//! the execution engines keep exclusivity while inside the block; inline
+//! macros are expanded at compile time with parameter substitution.
+//!
+//! The [`Program`] this stage produces still carries tree-shaped
+//! [`CExpr`]s; it is executed directly by the reference tree-walking
+//! interpreter ([`super::interp`]) and lowered further — constant folding,
+//! linear expression bytecode, flat packed state layout — by the
+//! production engine ([`super::vm`]). Both engines share this automaton
+//! (same pcs, same `next` threading), which is what lets the differential
+//! suite compare their state spaces one-to-one.
 
 use super::ast::*;
 use super::parser::const_eval;
@@ -20,6 +28,44 @@ pub enum Slot {
     Local(u32),
 }
 
+/// Declared scalar width. SPIN truncates every assignment to the declared
+/// width (C bitfield semantics: `bit`/`bool` keep 1 bit, `byte` is an
+/// unsigned 8-bit wrap, `short` a signed 16-bit wrap); both execution
+/// engines apply the same truncation at store time so models that rely on
+/// wrapping agree with SPIN. Channel *message fields* are not typed in
+/// this subset and stay untruncated until received into a typed variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarType {
+    Bit,
+    Byte,
+    Short,
+    Int,
+}
+
+impl VarType {
+    /// Width of a declared type name (`chan` variables hold channel ids,
+    /// `mtype` constants are byte-sized in SPIN).
+    pub fn of(ty: &str) -> VarType {
+        match ty {
+            "bit" | "bool" => VarType::Bit,
+            "byte" | "mtype" => VarType::Byte,
+            "short" => VarType::Short,
+            _ => VarType::Int, // int, chan ids
+        }
+    }
+
+    /// Truncate an assigned value to the declared width.
+    #[inline]
+    pub fn truncate(self, v: i32) -> i32 {
+        match self {
+            VarType::Bit => v & 1,
+            VarType::Byte => v & 0xFF,
+            VarType::Short => v as i16 as i32,
+            VarType::Int => v,
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum CExpr {
     Num(i32),
@@ -32,8 +78,8 @@ pub enum CExpr {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum CLVal {
-    Scalar(Slot),
-    Elem(Slot, u32, CExpr),
+    Scalar(Slot, VarType),
+    Elem(Slot, u32, CExpr, VarType),
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +117,8 @@ pub struct Instr {
 pub struct ProcDef {
     pub name: String,
     pub nparams: u32,
+    /// declared width of each parameter (run-arguments truncate on bind)
+    pub param_types: Vec<VarType>,
     pub nlocals: u32,
     pub code: Vec<Instr>,
     pub entry: u32,
@@ -80,6 +128,7 @@ pub struct ProcDef {
 pub struct VarInfo {
     pub offset: u32,
     pub len: u32, // 1 = scalar
+    pub ty: VarType,
 }
 
 #[derive(Debug, Clone)]
@@ -105,12 +154,16 @@ pub fn compile(model: &Model) -> Result<Program> {
         if global_syms.contains_key(&d.name) {
             bail!("duplicate global `{}`", d.name);
         }
-        global_syms.insert(d.name.clone(), VarInfo { offset: globals_init.len() as u32, len });
+        let ty = VarType::of(&d.ty);
+        global_syms
+            .insert(d.name.clone(), VarInfo { offset: globals_init.len() as u32, len, ty });
         let init = match &d.init {
             None => 0,
-            Some(e) => const_eval(e)
-                .with_context(|| format!("global `{}` initializer must be constant", d.name))?
-                as i32,
+            Some(e) => ty.truncate(
+                const_eval(e)
+                    .with_context(|| format!("global `{}` initializer must be constant", d.name))?
+                    as i32,
+            ),
         };
         for _ in 0..len {
             globals_init.push(init);
@@ -182,8 +235,10 @@ struct ProcCompiler<'a> {
 impl<'a> ProcCompiler<'a> {
     fn compile_proc(mut self, p: &Proctype) -> Result<ProcDef> {
         // params occupy the first local slots (all scalar)
-        for (_ty, name) in &p.params {
-            self.alloc_local(name, 1)?;
+        let mut param_types = Vec::with_capacity(p.params.len());
+        for (ty, name) in &p.params {
+            self.alloc_local(name, 1, VarType::of(ty))?;
+            param_types.push(VarType::of(ty));
         }
         let nparams = p.params.len() as u32;
 
@@ -197,19 +252,20 @@ impl<'a> ProcCompiler<'a> {
         Ok(ProcDef {
             name: p.name.clone(),
             nparams,
+            param_types,
             nlocals: self.nlocals,
             code: self.code,
             entry,
         })
     }
 
-    fn alloc_local(&mut self, name: &str, len: u32) -> Result<()> {
+    fn alloc_local(&mut self, name: &str, len: u32, ty: VarType) -> Result<()> {
         if self.local_syms.contains_key(name) {
             // Promela proctype scope: a second decl of the same name would
             // shadow confusingly — reject.
             bail!("duplicate local `{}`", name);
         }
-        self.local_syms.insert(name.to_string(), VarInfo { offset: self.nlocals, len });
+        self.local_syms.insert(name.to_string(), VarInfo { offset: self.nlocals, len, ty });
         self.nlocals += len;
         Ok(())
     }
@@ -219,12 +275,13 @@ impl<'a> ProcCompiler<'a> {
             match s {
                 Stmt::VarDecl(d) => {
                     if !self.local_syms.contains_key(&d.name) {
-                        self.alloc_local(&d.name, d.len.unwrap_or(1))?;
+                        self.alloc_local(&d.name, d.len.unwrap_or(1), VarType::of(&d.ty))?;
                     }
                 }
                 Stmt::ChanDecl(c) => {
                     if !self.local_syms.contains_key(&c.name) {
-                        self.alloc_local(&c.name, 1)?;
+                        // holds a channel id
+                        self.alloc_local(&c.name, 1, VarType::Int)?;
                     }
                 }
                 Stmt::If(opts, els) | Stmt::Do(opts, els) => {
@@ -341,8 +398,8 @@ impl<'a> ProcCompiler<'a> {
             Stmt::Inc(lv) | Stmt::Dec(lv) => {
                 let clv = self.lval(lv)?;
                 let load = match &clv {
-                    CLVal::Scalar(s) => CExpr::Load(*s),
-                    CLVal::Elem(s, n, i) => CExpr::LoadElem(*s, *n, Box::new(i.clone())),
+                    CLVal::Scalar(s, _) => CExpr::Load(*s),
+                    CLVal::Elem(s, n, i, _) => CExpr::LoadElem(*s, *n, Box::new(i.clone())),
                 };
                 let op = if matches!(s, Stmt::Inc(_)) { PBinOp::Add } else { PBinOp::Sub };
                 let pc = self.emit(Op::Assign(
@@ -472,7 +529,7 @@ impl<'a> ProcCompiler<'a> {
                 self.break_stack.push(Vec::new());
                 let chi = self.expr(hi)?;
                 let load = match &lv {
-                    CLVal::Scalar(s) => CExpr::Load(*s),
+                    CLVal::Scalar(s, _) => CExpr::Load(*s),
                     CLVal::Elem(..) => bail!("for-loop variable must be scalar"),
                 };
                 let guard_pc =
@@ -512,12 +569,12 @@ impl<'a> ProcCompiler<'a> {
 
     // ------------------------------------------------------------- names --
 
-    fn lookup(&self, name: &str) -> Result<(Slot, u32)> {
+    fn lookup(&self, name: &str) -> Result<(Slot, u32, VarType)> {
         if let Some(v) = self.local_syms.get(name) {
-            return Ok((Slot::Local(v.offset), v.len));
+            return Ok((Slot::Local(v.offset), v.len, v.ty));
         }
         if let Some(v) = self.global_syms.get(name) {
-            return Ok((Slot::Global(v.offset), v.len));
+            return Ok((Slot::Global(v.offset), v.len, v.ty));
         }
         bail!("unknown identifier `{}`", name)
     }
@@ -525,18 +582,18 @@ impl<'a> ProcCompiler<'a> {
     fn lval(&mut self, lv: &LValue) -> Result<CLVal> {
         match lv {
             LValue::Var(n) => {
-                let (slot, len) = self.lookup(n)?;
+                let (slot, len, ty) = self.lookup(n)?;
                 if len != 1 {
                     bail!("array `{}` used without index", n);
                 }
-                Ok(CLVal::Scalar(slot))
+                Ok(CLVal::Scalar(slot, ty))
             }
             LValue::Index(n, e) => {
-                let (slot, len) = self.lookup(n)?;
+                let (slot, len, ty) = self.lookup(n)?;
                 if len == 1 {
                     bail!("`{}` is not an array", n);
                 }
-                Ok(CLVal::Elem(slot, len, self.expr(e)?))
+                Ok(CLVal::Elem(slot, len, self.expr(e)?, ty))
             }
         }
     }
@@ -545,7 +602,7 @@ impl<'a> ProcCompiler<'a> {
         if let Some(id) = self.global_chan_ids.get(name) {
             return Ok(CExpr::Num(*id));
         }
-        let (slot, len) = self.lookup(name)?;
+        let (slot, len, _) = self.lookup(name)?;
         if len != 1 {
             bail!("channel `{}` cannot be an array", name);
         }
@@ -563,14 +620,14 @@ impl<'a> ProcCompiler<'a> {
                 if let Some(id) = self.global_chan_ids.get(n) {
                     return Ok(CExpr::Num(*id));
                 }
-                let (slot, len) = self.lookup(n)?;
+                let (slot, len, _) = self.lookup(n)?;
                 if len != 1 {
                     bail!("array `{}` used as scalar", n);
                 }
                 CExpr::Load(slot)
             }
             PExpr::Index(n, i) => {
-                let (slot, len) = self.lookup(n)?;
+                let (slot, len, _) = self.lookup(n)?;
                 if len == 1 {
                     bail!("`{}` is not an array", n);
                 }
@@ -609,6 +666,30 @@ mod tests {
     #[test]
     fn rejects_nonconst_global_init() {
         assert!(compile_src("int a = 1; int b = a; active proctype main() { skip }").is_err());
+    }
+
+    #[test]
+    fn global_inits_truncate_to_declared_width() {
+        // SPIN semantics: byte wraps at 256, short at 2^15, bool keeps a bit
+        let p = compile_src(
+            "byte b = 300; short s = 40000; bool f = 2; int i = 70000;\n\
+             active proctype main() { skip }",
+        )
+        .unwrap();
+        assert_eq!(p.globals_init, vec![300 & 0xFF, 40000u16 as i16 as i32, 0, 70000]);
+        assert_eq!(p.global_syms["b"].ty, VarType::Byte);
+        assert_eq!(p.global_syms["s"].ty, VarType::Short);
+        assert_eq!(p.global_syms["f"].ty, VarType::Bit);
+        assert_eq!(p.global_syms["i"].ty, VarType::Int);
+    }
+
+    #[test]
+    fn param_types_recorded_for_run_truncation() {
+        let p = compile_src(
+            "proctype w(byte v; short u) { skip }\nactive proctype main() { run w(300, 1) }",
+        )
+        .unwrap();
+        assert_eq!(p.procs[0].param_types, vec![VarType::Byte, VarType::Short]);
     }
 
     #[test]

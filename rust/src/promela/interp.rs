@@ -17,8 +17,17 @@
 //! - processes die immediately at the end of their body (we do not model
 //!   SPIN's creation-order death rule — the paper's models never rely on
 //!   it);
-//! - all scalars are i32 with wrapping arithmetic; byte/short are not
-//!   range-truncated (the models stay well within range; documented).
+//! - arithmetic is i32 with wrapping semantics; every *store* (assignment,
+//!   increment, `select`, receive bind, run-argument bind) truncates to
+//!   the declared width (`bit`/`byte`/`short`/`int`, see
+//!   [`super::compile::VarType`]) exactly as SPIN does, so models that
+//!   wrap agree with SPIN. Channel message fields are untyped and stay
+//!   untruncated until received into a typed variable.
+//!
+//! This tree-walking interpreter is the **reference implementation**: the
+//! production engine is the bytecode VM over flat packed states
+//! ([`super::vm::PromelaVm`]), whose semantics the differential suite
+//! (`rust/tests/promela_vm.rs`) pins to this file state-for-state.
 
 use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot};
 use crate::model::TransitionSystem;
@@ -34,7 +43,9 @@ pub fn source_hash(src: &str) -> u64 {
 }
 
 pub const MAX_PROCS: usize = 64;
-const MAX_SELECT_FANOUT: i32 = 4096;
+/// Fan-out clamp on `select` ranges, shared with the VM so both engines
+/// enumerate identical choice sets.
+pub(crate) const MAX_SELECT_FANOUT: i32 = 4096;
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ChanState {
@@ -186,11 +197,14 @@ impl PromelaSystem {
 
     fn store(&self, st: &mut PState, proc: usize, lv: &CLVal, v: i32) {
         match lv {
-            CLVal::Scalar(Slot::Global(o)) => st.globals[*o as usize] = v,
-            CLVal::Scalar(Slot::Local(o)) => st.procs[proc].locals[*o as usize] = v,
-            CLVal::Elem(s, len, idx) => {
+            CLVal::Scalar(Slot::Global(o), ty) => st.globals[*o as usize] = ty.truncate(v),
+            CLVal::Scalar(Slot::Local(o), ty) => {
+                st.procs[proc].locals[*o as usize] = ty.truncate(v)
+            }
+            CLVal::Elem(s, len, idx, ty) => {
                 let i = self.eval(st, proc, idx);
                 assert!(i >= 0 && (i as u32) < *len, "array store out of bounds");
+                let v = ty.truncate(v);
                 match s {
                     Slot::Global(o) => st.globals[*o as usize + i as usize] = v,
                     Slot::Local(o) => st.procs[proc].locals[*o as usize + i as usize] = v,
@@ -426,7 +440,7 @@ impl PromelaSystem {
                 let def = &self.prog.procs[*pt as usize];
                 let mut locals = vec![0i32; def.nlocals as usize];
                 for (i, a) in args.iter().enumerate().take(def.nparams as usize) {
-                    locals[i] = self.eval(st, p, a);
+                    locals[i] = def.param_types[i].truncate(self.eval(st, p, a));
                 }
                 let mut ns = st.clone();
                 ns.procs.push(ProcState {
@@ -842,6 +856,66 @@ mod tests {
         assert_eq!(ts.len(), 1);
         assert_eq!(m.eval_var(&ts[0], "r"), Some(0));
         assert!(ts[0].procs[0].alive, "deadlocked, not finished");
+    }
+
+    #[test]
+    fn byte_short_and_bool_assignments_truncate_like_spin() {
+        // regression: scalars used to stay untruncated i32, silently
+        // diverging from SPIN for models that wrap
+        let m = sys(
+            "byte b; short s; bool f; int i; byte a[2];\n\
+             active proctype main() {\n\
+               b = 255; b = b + 1;\n\
+               s = 32767; s = s + 1;\n\
+               f = 2;\n\
+               i = 2147483647; i = i + 1;\n\
+               a[1] = 300\n\
+             }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "b"), Some(0), "byte wraps at 256");
+        assert_eq!(m.eval_var(&ts[0], "s"), Some(-32768), "short wraps at 2^15");
+        assert_eq!(m.eval_var(&ts[0], "f"), Some(0), "bool keeps one bit (2 & 1)");
+        assert_eq!(m.eval_var(&ts[0], "i"), Some(i32::MIN as i64), "int wraps at 2^31");
+        assert_eq!(ts[0].globals[m.prog.global_syms["a"].offset as usize + 1], 300 & 0xFF);
+    }
+
+    #[test]
+    fn run_arguments_truncate_to_param_width() {
+        let m = sys(
+            "int got;\n\
+             active proctype main() { run w(300) }\n\
+             proctype w(byte v) { got = v }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some((300 & 0xFF) as i64));
+    }
+
+    #[test]
+    fn recv_binds_truncate_to_declared_width() {
+        // the message carries 300 untruncated; the byte-typed bind wraps it
+        let m = sys(
+            "chan c = [1] of {int};\nint got;\n\
+             active proctype main() { byte x; c ! 300; c ? x; got = x }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some((300 & 0xFF) as i64));
+    }
+
+    #[test]
+    fn wrapping_loop_terminates_via_byte_truncation() {
+        // a counter that only terminates because byte wraps — the SPIN
+        // behavior untruncated i32 silently got wrong (infinite loop /
+        // state-space blowup)
+        let m = sys(
+            "byte k = 200; int laps;\n\
+             active proctype main() { do :: k != 0 -> k++ :: else -> break od; laps = 1 }",
+        );
+        let ts = reachable_terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "laps"), Some(1));
+        assert_eq!(m.eval_var(&ts[0], "k"), Some(0));
     }
 
     #[test]

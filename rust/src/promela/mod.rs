@@ -1,11 +1,35 @@
-//! Promela-subset front end — our stand-in for SPIN's modeling language.
+//! Promela-subset front end and execution engines — our stand-in for
+//! SPIN's modeling language.
 //!
-//! Pipeline: [`lexer`] -> [`parser`] (AST) -> [`compile`] (flat process
-//! automata) -> [`interp`] (a full-interleaving [`crate::model::TransitionSystem`]).
-//! The subset covers everything the paper's models use: proctypes (active
-//! or run-spawned, with parameters), rendezvous and buffered channels,
-//! atomic, if/do with else, for, select, inline macros, #define, mtype,
-//! arrays, and Promela's conditional expressions.
+//! The pipeline is a **two-stage compile** feeding two engines:
+//!
+//! ```text
+//! [lexer] -> [parser] (AST) -> [compile]  (stage 1: flat process automata,
+//!        |                                 tree-shaped CExpr operands)
+//!        |                         ├── [interp]  reference tree-walking
+//!        |                         │             interpreter (nested state)
+//!        |                         └── [vm]      stage 2: constant folding +
+//!        |                                       expression bytecode over
+//!        |                                       flat packed states
+//! ```
+//!
+//! Stage 1 ([`compile`]) resolves names to dense slots and threads every
+//! proctype into a SPIN-style instruction automaton. Stage 2
+//! ([`vm::PromelaVm`]) lowers the operand trees to linear bytecode with
+//! short-circuit jumps, packs the whole state into one flat `i32` vector
+//! (clone = memcpy, hashing = one pass) and can **specialize** the
+//! program to a coordinator shard's (WG, TS) sub-lattice so off-shard
+//! successors are never generated. The interpreter
+//! ([`interp::PromelaSystem`]) executes stage 1 directly and serves as
+//! the reference implementation the differential suite
+//! (`rust/tests/promela_vm.rs`) pins the VM against — state counts,
+//! verdicts and trails must match one-to-one.
+//!
+//! The subset covers everything the paper's models use: proctypes
+//! (active or run-spawned, with parameters), rendezvous and buffered
+//! channels, atomic, if/do with else, for, select, inline macros,
+//! #define, mtype, arrays, Promela's conditional expressions, and
+//! SPIN's per-declared-width store truncation (bit/byte/short/int).
 //!
 //! `templates` generates the paper's two models (abstract platform &
 //! minimum problem) for arbitrary sizes; pregenerated instances ship in
@@ -17,5 +41,7 @@ pub mod interp;
 pub mod lexer;
 pub mod parser;
 pub mod templates;
+pub mod vm;
 
 pub use interp::{source_hash, PromelaSystem, PState};
+pub use vm::{PromelaVm, TuningBounds, VState};

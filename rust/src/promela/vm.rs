@@ -1,0 +1,1602 @@
+//! Stage two of the two-stage compile: the bytecode VM over flat packed
+//! states — the production Promela execution engine.
+//!
+//! The front end ([`super::parser`] → [`super::compile`]) produces a
+//! [`Program`] of per-proctype instruction automata whose operands are
+//! tree-shaped [`CExpr`]s. The reference interpreter ([`super::interp`])
+//! walks those trees and clones a nested `Vec<Vec<i32>>` state per
+//! successor. This module lowers the same automaton one stage further:
+//!
+//! - **expression bytecode**: every `CExpr` is constant-folded and
+//!   compiled to a linear stack program ([`VOp`]) with short-circuit
+//!   jumps — the same discipline as `SafetyLtl::compile` — evaluated over
+//!   a fixed-size stack with zero allocation;
+//! - **flat packed states**: a [`VState`] is a single `Vec<i32>` laid out
+//!   by a compile-time table (header, globals, uniform channel regions,
+//!   uniform process frames), so cloning a state is one memcpy and
+//!   encoding/hashing is a single linear pass;
+//! - **shard specialization**: the compiler optionally bakes a (WG, TS)
+//!   sub-lattice ([`TuningBounds`]) into the program. Stores into the
+//!   tuning slots check the bounds *at the choice point, before the
+//!   successor is materialized*, replacing the coordinator's per-successor
+//!   `ShardModel` re-filtering for Promela jobs. The check fires only
+//!   once both tuning variables are positive (a non-positive value means
+//!   "not chosen yet"), which keeps the explored state space — including
+//!   the intermediate states between the WG and TS choices — *identical*
+//!   to the generic re-filtering wrapper, so shard results, state counts
+//!   and cache entries are byte-for-byte unchanged. Contract: the tuning
+//!   slots must start non-positive and be committed monotonically (the
+//!   paper's models choose them exactly once); a model whose initial
+//!   image already commits a tuning must use the `ShardModel` wrapper
+//!   (see [`tuning_committed_at_init`]).
+//!
+//! The VM executes the *same* automaton as the interpreter — identical
+//! pcs, `next` threading, option order and atomic coalescing — so the two
+//! engines' state spaces correspond one-to-one. The differential suite
+//! (`rust/tests/promela_vm.rs`) pins verdicts, state counts and trails of
+//! both engines against each other on the whole example corpus.
+//!
+//! Known (documented) divergence: channel *message* layouts are
+//! fixed-width here, so a send whose argument count exceeds the declared
+//! channel arity truncates the message to the arity (the interpreter
+//! appends the extra words). SPIN rejects such models at compile time;
+//! none of the corpus contains one.
+
+use super::ast::{PBinOp, UnOp};
+use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot, VarType};
+use super::interp::{MAX_PROCS, MAX_SELECT_FANOUT};
+use crate::model::TransitionSystem;
+use crate::util::error::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Header word indices of a packed state.
+const EXCL: usize = 0;
+const NCHANS: usize = 1;
+const NPROCS: usize = 2;
+const HDR: usize = 3;
+
+/// Process-frame field offsets (frame-relative).
+const PC: usize = 1; // frame[0] = ptype
+const ALIVE: usize = 2;
+const LOCALS: usize = 3;
+
+/// Channel-region field offsets (region-relative; capacity is word 0 of
+/// the region, indexed directly).
+const CHAN_ARITY: usize = 1;
+const CHAN_QLEN: usize = 2;
+const CHAN_BUF: usize = 3;
+
+/// Operand-stack slots of the expression evaluator. The lowering pass
+/// computes each expression's exact peak depth and rejects programs that
+/// exceed this (the paper's models peak below 10).
+const MAX_EVAL_DEPTH: usize = 64;
+
+/// Bound on channel arity, send/recv argument lists and proctype
+/// parameter lists — sizes fixed-width message buffers on the stack.
+const MAX_ARGS: usize = 16;
+
+/// Bound on coalesced atomic chains (see `interp::MAX_ATOMIC_CHAIN`).
+const MAX_ATOMIC_CHAIN: u32 = 4096;
+
+/// A packed Promela state: one flat `i32` vector.
+///
+/// Layout: `[exclusive, nchans, nprocs | globals… | chan regions… |
+/// proc frames…]`. Channel regions are a uniform `chan_stride` words
+/// (`[cap, arity, qlen, buf…]`, unused buffer words held at zero so the
+/// encoding stays canonical); process frames are a uniform `frame_stride`
+/// words (`[ptype, pc, alive, locals…]`, unused local words zero). All
+/// strides come from the compiled program, so cloning is a single memcpy
+/// and the visited-store encoding is one linear pass over the words.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VState {
+    pub data: Vec<i32>,
+}
+
+/// An axis-aligned (WG, TS) sub-lattice baked into a specialized program
+/// (inclusive bounds; the coordinator converts its `TuningShard`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuningBounds {
+    pub wg_min: u32,
+    pub wg_max: u32,
+    pub ts_min: u32,
+    pub ts_max: u32,
+}
+
+/// Does the program's initial image already commit a (WG, TS) tuning?
+/// Shard specialization prunes at *stores* into the tuning slots, so a
+/// model violating the start-unset contract must fall back to the generic
+/// `ShardModel` re-filtering wrapper.
+pub fn tuning_committed_at_init(prog: &Program) -> bool {
+    let read = |name: &str| {
+        prog.global_syms
+            .get(name)
+            .map(|v| prog.globals_init[v.offset as usize])
+            .unwrap_or(0)
+    };
+    read("WG") > 0 && read("TS") > 0
+}
+
+// ------------------------------------------------------------- bytecode --
+
+/// One expression-bytecode instruction. Connectives compile to
+/// conditional jumps with the same keep-top/pop-fallthrough convention as
+/// `model::property`'s compiled evaluator, so short-circuit laziness —
+/// including division-by-zero reachability — matches the tree-walking
+/// interpreter exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VOp {
+    Const(i32),
+    LoadG(u32),
+    LoadL(u32),
+    /// (base, len): pops the index, pushes the element (bounds-checked)
+    ElemG(u32, u32),
+    ElemL(u32, u32),
+    Not,
+    Neg,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Shl,
+    Shr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// top = (top != 0)
+    Norm,
+    /// if top == 0 jump keeping top, else pop and fall through
+    Jz(u32),
+    /// if top != 0 jump keeping top, else pop and fall through
+    Jnz(u32),
+    /// pop; jump when the popped value was 0 (conditional expression)
+    JzPop(u32),
+    Jmp(u32),
+}
+
+/// A lowered expression: either fully constant-folded, or a region of the
+/// shared bytecode pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ExprRef {
+    Const(i32),
+    Code(u32, u32),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VmLVal {
+    G(u32, VarType),
+    L(u32, VarType),
+    GElem(u32, u32, ExprRef, VarType),
+    LElem(u32, u32, ExprRef, VarType),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum VmRecvArg {
+    Bind(VmLVal),
+    Match(ExprRef),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum VmOp {
+    Guard(ExprRef),
+    Assign(VmLVal, ExprRef),
+    Send(ExprRef, Vec<ExprRef>),
+    /// third field: true when some bind targets a watched tuning slot
+    /// (then the post-bind state takes the shard check)
+    Recv(ExprRef, Vec<VmRecvArg>, bool),
+    Select(VmLVal, ExprRef, ExprRef),
+    Branch(Vec<u32>, Option<u32>),
+    Run(u32, Vec<ExprRef>),
+    NewChan(VmLVal, u16, u16),
+    Halt,
+}
+
+#[derive(Debug, Clone)]
+struct VmInstr {
+    op: VmOp,
+    next: u32,
+    atomic_next: bool,
+}
+
+#[derive(Debug, Clone)]
+struct VmProc {
+    entry: u32,
+    nparams: u32,
+    param_types: Vec<VarType>,
+    code: Vec<VmInstr>,
+}
+
+/// Shard-specialization constants compiled into the program: the dense
+/// slots of WG/TS and the inclusive bounds.
+#[derive(Debug, Clone, Copy)]
+struct Spec {
+    wg: u32,
+    ts: u32,
+    wg_min: i64,
+    wg_max: i64,
+    ts_min: i64,
+    ts_max: i64,
+}
+
+// ---------------------------------------------------------------- fold --
+
+/// Constant-fold a front-end expression. Division/modulo by a constant
+/// zero is left unfolded so the runtime error fires exactly where the
+/// interpreter's does; `&&`/`||` with a constant *left* operand fold to
+/// the normalized right operand (or a constant), preserving the
+/// interpreter's evaluation-order and laziness semantics.
+fn fold(e: &CExpr) -> CExpr {
+    match e {
+        CExpr::Num(_) | CExpr::Load(_) => e.clone(),
+        CExpr::LoadElem(s, len, idx) => CExpr::LoadElem(*s, *len, Box::new(fold(idx))),
+        CExpr::Un(op, a) => {
+            let a = fold(a);
+            if let CExpr::Num(n) = a {
+                return CExpr::Num(match op {
+                    UnOp::Not => (n == 0) as i32,
+                    UnOp::Neg => n.wrapping_neg(),
+                });
+            }
+            CExpr::Un(*op, Box::new(a))
+        }
+        CExpr::Bin(op, a, b) => {
+            let a = fold(a);
+            let b = fold(b);
+            match (*op, &a) {
+                (PBinOp::And, CExpr::Num(0)) => return CExpr::Num(0),
+                (PBinOp::And, CExpr::Num(_)) => return normalized(b),
+                (PBinOp::Or, CExpr::Num(0)) => return normalized(b),
+                (PBinOp::Or, CExpr::Num(_)) => return CExpr::Num(1),
+                _ => {}
+            }
+            if let (CExpr::Num(x), CExpr::Num(y)) = (&a, &b) {
+                if let Some(v) = fold_bin(*op, *x, *y) {
+                    return CExpr::Num(v);
+                }
+            }
+            CExpr::Bin(*op, Box::new(a), Box::new(b))
+        }
+        CExpr::Cond(c, a, b) => {
+            let c = fold(c);
+            if let CExpr::Num(n) = c {
+                return if n != 0 { fold(a) } else { fold(b) };
+            }
+            CExpr::Cond(Box::new(c), Box::new(fold(a)), Box::new(fold(b)))
+        }
+    }
+}
+
+/// `(e != 0)` — the value `&&`/`||` folding substitutes for a live
+/// operand (same value, same evaluation effects).
+fn normalized(e: CExpr) -> CExpr {
+    match e {
+        CExpr::Num(n) => CExpr::Num((n != 0) as i32),
+        e => CExpr::Bin(PBinOp::Ne, Box::new(e), Box::new(CExpr::Num(0))),
+    }
+}
+
+/// Wrapping semantics identical to `interp::PromelaSystem::eval`.
+fn fold_bin(op: PBinOp, x: i32, y: i32) -> Option<i32> {
+    Some(match op {
+        PBinOp::Add => x.wrapping_add(y),
+        PBinOp::Sub => x.wrapping_sub(y),
+        PBinOp::Mul => x.wrapping_mul(y),
+        PBinOp::Div => {
+            if y == 0 {
+                return None;
+            }
+            x.wrapping_div(y)
+        }
+        PBinOp::Mod => {
+            if y == 0 {
+                return None;
+            }
+            x.wrapping_rem(y)
+        }
+        PBinOp::Shl => x.wrapping_shl(y as u32 & 31),
+        PBinOp::Shr => x.wrapping_shr(y as u32 & 31),
+        PBinOp::Eq => (x == y) as i32,
+        PBinOp::Ne => (x != y) as i32,
+        PBinOp::Lt => (x < y) as i32,
+        PBinOp::Le => (x <= y) as i32,
+        PBinOp::Gt => (x > y) as i32,
+        PBinOp::Ge => (x >= y) as i32,
+        PBinOp::And => ((x != 0) && (y != 0)) as i32,
+        PBinOp::Or => ((x != 0) || (y != 0)) as i32,
+    })
+}
+
+// ------------------------------------------------------------- lowering --
+
+struct Lowerer {
+    pool: Vec<VOp>,
+}
+
+impl Lowerer {
+    fn lower_expr(&mut self, e: &CExpr) -> Result<ExprRef> {
+        let f = fold(e);
+        if let CExpr::Num(n) = f {
+            return Ok(ExprRef::Const(n));
+        }
+        let start = self.pool.len() as u32;
+        let mut max = 0u32;
+        self.emit_expr(&f, 0, &mut max);
+        ensure!(
+            max as usize <= MAX_EVAL_DEPTH,
+            "expression needs {} evaluation-stack slots (VM limit {})",
+            max,
+            MAX_EVAL_DEPTH
+        );
+        Ok(ExprRef::Code(start, self.pool.len() as u32))
+    }
+
+    /// Emit bytecode that pushes exactly one value; `depth` is the number
+    /// of operands already on the stack, `max` tracks the peak.
+    fn emit_expr(&mut self, e: &CExpr, depth: u32, max: &mut u32) {
+        *max = (*max).max(depth + 1);
+        match e {
+            CExpr::Num(n) => self.pool.push(VOp::Const(*n)),
+            CExpr::Load(Slot::Global(o)) => self.pool.push(VOp::LoadG(*o)),
+            CExpr::Load(Slot::Local(o)) => self.pool.push(VOp::LoadL(*o)),
+            CExpr::LoadElem(s, len, idx) => {
+                self.emit_expr(idx, depth, max);
+                self.pool.push(match s {
+                    Slot::Global(o) => VOp::ElemG(*o, *len),
+                    Slot::Local(o) => VOp::ElemL(*o, *len),
+                });
+            }
+            CExpr::Un(UnOp::Not, a) => {
+                self.emit_expr(a, depth, max);
+                self.pool.push(VOp::Not);
+            }
+            CExpr::Un(UnOp::Neg, a) => {
+                self.emit_expr(a, depth, max);
+                self.pool.push(VOp::Neg);
+            }
+            CExpr::Bin(PBinOp::And, a, b) => {
+                self.emit_expr(a, depth, max);
+                self.pool.push(VOp::Norm);
+                let j = self.pool.len();
+                self.pool.push(VOp::Jz(0));
+                self.emit_expr(b, depth, max);
+                self.pool.push(VOp::Norm);
+                self.pool[j] = VOp::Jz(self.pool.len() as u32);
+            }
+            CExpr::Bin(PBinOp::Or, a, b) => {
+                self.emit_expr(a, depth, max);
+                self.pool.push(VOp::Norm);
+                let j = self.pool.len();
+                self.pool.push(VOp::Jnz(0));
+                self.emit_expr(b, depth, max);
+                self.pool.push(VOp::Norm);
+                self.pool[j] = VOp::Jnz(self.pool.len() as u32);
+            }
+            CExpr::Bin(op, a, b) => {
+                self.emit_expr(a, depth, max);
+                self.emit_expr(b, depth + 1, max);
+                self.pool.push(match op {
+                    PBinOp::Add => VOp::Add,
+                    PBinOp::Sub => VOp::Sub,
+                    PBinOp::Mul => VOp::Mul,
+                    PBinOp::Div => VOp::Div,
+                    PBinOp::Mod => VOp::Mod,
+                    PBinOp::Shl => VOp::Shl,
+                    PBinOp::Shr => VOp::Shr,
+                    PBinOp::Eq => VOp::Eq,
+                    PBinOp::Ne => VOp::Ne,
+                    PBinOp::Lt => VOp::Lt,
+                    PBinOp::Le => VOp::Le,
+                    PBinOp::Gt => VOp::Gt,
+                    PBinOp::Ge => VOp::Ge,
+                    PBinOp::And | PBinOp::Or => unreachable!("connectives handled above"),
+                });
+            }
+            CExpr::Cond(c, a, b) => {
+                self.emit_expr(c, depth, max);
+                let j_else = self.pool.len();
+                self.pool.push(VOp::JzPop(0));
+                self.emit_expr(a, depth, max);
+                let j_end = self.pool.len();
+                self.pool.push(VOp::Jmp(0));
+                self.pool[j_else] = VOp::JzPop(self.pool.len() as u32);
+                self.emit_expr(b, depth, max);
+                self.pool[j_end] = VOp::Jmp(self.pool.len() as u32);
+            }
+        }
+    }
+
+    fn lower_lval(&mut self, lv: &CLVal) -> Result<VmLVal> {
+        Ok(match lv {
+            CLVal::Scalar(Slot::Global(o), ty) => VmLVal::G(*o, *ty),
+            CLVal::Scalar(Slot::Local(o), ty) => VmLVal::L(*o, *ty),
+            CLVal::Elem(Slot::Global(o), len, idx, ty) => {
+                VmLVal::GElem(*o, *len, self.lower_expr(idx)?, *ty)
+            }
+            CLVal::Elem(Slot::Local(o), len, idx, ty) => {
+                VmLVal::LElem(*o, *len, self.lower_expr(idx)?, *ty)
+            }
+        })
+    }
+}
+
+fn lval_watches(spec: &Spec, lv: &VmLVal) -> bool {
+    match *lv {
+        VmLVal::G(o, _) => o == spec.wg || o == spec.ts,
+        VmLVal::GElem(base, len, _, _) => {
+            (spec.wg >= base && spec.wg < base + len) || (spec.ts >= base && spec.ts < base + len)
+        }
+        _ => false,
+    }
+}
+
+// ------------------------------------------------------------------ VM --
+
+/// A compiled Promela model: the front-end [`Program`] lowered to
+/// expression bytecode over flat packed [`VState`]s, optionally
+/// shard-specialized (see the module docs).
+pub struct PromelaVm {
+    src: Program,
+    nglobals: usize,
+    chan_stride: usize,
+    frame_stride: usize,
+    procs: Vec<VmProc>,
+    pool: Vec<VOp>,
+    spec: Option<Spec>,
+    /// SPIN-style atomic merging (see `interp::PromelaSystem`).
+    pub coalesce_atomic: bool,
+    /// successor states materialized and emitted (pre any downstream
+    /// filtering) — lets tests assert that specialization generates
+    /// strictly fewer raw successors than generate-then-filter
+    generated: AtomicU64,
+}
+
+impl PromelaVm {
+    /// Compile without shard specialization (explores the full lattice).
+    pub fn new(prog: Program) -> Result<Self> {
+        Self::specialized(prog, None)
+    }
+
+    pub fn from_source(src: &str) -> Result<Self> {
+        let model = super::parser::parse(src)?;
+        Self::new(super::compile::compile(&model)?)
+    }
+
+    /// Compile with an optional (WG, TS) sub-lattice baked in. Bounds
+    /// covering the whole lattice — or a model without WG/TS globals —
+    /// compile unspecialized (nothing would ever be pruned).
+    pub fn specialized(prog: Program, bounds: Option<TuningBounds>) -> Result<Self> {
+        let spec = bounds.and_then(|b| {
+            let wg = prog.global_syms.get("WG")?.offset;
+            let ts = prog.global_syms.get("TS")?.offset;
+            if b.wg_min <= 1 && b.wg_max == u32::MAX && b.ts_min <= 1 && b.ts_max == u32::MAX {
+                return None;
+            }
+            Some(Spec {
+                wg,
+                ts,
+                wg_min: b.wg_min as i64,
+                wg_max: b.wg_max as i64,
+                ts_min: b.ts_min as i64,
+                ts_max: b.ts_max as i64,
+            })
+        });
+
+        let nglobals = prog.globals_init.len();
+        let mut max_buf = 0usize;
+        for &(cap, arity) in &prog.global_chans {
+            ensure!(
+                (arity as usize) <= MAX_ARGS,
+                "channel arity {} exceeds the VM limit {}",
+                arity,
+                MAX_ARGS
+            );
+            max_buf = max_buf.max(cap as usize * arity as usize);
+        }
+        let mut max_locals = 0u32;
+        let mut lw = Lowerer { pool: Vec::new() };
+        let mut procs = Vec::with_capacity(prog.procs.len());
+        for pd in &prog.procs {
+            max_locals = max_locals.max(pd.nlocals);
+            ensure!(
+                (pd.nparams as usize) <= MAX_ARGS,
+                "proctype `{}` has {} parameters (VM limit {})",
+                pd.name,
+                pd.nparams,
+                MAX_ARGS
+            );
+            let mut code = Vec::with_capacity(pd.code.len());
+            for ins in &pd.code {
+                let op = lower_op(&mut lw, ins, spec.as_ref(), &mut max_buf)?;
+                code.push(VmInstr { op, next: ins.next, atomic_next: ins.atomic_next });
+            }
+            procs.push(VmProc {
+                entry: pd.entry,
+                nparams: pd.nparams,
+                param_types: pd.param_types.clone(),
+                code,
+            });
+        }
+
+        Ok(Self {
+            nglobals,
+            chan_stride: CHAN_BUF + max_buf,
+            frame_stride: LOCALS + max_locals as usize,
+            procs,
+            pool: lw.pool,
+            spec,
+            coalesce_atomic: true,
+            generated: AtomicU64::new(0),
+            src: prog,
+        })
+    }
+
+    /// Instruction-level variant (every atomic step is a visible state).
+    pub fn without_atomic_coalescing(mut self) -> Self {
+        self.coalesce_atomic = false;
+        self
+    }
+
+    /// The stage-one program this VM was compiled from.
+    pub fn program(&self) -> &Program {
+        &self.src
+    }
+
+    /// Whether this program was compiled with shard bounds baked in.
+    pub fn is_specialized(&self) -> bool {
+        self.spec.is_some()
+    }
+
+    /// Raw successor states materialized so far (see field docs).
+    pub fn generated(&self) -> u64 {
+        self.generated.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_generated(&self) {
+        self.generated.store(0, Ordering::Relaxed);
+    }
+
+    // ------------------------------------------------------- state access --
+
+    #[inline]
+    fn nchans(&self, d: &[i32]) -> usize {
+        d[NCHANS] as usize
+    }
+
+    #[inline]
+    fn nprocs(&self, d: &[i32]) -> usize {
+        d[NPROCS] as usize
+    }
+
+    #[inline]
+    fn chan_off(&self, c: usize) -> usize {
+        HDR + self.nglobals + c * self.chan_stride
+    }
+
+    #[inline]
+    fn procs_base(&self, d: &[i32]) -> usize {
+        HDR + self.nglobals + self.nchans(d) * self.chan_stride
+    }
+
+    #[inline]
+    fn proc_off(&self, d: &[i32], p: usize) -> usize {
+        self.procs_base(d) + p * self.frame_stride
+    }
+
+    #[inline]
+    fn frame_of(&self, d: &[i32], p: usize) -> usize {
+        self.proc_off(d, p) + LOCALS
+    }
+
+    #[inline]
+    fn alive(&self, d: &[i32], p: usize) -> bool {
+        d[self.proc_off(d, p) + ALIVE] != 0
+    }
+
+    #[inline]
+    fn pc_of(&self, d: &[i32], p: usize) -> u32 {
+        d[self.proc_off(d, p) + PC] as u32
+    }
+
+    #[inline]
+    fn instr_of(&self, d: &[i32], p: usize, pc: u32) -> &VmInstr {
+        let off = self.proc_off(d, p);
+        &self.procs[d[off] as usize].code[pc as usize]
+    }
+
+    // ---------------------------------------------------------- expr eval --
+
+    #[inline]
+    fn eval(&self, d: &[i32], frame: usize, e: ExprRef) -> i32 {
+        match e {
+            ExprRef::Const(n) => n,
+            ExprRef::Code(s, t) => self.run_code(d, frame, s as usize, t as usize),
+        }
+    }
+
+    fn run_code(&self, d: &[i32], frame: usize, start: usize, end: usize) -> i32 {
+        let mut stack = [0i32; MAX_EVAL_DEPTH];
+        let mut sp = 0usize;
+        let mut pc = start;
+        while pc < end {
+            match self.pool[pc] {
+                VOp::Const(n) => {
+                    stack[sp] = n;
+                    sp += 1;
+                }
+                VOp::LoadG(o) => {
+                    stack[sp] = d[HDR + o as usize];
+                    sp += 1;
+                }
+                VOp::LoadL(o) => {
+                    stack[sp] = d[frame + o as usize];
+                    sp += 1;
+                }
+                VOp::ElemG(base, len) => {
+                    let i = stack[sp - 1];
+                    assert!(
+                        i >= 0 && (i as u32) < len,
+                        "array index {} out of bounds 0..{}",
+                        i,
+                        len
+                    );
+                    stack[sp - 1] = d[HDR + base as usize + i as usize];
+                }
+                VOp::ElemL(base, len) => {
+                    let i = stack[sp - 1];
+                    assert!(
+                        i >= 0 && (i as u32) < len,
+                        "array index {} out of bounds 0..{}",
+                        i,
+                        len
+                    );
+                    stack[sp - 1] = d[frame + base as usize + i as usize];
+                }
+                VOp::Not => stack[sp - 1] = (stack[sp - 1] == 0) as i32,
+                VOp::Neg => stack[sp - 1] = stack[sp - 1].wrapping_neg(),
+                VOp::Norm => stack[sp - 1] = (stack[sp - 1] != 0) as i32,
+                VOp::Jz(t) => {
+                    if stack[sp - 1] == 0 {
+                        pc = t as usize;
+                        continue;
+                    }
+                    sp -= 1;
+                }
+                VOp::Jnz(t) => {
+                    if stack[sp - 1] != 0 {
+                        pc = t as usize;
+                        continue;
+                    }
+                    sp -= 1;
+                }
+                VOp::JzPop(t) => {
+                    sp -= 1;
+                    if stack[sp] == 0 {
+                        pc = t as usize;
+                        continue;
+                    }
+                }
+                VOp::Jmp(t) => {
+                    pc = t as usize;
+                    continue;
+                }
+                op => {
+                    sp -= 1;
+                    let b = stack[sp];
+                    let a = stack[sp - 1];
+                    stack[sp - 1] = match op {
+                        VOp::Add => a.wrapping_add(b),
+                        VOp::Sub => a.wrapping_sub(b),
+                        VOp::Mul => a.wrapping_mul(b),
+                        VOp::Div => {
+                            assert!(b != 0, "division by zero in model");
+                            a.wrapping_div(b)
+                        }
+                        VOp::Mod => {
+                            assert!(b != 0, "mod by zero in model");
+                            a.wrapping_rem(b)
+                        }
+                        VOp::Shl => a.wrapping_shl(b as u32 & 31),
+                        VOp::Shr => a.wrapping_shr(b as u32 & 31),
+                        VOp::Eq => (a == b) as i32,
+                        VOp::Ne => (a != b) as i32,
+                        VOp::Lt => (a < b) as i32,
+                        VOp::Le => (a <= b) as i32,
+                        VOp::Gt => (a > b) as i32,
+                        VOp::Ge => (a >= b) as i32,
+                        _ => unreachable!("non-binary op in binary dispatch"),
+                    };
+                }
+            }
+            pc += 1;
+        }
+        debug_assert_eq!(sp, 1, "expression block must leave exactly one value");
+        stack[0]
+    }
+
+    fn store(&self, d: &mut [i32], frame: usize, lv: VmLVal, v: i32) {
+        match lv {
+            VmLVal::G(o, ty) => d[HDR + o as usize] = ty.truncate(v),
+            VmLVal::L(o, ty) => d[frame + o as usize] = ty.truncate(v),
+            VmLVal::GElem(base, len, idx, ty) => {
+                let i = self.eval(&*d, frame, idx);
+                assert!(i >= 0 && (i as u32) < len, "array store out of bounds");
+                d[HDR + base as usize + i as usize] = ty.truncate(v);
+            }
+            VmLVal::LElem(base, len, idx, ty) => {
+                let i = self.eval(&*d, frame, idx);
+                assert!(i >= 0 && (i as u32) < len, "array store out of bounds");
+                d[frame + base as usize + i as usize] = ty.truncate(v);
+            }
+        }
+    }
+
+    // ----------------------------------------------------- specialization --
+
+    /// Would committing `v` into watched *scalar* global slot `o` (other
+    /// tuning slot read from the pre-state) land outside the shard?
+    #[inline]
+    fn store_prunes(&self, d: &[i32], o: u32, v: i32) -> bool {
+        let Some(sp) = &self.spec else { return false };
+        let (wg, ts) = if o == sp.wg {
+            (v as i64, d[HDR + sp.ts as usize] as i64)
+        } else if o == sp.ts {
+            (d[HDR + sp.wg as usize] as i64, v as i64)
+        } else {
+            return false;
+        };
+        wg > 0
+            && ts > 0
+            && !(wg >= sp.wg_min && wg <= sp.wg_max && ts >= sp.ts_min && ts <= sp.ts_max)
+    }
+
+    /// Post-store check for the rare lvalue shapes whose target cannot be
+    /// predicted pre-clone (array stores overlapping a tuning slot).
+    fn elem_store_prunes(&self, lv: &VmLVal, d_new: &[i32]) -> bool {
+        let Some(sp) = &self.spec else { return false };
+        if lval_watches(sp, lv) && matches!(lv, VmLVal::GElem(..)) {
+            return self.off_shard(d_new);
+        }
+        false
+    }
+
+    /// Is the state's committed tuning outside the compiled bounds?
+    /// (False while either tuning variable is still non-positive.)
+    fn off_shard(&self, d: &[i32]) -> bool {
+        let Some(sp) = &self.spec else { return false };
+        let wg = d[HDR + sp.wg as usize] as i64;
+        let ts = d[HDR + sp.ts as usize] as i64;
+        wg > 0
+            && ts > 0
+            && !(wg >= sp.wg_min && wg <= sp.wg_max && ts >= sp.ts_min && ts <= sp.ts_max)
+    }
+
+    // ------------------------------------------------------- executability --
+
+    /// Mirrors `interp::PromelaSystem::enabled` — deliberately
+    /// specialization-blind: `else` semantics and option selection follow
+    /// the *unsharded* executability, exactly as the generic re-filtering
+    /// wrapper observes them.
+    fn enabled(&self, d: &[i32], p: usize, pc: u32) -> bool {
+        let frame = self.frame_of(d, p);
+        match &self.instr_of(d, p, pc).op {
+            VmOp::Guard(e) => self.eval(d, frame, *e) != 0,
+            VmOp::Assign(..) | VmOp::NewChan(..) => true,
+            VmOp::Select(_, lo, hi) => self.eval(d, frame, *lo) <= self.eval(d, frame, *hi),
+            VmOp::Run(..) => self.nprocs(d) < MAX_PROCS,
+            VmOp::Send(c, args) => {
+                let cid = self.eval(d, frame, *c) as usize;
+                let coff = self.chan_off(cid);
+                if d[coff] > 0 {
+                    d[coff + CHAN_QLEN] < d[coff]
+                } else {
+                    let mut msg = [0i32; MAX_ARGS];
+                    for (slot, a) in msg.iter_mut().zip(args.iter()) {
+                        *slot = self.eval(d, frame, *a);
+                    }
+                    self.any_ready_recv(d, p, cid, &msg[..args.len()])
+                }
+            }
+            VmOp::Recv(c, pats, _) => {
+                let cid = self.eval(d, frame, *c) as usize;
+                let coff = self.chan_off(cid);
+                if d[coff] > 0 {
+                    if d[coff + CHAN_QLEN] == 0 {
+                        return false;
+                    }
+                    let arity = d[coff + CHAN_ARITY] as usize;
+                    self.msg_matches(d, frame, pats, &d[coff + CHAN_BUF..coff + CHAN_BUF + arity])
+                } else {
+                    self.any_ready_send(d, p, cid, pats)
+                }
+            }
+            VmOp::Branch(opts, els) => {
+                opts.iter().any(|&o| self.enabled(d, p, o))
+                    || els.map_or(false, |e| self.enabled(d, p, e))
+            }
+            VmOp::Halt => false,
+        }
+    }
+
+    fn msg_matches(&self, d: &[i32], frame: usize, pats: &[VmRecvArg], msg: &[i32]) -> bool {
+        pats.iter().zip(msg).all(|(p, &v)| match p {
+            VmRecvArg::Bind(_) => true,
+            VmRecvArg::Match(e) => self.eval(d, frame, *e) == v,
+        })
+    }
+
+    /// Walk process `q`'s current instruction tree for rendezvous receives
+    /// matching (`cid`, `msg`), calling `f` per match. `found` is shared
+    /// across the whole scan (all processes) so `else` options are honored
+    /// only while no match exists anywhere — the interpreter's exact rule.
+    #[allow(clippy::too_many_arguments)]
+    fn walk_recvs<F: FnMut(usize, u32)>(
+        &self,
+        d: &[i32],
+        q: usize,
+        pc: u32,
+        cid: usize,
+        msg: &[i32],
+        found: &mut bool,
+        f: &mut F,
+    ) {
+        let frame_q = self.frame_of(d, q);
+        match &self.instr_of(d, q, pc).op {
+            VmOp::Recv(c, pats, _) => {
+                if self.eval(d, frame_q, *c) as usize == cid
+                    && d[self.chan_off(cid)] == 0
+                    && pats.len() == msg.len()
+                    && self.msg_matches(d, frame_q, pats, msg)
+                {
+                    *found = true;
+                    f(q, pc);
+                }
+            }
+            VmOp::Branch(opts, els) => {
+                for &o in opts {
+                    self.walk_recvs(d, q, o, cid, msg, found, f);
+                }
+                if let Some(e) = els {
+                    if !*found {
+                        self.walk_recvs(d, q, *e, cid, msg, found, f);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn any_ready_recv(&self, d: &[i32], sender: usize, cid: usize, msg: &[i32]) -> bool {
+        let mut found = false;
+        for q in 0..self.nprocs(d) {
+            if q == sender || !self.alive(d, q) {
+                continue;
+            }
+            let pc = self.pc_of(d, q);
+            self.walk_recvs(d, q, pc, cid, msg, &mut found, &mut |_, _| {});
+        }
+        found
+    }
+
+    /// Rendezvous-receive executability: walk other processes for a
+    /// matching ready *send* on `cid` (generation stays sender-side).
+    fn any_ready_send(&self, d: &[i32], recver: usize, cid: usize, pats: &[VmRecvArg]) -> bool {
+        let recver_frame = self.frame_of(d, recver);
+        let mut found = false;
+        for q in 0..self.nprocs(d) {
+            if q == recver || !self.alive(d, q) {
+                continue;
+            }
+            let pc = self.pc_of(d, q);
+            self.walk_sends(d, recver_frame, q, pc, cid, pats, &mut found);
+        }
+        found
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk_sends(
+        &self,
+        d: &[i32],
+        recver_frame: usize,
+        q: usize,
+        pc: u32,
+        cid: usize,
+        pats: &[VmRecvArg],
+        found: &mut bool,
+    ) {
+        let frame_q = self.frame_of(d, q);
+        match &self.instr_of(d, q, pc).op {
+            VmOp::Send(c, args) => {
+                if self.eval(d, frame_q, *c) as usize == cid
+                    && d[self.chan_off(cid)] == 0
+                    && args.len() == pats.len()
+                {
+                    let mut msg = [0i32; MAX_ARGS];
+                    for (slot, a) in msg.iter_mut().zip(args.iter()) {
+                        *slot = self.eval(d, frame_q, *a);
+                    }
+                    if self.msg_matches(d, recver_frame, pats, &msg[..args.len()]) {
+                        *found = true;
+                    }
+                }
+            }
+            VmOp::Branch(opts, els) => {
+                for &o in opts {
+                    self.walk_sends(d, recver_frame, q, o, cid, pats, found);
+                }
+                if let Some(e) = els {
+                    if !*found {
+                        self.walk_sends(d, recver_frame, q, *e, cid, pats, found);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // --------------------------------------------------------- transitions --
+
+    /// Kill the process if its pc reached Halt (mirrors interp).
+    fn maybe_halt(&self, d: &mut [i32], p: usize) {
+        let off = self.proc_off(d, p);
+        let ptype = d[off] as usize;
+        let pc = d[off + PC] as usize;
+        if matches!(self.procs[ptype].code[pc].op, VmOp::Halt) {
+            d[off + ALIVE] = 0;
+            if d[EXCL] == p as i32 {
+                d[EXCL] = -1;
+            }
+        }
+    }
+
+    /// Advance proc `p` past the fired instruction: set pc, handle body
+    /// end, update exclusivity — the interpreter's `after` sequence.
+    fn finish_step(&self, ns: &mut VState, p: usize, next: u32, atomic_next: bool) {
+        let off = self.proc_off(&ns.data, p);
+        ns.data[off + PC] = next as i32;
+        self.maybe_halt(&mut ns.data, p);
+        ns.data[EXCL] = if atomic_next { p as i32 } else { -1 };
+    }
+
+    /// Emit `ns`, or continue its atomic chain (mirrors
+    /// `interp::push_or_continue`). Returns true when shard
+    /// specialization pruned any continuation — the caller must then not
+    /// fall back to emitting the intermediate state, exactly as the
+    /// re-filtering wrapper drops the chain's off-shard leaves.
+    fn emit(&self, ns: VState, out: &mut Vec<VState>, depth: u32) -> bool {
+        if self.coalesce_atomic && depth < MAX_ATOMIC_CHAIN && ns.data[EXCL] >= 0 {
+            let p = ns.data[EXCL] as usize;
+            let off = self.proc_off(&ns.data, p);
+            if ns.data[off + ALIVE] != 0 {
+                let pc = ns.data[off + PC] as u32;
+                if self.enabled(&ns.data, p, pc) {
+                    let before = out.len();
+                    let pruned = self.gen_from_d(&ns, p, pc, out, depth + 1);
+                    if out.len() > before || pruned {
+                        return pruned;
+                    }
+                }
+            }
+        }
+        self.generated.fetch_add(1, Ordering::Relaxed);
+        out.push(ns);
+        false
+    }
+
+    fn gen_from(&self, s: &VState, p: usize, pc: u32, out: &mut Vec<VState>) -> bool {
+        self.gen_from_d(s, p, pc, out, 0)
+    }
+
+    /// Generate all transitions of process `p` from instruction `pc`.
+    /// Returns true when shard specialization suppressed any successor.
+    fn gen_from_d(&self, s: &VState, p: usize, pc: u32, out: &mut Vec<VState>, depth: u32) -> bool {
+        let d = &s.data[..];
+        let frame = self.frame_of(d, p);
+        let instr = self.instr_of(d, p, pc);
+        let mut pruned = false;
+        match &instr.op {
+            VmOp::Branch(opts, els) => {
+                let mut any = false;
+                for &o in opts {
+                    if self.enabled(d, p, o) {
+                        any = true;
+                        pruned |= self.gen_from_d(s, p, o, out, depth);
+                    }
+                }
+                if !any {
+                    if let Some(e) = els {
+                        if self.enabled(d, p, *e) {
+                            pruned |= self.gen_from_d(s, p, *e, out, depth);
+                        }
+                    }
+                }
+            }
+            VmOp::Guard(e) => {
+                if self.eval(d, frame, *e) != 0 {
+                    let mut ns = s.clone();
+                    self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                    pruned |= self.emit(ns, out, depth);
+                }
+            }
+            VmOp::Assign(lv, e) => {
+                let v = self.eval(d, frame, *e);
+                if let VmLVal::G(o, ty) = *lv {
+                    if self.store_prunes(d, o, ty.truncate(v)) {
+                        return true; // off-shard choice: never materialized
+                    }
+                }
+                let mut ns = s.clone();
+                self.store(&mut ns.data, frame, *lv, v);
+                if self.elem_store_prunes(lv, &ns.data) {
+                    return true;
+                }
+                self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                pruned |= self.emit(ns, out, depth);
+            }
+            VmOp::NewChan(lv, cap, arity) => {
+                let id = self.nchans(d) as i32;
+                if let VmLVal::G(o, ty) = *lv {
+                    if self.store_prunes(d, o, ty.truncate(id)) {
+                        return true;
+                    }
+                }
+                let mut ns = s.clone();
+                let pb = self.procs_base(&ns.data);
+                let stride = self.chan_stride;
+                let old_len = ns.data.len();
+                // append a zeroed region, rotate it in front of the frames
+                ns.data.resize(old_len + stride, 0);
+                ns.data[pb..].rotate_right(stride);
+                ns.data[pb] = *cap as i32;
+                ns.data[pb + CHAN_ARITY] = *arity as i32;
+                ns.data[NCHANS] += 1;
+                let frame_ns = self.frame_of(&ns.data, p);
+                self.store(&mut ns.data, frame_ns, *lv, id);
+                if self.elem_store_prunes(lv, &ns.data) {
+                    return true;
+                }
+                self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                pruned |= self.emit(ns, out, depth);
+            }
+            VmOp::Select(lv, lo, hi) => {
+                let l = self.eval(d, frame, *lo);
+                let h = self.eval(d, frame, *hi).min(l.saturating_add(MAX_SELECT_FANOUT));
+                for v in l..=h {
+                    if let VmLVal::G(o, ty) = *lv {
+                        if self.store_prunes(d, o, ty.truncate(v)) {
+                            pruned = true; // off-shard value: skip unmaterialized
+                            continue;
+                        }
+                    }
+                    let mut ns = s.clone();
+                    self.store(&mut ns.data, frame, *lv, v);
+                    self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                    pruned |= self.emit(ns, out, depth);
+                }
+            }
+            VmOp::Run(pt, args) => {
+                if self.nprocs(d) >= MAX_PROCS {
+                    return false;
+                }
+                let def = &self.procs[*pt as usize];
+                let n = args.len().min(def.nparams as usize);
+                let mut argv = [0i32; MAX_ARGS];
+                for (i, (slot, a)) in argv.iter_mut().zip(args.iter()).enumerate().take(n) {
+                    *slot = def.param_types[i].truncate(self.eval(d, frame, *a));
+                }
+                let mut ns = s.clone();
+                let base = ns.data.len(); // frames are the trailing region
+                ns.data.resize(base + self.frame_stride, 0);
+                ns.data[base] = *pt as i32;
+                ns.data[base + PC] = def.entry as i32;
+                ns.data[base + ALIVE] = 1;
+                ns.data[base + LOCALS..base + LOCALS + n].copy_from_slice(&argv[..n]);
+                ns.data[NPROCS] += 1;
+                // entry could itself be a Halt (empty body)
+                let np = ns.data[NPROCS] as usize - 1;
+                self.maybe_halt(&mut ns.data, np);
+                let off = self.proc_off(&ns.data, p);
+                ns.data[off + PC] = instr.next as i32;
+                self.maybe_halt(&mut ns.data, p);
+                ns.data[EXCL] = if instr.atomic_next { p as i32 } else { -1 };
+                pruned |= self.emit(ns, out, depth);
+            }
+            VmOp::Send(c, args) => {
+                let cid = self.eval(d, frame, *c) as usize;
+                let coff = self.chan_off(cid);
+                let mut msg_buf = [0i32; MAX_ARGS];
+                for (slot, a) in msg_buf.iter_mut().zip(args.iter()) {
+                    *slot = self.eval(d, frame, *a);
+                }
+                let msg = &msg_buf[..args.len()];
+                if d[coff] > 0 {
+                    let qlen = d[coff + CHAN_QLEN];
+                    if qlen < d[coff] {
+                        let arity = d[coff + CHAN_ARITY] as usize;
+                        let mut ns = s.clone();
+                        let w = coff + CHAN_BUF + qlen as usize * arity;
+                        let n = msg.len().min(arity);
+                        ns.data[w..w + n].copy_from_slice(&msg[..n]);
+                        ns.data[coff + CHAN_QLEN] += 1;
+                        self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                        pruned |= self.emit(ns, out, depth);
+                    }
+                } else {
+                    // rendezvous: one combined transition per ready receiver
+                    let mut found = false;
+                    let mut chain_pruned = false;
+                    for q in 0..self.nprocs(d) {
+                        if q == p || !self.alive(d, q) {
+                            continue;
+                        }
+                        let pcq = self.pc_of(d, q);
+                        self.walk_recvs(d, q, pcq, cid, msg, &mut found, &mut |qm, rpc| {
+                            chain_pruned |=
+                                self.fire_rendezvous(s, p, instr, qm, rpc, msg, out, depth);
+                        });
+                    }
+                    pruned |= chain_pruned;
+                }
+            }
+            VmOp::Recv(c, pats, binds_watch) => {
+                let cid = self.eval(d, frame, *c) as usize;
+                let coff = self.chan_off(cid);
+                if d[coff] > 0 && d[coff + CHAN_QLEN] > 0 {
+                    let arity = d[coff + CHAN_ARITY] as usize;
+                    let mut head_buf = [0i32; MAX_ARGS];
+                    head_buf[..arity]
+                        .copy_from_slice(&d[coff + CHAN_BUF..coff + CHAN_BUF + arity]);
+                    let head = &head_buf[..arity];
+                    if self.msg_matches(d, frame, pats, head) {
+                        let mut ns = s.clone();
+                        // dequeue: shift the remaining messages, zero the tail
+                        let qlen = ns.data[coff + CHAN_QLEN] as usize;
+                        let b = coff + CHAN_BUF;
+                        ns.data.copy_within(b + arity..b + qlen * arity, b);
+                        ns.data[b + (qlen - 1) * arity..b + qlen * arity].fill(0);
+                        ns.data[coff + CHAN_QLEN] -= 1;
+                        for (pat, &v) in pats.iter().zip(head) {
+                            if let VmRecvArg::Bind(lv) = pat {
+                                self.store(&mut ns.data, frame, *lv, v);
+                            }
+                        }
+                        if *binds_watch && self.off_shard(&ns.data) {
+                            return true;
+                        }
+                        self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
+                        pruned |= self.emit(ns, out, depth);
+                    }
+                }
+                // rendezvous receives fire from the sender's side only
+            }
+            VmOp::Halt => {}
+        }
+        pruned
+    }
+
+    /// One combined rendezvous transition: sender `p` hands `msg` to
+    /// receiver `q` at its receive instruction `rpc`.
+    #[allow(clippy::too_many_arguments)]
+    fn fire_rendezvous(
+        &self,
+        s: &VState,
+        p: usize,
+        sinstr: &VmInstr,
+        q: usize,
+        rpc: u32,
+        msg: &[i32],
+        out: &mut Vec<VState>,
+        depth: u32,
+    ) -> bool {
+        let d = &s.data[..];
+        let rinstr = self.instr_of(d, q, rpc);
+        let VmOp::Recv(_, pats, binds_watch) = &rinstr.op else {
+            unreachable!("walk_recvs only matches receive instructions")
+        };
+        let frame_q = self.frame_of(d, q);
+        let mut ns = s.clone();
+        for (pat, &v) in pats.iter().zip(msg) {
+            if let VmRecvArg::Bind(lv) = pat {
+                self.store(&mut ns.data, frame_q, *lv, v);
+            }
+        }
+        if *binds_watch && self.off_shard(&ns.data) {
+            return true;
+        }
+        let poff = self.proc_off(&ns.data, p);
+        ns.data[poff + PC] = sinstr.next as i32;
+        let qoff = self.proc_off(&ns.data, q);
+        ns.data[qoff + PC] = rinstr.next as i32;
+        self.maybe_halt(&mut ns.data, p);
+        self.maybe_halt(&mut ns.data, q);
+        // SPIN passes control to the receiver inside atomic
+        ns.data[EXCL] = if rinstr.atomic_next {
+            q as i32
+        } else if sinstr.atomic_next {
+            p as i32
+        } else {
+            -1
+        };
+        self.emit(ns, out, depth)
+    }
+
+    fn initial_state(&self) -> VState {
+        let src = &self.src;
+        let mut data = Vec::with_capacity(
+            HDR + self.nglobals
+                + src.global_chans.len() * self.chan_stride
+                + src.active.len() * self.frame_stride,
+        );
+        data.push(-1); // exclusive
+        data.push(src.global_chans.len() as i32);
+        data.push(src.active.len() as i32);
+        data.extend_from_slice(&src.globals_init);
+        for &(cap, arity) in &src.global_chans {
+            let at = data.len();
+            data.resize(at + self.chan_stride, 0);
+            data[at] = cap as i32;
+            data[at + CHAN_ARITY] = arity as i32;
+        }
+        for &a in &src.active {
+            let at = data.len();
+            data.resize(at + self.frame_stride, 0);
+            data[at] = a as i32;
+            data[at + PC] = self.procs[a as usize].entry as i32;
+            data[at + ALIVE] = 1;
+        }
+        VState { data }
+    }
+}
+
+fn lower_op(
+    lw: &mut Lowerer,
+    ins: &Instr,
+    spec: Option<&Spec>,
+    max_buf: &mut usize,
+) -> Result<VmOp> {
+    Ok(match &ins.op {
+        Op::Guard(e) => VmOp::Guard(lw.lower_expr(e)?),
+        Op::Assign(lv, e) => VmOp::Assign(lw.lower_lval(lv)?, lw.lower_expr(e)?),
+        Op::Send(c, args) => {
+            ensure!(
+                args.len() <= MAX_ARGS,
+                "send carries {} fields (VM limit {})",
+                args.len(),
+                MAX_ARGS
+            );
+            let c = lw.lower_expr(c)?;
+            let args = args.iter().map(|a| lw.lower_expr(a)).collect::<Result<Vec<_>>>()?;
+            VmOp::Send(c, args)
+        }
+        Op::Recv(c, pats) => {
+            ensure!(
+                pats.len() <= MAX_ARGS,
+                "receive carries {} fields (VM limit {})",
+                pats.len(),
+                MAX_ARGS
+            );
+            let c = lw.lower_expr(c)?;
+            let pats = pats
+                .iter()
+                .map(|a| {
+                    Ok(match a {
+                        CRecvArg::Bind(lv) => VmRecvArg::Bind(lw.lower_lval(lv)?),
+                        CRecvArg::Match(e) => VmRecvArg::Match(lw.lower_expr(e)?),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let binds_watch = spec.map_or(false, |sp| {
+                pats.iter().any(|a| matches!(a, VmRecvArg::Bind(lv) if lval_watches(sp, lv)))
+            });
+            VmOp::Recv(c, pats, binds_watch)
+        }
+        Op::Select(lv, lo, hi) => {
+            VmOp::Select(lw.lower_lval(lv)?, lw.lower_expr(lo)?, lw.lower_expr(hi)?)
+        }
+        Op::Branch(opts, els) => VmOp::Branch(opts.clone(), *els),
+        Op::Run(pt, args) => {
+            let args = args.iter().map(|a| lw.lower_expr(a)).collect::<Result<Vec<_>>>()?;
+            VmOp::Run(*pt, args)
+        }
+        Op::NewChan(lv, cap, arity) => {
+            ensure!(
+                (*arity as usize) <= MAX_ARGS,
+                "channel arity {} exceeds the VM limit {}",
+                arity,
+                MAX_ARGS
+            );
+            *max_buf = (*max_buf).max(*cap as usize * *arity as usize);
+            VmOp::NewChan(lw.lower_lval(lv)?, *cap, *arity)
+        }
+        Op::Halt => VmOp::Halt,
+    })
+}
+
+impl TransitionSystem for PromelaVm {
+    type State = VState;
+
+    fn initial_states(&self) -> Vec<VState> {
+        vec![self.initial_state()]
+    }
+
+    fn successors(&self, s: &VState, out: &mut Vec<VState>) {
+        out.clear();
+        let d = &s.data[..];
+        // exclusivity: if the exclusive process can move, only it moves
+        if d[EXCL] >= 0 {
+            let p = d[EXCL] as usize;
+            if self.alive(d, p) {
+                let pc = self.pc_of(d, p);
+                let pruned = self.gen_from(s, p, pc, out);
+                // `pruned` counts as "the process could move": the generic
+                // wrapper would see its (filtered-away) successors and
+                // keep exclusivity too, ending with the same empty set
+                if !out.is_empty() || pruned {
+                    return;
+                }
+            }
+            // blocked inside atomic: exclusivity is lost (SPIN semantics)
+        }
+        for p in 0..self.nprocs(d) {
+            if self.alive(d, p) {
+                let pc = self.pc_of(d, p);
+                self.gen_from(s, p, pc, out);
+            }
+        }
+    }
+
+    fn encode(&self, s: &VState, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(s.data.len() * 4);
+        for w in &s.data {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    fn eval_var(&self, s: &VState, name: &str) -> Option<i64> {
+        let v = self.src.global_syms.get(name)?;
+        Some(s.data[HDR + v.offset as usize] as i64)
+    }
+
+    fn resolve_slot(&self, name: &str) -> Option<u32> {
+        // slot id = offset into the packed globals, resolved once
+        self.src.global_syms.get(name).map(|v| v.offset)
+    }
+
+    fn eval_slots(&self, s: &VState, ids: &[u32], out: &mut [i64]) -> u64 {
+        for (i, &id) in ids.iter().enumerate() {
+            out[i] = s.data[HDR + id as usize] as i64;
+        }
+        0
+    }
+
+    fn describe(&self, s: &VState) -> String {
+        let d = &s.data[..];
+        let pcs: Vec<String> = (0..self.nprocs(d))
+            .map(|p| {
+                let off = self.proc_off(d, p);
+                let def = &self.src.procs[d[off] as usize];
+                if d[off + ALIVE] != 0 {
+                    format!("{}@{}", def.name, d[off + PC])
+                } else {
+                    format!("{}†", def.name)
+                }
+            })
+            .collect();
+        let mut globs: Vec<(&String, i64)> = self
+            .src
+            .global_syms
+            .iter()
+            .filter(|(_, v)| v.len == 1)
+            .map(|(n, v)| (n, d[HDR + v.offset as usize] as i64))
+            .collect();
+        globs.sort();
+        let gs: Vec<String> = globs.iter().map(|(n, v)| format!("{}={}", n, v)).collect();
+        format!("[{}] {}", pcs.join(" "), gs.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::{check, CheckOptions};
+    use crate::model::SafetyLtl;
+
+    fn vm(src: &str) -> PromelaVm {
+        PromelaVm::from_source(src).expect("model compiles")
+    }
+
+    fn terminals(m: &PromelaVm) -> Vec<VState> {
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let rep = check(m, &p, &CheckOptions::default()).unwrap();
+        assert!(rep.exhausted);
+        let mut terminals = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = m.initial_states();
+        let mut buf = Vec::new();
+        while let Some(s) = stack.pop() {
+            if !seen.insert(s.clone()) {
+                continue;
+            }
+            m.successors(&s, &mut buf);
+            if buf.is_empty() {
+                terminals.push(s.clone());
+            }
+            stack.extend(buf.drain(..));
+        }
+        terminals
+    }
+
+    #[test]
+    fn sequential_assignments_execute() {
+        let m = vm("int a; int b; active proctype main() { a = 2; b = a + 3 }");
+        let ts = terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "a"), Some(2));
+        assert_eq!(m.eval_var(&ts[0], "b"), Some(5));
+    }
+
+    #[test]
+    fn select_branches_and_arrays() {
+        let m = vm(
+            "int x; byte i; int a[3]; active proctype main() {\
+               select (i : 0 .. 2); a[i] = 7; x = a[i] * 10 }",
+        );
+        let ts = terminals(&m);
+        let mut xs: Vec<i64> = ts.iter().map(|t| m.eval_var(t, "x").unwrap()).collect();
+        xs.sort();
+        assert_eq!(xs, vec![70, 70, 70]);
+        assert_eq!(ts.len(), 3, "three distinct array states");
+    }
+
+    #[test]
+    fn rendezvous_handshake() {
+        let m = vm(
+            "mtype = {go, done};\nchan c = [0] of {mtype};\nint got;\n\
+             active proctype main() { run w(); c ! go; c ? done }\n\
+             proctype w() { c ? go; got = 1; c ! done }",
+        );
+        let ts = terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some(1));
+    }
+
+    #[test]
+    fn buffered_channel_fifo_and_truncation() {
+        let m = vm(
+            "chan c = [2] of {int};\nint a; int got;\n\
+             active proctype main() { byte x; c ! 300; c ! 2; c ? x; got = x; c ? x; a = x }",
+        );
+        let ts = terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some((300 & 0xFF) as i64));
+        assert_eq!(m.eval_var(&ts[0], "a"), Some(2));
+    }
+
+    #[test]
+    fn local_chan_declaration_works() {
+        let m = vm(
+            "int got;\n\
+             active proctype main() { chan c = [1] of {byte}; c ! 9; byte x; c ? x; got = x }",
+        );
+        let ts = terminals(&m);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(m.eval_var(&ts[0], "got"), Some(9));
+    }
+
+    #[test]
+    fn constant_folding_collapses_constant_expressions() {
+        // `2 * 3 + 1` and a constant-true guard must lower to Const refs
+        let m = vm("int x; active proctype main() { skip; x = 2 * 3 + 1 }");
+        let code = &m.procs[0].code;
+        assert!(code.iter().any(|i| matches!(i.op, VmOp::Guard(ExprRef::Const(1)))));
+        assert!(code
+            .iter()
+            .any(|i| matches!(i.op, VmOp::Assign(_, ExprRef::Const(7)))));
+        let ts = terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "x"), Some(7));
+    }
+
+    #[test]
+    fn folding_preserves_division_by_zero() {
+        // 1/0 must stay a runtime error, not a compile-time panic
+        let m = vm("int x; active proctype main() { x = 1 / 0 }");
+        let init = m.initial_states().pop().unwrap();
+        let mut out = Vec::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.successors(&init, &mut out)
+        }));
+        assert!(r.is_err(), "division by zero must panic at evaluation time");
+    }
+
+    #[test]
+    fn short_circuit_skips_division_by_zero() {
+        let m = vm("int x; int z; active proctype main() { x = (z != 0 && 10 / z > 1) }");
+        let ts = terminals(&m);
+        assert_eq!(m.eval_var(&ts[0], "x"), Some(0));
+    }
+
+    #[test]
+    fn atomic_chain_coalesces() {
+        let m = vm(
+            "int x;\nactive proctype main() { run a(); run b() }\n\
+             proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+             proctype b() { int t; atomic { t = x; x = t + 1 } }",
+        );
+        let ts = terminals(&m);
+        let xs: std::collections::HashSet<i64> =
+            ts.iter().map(|t| m.eval_var(t, "x").unwrap()).collect();
+        assert_eq!(xs, [2i64].into_iter().collect());
+    }
+
+    #[test]
+    fn specialization_prunes_at_the_choice_point() {
+        // WG/TS chosen by selects through a shift — prune fires at the
+        // assignment that commits the pair
+        let src = "int WG; int TS; int done;\n\
+             active proctype main() {\n\
+               byte i; byte j;\n\
+               select (i : 1 .. 2); WG = 1 << i;\n\
+               select (j : 1 .. 2); TS = 1 << j;\n\
+               done = 1\n\
+             }";
+        let full = PromelaVm::from_source(src).unwrap();
+        let prog = super::super::parser::parse(src)
+            .and_then(|m| super::super::compile::compile(&m))
+            .unwrap();
+        let narrow = PromelaVm::specialized(
+            prog,
+            Some(TuningBounds { wg_min: 4, wg_max: 4, ts_min: 0, ts_max: u32::MAX }),
+        )
+        .unwrap();
+        assert!(narrow.is_specialized());
+
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let all = check(&full, &p, &CheckOptions::default()).unwrap();
+        let shard = check(&narrow, &p, &CheckOptions::default()).unwrap();
+        assert!(shard.stats.states_stored < all.stats.states_stored);
+        // raw generation strictly dropped (compare before any further walk)
+        assert!(narrow.generated() < full.generated());
+
+        // every completed terminal in the shard carries WG == 4
+        for t in terminals(&narrow) {
+            if narrow.eval_var(&t, "done") == Some(1) {
+                assert_eq!(narrow.eval_var(&t, "WG"), Some(4));
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_committed_at_init_detects_preset_models() {
+        let committed = super::super::parser::parse(
+            "int WG = 2; int TS = 2; active proctype main() { skip }",
+        )
+        .and_then(|m| super::super::compile::compile(&m))
+        .unwrap();
+        assert!(tuning_committed_at_init(&committed));
+        let unset = super::super::parser::parse(
+            "int WG; int TS; active proctype main() { skip }",
+        )
+        .and_then(|m| super::super::compile::compile(&m))
+        .unwrap();
+        assert!(!tuning_committed_at_init(&unset));
+    }
+
+    #[test]
+    fn packed_layout_roundtrips_header() {
+        let m = vm("int a = 5; active proctype main() { run w() }\nproctype w() { skip }");
+        let init = m.initial_state();
+        assert_eq!(init.data[EXCL], -1);
+        assert_eq!(init.data[NCHANS], 0);
+        assert_eq!(init.data[NPROCS], 1);
+        assert_eq!(m.eval_var(&init, "a"), Some(5));
+        let mut out = Vec::new();
+        m.successors(&init, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data[NPROCS], 2, "run appends a frame");
+        let mut enc = Vec::new();
+        m.encode(&out[0], &mut enc);
+        assert_eq!(enc.len(), out[0].data.len() * 4);
+    }
+}

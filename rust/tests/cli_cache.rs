@@ -1,0 +1,120 @@
+//! CLI coverage for `mcautotune cache ls|rm` — the first slice of the
+//! cache-lifecycle tooling (see ROADMAP "Batch tuning" follow-ups).
+
+use mcautotune::coordinator::ResultCache;
+use mcautotune::tuner::{cached_result, CachedTune, Method, TuneCache};
+use std::path::PathBuf;
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mcautotune");
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mcat_clicache_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(BIN).args(args).output().expect("spawn mcautotune");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn cache_ls_and_rm_roundtrip() {
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("cache.json");
+    let path_s = path.to_str().unwrap();
+
+    // seed two entries through the library
+    let native_desc = "model=minimum size=64 gmt=3 method=exhaustive prop=over_time";
+    {
+        let mut c = ResultCache::open(&path).unwrap();
+        c.store(
+            native_desc,
+            &cached_result(
+                Method::Exhaustive,
+                CachedTune { wg: 8, ts: 2, t_min: 36, steps: 9 },
+                "seed",
+            ),
+        );
+        c.store(
+            "engine=promela pml=0123456789abcdef method=exhaustive prop=over_time",
+            &cached_result(
+                Method::Exhaustive,
+                CachedTune { wg: 4, ts: 4, t_min: 528, steps: 21 },
+                "seed",
+            ),
+        );
+        c.save().unwrap();
+    }
+
+    let (ok, text) = run(&["cache", "ls", path_s]);
+    assert!(ok, "cache ls failed: {}", text);
+    assert!(text.contains("2 entries"), "{}", text);
+    assert!(text.contains("model=minimum size=64"), "{}", text);
+    assert!(text.contains("engine=promela pml="), "{}", text);
+    assert!(text.contains("WG=8 TS=2 t_min=36"), "{}", text);
+
+    let (ok, text) = run(&["cache", "rm", path_s, "engine=promela"]);
+    assert!(ok, "cache rm failed: {}", text);
+    assert!(text.contains("removed 1 entry"), "{}", text);
+
+    let (ok, text) = run(&["cache", "ls", path_s]);
+    assert!(ok);
+    assert!(text.contains("1 entry"), "{}", text);
+    assert!(!text.contains("engine=promela"), "{}", text);
+
+    // the file on disk agrees with the library view
+    let mut c = ResultCache::open(&path).unwrap();
+    assert_eq!(c.len(), 1);
+    assert!(c.lookup(native_desc).is_some());
+
+    // removing nothing reports zero and keeps the file valid
+    let (ok, text) = run(&["cache", "rm", path_s, "no-such-needle"]);
+    assert!(ok);
+    assert!(text.contains("removed 0 entries"), "{}", text);
+    assert_eq!(ResultCache::open(&path).unwrap().len(), 1);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_rm_on_missing_file_errors_and_bad_action_is_rejected() {
+    let dir = temp_dir("errors");
+    let missing = dir.join("nope.json");
+    let (ok, text) = run(&["cache", "rm", missing.to_str().unwrap(), "x"]);
+    assert!(!ok, "rm on a missing file must fail: {}", text);
+    assert!(!missing.exists(), "rm must not create the file");
+
+    let (ok, text) = run(&["cache", "frobnicate", "x.json"]);
+    assert!(!ok);
+    assert!(text.contains("unknown cache action"), "{}", text);
+
+    // bare `cache` prints usage and succeeds
+    let (ok, text) = run(&["cache"]);
+    assert!(ok);
+    assert!(text.contains("ls <file>"), "{}", text);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn worker_status_smoke_on_a_planned_dir() {
+    use mcautotune::coordinator::{BatchOptions, TaskDir, TuningJob};
+    let dir = temp_dir("status");
+    let tasks = dir.join("tasks");
+    let jobs = vec![TuningJob::new(mcautotune::coordinator::ModelKind::Minimum, 16)];
+    let mut cache = ResultCache::in_memory();
+    TaskDir::new(&tasks).plan(&jobs, &BatchOptions::default(), &mut cache).unwrap();
+
+    let (ok, text) = run(&["worker", "--status", tasks.to_str().unwrap()]);
+    assert!(ok, "worker --status failed: {}", text);
+    assert!(text.contains("available"), "{}", text);
+    assert!(text.contains("0 done"), "{}", text);
+    std::fs::remove_dir_all(&dir).ok();
+}

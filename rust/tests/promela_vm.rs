@@ -1,0 +1,435 @@
+//! Differential conformance suite: the bytecode VM over flat packed
+//! states (`promela::vm::PromelaVm`) pinned against the reference
+//! tree-walking interpreter (`promela::interp::PromelaSystem`) — and the
+//! shard-specialized VM pinned against the generic `ShardModel`
+//! re-filtering path.
+//!
+//! Both engines execute the same stage-one automaton, so their state
+//! spaces correspond one-to-one: for every corpus model the verdict, the
+//! stored/matched/transition counts, the violation sequence and every
+//! trail (compared state-by-state through `describe`) must be identical
+//! under sequential DFS *and* the deterministic parallel frontier. A
+//! property test additionally pins bytecode expression evaluation
+//! (constant folding, short-circuit jumps, conditional expressions) to
+//! the tree-walk on generated expression trees.
+
+use mcautotune::checker::{check, CheckOptions, Frontier};
+use mcautotune::coordinator::{
+    merge_results, plan_batch, run_batch, BatchOptions, JobEngine, JobModel, ModelKind,
+    ResultCache, ShardModel, TuningJob,
+};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::PlatformConfig;
+use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
+use mcautotune::prop_assert_eq;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::prop::{forall, Config};
+use mcautotune::util::rng::Xoshiro256;
+
+/// The example corpus: every semantic feature of the subset, plus the
+/// paper's two generated models, each with a property that exercises
+/// trail extraction where the model can violate one.
+fn corpus() -> Vec<(&'static str, String, &'static str)> {
+    vec![
+        (
+            "seq-assign",
+            "int a; int b; active proctype main() { a = 2; b = a + 3 }".into(),
+            "G(true)",
+        ),
+        (
+            "select",
+            "int x; byte i; active proctype main() { select (i : 1 .. 3); x = i * 10 }".into(),
+            "G(x != 20)",
+        ),
+        (
+            "do-break",
+            "int i; active proctype main() { do :: i < 5 -> i++ :: else -> break od }".into(),
+            "G(i < 5)",
+        ),
+        (
+            "arrays",
+            "int a[4]; int s; byte i; active proctype main() {\
+               for (i : 0 .. 3) { a[i] = i * i }\
+               for (i : 0 .. 3) { s = s + a[i] } }"
+                .into(),
+            "G(s != 14)",
+        ),
+        (
+            "rendezvous",
+            "mtype = {go, done};\nchan c = [0] of {mtype};\nint got;\n\
+             active proctype main() { run w(); c ! go; c ? done }\n\
+             proctype w() { c ? go; got = 1; c ! done }"
+                .into(),
+            "G(got == 0)",
+        ),
+        (
+            "rendezvous-match",
+            "mtype = {go, stop};\nchan c = [0] of {mtype};\nint path;\n\
+             active proctype main() { run w(); c ! go }\n\
+             proctype w() { if :: c ? go -> path = 1 :: c ? stop -> path = 2 fi }"
+                .into(),
+            "G(path == 0)",
+        ),
+        (
+            "buffered-fifo",
+            "chan c = [2] of {byte};\nint a; int b;\n\
+             active proctype main() { c ! 1; c ! 2; run w() }\n\
+             proctype w() { byte x; c ? x; a = x; c ? x; b = x }"
+                .into(),
+            "G(b != 2)",
+        ),
+        (
+            "else-choice",
+            "int x = 1; int r;\n\
+             active proctype main() { if :: x == 1 -> r = 10 :: else -> r = 20 fi }"
+                .into(),
+            "G(true)",
+        ),
+        (
+            "interleave-race",
+            "int x;\nactive proctype main() { run a(); run b() }\n\
+             proctype a() { x = 1 }\nproctype b() { x = 2 }"
+                .into(),
+            "G(x != 2)",
+        ),
+        (
+            "atomic-increment",
+            "int x;\nactive proctype main() { run a(); run b() }\n\
+             proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+             proctype b() { int t; atomic { t = x; x = t + 1 } }"
+                .into(),
+            "G(x != 2)",
+        ),
+        (
+            "blocking-guard",
+            "int flag; int r;\n\
+             active proctype main() { run setter(); flag == 1; r = 99 }\n\
+             proctype setter() { flag = 1 }"
+                .into(),
+            "G(r != 99)",
+        ),
+        (
+            "deadlock",
+            "chan c = [0] of {byte};\nint r;\nactive proctype main() { byte x; c ? x; r = 1 }"
+                .into(),
+            "G(true)",
+        ),
+        (
+            "local-chan",
+            "int got;\n\
+             active proctype main() { chan c = [1] of {byte}; c ! 9; byte x; c ? x; got = x }"
+                .into(),
+            "G(got != 9)",
+        ),
+        (
+            "byte-wrap",
+            "byte k = 200; int laps;\n\
+             active proctype main() { do :: k != 0 -> k++ :: else -> break od; laps = 1 }"
+                .into(),
+            "G(!(k == 0 && laps == 1))",
+        ),
+        (
+            "clock-mini",
+            r#"
+            int time; int nrp; int active_n = 2; bool FIN;
+            active proctype main() { atomic { run p(); run p(); run clock() } }
+            proctype p() {
+              byte k; int cur;
+              for (k : 0 .. 2) {
+                atomic { cur = time; nrp = nrp + 1 };
+                time > cur
+              };
+              atomic { active_n = active_n - 1; FIN = (active_n == 0 -> 1 : 0) }
+            }
+            proctype clock() {
+              do
+              :: FIN -> break
+              :: !FIN && nrp >= active_n && active_n > 0 ->
+                   atomic { nrp = 0; time = time + 1 }
+              od
+            }
+            "#
+            .into(),
+            "G(FIN -> time > 3)",
+        ),
+        ("minimum-8", templates::minimum_pml(8, 4, 3), "G(!FIN)"),
+        (
+            "abstract-8",
+            templates::abstract_pml(8, &PlatformConfig { nd: 1, nu: 1, np: 2, gmt: 2 }),
+            "G(!FIN)",
+        ),
+    ]
+}
+
+/// Run both engines under `opts` and assert report + trail identity.
+fn assert_engines_agree(
+    name: &str,
+    label: &str,
+    interp: &PromelaSystem,
+    vm: &PromelaVm,
+    prop: &SafetyLtl,
+    opts: &CheckOptions,
+) {
+    let ri = check(interp, prop, opts).unwrap();
+    let rv = check(vm, prop, opts).unwrap();
+    assert_eq!(ri.exhausted, rv.exhausted, "{}/{}: exhausted", name, label);
+    assert_eq!(
+        ri.stats.states_stored, rv.stats.states_stored,
+        "{}/{}: states_stored",
+        name, label
+    );
+    assert_eq!(
+        ri.stats.states_matched, rv.stats.states_matched,
+        "{}/{}: states_matched",
+        name, label
+    );
+    assert_eq!(
+        ri.stats.transitions, rv.stats.transitions,
+        "{}/{}: transitions",
+        name, label
+    );
+    assert_eq!(
+        ri.violations.len(),
+        rv.violations.len(),
+        "{}/{}: violation count",
+        name,
+        label
+    );
+    for (k, (vi, vv)) in ri.violations.iter().zip(&rv.violations).enumerate() {
+        assert_eq!(vi.depth, vv.depth, "{}/{}: violation {} depth", name, label, k);
+        assert_eq!(
+            vi.trail.states.len(),
+            vv.trail.states.len(),
+            "{}/{}: violation {} trail length",
+            name,
+            label,
+            k
+        );
+        for (si, sv) in vi.trail.states.iter().zip(&vv.trail.states) {
+            assert_eq!(
+                interp.describe(si),
+                vm.describe(sv),
+                "{}/{}: violation {} trail state",
+                name,
+                label,
+                k
+            );
+        }
+    }
+}
+
+#[test]
+fn vm_matches_interpreter_on_the_full_corpus() {
+    for (name, src, prop) in corpus() {
+        let interp = PromelaSystem::from_source(&src).unwrap();
+        let vm = PromelaVm::from_source(&src).unwrap();
+        let prop = SafetyLtl::parse(prop).unwrap();
+        let dfs = CheckOptions { collect_all: true, ..CheckOptions::default() };
+        assert_engines_agree(name, "dfs", &interp, &vm, &prop, &dfs);
+        let det = CheckOptions {
+            collect_all: true,
+            threads: 4,
+            frontier: Frontier::Deterministic,
+            ..CheckOptions::default()
+        };
+        assert_engines_agree(name, "det4", &interp, &vm, &prop, &det);
+        // first-trail identity under the default early-stop search
+        assert_engines_agree(name, "first", &interp, &vm, &prop, &CheckOptions::default());
+    }
+}
+
+#[test]
+fn vm_matches_interpreter_without_atomic_coalescing() {
+    let src = "int x;\nactive proctype main() { run a(); run b() }\n\
+               proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+               proctype b() { int t; atomic { t = x; x = t + 1 } }";
+    let interp = PromelaSystem::from_source(src).unwrap().without_atomic_coalescing();
+    let vm = PromelaVm::from_source(src).unwrap().without_atomic_coalescing();
+    let prop = SafetyLtl::parse("G(x != 2)").unwrap();
+    let opts = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    assert_engines_agree("atomic-stepwise", "dfs", &interp, &vm, &prop, &opts);
+}
+
+// ------------------------------------------------- expression equivalence --
+
+/// Random total expression over two int globals (division and modulo use
+/// nonzero constant denominators so neither engine can fault — fault
+/// equivalence has its own test in `promela::vm`).
+fn gen_expr(r: &mut Xoshiro256, depth: u32) -> String {
+    if depth == 0 || r.below(4) == 0 {
+        return match r.below(4) {
+            0 => format!("{}", r.range_i64(-30, 30)),
+            1 => "g0".to_string(),
+            2 => "g1".to_string(),
+            _ => format!("{}", r.range_i64(0, 5)),
+        };
+    }
+    match r.below(18) {
+        0 => format!("(!{})", gen_expr(r, depth - 1)),
+        1 => format!("(-{})", gen_expr(r, depth - 1)),
+        2 => format!(
+            "({} -> {} : {})",
+            gen_expr(r, depth - 1),
+            gen_expr(r, depth - 1),
+            gen_expr(r, depth - 1)
+        ),
+        3 => {
+            let d = r.range_i64(1, 9);
+            format!("({} / {})", gen_expr(r, depth - 1), d)
+        }
+        4 => {
+            let d = r.range_i64(1, 9);
+            format!("({} % {})", gen_expr(r, depth - 1), d)
+        }
+        n => {
+            let op = ["+", "-", "*", "<<", ">>", "==", "!=", "<", "<=", ">", ">=", "&&", "||"]
+                [(n as usize - 5) % 13];
+            format!("({} {} {})", gen_expr(r, depth - 1), op, gen_expr(r, depth - 1))
+        }
+    }
+}
+
+/// Evaluate `expr` by running `r = expr` one step on an engine.
+fn eval_on<M: TransitionSystem>(m: &M) -> i64 {
+    let init = m.initial_states().pop().unwrap();
+    let mut out = Vec::new();
+    m.successors(&init, &mut out);
+    assert_eq!(out.len(), 1, "single deterministic assignment step");
+    m.eval_var(&out[0], "r").unwrap()
+}
+
+#[test]
+fn prop_bytecode_evaluation_matches_tree_walk() {
+    forall(
+        "promela-vm-expr-equivalence",
+        Config { cases: 96, ..Config::default() },
+        |r| {
+            let g0 = r.range_i64(-100, 100);
+            let g1 = r.range_i64(-100, 100);
+            (g0, g1, gen_expr(r, 4))
+        },
+        |(g0, g1, expr)| {
+            let src = format!(
+                "int g0 = {}; int g1 = {}; int r;\nactive proctype main() {{ r = {} }}",
+                g0, g1, expr
+            );
+            let interp = PromelaSystem::from_source(&src).map_err(|e| e.to_string())?;
+            let vm = PromelaVm::from_source(&src).map_err(|e| e.to_string())?;
+            let vi = eval_on(&interp);
+            let vv = eval_on(&vm);
+            prop_assert_eq!(vi, vv);
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------- shard specialization --
+
+/// The acceptance-criteria test: on a ≥4-shard Promela batch, the
+/// specialized path produces byte-identical cache output and identical
+/// deterministic report fields to the generic re-filtering path, while
+/// generating strictly fewer raw successors.
+#[test]
+fn specialized_shards_match_refilter_byte_for_byte_and_generate_fewer() {
+    let mut job = TuningJob::new(ModelKind::Minimum, 16);
+    job.engine = JobEngine::Promela;
+    job.plat.np = 2;
+    job.plat.gmt = 1;
+    job.shards = 6; // 6 requested -> 4 non-empty cells on the 16-lattice
+    let jobs = vec![job];
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+
+    let dir = std::env::temp_dir().join(format!("mcat_vmdiff_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ref_path = dir.join("ref_cache.json");
+    let new_path = dir.join("new_cache.json");
+
+    // Reference path: unspecialized VM behind the generic ShardModel
+    // re-filter, folded through the same plan and merge as run_batch.
+    let mut ref_cache = ResultCache::open(&ref_path).unwrap();
+    let plan = plan_batch(&jobs, &opts, &mut ref_cache).unwrap();
+    assert!(plan.tasks.len() >= 4, "need a >=4-shard batch, got {}", plan.tasks.len());
+    let mut refilter_generated = 0u64;
+    let mut ref_parts = Vec::new();
+    for (ji, sp) in &plan.tasks {
+        assert_eq!(*ji, 0);
+        let JobModel::Pml(m) = jobs[0].build().unwrap() else {
+            panic!("promela job builds a Pml model")
+        };
+        let vm = PromelaVm::new(m.prog).unwrap();
+        let sm = ShardModel::new(&vm, sp.shard);
+        let r = tune(&sm, Method::Exhaustive, &sp.check, &opts.swarm, Some(sp.t_ini)).unwrap();
+        refilter_generated += vm.generated();
+        ref_parts.push(r);
+    }
+    let ref_shard_stats: Vec<(u64, u32, u32, i64)> = ref_parts
+        .iter()
+        .map(|r| (r.states_explored, r.optimal.wg, r.optimal.ts, r.t_min))
+        .collect();
+    let merged = merge_results(ref_parts).unwrap();
+    {
+        use mcautotune::tuner::TuneCache;
+        ref_cache.store(&plan.descs[0], &merged);
+    }
+    ref_cache.save().unwrap();
+
+    // Production path: run_batch compiles one specialized program per shard.
+    let mut new_cache = ResultCache::open(&new_path).unwrap();
+    let report = run_batch(&jobs, &opts, &mut new_cache).unwrap();
+
+    // (1) byte-identical cache output
+    let ref_bytes = std::fs::read_to_string(&ref_path).unwrap();
+    let new_bytes = std::fs::read_to_string(&new_path).unwrap();
+    assert_eq!(ref_bytes, new_bytes, "cache files must be byte-identical");
+
+    // (2) identical deterministic report fields
+    let o = &report.outcomes[0];
+    assert_eq!(
+        (o.result.optimal.wg, o.result.optimal.ts, o.result.t_min),
+        (merged.optimal.wg, merged.optimal.ts, merged.t_min)
+    );
+    assert_eq!(o.result.states_explored, merged.states_explored);
+    assert_eq!(o.result.optimal.steps, merged.optimal.steps);
+
+    // (3) per-shard equivalence + strictly fewer raw successors
+    let mut specialized_generated = 0u64;
+    for ((_, sp), want) in plan.tasks.iter().zip(&ref_shard_stats) {
+        let JobModel::Pml(m) = jobs[0].build().unwrap() else {
+            panic!("promela job builds a Pml model")
+        };
+        let vm = PromelaVm::specialized(m.prog, Some(sp.shard.promela_bounds())).unwrap();
+        assert!(vm.is_specialized(), "sub-lattice bounds must be baked in");
+        let r = tune(&vm, Method::Exhaustive, &sp.check, &opts.swarm, Some(sp.t_ini)).unwrap();
+        specialized_generated += vm.generated();
+        assert_eq!(
+            (r.states_explored, r.optimal.wg, r.optimal.ts, r.t_min),
+            *want,
+            "specialized shard result must match the re-filtering path"
+        );
+    }
+    assert!(
+        specialized_generated < refilter_generated,
+        "specialization must generate strictly fewer raw successors ({} vs {})",
+        specialized_generated,
+        refilter_generated
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Verdict/optimum equivalence of the three execution paths on an
+/// unsharded job: interpreter, VM, and VM behind a full-lattice wrapper.
+#[test]
+fn tuner_finds_the_same_optimum_on_both_engines() {
+    let src = templates::minimum_pml(8, 4, 3);
+    let interp = PromelaSystem::from_source(&src).unwrap();
+    let vm = PromelaVm::from_source(&src).unwrap();
+    let opts = CheckOptions::default();
+    let swarm = mcautotune::swarm::SwarmConfig::default();
+    let ri = tune(&interp, Method::Exhaustive, &opts, &swarm, Some(10_000)).unwrap();
+    let rv = tune(&vm, Method::Exhaustive, &opts, &swarm, Some(10_000)).unwrap();
+    assert_eq!(ri.t_min, rv.t_min);
+    assert_eq!((ri.optimal.wg, ri.optimal.ts), (rv.optimal.wg, rv.optimal.ts));
+    assert_eq!(ri.states_explored, rv.states_explored);
+    assert_eq!(ri.optimal.steps, rv.optimal.steps);
+}
