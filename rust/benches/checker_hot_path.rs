@@ -70,6 +70,19 @@ fn main() {
         });
     }
 
+    // --- telemetry overhead: counters on vs. off ------------------------
+    // explore/seq above ran with telemetry off (the default, and the
+    // configuration the historical numbers pin); this rerun enables the
+    // obs counter registry, and traced/seq becomes overhead_trace_vs_off
+    // in BENCH_checker.json — the disabled path must stay within noise of
+    // pre-telemetry builds, the enabled path within a few percent.
+    mcautotune::obs::set_enabled(true);
+    mcautotune::obs::metrics().reset();
+    b.bench_elems("explore/traced", states, || {
+        check_sequential(&m, &p, &seq_opts).unwrap().stats.states_stored
+    });
+    mcautotune::obs::set_enabled(false);
+
     // --- property monitor: compiled bytecode vs interpreted AST ---------
     let small = AbstractModel::new(size.min(256), PlatformConfig::default(), Granularity::Phase)
         .unwrap();
@@ -163,12 +176,17 @@ fn main() {
         (Some(i), Some(v)) if v > 0.0 => i / v,
         _ => 0.0,
     };
+    let trace_overhead = match (mean_of("explore/seq"), mean_of("explore/traced")) {
+        (Some(s), Some(t)) if s > 0.0 => t / s,
+        _ => 0.0,
+    };
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"checker_hot_path\",\n");
     json.push_str(&format!("  \"model\": \"abstract size={} tick\",\n", size));
     json.push_str(&format!("  \"states\": {},\n", states));
     json.push_str(&format!("  \"speedup_par4_vs_seq\": {:.3},\n", speedup4));
     json.push_str(&format!("  \"speedup_promela_vm_vs_interp\": {:.3},\n", vm_speedup));
+    json.push_str(&format!("  \"overhead_trace_vs_off\": {:.3},\n", trace_overhead));
     json.push_str("  \"results\": [\n");
     let n = b.results().len();
     for (i, r) in b.results().iter().enumerate() {

@@ -171,6 +171,28 @@ struct Frame<S> {
     succs: Vec<S>,
 }
 
+/// Telemetry flush: push the *delta* since the last flush into the
+/// global [`crate::obs::metrics`] registry. Called only from amortized
+/// checkpoints (every 4096 stored states, and once at search end), so
+/// the per-state path carries zero telemetry instructions; when tracing
+/// is off the whole call is one relaxed bool load.
+pub(super) fn flush_search_metrics(
+    stats: &SearchStats,
+    flushed: &mut (u64, u64, u64),
+    bytes: u64,
+) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let m = crate::obs::metrics();
+    m.states_stored.add(stats.states_stored - flushed.0);
+    m.states_matched.add(stats.states_matched - flushed.1);
+    m.transitions.add(stats.transitions - flushed.2);
+    *flushed = (stats.states_stored, stats.states_matched, stats.transitions);
+    m.depth.set_max(stats.max_depth_reached as u64);
+    m.store_bytes.set_max(bytes);
+}
+
 /// Verify `G(prop)` on `model`, single-threaded. Violations carry full
 /// trails. (`checker::check` dispatches here for `threads <= 1`.)
 pub fn check<M: TransitionSystem>(
@@ -190,6 +212,8 @@ pub fn check<M: TransitionSystem>(
         Order::InOrder => None,
     };
     let mut enc = Vec::with_capacity(64);
+    // telemetry high-water marks; see flush_search_metrics
+    let mut flushed = (0u64, 0u64, 0u64);
 
     let mut stack: Vec<Frame<M::State>> = Vec::new();
     // retired successor buffers, reused by later expansions (zero
@@ -282,6 +306,7 @@ pub fn check<M: TransitionSystem>(
 
             // expensive budget checks (amortized: every 4096 stored states)
             if stats.states_stored % 4096 == 0 {
+                flush_search_metrics(&stats, &mut flushed, store.bytes_used());
                 // the DFS stack counts against the budget too: frames plus
                 // the successor buffers they (and the freelist) retain
                 let stack_bytes = (succ_heap
@@ -331,6 +356,7 @@ pub fn check<M: TransitionSystem>(
 
     stats.bytes_used = store.bytes_used();
     stats.elapsed = start.elapsed();
+    flush_search_metrics(&stats, &mut flushed, stats.bytes_used);
     Ok(CheckReport { violations, stats, exhausted })
 }
 

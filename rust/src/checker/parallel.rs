@@ -441,6 +441,16 @@ where
     }
     stats.bytes_used = store.bytes_used();
     stats.elapsed = start.elapsed();
+    // workers flushed their own deltas; account the seed pass and the
+    // exact end-of-run footprint here
+    if crate::obs::enabled() {
+        let m = crate::obs::metrics();
+        m.states_stored.add(seed_stats.stored);
+        m.states_matched.add(seed_stats.matched);
+        m.transitions.add(seed_stats.transitions);
+        m.depth.set_max(stats.max_depth_reached as u64);
+        m.store_bytes.set_max(stats.bytes_used);
+    }
     Ok(CheckReport { violations, stats, exhausted })
 }
 
@@ -473,6 +483,10 @@ where
         Order::InOrder => None,
     };
     let mut processed: u32 = 0;
+    // last (stored, matched, transitions) pushed to the global telemetry
+    // registry; deltas flush from the amortized block below, so the
+    // per-state path carries no telemetry instructions
+    let mut flushed = (0u64, 0u64, 0u64);
 
     loop {
         let task = match local.pop() {
@@ -548,6 +562,15 @@ where
         // catches Vec/hash-table slack the estimate misses) every 64k
         processed = processed.wrapping_add(1);
         if processed % 256 == 0 {
+            if crate::obs::enabled() {
+                let m = crate::obs::metrics();
+                m.states_stored.add(stats.stored - flushed.0);
+                m.states_matched.add(stats.matched - flushed.1);
+                m.transitions.add(stats.transitions - flushed.2);
+                flushed = (stats.stored, stats.matched, stats.transitions);
+                m.depth.set_max(stats.max_depth as u64);
+                m.store_bytes.set_max(store.approx_bytes());
+            }
             if let Some(tb) = opts.time_budget {
                 if start.elapsed() >= tb {
                     ctl.hard_abort(Abort::TimeLimit);
@@ -564,6 +587,14 @@ where
                 queue.close();
             }
         }
+    }
+    // final flush: whatever accumulated since the last amortized checkpoint
+    if crate::obs::enabled() {
+        let m = crate::obs::metrics();
+        m.states_stored.add(stats.stored - flushed.0);
+        m.states_matched.add(stats.matched - flushed.1);
+        m.transitions.add(stats.transitions - flushed.2);
+        m.depth.set_max(stats.max_depth as u64);
     }
     Ok(stats)
 }
@@ -649,6 +680,8 @@ where
     let mut scratch = EvalScratch::default();
     let mut enc = Vec::with_capacity(64);
     let mut frontier: Vec<Task<M::State>> = Vec::new();
+    // telemetry deltas flush at level boundaries only (see dfs)
+    let mut tele_flushed = (0u64, 0u64, 0u64);
 
     // seed level: monitor the initial states in declaration order
     for init in model.initial_states() {
@@ -759,6 +792,11 @@ where
         if stop {
             break;
         }
+        dfs::flush_search_metrics(
+            &stats,
+            &mut tele_flushed,
+            store.bytes_used() + parents.len() as u64 * 24,
+        );
         // budgets, at level granularity (~24 B/backlink entry, as in the
         // sharded store's accounting). The frontier and the next level's
         // expansion buffers are resident alongside the stores, so charge
@@ -796,6 +834,7 @@ where
     let violations = reconstruct_all(model, |h| parents.get(&h).copied(), &pend);
     stats.bytes_used = store.bytes_used() + parents.len() as u64 * 24;
     stats.elapsed = start.elapsed();
+    dfs::flush_search_metrics(&stats, &mut tele_flushed, stats.bytes_used);
     Ok(CheckReport { violations, stats, exhausted })
 }
 
@@ -851,6 +890,7 @@ where
         depth: p.depth as usize,
         found_after: p.found_after,
     };
+    crate::obs::metrics().trail_replays.add(1); // cold path; add() self-gates
 
     let mut chain = vec![p.hash];
     let mut cur = p.hash;

@@ -90,9 +90,12 @@ impl FullStore {
 
     /// Single-probe insert: hash once (caller-supplied), walk one linear
     /// probe sequence, and either match an existing entry or append to the
-    /// arena in place.
+    /// arena in place. Telemetry (probe-length counter) is derived from
+    /// the start/end indices at the exit points, so the probe loop itself
+    /// carries no counting instructions.
     pub(crate) fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
-        let mut i = (h as usize) & self.mask;
+        let start = (h as usize) & self.mask;
+        let mut i = start;
         loop {
             let slot = self.table[i];
             if slot == 0 {
@@ -100,6 +103,10 @@ impl FullStore {
                 self.data.extend_from_slice(enc);
                 self.entries.push(e);
                 self.table[i] = self.entries.len() as u32;
+                if crate::obs::enabled() {
+                    let probes = (i.wrapping_sub(start) & self.mask) as u64 + 1;
+                    crate::obs::metrics().store_probes.add(probes);
+                }
                 // grow at 7/8 load so probe sequences stay short
                 if self.entries.len() * 8 >= self.table.len() * 7 {
                     self.grow();
@@ -108,6 +115,10 @@ impl FullStore {
             }
             let e = self.entries[slot as usize - 1];
             if e.hash == h && e.len as usize == enc.len() && self.entry_bytes(&e) == enc {
+                if crate::obs::enabled() {
+                    let probes = (i.wrapping_sub(start) & self.mask) as u64 + 1;
+                    crate::obs::metrics().store_probes.add(probes);
+                }
                 return false;
             }
             i = (i + 1) & self.mask;
@@ -115,6 +126,7 @@ impl FullStore {
     }
 
     fn grow(&mut self) {
+        crate::obs::metrics().store_resizes.add(1);
         let new_len = self.table.len() * 2;
         self.mask = new_len - 1;
         self.table.clear();

@@ -44,6 +44,12 @@ pub struct CacheEntry {
     /// states explored by the original cold run (reporting only: the
     /// verification work one hit saves)
     pub cold_states: u64,
+    /// peak store footprint of the original cold run, in bytes
+    /// (telemetry; 0 on entries written by pre-telemetry binaries)
+    pub cold_peak_bytes: u64,
+    /// wall time of the original cold run, in milliseconds (telemetry;
+    /// 0 on entries written by pre-telemetry binaries)
+    pub cold_wall_ms: u64,
 }
 
 /// The cache: an in-memory map with optional JSON file backing.
@@ -175,6 +181,10 @@ impl ResultCache {
                     .and_then(Json::as_i64)
                     .with_context(|| format!("entry missing integer field `{}`", key))
             };
+            // telemetry fields are *optional*: entries written by
+            // pre-telemetry binaries (same version 1) simply lack them
+            let opt_u64 =
+                |key: &str| e.get(key).and_then(Json::as_i64).map_or(0, |v| v.max(0) as u64);
             let entry = CacheEntry {
                 desc: string("desc")?,
                 wg: int("wg")? as u32,
@@ -183,6 +193,8 @@ impl ResultCache {
                 steps: int("steps")? as usize,
                 method: string("method")?,
                 cold_states: int("cold_states")? as u64,
+                cold_peak_bytes: opt_u64("cold_peak_bytes"),
+                cold_wall_ms: opt_u64("cold_wall_ms"),
             };
             self.entries.insert(hash_bytes(entry.desc.as_bytes()), entry);
         }
@@ -206,6 +218,8 @@ impl ResultCache {
                     ("steps".into(), Json::Int(e.steps as i64)),
                     ("method".into(), Json::Str(e.method.clone())),
                     ("cold_states".into(), Json::Int(e.cold_states as i64)),
+                    ("cold_peak_bytes".into(), Json::Int(e.cold_peak_bytes.min(i64::MAX as u64) as i64)),
+                    ("cold_wall_ms".into(), Json::Int(e.cold_wall_ms.min(i64::MAX as u64) as i64)),
                 ])
             })
             .collect();
@@ -237,10 +251,12 @@ impl TuneCache for ResultCache {
         match self.entries.get(&key) {
             Some(e) if e.desc == desc => {
                 self.hits += 1;
+                crate::obs::metrics().cache_hits.add(1);
                 Some(CachedTune { wg: e.wg, ts: e.ts, t_min: e.t_min, steps: e.steps })
             }
             _ => {
                 self.misses += 1;
+                crate::obs::metrics().cache_misses.add(1);
                 None
             }
         }
@@ -259,6 +275,8 @@ impl TuneCache for ResultCache {
             }
             .to_string(),
             cold_states: result.states_explored,
+            cold_peak_bytes: result.peak_bytes,
+            cold_wall_ms: result.elapsed.as_millis().min(u64::MAX as u128) as u64,
         };
         self.entries.insert(hash_bytes(desc.as_bytes()), entry);
     }

@@ -151,6 +151,7 @@ pub fn plan_batch(
                 shards: 0,
                 wall: Duration::ZERO,
                 plan: Vec::new(),
+                shard_states: Vec::new(),
             });
             continue;
         }
@@ -205,11 +206,39 @@ pub fn run_shard_task(
     plan: &ShardPlan,
     swarm: &SwarmConfig,
 ) -> Result<TuneResult> {
+    run_shard_task_inner(job, plan, swarm, None)
+}
+
+/// [`run_shard_task`] tagged with its task id (`j###-s###`): when a
+/// flight recorder is installed, publishes one deterministic `shard`
+/// trace event derived purely from per-run data — the [`TuneResult`],
+/// the [`ShardPlan`] and the task's *own* VM counters — never from the
+/// global metrics registry, which concurrent shards cross-contaminate.
+/// Under `--frontier det` the event content is byte-identical no matter
+/// which process (or how many worker processes) executed the task.
+pub fn run_shard_task_traced(
+    job: &TuningJob,
+    plan: &ShardPlan,
+    swarm: &SwarmConfig,
+    id: &str,
+) -> Result<TuneResult> {
+    run_shard_task_inner(job, plan, swarm, Some(id))
+}
+
+fn run_shard_task_inner(
+    job: &TuningJob,
+    plan: &ShardPlan,
+    swarm: &SwarmConfig,
+    tag: Option<&str>,
+) -> Result<TuneResult> {
     // t_ini comes from the plan, never from random simulation: a sharded
     // model can dead-end a simulation walk in a pruned branch (see
     // ShardPlan::t_ini), and the plan's bound is sound anyway.
     let t_ini = Some(plan.t_ini);
-    match job.build_sharded(&plan.shard)? {
+    // (generated, pruned) from the Promela VM this task compiled — the
+    // per-instance counters are this shard's alone, unlike the globals
+    let mut vm_counts: Option<(u64, u64)> = None;
+    let result = match job.build_sharded(&plan.shard)? {
         ShardedExec::Abs(m) => {
             let sm = ShardModel::new(&m, plan.shard);
             tune(&sm, job.method, &plan.check, swarm, t_ini)
@@ -220,10 +249,48 @@ pub fn run_shard_task(
         }
         ShardedExec::PmlWrapped(vm) => {
             let sm = ShardModel::new(&vm, plan.shard);
-            tune(&sm, job.method, &plan.check, swarm, t_ini)
+            let r = tune(&sm, job.method, &plan.check, swarm, t_ini);
+            vm_counts = Some((vm.generated(), vm.pruned()));
+            r
         }
-        ShardedExec::PmlSpecialized(vm) => tune(&vm, job.method, &plan.check, swarm, t_ini),
+        ShardedExec::PmlSpecialized(vm) => {
+            let r = tune(&vm, job.method, &plan.check, swarm, t_ini);
+            vm_counts = Some((vm.generated(), vm.pruned()));
+            r
+        }
+    }?;
+    if let Some((g, p)) = vm_counts {
+        // one pair of adds per task — the VM hot path itself carries no
+        // global-registry traffic
+        let m = crate::obs::metrics();
+        m.vm_generated.add(g);
+        m.vm_pruned.add(p);
     }
+    if let (Some(id), Some(rec)) = (tag, crate::obs::active()) {
+        use crate::obs::ju64;
+        use crate::util::manifest::Json;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("id", Json::Str(id.to_string())),
+            ("job", Json::Str(job.name.clone())),
+            ("wg_min", Json::Int(plan.shard.wg_min as i64)),
+            ("wg_max", Json::Int(plan.shard.wg_max as i64)),
+            ("ts_min", Json::Int(plan.shard.ts_min as i64)),
+            ("ts_max", Json::Int(plan.shard.ts_max as i64)),
+            ("est", ju64(plan.weight)),
+            ("t_ini", Json::Int(plan.t_ini)),
+            ("states", ju64(result.states_explored)),
+            ("t_min", Json::Int(result.t_min)),
+            ("wg", Json::Int(result.optimal.wg as i64)),
+            ("ts", Json::Int(result.optimal.ts as i64)),
+            ("steps", ju64(result.optimal.steps as u64)),
+        ];
+        if let Some((g, p)) = vm_counts {
+            fields.push(("vm_generated", ju64(g)));
+            fields.push(("vm_pruned", ju64(p)));
+        }
+        rec.det_event("shard", fields);
+    }
+    Ok(result)
 }
 
 /// Phase 3: merge per-shard results per job, write back to the cache,
@@ -244,14 +311,14 @@ pub(crate) fn finish_batch(
     cache: &mut ResultCache,
 ) -> Result<Vec<JobOutcome>> {
     let mut per_job: Vec<Vec<TuneResult>> = jobs.iter().map(|_| Vec::new()).collect();
-    let mut per_job_plans: Vec<Vec<ShardPlan>> = jobs.iter().map(|_| Vec::new()).collect();
+    let mut per_job_plans: Vec<Vec<(ShardPlan, u64)>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_wall = vec![Duration::ZERO; jobs.len()];
     let mut failures: Vec<(usize, crate::util::error::Error)> = Vec::new();
     for (ji, plan, wall, result) in shard_results {
         match result {
             Ok(r) => {
+                per_job_plans[ji].push((plan, r.states_explored));
                 per_job[ji].push(r);
-                per_job_plans[ji].push(plan);
                 per_job_wall[ji] = per_job_wall[ji].max(wall);
             }
             Err(e) => failures.push((ji, e)),
@@ -265,10 +332,12 @@ pub(crate) fn finish_batch(
         let merged = merge_results(parts)?;
         cache.store(&descs[ji], &merged);
         completed += 1;
-        // queue completion order is nondeterministic; report plans in
-        // lattice order
-        let mut plan = std::mem::take(&mut per_job_plans[ji]);
-        plan.sort_by_key(|p| (p.shard.wg_min, p.shard.ts_min));
+        // queue completion order is nondeterministic; report plans (and
+        // their actual per-shard state counts) in lattice order
+        let mut tagged = std::mem::take(&mut per_job_plans[ji]);
+        tagged.sort_by_key(|(p, _)| (p.shard.wg_min, p.shard.ts_min));
+        let shard_states = tagged.iter().map(|&(_, s)| s).collect();
+        let plan = tagged.into_iter().map(|(p, _)| p).collect();
         outcomes[ji] = Some(JobOutcome {
             job: jobs[ji].clone(),
             result: merged,
@@ -276,6 +345,7 @@ pub(crate) fn finish_batch(
             shards: shard_counts[ji],
             wall: per_job_wall[ji],
             plan,
+            shard_states,
         });
     }
     // overlapping duplicates resolve against the freshly stored results
@@ -290,6 +360,7 @@ pub(crate) fn finish_batch(
                 shards: 0,
                 wall: Duration::ZERO,
                 plan: Vec::new(),
+                shard_states: Vec::new(),
             });
         }
     }
@@ -323,11 +394,24 @@ pub fn run_batch(
     let plan = plan_batch(jobs, opts, cache)?;
 
     // Phase 2: every (job, shard) task through the work-stealing queue,
-    // each under its planned budget.
+    // each under its planned budget. Task ids reproduce exactly what
+    // [`task::TaskDir::plan`] assigns the same plan — per-job shard
+    // counters in task order — so a worker-mode drain of this batch
+    // publishes `shard` trace events with identical ids.
+    let mut next_shard = vec![0u32; jobs.len()];
+    let tasks: Vec<(String, usize, ShardPlan)> = plan
+        .tasks
+        .into_iter()
+        .map(|(ji, p)| {
+            let si = next_shard[ji];
+            next_shard[ji] += 1;
+            (format!("j{:03}-s{:03}", ji, si), ji, p)
+        })
+        .collect();
     let queue = JobQueue::new(opts.workers);
-    let (shard_results, qstats) = queue.run_stats(plan.tasks, |(ji, shard_plan)| {
+    let (shard_results, qstats) = queue.run_stats(tasks, |(id, ji, shard_plan)| {
         let t0 = Instant::now();
-        let result = run_shard_task(&jobs[ji], &shard_plan, &opts.swarm);
+        let result = run_shard_task_traced(&jobs[ji], &shard_plan, &opts.swarm, &id);
         (ji, shard_plan, t0.elapsed(), result)
     });
 

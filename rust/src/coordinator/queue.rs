@@ -113,6 +113,10 @@ impl JobQueue {
                 stats.stolen += stolen;
             }
         });
+        // telemetry: one pair of adds per run, after the joins (cold path)
+        let m = crate::obs::metrics();
+        m.queue_executed.add(stats.executed.iter().sum());
+        m.queue_stolen.add(stats.stolen);
 
         let out = results
             .iter()
@@ -159,7 +163,11 @@ impl JobQueue {
             }
             match first_err {
                 Some(e) => Err(e),
-                None => Ok(executed.load(Ordering::Relaxed)),
+                None => {
+                    let n = executed.load(Ordering::Relaxed);
+                    crate::obs::metrics().queue_executed.add(n);
+                    Ok(n)
+                }
             }
         })
     }

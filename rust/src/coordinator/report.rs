@@ -25,6 +25,9 @@ pub struct JobOutcome {
     /// sub-lattice's estimated state-space weight, see
     /// [`super::shard::plan_shards`]
     pub plan: Vec<ShardPlan>,
+    /// states each shard actually explored, parallel to [`plan`](Self::plan)
+    /// — the telemetry that grades the planner's weight estimates
+    pub shard_states: Vec<u64>,
 }
 
 /// Aggregate of one [`super::run_batch`] call.
@@ -40,6 +43,15 @@ pub struct BatchReport {
     pub stolen_tasks: u64,
     /// whole-batch wall clock
     pub total_elapsed: Duration,
+}
+
+/// Integer percentage of `part` in `total` (0 when `total` is 0).
+fn share_pct(part: u64, total: u64) -> u64 {
+    if total == 0 {
+        0
+    } else {
+        part.saturating_mul(100) / total
+    }
 }
 
 impl BatchReport {
@@ -85,9 +97,11 @@ impl BatchReport {
                 "shard budgets `{}` (~ estimated sub-lattice size):\n",
                 o.job.name
             ));
-            for p in &o.plan {
+            let est_total: u64 = o.plan.iter().map(|p| p.weight).sum();
+            let act_total: u64 = o.shard_states.iter().sum();
+            for (si, p) in o.plan.iter().enumerate() {
                 out.push_str(&format!(
-                    "  {}: weight {}, max_states {}, memory {}, time {}\n",
+                    "  {}: weight {}, max_states {}, memory {}, time {}",
                     p.shard,
                     thousands(p.weight),
                     if p.check.max_states == u64::MAX {
@@ -98,6 +112,17 @@ impl BatchReport {
                     human_bytes(p.check.memory_budget),
                     p.check.time_budget.map_or("unlimited".to_string(), human_duration),
                 ));
+                // telemetry column: planned vs. actual share of the job's
+                // states — how far the weight estimate missed this shard
+                if let Some(&states) = o.shard_states.get(si) {
+                    out.push_str(&format!(
+                        ", states {} ({}% est {}%)",
+                        thousands(states),
+                        share_pct(states, act_total),
+                        share_pct(p.weight, est_total),
+                    ));
+                }
+                out.push('\n');
             }
         }
         out.push_str(&format!(
@@ -131,6 +156,7 @@ mod tests {
                 shards: 0,
                 wall: Duration::ZERO,
                 plan: Vec::new(),
+                shard_states: Vec::new(),
             }],
             cache_hits: 1,
             cache_misses: 0,

@@ -48,8 +48,8 @@
 //! to the single-process engine.
 
 use super::{
-    finish_batch, plan_batch, run_shard_task, BatchOptions, BatchReport, JobEngine, JobOutcome,
-    JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
+    finish_batch, plan_batch, run_shard_task_traced, BatchOptions, BatchReport, JobEngine,
+    JobOutcome, JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
 };
 use crate::checker::{CheckOptions, Frontier, Order, StoreKind};
 use crate::platform::{Granularity, PlatformConfig};
@@ -60,7 +60,7 @@ use crate::util::manifest::Json;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::time::{Duration, Instant, SystemTime};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 const HEADER: &str = "batch.json";
 const TASK_SUFFIX: &str = ".task.json";
@@ -886,6 +886,7 @@ impl TaskDir {
                 if age >= self.effective_ttl()
                     && std::fs::rename(self.lease_path(id), self.task_path(id)).is_ok()
                 {
+                    lease_event("reclaim", id);
                     renamed.insert(id.clone());
                     progressed = true;
                 }
@@ -933,10 +934,12 @@ impl TaskDir {
             unreachable!("TaskSpec::to_json always builds an object")
         };
         fields.push(("owner".to_string(), Json::Str(owner_tag())));
+        fields.push(("leased_unix_ms".to_string(), ju64(unix_ms())));
         let _ = self.write_atomic(
             &format!("{}{}", spec.id, LEASE_SUFFIX),
             &Json::Obj(fields).render(),
         );
+        lease_event("grant", &spec.id);
         Ok(Some(LeasedTask { spec, reclaimed: false, lease_path: lease }))
     }
 
@@ -959,16 +962,25 @@ impl TaskDir {
                 let tick = (self.effective_ttl() / 4).max(Duration::from_millis(10));
                 let step = tick.min(Duration::from_millis(25));
                 let mut since = Duration::ZERO;
+                // first beat at execution start: short tasks still leave
+                // one heartbeat in the trace
+                lease_event("heartbeat", &leased.spec.id);
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(step);
                     since += step;
                     if since >= tick {
                         let _ = touch(&leased.lease_path);
+                        lease_event("heartbeat", &leased.spec.id);
                         since = Duration::ZERO;
                     }
                 }
             });
-            let r = run_shard_task(&leased.spec.job, &leased.spec.plan, &leased.spec.swarm);
+            let r = run_shard_task_traced(
+                &leased.spec.job,
+                &leased.spec.plan,
+                &leased.spec.swarm,
+                &leased.spec.id,
+            );
             stop.store(true, Ordering::Relaxed);
             let _ = hb.join();
             r
@@ -1121,6 +1133,7 @@ impl TaskDir {
                 shards: 0,
                 wall: Duration::ZERO,
                 plan: Vec::new(),
+                shard_states: Vec::new(),
             });
         }
         let outcomes = finish_batch(
@@ -1151,6 +1164,10 @@ pub struct LeaseInfo {
     pub owner: Option<String>,
     /// time since the last heartbeat (mtime)
     pub age: Duration,
+    /// time since the lease was granted, from the `leased_unix_ms` stamp
+    /// in the lease file (`None`: stamp missing — older binary — or the
+    /// grantor's clock is ahead of ours)
+    pub elapsed: Option<Duration>,
 }
 
 /// One-shot progress view of a planned batch (CLI `worker --status`).
@@ -1190,18 +1207,31 @@ impl TaskDir {
             Err(_) => scan.available.len() + scan.leases.len() + scan.results.len(),
         };
         let now = SystemTime::now();
+        let now_ms = unix_ms();
         let mut leases: Vec<LeaseInfo> = scan
             .leases
             .iter()
-            .map(|(id, mtime)| LeaseInfo {
-                id: id.clone(),
-                owner: std::fs::read_to_string(self.lease_path(id))
+            .map(|(id, mtime)| {
+                let doc = std::fs::read_to_string(self.lease_path(id))
                     .ok()
-                    .and_then(|t| Json::parse(&t).ok())
-                    .and_then(|v| {
-                        v.get("owner").and_then(Json::as_str).map(str::to_string)
-                    }),
-                age: now.duration_since(*mtime).unwrap_or(Duration::ZERO),
+                    .and_then(|t| Json::parse(&t).ok());
+                let owner = doc
+                    .as_ref()
+                    .and_then(|v| v.get("owner").and_then(Json::as_str).map(str::to_string));
+                // optional telemetry stamp (see `unix_ms`); tolerate the
+                // string spelling `ju64` uses for values beyond i64
+                let elapsed = doc
+                    .as_ref()
+                    .and_then(|v| v.get("leased_unix_ms"))
+                    .and_then(|f| u64_of(f, "leased_unix_ms").ok())
+                    .filter(|&t0| t0 > 0 && t0 <= now_ms)
+                    .map(|t0| Duration::from_millis(now_ms - t0));
+                LeaseInfo {
+                    id: id.clone(),
+                    owner,
+                    age: now.duration_since(*mtime).unwrap_or(Duration::ZERO),
+                    elapsed,
+                }
             })
             .collect();
         leases.sort_by(|a, b| a.id.cmp(&b.id));
@@ -1227,6 +1257,43 @@ fn owner_tag() -> String {
         .or_else(|| std::env::var("COMPUTERNAME").ok())
         .unwrap_or_else(|| "localhost".into());
     format!("{}@{}", std::process::id(), host)
+}
+
+/// Milliseconds since the Unix epoch — the wall-clock stamp `try_lease`
+/// writes into the lease so `worker --status` can show per-lease elapsed
+/// time across processes (mtime only tracks the *last heartbeat*).
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map_or(0, |d| d.as_millis().min(u64::MAX as u128) as u64)
+}
+
+/// Telemetry for one lease-protocol action (`grant` | `heartbeat` |
+/// `reclaim`): bump the matching counter and, when a flight recorder is
+/// installed, publish a timed `lease` event tagged with this process's
+/// `pid@host` owner. Lease traffic is timing-dependent by nature, so
+/// these are *timed* events — they never appear in the deterministic
+/// subset ([`crate::obs::deterministic_lines`]).
+fn lease_event(action: &str, id: &str) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let m = crate::obs::metrics();
+    match action {
+        "grant" => m.lease_grants.add(1),
+        "heartbeat" => m.lease_heartbeats.add(1),
+        _ => m.lease_reclaims.add(1),
+    }
+    if let Some(rec) = crate::obs::active() {
+        rec.event(
+            "lease",
+            vec![
+                ("action", Json::Str(action.to_string())),
+                ("id", Json::Str(id.to_string())),
+                ("owner", Json::Str(owner_tag())),
+            ],
+        );
+    }
 }
 
 #[derive(Debug, Default)]
@@ -1398,6 +1465,10 @@ mod tests {
             owner
         );
         assert_eq!(st.per_owner(), vec![(owner, 1)]);
+        assert!(
+            st.leases[0].elapsed.is_some(),
+            "lease carries its leased_unix_ms grant stamp"
+        );
         // the owner tag must not break re-parsing (extra fields ignored)
         let text = std::fs::read_to_string(dir.join(format!(
             "{}{}",

@@ -46,6 +46,7 @@
 pub mod checker;
 pub mod coordinator;
 pub mod model;
+pub mod obs;
 pub mod opencl;
 pub mod platform;
 pub mod promela;

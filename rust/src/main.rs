@@ -14,6 +14,7 @@ use mcautotune::coordinator::{
     run_batch, BatchOptions, JobEngine, ModelKind, ResultCache, TaskDir, TuningJob,
 };
 use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::obs::{self, ju64, ProgressMeter, Recorder};
 use mcautotune::platform::{
     simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
 };
@@ -25,7 +26,10 @@ use mcautotune::tuner::{tune, tune_cached, Method};
 use mcautotune::util::cli::{Args, Spec};
 use mcautotune::util::error::{bail, Context, Result};
 use mcautotune::util::fmt::{human_bytes, human_duration};
+use mcautotune::util::manifest::Json;
+use mcautotune::{outln, outp};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -52,6 +56,8 @@ commands:
               report + result cache (identical to a single-process run)
   cache       inspect a result-cache file: `cache ls <file>` lists entries,
               `cache rm <file> <needle>` drops matching entries
+  trace       validate + summarize a JSONL flight-recorder trace written by
+              `--trace <file>` on tune/verify/batch/worker
   simulate    random simulation of a model (reports terminal time, T_ini)
   verify      verify a safety-LTL property, print the first counterexample
   table1      regenerate the paper's Table 1 (abstract-model experiments)
@@ -65,7 +71,7 @@ run `mcautotune <command> --help` for per-command options";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
-        println!("{}", USAGE);
+        outln!("{}", USAGE);
         return Ok(());
     };
     let rest = &argv[1..];
@@ -75,6 +81,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "worker" => cmd_worker(rest),
         "merge" => cmd_merge(rest),
         "cache" => cmd_cache(rest),
+        "trace" => cmd_trace(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "table1" => cmd_table1(rest),
@@ -83,7 +90,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "exec" => cmd_exec(rest),
         "gen-models" => cmd_gen_models(rest),
         "help" | "--help" | "-h" => {
-            println!("{}", USAGE);
+            outln!("{}", USAGE);
             Ok(())
         }
         other => bail!("unknown command `{}`\n{}", other, USAGE),
@@ -231,6 +238,58 @@ fn swarm_cfg(a: &Args) -> Result<SwarmConfig> {
     })
 }
 
+// -------------------------------------------------------- observability --
+
+/// Flight-recorder options shared by the run commands (tune, verify,
+/// batch, worker).
+fn obs_spec(spec: Spec) -> Spec {
+    spec.opt("trace", "write a JSONL flight-recorder trace to <file> (see `mcautotune trace`)")
+        .flag("progress", "periodic one-line progress heartbeat on stderr")
+}
+
+/// Run `f` under a recorder span when tracing is on.
+fn spanned<T>(path: &str, f: impl FnOnce() -> T) -> T {
+    match obs::active() {
+        Some(rec) => rec.span(path, f),
+        None => f(),
+    }
+}
+
+/// One command's observability session: the globally installed recorder
+/// and the progress meter, when the shared flags asked for them. Success
+/// paths call [`finish`](Self::finish) to flush the trace file; error
+/// paths just exit (a partial trace is never written — the file appears
+/// atomically or not at all).
+struct ObsSession {
+    rec: Option<Arc<Recorder>>,
+    meter: Option<ProgressMeter>,
+}
+
+impl ObsSession {
+    fn start(a: &Args, cmd: &str) -> Self {
+        let rec = a.get("trace").map(|path| {
+            let rec = Arc::new(Recorder::to_file(path));
+            obs::install(Arc::clone(&rec));
+            rec.event("meta", vec![("cmd", Json::Str(cmd.to_string()))]);
+            rec
+        });
+        let meter = a.flag("progress").then(|| ProgressMeter::start(Duration::from_secs(2)));
+        Self { rec, meter }
+    }
+
+    /// Stop the heartbeat, uninstall the recorder, write the trace.
+    fn finish(mut self) -> Result<()> {
+        let had_meter = self.meter.take().is_some(); // drop joins the ticker
+        if let Some(rec) = self.rec.take() {
+            obs::uninstall();
+            rec.finish()?;
+        } else if had_meter {
+            obs::set_enabled(false);
+        }
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------------- commands --
 
 /// Reconstruct the coordinator job a `tune` invocation corresponds to, so
@@ -273,7 +332,7 @@ fn job_from_args(a: &Args, method: Method) -> Result<TuningJob> {
 }
 
 fn cmd_tune(argv: &[String]) -> Result<()> {
-    let spec = store_spec(model_spec(Spec::new()))
+    let spec = obs_spec(store_spec(model_spec(Spec::new())))
         .opt("method", "exhaustive | swarm (default exhaustive)")
         .opt("workers", "swarm workers (default 4)")
         .opt("seed", "swarm seed")
@@ -283,7 +342,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune tune"));
+        outln!("{}", spec.usage("mcautotune tune"));
         return Ok(());
     }
     let method: Method = a.get_or("method", "exhaustive").parse()?;
@@ -291,6 +350,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     let opts = check_opts(&a)?;
     let sw = swarm_cfg(&a)?;
     let t_ini = a.get_parsed::<i64>("t-ini")?;
+    let session = ObsSession::start(&a, "tune");
     let r = if let Some(cache_path) = a.get("cache") {
         let job = job_from_args(&a, method)?;
         // swarm results are configuration-dependent, so the swarm config
@@ -299,22 +359,37 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         let mut cache = ResultCache::open(Path::new(cache_path))?;
         warn_quarantined(&cache);
         let (r, hit) = with_model!(model, m, {
-            tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache)
+            spanned("tune/search", || tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache))
         })?;
         cache.save()?;
-        println!("  cache: {} ({})", if hit { "hit" } else { "miss" }, cache_path);
+        outln!("  cache: {} ({})", if hit { "hit" } else { "miss" }, cache_path);
         r
     } else {
-        with_model!(model, m, tune(m, method, &opts, &sw, t_ini))?
+        with_model!(model, m, spanned("tune/search", || tune(m, method, &opts, &sw, t_ini)))?
     };
-    for line in &r.log {
-        println!("  {}", line);
+    if let Some(rec) = obs::active() {
+        // content-only run identity: deterministic under `--frontier det`
+        rec.det_event(
+            "run",
+            vec![
+                ("cmd", Json::Str("tune".into())),
+                ("model", Json::Str(a.get_or("model", "minimum"))),
+                ("size", Json::Int(i64::from(a.get_parsed_or("size", 64u32)?))),
+                ("wg", Json::Int(i64::from(r.optimal.wg))),
+                ("ts", Json::Int(i64::from(r.optimal.ts))),
+                ("t_min", Json::Int(r.t_min)),
+                ("states", ju64(r.states_explored)),
+            ],
+        );
     }
-    println!();
-    println!("optimal configuration: WG={} TS={}", r.optimal.wg, r.optimal.ts);
-    println!("minimal model time:    {}", r.t_min);
+    for line in &r.log {
+        outln!("  {}", line);
+    }
+    outln!();
+    outln!("optimal configuration: WG={} TS={}", r.optimal.wg, r.optimal.ts);
+    outln!("minimal model time:    {}", r.t_min);
     if let Some((w, d)) = &r.first_trail {
-        println!(
+        outln!(
             "first trail:           WG={} TS={} time={} (found after {}, optimality {:.0}%)",
             w.wg,
             w.ts,
@@ -323,17 +398,17 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
             r.first_trail_optimality.unwrap_or(1.0) * 100.0
         );
     }
-    println!(
+    outln!(
         "search: {} states, peak memory {}, wall time {}",
         r.states_explored,
         human_bytes(r.peak_bytes),
         human_duration(r.elapsed)
     );
-    Ok(())
+    session.finish()
 }
 
 fn cmd_batch(argv: &[String]) -> Result<()> {
-    let spec = Spec::new()
+    let spec = obs_spec(Spec::new())
         .opt("workers", "queue worker threads (default 4)")
         .opt(
             "shards",
@@ -360,8 +435,8 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune batch <spec-file>"));
-        println!(
+        outln!("{}", spec.usage("mcautotune batch <spec-file>"));
+        outln!(
             "\nspec file: one `job <model> [k=v...]` per line, e.g.\n\
              \n  # tune four configurations; the last runs the Promela engine\n\
              \x20 job minimum size=64 np=4 gmt=3 shards=4\n\
@@ -409,52 +484,53 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         ResultCache::open(Path::new(&cache_arg))?
     };
     warn_quarantined(&cache);
+    let session = ObsSession::start(&a, "batch");
 
     // Worker mode: serialize the plan instead of draining it in-process.
     if let Some(dir) = a.get("task-dir") {
         let start = std::time::Instant::now();
         let ttl = Duration::from_millis(a.get_parsed_or("ttl-ms", 30_000u64)?);
         let td = TaskDir::new(dir).with_ttl(ttl);
-        let summary = td.plan(&jobs, &opts, &mut cache)?;
-        println!(
+        let summary = spanned("batch/plan", || td.plan(&jobs, &opts, &mut cache))?;
+        outln!(
             "planned {} task(s) for {} job(s) into {} ({} job(s) served from cache at plan time)",
             summary.tasks, summary.jobs, dir, summary.cached
         );
         if a.flag("plan-only") {
-            println!("drain:  mcautotune worker {}   (any number of processes/machines)", dir);
-            println!("merge:  mcautotune merge {}", dir);
-            return Ok(());
+            outln!("drain:  mcautotune worker {}   (any number of processes/machines)", dir);
+            outln!("merge:  mcautotune merge {}", dir);
+            return session.finish();
         }
         // participate in the drain, then fold once all tasks complete
-        let stats = td.drain(opts.workers, false)?;
-        println!(
+        let stats = spanned("batch/drain", || td.drain(opts.workers, false))?;
+        outln!(
             "drained {} task(s) in this process ({} reclaimed from expired leases)",
             stats.executed, stats.reclaimed
         );
-        let mut report = td.merge(&mut cache)?;
+        let mut report = spanned("batch/merge", || td.merge(&mut cache))?;
         // merge() only times the fold; this invocation also planned and
         // drained, and the summary line should say so
         report.total_elapsed = start.elapsed();
-        println!(
+        outln!(
             "batch: {} job(s), {} worker(s), cache {} (task dir {})",
             jobs.len(),
             opts.workers,
             if cache_arg == "none" { "disabled".to_string() } else { cache_arg },
             dir
         );
-        print!("{}", report.render());
-        return Ok(());
+        outp!("{}", report.render());
+        return session.finish();
     }
 
-    let report = run_batch(&jobs, &opts, &mut cache)?;
-    println!(
+    let report = spanned("batch/run", || run_batch(&jobs, &opts, &mut cache))?;
+    outln!(
         "batch: {} job(s), {} worker(s), cache {}",
         jobs.len(),
         opts.workers,
         if cache_arg == "none" { "disabled".to_string() } else { cache_arg }
     );
-    print!("{}", report.render());
-    Ok(())
+    outp!("{}", report.render());
+    session.finish()
 }
 
 fn warn_quarantined(cache: &ResultCache) {
@@ -467,7 +543,7 @@ fn warn_quarantined(cache: &ResultCache) {
 }
 
 fn cmd_worker(argv: &[String]) -> Result<()> {
-    let spec = Spec::new()
+    let spec = obs_spec(Spec::new())
         .opt("ttl-ms", "lease TTL before an expired lease is re-leased (default: the plan's)")
         .opt("poll-ms", "sleep between scans while waiting for leasable work (default 100)")
         .opt("workers", "concurrent tasks in this worker process (default 1)")
@@ -479,8 +555,8 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune worker <task-dir>"));
-        println!(
+        outln!("{}", spec.usage("mcautotune worker <task-dir>"));
+        outln!(
             "\nLeases tasks planned by `mcautotune batch <spec> --task-dir <dir>` with\n\
              atomic rename-based lock files, runs them, and publishes partial results\n\
              any process can merge. Crash-safe: a lease whose mtime exceeds the TTL is\n\
@@ -496,7 +572,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     };
     if a.flag("status") {
         let st = TaskDir::new(dir).status()?;
-        println!(
+        outln!(
             "batch {}: {} task(s) — {} available, {} leased, {} done",
             dir,
             st.total,
@@ -505,13 +581,14 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
             st.done
         );
         for (owner, n) in st.per_owner() {
-            println!("  worker {}: {} lease(s)", owner, n);
+            outln!("  worker {}: {} lease(s)", owner, n);
         }
         for l in &st.leases {
-            println!(
-                "    {} held by {} (heartbeat {} ago)",
+            outln!(
+                "    {} held by {} (running {}, heartbeat {} ago)",
                 l.id,
                 l.owner.as_deref().unwrap_or("?"),
+                l.elapsed.map(human_duration).unwrap_or_else(|| "?".into()),
                 human_duration(l.age)
             );
         }
@@ -523,15 +600,16 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         td = td.with_ttl(Duration::from_millis(ms));
     }
     let workers: u32 = a.get_parsed_or("workers", 1)?;
-    let stats = td.drain(workers, a.flag("oneshot"))?;
-    println!(
+    let session = ObsSession::start(&a, "worker");
+    let stats = spanned("worker/drain", || td.drain(workers, a.flag("oneshot")))?;
+    outln!(
         "worker {}: drained {} task(s), {} reclaimed from expired leases{}",
         std::process::id(),
         stats.executed,
         stats.reclaimed,
         if stats.complete { " — batch complete" } else { "" }
     );
-    Ok(())
+    session.finish()
 }
 
 fn cmd_merge(argv: &[String]) -> Result<()> {
@@ -540,8 +618,8 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune merge <task-dir>"));
-        println!(
+        outln!("{}", spec.usage("mcautotune merge <task-dir>"));
+        outln!(
             "\nFolds a fully drained task dir's partial results into the same batch\n\
              report and result-cache entries a single-process `mcautotune batch` of\n\
              the spec produces. Errors (listing the count) while tasks are outstanding."
@@ -562,13 +640,13 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
     };
     warn_quarantined(&cache);
     let report = td.merge(&mut cache)?;
-    println!(
+    outln!(
         "merge: {} ({} job(s), cache {})",
         dir,
         report.outcomes.len(),
         cache_arg.unwrap_or_else(|| "disabled".into())
     );
-    print!("{}", report.render());
+    outp!("{}", report.render());
     Ok(())
 }
 
@@ -577,8 +655,8 @@ fn cmd_cache(argv: &[String]) -> Result<()> {
     let a = spec.parse(argv)?;
     let pos = a.positionals();
     if a.flag("help") || pos.is_empty() {
-        println!("{}", spec.usage("mcautotune cache <ls|rm> <file> [needle]"));
-        println!(
+        outln!("{}", spec.usage("mcautotune cache <ls|rm> <file> [needle]"));
+        outln!(
             "\nInspect or edit a result-cache JSON file (cache lifecycle tooling):\n\
              \x20 ls <file>           list entries: content key, optimum, method,\n\
              \x20                     cold-run states, canonical description\n\
@@ -596,9 +674,9 @@ fn cmd_cache(argv: &[String]) -> Result<()> {
             let cache = ResultCache::open(Path::new(file))?;
             warn_quarantined(&cache);
             let n = cache.len();
-            println!("{}: {} entr{}", file, n, if n == 1 { "y" } else { "ies" });
+            outln!("{}: {} entr{}", file, n, if n == 1 { "y" } else { "ies" });
             for e in cache.entries_sorted() {
-                println!(
+                outln!(
                     "  {:016x}  WG={} TS={} t_min={} steps={} method={} cold_states={}\n\
                      \x20           {}",
                     mcautotune::util::hash::hash_bytes(e.desc.as_bytes()),
@@ -625,7 +703,7 @@ fn cmd_cache(argv: &[String]) -> Result<()> {
             warn_quarantined(&cache);
             let removed = cache.remove_matching(needle);
             cache.save()?;
-            println!(
+            outln!(
                 "removed {} entr{} matching `{}` from {} ({} left)",
                 removed,
                 if removed == 1 { "y" } else { "ies" },
@@ -649,7 +727,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune simulate"));
+        outln!("{}", spec.usage("mcautotune simulate"));
         return Ok(());
     }
     let runs: u64 = a.get_parsed_or("runs", 8)?;
@@ -659,7 +737,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     for r in 0..runs {
         let (terminated, time) = with_model!(model, m, {
             let rep = simulate(m, seed + r, 100_000_000);
-            println!(
+            outln!(
                 "run {}: steps={} terminated={} time={:?} WG={:?} TS={:?}",
                 r,
                 rep.steps,
@@ -677,21 +755,21 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         }
     }
     match t_ini {
-        Some(t) => println!("\nT_ini = {} (max observed terminal time)", t),
-        None => println!("\nno terminating run observed"),
+        Some(t) => outln!("\nT_ini = {} (max observed terminal time)", t),
+        None => outln!("\nno terminating run observed"),
     }
     Ok(())
 }
 
 fn cmd_verify(argv: &[String]) -> Result<()> {
-    let spec = store_spec(model_spec(Spec::new()))
+    let spec = obs_spec(store_spec(model_spec(Spec::new())))
         .opt("prop", "safety LTL formula, e.g. 'G(FIN -> time > 100)'")
         .opt("trail-limit", "max trail lines to print (default 40)")
         .flag("all-errors", "keep searching after the first violation (spin -e)")
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune verify"));
+        outln!("{}", spec.usage("mcautotune verify"));
         return Ok(());
     }
     let prop = SafetyLtl::parse(&a.get_or("prop", "G(!FIN)"))?;
@@ -699,9 +777,39 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
     let mut opts = check_opts(&a)?;
     opts.collect_all = a.flag("all-errors");
     let limit: usize = a.get_parsed_or("trail-limit", 40)?;
+    let session = ObsSession::start(&a, "verify");
     with_model!(model, m, {
-        let rep = check(m, &prop, &opts)?;
-        println!(
+        let rep = spanned("verify/explore", || check(m, &prop, &opts))?;
+        if let Some(rec) = obs::active() {
+            // content-only run identity: deterministic under `--frontier det`
+            rec.det_event(
+                "run",
+                vec![
+                    ("cmd", Json::Str("verify".into())),
+                    ("model", Json::Str(a.get_or("model", "minimum"))),
+                    ("prop", Json::Str(prop.to_string())),
+                    (
+                        "verdict",
+                        Json::Str(
+                            if rep.found() {
+                                "violated"
+                            } else if rep.exhausted {
+                                "holds"
+                            } else {
+                                "inconclusive"
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("states", ju64(rep.stats.states_stored)),
+                    ("matched", ju64(rep.stats.states_matched)),
+                    ("transitions", ju64(rep.stats.transitions)),
+                    ("depth", ju64(rep.stats.max_depth_reached as u64)),
+                    ("violations", ju64(rep.violations.len() as u64)),
+                ],
+            );
+        }
+        outln!(
             "property {}: {}",
             prop,
             if rep.found() {
@@ -712,7 +820,7 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
                 "inconclusive (budget hit)"
             }
         );
-        println!(
+        outln!(
             "states stored {}  matched {}  transitions {}  depth {}  memory {}  elapsed {}",
             rep.stats.states_stored,
             rep.stats.states_matched,
@@ -722,14 +830,38 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
             human_duration(rep.stats.elapsed)
         );
         if let Some(v) = rep.violations.first() {
-            println!("\ncounterexample trail ({} steps):", v.trail.steps());
-            print!("{}", v.trail.render(m, limit));
+            outln!("\ncounterexample trail ({} steps):", v.trail.steps());
+            outp!("{}", v.trail.render(m, limit));
         }
         if rep.violations.len() > 1 {
-            println!("({} violations total)", rep.violations.len());
+            outln!("({} violations total)", rep.violations.len());
         }
         Ok(())
-    })
+    })?;
+    session.finish()
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let spec = Spec::new().flag("help", "show options");
+    let a = spec.parse(argv)?;
+    let pos = a.positionals();
+    if a.flag("help") || pos.is_empty() {
+        outln!("{}", spec.usage("mcautotune trace <file>"));
+        outln!(
+            "\nValidate and summarize a JSONL flight-recorder trace written by\n\
+             `--trace <file>` on tune/verify/batch/worker: event counts, top\n\
+             spans by wall time, the per-shard imbalance table (actual states\n\
+             vs. planned weight) and the final counter dump."
+        );
+        return Ok(());
+    }
+    let file = &pos[0];
+    let text =
+        std::fs::read_to_string(file).with_context(|| format!("reading trace {}", file))?;
+    let summary =
+        mcautotune::obs::summarize(&text).with_context(|| format!("validating trace {}", file))?;
+    outp!("{}", summary.render());
+    Ok(())
 }
 
 fn cmd_table1(argv: &[String]) -> Result<()> {
@@ -744,7 +876,7 @@ fn cmd_table1(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune table1"));
+        outln!("{}", spec.usage("mcautotune table1"));
         return Ok(());
     }
     let mut opts = report::Table1Opts::default();
@@ -761,11 +893,11 @@ fn cmd_table1(argv: &[String]) -> Result<()> {
     opts.swarm.workers = a.get_parsed_or("workers", opts.swarm.workers)?;
     opts.swarm.time_budget = Duration::from_millis(a.get_parsed_or("budget-ms", 5000u64)?);
     let (_, rendered) = report::table1(&opts)?;
-    println!(
+    outln!(
         "Table 1 — abstract-model experiments (platform: 1 device, 1 unit, {} PEs, GMT={})",
         opts.plat.np, opts.plat.gmt
     );
-    print!("{}", rendered);
+    outp!("{}", rendered);
     Ok(())
 }
 
@@ -776,7 +908,7 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune table2"));
+        outln!("{}", spec.usage("mcautotune table2"));
         return Ok(());
     }
     let dir = a
@@ -786,8 +918,8 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
     let mut engine = Engine::new(&dir)?;
     let repeats: u32 = a.get_parsed_or("repeats", 5)?;
     let (_, rendered) = report::table2(&mut engine, repeats)?;
-    println!("Table 2 — Minimum kernel sweep (PJRT substitute for the paper's P104-100)");
-    print!("{}", rendered);
+    outln!("Table 2 — Minimum kernel sweep (PJRT substitute for the paper's P104-100)");
+    outp!("{}", rendered);
     Ok(())
 }
 
@@ -798,14 +930,14 @@ fn cmd_table3(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune table3"));
+        outln!("{}", spec.usage("mcautotune table3"));
         return Ok(());
     }
     let gmt: u32 = a.get_parsed_or("gmt", 3)?;
     let top: usize = a.get_parsed_or("top", 3)?;
     let (_, rendered) = report::table3(&report::paper_table3_groups(), gmt, top)?;
-    println!("Table 3 — Minimum-model experiments (GMT={})", gmt);
-    print!("{}", rendered);
+    outln!("Table 3 — Minimum-model experiments (GMT={})", gmt);
+    outp!("{}", rendered);
     Ok(())
 }
 
@@ -818,7 +950,7 @@ fn cmd_exec(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune exec"));
+        outln!("{}", spec.usage("mcautotune exec"));
         return Ok(());
     }
     let dir = a
@@ -834,7 +966,7 @@ fn cmd_exec(argv: &[String]) -> Result<()> {
         .find(&name)
         .with_context(|| format!("artifact `{}` not found", name))?
         .clone();
-    println!(
+    outln!(
         "artifact {}: kind={} units={} WG={} TS={} size={} (vmem est {})",
         entry.name,
         entry.kind,
@@ -854,7 +986,7 @@ fn cmd_exec(argv: &[String]) -> Result<()> {
         best = best.min(t.elapsed().as_secs_f64() * 1e3);
         out_min = out.global_min;
     }
-    println!(
+    outln!(
         "result: min={} (expected {}) {} — best {:.3} ms, {:.2} GB/s",
         out_min,
         expected,
@@ -871,7 +1003,7 @@ fn cmd_gen_models(argv: &[String]) -> Result<()> {
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
-        println!("{}", spec.usage("mcautotune gen-models"));
+        outln!("{}", spec.usage("mcautotune gen-models"));
         return Ok(());
     }
     let dir = std::path::PathBuf::from(a.get_or("out", "models"));
@@ -886,7 +1018,7 @@ fn cmd_gen_models(argv: &[String]) -> Result<()> {
     ] {
         let path = dir.join(name);
         std::fs::write(&path, src)?;
-        println!("wrote {}", path.display());
+        outln!("wrote {}", path.display());
     }
     Ok(())
 }

@@ -1,0 +1,289 @@
+//! The metrics registry: cheap sharded atomic counters for hot paths.
+//!
+//! Every counter is striped across [`STRIPES`] cache-line-padded
+//! `AtomicU64`s; a thread adds to its own stripe (assigned round-robin
+//! on first use), so concurrent checker workers never contend on one
+//! line. Reads ([`Counter::value`]) sum the stripes — reads are rare
+//! (progress ticks, the final `counters` trace event), writes are the
+//! hot side.
+//!
+//! When telemetry is disabled ([`super::enabled`] false) every `add` is
+//! one relaxed bool load and an untaken branch. The checker goes
+//! further: its per-state loops accumulate into plain locals and flush
+//! *deltas* here only at their pre-existing amortized checkpoints, so
+//! the disabled cost on the per-state path is zero instructions.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Stripe count per counter (fixed: cheap modulo, bounded memory).
+pub const STRIPES: usize = 16;
+
+#[repr(align(64))]
+struct Stripe(AtomicU64);
+
+const ZERO_STRIPE: Stripe = Stripe(AtomicU64::new(0));
+
+fn stripe_index() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static STRIPE: Cell<usize> = Cell::new(usize::MAX);
+    }
+    STRIPE.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            v = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// A monotone event counter, striped to avoid write contention.
+pub struct Counter {
+    stripes: [Stripe; STRIPES],
+}
+
+impl Counter {
+    const fn new() -> Self {
+        Self { stripes: [ZERO_STRIPE; STRIPES] }
+    }
+
+    /// Add `n` when telemetry is enabled; a no-op branch otherwise.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::enabled() {
+            self.stripes[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Sum of all stripes (approximate under concurrent writers, exact
+    /// once they quiesce).
+    pub fn value(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+
+    fn reset(&self) {
+        for s in &self.stripes {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Counter({})", self.value())
+    }
+}
+
+/// A level gauge (current/peak value rather than a running total).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Raise the gauge to `v` if it is higher (peak tracking).
+    #[inline]
+    pub fn set_max(&self, v: u64) {
+        if super::enabled() {
+            self.0.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Overwrite the gauge (level tracking, e.g. current frontier depth).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if super::enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Gauge({})", self.value())
+    }
+}
+
+/// Every counter and gauge the subsystem knows, by name. One static
+/// instance per process ([`metrics`]); the name column is the schema
+/// the final `counters` trace event and the ROADMAP document.
+#[derive(Debug)]
+pub struct Metrics {
+    /// unique states inserted into a visited store
+    pub states_stored: Counter,
+    /// successor states that were already visited
+    pub states_matched: Counter,
+    /// transitions (successor generations) executed
+    pub transitions: Counter,
+    /// counterexample trail replays (backlink reconstruction walks)
+    pub trail_replays: Counter,
+    /// linear-probe steps across all visited-store inserts
+    pub store_probes: Counter,
+    /// visited-store table growths
+    pub store_resizes: Counter,
+    /// tasks executed by the work-stealing queue
+    pub queue_executed: Counter,
+    /// tasks the queue moved between workers
+    pub queue_stolen: Counter,
+    /// successor states emitted by the Promela bytecode VM
+    pub vm_generated: Counter,
+    /// off-shard successors pruned by shard-specialized VM programs
+    pub vm_pruned: Counter,
+    /// successor states produced by the reference tree interpreter
+    pub interp_generated: Counter,
+    /// result-cache hits
+    pub cache_hits: Counter,
+    /// result-cache misses
+    pub cache_misses: Counter,
+    /// worker-mode lease grants (task claims won)
+    pub lease_grants: Counter,
+    /// worker-mode lease heartbeats (mtime freshens)
+    pub lease_heartbeats: Counter,
+    /// worker-mode stale-lease reclaims
+    pub lease_reclaims: Counter,
+    /// deepest frontier depth observed
+    pub depth: Gauge,
+    /// peak visited-store bytes observed
+    pub store_bytes: Gauge,
+}
+
+static METRICS: Metrics = Metrics {
+    states_stored: Counter::new(),
+    states_matched: Counter::new(),
+    transitions: Counter::new(),
+    trail_replays: Counter::new(),
+    store_probes: Counter::new(),
+    store_resizes: Counter::new(),
+    queue_executed: Counter::new(),
+    queue_stolen: Counter::new(),
+    vm_generated: Counter::new(),
+    vm_pruned: Counter::new(),
+    interp_generated: Counter::new(),
+    cache_hits: Counter::new(),
+    cache_misses: Counter::new(),
+    lease_grants: Counter::new(),
+    lease_heartbeats: Counter::new(),
+    lease_reclaims: Counter::new(),
+    depth: Gauge::new(),
+    store_bytes: Gauge::new(),
+};
+
+/// The process-global registry.
+pub fn metrics() -> &'static Metrics {
+    &METRICS
+}
+
+impl Metrics {
+    /// Every (name, value), in fixed schema order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("checker.states_stored", self.states_stored.value()),
+            ("checker.states_matched", self.states_matched.value()),
+            ("checker.transitions", self.transitions.value()),
+            ("checker.trail_replays", self.trail_replays.value()),
+            ("checker.depth_max", self.depth.value()),
+            ("store.probes", self.store_probes.value()),
+            ("store.resizes", self.store_resizes.value()),
+            ("store.bytes_peak", self.store_bytes.value()),
+            ("queue.executed", self.queue_executed.value()),
+            ("queue.stolen", self.queue_stolen.value()),
+            ("vm.generated", self.vm_generated.value()),
+            ("vm.pruned", self.vm_pruned.value()),
+            ("interp.generated", self.interp_generated.value()),
+            ("cache.hits", self.cache_hits.value()),
+            ("cache.misses", self.cache_misses.value()),
+            ("lease.grants", self.lease_grants.value()),
+            ("lease.heartbeats", self.lease_heartbeats.value()),
+            ("lease.reclaims", self.lease_reclaims.value()),
+        ]
+    }
+
+    /// Zero everything (bench/test isolation).
+    pub fn reset(&self) {
+        self.states_stored.reset();
+        self.states_matched.reset();
+        self.transitions.reset();
+        self.trail_replays.reset();
+        self.store_probes.reset();
+        self.store_resizes.reset();
+        self.queue_executed.reset();
+        self.queue_stolen.reset();
+        self.vm_generated.reset();
+        self.vm_pruned.reset();
+        self.interp_generated.reset();
+        self.cache_hits.reset();
+        self.cache_misses.reset();
+        self.lease_grants.reset();
+        self.lease_heartbeats.reset();
+        self.lease_reclaims.reset();
+        self.depth.reset();
+        self.store_bytes.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gate_on_the_enabled_flag() {
+        let _g = crate::obs::test_lock();
+        let c = Counter::new();
+        let was = crate::obs::enabled();
+        crate::obs::set_enabled(false);
+        c.add(5);
+        assert_eq!(c.value(), 0, "disabled counters must not record");
+        crate::obs::set_enabled(true);
+        c.add(5);
+        c.add(2);
+        assert_eq!(c.value(), 7);
+        let g = Gauge::new();
+        g.set_max(9);
+        g.set_max(4);
+        assert_eq!(g.value(), 9);
+        g.set(3);
+        assert_eq!(g.value(), 3);
+        crate::obs::set_enabled(was);
+    }
+
+    #[test]
+    fn striped_adds_from_many_threads_sum_exactly() {
+        let _g = crate::obs::test_lock();
+        let was = crate::obs::enabled();
+        crate::obs::set_enabled(true);
+        static C: Counter = Counter::new();
+        C.reset();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        C.add(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(C.value(), 8000);
+        crate::obs::set_enabled(was);
+    }
+
+    #[test]
+    fn snapshot_names_are_unique_and_stable() {
+        let snap = metrics().snapshot();
+        let names: std::collections::HashSet<_> = snap.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names.len(), snap.len(), "duplicate metric name");
+        assert!(names.contains("checker.states_stored"));
+        assert!(names.contains("vm.pruned"));
+        assert!(names.contains("lease.reclaims"));
+    }
+}

@@ -1,0 +1,121 @@
+//! obs — the flight recorder: structured run events + hot-path counters.
+//!
+//! Dependency-free observability for every layer of the tuner:
+//!
+//! - [`metrics`] — a registry of striped (cache-line-padded) atomic
+//!   counters and gauges the hot paths feed. Collection is gated on one
+//!   process-global flag: when telemetry is off every counter `add` is a
+//!   single relaxed bool load and an untaken branch, and the checker's
+//!   per-state path flushes *deltas* only at its pre-existing amortized
+//!   checkpoints — the `checker_hot_path` bench pins the disabled-mode
+//!   overhead (`overhead_trace_vs_off` in `BENCH_checker.json`).
+//! - [`recorder`] — span-scoped structured events serialized as JSONL
+//!   (one compact `util::manifest::Json` object per line) behind
+//!   `--trace <file>` on `verify`/`tune`/`batch`/`worker`.
+//! - [`trace`] — schema validation and the `mcautotune trace <file>`
+//!   summarizer (top spans by wall time, per-shard imbalance table).
+//! - [`progress`] — the `--progress` periodic one-line stderr heartbeat
+//!   (states, depth, store bytes, elapsed) for long runs.
+//!
+//! **Determinism contract.** Event kinds split in two: `run` and `shard`
+//! events carry only run-derived data (state counts, verdicts, optima,
+//! per-instance VM counters) and no timing, so under `--frontier det`
+//! their *content* is identical across repeated runs and across
+//! single-process vs. worker-mode execution of the same plan — the
+//! property `rust/tests/trace_events.rs` pins. `meta`, `span`, `lease`
+//! and `counters` events carry wall-clock timing and process identity
+//! and are expected to differ between runs.
+//!
+//! The recorder is installed process-globally ([`install`]) because the
+//! hot paths cannot thread a handle through every call; library tests
+//! that need event capture without global state construct an explicit
+//! [`Recorder`] and pass it where supported, or serialize installs.
+
+pub mod metrics;
+pub mod progress;
+pub mod recorder;
+pub mod trace;
+
+pub use metrics::{metrics, Counter, Gauge, Metrics};
+pub use progress::ProgressMeter;
+pub use recorder::{ju64, Recorder, TraceSink};
+pub use trace::{deterministic_lines, summarize, validate, TraceSummary};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry collection on? The one branch every counter pays.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn metric collection on or off (independently of any recorder —
+/// `--progress` enables counters without tracing events).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+fn active_slot() -> &'static Mutex<Option<Arc<Recorder>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<Recorder>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `rec` as the process-global recorder and enable collection.
+/// Returns the previously installed recorder, if any.
+pub fn install(rec: Arc<Recorder>) -> Option<Arc<Recorder>> {
+    set_enabled(true);
+    active_slot().lock().expect("obs recorder slot").replace(rec)
+}
+
+/// Remove the global recorder and disable collection. Returns it so the
+/// caller can [`Recorder::finish`] it.
+pub fn uninstall() -> Option<Arc<Recorder>> {
+    set_enabled(false);
+    active_slot().lock().expect("obs recorder slot").take()
+}
+
+/// The installed recorder — `None` when telemetry is off, so event
+/// emission sites cost one relaxed load on the disabled path.
+pub fn active() -> Option<Arc<Recorder>> {
+    if !enabled() {
+        return None;
+    }
+    active_slot().lock().expect("obs recorder slot").as_ref().cloned()
+}
+
+/// Serializes tests that toggle the process-global flag or recorder —
+/// `cargo test` runs tests on threads, and two tests flipping
+/// [`set_enabled`] concurrently would see each other's state.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_install_roundtrip() {
+        let _g = test_lock();
+        // Note: `enabled()` is process-global; this test only asserts the
+        // install/uninstall protocol, not the initial value (a sibling
+        // test may have toggled it).
+        let rec = Arc::new(Recorder::in_memory());
+        let prev = install(rec.clone());
+        assert!(enabled());
+        assert!(active().is_some());
+        let got = uninstall().expect("recorder was installed");
+        assert!(Arc::ptr_eq(&got, &rec));
+        assert!(!enabled());
+        assert!(active().is_none());
+        // restore whatever was there before (other tests' recorder)
+        if let Some(p) = prev {
+            install(p);
+        }
+    }
+}

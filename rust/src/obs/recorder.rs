@@ -1,0 +1,199 @@
+//! The flight recorder: structured events serialized as JSONL.
+//!
+//! One [`Recorder`] per traced run. Events are compact
+//! [`Json`] objects, one per line, buffered in memory and written
+//! atomically on [`Recorder::finish`] (traces are small — hot-path
+//! volume goes through the [`super::metrics`] counters, not events).
+//!
+//! Two emission flavors implement the determinism contract
+//! (see [`super`]): [`Recorder::event`] appends a `t_ns` wall-clock
+//! field (kinds `meta`, `span`, `lease`, `counters`), while
+//! [`Recorder::det_event`] emits content-only lines (kinds `run`,
+//! `shard`) that are byte-identical across deterministic re-executions.
+
+use crate::util::error::Result;
+use crate::util::manifest::{write_atomic, Json};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// u64 as JSON: an integer when it fits `i64`, a decimal string above —
+/// the same lossless encoding `coordinator::task::TaskSpec` uses.
+pub fn ju64(v: u64) -> Json {
+    if v <= i64::MAX as u64 {
+        Json::Int(v as i64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// Where a recorder's lines go on [`Recorder::finish`].
+#[derive(Debug, Clone)]
+pub enum TraceSink {
+    /// keep in memory only ([`Recorder::lines`] reads them back)
+    Memory,
+    /// write the JSONL file atomically (temp + rename)
+    File(PathBuf),
+}
+
+/// A buffer of JSONL trace events for one run.
+#[derive(Debug)]
+pub struct Recorder {
+    t0: Instant,
+    sink: TraceSink,
+    lines: Mutex<Vec<String>>,
+}
+
+impl Recorder {
+    pub fn new(sink: TraceSink) -> Self {
+        Self { t0: Instant::now(), sink, lines: Mutex::new(Vec::new()) }
+    }
+
+    /// A recorder that writes `path` on [`finish`](Self::finish).
+    pub fn to_file(path: impl Into<PathBuf>) -> Self {
+        Self::new(TraceSink::File(path.into()))
+    }
+
+    /// A recorder for tests and benches: lines stay in memory.
+    pub fn in_memory() -> Self {
+        Self::new(TraceSink::Memory)
+    }
+
+    fn push(&self, kind: &str, fields: Vec<(&str, Json)>, timed: bool) {
+        let mut all: Vec<(String, Json)> = Vec::with_capacity(fields.len() + 2);
+        all.push(("k".to_string(), Json::Str(kind.to_string())));
+        for (k, v) in fields {
+            all.push((k.to_string(), v));
+        }
+        if timed {
+            let ns = self.t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            all.push(("t_ns".to_string(), ju64(ns)));
+        }
+        let line = Json::Obj(all).render();
+        self.lines.lock().expect("recorder lines").push(line);
+    }
+
+    /// Emit a timed event (`t_ns` = nanoseconds since recorder start).
+    /// For run-identity data use [`det_event`](Self::det_event) instead.
+    pub fn event(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        self.push(kind, fields, true);
+    }
+
+    /// Emit a content-only event: no timing, no process identity. Lines
+    /// of kinds `run` and `shard` must go through here so deterministic
+    /// re-executions (worker-mode duplicate leases, `--frontier det`
+    /// re-runs) publish identical bytes.
+    pub fn det_event(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        self.push(kind, fields, false);
+    }
+
+    /// Run `f` under a named span and emit its wall time. `path` is
+    /// hierarchical (`batch/job/shard/explore`) — nesting is encoded in
+    /// the path, and inner spans complete (and appear) before outer ones.
+    pub fn span<T>(&self, path: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.event(
+            "span",
+            vec![("path", Json::Str(path.to_string())), ("ns", ju64(ns))],
+        );
+        out
+    }
+
+    /// Snapshot of the buffered lines (tests, summaries).
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().expect("recorder lines").clone()
+    }
+
+    /// All lines as one JSONL document (trailing newline when non-empty).
+    pub fn render(&self) -> String {
+        let lines = self.lines.lock().expect("recorder lines");
+        if lines.is_empty() {
+            String::new()
+        } else {
+            let mut out = lines.join("\n");
+            out.push('\n');
+            out
+        }
+    }
+
+    /// Append the final `counters` event (a dump of the global metrics
+    /// registry) and, for file sinks, write the JSONL atomically.
+    pub fn finish(&self) -> Result<()> {
+        let snap = super::metrics::metrics().snapshot();
+        let fields: Vec<(&str, Json)> =
+            snap.into_iter().map(|(n, v)| (n, ju64(v))).collect();
+        self.event("counters", fields);
+        if let TraceSink::File(path) = &self.sink {
+            write_atomic(path, &self.render())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_render_one_json_object_per_line() {
+        let r = Recorder::in_memory();
+        r.event("meta", vec![("cmd", Json::Str("verify".into()))]);
+        r.det_event("run", vec![("states", ju64(7))]);
+        let lines = r.lines();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(&lines[0]).unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_str), Some("meta"));
+        assert!(v.get("t_ns").is_some(), "timed events carry t_ns");
+        let v = Json::parse(&lines[1]).unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_str), Some("run"));
+        assert!(v.get("t_ns").is_none(), "det events carry no timing");
+        assert_eq!(v.get("states").and_then(Json::as_i64), Some(7));
+    }
+
+    #[test]
+    fn u64_beyond_i64_encodes_as_decimal_string() {
+        let r = Recorder::in_memory();
+        r.det_event("run", vec![("max_states", ju64(u64::MAX))]);
+        let line = &r.lines()[0];
+        let v = Json::parse(line).unwrap();
+        let s = v.get("max_states").and_then(Json::as_str).expect("string-encoded");
+        assert_eq!(s.parse::<u64>().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn spans_nest_inner_before_outer() {
+        let r = Recorder::in_memory();
+        let x = r.span("outer", || {
+            r.span("outer/inner", || 21) * 2
+        });
+        assert_eq!(x, 42);
+        let lines = r.lines();
+        assert_eq!(lines.len(), 2);
+        let inner = Json::parse(&lines[0]).unwrap();
+        let outer = Json::parse(&lines[1]).unwrap();
+        assert_eq!(inner.get("path").and_then(Json::as_str), Some("outer/inner"));
+        assert_eq!(outer.get("path").and_then(Json::as_str), Some("outer"));
+        // nesting is visible in the path prefix and the ns ordering
+        let ns = |v: &Json| match v.get("ns") {
+            Some(Json::Int(i)) => *i as u64,
+            Some(Json::Str(s)) => s.parse().unwrap(),
+            _ => panic!("span without ns"),
+        };
+        assert!(ns(&outer) >= ns(&inner), "outer span contains inner");
+    }
+
+    #[test]
+    fn finish_appends_counters_and_renders_jsonl() {
+        let r = Recorder::in_memory();
+        r.det_event("run", vec![("states", ju64(1))]);
+        r.finish().unwrap();
+        let text = r.render();
+        assert!(text.ends_with('\n'));
+        let last = text.lines().last().unwrap();
+        let v = Json::parse(last).unwrap();
+        assert_eq!(v.get("k").and_then(Json::as_str), Some("counters"));
+        assert!(v.get("checker.states_stored").is_some());
+    }
+}

@@ -1,0 +1,316 @@
+//! Trace-file tooling: JSONL schema validation, the deterministic-line
+//! filter the conformance tests compare, and the `mcautotune trace`
+//! summarizer (top spans by wall time, per-shard imbalance table).
+
+use crate::util::error::{bail, Context, Result};
+use crate::util::fmt::{human_duration, thousands};
+use crate::util::manifest::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key) {
+        Some(Json::Int(i)) if *i >= 0 => Ok(*i as u64),
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .with_context(|| format!("field `{}`: `{}` is not a u64", key, s)),
+        Some(_) => bail!("field `{}` is not a u64", key),
+        None => bail!("missing field `{}`", key),
+    }
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing string field `{}`", key))
+}
+
+/// Parse and schema-check a JSONL trace: every non-empty line must be a
+/// JSON object with a string `k` kind, and the known kinds must carry
+/// their required fields. Unknown kinds pass (forward compatibility).
+/// Returns the parsed events.
+pub fn validate(text: &str) -> Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let v = Json::parse(line).with_context(|| format!("trace line {}", lineno))?;
+        let Json::Obj(_) = &v else {
+            bail!("trace line {}: not a JSON object", lineno);
+        };
+        let kind = str_field(&v, "k")
+            .with_context(|| format!("trace line {}", lineno))?
+            .to_string();
+        let check = || -> Result<()> {
+            match kind.as_str() {
+                "span" => {
+                    str_field(&v, "path")?;
+                    u64_field(&v, "ns")?;
+                    u64_field(&v, "t_ns")?;
+                }
+                "run" => {
+                    str_field(&v, "cmd")?;
+                    u64_field(&v, "states")?;
+                    // deterministic content: no timing allowed
+                    if v.get("t_ns").is_some() {
+                        bail!("`run` events must not carry wall-clock fields");
+                    }
+                }
+                "shard" => {
+                    str_field(&v, "id")?;
+                    str_field(&v, "job")?;
+                    u64_field(&v, "est")?;
+                    u64_field(&v, "states")?;
+                    if v.get("t_ns").is_some() {
+                        bail!("`shard` events must not carry wall-clock fields");
+                    }
+                }
+                "lease" => {
+                    str_field(&v, "action")?;
+                    str_field(&v, "id")?;
+                    u64_field(&v, "t_ns")?;
+                }
+                "meta" | "counters" => {
+                    u64_field(&v, "t_ns")?;
+                }
+                _ => {}
+            }
+            Ok(())
+        };
+        check().with_context(|| format!("trace line {} (kind `{}`)", lineno, kind))?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// The lines whose content is pinned deterministic (`run` and `shard`
+/// events), verbatim. Two `--frontier det` executions of the same work —
+/// including a worker-mode duplicate of a single-process run — must
+/// produce equal multisets of these lines.
+pub fn deterministic_lines(text: &str) -> Vec<String> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter(|l| {
+            Json::parse(l)
+                .ok()
+                .as_ref()
+                .and_then(|v| v.get("k"))
+                .and_then(Json::as_str)
+                .map(|k| k == "run" || k == "shard")
+                .unwrap_or(false)
+        })
+        .map(str::to_string)
+        .collect()
+}
+
+/// One shard's actual-vs-estimated telemetry from a `shard` event.
+#[derive(Debug, Clone)]
+pub struct ShardRow {
+    pub id: String,
+    pub job: String,
+    /// the `ShardPlan` weight (estimated sub-lattice state-space size)
+    pub est: u64,
+    /// states actually explored
+    pub states: u64,
+}
+
+/// What `mcautotune trace <file>` prints.
+#[derive(Debug)]
+pub struct TraceSummary {
+    pub events: usize,
+    pub by_kind: BTreeMap<String, usize>,
+    /// (path, total ns, calls), heaviest first
+    pub spans: Vec<(String, u64, usize)>,
+    pub shards: Vec<ShardRow>,
+    /// the last `counters` dump, schema order
+    pub counters: Vec<(String, u64)>,
+}
+
+/// Validate and aggregate a trace document.
+pub fn summarize(text: &str) -> Result<TraceSummary> {
+    let events = validate(text)?;
+    let mut by_kind: BTreeMap<String, usize> = BTreeMap::new();
+    let mut span_agg: BTreeMap<String, (u64, usize)> = BTreeMap::new();
+    let mut shards: Vec<ShardRow> = Vec::new();
+    let mut counters: Vec<(String, u64)> = Vec::new();
+    for v in &events {
+        let kind = str_field(v, "k")?.to_string();
+        *by_kind.entry(kind.clone()).or_insert(0) += 1;
+        match kind.as_str() {
+            "span" => {
+                let path = str_field(v, "path")?.to_string();
+                let ns = u64_field(v, "ns")?;
+                let e = span_agg.entry(path).or_insert((0, 0));
+                e.0 = e.0.saturating_add(ns);
+                e.1 += 1;
+            }
+            "shard" => shards.push(ShardRow {
+                id: str_field(v, "id")?.to_string(),
+                job: str_field(v, "job")?.to_string(),
+                est: u64_field(v, "est")?,
+                states: u64_field(v, "states")?,
+            }),
+            "counters" => {
+                let Json::Obj(fields) = v else { unreachable!("validated object") };
+                counters = fields
+                    .iter()
+                    .filter(|(name, _)| name != "k" && name != "t_ns")
+                    .map(|(name, _)| Ok((name.clone(), u64_field(v, name)?)))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            _ => {}
+        }
+    }
+    let mut spans: Vec<(String, u64, usize)> =
+        span_agg.into_iter().map(|(p, (ns, n))| (p, ns, n)).collect();
+    spans.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    shards.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(TraceSummary { events: events.len(), by_kind, spans, shards, counters })
+}
+
+impl TraceSummary {
+    /// Human-readable report: event counts, top spans by wall time, the
+    /// per-shard imbalance table (actual states vs. planned weight), and
+    /// the final counter dump.
+    pub fn render(&self) -> String {
+        let mut out = format!("trace: {} event(s)", self.events);
+        if !self.by_kind.is_empty() {
+            let kinds: Vec<String> =
+                self.by_kind.iter().map(|(k, n)| format!("{}={}", k, n)).collect();
+            out.push_str(&format!(" ({})", kinds.join(", ")));
+        }
+        out.push('\n');
+        if !self.spans.is_empty() {
+            out.push_str("top spans by wall time:\n");
+            for (path, ns, calls) in self.spans.iter().take(10) {
+                out.push_str(&format!(
+                    "  {:>10}  x{:<4} {}\n",
+                    human_duration(Duration::from_nanos(*ns)),
+                    calls,
+                    path
+                ));
+            }
+        }
+        if !self.shards.is_empty() {
+            let est_total: u64 = self.shards.iter().map(|s| s.est).sum();
+            let act_total: u64 = self.shards.iter().map(|s| s.states).sum();
+            out.push_str("shard imbalance (actual states vs. planned weight):\n");
+            for s in &self.shards {
+                let est_share = share(s.est, est_total);
+                let act_share = share(s.states, act_total);
+                out.push_str(&format!(
+                    "  {}  {}  est {} ({:.1}%)  actual {} ({:.1}%)\n",
+                    s.id,
+                    s.job,
+                    thousands(s.est),
+                    est_share,
+                    thousands(s.states),
+                    act_share,
+                ));
+            }
+        }
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (name, v) in &self.counters {
+                out.push_str(&format!("  {:<24} {}\n", name, thousands(*v)));
+            }
+        }
+        out
+    }
+}
+
+fn share(part: u64, total: u64) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        part as f64 / total as f64 * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{ju64, Recorder};
+
+    fn sample_trace() -> String {
+        let r = Recorder::in_memory();
+        r.event("meta", vec![("cmd", Json::Str("batch".into()))]);
+        r.span("job/shard", || {});
+        r.span("job/shard", || {});
+        r.span("job", || {});
+        r.det_event(
+            "shard",
+            vec![
+                ("id", Json::Str("j000-s000".into())),
+                ("job", Json::Str("minimum-16".into())),
+                ("est", ju64(100)),
+                ("states", ju64(120)),
+            ],
+        );
+        r.det_event(
+            "shard",
+            vec![
+                ("id", Json::Str("j000-s001".into())),
+                ("job", Json::Str("minimum-16".into())),
+                ("est", ju64(100)),
+                ("states", ju64(80)),
+            ],
+        );
+        r.finish().unwrap();
+        r.render()
+    }
+
+    #[test]
+    fn validate_accepts_recorder_output() {
+        let text = sample_trace();
+        let events = validate(&text).unwrap();
+        assert_eq!(events.len(), 7);
+    }
+
+    #[test]
+    fn validate_rejects_garbage_and_schema_violations() {
+        assert!(validate("not json\n").is_err());
+        assert!(validate("{\"no_kind\":1}\n").is_err());
+        // a span without its ns field
+        assert!(validate("{\"k\":\"span\",\"path\":\"x\",\"t_ns\":1}\n").is_err());
+        // deterministic kinds must not carry wall-clock fields
+        assert!(validate("{\"k\":\"shard\",\"id\":\"a\",\"job\":\"j\",\"est\":1,\"states\":1,\"t_ns\":5}\n").is_err());
+        // unknown kinds pass
+        assert!(validate("{\"k\":\"future-kind\",\"x\":1}\n").is_ok());
+        // blank lines are skipped
+        assert!(validate("\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn deterministic_filter_keeps_run_and_shard_only() {
+        let text = sample_trace();
+        let det = deterministic_lines(&text);
+        assert_eq!(det.len(), 2);
+        for l in &det {
+            assert!(l.contains("\"k\":\"shard\""));
+            assert!(!l.contains("t_ns"));
+        }
+    }
+
+    #[test]
+    fn summary_aggregates_spans_and_shards() {
+        let text = sample_trace();
+        let s = summarize(&text).unwrap();
+        assert_eq!(s.events, 7);
+        assert_eq!(s.by_kind.get("span"), Some(&3));
+        assert_eq!(s.by_kind.get("shard"), Some(&2));
+        let (path, _ns, calls) =
+            s.spans.iter().find(|(p, _, _)| p == "job/shard").unwrap();
+        assert_eq!((path.as_str(), *calls), ("job/shard", 2));
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!(s.shards[0].id, "j000-s000");
+        assert!(!s.counters.is_empty());
+        let rendered = s.render();
+        assert!(rendered.contains("top spans"));
+        assert!(rendered.contains("shard imbalance"));
+        assert!(rendered.contains("j000-s001"));
+        assert!(rendered.contains("counters:"));
+    }
+}

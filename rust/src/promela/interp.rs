@@ -577,6 +577,7 @@ impl TransitionSystem for PromelaSystem {
             if s.procs[p].alive {
                 self.gen_from(s, p, s.procs[p].pc, out);
                 if !out.is_empty() {
+                    crate::obs::metrics().interp_generated.add(out.len() as u64);
                     return;
                 }
             }
@@ -587,6 +588,7 @@ impl TransitionSystem for PromelaSystem {
                 self.gen_from(s, p, s.procs[p].pc, out);
             }
         }
+        crate::obs::metrics().interp_generated.add(out.len() as u64);
     }
 
     fn encode(&self, s: &PState, out: &mut Vec<u8>) {

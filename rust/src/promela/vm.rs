@@ -451,6 +451,9 @@ pub struct PromelaVm {
     /// filtering) — lets tests assert that specialization generates
     /// strictly fewer raw successors than generate-then-filter
     generated: AtomicU64,
+    /// off-shard choices dropped by compile-time specialization before
+    /// materialization — the telemetry complement of `generated`
+    pruned: AtomicU64,
 }
 
 impl PromelaVm {
@@ -529,6 +532,7 @@ impl PromelaVm {
             spec,
             coalesce_atomic: true,
             generated: AtomicU64::new(0),
+            pruned: AtomicU64::new(0),
             src: prog,
         })
     }
@@ -556,6 +560,18 @@ impl PromelaVm {
 
     pub fn reset_generated(&self) {
         self.generated.store(0, Ordering::Relaxed);
+        self.pruned.store(0, Ordering::Relaxed);
+    }
+
+    /// Off-shard choices pruned before materialization (see field docs).
+    pub fn pruned(&self) -> u64 {
+        self.pruned.load(Ordering::Relaxed)
+    }
+
+    /// Count one pruned (never-materialized) off-shard choice.
+    #[inline]
+    fn note_prune(&self) {
+        self.pruned.fetch_add(1, Ordering::Relaxed);
     }
 
     // ------------------------------------------------------- state access --
@@ -1024,12 +1040,14 @@ impl PromelaVm {
                 let v = self.eval(d, frame, *e);
                 if let VmLVal::G(o, ty) = *lv {
                     if self.store_prunes(d, o, ty.truncate(v)) {
+                        self.note_prune();
                         return true; // off-shard choice: never materialized
                     }
                 }
                 let mut ns = s.clone();
                 self.store(&mut ns.data, frame, *lv, v);
                 if self.elem_store_prunes(lv, &ns.data) {
+                    self.note_prune();
                     return true;
                 }
                 self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
@@ -1039,6 +1057,7 @@ impl PromelaVm {
                 let id = self.nchans(d) as i32;
                 if let VmLVal::G(o, ty) = *lv {
                     if self.store_prunes(d, o, ty.truncate(id)) {
+                        self.note_prune();
                         return true;
                     }
                 }
@@ -1055,6 +1074,7 @@ impl PromelaVm {
                 let frame_ns = self.frame_of(&ns.data, p);
                 self.store(&mut ns.data, frame_ns, *lv, id);
                 if self.elem_store_prunes(lv, &ns.data) {
+                    self.note_prune();
                     return true;
                 }
                 self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
@@ -1066,6 +1086,7 @@ impl PromelaVm {
                 for v in l..=h {
                     if let VmLVal::G(o, ty) = *lv {
                         if self.store_prunes(d, o, ty.truncate(v)) {
+                            self.note_prune();
                             pruned = true; // off-shard value: skip unmaterialized
                             continue;
                         }
@@ -1163,6 +1184,7 @@ impl PromelaVm {
                             }
                         }
                         if *binds_watch && self.off_shard(&ns.data) {
+                            self.note_prune();
                             return true;
                         }
                         self.finish_step(&mut ns, p, instr.next, instr.atomic_next);
@@ -1203,6 +1225,7 @@ impl PromelaVm {
             }
         }
         if *binds_watch && self.off_shard(&ns.data) {
+            self.note_prune();
             return true;
         }
         let poff = self.proc_off(&ns.data, p);

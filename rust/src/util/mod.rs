@@ -9,5 +9,6 @@ pub mod error;
 pub mod fmt;
 pub mod hash;
 pub mod manifest;
+pub mod out;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,39 @@
+//! BrokenPipe-safe stdout for the CLI.
+//!
+//! Rust's `println!` panics when stdout is closed, so
+//! `mcautotune batch ... | head` would die with a `failed printing to
+//! stdout` panic once `head` exits. Every CLI output path goes through
+//! [`emit`] (via the [`outln!`](crate::outln) / [`outp!`](crate::outp)
+//! macros) instead: a write failure means the downstream reader is gone,
+//! which for a pipeline is normal termination — exit 0, like the
+//! default `SIGPIPE` disposition would.
+
+use std::io::Write;
+
+/// Write to stdout; exit the process cleanly if the pipe is closed.
+pub fn emit(args: std::fmt::Arguments<'_>) {
+    let mut out = std::io::stdout().lock();
+    if out.write_fmt(args).is_err() || out.flush().is_err() {
+        std::process::exit(0);
+    }
+}
+
+/// `println!` that exits cleanly on a closed stdout.
+#[macro_export]
+macro_rules! outln {
+    () => {
+        $crate::util::out::emit(format_args!("\n"))
+    };
+    ($($arg:tt)*) => {{
+        $crate::util::out::emit(format_args!($($arg)*));
+        $crate::util::out::emit(format_args!("\n"));
+    }};
+}
+
+/// `print!` that exits cleanly on a closed stdout.
+#[macro_export]
+macro_rules! outp {
+    ($($arg:tt)*) => {
+        $crate::util::out::emit(format_args!($($arg)*))
+    };
+}

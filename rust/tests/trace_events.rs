@@ -1,0 +1,258 @@
+//! Flight-recorder telemetry (`rust/src/obs`): JSONL schema roundtrips,
+//! the determinism contract for `run`/`shard` events, worker-mode lease
+//! events, and BrokenPipe-safe CLI output.
+//!
+//! Global-recorder runs are exercised through spawned `mcautotune`
+//! processes (the recorder is process-global, so in-process tests would
+//! race the threaded test runner); library-level tests use an explicit
+//! in-memory [`Recorder`].
+
+use mcautotune::coordinator::TaskDir;
+use mcautotune::obs::{deterministic_lines, ju64, validate, Recorder};
+use mcautotune::util::manifest::Json;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+const BIN: &str = env!("CARGO_BIN_EXE_mcautotune");
+
+fn temp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "mcat_trace_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn run_bin(args: &[&str]) -> String {
+    let out = Command::new(BIN).args(args).output().expect("spawn mcautotune");
+    assert!(
+        out.status.success(),
+        "mcautotune {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn kind<'a>(e: &'a Json) -> Option<&'a str> {
+    e.get("k").and_then(Json::as_str)
+}
+
+// ------------------------------------------------------- schema roundtrip --
+
+#[test]
+fn recorder_schema_roundtrips_spans_and_u64() {
+    let r = Recorder::in_memory();
+    r.event("meta", vec![("cmd", Json::Str("test".into()))]);
+    let v = r.span("outer", || r.span("outer/inner", || 21) * 2);
+    assert_eq!(v, 42);
+    r.det_event(
+        "run",
+        vec![("cmd", Json::Str("test".into())), ("states", ju64(u64::MAX))],
+    );
+    r.finish().unwrap();
+    let text = r.render();
+    let events = validate(&text).unwrap();
+    assert_eq!(events.len(), 5, "meta + two spans + run + counters:\n{}", text);
+
+    // u64 beyond i64 roundtrips losslessly as a decimal string
+    let run = events.iter().find(|e| kind(e) == Some("run")).unwrap();
+    let s = run.get("states").and_then(Json::as_str).expect("decimal-string u64");
+    assert_eq!(s.parse::<u64>().unwrap(), u64::MAX);
+
+    // spans nest: the inner span completes (and appears) before the outer
+    let spans: Vec<&str> = events
+        .iter()
+        .filter(|e| kind(e) == Some("span"))
+        .map(|e| e.get("path").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(spans, ["outer/inner", "outer"]);
+
+    // only the run event is pinned deterministic
+    assert_eq!(deterministic_lines(&text).len(), 1);
+}
+
+// --------------------------------------------------- determinism contract --
+
+#[test]
+fn det_verify_traces_are_byte_identical_across_runs() {
+    let t1 = temp("det1");
+    let t2 = temp("det2");
+    for t in [&t1, &t2] {
+        run_bin(&[
+            "verify",
+            "--model",
+            "minimum",
+            "--size",
+            "16",
+            "--frontier",
+            "det",
+            "--threads",
+            "4",
+            "--trace",
+            t.to_str().unwrap(),
+        ]);
+    }
+    let a = std::fs::read_to_string(&t1).unwrap();
+    let b = std::fs::read_to_string(&t2).unwrap();
+    validate(&a).unwrap();
+    validate(&b).unwrap();
+    let (da, db) = (deterministic_lines(&a), deterministic_lines(&b));
+    assert!(!da.is_empty(), "verify must emit a `run` event:\n{}", a);
+    assert_eq!(da, db, "deterministic event content must be byte-identical");
+    assert!(da[0].contains("verify"), "run event names its command: {}", da[0]);
+}
+
+#[test]
+fn worker_mode_shard_events_match_the_single_process_run() {
+    let spec = "job minimum size=16 np=4 gmt=3 shards=2\n";
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, spec).unwrap();
+    let spec_s = spec_path.to_str().unwrap();
+
+    // single-process reference trace
+    let single_trace = temp("single");
+    run_bin(&[
+        "batch",
+        spec_s,
+        "--cache",
+        "none",
+        "--frontier",
+        "det",
+        "--trace",
+        single_trace.to_str().unwrap(),
+    ]);
+
+    // the same plan drained by two traced worker processes
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+    run_bin(&[
+        "batch", spec_s, "--task-dir", dir_s, "--plan-only", "--cache", "none",
+        "--frontier", "det",
+    ]);
+    let w_traces = [temp("w0"), temp("w1")];
+    let workers: Vec<_> = w_traces
+        .iter()
+        .map(|t| {
+            Command::new(BIN)
+                .args(["worker", dir_s, "--trace", t.to_str().unwrap()])
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    for mut w in workers {
+        assert!(w.wait().expect("worker wait").success(), "worker process failed");
+    }
+
+    let single = std::fs::read_to_string(&single_trace).unwrap();
+    validate(&single).unwrap();
+    let mut expect = deterministic_lines(&single);
+    let mut got = Vec::new();
+    let mut grants = 0;
+    for t in &w_traces {
+        let text = std::fs::read_to_string(t).unwrap();
+        let events = validate(&text).unwrap();
+        got.extend(deterministic_lines(&text));
+        for e in events.iter().filter(|e| kind(e) == Some("lease")) {
+            if e.get("action").and_then(Json::as_str) == Some("grant") {
+                grants += 1;
+                let owner = e.get("owner").and_then(Json::as_str).expect("lease owner");
+                assert!(owner.contains('@'), "owner must be pid@host, got `{}`", owner);
+            }
+        }
+    }
+    assert_eq!(grants, 2, "each planned shard is leased exactly once");
+    assert!(!expect.is_empty(), "the batch must emit shard events:\n{}", single);
+    expect.sort();
+    got.sort();
+    assert_eq!(
+        expect, got,
+        "worker-mode shard events must be byte-identical to the single-process run"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&single_trace).ok();
+    for t in &w_traces {
+        std::fs::remove_file(t).ok();
+    }
+}
+
+// ------------------------------------------------------ lease observability --
+
+#[test]
+fn recovery_worker_trace_records_reclaim_grant_and_heartbeat() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, "job minimum size=16 np=4 gmt=3 shards=1\n").unwrap();
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+    run_bin(&[
+        "batch", spec_path.to_str().unwrap(), "--task-dir", dir_s, "--plan-only",
+        "--cache", "none",
+    ]);
+
+    // a worker leases the task and "crashes": the lease file stays behind
+    let abandoned = TaskDir::new(&dir).lease().unwrap().expect("a task to abandon");
+    drop(abandoned);
+
+    // a traced recovery worker with a short TTL re-leases and finishes it
+    let trace = temp("recovery");
+    let out = run_bin(&[
+        "worker", dir_s, "--ttl-ms", "300", "--poll-ms", "50", "--trace",
+        trace.to_str().unwrap(),
+    ]);
+    assert!(out.contains("1 reclaimed"), "recovery must reclaim the stale lease: {}", out);
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let events = validate(&text).unwrap();
+    let actions: Vec<&str> = events
+        .iter()
+        .filter(|e| kind(e) == Some("lease"))
+        .map(|e| e.get("action").and_then(Json::as_str).expect("lease action"))
+        .collect();
+    assert!(actions.contains(&"reclaim"), "reclaim event missing: {:?}\n{}", actions, text);
+    assert!(actions.contains(&"grant"), "grant event missing: {:?}", actions);
+    assert!(
+        actions.contains(&"heartbeat"),
+        "the execution-start heartbeat must appear even for short tasks: {:?}",
+        actions
+    );
+    // the final counters dump mirrors the events
+    let counters = events.iter().rev().find(|e| kind(e) == Some("counters")).unwrap();
+    assert_eq!(counters.get("lease.reclaims").and_then(Json::as_i64), Some(1));
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&trace).ok();
+}
+
+// ------------------------------------------------------------ CLI plumbing --
+
+#[test]
+fn trace_subcommand_summarizes_a_recorded_run() {
+    let t = temp("summary");
+    run_bin(&["verify", "--model", "minimum", "--size", "8", "--trace", t.to_str().unwrap()]);
+    let out = run_bin(&["trace", t.to_str().unwrap()]);
+    assert!(out.contains("trace:"), "summary header missing:\n{}", out);
+    assert!(out.contains("top spans"), "span table missing:\n{}", out);
+    assert!(out.contains("counters:"), "counter dump missing:\n{}", out);
+    assert!(out.contains("checker.states_stored"), "schema counter names missing:\n{}", out);
+    std::fs::remove_file(&t).ok();
+}
+
+#[test]
+fn closed_stdout_pipe_is_normal_termination() {
+    // `| head` semantics: the reader going away must exit 0, not panic
+    let mut child = Command::new(BIN)
+        .arg("help")
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn mcautotune");
+    drop(child.stdout.take()); // close the only read end immediately
+    let status = child.wait().expect("wait");
+    assert!(status.success(), "closed stdout must be a clean exit, got {:?}", status);
+}
