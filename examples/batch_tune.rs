@@ -103,6 +103,56 @@ fn main() -> mcautotune::util::error::Result<()> {
     }
     println!("[worker mode] merged report matches the single-process run.");
 
+    // ---- chaos: a poison task, dead-lettered, folded with --partial --
+    //
+    // A failpoint (the same facility `MCAT_FAILPOINTS` drives from the
+    // environment) makes the first job's only shard panic on every
+    // attempt. The drain retries it through the attempt budget, moves it
+    // to dead/<id>.json, and finishes the rest of the batch. A strict
+    // merge refuses; `merge --partial` (merge_partial here) folds the
+    // healthy job and reports the casualty. In production:
+    //
+    //   mcautotune batch jobs.spec --task-dir tasks/ --plan-only --max-attempts 3
+    //   mcautotune worker tasks/            # retries, then dead-letters
+    //   mcautotune merge tasks/ --partial   # folds what completed
+    let chaos_dir = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_chaos_{}", std::process::id()));
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    let chaos_cache_path = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_chaos_{}.json", std::process::id()));
+    std::fs::remove_file(&chaos_cache_path).ok();
+
+    let chaos_jobs = TuningJob::parse_spec(
+        "job minimum size=16 np=4 gmt=3 shards=1\njob minimum size=32 np=4 gmt=3 shards=1\n",
+    )?;
+    let ctd = TaskDir::new(&chaos_dir).with_max_attempts(2);
+    let mut chaos_cache = ResultCache::open(&chaos_cache_path)?;
+    ctd.plan(&chaos_jobs, &opts, &mut chaos_cache)?;
+    // exactly two injected panics; a single-threaded drain leases tasks
+    // in id order, so both land on job 0's only task — one per attempt —
+    // and the attempt budget (2) runs out. Job 1 never sees a fault.
+    mcautotune::util::failpoint::activate("shard.exec=panic:2")?;
+    let stats = ctd.drain(1, false)?;
+    mcautotune::util::failpoint::deactivate();
+    mcautotune::ensure!(stats.complete, "dead-lettering must unblock the drain");
+    let dead = ctd.status()?.dead;
+    println!("\n[chaos] dead-lettered: {:?}", dead);
+    mcautotune::ensure!(dead.len() == 1, "exactly the poisoned task is dead-lettered");
+    mcautotune::ensure!(
+        ctd.merge(&mut chaos_cache).is_err(),
+        "a strict merge must refuse a batch with dead-lettered tasks"
+    );
+    let partial = ctd.merge_partial(&mut chaos_cache)?;
+    print!("{}", partial.render());
+    mcautotune::ensure!(partial.partial, "merge_partial must flag the report");
+    mcautotune::ensure!(partial.dead_tasks.len() == 1, "the report must list the dead task");
+    mcautotune::ensure!(
+        partial.outcomes.iter().any(|o| o.job.size == 32 && !o.lower_bound),
+        "the healthy job must be folded whole"
+    );
+
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    std::fs::remove_file(&chaos_cache_path).ok();
     std::fs::remove_dir_all(&task_dir).ok();
     std::fs::remove_file(&fresh_cache).ok();
     std::fs::remove_file(&cache_path).ok();

@@ -238,6 +238,9 @@ impl ResultCache {
     /// half-written file (it would quarantine a perfectly healthy cache).
     pub fn save(&self) -> Result<()> {
         if let Some(path) = &self.path {
+            // chaos site: persistence failing after a whole batch ran —
+            // callers must degrade (report warning), not abort
+            crate::util::failpoint::hit("cache.save")?;
             write_atomic(path, &self.to_json())
                 .with_context(|| format!("saving result cache {}", path.display()))?;
         }

@@ -58,7 +58,7 @@ pub mod task;
 pub use cache::{CacheEntry, ResultCache};
 pub use job::{JobEngine, JobModel, JobState, ModelKind, ShardedExec, TuningJob};
 pub use queue::{JobQueue, QueueStats};
-pub use report::{BatchReport, JobOutcome};
+pub use report::{BatchReport, DeadTaskInfo, JobOutcome};
 pub use shard::{
     adaptive_shard_count, merge_results, partition, plan_shards, shard_weight, ShardModel,
     ShardPlan, TuningShard,
@@ -152,6 +152,7 @@ pub fn plan_batch(
                 wall: Duration::ZERO,
                 plan: Vec::new(),
                 shard_states: Vec::new(),
+                lower_bound: false,
             });
             continue;
         }
@@ -231,6 +232,9 @@ fn run_shard_task_inner(
     swarm: &SwarmConfig,
     tag: Option<&str>,
 ) -> Result<TuneResult> {
+    // chaos site: a shard body that errors, panics, hangs (delay) or
+    // kills its process before any verification work happens
+    crate::util::failpoint::hit("shard.exec")?;
     // t_ini comes from the plan, never from random simulation: a sharded
     // model can dead-end a simulation walk in a pruned branch (see
     // ShardPlan::t_ini), and the plan's bound is sound anyway.
@@ -293,6 +297,15 @@ fn run_shard_task_inner(
     Ok(result)
 }
 
+/// What [`finish_batch`] produced: the resolved outcomes plus the
+/// degraded-path bookkeeping the report surfaces.
+pub(crate) struct FinishedBatch {
+    pub(crate) outcomes: Vec<JobOutcome>,
+    /// `ResultCache::save` failed — every result above is still valid
+    /// and reported, only the persistence is lost (warning, not abort)
+    pub(crate) cache_save_error: Option<String>,
+}
+
 /// Phase 3: merge per-shard results per job, write back to the cache,
 /// resolve within-batch duplicates, and persist. A failing shard fails
 /// its *job*, not the batch: every other job's result is still merged,
@@ -301,6 +314,16 @@ fn run_shard_task_inner(
 /// task order (the order [`plan_batch`] emitted them) so merge folds —
 /// shard log tags, first-trail tie-breaks — are identical no matter which
 /// process executed which shard.
+///
+/// With `partial`, degradation replaces refusal: a job missing shard
+/// results (dead-lettered or still outstanding tasks, failed shards)
+/// folds the shards it does have into a **lower-bound** outcome — marked
+/// in the [`JobOutcome`], never written to the cache, since a partial
+/// sub-lattice scan may have missed the true optimum — and shard
+/// failures do not propagate as errors. Jobs with no completed shard at
+/// all (and duplicates of incomplete jobs) are dropped from the outcome
+/// list rather than invented.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn finish_batch(
     jobs: &[TuningJob],
     descs: &[String],
@@ -309,7 +332,8 @@ pub(crate) fn finish_batch(
     duplicates: &[usize],
     shard_results: Vec<(usize, ShardPlan, Duration, Result<TuneResult>)>,
     cache: &mut ResultCache,
-) -> Result<Vec<JobOutcome>> {
+    partial: bool,
+) -> Result<FinishedBatch> {
     let mut per_job: Vec<Vec<TuneResult>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_plans: Vec<Vec<(ShardPlan, u64)>> = jobs.iter().map(|_| Vec::new()).collect();
     let mut per_job_wall = vec![Duration::ZERO; jobs.len()];
@@ -326,12 +350,23 @@ pub(crate) fn finish_batch(
     }
     let mut completed = 0usize;
     for (ji, parts) in per_job.into_iter().enumerate() {
-        if parts.is_empty() || failures.iter().any(|&(fj, _)| fj == ji) {
-            continue; // cached, duplicate, or failed
+        if parts.is_empty() {
+            continue; // cached, duplicate, or nothing completed
         }
+        if !partial && failures.iter().any(|&(fj, _)| fj == ji) {
+            continue; // failed job: skipped here, error propagates below
+        }
+        // complete = every planned shard delivered a result and none
+        // failed; only complete jobs may enter the cache (a partial
+        // sub-lattice scan can miss the true optimum, and a poisoned
+        // cache would silently corrupt every later run)
+        let complete = parts.len() as u32 == shard_counts[ji]
+            && !failures.iter().any(|&(fj, _)| fj == ji);
         let merged = merge_results(parts)?;
-        cache.store(&descs[ji], &merged);
-        completed += 1;
+        if complete {
+            cache.store(&descs[ji], &merged);
+            completed += 1;
+        }
         // queue completion order is nondeterministic; report plans (and
         // their actual per-shard state counts) in lattice order
         let mut tagged = std::mem::take(&mut per_job_plans[ji]);
@@ -346,10 +381,12 @@ pub(crate) fn finish_batch(
             wall: per_job_wall[ji],
             plan,
             shard_states,
+            lower_bound: !complete,
         });
     }
     // overlapping duplicates resolve against the freshly stored results
-    // (a duplicate of a failed job stays unresolved and fails with it)
+    // (a duplicate of a failed/incomplete job stays unresolved: it fails
+    // with it, or in partial mode is dropped with it)
     for &ji in duplicates {
         let desc = &descs[ji];
         if let Some(hit) = cache.lookup(desc) {
@@ -361,20 +398,34 @@ pub(crate) fn finish_batch(
                 wall: Duration::ZERO,
                 plan: Vec::new(),
                 shard_states: Vec::new(),
+                lower_bound: false,
             });
         }
     }
-    cache.save()?;
-    if let Some((ji, e)) = failures.into_iter().next() {
-        return Err(e.context(format!(
-            "job `{}`: a parameter-space shard failed ({} completed job(s) were still cached)",
-            jobs[ji].name, completed
-        )));
+    // a save failure degrades to a report warning: all results above are
+    // already merged and valid, and aborting here used to throw away an
+    // entire drained batch over one unwritable cache file
+    let cache_save_error = cache.save().err().map(|e| format!("{:#}", e));
+    if let Some(e) = &cache_save_error {
+        task::fault_event("cache_save", "batch", e, 0, false);
     }
-    Ok(outcomes
-        .into_iter()
-        .map(|o| o.expect("every job resolves to an outcome"))
-        .collect())
+    if !partial {
+        if let Some((ji, e)) = failures.into_iter().next() {
+            return Err(e.context(format!(
+                "job `{}`: a parameter-space shard failed ({} completed job(s) were still cached)",
+                jobs[ji].name, completed
+            )));
+        }
+    }
+    let outcomes = if partial {
+        outcomes.into_iter().flatten().collect()
+    } else {
+        outcomes
+            .into_iter()
+            .map(|o| o.expect("every job resolves to an outcome"))
+            .collect()
+    };
+    Ok(FinishedBatch { outcomes, cache_save_error })
 }
 
 /// Run a batch of tuning jobs: serve cache hits (and within-batch
@@ -415,7 +466,7 @@ pub fn run_batch(
         (ji, shard_plan, t0.elapsed(), result)
     });
 
-    let outcomes = finish_batch(
+    let fin = finish_batch(
         jobs,
         &plan.descs,
         plan.outcomes,
@@ -423,14 +474,19 @@ pub fn run_batch(
         &plan.duplicates,
         shard_results,
         cache,
+        false,
     )?;
 
     Ok(BatchReport {
-        outcomes,
+        outcomes: fin.outcomes,
         cache_hits: cache.hits - hits_before,
         cache_misses: cache.misses - misses_before,
         stolen_tasks: qstats.stolen,
         total_elapsed: start.elapsed(),
+        partial: false,
+        pending_tasks: 0,
+        dead_tasks: Vec::new(),
+        cache_save_error: fin.cache_save_error,
     })
 }
 

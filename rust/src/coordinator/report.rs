@@ -28,12 +28,34 @@ pub struct JobOutcome {
     /// states each shard actually explored, parallel to [`plan`](Self::plan)
     /// — the telemetry that grades the planner's weight estimates
     pub shard_states: Vec<u64>,
+    /// true when not every planned shard contributed (partial merge):
+    /// the optimum is a *lower bound* on tuning quality — a missing
+    /// sub-lattice may hold a better tuning — and the result was not
+    /// written to the cache
+    pub lower_bound: bool,
+}
+
+/// One dead-lettered task as reported by a partial merge: a task that
+/// exhausted its attempt budget and was moved to `dead/<id>.json` so
+/// the rest of the batch could finish without it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeadTaskInfo {
+    /// task id (`j###-s###`)
+    pub id: String,
+    /// name of the job the task belonged to
+    pub job: String,
+    pub job_index: usize,
+    /// failed attempts charged when it was dead-lettered
+    pub attempts: u32,
+    /// the captured failure from the final attempt
+    pub error: String,
 }
 
 /// Aggregate of one [`super::run_batch`] call.
 #[derive(Debug)]
 pub struct BatchReport {
-    /// one outcome per submitted job, in submission order
+    /// one outcome per submitted job, in submission order (a partial
+    /// merge drops jobs with no completed shard at all)
     pub outcomes: Vec<JobOutcome>,
     /// cache hits among this batch's lookups
     pub cache_hits: u64,
@@ -43,6 +65,17 @@ pub struct BatchReport {
     pub stolen_tasks: u64,
     /// whole-batch wall clock
     pub total_elapsed: Duration,
+    /// true when produced by `merge --partial`: outcomes may be missing
+    /// or lower bounds, and `dead_tasks`/`pending_tasks` say why
+    pub partial: bool,
+    /// tasks with neither a result nor a dead-letter record (still
+    /// running, or waiting for a worker)
+    pub pending_tasks: usize,
+    /// tasks dead-lettered after exhausting their attempt budget
+    pub dead_tasks: Vec<DeadTaskInfo>,
+    /// the result cache could not be persisted (results above are still
+    /// valid; the warning is surfaced instead of aborting the batch)
+    pub cache_save_error: Option<String>,
 }
 
 /// Integer percentage of `part` in `total` (0 when `total` is 0).
@@ -80,7 +113,13 @@ impl BatchReport {
                 o.shards.to_string(),
                 o.result.optimal.wg.to_string(),
                 o.result.optimal.ts.to_string(),
-                o.result.t_min.to_string(),
+                if o.lower_bound {
+                    // not every shard contributed: the optimum is only a
+                    // bound, flagged in the table and footnoted below
+                    format!("{}*", o.result.t_min)
+                } else {
+                    o.result.t_min.to_string()
+                },
                 thousands(o.result.states_explored),
                 if o.cached { "hit".to_string() } else { "miss".to_string() },
                 human_duration(o.wall),
@@ -125,13 +164,40 @@ impl BatchReport {
                 out.push('\n');
             }
         }
+        if self.outcomes.iter().any(|o| o.lower_bound) {
+            out.push_str(
+                "* model time is a lower bound: not every parameter-space shard \
+                 completed, and the result was not cached\n",
+            );
+        }
+        if !self.dead_tasks.is_empty() {
+            out.push_str("dead-lettered task(s):\n");
+            for d in &self.dead_tasks {
+                out.push_str(&format!(
+                    "  {} (job `{}`): gave up after {} attempt(s) — {}\n",
+                    d.id, d.job, d.attempts, d.error
+                ));
+            }
+        }
+        if let Some(e) = &self.cache_save_error {
+            out.push_str(&format!("warning: result cache not saved: {}\n", e));
+        }
         out.push_str(&format!(
-            "cache: {} hit(s), {} miss(es) | {} states explored | {} task(s) stolen | wall {}\n",
+            "cache: {} hit(s), {} miss(es) | {} states explored | {} task(s) stolen | wall {}{}\n",
             self.cache_hits,
             self.cache_misses,
             thousands(self.total_states()),
             self.stolen_tasks,
             human_duration(self.total_elapsed),
+            if self.partial {
+                format!(
+                    " | PARTIAL ({} dead, {} pending)",
+                    self.dead_tasks.len(),
+                    self.pending_tasks
+                )
+            } else {
+                String::new()
+            },
         ));
         out
     }
@@ -157,16 +223,65 @@ mod tests {
                 wall: Duration::ZERO,
                 plan: Vec::new(),
                 shard_states: Vec::new(),
+                lower_bound: false,
             }],
             cache_hits: 1,
             cache_misses: 0,
             stolen_tasks: 0,
             total_elapsed: Duration::from_millis(5),
+            partial: false,
+            pending_tasks: 0,
+            dead_tasks: Vec::new(),
+            cache_save_error: None,
         };
         let text = rep.render();
         assert!(text.contains("minimum-64"));
         assert!(text.contains("hit"));
         assert!(text.contains("1 hit(s), 0 miss(es)"));
+        assert!(!text.contains("PARTIAL"));
+        assert!(!text.contains("dead-lettered"));
         assert_eq!(rep.total_states(), 0);
+    }
+
+    #[test]
+    fn render_flags_partial_dead_and_cache_warning() {
+        let job = TuningJob::new(ModelKind::Minimum, 64);
+        let result =
+            cached_result(Method::Exhaustive, CachedTune { wg: 4, ts: 2, t_min: 44, steps: 7 }, "d");
+        let rep = BatchReport {
+            outcomes: vec![JobOutcome {
+                job,
+                result,
+                cached: false,
+                shards: 3,
+                wall: Duration::from_millis(2),
+                plan: Vec::new(),
+                shard_states: Vec::new(),
+                lower_bound: true,
+            }],
+            cache_hits: 0,
+            cache_misses: 1,
+            stolen_tasks: 0,
+            total_elapsed: Duration::from_millis(5),
+            partial: true,
+            pending_tasks: 1,
+            dead_tasks: vec![DeadTaskInfo {
+                id: "j001-s002".into(),
+                job: "minimum-128".into(),
+                job_index: 1,
+                attempts: 3,
+                error: "task panicked: boom".into(),
+            }],
+            cache_save_error: Some("disk full".into()),
+        };
+        let text = rep.render();
+        assert!(text.contains("44*"), "lower-bound optimum is starred: {}", text);
+        assert!(text.contains("lower bound"));
+        assert!(text.contains("dead-lettered task(s):"));
+        assert!(text.contains("j001-s002"));
+        assert!(text.contains("gave up after 3 attempt(s)"));
+        assert!(text.contains("task panicked: boom"));
+        assert!(text.contains("warning: result cache not saved: disk full"));
+        assert!(text.contains("PARTIAL (1 dead, 1 pending)"));
     }
 }

@@ -48,14 +48,14 @@
 //! to the single-process engine.
 
 use super::{
-    finish_batch, plan_batch, run_shard_task_traced, BatchOptions, BatchReport, JobEngine,
-    JobOutcome, JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
+    finish_batch, plan_batch, run_shard_task_traced, BatchOptions, BatchReport, DeadTaskInfo,
+    JobEngine, JobOutcome, JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
 };
 use crate::checker::{CheckOptions, Frontier, Order, StoreKind};
 use crate::platform::{Granularity, PlatformConfig};
 use crate::swarm::SwarmConfig;
 use crate::tuner::{Method, TuneResult, TuningWitness};
-use crate::util::error::{anyhow, bail, ensure, Context, Result};
+use crate::util::error::{anyhow, bail, ensure, Context, Error, Result};
 use crate::util::manifest::Json;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
@@ -66,7 +66,24 @@ const HEADER: &str = "batch.json";
 const TASK_SUFFIX: &str = ".task.json";
 const LEASE_SUFFIX: &str = ".lease.json";
 const RESULT_SUFFIX: &str = ".result.json";
+/// Subdirectory holding dead-lettered task manifests (`dead/<id>.json`).
+const DEAD_DIR: &str = "dead";
 const DEFAULT_TTL: Duration = Duration::from_secs(30);
+/// Attempts a task gets before it is dead-lettered as poisoned.
+const DEFAULT_MAX_ATTEMPTS: u32 = 3;
+
+/// Exponential re-lease backoff after a failed attempt. The first retry
+/// is immediate (one crash or one transient I/O error should not stall
+/// recovery), later ones back off exponentially so a task that keeps
+/// failing cannot monopolize the fleet while it burns through its
+/// attempt budget: 0, 250ms, 500ms, 1s, ... capped at 10s.
+fn backoff_ms(attempts: u32) -> u64 {
+    if attempts <= 1 {
+        0
+    } else {
+        (250u64 << (attempts - 2).min(16)).min(10_000)
+    }
+}
 
 // ------------------------------------------------------- serialization --
 
@@ -436,6 +453,17 @@ pub struct TaskSpec {
     /// the job's canonical cache description (swarm-config-aware),
     /// computed once at plan time
     pub desc: String,
+    /// failed execution attempts charged so far (0 on a fresh plan).
+    /// Carried in the manifest — and therefore in leases, which are the
+    /// manifest plus owner fields — so the count survives any worker;
+    /// older parsers ignore it (the `owner` precedent).
+    pub attempts: u32,
+    /// unix-ms timestamp before which the task must not be re-leased
+    /// (exponential backoff after a failed attempt); 0 = leasable now
+    pub not_before_unix_ms: u64,
+    /// the most recent attempt's failure, for `worker --status` and the
+    /// dead-letter record
+    pub last_error: Option<String>,
     pub job: TuningJob,
     pub plan: ShardPlan,
     pub swarm: SwarmConfig,
@@ -443,27 +471,49 @@ pub struct TaskSpec {
 
 impl TaskSpec {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("version", Json::Int(1)),
             ("id", Json::Str(self.id.clone())),
             ("job_index", ju64(self.job_index as u64)),
             ("shard_index", ju64(self.shard_index as u64)),
             ("desc", Json::Str(self.desc.clone())),
-            ("job", job_to_json(&self.job)),
-            ("plan", plan_to_json(&self.plan)),
-            ("swarm", swarm_to_json(&self.swarm)),
-        ])
+            ("attempts", ju64(self.attempts as u64)),
+        ];
+        if self.not_before_unix_ms > 0 {
+            fields.push(("not_before_unix_ms", ju64(self.not_before_unix_ms)));
+        }
+        if let Some(e) = &self.last_error {
+            fields.push(("last_error", Json::Str(e.clone())));
+        }
+        fields.push(("job", job_to_json(&self.job)));
+        fields.push(("plan", plan_to_json(&self.plan)));
+        fields.push(("swarm", swarm_to_json(&self.swarm)));
+        obj(fields)
     }
 
     pub fn parse(text: &str) -> Result<TaskSpec> {
         let v = Json::parse(text)?;
         let version = gi64(&v, "version")?;
         ensure!(version == 1, "unsupported task-manifest version {}", version);
+        // retry bookkeeping is optional: manifests written by older
+        // planners simply have no failed attempts yet
+        let attempts = match v.get("attempts") {
+            Some(f) => u32::try_from(u64_of(f, "attempts")?).unwrap_or(u32::MAX),
+            None => 0,
+        };
+        let not_before_unix_ms = match v.get("not_before_unix_ms") {
+            Some(f) => u64_of(f, "not_before_unix_ms")?,
+            None => 0,
+        };
+        let last_error = v.get("last_error").and_then(Json::as_str).map(str::to_string);
         Ok(TaskSpec {
             id: gstr(&v, "id")?,
             job_index: gusize(&v, "job_index")?,
             shard_index: gusize(&v, "shard_index")?,
             desc: gstr(&v, "desc")?,
+            attempts,
+            not_before_unix_ms,
+            last_error,
             job: job_from_json(field(&v, "job")?)?,
             plan: plan_from_json(field(&v, "plan")?)?,
             swarm: swarm_from_json(field(&v, "swarm")?)?,
@@ -492,6 +542,9 @@ struct Header {
     /// the planner's lease TTL in ms — workers that do not override the
     /// TTL adopt it, so the whole fleet shares one staleness clock
     ttl_ms: u64,
+    /// the planner's dead-letter threshold — adopted by workers that do
+    /// not override it, for the same one-fleet-one-policy reason
+    max_attempts: u32,
 }
 
 impl Header {
@@ -536,6 +589,7 @@ impl Header {
                 self.cache_path.as_ref().map_or(Json::Null, |p| Json::Str(p.clone())),
             ),
             ("ttl_ms", ju64(self.ttl_ms)),
+            ("max_attempts", ju64(self.max_attempts as u64)),
         ])
     }
 
@@ -587,6 +641,12 @@ impl Header {
             task_ids,
             cache_path,
             ttl_ms: gu64(&v, "ttl_ms")?,
+            // absent in headers planned by older binaries: the default
+            max_attempts: match v.get("max_attempts") {
+                Some(f) => u32::try_from(u64_of(f, "max_attempts")?)
+                    .unwrap_or(DEFAULT_MAX_ATTEMPTS),
+                None => DEFAULT_MAX_ATTEMPTS,
+            },
         })
     }
 }
@@ -637,11 +697,14 @@ pub struct TaskDir {
     /// draining (falling back to [`DEFAULT_TTL`] elsewhere)
     ttl: Option<Duration>,
     poll: Duration,
+    /// explicit dead-letter threshold override; `None` = the plan's
+    /// recorded value when draining ([`DEFAULT_MAX_ATTEMPTS`] elsewhere)
+    max_attempts: Option<u32>,
 }
 
 impl TaskDir {
     pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into(), ttl: None, poll: Duration::from_millis(100) }
+        Self { dir: dir.into(), ttl: None, poll: Duration::from_millis(100), max_attempts: None }
     }
 
     /// Lease time-to-live: a lease whose mtime is older than this is
@@ -667,6 +730,19 @@ impl TaskDir {
         self
     }
 
+    /// How many failed attempts a task gets before it is dead-lettered
+    /// to `dead/<id>.json` instead of retried (poison-task containment).
+    /// When not set, [`drain`](Self::drain) adopts the value the planner
+    /// recorded in `batch.json`.
+    pub fn with_max_attempts(mut self, max_attempts: u32) -> Self {
+        self.max_attempts = Some(max_attempts.max(1));
+        self
+    }
+
+    fn effective_max_attempts(&self) -> u32 {
+        self.max_attempts.unwrap_or(DEFAULT_MAX_ATTEMPTS)
+    }
+
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -685,6 +761,10 @@ impl TaskDir {
 
     fn header_path(&self) -> PathBuf {
         self.dir.join(HEADER)
+    }
+
+    fn dead_path(&self, id: &str) -> PathBuf {
+        self.dir.join(DEAD_DIR).join(format!("{}.json", id))
     }
 
     fn write_atomic(&self, name: &str, text: &str) -> Result<()> {
@@ -747,6 +827,9 @@ impl TaskDir {
                 job_index: *ji,
                 shard_index: si,
                 desc: plan.descs[*ji].clone(),
+                attempts: 0,
+                not_before_unix_ms: 0,
+                last_error: None,
                 job: jobs[*ji].clone(),
                 plan: shard_plan.clone(),
                 swarm: opts.swarm.clone(),
@@ -772,7 +855,9 @@ impl TaskDir {
             task_ids,
             cache_path: cache.path().map(|p| p.display().to_string()),
             ttl_ms: self.effective_ttl().as_millis().min(u64::MAX as u128) as u64,
+            max_attempts: self.effective_max_attempts(),
         };
+        crate::util::failpoint::hit("task.header")?;
         self.write_atomic(HEADER, &header.to_json().render())?;
         Ok(summary)
     }
@@ -822,7 +907,13 @@ impl TaskDir {
     }
 
     fn remaining(&self, ids: &[String]) -> Result<usize> {
-        Ok(ids.iter().filter(|id| !self.result_path(id).exists()).count())
+        // dead-lettered tasks count as done for drain purposes: nobody
+        // will ever produce their result, so waiting on them would hang
+        // every worker forever
+        Ok(ids
+            .iter()
+            .filter(|id| !self.result_path(id).exists() && !self.dead_path(id).exists())
+            .count())
     }
 
     fn scan(&self) -> Result<Scan> {
@@ -887,6 +978,10 @@ impl TaskDir {
                     && std::fs::rename(self.lease_path(id), self.task_path(id)).is_ok()
                 {
                     lease_event("reclaim", id);
+                    // a reclaim is evidence of a crashed/stalled attempt:
+                    // charge it, so a task that crashes its worker every
+                    // time is dead-lettered instead of looping forever
+                    self.note_reclaim(id)?;
                     renamed.insert(id.clone());
                     progressed = true;
                 }
@@ -902,6 +997,9 @@ impl TaskDir {
         if std::fs::rename(self.task_path(id), &lease).is_err() {
             return Ok(None); // another worker won the rename
         }
+        // chaos site: a worker that dies right here leaves a fresh lease
+        // it will never heartbeat — the canonical crashed-holder schedule
+        crate::util::failpoint::hit("task.lease")?;
         // The TTL clock starts at lease time, not plan time (rename keeps
         // the old mtime). A failed touch is tolerated: the lease merely
         // looks older than it is, and duplicate execution is benign.
@@ -923,6 +1021,13 @@ impl TaskDir {
             id,
             spec.id
         );
+        if spec.not_before_unix_ms > unix_ms() {
+            // still in post-failure backoff: hand the manifest back and
+            // report nothing leasable (the drain loop polls; backoff is
+            // capped at 10s so this always unblocks)
+            let _ = std::fs::rename(&lease, self.task_path(id));
+            return Ok(None);
+        }
         // Tag the lease with its owner so `worker --status` can attribute
         // it. Atomic (tmp + rename, like every other publish in this
         // protocol): a crash mid-write must never leave a truncated lease
@@ -943,63 +1048,140 @@ impl TaskDir {
         Ok(Some(LeasedTask { spec, reclaimed: false, lease_path: lease }))
     }
 
-    /// Execute one leased task and publish its result (or its error) as
-    /// `<id>.result.json`, heartbeating the lease while it runs. A task
-    /// whose result already exists (a duplicate execution lost the race)
-    /// is skipped; the return value says whether the task actually ran
-    /// (`false` = skipped), so drain statistics stay honest.
+    /// Execute one leased task under full fault containment and publish
+    /// its result as `<id>.result.json`, heartbeating the lease while it
+    /// runs. The task body executes on a dedicated thread behind
+    /// `catch_unwind` (checker/VM state is per-task, so unwinding is
+    /// local) with a hard deadline derived from its shard budget; a
+    /// panic, error, deadline overrun or publish failure is charged as a
+    /// failed *attempt* — the task is requeued with backoff, or
+    /// dead-lettered once its attempt budget is spent — and the worker
+    /// keeps draining. A task whose result already exists (a duplicate
+    /// execution lost the race) is skipped; the return value says whether
+    /// the task actually ran (`false` = skipped), so drain statistics
+    /// stay honest.
     pub fn run(&self, leased: &LeasedTask) -> Result<bool> {
         if self.result_path(&leased.spec.id).exists() {
             let _ = std::fs::remove_file(&leased.lease_path);
             return Ok(false);
         }
+        crate::obs::metrics().task_attempts.add(1);
         let t0 = Instant::now();
         let stop = AtomicBool::new(false);
         let outcome = std::thread::scope(|scope| {
-            // heartbeat: keep the lease mtime fresh so a long-running task
-            // is not mistaken for a crashed worker and re-leased mid-run
             let hb = scope.spawn(|| {
-                let tick = (self.effective_ttl() / 4).max(Duration::from_millis(10));
-                let step = tick.min(Duration::from_millis(25));
-                let mut since = Duration::ZERO;
-                // first beat at execution start: short tasks still leave
-                // one heartbeat in the trace
-                lease_event("heartbeat", &leased.spec.id);
-                while !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(step);
-                    since += step;
-                    if since >= tick {
-                        let _ = touch(&leased.lease_path);
-                        lease_event("heartbeat", &leased.spec.id);
-                        since = Duration::ZERO;
-                    }
-                }
+                heartbeat_loop(&leased.lease_path, self.effective_ttl(), &stop, &leased.spec.id)
             });
-            let r = run_shard_task_traced(
-                &leased.spec.job,
-                &leased.spec.plan,
-                &leased.spec.swarm,
-                &leased.spec.id,
-            );
+            let r = execute_task(&leased.spec);
             stop.store(true, Ordering::Relaxed);
             let _ = hb.join();
             r
         });
-        self.complete(leased, t0.elapsed(), outcome)?;
+        match outcome {
+            Ok(result) => {
+                if let Err(e) = self.complete(leased, t0.elapsed(), Ok(result)) {
+                    // publishing failed (disk error, injected fault): the
+                    // work is lost but the task is not — charge an attempt
+                    self.fail_attempt(leased, "publish", &e)?;
+                }
+            }
+            Err(f) => self.fail_attempt(leased, f.class, &f.error)?,
+        }
         Ok(true)
     }
 
-    /// Publish a task outcome (success or failure) atomically and release
-    /// the lease. Failures are recorded in the result file — the merge
-    /// step turns them into the same "shard failed" job error a
-    /// single-process run reports — so a worker keeps draining after a
-    /// bad task instead of stalling the batch.
+    /// Charge one failed attempt against a leased task: requeue it with
+    /// exponential backoff, or move it to `dead/<id>.json` once the
+    /// attempt budget ([`TaskDir::with_max_attempts`]) is exhausted.
+    /// Either way the lease is released and the worker moves on — one
+    /// poisoned task must not take the process (or the batch) with it.
+    fn fail_attempt(&self, leased: &LeasedTask, class: &'static str, err: &Error) -> Result<()> {
+        let attempts = leased.spec.attempts.saturating_add(1);
+        let dead = attempts >= self.effective_max_attempts();
+        let detail = format!("{:#}", err);
+        fault_event(class, &leased.spec.id, &detail, attempts, dead);
+        if dead {
+            self.dead_letter(&leased.spec, attempts, class, &detail)?;
+            crate::obs::metrics().task_dead_lettered.add(1);
+        } else {
+            let mut retry = leased.spec.clone();
+            retry.attempts = attempts;
+            retry.not_before_unix_ms = unix_ms().saturating_add(backoff_ms(attempts));
+            retry.last_error = Some(format!("attempt {}: {}: {}", attempts, class, detail));
+            self.write_task(&retry)?;
+        }
+        let _ = std::fs::remove_file(&leased.lease_path);
+        Ok(())
+    }
+
+    /// Charge a reclaim as a failed attempt on the task file the
+    /// reclaiming rename just recreated, so a task that crashes its
+    /// worker on every attempt is dead-lettered instead of cycling
+    /// through the fleet forever. Best-effort under races: if another
+    /// worker leases the file before the rewrite the charge is simply
+    /// lost (benign — the task just gets one extra attempt), and a
+    /// torn/unparseable file is left for `try_lease` to report.
+    fn note_reclaim(&self, id: &str) -> Result<()> {
+        let path = self.task_path(id);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Ok(()); // lost the race to another leaser
+        };
+        let Ok(mut spec) = TaskSpec::parse(&text) else {
+            return Ok(());
+        };
+        let attempts = spec.attempts.saturating_add(1);
+        let dead = attempts >= self.effective_max_attempts();
+        let detail = "lease expired without a result (worker crash or stall)";
+        fault_event("reclaim", id, detail, attempts, dead);
+        if dead {
+            self.dead_letter(&spec, attempts, "reclaim", detail)?;
+            let _ = std::fs::remove_file(&path);
+            crate::obs::metrics().task_dead_lettered.add(1);
+        } else {
+            spec.attempts = attempts;
+            spec.not_before_unix_ms = unix_ms().saturating_add(backoff_ms(attempts));
+            spec.last_error = Some(format!("attempt {}: {}", attempts, detail));
+            self.write_task(&spec)?;
+        }
+        Ok(())
+    }
+
+    /// Move a poisoned task to `dead/<id>.json`: the full manifest (with
+    /// the final attempt count) plus the captured failure class, message,
+    /// timestamp and reporting worker, so the task can be inspected,
+    /// fixed and re-planned by hand while `merge --partial` degrades
+    /// around it.
+    fn dead_letter(&self, spec: &TaskSpec, attempts: u32, class: &str, detail: &str) -> Result<()> {
+        let dead_dir = self.dir.join(DEAD_DIR);
+        std::fs::create_dir_all(&dead_dir)
+            .with_context(|| format!("creating dead-letter dir {}", dead_dir.display()))?;
+        let mut record = spec.clone();
+        record.attempts = attempts;
+        let Json::Obj(mut fields) = record.to_json() else {
+            unreachable!("TaskSpec::to_json always builds an object")
+        };
+        fields.push(("dead_class".to_string(), Json::Str(class.to_string())));
+        fields.push(("dead_error".to_string(), Json::Str(detail.to_string())));
+        fields.push(("dead_unix_ms".to_string(), ju64(unix_ms())));
+        fields.push(("dead_owner".to_string(), Json::Str(owner_tag())));
+        crate::util::manifest::write_atomic(&self.dead_path(&spec.id), &Json::Obj(fields).render())
+    }
+
+    /// Publish a task outcome atomically and release the lease.
+    /// [`TaskDir::run`] only publishes successes (failures are requeued
+    /// or dead-lettered by `fail_attempt` instead); the `Err` arm is
+    /// kept for callers that drive the protocol directly and for result
+    /// files written by older binaries, which the merge step still turns
+    /// into the same "shard failed" job error a single-process run
+    /// reports.
     pub fn complete(
         &self,
         leased: &LeasedTask,
         wall: Duration,
         outcome: Result<TuneResult>,
     ) -> Result<()> {
+        // chaos site: a torn/failed result publish after the shard ran
+        crate::util::failpoint::hit("task.publish")?;
         let spec = &leased.spec;
         let mut fields = vec![
             ("version", Json::Int(1)),
@@ -1033,6 +1215,9 @@ impl TaskDir {
             dir: self.dir.clone(),
             ttl: Some(self.ttl.unwrap_or(Duration::from_millis(header.ttl_ms))),
             poll: self.poll,
+            // same adoption rule as the TTL: one fleet, one dead-letter
+            // policy, unless this worker explicitly overrides it
+            max_attempts: self.max_attempts.or(Some(header.max_attempts)),
         };
         let ids = header.task_ids;
         let reclaimed = AtomicU64::new(0);
@@ -1041,6 +1226,12 @@ impl TaskDir {
         queue.run_source(
             || -> Result<Option<LeasedTask>> {
                 loop {
+                    // graceful SIGTERM: stop sourcing new tasks; leases
+                    // already handed to workers finish and publish
+                    // normally, so nothing is left to reclaim
+                    if crate::util::signal::term_requested() {
+                        return Ok(None);
+                    }
                     // lease first: a successful claim already proves the
                     // batch is incomplete, so the O(tasks) remaining()
                     // stat pass only runs when nothing is leasable
@@ -1077,8 +1268,24 @@ impl TaskDir {
     /// Phase 3 across processes: fold every task result through the same
     /// merge/cache-write path as [`super::run_batch`], producing an
     /// identical [`BatchReport`] and identical cache entries. Errors if
-    /// any task still has no result.
+    /// any task still has no result or was dead-lettered — see
+    /// [`TaskDir::merge_partial`] for the degraded variant.
     pub fn merge(&self, cache: &mut ResultCache) -> Result<BatchReport> {
+        self.merge_inner(cache, false)
+    }
+
+    /// Like [`TaskDir::merge`], but degrade gracefully instead of
+    /// refusing: jobs whose every shard completed merge (and cache)
+    /// exactly as a full merge would, jobs with dead-lettered or still
+    /// outstanding shards fold the shards they do have into a
+    /// *lower-bound* outcome (marked in the report, never written to the
+    /// cache — a later full re-run must not be poisoned by a partial
+    /// optimum), and the report lists every dead-lettered task.
+    pub fn merge_partial(&self, cache: &mut ResultCache) -> Result<BatchReport> {
+        self.merge_inner(cache, true)
+    }
+
+    fn merge_inner(&self, cache: &mut ResultCache, partial: bool) -> Result<BatchReport> {
         let start = Instant::now();
         let h = self.header()?;
         let hits_before = cache.hits;
@@ -1086,6 +1293,7 @@ impl TaskDir {
         let mut shard_results: Vec<(usize, ShardPlan, Duration, Result<TuneResult>)> =
             Vec::with_capacity(h.task_ids.len());
         let mut outstanding = 0usize;
+        let mut dead: Vec<DeadTaskInfo> = Vec::new();
         // iterate in plan order: finish_batch's merge folds (shard log
         // tags, first-trail tie-breaks) must match the in-process runner
         for id in &h.task_ids {
@@ -1093,7 +1301,44 @@ impl TaskDir {
             let text = match std::fs::read_to_string(&path) {
                 Ok(t) => t,
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                    outstanding += 1;
+                    let dead_path = self.dead_path(id);
+                    match std::fs::read_to_string(&dead_path) {
+                        Ok(d) => {
+                            let dv = Json::parse(&d).with_context(|| {
+                                format!("parsing {}", dead_path.display())
+                            })?;
+                            let ji = gusize(&dv, "job_index")?;
+                            ensure!(
+                                ji < h.jobs.len(),
+                                "{}: job index {} out of range",
+                                dead_path.display(),
+                                ji
+                            );
+                            dead.push(DeadTaskInfo {
+                                id: id.clone(),
+                                job: h.jobs[ji].name.clone(),
+                                job_index: ji,
+                                attempts: match dv.get("attempts") {
+                                    Some(f) => u32::try_from(u64_of(f, "attempts")?)
+                                        .unwrap_or(u32::MAX),
+                                    None => 0,
+                                },
+                                error: dv
+                                    .get("dead_error")
+                                    .and_then(Json::as_str)
+                                    .unwrap_or("unrecorded failure")
+                                    .to_string(),
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                            outstanding += 1;
+                        }
+                        Err(e) => {
+                            return Err(e).with_context(|| {
+                                format!("reading {}", dead_path.display())
+                            })
+                        }
+                    }
                     continue;
                 }
                 Err(e) => {
@@ -1116,14 +1361,24 @@ impl TaskDir {
             };
             shard_results.push((ji, plan, wall, outcome));
         }
-        ensure!(
-            outstanding == 0,
-            "{} of {} task(s) in {} still have no result — keep `mcautotune worker {}` running, then merge again",
-            outstanding,
-            h.task_ids.len(),
-            self.dir.display(),
-            self.dir.display()
-        );
+        if !partial {
+            ensure!(
+                dead.is_empty(),
+                "{} task(s) in {} were dead-lettered after repeated failures (see {}/dead/) — fix and re-plan them, or fold the completed work with `mcautotune merge {} --partial`",
+                dead.len(),
+                self.dir.display(),
+                self.dir.display(),
+                self.dir.display()
+            );
+            ensure!(
+                outstanding == 0,
+                "{} of {} task(s) in {} still have no result — keep `mcautotune worker {}` running, then merge again",
+                outstanding,
+                h.task_ids.len(),
+                self.dir.display(),
+                self.dir.display()
+            );
+        }
         let mut outcomes: Vec<Option<JobOutcome>> = h.jobs.iter().map(|_| None).collect();
         for (ji, result) in h.cached {
             outcomes[ji] = Some(JobOutcome {
@@ -1134,9 +1389,10 @@ impl TaskDir {
                 wall: Duration::ZERO,
                 plan: Vec::new(),
                 shard_states: Vec::new(),
+                lower_bound: false,
             });
         }
-        let outcomes = finish_batch(
+        let fin = finish_batch(
             &h.jobs,
             &h.descs,
             outcomes,
@@ -1144,13 +1400,18 @@ impl TaskDir {
             &h.duplicates,
             shard_results,
             cache,
+            partial,
         )?;
         Ok(BatchReport {
-            outcomes,
+            outcomes: fin.outcomes,
             cache_hits: h.plan_hits + (cache.hits - hits_before),
             cache_misses: h.plan_misses + (cache.misses - misses_before),
             stolen_tasks: 0,
             total_elapsed: start.elapsed(),
+            partial,
+            pending_tasks: outstanding,
+            dead_tasks: dead,
+            cache_save_error: fin.cache_save_error,
         })
     }
 }
@@ -1182,6 +1443,8 @@ pub struct TaskStatus {
     pub done: usize,
     /// live leases, sorted by task id
     pub leases: Vec<LeaseInfo>,
+    /// dead-lettered tasks as `(id, captured error)`, sorted by id
+    pub dead: Vec<(String, String)>,
 }
 
 impl TaskStatus {
@@ -1235,11 +1498,30 @@ impl TaskDir {
             })
             .collect();
         leases.sort_by(|a, b| a.id.cmp(&b.id));
+        let mut dead: Vec<(String, String)> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(self.dir.join(DEAD_DIR)) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(id) = name.to_str().and_then(|n| n.strip_suffix(".json")) else {
+                    continue;
+                };
+                let error = std::fs::read_to_string(entry.path())
+                    .ok()
+                    .and_then(|t| Json::parse(&t).ok())
+                    .and_then(|v| {
+                        v.get("dead_error").and_then(Json::as_str).map(str::to_string)
+                    })
+                    .unwrap_or_else(|| "unrecorded failure".into());
+                dead.push((id.to_string(), error));
+            }
+        }
+        dead.sort();
         Ok(TaskStatus {
             total,
             available: scan.available.len(),
             done: scan.results.len(),
             leases,
+            dead,
         })
     }
 }
@@ -1290,6 +1572,148 @@ fn lease_event(action: &str, id: &str) {
             vec![
                 ("action", Json::Str(action.to_string())),
                 ("id", Json::Str(id.to_string())),
+                ("owner", Json::Str(owner_tag())),
+            ],
+        );
+    }
+}
+
+/// One contained task failure: the class that goes into the `fault`
+/// trace event and the dead-letter record, plus the captured error.
+struct TaskFailure {
+    /// `panic` | `deadline` | `error` (plus `publish` / `reclaim` /
+    /// `cache_save` charged elsewhere)
+    class: &'static str,
+    error: Error,
+}
+
+/// Execute one task body on a dedicated thread with panic containment
+/// and a hard deadline. The checker already honors the shard's
+/// *cooperative* time budget (`Abort::TimeLimit`); the deadline here is
+/// the backstop for a task that wedges outright — an infinite loop in a
+/// VM step, a pathological allocation — and would otherwise hold its
+/// lease hostage until the TTL reclaim, crediting the crash to the
+/// wrong worker. A timed-out thread is abandoned: its eventual send
+/// lands in a dropped receiver, and it never publishes (publication
+/// happens in [`TaskDir::run`], not on the task thread).
+fn execute_task(spec: &TaskSpec) -> std::result::Result<TuneResult, TaskFailure> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::mpsc::RecvTimeoutError;
+    let job = spec.job.clone();
+    let plan = spec.plan.clone();
+    let swarm = spec.swarm.clone();
+    let id = spec.id.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(format!("mcat-task-{}", spec.id))
+        .spawn(move || {
+            // checker/VM state is constructed per task inside the call,
+            // so unwinding cannot leave shared state half-mutated
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                run_shard_task_traced(&job, &plan, &swarm, &id)
+            }));
+            let _ = tx.send(r); // receiver gone = deadline already fired
+        })
+        .map_err(|e| TaskFailure {
+            class: "error",
+            error: anyhow!("spawning task thread: {}", e),
+        })?;
+    let received = match spec.plan.check.time_budget.map(hard_deadline) {
+        Some(d) => match rx.recv_timeout(d) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => {
+                return Err(TaskFailure {
+                    class: "deadline",
+                    error: anyhow!(
+                        "task exceeded its hard deadline of {:?} (shard budget + 50% grace)",
+                        d
+                    ),
+                });
+            }
+            Err(RecvTimeoutError::Disconnected) => None,
+        },
+        None => rx.recv().ok(),
+    };
+    let _ = handle.join();
+    match received {
+        Some(Ok(Ok(result))) => Ok(result),
+        Some(Ok(Err(e))) => Err(TaskFailure { class: "error", error: e }),
+        Some(Err(payload)) => Err(TaskFailure {
+            class: "panic",
+            error: anyhow!("task panicked: {}", panic_message(payload.as_ref())),
+        }),
+        // unreachable in practice (catch_unwind catches every unwind),
+        // but a dead channel must not wedge the worker
+        None => Err(TaskFailure {
+            class: "error",
+            error: anyhow!("task thread exited without reporting a result"),
+        }),
+    }
+}
+
+/// The hard per-attempt deadline for a shard with cooperative budget
+/// `b`: `b + b/2 + 1s`. Generous enough that the in-checker budget
+/// always fires first on a healthy task (so fault-free runs never see
+/// this path), tight enough that a wedged task frees its worker long
+/// before operators notice.
+fn hard_deadline(budget: Duration) -> Duration {
+    budget
+        .checked_add(budget / 2)
+        .and_then(|d| d.checked_add(Duration::from_secs(1)))
+        .unwrap_or(Duration::from_secs(31_536_000))
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` cover
+/// `panic!` with and without formatting; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Keep a lease's mtime fresh so a long-running task is not mistaken
+/// for a crashed worker and re-leased mid-run. Sleeps in short steps so
+/// the stop flag is honored promptly even under tiny test TTLs; the
+/// first beat fires at execution start so short tasks still leave one
+/// heartbeat in the trace.
+fn heartbeat_loop(lease: &Path, ttl: Duration, stop: &AtomicBool, id: &str) {
+    let tick = (ttl / 4).max(Duration::from_millis(10));
+    let step = tick.min(Duration::from_millis(25));
+    let mut since = Duration::ZERO;
+    lease_event("heartbeat", id);
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(step);
+        since += step;
+        if since >= tick {
+            let _ = touch(lease);
+            lease_event("heartbeat", id);
+            since = Duration::ZERO;
+        }
+    }
+}
+
+/// Telemetry for one contained failure: a timed `fault` event carrying
+/// the failure class, the task it hit, the human-readable detail and
+/// the attempt bookkeeping. Fault traffic is schedule-dependent by
+/// nature, so like `lease` events it never appears in the deterministic
+/// subset ([`crate::obs::deterministic_lines`]).
+pub(crate) fn fault_event(class: &str, id: &str, detail: &str, attempts: u32, dead: bool) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Some(rec) = crate::obs::active() {
+        rec.event(
+            "fault",
+            vec![
+                ("class", Json::Str(class.to_string())),
+                ("id", Json::Str(id.to_string())),
+                ("detail", Json::Str(detail.to_string())),
+                ("attempts", ju64(attempts as u64)),
+                ("dead", Json::Bool(dead)),
                 ("owner", Json::Str(owner_tag())),
             ],
         );
@@ -1347,6 +1771,9 @@ mod tests {
             job_index,
             shard_index: 1,
             desc: "engine=promela pml=0123456789abcdef method=exhaustive".into(),
+            attempts: 0,
+            not_before_unix_ms: 0,
+            last_error: None,
             job,
             plan: ShardPlan {
                 shard: TuningShard { wg_min: 2, wg_max: u32::MAX, ts_min: 0, ts_max: 8 },
@@ -1476,6 +1903,144 @@ mod tests {
         )))
         .unwrap();
         assert_eq!(TaskSpec::parse(&text).unwrap(), held.spec);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn heartbeats_outpace_tiny_ttl_reclaim() {
+        // Clock-skew/staleness stress: with a TTL far below a second, the
+        // ttl/4 heartbeat margin must still keep a live lease from being
+        // reclaimed by a worker applying the *same* tiny TTL.
+        let dir = temp_dir("tinyttl");
+        let ttl = Duration::from_millis(80);
+        let td = TaskDir::new(&dir).with_ttl(ttl);
+        td.write_task(&sample_spec("a", 0)).unwrap();
+        let held = td.lease().unwrap().expect("leasable");
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let hb = scope.spawn(|| heartbeat_loop(&held.lease_path, ttl, &stop, "a"));
+            let rival = TaskDir::new(&dir).with_ttl(ttl);
+            let until = Instant::now() + Duration::from_millis(400);
+            while Instant::now() < until {
+                assert!(
+                    rival.lease().unwrap().is_none(),
+                    "a heartbeating lease must never look stale"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            stop.store(true, Ordering::Relaxed);
+            let _ = hb.join();
+        });
+        // once the heartbeat stops, the rival reclaims — and the reclaim
+        // charges the crashed attempt into the recreated task file
+        let rival = TaskDir::new(&dir).with_ttl(ttl);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let stolen = loop {
+            if let Some(l) = rival.lease().unwrap() {
+                break l;
+            }
+            assert!(Instant::now() < deadline, "stale lease never became reclaimable");
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert_eq!(stolen.spec.id, "a");
+        assert_eq!(stolen.spec.attempts, 1, "the reclaim charges one attempt");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_attempts_requeue_then_dead_letter() {
+        let dir = temp_dir("deadletter");
+        let td = TaskDir::new(&dir).with_max_attempts(2);
+        // an invalid job (native engine, non-pow2 size): every execution
+        // fails deterministically with a real error, no failpoint needed
+        let mut spec = sample_spec("a", 0);
+        spec.job.engine = JobEngine::Native;
+        spec.job.source = None;
+        spec.job.size = 12;
+        td.write_task(&spec).unwrap();
+
+        // attempt 1: fails, requeues with the attempt recorded
+        let l1 = td.lease().unwrap().expect("leasable");
+        assert!(td.run(&l1).unwrap(), "a failing task still counts as executed");
+        assert!(!td.result_path("a").exists(), "failures publish no result");
+        assert!(!td.dead_path("a").exists());
+        assert!(td.task_path("a").exists(), "first failure requeues the task");
+        let requeued =
+            TaskSpec::parse(&std::fs::read_to_string(td.task_path("a")).unwrap()).unwrap();
+        assert_eq!(requeued.attempts, 1);
+        assert!(requeued.last_error.is_some());
+
+        // attempt 2 (= max_attempts): dead-letters instead of requeueing.
+        // backoff_ms(1) == 0, so the retry is immediately leasable.
+        let l2 = td.lease().unwrap().expect("requeued task is leasable");
+        assert_eq!(l2.spec.attempts, 1);
+        assert!(td.run(&l2).unwrap());
+        assert!(td.dead_path("a").exists(), "max attempts reached: dead-lettered");
+        assert!(!td.task_path("a").exists());
+        assert!(!td.lease_path("a").exists());
+        let dead_text = std::fs::read_to_string(td.dead_path("a")).unwrap();
+        let dv = Json::parse(&dead_text).unwrap();
+        assert_eq!(gusize(&dv, "attempts").unwrap(), 2);
+        assert!(dv.get("dead_error").is_some());
+        // nothing leasable, and the task no longer counts as remaining
+        assert!(td.lease().unwrap().is_none());
+        assert_eq!(td.remaining(&["a".to_string()]).unwrap(), 0);
+        // status surfaces it
+        let st = td.status().unwrap();
+        assert_eq!(st.dead.len(), 1);
+        assert_eq!(st.dead[0].0, "a");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reclaim_dead_letters_and_partial_merge_reports() {
+        let dir = temp_dir("partial");
+        let td = TaskDir::new(&dir);
+        let jobs = vec![
+            TuningJob::new(ModelKind::Minimum, 16),
+            TuningJob::new(ModelKind::Minimum, 32),
+        ];
+        let mut cache = ResultCache::in_memory();
+        let summary = td.plan(&jobs, &BatchOptions::default(), &mut cache).unwrap();
+        assert!(summary.tasks >= 2);
+        // run job 0's tasks to completion; abandon job 1's leases
+        let mut abandoned = Vec::new();
+        while let Some(l) = td.lease().unwrap() {
+            if l.spec.job_index == 0 {
+                assert!(td.run(&l).unwrap());
+            } else {
+                abandoned.push(l); // held, never heartbeated, never run
+            }
+        }
+        assert!(!abandoned.is_empty(), "job 1 must have abandoned leases");
+        // a zero-TTL single-attempt worker reclaims them straight to the
+        // dead-letter directory
+        let killer = TaskDir::new(&dir).with_ttl(Duration::ZERO).with_max_attempts(1);
+        // one lease() call reclaims every stale lease; at max_attempts=1
+        // each reclaim dead-letters, so nothing comes back claimable
+        if let Some(l) = killer.lease().unwrap() {
+            panic!("{} should have been dead-lettered, not re-leased", l.spec.id);
+        }
+        for l in &abandoned {
+            assert!(
+                killer.dead_path(&l.spec.id).exists(),
+                "{} should be dead-lettered",
+                l.spec.id
+            );
+        }
+        // a strict merge refuses, naming the dead-letter escape hatch
+        let err = td.merge(&mut cache).unwrap_err();
+        assert!(format!("{:#}", err).contains("dead-lettered"), "{:#}", err);
+        // the partial merge degrades: job 0 merges for real, job 1 is
+        // reported dead, nothing about job 1 lands in the cache
+        let report = td.merge_partial(&mut cache).unwrap();
+        assert!(report.partial);
+        assert_eq!(report.pending_tasks, 0);
+        assert!(!report.dead_tasks.is_empty());
+        assert!(report.dead_tasks.iter().all(|d| d.job_index == 1));
+        assert!(report.outcomes.iter().any(|o| o.job.size == 16 && !o.lower_bound));
+        let rendered = report.render();
+        assert!(rendered.contains("dead-lettered"), "{}", rendered);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -431,6 +431,10 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
             "ttl-ms",
             "with --task-dir: lease TTL before a crashed worker's task is re-leased (default 30000)",
         )
+        .opt(
+            "max-attempts",
+            "with --task-dir: failed attempts before a task is dead-lettered to dead/ (default 3)",
+        )
         .flag("plan-only", "with --task-dir: write the plan and exit without draining or merging")
         .flag("help", "show options");
     let a = spec.parse(argv)?;
@@ -490,7 +494,10 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     if let Some(dir) = a.get("task-dir") {
         let start = std::time::Instant::now();
         let ttl = Duration::from_millis(a.get_parsed_or("ttl-ms", 30_000u64)?);
-        let td = TaskDir::new(dir).with_ttl(ttl);
+        let mut td = TaskDir::new(dir).with_ttl(ttl);
+        if let Some(n) = a.get_parsed::<u32>("max-attempts")? {
+            td = td.with_max_attempts(n);
+        }
         let summary = spanned("batch/plan", || td.plan(&jobs, &opts, &mut cache))?;
         outln!(
             "planned {} task(s) for {} job(s) into {} ({} job(s) served from cache at plan time)",
@@ -547,6 +554,10 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         .opt("ttl-ms", "lease TTL before an expired lease is re-leased (default: the plan's)")
         .opt("poll-ms", "sleep between scans while waiting for leasable work (default 100)")
         .opt("workers", "concurrent tasks in this worker process (default 1)")
+        .opt(
+            "max-attempts",
+            "failed attempts before a task is dead-lettered to dead/ (default: the plan's)",
+        )
         .flag("oneshot", "exit when nothing is leasable instead of waiting for the batch to finish")
         .flag(
             "status",
@@ -562,8 +573,14 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
              any process can merge. Crash-safe: a lease whose mtime exceeds the TTL is\n\
              re-leased by the next worker. By default the worker waits until every task\n\
              in the batch has a result (so crashed peers' work is picked up), then exits.\n\
+             A task that keeps failing (panic, crash, deadline) is retried with backoff\n\
+             up to --max-attempts times, then dead-lettered to <dir>/dead/ so the rest\n\
+             of the batch drains; `mcautotune merge <dir> --partial` folds around it.\n\
+             SIGTERM is graceful: the worker finishes its current task, publishes it,\n\
+             and exits 0 holding no leases.\n\
              `--status` instead prints what the fleet is doing — tasks still available,\n\
-             leases per worker (pid@host, heartbeat age) and published results."
+             leases per worker (pid@host, heartbeat age), published results and any\n\
+             dead-lettered tasks."
         );
         return Ok(());
     }
@@ -573,12 +590,17 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     if a.flag("status") {
         let st = TaskDir::new(dir).status()?;
         outln!(
-            "batch {}: {} task(s) — {} available, {} leased, {} done",
+            "batch {}: {} task(s) — {} available, {} leased, {} done{}",
             dir,
             st.total,
             st.available,
             st.leases.len(),
-            st.done
+            st.done,
+            if st.dead.is_empty() {
+                String::new()
+            } else {
+                format!(", {} dead-lettered", st.dead.len())
+            }
         );
         for (owner, n) in st.per_owner() {
             outln!("  worker {}: {} lease(s)", owner, n);
@@ -592,6 +614,9 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
                 human_duration(l.age)
             );
         }
+        for (id, error) in &st.dead {
+            outln!("  dead {}: {}", id, error);
+        }
         return Ok(());
     }
     let mut td =
@@ -599,7 +624,14 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     if let Some(ms) = a.get_parsed::<u64>("ttl-ms")? {
         td = td.with_ttl(Duration::from_millis(ms));
     }
+    if let Some(n) = a.get_parsed::<u32>("max-attempts")? {
+        td = td.with_max_attempts(n);
+    }
     let workers: u32 = a.get_parsed_or("workers", 1)?;
+    // graceful shutdown: SIGTERM sets a flag the drain loop polls between
+    // tasks — the current task finishes and publishes, no lease is left
+    // behind, the trace session still writes, and the exit code is 0
+    mcautotune::util::signal::install_term_handler();
     let session = ObsSession::start(&a, "worker");
     let stats = spanned("worker/drain", || td.drain(workers, a.flag("oneshot")))?;
     outln!(
@@ -607,7 +639,13 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         std::process::id(),
         stats.executed,
         stats.reclaimed,
-        if stats.complete { " — batch complete" } else { "" }
+        if mcautotune::util::signal::term_requested() {
+            " — SIGTERM: exiting gracefully, leases released"
+        } else if stats.complete {
+            " — batch complete"
+        } else {
+            ""
+        }
     );
     session.finish()
 }
@@ -615,6 +653,11 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
 fn cmd_merge(argv: &[String]) -> Result<()> {
     let spec = Spec::new()
         .opt("cache", "result-cache JSON path (default: the planning process's; `none` disables)")
+        .flag(
+            "partial",
+            "fold what completed instead of refusing: jobs missing shards (dead-lettered \
+             or outstanding tasks) report lower-bound optima and are not cached",
+        )
         .flag("help", "show options");
     let a = spec.parse(argv)?;
     if a.flag("help") {
@@ -622,7 +665,10 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
         outln!(
             "\nFolds a fully drained task dir's partial results into the same batch\n\
              report and result-cache entries a single-process `mcautotune batch` of\n\
-             the spec produces. Errors (listing the count) while tasks are outstanding."
+             the spec produces. Errors (listing the count) while tasks are outstanding\n\
+             or dead-lettered; `--partial` degrades instead — completed jobs merge and\n\
+             cache exactly as usual, incomplete jobs report lower-bound optima (marked\n\
+             `*`, never cached) and the report lists every dead-lettered task."
         );
         return Ok(());
     }
@@ -639,7 +685,11 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
         Some(path) => ResultCache::open(Path::new(path))?,
     };
     warn_quarantined(&cache);
-    let report = td.merge(&mut cache)?;
+    let report = if a.flag("partial") {
+        td.merge_partial(&mut cache)?
+    } else {
+        td.merge(&mut cache)?
+    };
     outln!(
         "merge: {} ({} job(s), cache {})",
         dir,

@@ -152,6 +152,10 @@ pub struct Metrics {
     pub lease_heartbeats: Counter,
     /// worker-mode stale-lease reclaims
     pub lease_reclaims: Counter,
+    /// worker-mode task execution attempts (including retries)
+    pub task_attempts: Counter,
+    /// tasks moved to the dead-letter directory after max attempts
+    pub task_dead_lettered: Counter,
     /// deepest frontier depth observed
     pub depth: Gauge,
     /// peak visited-store bytes observed
@@ -175,6 +179,8 @@ static METRICS: Metrics = Metrics {
     lease_grants: Counter::new(),
     lease_heartbeats: Counter::new(),
     lease_reclaims: Counter::new(),
+    task_attempts: Counter::new(),
+    task_dead_lettered: Counter::new(),
     depth: Gauge::new(),
     store_bytes: Gauge::new(),
 };
@@ -206,6 +212,8 @@ impl Metrics {
             ("lease.grants", self.lease_grants.value()),
             ("lease.heartbeats", self.lease_heartbeats.value()),
             ("lease.reclaims", self.lease_reclaims.value()),
+            ("task.attempts", self.task_attempts.value()),
+            ("task.dead_lettered", self.task_dead_lettered.value()),
         ]
     }
 
@@ -227,6 +235,8 @@ impl Metrics {
         self.lease_grants.reset();
         self.lease_heartbeats.reset();
         self.lease_reclaims.reset();
+        self.task_attempts.reset();
+        self.task_dead_lettered.reset();
         self.depth.reset();
         self.store_bytes.reset();
     }

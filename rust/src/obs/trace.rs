@@ -72,6 +72,12 @@ pub fn validate(text: &str) -> Result<Vec<Json>> {
                     str_field(&v, "id")?;
                     u64_field(&v, "t_ns")?;
                 }
+                "fault" => {
+                    // a contained failure: panic | deadline | error |
+                    // reclaim | cache_save, with free-form detail
+                    str_field(&v, "class")?;
+                    u64_field(&v, "t_ns")?;
+                }
                 "meta" | "counters" => {
                     u64_field(&v, "t_ns")?;
                 }
@@ -124,6 +130,8 @@ pub struct TraceSummary {
     /// (path, total ns, calls), heaviest first
     pub spans: Vec<(String, u64, usize)>,
     pub shards: Vec<ShardRow>,
+    /// contained failures: (class, task id if any, detail), trace order
+    pub faults: Vec<(String, String, String)>,
     /// the last `counters` dump, schema order
     pub counters: Vec<(String, u64)>,
 }
@@ -134,6 +142,7 @@ pub fn summarize(text: &str) -> Result<TraceSummary> {
     let mut by_kind: BTreeMap<String, usize> = BTreeMap::new();
     let mut span_agg: BTreeMap<String, (u64, usize)> = BTreeMap::new();
     let mut shards: Vec<ShardRow> = Vec::new();
+    let mut faults: Vec<(String, String, String)> = Vec::new();
     let mut counters: Vec<(String, u64)> = Vec::new();
     for v in &events {
         let kind = str_field(v, "k")?.to_string();
@@ -152,6 +161,11 @@ pub fn summarize(text: &str) -> Result<TraceSummary> {
                 est: u64_field(v, "est")?,
                 states: u64_field(v, "states")?,
             }),
+            "fault" => faults.push((
+                str_field(v, "class")?.to_string(),
+                v.get("id").and_then(Json::as_str).unwrap_or("").to_string(),
+                v.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
+            )),
             "counters" => {
                 let Json::Obj(fields) = v else { unreachable!("validated object") };
                 counters = fields
@@ -167,7 +181,7 @@ pub fn summarize(text: &str) -> Result<TraceSummary> {
         span_agg.into_iter().map(|(p, (ns, n))| (p, ns, n)).collect();
     spans.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
     shards.sort_by(|a, b| a.id.cmp(&b.id));
-    Ok(TraceSummary { events: events.len(), by_kind, spans, shards, counters })
+    Ok(TraceSummary { events: events.len(), by_kind, spans, shards, faults, counters })
 }
 
 impl TraceSummary {
@@ -209,6 +223,13 @@ impl TraceSummary {
                     thousands(s.states),
                     act_share,
                 ));
+            }
+        }
+        if !self.faults.is_empty() {
+            out.push_str("faults (contained failures):\n");
+            for (class, id, detail) in &self.faults {
+                let id = if id.is_empty() { "-" } else { id };
+                out.push_str(&format!("  {:<9} {:<12} {}\n", class, id, detail));
             }
         }
         if !self.counters.is_empty() {
@@ -292,6 +313,22 @@ mod tests {
             assert!(l.contains("\"k\":\"shard\""));
             assert!(!l.contains("t_ns"));
         }
+    }
+
+    #[test]
+    fn fault_events_validate_and_summarize() {
+        // class is required
+        assert!(validate("{\"k\":\"fault\",\"t_ns\":1}\n").is_err());
+        let line = "{\"k\":\"fault\",\"class\":\"panic\",\"id\":\"j000-s001\",\
+                    \"detail\":\"task panicked: boom\",\"attempts\":2,\"t_ns\":7}\n";
+        assert_eq!(validate(line).unwrap().len(), 1);
+        let s = summarize(line).unwrap();
+        assert_eq!(s.faults.len(), 1);
+        assert_eq!(s.faults[0].0, "panic");
+        assert_eq!(s.faults[0].1, "j000-s001");
+        let rendered = s.render();
+        assert!(rendered.contains("faults (contained failures):"));
+        assert!(rendered.contains("task panicked: boom"));
     }
 
     #[test]

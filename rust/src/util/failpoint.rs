@@ -1,0 +1,270 @@
+//! Deterministic failure injection for chaos testing.
+//!
+//! Named sites are compiled into the hot seams of the coordinator
+//! (lease rename, result publish, header write, cache save, shard
+//! execution) and stay inert — one relaxed atomic load and a branch,
+//! the same contract as [`crate::obs::enabled`] — until activated.
+//!
+//! Activation is usually via the environment:
+//!
+//! ```text
+//! MCAT_FAILPOINTS=site=action[:count][,site=action[:count]...]
+//! ```
+//!
+//! Actions:
+//!
+//! - `panic`    — panic at the site (workers convert this into a
+//!   structured task failure via `catch_unwind`);
+//! - `io-error` — the site returns an injected I/O error;
+//! - `delay`    — sleep 100ms at the site, then continue;
+//! - `exit`     — terminate the process immediately with exit code 86
+//!   (simulates a hard crash, e.g. crash-after-lease).
+//!
+//! An optional `:count` arms the site for exactly that many firings;
+//! without it the site fires every time. Counts are decremented
+//! process-globally under a lock, so `site=panic:1` injects exactly one
+//! panic no matter how many threads race through the site.
+//!
+//! Programmatic activation ([`activate`]/[`deactivate`]) exists for
+//! in-process demos and tests; an invalid `MCAT_FAILPOINTS` spec
+//! terminates the process with exit code 2 and a message on stderr
+//! (silently ignoring a typo'd chaos schedule would be worse).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::error::{anyhow, Error, Result};
+
+/// Environment variable holding the failpoint spec.
+pub const ENV: &str = "MCAT_FAILPOINTS";
+
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+static SITES: Mutex<Option<HashMap<String, Site>>> = Mutex::new(None);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Action {
+    Panic,
+    IoError,
+    Delay,
+    Exit,
+}
+
+#[derive(Clone, Debug)]
+struct Site {
+    action: Action,
+    /// `None` = fire every time; `Some(n)` = fire `n` more times.
+    remaining: Option<u32>,
+}
+
+/// One relaxed load + branch when failpoints are off (the common case).
+/// The first call per process inspects `MCAT_FAILPOINTS` and latches the
+/// result, so every later call is a single atomic load.
+#[inline(always)]
+pub fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        OFF => false,
+        ON => true,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let spec = std::env::var(ENV).unwrap_or_default();
+    if spec.trim().is_empty() {
+        STATE.store(OFF, Ordering::Relaxed);
+        return false;
+    }
+    match parse(&spec) {
+        Ok(sites) => {
+            *SITES.lock().unwrap() = Some(sites);
+            STATE.store(ON, Ordering::Relaxed);
+            true
+        }
+        Err(e) => {
+            eprintln!("mcautotune: invalid {ENV} spec `{spec}`: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Evaluate the failpoint `site`. Inert unless [`armed`] — one branch.
+///
+/// Returns the injected error for `io-error`, panics for `panic`, exits
+/// the process for `exit`, sleeps briefly for `delay`, and is a no-op
+/// for sites that are not configured or whose count is exhausted.
+#[inline]
+pub fn hit(site: &str) -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    fire(site)
+}
+
+#[cold]
+fn fire(site: &str) -> Result<()> {
+    let action = {
+        let mut guard = SITES.lock().unwrap();
+        let sites = match guard.as_mut() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        match sites.get_mut(site) {
+            Some(s) => match &mut s.remaining {
+                Some(0) => None,
+                Some(n) => {
+                    *n -= 1;
+                    Some(s.action)
+                }
+                None => Some(s.action),
+            },
+            None => None,
+        }
+    };
+    match action {
+        None => Ok(()),
+        Some(Action::Panic) => panic!("failpoint `{site}`: injected panic"),
+        Some(Action::IoError) => Err(anyhow!("failpoint `{site}`: injected I/O error")),
+        Some(Action::Delay) => {
+            std::thread::sleep(Duration::from_millis(100));
+            Ok(())
+        }
+        Some(Action::Exit) => {
+            eprintln!("mcautotune: failpoint `{site}`: injected process exit");
+            std::process::exit(86);
+        }
+    }
+}
+
+/// Programmatically arm the given spec (same grammar as the env var),
+/// replacing any previous configuration. Meant for demos and in-process
+/// tests; production activation goes through [`ENV`].
+pub fn activate(spec: &str) -> Result<()> {
+    let sites = parse(spec)?;
+    *SITES.lock().unwrap() = Some(sites);
+    STATE.store(ON, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every failpoint; sites go back to the one-branch inert path.
+pub fn deactivate() {
+    *SITES.lock().unwrap() = None;
+    STATE.store(OFF, Ordering::Relaxed);
+}
+
+fn parse(spec: &str) -> std::result::Result<HashMap<String, Site>, Error> {
+    let mut sites = HashMap::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, rhs) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("`{part}`: expected site=action[:count]"))?;
+        let (action, count) = match rhs.split_once(':') {
+            Some((a, c)) => {
+                let n: u32 = c
+                    .parse()
+                    .map_err(|_| anyhow!("`{part}`: count `{c}` is not a number"))?;
+                (a, Some(n))
+            }
+            None => (rhs, None),
+        };
+        let action = match action {
+            "panic" => Action::Panic,
+            "io-error" => Action::IoError,
+            "delay" => Action::Delay,
+            "exit" => Action::Exit,
+            other => {
+                return Err(anyhow!(
+                    "`{part}`: unknown action `{other}` (expected panic|io-error|delay|exit)"
+                ))
+            }
+        };
+        if site.is_empty() {
+            return Err(anyhow!("`{part}`: empty site name"));
+        }
+        sites.insert(site.to_string(), Site { action, remaining: count });
+    }
+    if sites.is_empty() {
+        return Err(anyhow!("no failpoints in spec"));
+    }
+    Ok(sites)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Failpoint state is process-global; serialize the tests that touch it.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn unconfigured_sites_are_inert() {
+        let _g = test_lock();
+        activate("some.other.site=panic").unwrap();
+        assert!(hit("fp_test.unconfigured").is_ok());
+        deactivate();
+        assert!(hit("fp_test.unconfigured").is_ok());
+    }
+
+    #[test]
+    fn io_error_fires_exactly_count_times() {
+        let _g = test_lock();
+        activate("fp_test.count=io-error:2").unwrap();
+        assert!(hit("fp_test.count").is_err());
+        assert!(hit("fp_test.count").is_err());
+        assert!(hit("fp_test.count").is_ok(), "count must exhaust");
+        assert!(hit("fp_test.count").is_ok());
+        deactivate();
+    }
+
+    #[test]
+    fn uncounted_site_fires_every_time() {
+        let _g = test_lock();
+        activate("fp_test.always=io-error").unwrap();
+        for _ in 0..4 {
+            let e = hit("fp_test.always").expect_err("must keep firing");
+            assert!(format!("{e:#}").contains("injected I/O error"));
+        }
+        deactivate();
+    }
+
+    #[test]
+    fn panic_action_panics_and_is_catchable() {
+        let _g = test_lock();
+        activate("fp_test.panic=panic:1").unwrap();
+        let r = std::panic::catch_unwind(|| hit("fp_test.panic"));
+        assert!(r.is_err(), "panic action must unwind");
+        assert!(hit("fp_test.panic").is_ok(), "count 1 is spent");
+        deactivate();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_succeeds() {
+        let _g = test_lock();
+        activate("fp_test.delay=delay:1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(hit("fp_test.delay").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(90));
+        deactivate();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in ["nosite", "a=unknown", "a=panic:xyz", "=panic", "", " , "] {
+            assert!(parse(bad).is_err(), "spec `{bad}` must be rejected");
+        }
+        assert!(parse("a=panic,b=io-error:3,c=delay,d=exit").is_ok());
+    }
+}

@@ -6,9 +6,11 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod failpoint;
 pub mod fmt;
 pub mod hash;
 pub mod manifest;
 pub mod out;
 pub mod prop;
 pub mod rng;
+pub mod signal;

@@ -1,0 +1,89 @@
+//! Minimal, dependency-free SIGTERM handling for graceful workers.
+//!
+//! `mcautotune worker` installs a handler that only sets a process-wide
+//! atomic flag (the one async-signal-safe thing a handler may do); the
+//! drain loop polls [`term_requested`] between tasks, finishes the task
+//! it is on, releases its lease by completing normally, writes the final
+//! trace, and exits 0. No `libc` crate: the one `signal(2)` symbol we
+//! need is declared directly against the C library std already links.
+//! On non-Unix targets installation is a no-op and the flag stays false.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGTERM has been delivered to this process.
+#[inline]
+pub fn term_requested() -> bool {
+    TERM.load(Ordering::Relaxed)
+}
+
+/// Pretend a SIGTERM arrived (for tests and demos).
+pub fn request_term() {
+    TERM.store(true, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+pub fn reset_for_test() {
+    TERM.store(false, Ordering::Relaxed);
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::TERM;
+    use std::sync::atomic::Ordering;
+
+    // POSIX reserves 15 for SIGTERM on every Unix this crate targets.
+    const SIGTERM: i32 = 15;
+
+    type Handler = extern "C" fn(i32);
+
+    extern "C" {
+        // glibc/musl `signal` has BSD semantics (handler stays installed,
+        // interrupted syscalls restart) — all we need for a latch flag.
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+
+    extern "C" fn on_term(_signum: i32) {
+        // A relaxed store to a static atomic is async-signal-safe.
+        TERM.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+}
+
+/// Install the SIGTERM → flag handler. Idempotent; safe to call from
+/// any thread before the drain loop starts.
+pub fn install_term_handler() {
+    imp::install();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_latches_and_resets() {
+        reset_for_test();
+        assert!(!term_requested());
+        request_term();
+        assert!(term_requested());
+        reset_for_test();
+        assert!(!term_requested());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn handler_installs_without_error() {
+        install_term_handler();
+    }
+}

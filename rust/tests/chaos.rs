@@ -1,0 +1,339 @@
+//! Chaos differential conformance: the task protocol under injected
+//! faults must converge to the *same bytes* a fault-free run produces.
+//!
+//! Faults are injected with `MCAT_FAILPOINTS` (see `util::failpoint`)
+//! into real `mcautotune` worker processes: a worker that exits while
+//! holding a fresh lease, a shard body that panics, a result publish
+//! that fails, a result cache that cannot be saved, a worker killed with
+//! SIGTERM mid-drain. The acceptance properties:
+//!
+//! - crashed/panicked/torn-write schedules recover and the merged report
+//!   and cache file are byte-identical to a fault-free single-process
+//!   `run_batch` of the same spec;
+//! - a deterministically poisoned task is retried exactly
+//!   `--max-attempts` times, then dead-lettered; `merge` refuses with a
+//!   pointer to `--partial`, and `merge --partial` folds the completed
+//!   jobs around it;
+//! - a cache-save failure degrades to a report warning instead of
+//!   aborting a fully drained batch;
+//! - SIGTERM is graceful: current task published, no lease left behind,
+//!   exit 0.
+
+use mcautotune::coordinator::{
+    run_batch, BatchOptions, BatchReport, ResultCache, TaskDir, TuningJob,
+};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::Duration;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mcautotune");
+
+fn temp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "mcat_chaos_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// The chaos workload: small enough to drain in well under a second
+/// fault-free, sharded enough that faults land mid-batch.
+const SPEC: &str = "\
+job minimum size=32 np=4 gmt=3 shards=3
+job abstract size=16 gmt=10 shards=2
+";
+
+fn reference_report(spec: &str, cache_path: &Path) -> BatchReport {
+    let jobs = TuningJob::parse_spec(spec).unwrap();
+    let opts = BatchOptions { workers: 2, ..BatchOptions::default() };
+    let mut cache = ResultCache::open(cache_path).unwrap();
+    run_batch(&jobs, &opts, &mut cache).unwrap()
+}
+
+/// Every deterministic field of the report (wall-clock fields excluded).
+fn assert_reports_identical(single: &BatchReport, multi: &BatchReport) {
+    assert_eq!(single.outcomes.len(), multi.outcomes.len());
+    for (s, m) in single.outcomes.iter().zip(&multi.outcomes) {
+        assert_eq!(s.job, m.job, "job specs must round-trip");
+        assert_eq!(s.cached, m.cached, "job `{}`: cached flag", s.job.name);
+        assert_eq!(s.shards, m.shards, "job `{}`: shard count", s.job.name);
+        assert_eq!(s.result.t_min, m.result.t_min, "job `{}`: verdict", s.job.name);
+        let (so, mo) = (&s.result.optimal, &m.result.optimal);
+        assert_eq!(
+            (so.wg, so.ts, so.time, so.steps),
+            (mo.wg, mo.ts, mo.time, mo.steps),
+            "job `{}`: best config",
+            s.job.name
+        );
+        assert_eq!(
+            s.result.states_explored, m.result.states_explored,
+            "job `{}`: states must agree no matter how many retries happened",
+            s.job.name
+        );
+        assert_eq!(s.plan, m.plan, "job `{}`: shard budget plans", s.job.name);
+        assert!(!m.lower_bound, "job `{}`: full drains are never lower bounds", s.job.name);
+    }
+    assert_eq!(single.cache_hits, multi.cache_hits);
+    assert_eq!(single.cache_misses, multi.cache_misses);
+}
+
+fn assert_cache_files_identical(a: &Path, b: &Path) {
+    let a_text = std::fs::read_to_string(a).unwrap();
+    let b_text = std::fs::read_to_string(b).unwrap();
+    assert_eq!(a_text, b_text, "cache files must be byte-identical");
+}
+
+fn run_bin(args: &[&str]) -> String {
+    run_bin_env(args, &[])
+}
+
+fn run_bin_env(args: &[&str], envs: &[(&str, &str)]) -> String {
+    let out = Command::new(BIN)
+        .args(args)
+        .envs(envs.iter().copied())
+        .output()
+        .expect("spawn mcautotune");
+    assert!(
+        out.status.success(),
+        "mcautotune {:?} (env {:?}) failed:\nstdout: {}\nstderr: {}",
+        args,
+        envs,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Run the binary expecting failure; returns (stdout, stderr).
+fn run_bin_expect_failure(args: &[&str], envs: &[(&str, &str)]) -> (String, String) {
+    let out = Command::new(BIN)
+        .args(args)
+        .envs(envs.iter().copied())
+        .output()
+        .expect("spawn mcautotune");
+    assert!(
+        !out.status.success(),
+        "mcautotune {:?} (env {:?}) unexpectedly succeeded:\n{}",
+        args,
+        envs,
+        String::from_utf8_lossy(&out.stdout)
+    );
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn plan_only(spec_path: &Path, dir: &Path, cache: &Path, extra: &[&str]) {
+    let mut args = vec![
+        "batch",
+        spec_path.to_str().unwrap(),
+        "--task-dir",
+        dir.to_str().unwrap(),
+        "--plan-only",
+        "--cache",
+        cache.to_str().unwrap(),
+        "--ttl-ms",
+        "400",
+    ];
+    args.extend_from_slice(extra);
+    let out = run_bin(&args);
+    assert!(out.contains("planned"), "unexpected plan output: {}", out);
+}
+
+#[test]
+fn injected_crash_panic_and_torn_publish_converge_to_fault_free_bytes() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, SPEC).unwrap();
+    let cache_single = temp("cache_single");
+    let cache_multi = temp("cache_multi");
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+
+    let single = reference_report(SPEC, &cache_single);
+    plan_only(&spec_path, &dir, &cache_multi, &[]);
+
+    // worker 1 dies (exit 86) the instant it wins its first lease: the
+    // canonical crashed holder, leaving a fresh never-heartbeated lease
+    let out = Command::new(BIN)
+        .args(["worker", dir_s, "--poll-ms", "50"])
+        .env("MCAT_FAILPOINTS", "task.lease=exit:1")
+        .output()
+        .expect("spawn crashing worker");
+    assert_eq!(out.status.code(), Some(86), "worker must die at the failpoint");
+    assert!(
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().ends_with(".lease.json")),
+        "the crashed worker must leave its lease behind"
+    );
+
+    // worker 2 survives its own faults — one shard body panics, one
+    // result publish fails — retries them, reclaims the crashed lease
+    // once it goes stale, and drains the batch to completion
+    let out = run_bin_env(
+        &["worker", dir_s, "--poll-ms", "50"],
+        &[("MCAT_FAILPOINTS", "shard.exec=panic:1,task.publish=io-error:1")],
+    );
+    assert!(out.contains("batch complete"), "chaos worker did not finish: {}", out);
+    assert!(
+        !out.contains(" 0 reclaimed"),
+        "the crashed worker's lease must have been reclaimed: {}",
+        out
+    );
+
+    // the merged batch is indistinguishable from the fault-free run
+    let merge_out = run_bin(&["merge", dir_s]);
+    assert!(!merge_out.contains("PARTIAL"), "full drain must not be partial: {}", merge_out);
+    let mut cache = ResultCache::open(&cache_multi).unwrap();
+    let multi = TaskDir::new(&dir).merge(&mut cache).unwrap();
+    assert_reports_identical(&single, &multi);
+    assert_cache_files_identical(&cache_single, &cache_multi);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache_single).ok();
+    std::fs::remove_file(&cache_multi).ok();
+}
+
+#[test]
+fn poison_task_dead_letters_after_exactly_max_attempts() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, "job minimum size=16 np=4 gmt=3 shards=1\n").unwrap();
+    let cache = temp("cache");
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+    plan_only(&spec_path, &dir, &cache, &["--max-attempts", "3"]);
+
+    // an uncounted panic failpoint poisons every execution of the only
+    // task; a single worker retries it through the attempt budget (the
+    // backoff between attempts defers leases, so the drain loop must
+    // wait it out) and dead-letters it — at which point the batch
+    // counts as drained
+    let out = run_bin_env(
+        &["worker", dir_s, "--poll-ms", "50"],
+        &[("MCAT_FAILPOINTS", "shard.exec=panic")],
+    );
+    assert!(
+        out.contains("drained 3 task(s)"),
+        "a poisoned task must be attempted exactly --max-attempts times: {}",
+        out
+    );
+    assert!(out.contains("batch complete"), "dead-lettering must unblock the drain: {}", out);
+
+    // the dead-letter record captures the attempt count and the panic
+    let id = "j000-s000";
+    let text = std::fs::read_to_string(dir.join("dead").join(format!("{}.json", id)))
+        .unwrap_or_else(|e| panic!("dead/{}.json must exist: {}", id, e));
+    let dead = mcautotune::util::manifest::Json::parse(&text).unwrap();
+    assert_eq!(dead.get("attempts").and_then(|v| v.as_i64()), Some(3), "{}", text);
+    let err = dead.get("dead_error").and_then(|v| v.as_str()).unwrap_or_default();
+    assert!(err.contains("panic"), "the captured failure names the panic: {}", text);
+    assert!(
+        !dir.join(format!("{}.task.json", id)).exists()
+            && !dir.join(format!("{}.lease.json", id)).exists(),
+        "a dead task must leave no task/lease file"
+    );
+    let st = TaskDir::new(&dir).status().unwrap();
+    assert_eq!(st.dead.len(), 1, "status surfaces the dead letter: {:?}", st.dead);
+
+    // strict merge refuses and points at the escape hatch; --partial
+    // folds around the dead task without aborting
+    let (_, stderr) = run_bin_expect_failure(&["merge", dir_s], &[]);
+    assert!(stderr.contains("dead-lettered"), "strict merge must name the cause: {}", stderr);
+    assert!(stderr.contains("--partial"), "strict merge must point at --partial: {}", stderr);
+    let out = run_bin(&["merge", dir_s, "--partial"]);
+    assert!(out.contains("dead-lettered task(s):"), "partial merge reports: {}", out);
+    assert!(out.contains("PARTIAL (1 dead, 0 pending)"), "{}", out);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache).ok();
+}
+
+#[test]
+fn cache_save_failure_degrades_to_a_warning() {
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, "job minimum size=16 np=4 gmt=3 shards=1\n").unwrap();
+    let cache = temp("cache");
+    // in-process batch: all shards run, then the cache save fails — the
+    // report (with results) must still print, with a warning, exit 0
+    let out = run_bin_env(
+        &[
+            "batch",
+            spec_path.to_str().unwrap(),
+            "--cache",
+            cache.to_str().unwrap(),
+        ],
+        &[("MCAT_FAILPOINTS", "cache.save=io-error")],
+    );
+    assert!(out.contains("minimum-16"), "results must still be reported: {}", out);
+    assert!(
+        out.contains("warning: result cache not saved"),
+        "save failure must surface as a warning: {}",
+        out
+    );
+    assert!(!cache.exists(), "the injected fault must have prevented the save");
+
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache).ok();
+}
+
+#[test]
+#[cfg(unix)]
+fn sigterm_mid_drain_is_graceful_and_leaves_no_lease() {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+
+    let spec_path = temp("spec");
+    std::fs::write(&spec_path, SPEC).unwrap();
+    let cache = temp("cache");
+    let dir = temp("tasks");
+    let dir_s = dir.to_str().unwrap();
+    plan_only(&spec_path, &dir, &cache, &[]);
+
+    // every shard body sleeps 100ms first (delay failpoint), so the
+    // 5-task drain is guaranteed to still be running when SIGTERM lands
+    let mut worker = Command::new(BIN)
+        .args(["worker", dir_s, "--poll-ms", "50"])
+        .env("MCAT_FAILPOINTS", "shard.exec=delay")
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn worker");
+    std::thread::sleep(Duration::from_millis(150));
+    assert_eq!(unsafe { kill(worker.id() as i32, SIGTERM) }, 0, "kill(2) failed");
+    let out = worker.wait_with_output().expect("worker wait");
+    assert!(
+        out.status.success(),
+        "SIGTERM must exit 0, got {:?}: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("SIGTERM"), "worker must report the graceful exit: {}", stdout);
+
+    // the in-flight task was finished and published; no lease remains
+    assert!(
+        !std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().ends_with(".lease.json")),
+        "a graceful exit must hold no leases"
+    );
+
+    // the rest of the fleet finishes the batch and the merge is whole
+    let out = run_bin(&["worker", dir_s, "--poll-ms", "50"]);
+    assert!(out.contains("batch complete"), "{}", out);
+    let merge_out = run_bin(&["merge", dir_s]);
+    assert!(!merge_out.contains("PARTIAL"), "{}", merge_out);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&spec_path).ok();
+    std::fs::remove_file(&cache).ok();
+}
