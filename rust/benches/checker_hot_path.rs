@@ -140,6 +140,29 @@ fn main() {
         n
     });
 
+    // --- static reductions: explore timings + states-stored ratios ------
+    // (--por and --reduce dead-slots over the same minimum model; the
+    // ratios are the reductions' coverage metric tracked across PRs —
+    // 1.0 means the reduction degraded to a no-op)
+    let pml_prop = SafetyLtl::parse("G(!FIN)").unwrap();
+    let pml_base_states =
+        check_sequential(&pml_vm, &pml_prop, &seq_opts).unwrap().stats.states_stored;
+    let por_opts = CheckOptions { por: true, ..CheckOptions::default() };
+    let por_states = check_sequential(&pml_vm, &pml_prop, &por_opts).unwrap().stats.states_stored;
+    b.bench_elems("explore/por", por_states, || {
+        check_sequential(&pml_vm, &pml_prop, &por_opts).unwrap().stats.states_stored
+    });
+    let pml_red = PromelaVm::from_source(&pml_src).unwrap().with_dead_slot_reduction();
+    let deadslots_states =
+        check_sequential(&pml_red, &pml_prop, &seq_opts).unwrap().stats.states_stored;
+    b.bench_elems("explore/dead-slots", deadslots_states, || {
+        check_sequential(&pml_red, &pml_prop, &seq_opts).unwrap().stats.states_stored
+    });
+    println!(
+        "promela reductions: baseline {} states, por {}, dead-slots {}",
+        pml_base_states, por_states, deadslots_states
+    );
+
     // --- arena Full-store inserts (fresh + duplicate probes) ------------
     let items: Vec<[u8; 24]> = (0..100_000u64)
         .map(|i| {
@@ -187,6 +210,17 @@ fn main() {
     json.push_str(&format!("  \"speedup_par4_vs_seq\": {:.3},\n", speedup4));
     json.push_str(&format!("  \"speedup_promela_vm_vs_interp\": {:.3},\n", vm_speedup));
     json.push_str(&format!("  \"overhead_trace_vs_off\": {:.3},\n", trace_overhead));
+    let ratio = |reduced: u64| {
+        if pml_base_states > 0 { reduced as f64 / pml_base_states as f64 } else { 0.0 }
+    };
+    json.push_str(&format!(
+        "  \"reduction_por_states_ratio\": {:.3},\n",
+        ratio(por_states)
+    ));
+    json.push_str(&format!(
+        "  \"reduction_deadslots_states_ratio\": {:.3},\n",
+        ratio(deadslots_states)
+    ));
     json.push_str("  \"results\": [\n");
     let n = b.results().len();
     for (i, r) in b.results().iter().enumerate() {

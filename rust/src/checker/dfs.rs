@@ -74,6 +74,13 @@ pub struct CheckOptions {
     pub expected_states: u64,
     /// parallel frontier scheduling (see [`Frontier`])
     pub frontier: Frontier,
+    /// opt-in partial-order reduction (ample sets) — sequential DFS only.
+    /// Expansion goes through [`TransitionSystem::reduced_successors`];
+    /// models that do not implement it explore the full space unchanged.
+    /// Safety-preserving for the supported stutter-insensitive property
+    /// fragment (see `promela::analysis`); state counts differ from the
+    /// SPIN-faithful default, which is why this is off unless asked for.
+    pub por: bool,
 }
 
 impl Default for CheckOptions {
@@ -90,6 +97,7 @@ impl Default for CheckOptions {
             threads: 1,
             expected_states: 0,
             frontier: Frontier::Async,
+            por: false,
         }
     }
 }
@@ -110,7 +118,15 @@ impl CheckOptions {
     /// *purely* a performance hint: an over-estimate must never trip
     /// `Abort::MemoryLimit` on a run that would otherwise fit.
     pub fn presize_hint(&self) -> u64 {
-        self.expected_states.min(self.memory_budget / 256)
+        let hint = self.expected_states.min(self.memory_budget / 256);
+        // ample-set runs store a subset of the full space; estimates come
+        // from unreduced models, so take them with a grain of salt rather
+        // than reserving for states the reduction will never visit
+        if self.por {
+            hint / 2
+        } else {
+            hint
+        }
     }
 }
 
@@ -214,6 +230,8 @@ pub fn check<M: TransitionSystem>(
     let mut enc = Vec::with_capacity(64);
     // telemetry high-water marks; see flush_search_metrics
     let mut flushed = (0u64, 0u64, 0u64);
+    // states expanded through a proper ample subset (--por)
+    let mut por_reduced = 0u64;
 
     let mut stack: Vec<Frame<M::State>> = Vec::new();
     // retired successor buffers, reused by later expansions (zero
@@ -261,7 +279,11 @@ pub fn check<M: TransitionSystem>(
 
         let mut succs = freelist.pop().unwrap_or_default();
         let cap_before = succs.capacity();
-        model.successors(&init, &mut succs);
+        if opts.por {
+            por_reduced += u64::from(model.reduced_successors(&init, &mut succs));
+        } else {
+            model.successors(&init, &mut succs);
+        }
         succ_heap += (succs.capacity() - cap_before) * state_size;
         stats.transitions += succs.len() as u64;
         if let Some(r) = rng.as_mut() {
@@ -335,7 +357,11 @@ pub fn check<M: TransitionSystem>(
 
             let mut succs = freelist.pop().unwrap_or_default();
             let cap_before = succs.capacity();
-            model.successors(&s, &mut succs);
+            if opts.por {
+                por_reduced += u64::from(model.reduced_successors(&s, &mut succs));
+            } else {
+                model.successors(&s, &mut succs);
+            }
             succ_heap += (succs.capacity() - cap_before) * state_size;
             stats.transitions += succs.len() as u64;
             if let Some(r) = rng.as_mut() {
@@ -357,6 +383,9 @@ pub fn check<M: TransitionSystem>(
     stats.bytes_used = store.bytes_used();
     stats.elapsed = start.elapsed();
     flush_search_metrics(&stats, &mut flushed, stats.bytes_used);
+    if por_reduced > 0 {
+        crate::obs::metrics().por_reduced.add(por_reduced);
+    }
     Ok(CheckReport { violations, stats, exhausted })
 }
 

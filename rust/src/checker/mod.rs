@@ -49,6 +49,15 @@ where
     let parallel_engine =
         opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic;
     if parallel_engine && !matches!(opts.store, StoreKind::Bitstate { .. }) {
+        if opts.por {
+            // ample-set reduction is specified and differentially
+            // validated against the sequential DFS only; keep the
+            // parallel frontier SPIN-faithful until it gets its own
+            // validation suite
+            crate::bail!(
+                "--por requires the sequential engine (threads=1, async frontier)"
+            );
+        }
         parallel::check_parallel(model, prop, opts)
     } else {
         dfs::check(model, prop, opts)

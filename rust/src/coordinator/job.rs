@@ -148,7 +148,7 @@ impl TuningJob {
     /// template for (size, platform). Callers must have validated the job
     /// ([`build`](Self::build) does) — the template generators assert on
     /// invalid sizes.
-    fn promela_source_text(&self) -> String {
+    pub(super) fn promela_source_text(&self) -> String {
         match &self.source {
             Some(src) => src.clone(),
             None => match self.model {
@@ -248,7 +248,12 @@ impl TuningJob {
                     enumerate_tunings(self.size)?;
                     self.plat.validate()?;
                 }
-                Ok(JobModel::Pml(PromelaSystem::from_source(&self.promela_source_text())?))
+                let sys = PromelaSystem::from_source(&self.promela_source_text())?;
+                // a source that never assigns WG/TS has a degenerate
+                // lattice: every configuration verifies the same model,
+                // and the batch would burn its budget re-proving one point
+                crate::promela::analysis::require_tunable(&sys.prog)?;
+                Ok(JobModel::Pml(sys))
             }
             JobEngine::Native => match self.model {
                 ModelKind::Abstract => Ok(JobModel::Abs(AbstractModel::new(

@@ -132,6 +132,24 @@ pub fn plan_batch(
     opts: &BatchOptions,
     cache: &mut ResultCache,
 ) -> Result<BatchPlan> {
+    // lint-before-plan: surface warning-severity diagnostics for jobs
+    // carrying external .pml sources before any budget is spent on them.
+    // Warnings only advise (the batch still runs); hard degeneracies —
+    // WG/TS never assigned — error later in `TuningJob::build`. Generated
+    // templates are lint-clean by construction (tested) and stay quiet.
+    for job in jobs {
+        if job.engine == JobEngine::Promela && job.source.is_some() {
+            let Ok(sys) = crate::promela::PromelaSystem::from_source(&job.promela_source_text())
+            else {
+                continue; // compile errors surface with context at build time
+            };
+            for d in crate::promela::analysis::diagnostics(&sys.prog) {
+                if d.severity == crate::promela::analysis::Severity::Warn {
+                    eprintln!("warning: job `{}`: {}", job.name, d);
+                }
+            }
+        }
+    }
     let mut outcomes: Vec<Option<JobOutcome>> = jobs.iter().map(|_| None).collect();
     let mut tasks: Vec<(usize, ShardPlan)> = Vec::new();
     let mut shard_counts = vec![0u32; jobs.len()];

@@ -18,7 +18,7 @@ use mcautotune::obs::{self, ju64, ProgressMeter, Recorder};
 use mcautotune::platform::{
     simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
 };
-use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
+use mcautotune::promela::{analysis, templates, PromelaSystem, PromelaVm};
 use mcautotune::report;
 use mcautotune::runtime::Engine;
 use mcautotune::swarm::SwarmConfig;
@@ -60,6 +60,9 @@ commands:
               `--trace <file>` on tune/verify/batch/worker
   simulate    random simulation of a model (reports terminal time, T_ini)
   verify      verify a safety-LTL property, print the first counterexample
+  lint        static analysis of a .pml source: dead variables and stores,
+              statically-false/shadowed guards, unreachable channel capacity,
+              degenerate tuning lattices (--deny gates CI, --json for tools)
   table1      regenerate the paper's Table 1 (abstract-model experiments)
   table2      regenerate the paper's Table 2 (kernel sweep via PJRT)
   table3      regenerate the paper's Table 3 (Minimum-model experiments)
@@ -84,6 +87,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "trace" => cmd_trace(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
+        "lint" => cmd_lint(rest),
         "table1" => cmd_table1(rest),
         "table2" => cmd_table2(rest),
         "table3" => cmd_table3(rest),
@@ -114,6 +118,21 @@ fn model_spec(spec: Spec) -> Spec {
              bytecode over flat packed states; interp: the reference \
              tree-walking interpreter the differential suite pins the VM to)",
         )
+        .opt(
+            "reduce",
+            "none | dead-slots — canonicalize statically-dead local slots to \
+             zero before states are hashed (Promela engines only; sound for \
+             safety verdicts and tuning optima, shrinks the visited store)",
+        )
+}
+
+/// Parse `--reduce`: `true` means dead-slot canonicalization is on.
+fn parse_reduce(a: &Args) -> Result<bool> {
+    match a.get_or("reduce", "none").as_str() {
+        "none" => Ok(false),
+        "dead-slots" => Ok(true),
+        other => bail!("unknown reduce `{}` (none | dead-slots)", other),
+    }
 }
 
 enum AnyModel {
@@ -136,9 +155,16 @@ macro_rules! with_model {
 
 /// Build the selected Promela execution engine for a source text.
 fn promela_model(a: &Args, src: &str) -> Result<AnyModel> {
+    let dead_slots = parse_reduce(a)?;
     match a.get_or("promela-exec", "vm").as_str() {
-        "vm" => Ok(AnyModel::Vm(PromelaVm::from_source(src)?)),
-        "interp" | "interpreter" => Ok(AnyModel::Pml(PromelaSystem::from_source(src)?)),
+        "vm" => {
+            let m = PromelaVm::from_source(src)?;
+            Ok(AnyModel::Vm(if dead_slots { m.with_dead_slot_reduction() } else { m }))
+        }
+        "interp" | "interpreter" => {
+            let m = PromelaSystem::from_source(src)?;
+            Ok(AnyModel::Pml(if dead_slots { m.with_dead_slot_reduction() } else { m }))
+        }
         other => bail!("unknown promela-exec `{}` (vm | interp)", other),
     }
 }
@@ -164,6 +190,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
             if engine == JobEngine::Promela {
                 promela_model(a, &templates::abstract_pml(size, &plat))
             } else {
+                reject_native_reduce(a)?;
                 Ok(AnyModel::Abs(AbstractModel::new(size, plat, gran)?))
             }
         }
@@ -172,6 +199,7 @@ fn build_model(a: &Args) -> Result<AnyModel> {
             if engine == JobEngine::Promela {
                 promela_model(a, &templates::minimum_pml(size, np, gmt))
             } else {
+                reject_native_reduce(a)?;
                 Ok(AnyModel::Min(MinModel::new(size, np, gmt, DataInit::Descending, gran)?))
             }
         }
@@ -182,6 +210,15 @@ fn build_model(a: &Args) -> Result<AnyModel> {
         }
         other => bail!("unknown model `{}` (abstract | minimum | *.pml)", other),
     }
+}
+
+/// Dead-slot canonicalization is defined over compiled Promela frames;
+/// the native models have no local slots, so asking for it is a typo.
+fn reject_native_reduce(a: &Args) -> Result<()> {
+    if parse_reduce(a)? {
+        bail!("--reduce dead-slots requires the Promela engine (--engine promela or a .pml model)");
+    }
+    Ok(())
 }
 
 fn parse_frontier(a: &Args) -> Result<Frontier> {
@@ -203,15 +240,20 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         },
         s => bail!("unknown store `{}` (full | compact | bitstate)", s),
     };
-    Ok(CheckOptions {
+    let opts = CheckOptions {
         store,
         max_depth: a.get_parsed_or("max-depth", d.max_depth)?,
         max_states: a.get_parsed_or("max-states", d.max_states)?,
         memory_budget: a.get_parsed_or("memory-budget", d.memory_budget)?,
         threads: a.get_parsed_or("threads", d.threads)?,
         frontier: parse_frontier(a)?,
+        por: a.flag("por"),
         ..d
-    })
+    };
+    if opts.por && (opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic) {
+        bail!("--por requires the sequential engine (threads=1, async frontier)");
+    }
+    Ok(opts)
 }
 
 fn store_spec(spec: Spec) -> Spec {
@@ -225,6 +267,12 @@ fn store_spec(spec: Spec) -> Spec {
             "frontier",
             "async | det (det: deterministic parallel exploration — reproducible \
              trails and first-trail identity across runs and thread counts)",
+        )
+        .flag(
+            "por",
+            "ample-set partial-order reduction (sequential engine only): expand \
+             one statically-invisible process where sound instead of all — same \
+             verdicts and tuning optima, fewer states",
         )
 }
 
@@ -347,6 +395,13 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     }
     let method: Method = a.get_or("method", "exhaustive").parse()?;
     let model = build_model(&a)?;
+    // refuse degenerate lattices up front: a source that never assigns
+    // WG/TS would "tune" the same model at every configuration
+    match &model {
+        AnyModel::Pml(m) => analysis::require_tunable(&m.prog)?,
+        AnyModel::Vm(m) => analysis::require_tunable(m.program())?,
+        AnyModel::Abs(_) | AnyModel::Min(_) => {}
+    }
     let opts = check_opts(&a)?;
     let sw = swarm_cfg(&a)?;
     let t_ini = a.get_parsed::<i64>("t-ini")?;
@@ -369,18 +424,24 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     };
     if let Some(rec) = obs::active() {
         // content-only run identity: deterministic under `--frontier det`
-        rec.det_event(
-            "run",
-            vec![
-                ("cmd", Json::Str("tune".into())),
-                ("model", Json::Str(a.get_or("model", "minimum"))),
-                ("size", Json::Int(i64::from(a.get_parsed_or("size", 64u32)?))),
-                ("wg", Json::Int(i64::from(r.optimal.wg))),
-                ("ts", Json::Int(i64::from(r.optimal.ts))),
-                ("t_min", Json::Int(r.t_min)),
-                ("states", ju64(r.states_explored)),
-            ],
-        );
+        let mut fields = vec![
+            ("cmd", Json::Str("tune".into())),
+            ("model", Json::Str(a.get_or("model", "minimum"))),
+            ("size", Json::Int(i64::from(a.get_parsed_or("size", 64u32)?))),
+            ("wg", Json::Int(i64::from(r.optimal.wg))),
+            ("ts", Json::Int(i64::from(r.optimal.ts))),
+            ("t_min", Json::Int(r.t_min)),
+            ("states", ju64(r.states_explored)),
+        ];
+        // reduction modes change state counts, so a trace must say which
+        // regime produced its numbers; absent fields = the default run
+        if opts.por {
+            fields.push(("por", Json::Int(1)));
+        }
+        if parse_reduce(&a)? {
+            fields.push(("reduce", Json::Str("dead-slots".into())));
+        }
+        rec.det_event("run", fields);
     }
     for line in &r.log {
         outln!("  {}", line);
@@ -832,32 +893,38 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
         let rep = spanned("verify/explore", || check(m, &prop, &opts))?;
         if let Some(rec) = obs::active() {
             // content-only run identity: deterministic under `--frontier det`
-            rec.det_event(
-                "run",
-                vec![
-                    ("cmd", Json::Str("verify".into())),
-                    ("model", Json::Str(a.get_or("model", "minimum"))),
-                    ("prop", Json::Str(prop.to_string())),
-                    (
-                        "verdict",
-                        Json::Str(
-                            if rep.found() {
-                                "violated"
-                            } else if rep.exhausted {
-                                "holds"
-                            } else {
-                                "inconclusive"
-                            }
-                            .to_string(),
-                        ),
+            let mut fields = vec![
+                ("cmd", Json::Str("verify".into())),
+                ("model", Json::Str(a.get_or("model", "minimum"))),
+                ("prop", Json::Str(prop.to_string())),
+                (
+                    "verdict",
+                    Json::Str(
+                        if rep.found() {
+                            "violated"
+                        } else if rep.exhausted {
+                            "holds"
+                        } else {
+                            "inconclusive"
+                        }
+                        .to_string(),
                     ),
-                    ("states", ju64(rep.stats.states_stored)),
-                    ("matched", ju64(rep.stats.states_matched)),
-                    ("transitions", ju64(rep.stats.transitions)),
-                    ("depth", ju64(rep.stats.max_depth_reached as u64)),
-                    ("violations", ju64(rep.violations.len() as u64)),
-                ],
-            );
+                ),
+                ("states", ju64(rep.stats.states_stored)),
+                ("matched", ju64(rep.stats.states_matched)),
+                ("transitions", ju64(rep.stats.transitions)),
+                ("depth", ju64(rep.stats.max_depth_reached as u64)),
+                ("violations", ju64(rep.violations.len() as u64)),
+            ];
+            // reduction modes change state counts, so a trace must say
+            // which regime produced its numbers; absent = default run
+            if opts.por {
+                fields.push(("por", Json::Int(1)));
+            }
+            if parse_reduce(&a)? {
+                fields.push(("reduce", Json::Str("dead-slots".into())));
+            }
+            rec.det_event("run", fields);
         }
         outln!(
             "property {}: {}",
@@ -889,6 +956,56 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
         Ok(())
     })?;
     session.finish()
+}
+
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let spec = Spec::new()
+        .flag("deny", "exit nonzero if any warning-severity diagnostic fires (CI gate)")
+        .flag("json", "one machine-readable JSON report line per file (schema-checked)")
+        .flag("help", "show options");
+    let a = spec.parse(argv)?;
+    if a.flag("help") || a.positionals().is_empty() {
+        outln!("{}", spec.usage("mcautotune lint <file.pml>..."));
+        outln!(
+            "\nCompiles each source and runs the effect/liveness analysis the\n\
+             reduction modes (`--por`, `--reduce dead-slots`) are built on,\n\
+             reporting what it proves about the model:\n\
+             \x20 warn  unused locals, dead stores, statically-false guards,\n\
+             \x20       shadowed options, channels that can never fill or are\n\
+             \x20       never sent on, tuning variables (WG/TS) never assigned\n\
+             \x20 info  unused/write-only globals (often outputs — benign)\n\
+             `--deny` fails on warnings only; infos never gate."
+        );
+        return if a.flag("help") { Ok(()) } else { bail!("no input files") };
+    }
+    let mut warns = 0usize;
+    for path in a.positionals() {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path))?;
+        let sys = PromelaSystem::from_source(&src)
+            .with_context(|| format!("compiling {}", path))?;
+        let diags = analysis::diagnostics(&sys.prog);
+        warns += diags.iter().filter(|d| d.severity == analysis::Severity::Warn).count();
+        if a.flag("json") {
+            let j = analysis::lint_json(path, &sys.prog, &diags);
+            // self-check: the emitted report must satisfy its own schema,
+            // so downstream tooling never sees a malformed line
+            analysis::validate_lint_json(&j)
+                .with_context(|| format!("internal: lint JSON schema violation for {}", path))?;
+            outln!("{}", j.render());
+        } else if diags.is_empty() {
+            outln!("{}: clean", path);
+        } else {
+            outln!("{}:", path);
+            for d in &diags {
+                outln!("  {}", d);
+            }
+        }
+    }
+    if a.flag("deny") && warns > 0 {
+        bail!("lint: {} warning(s) (--deny)", warns);
+    }
+    Ok(())
 }
 
 fn cmd_trace(argv: &[String]) -> Result<()> {

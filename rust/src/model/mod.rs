@@ -65,6 +65,20 @@ pub trait TransitionSystem {
         u64::MAX
     }
 
+    /// Like [`successors`](Self::successors), but the model may generate
+    /// only an *ample* subset of them — a partial-order reduction hook.
+    /// Returns true iff a proper ample selection was applied (the checker
+    /// counts reduced expansions). Soundness contract for implementers:
+    /// the reduced graph must preserve the verdict of every stutter-
+    /// insensitive safety property (see `promela::analysis` for the
+    /// provisos the Promela engines discharge statically). The default
+    /// performs no reduction, so `--por` is a no-op on models that do not
+    /// opt in.
+    fn reduced_successors(&self, s: &Self::State, out: &mut Vec<Self::State>) -> bool {
+        self.successors(s, out);
+        false
+    }
+
     /// Human-readable one-line description for trail printing.
     fn describe(&self, s: &Self::State) -> String {
         format!("{:?}", s)
@@ -104,6 +118,10 @@ impl<M: TransitionSystem> TransitionSystem for &M {
 
     fn eval_slots(&self, s: &Self::State, ids: &[u32], out: &mut [i64]) -> u64 {
         (**self).eval_slots(s, ids, out)
+    }
+
+    fn reduced_successors(&self, s: &Self::State, out: &mut Vec<Self::State>) -> bool {
+        (**self).reduced_successors(s, out)
     }
 
     fn describe(&self, s: &Self::State) -> String {

@@ -156,6 +156,11 @@ pub struct Metrics {
     pub task_attempts: Counter,
     /// tasks moved to the dead-letter directory after max attempts
     pub task_dead_lettered: Counter,
+    /// states expanded through a proper ample subset (`--por`)
+    pub por_reduced: Counter,
+    /// dead local slots canonicalized to zero before hashing
+    /// (`--reduce dead-slots`, both Promela engines)
+    pub slots_canonicalized: Counter,
     /// deepest frontier depth observed
     pub depth: Gauge,
     /// peak visited-store bytes observed
@@ -181,6 +186,8 @@ static METRICS: Metrics = Metrics {
     lease_reclaims: Counter::new(),
     task_attempts: Counter::new(),
     task_dead_lettered: Counter::new(),
+    por_reduced: Counter::new(),
+    slots_canonicalized: Counter::new(),
     depth: Gauge::new(),
     store_bytes: Gauge::new(),
 };
@@ -214,6 +221,8 @@ impl Metrics {
             ("lease.reclaims", self.lease_reclaims.value()),
             ("task.attempts", self.task_attempts.value()),
             ("task.dead_lettered", self.task_dead_lettered.value()),
+            ("checker.por_reduced", self.por_reduced.value()),
+            ("vm.slots_canonicalized", self.slots_canonicalized.value()),
         ]
     }
 
@@ -237,6 +246,8 @@ impl Metrics {
         self.lease_reclaims.reset();
         self.task_attempts.reset();
         self.task_dead_lettered.reset();
+        self.por_reduced.reset();
+        self.slots_canonicalized.reset();
         self.depth.reset();
         self.store_bytes.reset();
     }

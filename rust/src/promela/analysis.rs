@@ -1,0 +1,907 @@
+//! Static effect analysis over compiled process automata — the one pass
+//! behind `mcautotune lint`, `--reduce dead-slots` and `--por`.
+//!
+//! SPIN ships two classic static reductions our engines historically
+//! lacked: dead-variable elimination and partial-order reduction. Both
+//! need the same raw material — per-instruction **effect sets** (which
+//! slots an [`Op`] reads/writes, which channels it touches, whether it
+//! spawns or allocates) — which the flat slot layout of stage-one
+//! [`Program`]s makes cheap to compute. From those sets this module
+//! derives three artifacts:
+//!
+//! 1. **Slot liveness** per (proctype, pc): a backward worklist fixpoint
+//!    over each automaton. A local slot is *dead* at a pc when every path
+//!    from that pc overwrites it before reading it. Both engines use the
+//!    table (opt-in, `--reduce dead-slots`) to canonicalize dead slots to
+//!    zero in `encode`, so states differing only in dead local garbage
+//!    hash identically: `states_stored` can only shrink, and verdicts,
+//!    optima, trails and per-state semantics are untouched (raw states are
+//!    never rewritten — only their hashed image is).
+//!
+//! 2. **POR eligibility + independence**: [`independent`] is the static
+//!    conflict relation between transitions of *different* processes
+//!    (disjoint global read/write footprints, disjoint static channel
+//!    sets, no spawns/allocs/dynamic channel handles). A pc is
+//!    *ample-eligible* ([`Analysis::por_safe`]) when every op reachable
+//!    within one observable transition from it is invisible (touches only
+//!    the process's own locals), never enters an `atomic` block (a blocked
+//!    chain would leave exclusivity set and restrict other processes),
+//!    and only moves the pc strictly forward. Forward-only edges give the
+//!    cycle proviso (C3) for free: any cycle in the reduced graph must
+//!    take some process's back edge, and back-edge sources are always
+//!    fully expanded. Invisibility gives C2 for the whole supported
+//!    property fragment — `SafetyLtl` is `G(expr)` over globals, so
+//!    local-only transitions are stutter steps. C0/C1 are checked at
+//!    selection time (non-empty ample set, first eligible alive process).
+//!    Safety-only: we make no liveness/acceptance-cycle claims.
+//!
+//! 3. **Diagnostics** ([`diagnostics`]): unused/dead locals, dead stores,
+//!    statically-false or duplicate option guards, unreachable channel
+//!    capacity, write-only globals, and declared-but-never-assigned WG/TS
+//!    tuning slots. `warn`-severity findings gate CI via
+//!    `mcautotune lint --deny`; `info` findings (e.g. write-only globals,
+//!    which are usually observables read by properties or reports) never
+//!    fail the gate. [`lint_json`] renders diagnostics plus a static
+//!    feature summary (op-site counts, POR-eligible pc density, …) as a
+//!    `util::manifest` JSON document; [`validate_lint_json`] is the
+//!    schema check downstream tools — and the future surrogate-guided
+//!    search, which wants exactly these features — can rely on.
+
+use super::compile::{CExpr, CLVal, CRecvArg, Instr, Op, Program, Slot, NO_PC};
+use crate::util::error::{bail, Result};
+use crate::util::manifest::Json;
+
+// ---------------------------------------------------------------- sets --
+
+/// Dense bitset over slot (or pc) indices; grows on demand.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SlotSet {
+    words: Vec<u64>,
+}
+
+impl SlotSet {
+    pub fn new() -> SlotSet {
+        SlotSet::default()
+    }
+
+    /// Insert `i`; true when it was not already present.
+    pub fn insert(&mut self, i: u32) -> bool {
+        let (w, b) = (i as usize / 64, i as usize % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let fresh = self.words[w] & (1 << b) == 0;
+        self.words[w] |= 1 << b;
+        fresh
+    }
+
+    pub fn insert_range(&mut self, start: u32, len: u32) {
+        for i in start..start + len {
+            self.insert(i);
+        }
+    }
+
+    pub fn contains(&self, i: u32) -> bool {
+        let (w, b) = (i as usize / 64, i as usize % 64);
+        self.words.get(w).is_some_and(|x| x & (1 << b) != 0)
+    }
+
+    /// Union `other` in; true when any bit was added.
+    pub fn union_with(&mut self, other: &SlotSet) -> bool {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        let mut changed = false;
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            let n = *w | o;
+            changed |= n != *w;
+            *w = n;
+        }
+        changed
+    }
+
+    /// Remove every bit present in `other`.
+    pub fn subtract(&mut self, other: &SlotSet) {
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w &= !o;
+        }
+    }
+
+    pub fn intersects(&self, other: &SlotSet) -> bool {
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|w| *w == 0)
+    }
+
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            (0..64u32).filter(move |&b| (w >> b) & 1 != 0).map(move |b| wi as u32 * 64 + b)
+        })
+    }
+}
+
+// ------------------------------------------------------------- effects --
+
+/// Static read/write footprint of one [`Op`]. Local slots are private to
+/// the owning process (rendezvous receive binds are modeled as the
+/// *receiver's* effect), so only the global/channel components matter for
+/// cross-process independence.
+#[derive(Debug, Clone, Default)]
+pub struct Effects {
+    pub global_reads: SlotSet,
+    pub global_writes: SlotSet,
+    pub local_reads: SlotSet,
+    pub local_writes: SlotSet,
+    /// local slots definitely overwritten (strong kill for liveness)
+    pub local_kills: SlotSet,
+    /// statically-known channel ids touched (compile folds global channel
+    /// names to `CExpr::Num(id)`)
+    pub chans: SlotSet,
+    /// channel op through a non-constant handle (local `chan` variables)
+    pub chan_dynamic: bool,
+    pub spawns: bool,
+    /// allocates a channel — id depends on allocation order
+    pub allocs: bool,
+    pub halts: bool,
+}
+
+fn read_expr(e: &CExpr, eff: &mut Effects) {
+    match e {
+        CExpr::Num(_) => {}
+        CExpr::Load(s) => read_slot(*s, 1, eff),
+        CExpr::LoadElem(s, len, idx) => {
+            read_expr(idx, eff);
+            // constant in-range index reads exactly one cell
+            if let CExpr::Num(k) = **idx {
+                if k >= 0 && (k as u32) < *len {
+                    read_slot(offset_slot(*s, k as u32), 1, eff);
+                    return;
+                }
+            }
+            read_slot(*s, *len, eff);
+        }
+        CExpr::Un(_, a) => read_expr(a, eff),
+        CExpr::Bin(_, a, b) => {
+            read_expr(a, eff);
+            read_expr(b, eff);
+        }
+        CExpr::Cond(c, t, f) => {
+            read_expr(c, eff);
+            read_expr(t, eff);
+            read_expr(f, eff);
+        }
+    }
+}
+
+fn offset_slot(s: Slot, k: u32) -> Slot {
+    match s {
+        Slot::Global(b) => Slot::Global(b + k),
+        Slot::Local(b) => Slot::Local(b + k),
+    }
+}
+
+fn read_slot(s: Slot, len: u32, eff: &mut Effects) {
+    match s {
+        Slot::Global(b) => eff.global_reads.insert_range(b, len),
+        Slot::Local(b) => eff.local_reads.insert_range(b, len),
+    }
+}
+
+/// Record a write through `lv`: index expressions are reads; constant
+/// in-range element indices (and scalars) are strong kills.
+fn write_lval(lv: &CLVal, eff: &mut Effects) {
+    match lv {
+        CLVal::Scalar(s, _) => match *s {
+            Slot::Global(b) => {
+                eff.global_writes.insert(b);
+            }
+            Slot::Local(b) => {
+                eff.local_writes.insert(b);
+                eff.local_kills.insert(b);
+            }
+        },
+        CLVal::Elem(s, len, idx, _) => {
+            read_expr(idx, eff);
+            if let CExpr::Num(k) = idx {
+                if *k >= 0 && (*k as u32) < *len {
+                    match offset_slot(*s, *k as u32) {
+                        Slot::Global(b) => {
+                            eff.global_writes.insert(b);
+                        }
+                        Slot::Local(b) => {
+                            eff.local_writes.insert(b);
+                            eff.local_kills.insert(b);
+                        }
+                    }
+                    return;
+                }
+            }
+            // dynamic index: may write any cell, kills none
+            match *s {
+                Slot::Global(b) => eff.global_writes.insert_range(b, *len),
+                Slot::Local(b) => eff.local_writes.insert_range(b, *len),
+            }
+        }
+    }
+}
+
+fn chan_effect(c: &CExpr, eff: &mut Effects) {
+    read_expr(c, eff);
+    match c {
+        CExpr::Num(id) if *id >= 0 => {
+            eff.chans.insert(*id as u32);
+        }
+        _ => eff.chan_dynamic = true,
+    }
+}
+
+/// Effect set of a single op (pure syntax-directed; no context needed).
+pub fn op_effects(op: &Op) -> Effects {
+    let mut eff = Effects::default();
+    match op {
+        Op::Guard(e) => read_expr(e, &mut eff),
+        Op::Assign(lv, e) => {
+            read_expr(e, &mut eff);
+            write_lval(lv, &mut eff);
+        }
+        Op::Send(c, args) => {
+            chan_effect(c, &mut eff);
+            for a in args {
+                read_expr(a, &mut eff);
+            }
+        }
+        Op::Recv(c, args) => {
+            chan_effect(c, &mut eff);
+            for a in args {
+                match a {
+                    CRecvArg::Bind(lv) => write_lval(lv, &mut eff),
+                    CRecvArg::Match(e) => read_expr(e, &mut eff),
+                }
+            }
+        }
+        Op::Select(lv, lo, hi) => {
+            read_expr(lo, &mut eff);
+            read_expr(hi, &mut eff);
+            write_lval(lv, &mut eff);
+        }
+        Op::Branch(_, _) => {} // guards live at the option entry pcs
+        Op::Run(_, args) => {
+            eff.spawns = true;
+            for a in args {
+                read_expr(a, &mut eff);
+            }
+        }
+        Op::NewChan(lv, _, _) => {
+            eff.allocs = true;
+            write_lval(lv, &mut eff);
+        }
+        Op::Halt => eff.halts = true,
+    }
+    eff
+}
+
+/// Static independence of two transitions owned by *different*
+/// processes: they commute and neither enables/disables the other.
+/// Locals are per-process private, so only globals, channels and
+/// structural effects (spawn/alloc/halt) can conflict. Conservative:
+/// any shared channel (even send vs. send) counts as a conflict.
+pub fn independent(a: &Effects, b: &Effects) -> bool {
+    if a.spawns || b.spawns || a.allocs || b.allocs || a.halts || b.halts {
+        return false;
+    }
+    if a.chan_dynamic || b.chan_dynamic || a.chans.intersects(&b.chans) {
+        return false;
+    }
+    !a.global_writes.intersects(&b.global_writes)
+        && !a.global_writes.intersects(&b.global_reads)
+        && !a.global_reads.intersects(&b.global_writes)
+}
+
+// ------------------------------------------------------------ analysis --
+
+/// Precomputed static tables for one [`Program`]: per-op effects, slot
+/// liveness per (proctype, pc) and POR ample-eligibility per
+/// (proctype, pc). Built once (the engines cache it lazily) — lookups on
+/// the exploration hot path are a bitset probe.
+#[derive(Debug)]
+pub struct Analysis {
+    /// per (proctype, pc): effect set of the op at that pc
+    pub effects: Vec<Vec<Effects>>,
+    /// per (proctype, pc): local slots live *entering* that pc
+    live: Vec<Vec<SlotSet>>,
+    /// per (proctype, pc): pc is ample-eligible for POR
+    safe: Vec<Vec<bool>>,
+}
+
+impl Analysis {
+    pub fn of(prog: &Program) -> Analysis {
+        let effects: Vec<Vec<Effects>> =
+            prog.procs.iter().map(|p| p.code.iter().map(|i| op_effects(&i.op)).collect()).collect();
+        let live = prog
+            .procs
+            .iter()
+            .zip(&effects)
+            .map(|(p, eff)| liveness(&p.code, eff))
+            .collect();
+        let safe = prog
+            .procs
+            .iter()
+            .zip(&effects)
+            .map(|(p, eff)| {
+                (0..p.code.len() as u32).map(|pc| ample_eligible(&p.code, eff, pc)).collect()
+            })
+            .collect();
+        Analysis { effects, live, safe }
+    }
+
+    /// Local slots live when `ptype` is at `pc` (dead slots may be
+    /// canonicalized away before hashing).
+    pub fn live_at(&self, ptype: usize, pc: u32) -> &SlotSet {
+        &self.live[ptype][pc as usize]
+    }
+
+    pub fn slot_dead_at(&self, ptype: usize, pc: u32, slot: u32) -> bool {
+        !self.live_at(ptype, pc).contains(slot)
+    }
+
+    /// All transitions from `pc` are invisible, local-only and strictly
+    /// forward — a process resting here may serve as a singleton ample set.
+    pub fn por_safe(&self, ptype: usize, pc: u32) -> bool {
+        self.safe.get(ptype).and_then(|s| s.get(pc as usize)).copied().unwrap_or(false)
+    }
+}
+
+/// Execution successors of the instruction at `pc` (pc-level control
+/// flow; `Branch` targets are option/else entries).
+fn succs(code: &[Instr], pc: u32, out: &mut Vec<u32>) {
+    out.clear();
+    let ins = &code[pc as usize];
+    match &ins.op {
+        Op::Branch(opts, els) => {
+            out.extend(opts.iter().chain(els.iter()).copied().filter(|&t| t != NO_PC));
+        }
+        Op::Halt => {}
+        _ => {
+            if ins.next != NO_PC {
+                out.push(ins.next);
+            }
+        }
+    }
+}
+
+/// Backward may-liveness fixpoint over one automaton:
+/// `live_in(pc) = use(pc) ∪ (∪ live_in(succ) \ kill(pc))`.
+fn liveness(code: &[Instr], eff: &[Effects]) -> Vec<SlotSet> {
+    let n = code.len();
+    let mut live: Vec<SlotSet> = vec![SlotSet::new(); n];
+    let mut sbuf = Vec::new();
+    loop {
+        let mut changed = false;
+        for pc in (0..n as u32).rev() {
+            succs(code, pc, &mut sbuf);
+            let mut out = SlotSet::new();
+            for &s in &sbuf {
+                out.union_with(&live[s as usize]);
+            }
+            out.subtract(&eff[pc as usize].local_kills);
+            out.union_with(&eff[pc as usize].local_reads);
+            changed |= live[pc as usize].union_with(&out);
+        }
+        if !changed {
+            return live;
+        }
+    }
+}
+
+/// Ample-eligibility of the transitions leaving `pc`: walk every op a
+/// single observable transition from `pc` can execute (Branch recurses
+/// into its option guards; other ops end the transition at `next`) and
+/// require each to be local-only, non-atomic and strictly
+/// forward-branching. See the module docs for why each clause is load-
+/// bearing for the C1–C3 provisos.
+fn ample_eligible(code: &[Instr], eff: &[Effects], pc: u32) -> bool {
+    let mut stack = vec![pc];
+    let mut seen = SlotSet::new();
+    while let Some(v) = stack.pop() {
+        if !seen.insert(v) {
+            continue;
+        }
+        let ins = &code[v as usize];
+        match &ins.op {
+            Op::Branch(opts, els) => {
+                for &t in opts.iter().chain(els.iter()) {
+                    if t == NO_PC || t <= v {
+                        return false;
+                    }
+                    stack.push(t);
+                }
+            }
+            Op::Guard(_) | Op::Assign(_, _) | Op::Select(_, _, _) => {
+                let e = &eff[v as usize];
+                if !e.global_reads.is_empty()
+                    || !e.global_writes.is_empty()
+                    || !e.chans.is_empty()
+                    || e.chan_dynamic
+                    || ins.atomic_next
+                    || ins.next == NO_PC
+                    || ins.next <= v
+                {
+                    return false;
+                }
+                // landing on Halt inside the transition only flips this
+                // process's own alive bit — local and invisible
+            }
+            // Send/Recv/Run/NewChan touch shared structure; Halt as the
+            // *resting* op would shrink the process set mid-reduction
+            _ => return false,
+        }
+    }
+    true
+}
+
+// --------------------------------------------------------- diagnostics --
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// informational — never fails `lint --deny`
+    Info,
+    /// likely modeling mistake — fails `lint --deny`
+    Warn,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub severity: Severity,
+    /// stable kebab-case finding id (schema-checked by `validate_lint_json`)
+    pub category: &'static str,
+    pub proc_name: Option<String>,
+    pub pc: Option<u32>,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}]", self.severity.label(), self.category)?;
+        match (&self.proc_name, self.pc) {
+            (Some(p), Some(pc)) => write!(f, " {}@{}", p, pc)?,
+            (Some(p), None) => write!(f, " {}", p)?,
+            _ => {}
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Literal constant value of a stage-one expression. Stage one does not
+/// fold, so this intentionally covers only bare literals — enough for the
+/// classic `:: 0 -> ...` dead-option mistake without duplicating the
+/// engines' evaluation semantics.
+fn const_value(e: &CExpr) -> Option<i32> {
+    match e {
+        CExpr::Num(n) => Some(*n),
+        _ => None,
+    }
+}
+
+/// Can the instruction at `pc` re-execute (is it on a cycle of its own
+/// automaton)? Used to tell one-shot send sites from repeatable ones.
+fn on_cycle(code: &[Instr], pc: u32) -> bool {
+    let mut stack = Vec::new();
+    let mut seen = SlotSet::new();
+    let mut sbuf = Vec::new();
+    succs(code, pc, &mut sbuf);
+    stack.extend_from_slice(&sbuf);
+    while let Some(v) = stack.pop() {
+        if v == pc {
+            return true;
+        }
+        if !seen.insert(v) {
+            continue;
+        }
+        succs(code, v, &mut sbuf);
+        stack.extend_from_slice(&sbuf);
+    }
+    false
+}
+
+/// Tuning slots that `tune` explores. Assignability of these decides
+/// whether a source spans a real (WG, TS) lattice.
+const TUNING_SLOTS: [&str; 2] = ["WG", "TS"];
+
+/// `Err` when the source declares neither assignment nor positive
+/// initializer for a tuning variable, i.e. `tune` would explore a
+/// degenerate lattice where every configuration verifies the same model.
+pub fn require_tunable(prog: &Program) -> Result<()> {
+    for name in TUNING_SLOTS {
+        let Some(info) = prog.global_syms.get(name) else {
+            bail!(
+                "tuning variable `{}` is not declared — this source has no (WG, TS) \
+                 lattice to tune (run `mcautotune verify` for plain model checking)",
+                name
+            );
+        };
+        if prog.globals_init[info.offset as usize] > 0 {
+            continue;
+        }
+        let assigned = prog.procs.iter().any(|p| {
+            p.code.iter().any(|i| {
+                let eff = op_effects(&i.op);
+                eff.global_writes.contains(info.offset)
+            })
+        });
+        if !assigned {
+            bail!(
+                "tuning variable `{}` is never assigned — every (WG, TS) configuration \
+                 would verify the same model (degenerate lattice); run `mcautotune lint` \
+                 on the source for details",
+                name
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Static findings over a compiled program. Deterministic order:
+/// program-level first, then per-proc in (proc, pc) order.
+pub fn diagnostics(prog: &Program) -> Vec<Diag> {
+    let analysis = Analysis::of(prog);
+    let mut out = Vec::new();
+
+    // global usage across all processes
+    let mut greads = SlotSet::new();
+    let mut gwrites = SlotSet::new();
+    let mut send_sites: Vec<(usize, u32)> = Vec::new(); // (proc, pc) of Send ops
+    for (pi, proc_eff) in analysis.effects.iter().enumerate() {
+        for (pc, eff) in proc_eff.iter().enumerate() {
+            greads.union_with(&eff.global_reads);
+            gwrites.union_with(&eff.global_writes);
+            if matches!(prog.procs[pi].code[pc].op, Op::Send(_, _)) {
+                send_sites.push((pi, pc as u32));
+            }
+        }
+    }
+
+    // declared-but-never-assigned tuning slots (missing decls are not a
+    // lint finding: arbitrary .pml sources need not be tuning models)
+    for name in TUNING_SLOTS {
+        if let Some(info) = prog.global_syms.get(name) {
+            if prog.globals_init[info.offset as usize] <= 0 && !gwrites.contains(info.offset) {
+                out.push(Diag {
+                    severity: Severity::Warn,
+                    category: "tuning-unassigned",
+                    proc_name: None,
+                    pc: None,
+                    message: format!(
+                        "tuning variable `{}` is declared but never assigned — \
+                         `tune` would explore a degenerate lattice",
+                        name
+                    ),
+                });
+            }
+        }
+    }
+
+    // write-only / unreferenced globals (info: write-only globals are
+    // usually observables read by properties or reports)
+    let mut gsyms: Vec<(&String, &super::compile::VarInfo)> = prog.global_syms.iter().collect();
+    gsyms.sort_by_key(|(_, i)| i.offset);
+    for (name, info) in gsyms {
+        let read = (info.offset..info.offset + info.len).any(|s| greads.contains(s));
+        let written = (info.offset..info.offset + info.len).any(|s| gwrites.contains(s));
+        if !read {
+            out.push(Diag {
+                severity: Severity::Info,
+                category: if written { "global-write-only" } else { "global-unused" },
+                proc_name: None,
+                pc: None,
+                message: if written {
+                    format!(
+                        "global `{}` is written but never read by any process \
+                         (observable only through properties/reports)",
+                        name
+                    )
+                } else {
+                    format!("global `{}` is never referenced", name)
+                },
+            });
+        }
+    }
+
+    // buffered channels whose capacity is unreachable
+    for (id, (cap, _arity)) in prog.global_chans.iter().enumerate() {
+        if *cap == 0 {
+            continue; // rendezvous: no buffer to fill
+        }
+        let sites: Vec<&(usize, u32)> = send_sites
+            .iter()
+            .filter(|(pi, pc)| {
+                let eff = &analysis.effects[*pi][*pc as usize];
+                eff.chans.contains(id as u32) || eff.chan_dynamic
+            })
+            .collect();
+        if sites.is_empty() {
+            out.push(Diag {
+                severity: Severity::Warn,
+                category: "chan-never-sent",
+                proc_name: None,
+                pc: None,
+                message: format!("channel #{} (capacity {}) is never sent to", id, cap),
+            });
+        } else {
+            // a send site on a cycle can fire arbitrarily often
+            let repeatable =
+                sites.iter().any(|(pi, pc)| on_cycle(&prog.procs[*pi].code, *pc));
+            if !repeatable && (sites.len() as u16) < *cap {
+                out.push(Diag {
+                    severity: Severity::Warn,
+                    category: "chan-cap-unreachable",
+                    proc_name: None,
+                    pc: None,
+                    message: format!(
+                        "channel #{}: capacity {} can never be reached (at most {} \
+                         one-shot send site(s))",
+                        id, cap, sites.len()
+                    ),
+                });
+            }
+        }
+    }
+
+    // per-proc findings
+    for (pi, proc) in prog.procs.iter().enumerate() {
+        let eff = &analysis.effects[pi];
+
+        // locals never read anywhere in the proctype
+        let mut lreads = SlotSet::new();
+        for e in eff {
+            lreads.union_with(&e.local_reads);
+        }
+        for (name, info) in &proc.locals {
+            if !(info.offset..info.offset + info.len).any(|s| lreads.contains(s)) {
+                out.push(Diag {
+                    severity: Severity::Warn,
+                    category: "local-unused",
+                    proc_name: Some(proc.name.clone()),
+                    pc: None,
+                    message: format!("local `{}` is never read", name),
+                });
+            }
+        }
+
+        for (pc, ins) in proc.code.iter().enumerate() {
+            let pc = pc as u32;
+            match &ins.op {
+                // dead store: scalar local whose value is dead at the
+                // landing pc (suppress when the local is never read at
+                // all — local-unused already covers it)
+                Op::Assign(CLVal::Scalar(Slot::Local(s), _), _)
+                    if ins.next != NO_PC
+                        && lreads.contains(*s)
+                        && analysis.slot_dead_at(pi, ins.next, *s) =>
+                {
+                    out.push(Diag {
+                        severity: Severity::Warn,
+                        category: "dead-store",
+                        proc_name: Some(proc.name.clone()),
+                        pc: Some(pc),
+                        message: format!(
+                            "value written to `{}` is overwritten before any read",
+                            proc.local_name(*s).unwrap_or_else(|| format!("local#{}", s))
+                        ),
+                    });
+                }
+                Op::Guard(e) if const_value(e) == Some(0) => {
+                    out.push(Diag {
+                        severity: Severity::Warn,
+                        category: "guard-false",
+                        proc_name: Some(proc.name.clone()),
+                        pc: Some(pc),
+                        message: "guard is statically false — this statement can never \
+                                  execute"
+                            .into(),
+                    });
+                }
+                Op::Branch(opts, _) => {
+                    // duplicate option edges: same entry op and same
+                    // continuation — truly redundant nondeterminism
+                    for (i, &a) in opts.iter().enumerate() {
+                        for &b in &opts[i + 1..] {
+                            if a == b
+                                || (proc.code[a as usize].op == proc.code[b as usize].op
+                                    && proc.code[a as usize].next == proc.code[b as usize].next)
+                            {
+                                out.push(Diag {
+                                    severity: Severity::Warn,
+                                    category: "option-shadowed",
+                                    proc_name: Some(proc.name.clone()),
+                                    pc: Some(pc),
+                                    message: format!(
+                                        "options at pc {} and {} are identical — one \
+                                         shadows the other",
+                                        a, b
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- lint IO --
+
+/// Machine-readable lint document for one source file: diagnostics plus
+/// the static feature summary future cost models consume.
+pub fn lint_json(file: &str, prog: &Program, diags: &[Diag]) -> Json {
+    let analysis = Analysis::of(prog);
+    let mut sends = 0i64;
+    let mut recvs = 0i64;
+    let mut branches = 0i64;
+    let mut runs = 0i64;
+    let mut atomic_edges = 0i64;
+    let mut instrs = 0i64;
+    let mut por_safe_pcs = 0i64;
+    for (pi, p) in prog.procs.iter().enumerate() {
+        instrs += p.code.len() as i64;
+        for (pc, ins) in p.code.iter().enumerate() {
+            match ins.op {
+                Op::Send(_, _) => sends += 1,
+                Op::Recv(_, _) => recvs += 1,
+                Op::Branch(_, _) => branches += 1,
+                Op::Run(_, _) => runs += 1,
+                _ => {}
+            }
+            if ins.atomic_next {
+                atomic_edges += 1;
+            }
+            if analysis.por_safe(pi, pc as u32) {
+                por_safe_pcs += 1;
+            }
+        }
+    }
+    let warns = diags.iter().filter(|d| d.severity == Severity::Warn).count() as i64;
+    let infos = diags.len() as i64 - warns;
+    let jdiags = diags
+        .iter()
+        .map(|d| {
+            let mut f = vec![
+                ("severity".to_string(), Json::Str(d.severity.label().into())),
+                ("category".to_string(), Json::Str(d.category.into())),
+            ];
+            if let Some(p) = &d.proc_name {
+                f.push(("proc".to_string(), Json::Str(p.clone())));
+            }
+            if let Some(pc) = d.pc {
+                f.push(("pc".to_string(), Json::Int(i64::from(pc))));
+            }
+            f.push(("message".to_string(), Json::Str(d.message.clone())));
+            Json::Obj(f)
+        })
+        .collect();
+    Json::Obj(vec![
+        ("tool".to_string(), Json::Str("mcautotune-lint".into())),
+        ("version".to_string(), Json::Int(1)),
+        ("file".to_string(), Json::Str(file.to_string())),
+        ("diags".to_string(), Json::Arr(jdiags)),
+        (
+            "summary".to_string(),
+            Json::Obj(vec![
+                ("warns".to_string(), Json::Int(warns)),
+                ("infos".to_string(), Json::Int(infos)),
+            ]),
+        ),
+        (
+            "features".to_string(),
+            Json::Obj(vec![
+                ("procs".to_string(), Json::Int(prog.procs.len() as i64)),
+                ("active".to_string(), Json::Int(prog.active.len() as i64)),
+                ("instrs".to_string(), Json::Int(instrs)),
+                ("globals".to_string(), Json::Int(prog.globals_init.len() as i64)),
+                ("global_chans".to_string(), Json::Int(prog.global_chans.len() as i64)),
+                ("send_sites".to_string(), Json::Int(sends)),
+                ("recv_sites".to_string(), Json::Int(recvs)),
+                ("branch_sites".to_string(), Json::Int(branches)),
+                ("run_sites".to_string(), Json::Int(runs)),
+                ("atomic_edges".to_string(), Json::Int(atomic_edges)),
+                ("por_safe_pcs".to_string(), Json::Int(por_safe_pcs)),
+                (
+                    "max_locals".to_string(),
+                    Json::Int(prog.procs.iter().map(|p| i64::from(p.nlocals)).max().unwrap_or(0)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn expect_int(j: &Json, key: &str) -> Result<i64> {
+    match j.get(key).and_then(Json::as_i64) {
+        Some(v) if v >= 0 => Ok(v),
+        _ => bail!("lint JSON: `{}` must be a non-negative integer", key),
+    }
+}
+
+/// Schema check for [`lint_json`] output (the `obs::trace::validate`
+/// counterpart for lint documents): field presence, types, severity
+/// vocabulary and summary-count consistency.
+pub fn validate_lint_json(j: &Json) -> Result<()> {
+    if j.get("tool").and_then(Json::as_str) != Some("mcautotune-lint") {
+        bail!("lint JSON: `tool` must be \"mcautotune-lint\"");
+    }
+    if expect_int(j, "version")? < 1 {
+        bail!("lint JSON: `version` must be >= 1");
+    }
+    if j.get("file").and_then(Json::as_str).is_none_or(str::is_empty) {
+        bail!("lint JSON: `file` must be a non-empty string");
+    }
+    let Some(diags) = j.get("diags").and_then(Json::as_arr) else {
+        bail!("lint JSON: `diags` must be an array");
+    };
+    let (mut warns, mut infos) = (0i64, 0i64);
+    for (i, d) in diags.iter().enumerate() {
+        match d.get("severity").and_then(Json::as_str) {
+            Some("warn") => warns += 1,
+            Some("info") => infos += 1,
+            s => bail!("lint JSON: diag {}: bad severity {:?}", i, s),
+        }
+        if d.get("category").and_then(Json::as_str).is_none_or(str::is_empty) {
+            bail!("lint JSON: diag {}: `category` must be a non-empty string", i);
+        }
+        if d.get("message").and_then(Json::as_str).is_none_or(str::is_empty) {
+            bail!("lint JSON: diag {}: `message` must be a non-empty string", i);
+        }
+        if let Some(p) = d.get("proc") {
+            if p.as_str().is_none() {
+                bail!("lint JSON: diag {}: `proc` must be a string", i);
+            }
+        }
+        if let Some(pc) = d.get("pc") {
+            if pc.as_i64().is_none_or(|v| v < 0) {
+                bail!("lint JSON: diag {}: `pc` must be a non-negative integer", i);
+            }
+        }
+    }
+    let Some(summary) = j.get("summary") else {
+        bail!("lint JSON: missing `summary`");
+    };
+    if expect_int(summary, "warns")? != warns || expect_int(summary, "infos")? != infos {
+        bail!("lint JSON: summary counts disagree with `diags`");
+    }
+    let Some(features) = j.get("features") else {
+        bail!("lint JSON: missing `features`");
+    };
+    for key in [
+        "procs",
+        "active",
+        "instrs",
+        "globals",
+        "global_chans",
+        "send_sites",
+        "recv_sites",
+        "branch_sites",
+        "run_sites",
+        "atomic_edges",
+        "por_safe_pcs",
+        "max_locals",
+    ] {
+        expect_int(features, key)?;
+    }
+    Ok(())
+}

@@ -122,6 +122,22 @@ pub struct ProcDef {
     pub nlocals: u32,
     pub code: Vec<Instr>,
     pub entry: u32,
+    /// declared locals (params first) sorted by slot offset — source names
+    /// for diagnostics; execution never consults this
+    pub locals: Vec<(String, VarInfo)>,
+}
+
+impl ProcDef {
+    /// Source name of a local slot (`name` or `name[i]` for array cells).
+    pub fn local_name(&self, slot: u32) -> Option<String> {
+        let (name, info) =
+            self.locals.iter().find(|(_, i)| i.offset <= slot && slot < i.offset + i.len)?;
+        Some(if info.len == 1 {
+            name.clone()
+        } else {
+            format!("{}[{}]", name, slot - info.offset)
+        })
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -140,6 +156,19 @@ pub struct Program {
     pub global_chans: Vec<(u16, u16)>,
     pub procs: Vec<ProcDef>,
     pub active: Vec<u32>,
+}
+
+impl Program {
+    /// Source name of a global slot (`name` or `name[i]` for array cells).
+    pub fn global_name(&self, slot: u32) -> Option<String> {
+        let (name, info) =
+            self.global_syms.iter().find(|(_, i)| i.offset <= slot && slot < i.offset + i.len)?;
+        Some(if info.len == 1 {
+            name.clone()
+        } else {
+            format!("{}[{}]", name, slot - info.offset)
+        })
+    }
 }
 
 pub fn compile(model: &Model) -> Result<Program> {
@@ -249,6 +278,9 @@ impl<'a> ProcCompiler<'a> {
         let halt_pc = self.emit(Op::Halt);
         self.patch(&exits, halt_pc);
         let entry = entry.unwrap_or(halt_pc);
+        let mut locals: Vec<(String, VarInfo)> =
+            self.local_syms.iter().map(|(n, i)| (n.clone(), *i)).collect();
+        locals.sort_by_key(|(_, i)| i.offset);
         Ok(ProcDef {
             name: p.name.clone(),
             nparams,
@@ -256,6 +288,7 @@ impl<'a> ProcCompiler<'a> {
             nlocals: self.nlocals,
             code: self.code,
             entry,
+            locals,
         })
     }
 

@@ -81,6 +81,12 @@ pub struct PromelaSystem {
     /// the interpreter's main optimization (§Perf: ~5x fewer states on the
     /// paper's models). Disable for instruction-level debugging.
     pub coalesce_atomic: bool,
+    /// opt-in dead-slot reduction: canonicalize provably dead local slots
+    /// to zero in `encode` so garbage-only state differences hash alike
+    dead_slots: bool,
+    /// lazily-built static tables (liveness + POR eligibility); default
+    /// runs never touch this, so construction stays free
+    analysis: std::sync::OnceLock<super::analysis::Analysis>,
 }
 
 /// Bound on coalesced atomic chains — a guard against `do`-loops inside
@@ -89,7 +95,12 @@ const MAX_ATOMIC_CHAIN: u32 = 4096;
 
 impl PromelaSystem {
     pub fn new(prog: Program) -> Self {
-        Self { prog, coalesce_atomic: true }
+        Self {
+            prog,
+            coalesce_atomic: true,
+            dead_slots: false,
+            analysis: std::sync::OnceLock::new(),
+        }
     }
 
     pub fn from_source(src: &str) -> Result<Self> {
@@ -101,6 +112,21 @@ impl PromelaSystem {
     pub fn without_atomic_coalescing(mut self) -> Self {
         self.coalesce_atomic = false;
         self
+    }
+
+    /// Opt-in `--reduce dead-slots`: `encode` zeroes local slots that are
+    /// provably dead at the process's pc (and every local of a terminated
+    /// process) before hashing. Verdict-, optimum- and trail-preserving —
+    /// raw states are untouched, only their stored image is canonical —
+    /// with `states_stored` ≤ the unreduced run.
+    pub fn with_dead_slot_reduction(mut self) -> Self {
+        self.dead_slots = true;
+        self
+    }
+
+    /// Static analysis tables, built on first use.
+    fn analysis(&self) -> &super::analysis::Analysis {
+        self.analysis.get_or_init(|| super::analysis::Analysis::of(&self.prog))
     }
 
     /// Emit `ns`, or — when it is mid-atomic and its owner can move —
@@ -591,6 +617,30 @@ impl TransitionSystem for PromelaSystem {
         crate::obs::metrics().interp_generated.add(out.len() as u64);
     }
 
+    fn reduced_successors(&self, s: &PState, out: &mut Vec<PState>) -> bool {
+        out.clear();
+        // inside an atomic chain only the owner moves anyway — and its
+        // held exclusivity is exactly what breaks independence, so no
+        // ample selection applies
+        if s.exclusive >= 0 {
+            self.successors(s, out);
+            return false;
+        }
+        let a = self.analysis();
+        for p in 0..s.procs.len() {
+            let pr = &s.procs[p];
+            if pr.alive && a.por_safe(pr.ptype as usize, pr.pc) {
+                self.gen_from(s, p, pr.pc, out);
+                if !out.is_empty() {
+                    crate::obs::metrics().interp_generated.add(out.len() as u64);
+                    return true;
+                }
+            }
+        }
+        self.successors(s, out);
+        false
+    }
+
     fn encode(&self, s: &PState, out: &mut Vec<u8>) {
         out.clear();
         out.push(s.exclusive as u8);
@@ -604,13 +654,31 @@ impl TransitionSystem for PromelaSystem {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        let mut zeroed = 0u64;
         for p in &s.procs {
             out.push(p.ptype as u8);
             out.push(p.alive as u8);
             out.extend_from_slice(&p.pc.to_le_bytes());
-            for l in &p.locals {
-                out.extend_from_slice(&l.to_le_bytes());
+            if !self.dead_slots {
+                for l in &p.locals {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                continue;
             }
+            let live =
+                p.alive.then(|| self.analysis().live_at(p.ptype as usize, p.pc));
+            for (i, l) in p.locals.iter().enumerate() {
+                if live.is_some_and(|lv| lv.contains(i as u32)) {
+                    out.extend_from_slice(&l.to_le_bytes());
+                } else {
+                    // dead (or post-halt) slot: store the canonical image
+                    zeroed += u64::from(*l != 0);
+                    out.extend_from_slice(&0i32.to_le_bytes());
+                }
+            }
+        }
+        if zeroed > 0 {
+            crate::obs::metrics().slots_canonicalized.add(zeroed);
         }
     }
 

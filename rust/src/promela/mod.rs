@@ -35,6 +35,7 @@
 //! minimum problem) for arbitrary sizes; pregenerated instances ship in
 //! `models/*.pml`.
 
+pub mod analysis;
 pub mod ast;
 pub mod compile;
 pub mod interp;

@@ -454,6 +454,11 @@ pub struct PromelaVm {
     /// off-shard choices dropped by compile-time specialization before
     /// materialization — the telemetry complement of `generated`
     pruned: AtomicU64,
+    /// opt-in dead-slot reduction (see `PromelaSystem::with_dead_slot_reduction`)
+    dead_slots: bool,
+    /// lazily-built static tables (liveness + POR eligibility); default
+    /// runs never touch this, so construction stays free
+    analysis: std::sync::OnceLock<super::analysis::Analysis>,
 }
 
 impl PromelaVm {
@@ -533,6 +538,8 @@ impl PromelaVm {
             coalesce_atomic: true,
             generated: AtomicU64::new(0),
             pruned: AtomicU64::new(0),
+            dead_slots: false,
+            analysis: std::sync::OnceLock::new(),
             src: prog,
         })
     }
@@ -541,6 +548,19 @@ impl PromelaVm {
     pub fn without_atomic_coalescing(mut self) -> Self {
         self.coalesce_atomic = false;
         self
+    }
+
+    /// Opt-in `--reduce dead-slots`: `encode` zeroes provably dead local
+    /// slots (and every local of a terminated process) before hashing.
+    /// Same contract as `PromelaSystem::with_dead_slot_reduction`.
+    pub fn with_dead_slot_reduction(mut self) -> Self {
+        self.dead_slots = true;
+        self
+    }
+
+    /// Static analysis tables, built on first use.
+    fn analysis(&self) -> &super::analysis::Analysis {
+        self.analysis.get_or_init(|| super::analysis::Analysis::of(&self.src))
     }
 
     /// The stage-one program this VM was compiled from.
@@ -1370,11 +1390,65 @@ impl TransitionSystem for PromelaVm {
         }
     }
 
+    fn reduced_successors(&self, s: &VState, out: &mut Vec<VState>) -> bool {
+        out.clear();
+        let d = &s.data[..];
+        // held exclusivity breaks independence — no ample selection
+        if d[EXCL] >= 0 {
+            self.successors(s, out);
+            return false;
+        }
+        let a = self.analysis();
+        for p in 0..self.nprocs(d) {
+            if self.alive(d, p) {
+                let off = self.proc_off(d, p);
+                let pc = self.pc_of(d, p);
+                if a.por_safe(d[off] as usize, pc) {
+                    // ample-eligible ops never touch (WG, TS), so
+                    // specialization cannot prune here — ignore the flag
+                    let _ = self.gen_from(s, p, pc, out);
+                    if !out.is_empty() {
+                        return true;
+                    }
+                }
+            }
+        }
+        self.successors(s, out);
+        false
+    }
+
     fn encode(&self, s: &VState, out: &mut Vec<u8>) {
         out.clear();
         out.reserve(s.data.len() * 4);
         for w in &s.data {
             out.extend_from_slice(&w.to_le_bytes());
+        }
+        if !self.dead_slots {
+            return;
+        }
+        let d = &s.data[..];
+        let a = self.analysis();
+        let mut zeroed = 0u64;
+        for p in 0..self.nprocs(d) {
+            let off = self.proc_off(d, p);
+            let frame = self.frame_of(d, p);
+            let def = &self.src.procs[d[off] as usize];
+            let live = (d[off + ALIVE] != 0)
+                .then(|| a.live_at(d[off] as usize, d[off + PC] as u32));
+            for i in 0..def.nlocals {
+                if live.is_some_and(|lv| lv.contains(i)) {
+                    continue;
+                }
+                // dead (or post-halt) slot: store the canonical image
+                let b = (frame + i as usize) * 4;
+                if out[b..b + 4] != [0u8; 4] {
+                    zeroed += 1;
+                    out[b..b + 4].copy_from_slice(&[0u8; 4]);
+                }
+            }
+        }
+        if zeroed > 0 {
+            crate::obs::metrics().slots_canonicalized.add(zeroed);
         }
     }
 

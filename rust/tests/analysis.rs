@@ -1,0 +1,603 @@
+//! Static-analysis suite: effect sets, liveness, lint diagnostics, and
+//! the two opt-in reductions the analysis feeds.
+//!
+//! The reduction tests are differential against the unreduced engines on
+//! the same corpus the VM conformance suite uses: `--reduce dead-slots`
+//! and `--por` must preserve verdicts (and tuning optima) everywhere,
+//! `states_stored` may only shrink, and pinned models must show a
+//! *strict* drop so the reductions can never silently degrade to no-ops.
+
+use mcautotune::checker::{check, CheckOptions, Frontier};
+use mcautotune::coordinator::{JobEngine, ModelKind, TuningJob};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::platform::PlatformConfig;
+use mcautotune::promela::analysis::{
+    diagnostics, independent, lint_json, op_effects, require_tunable, validate_lint_json,
+    Analysis, Severity,
+};
+use mcautotune::promela::compile::{
+    CExpr, CLVal, Instr, Op, ProcDef, Program, Slot, VarInfo, VarType, NO_PC,
+};
+use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{tune, Method};
+use mcautotune::util::manifest::Json;
+use std::collections::HashMap;
+
+/// Same corpus as the VM conformance suite (`tests/promela_vm.rs`): every
+/// semantic feature of the subset plus the paper's two generated models.
+fn corpus() -> Vec<(&'static str, String, &'static str)> {
+    vec![
+        (
+            "seq-assign",
+            "int a; int b; active proctype main() { a = 2; b = a + 3 }".into(),
+            "G(true)",
+        ),
+        (
+            "select",
+            "int x; byte i; active proctype main() { select (i : 1 .. 3); x = i * 10 }".into(),
+            "G(x != 20)",
+        ),
+        (
+            "do-break",
+            "int i; active proctype main() { do :: i < 5 -> i++ :: else -> break od }".into(),
+            "G(i < 5)",
+        ),
+        (
+            "arrays",
+            "int a[4]; int s; byte i; active proctype main() {\
+               for (i : 0 .. 3) { a[i] = i * i }\
+               for (i : 0 .. 3) { s = s + a[i] } }"
+                .into(),
+            "G(s != 14)",
+        ),
+        (
+            "rendezvous",
+            "mtype = {go, done};\nchan c = [0] of {mtype};\nint got;\n\
+             active proctype main() { run w(); c ! go; c ? done }\n\
+             proctype w() { c ? go; got = 1; c ! done }"
+                .into(),
+            "G(got == 0)",
+        ),
+        (
+            "rendezvous-match",
+            "mtype = {go, stop};\nchan c = [0] of {mtype};\nint path;\n\
+             active proctype main() { run w(); c ! go }\n\
+             proctype w() { if :: c ? go -> path = 1 :: c ? stop -> path = 2 fi }"
+                .into(),
+            "G(path == 0)",
+        ),
+        (
+            "buffered-fifo",
+            "chan c = [2] of {byte};\nint a; int b;\n\
+             active proctype main() { c ! 1; c ! 2; run w() }\n\
+             proctype w() { byte x; c ? x; a = x; c ? x; b = x }"
+                .into(),
+            "G(b != 2)",
+        ),
+        (
+            "else-choice",
+            "int x = 1; int r;\n\
+             active proctype main() { if :: x == 1 -> r = 10 :: else -> r = 20 fi }"
+                .into(),
+            "G(true)",
+        ),
+        (
+            "interleave-race",
+            "int x;\nactive proctype main() { run a(); run b() }\n\
+             proctype a() { x = 1 }\nproctype b() { x = 2 }"
+                .into(),
+            "G(x != 2)",
+        ),
+        (
+            "atomic-increment",
+            "int x;\nactive proctype main() { run a(); run b() }\n\
+             proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+             proctype b() { int t; atomic { t = x; x = t + 1 } }"
+                .into(),
+            "G(x != 2)",
+        ),
+        (
+            "blocking-guard",
+            "int flag; int r;\n\
+             active proctype main() { run setter(); flag == 1; r = 99 }\n\
+             proctype setter() { flag = 1 }"
+                .into(),
+            "G(r != 99)",
+        ),
+        (
+            "deadlock",
+            "chan c = [0] of {byte};\nint r;\nactive proctype main() { byte x; c ? x; r = 1 }"
+                .into(),
+            "G(true)",
+        ),
+        (
+            "local-chan",
+            "int got;\n\
+             active proctype main() { chan c = [1] of {byte}; c ! 9; byte x; c ? x; got = x }"
+                .into(),
+            "G(got != 9)",
+        ),
+        (
+            "byte-wrap",
+            "byte k = 200; int laps;\n\
+             active proctype main() { do :: k != 0 -> k++ :: else -> break od; laps = 1 }"
+                .into(),
+            "G(!(k == 0 && laps == 1))",
+        ),
+        (
+            "clock-mini",
+            r#"
+            int time; int nrp; int active_n = 2; bool FIN;
+            active proctype main() { atomic { run p(); run p(); run clock() } }
+            proctype p() {
+              byte k; int cur;
+              for (k : 0 .. 2) {
+                atomic { cur = time; nrp = nrp + 1 };
+                time > cur
+              };
+              atomic { active_n = active_n - 1; FIN = (active_n == 0 -> 1 : 0) }
+            }
+            proctype clock() {
+              do
+              :: FIN -> break
+              :: !FIN && nrp >= active_n && active_n > 0 ->
+                   atomic { nrp = 0; time = time + 1 }
+              od
+            }
+            "#
+            .into(),
+            "G(FIN -> time > 3)",
+        ),
+        ("minimum-8", templates::minimum_pml(8, 4, 3), "G(!FIN)"),
+        (
+            "abstract-8",
+            templates::abstract_pml(8, &PlatformConfig { nd: 1, nu: 1, np: 2, gmt: 2 }),
+            "G(!FIN)",
+        ),
+    ]
+}
+
+// -------------------------------------------------------- effect sets --
+
+#[test]
+fn effect_sets_follow_the_op_syntax() {
+    let e = op_effects(&Op::Guard(CExpr::Load(Slot::Global(3))));
+    assert!(e.global_reads.contains(3));
+    assert!(e.global_writes.is_empty() && e.local_writes.is_empty());
+
+    // scalar local assign: strong kill; rhs reads both scopes
+    let e = op_effects(&Op::Assign(
+        CLVal::Scalar(Slot::Local(2), VarType::Int),
+        CExpr::Bin(
+            mcautotune::promela::ast::PBinOp::Add,
+            Box::new(CExpr::Load(Slot::Local(1))),
+            Box::new(CExpr::Load(Slot::Global(0))),
+        ),
+    ));
+    assert!(e.local_reads.contains(1) && e.global_reads.contains(0));
+    assert!(e.local_writes.contains(2) && e.local_kills.contains(2));
+
+    // constant in-range element index: a single-cell strong kill
+    let e = op_effects(&Op::Assign(
+        CLVal::Elem(Slot::Local(4), 3, CExpr::Num(1), VarType::Int),
+        CExpr::Num(0),
+    ));
+    assert!(e.local_writes.contains(5) && e.local_kills.contains(5));
+    assert!(!e.local_writes.contains(4) && !e.local_writes.contains(6));
+
+    // dynamic index: weak write of the whole range, no kills
+    let e = op_effects(&Op::Assign(
+        CLVal::Elem(Slot::Local(4), 3, CExpr::Load(Slot::Local(0)), VarType::Int),
+        CExpr::Num(0),
+    ));
+    assert!(e.local_reads.contains(0));
+    assert!((4..7).all(|s| e.local_writes.contains(s)));
+    assert!(e.local_kills.is_empty());
+
+    // static vs dynamic channel handles
+    let e = op_effects(&Op::Send(CExpr::Num(2), vec![CExpr::Load(Slot::Global(1))]));
+    assert!(e.chans.contains(2) && !e.chan_dynamic && e.global_reads.contains(1));
+    let e = op_effects(&Op::Send(CExpr::Load(Slot::Local(0)), vec![]));
+    assert!(e.chan_dynamic && e.local_reads.contains(0));
+
+    // structural effects
+    assert!(op_effects(&Op::Run(0, vec![])).spawns);
+    assert!(op_effects(&Op::Halt).halts);
+    let e = op_effects(&Op::NewChan(CLVal::Scalar(Slot::Local(0), VarType::Int), 1, 1));
+    assert!(e.allocs && e.local_writes.contains(0));
+}
+
+#[test]
+fn independence_is_global_footprint_disjointness() {
+    let local_a = op_effects(&Op::Assign(
+        CLVal::Scalar(Slot::Local(0), VarType::Int),
+        CExpr::Num(1),
+    ));
+    let local_b = op_effects(&Op::Assign(
+        CLVal::Scalar(Slot::Local(3), VarType::Int),
+        CExpr::Load(Slot::Local(2)),
+    ));
+    assert!(independent(&local_a, &local_b), "local-only ops are independent");
+
+    let wg0 = op_effects(&Op::Assign(
+        CLVal::Scalar(Slot::Global(0), VarType::Int),
+        CExpr::Num(1),
+    ));
+    let rg0 = op_effects(&Op::Guard(CExpr::Load(Slot::Global(0))));
+    let wg1 = op_effects(&Op::Assign(
+        CLVal::Scalar(Slot::Global(1), VarType::Int),
+        CExpr::Num(1),
+    ));
+    assert!(!independent(&wg0, &rg0), "write/read of the same global conflicts");
+    assert!(!independent(&wg0, &wg0), "write/write conflicts");
+    assert!(independent(&wg0, &wg1), "disjoint globals commute");
+
+    let send1 = op_effects(&Op::Send(CExpr::Num(1), vec![]));
+    let recv1 = op_effects(&Op::Recv(CExpr::Num(1), vec![]));
+    let send2 = op_effects(&Op::Send(CExpr::Num(2), vec![]));
+    assert!(!independent(&send1, &recv1), "same channel conflicts");
+    assert!(independent(&send2, &recv1), "distinct channels commute");
+    assert!(!independent(&local_a, &op_effects(&Op::Run(0, vec![]))), "spawns never commute");
+}
+
+// ----------------------------------------------- liveness on automata --
+
+fn instr(op: Op, next: u32) -> Instr {
+    Instr { op, next, atomic_next: false }
+}
+
+/// Hand-built single-proc program: `t = 1; t = 2; g = t; halt` — the
+/// first store to `t` is provably dead.
+fn tiny_prog() -> Program {
+    let code = vec![
+        instr(Op::Assign(CLVal::Scalar(Slot::Local(0), VarType::Int), CExpr::Num(1)), 1),
+        instr(Op::Assign(CLVal::Scalar(Slot::Local(0), VarType::Int), CExpr::Num(2)), 2),
+        instr(
+            Op::Assign(
+                CLVal::Scalar(Slot::Global(0), VarType::Int),
+                CExpr::Load(Slot::Local(0)),
+            ),
+            3,
+        ),
+        instr(Op::Halt, NO_PC),
+    ];
+    let mut global_syms = HashMap::new();
+    global_syms.insert("g".to_string(), VarInfo { offset: 0, len: 1, ty: VarType::Int });
+    Program {
+        mtypes: vec![],
+        global_syms,
+        globals_init: vec![0],
+        global_chans: vec![],
+        procs: vec![ProcDef {
+            name: "main".into(),
+            nparams: 0,
+            param_types: vec![],
+            nlocals: 1,
+            code,
+            entry: 0,
+            locals: vec![("t".into(), VarInfo { offset: 0, len: 1, ty: VarType::Int })],
+        }],
+        active: vec![0],
+    }
+}
+
+#[test]
+fn liveness_fixpoint_proves_the_dead_store() {
+    let prog = tiny_prog();
+    let a = Analysis::of(&prog);
+    // `t` is dead entering both stores (each is overwritten before a read)
+    assert!(a.slot_dead_at(0, 0, 0), "t dead entering `t = 1`");
+    assert!(a.slot_dead_at(0, 1, 0), "t dead entering `t = 2`");
+    assert!(a.live_at(0, 2).contains(0), "t live entering `g = t`");
+    // POR: the two local stores are ample-eligible, the global write is not
+    assert!(a.por_safe(0, 0) && a.por_safe(0, 1));
+    assert!(!a.por_safe(0, 2), "global write is visible");
+    assert!(!a.por_safe(0, 3), "Halt as the resting op is never ample");
+
+    let diags = diagnostics(&prog);
+    let dead: Vec<_> = diags.iter().filter(|d| d.category == "dead-store").collect();
+    assert_eq!(dead.len(), 1, "exactly the first store is dead: {:?}", diags);
+    assert_eq!(dead[0].pc, Some(0));
+    assert!(dead[0].message.contains('t'), "names the source local: {}", dead[0].message);
+    assert!(
+        diags.iter().any(|d| d.category == "global-write-only" && d.severity == Severity::Info),
+        "write-only `g` is an info, not a warning"
+    );
+}
+
+// --------------------------------------------------------- lint gate --
+
+#[test]
+fn generated_templates_are_lint_clean() {
+    for (name, src) in [
+        ("minimum", templates::minimum_pml(8, 4, 3)),
+        ("abstract", templates::abstract_pml(8, &PlatformConfig { nd: 1, nu: 1, np: 2, gmt: 2 })),
+    ] {
+        let sys = PromelaSystem::from_source(&src).unwrap();
+        let warns: Vec<_> = diagnostics(&sys.prog)
+            .into_iter()
+            .filter(|d| d.severity == Severity::Warn)
+            .collect();
+        assert!(warns.is_empty(), "{} template must pass `lint --deny`: {:?}", name, warns);
+    }
+}
+
+#[test]
+fn dirty_model_fires_the_expected_categories() {
+    let src = "int WG; int TS; int unused_g;\n\
+               chan c = [2] of {byte};\n\
+               active proctype main() { int t; if :: 0 -> t = 1 :: else -> t = 2 fi }";
+    let sys = PromelaSystem::from_source(src).unwrap();
+    let diags = diagnostics(&sys.prog);
+    for want in
+        ["tuning-unassigned", "global-unused", "chan-never-sent", "local-unused", "guard-false"]
+    {
+        assert!(
+            diags.iter().any(|d| d.category == want),
+            "expected a `{}` diagnostic, got {:?}",
+            want,
+            diags
+        );
+    }
+    assert!(
+        diags.iter().filter(|d| d.category == "tuning-unassigned").count() == 2,
+        "both WG and TS are unassigned"
+    );
+}
+
+#[test]
+fn lint_json_satisfies_and_enforces_its_schema() {
+    let src = "int WG; int TS;\nactive proctype main() { int t; t = 1 }";
+    let sys = PromelaSystem::from_source(src).unwrap();
+    let diags = diagnostics(&sys.prog);
+    let j = lint_json("dirty.pml", &sys.prog, &diags);
+    validate_lint_json(&j).expect("emitted report must satisfy its own schema");
+    // the document round-trips through the JSON text layer
+    let parsed = Json::parse(&j.render()).unwrap();
+    validate_lint_json(&parsed).unwrap();
+
+    // tampering with the summary counts must be rejected
+    let Json::Obj(fields) = &j else { panic!("lint doc is an object") };
+    let tampered: Vec<(String, Json)> = fields
+        .iter()
+        .map(|(k, v)| {
+            if k == "summary" {
+                (k.clone(), Json::Obj(vec![
+                    ("warns".to_string(), Json::Int(99)),
+                    ("infos".to_string(), Json::Int(0)),
+                ]))
+            } else {
+                (k.clone(), v.clone())
+            }
+        })
+        .collect();
+    assert!(validate_lint_json(&Json::Obj(tampered)).is_err(), "bad summary must fail");
+    assert!(
+        validate_lint_json(&Json::Obj(vec![(
+            "tool".to_string(),
+            Json::Str("not-lint".into())
+        )]))
+        .is_err(),
+        "wrong tool tag must fail"
+    );
+}
+
+// ------------------------------------------- degenerate-lattice guard --
+
+#[test]
+fn untunable_sources_error_before_any_search() {
+    // never assigned and zero-initialized: degenerate lattice
+    let mut job = TuningJob::new(ModelKind::Minimum, 8);
+    job.engine = JobEngine::Promela;
+    job.source =
+        Some("int WG; int TS; bool FIN;\nactive proctype main() { FIN = 1 }".into());
+    let err = job.build().unwrap_err().to_string();
+    assert!(err.contains("never assigned"), "plan-time error names the cause: {}", err);
+    assert!(err.contains("lint"), "error points at the lint command: {}", err);
+
+    // not declared at all
+    job.source = Some("bool FIN;\nactive proctype main() { FIN = 1 }".into());
+    let err = job.build().unwrap_err().to_string();
+    assert!(err.contains("not declared"), "{}", err);
+
+    // positive initializers count as assignment (preset-tuning sources)
+    job.source =
+        Some("int WG = 2; int TS = 2; bool FIN;\nactive proctype main() { FIN = 1 }".into());
+    job.build().expect("initialized tuning slots form a valid lattice");
+
+    // the generated templates assign WG/TS via the tuner choice points
+    let sys = PromelaSystem::from_source(&templates::minimum_pml(8, 4, 3)).unwrap();
+    require_tunable(&sys.prog).unwrap();
+}
+
+// ------------------------------------------------ reduction: verdicts --
+
+fn opts_dfs() -> CheckOptions {
+    CheckOptions { collect_all: true, ..CheckOptions::default() }
+}
+
+fn opts_det4() -> CheckOptions {
+    CheckOptions {
+        collect_all: true,
+        threads: 4,
+        frontier: Frontier::Deterministic,
+        ..CheckOptions::default()
+    }
+}
+
+#[test]
+fn dead_slot_reduction_preserves_verdicts_on_the_full_corpus() {
+    for (name, src, prop) in corpus() {
+        let prop = SafetyLtl::parse(prop).unwrap();
+        let base_i = PromelaSystem::from_source(&src).unwrap();
+        let base_v = PromelaVm::from_source(&src).unwrap();
+        let red_i = PromelaSystem::from_source(&src).unwrap().with_dead_slot_reduction();
+        let red_v = PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction();
+        for (label, opts) in [("dfs", opts_dfs()), ("det4", opts_det4())] {
+            let bi = check(&base_i, &prop, &opts).unwrap();
+            let bv = check(&base_v, &prop, &opts).unwrap();
+            let ri = check(&red_i, &prop, &opts).unwrap();
+            let rv = check(&red_v, &prop, &opts).unwrap();
+            assert_eq!(bi.found(), ri.found(), "{}/{}: interp verdict", name, label);
+            assert_eq!(bv.found(), rv.found(), "{}/{}: vm verdict", name, label);
+            assert_eq!(bi.exhausted, ri.exhausted, "{}/{}: interp exhausted", name, label);
+            assert_eq!(bv.exhausted, rv.exhausted, "{}/{}: vm exhausted", name, label);
+            assert!(
+                ri.stats.states_stored <= bi.stats.states_stored,
+                "{}/{}: reduction may only shrink the store ({} > {})",
+                name, label, ri.stats.states_stored, bi.stats.states_stored
+            );
+            assert_eq!(
+                ri.stats.states_stored, rv.stats.states_stored,
+                "{}/{}: both reduced engines store the same count",
+                name, label
+            );
+        }
+    }
+}
+
+#[test]
+fn por_preserves_verdicts_on_the_full_corpus() {
+    // sequential engine only: that is the validated scope of `--por`
+    let base = opts_dfs();
+    let por = CheckOptions { por: true, ..opts_dfs() };
+    for (name, src, prop) in corpus() {
+        let prop = SafetyLtl::parse(prop).unwrap();
+        let interp = PromelaSystem::from_source(&src).unwrap();
+        let vm = PromelaVm::from_source(&src).unwrap();
+        let bi = check(&interp, &prop, &base).unwrap();
+        let pi = check(&interp, &prop, &por).unwrap();
+        let bv = check(&vm, &prop, &base).unwrap();
+        let pv = check(&vm, &prop, &por).unwrap();
+        assert_eq!(bi.found(), pi.found(), "{}: interp verdict under por", name);
+        assert_eq!(bv.found(), pv.found(), "{}: vm verdict under por", name);
+        assert_eq!(bi.exhausted, pi.exhausted, "{}: interp exhausted under por", name);
+        assert_eq!(bv.exhausted, pv.exhausted, "{}: vm exhausted under por", name);
+        assert!(
+            pi.stats.states_stored <= bi.stats.states_stored,
+            "{}: por may only shrink the store ({} > {})",
+            name, pi.stats.states_stored, bi.stats.states_stored
+        );
+        assert_eq!(
+            pi.stats.states_stored, pv.stats.states_stored,
+            "{}: both reduced engines store the same count",
+            name
+        );
+    }
+}
+
+/// Anti-no-op pins: at least these corpus models must show a *strict*
+/// drop, so a regression that silently disables either reduction fails.
+#[test]
+fn pinned_models_show_strict_state_reduction() {
+    // dead-slots: the two `t` copies of atomic-increment die after their
+    // atomic blocks, collapsing symmetric final states
+    let src = "int x;\nactive proctype main() { run a(); run b() }\n\
+               proctype a() { int t; atomic { t = x; x = t + 1 } }\n\
+               proctype b() { int t; atomic { t = x; x = t + 1 } }";
+    let prop = SafetyLtl::parse("G(x != 2)").unwrap();
+    let base = check(&PromelaVm::from_source(src).unwrap(), &prop, &opts_dfs()).unwrap();
+    let red = check(
+        &PromelaVm::from_source(src).unwrap().with_dead_slot_reduction(),
+        &prop,
+        &opts_dfs(),
+    )
+    .unwrap();
+    assert!(
+        red.stats.states_stored < base.stats.states_stored,
+        "dead-slots must strictly reduce atomic-increment ({} vs {})",
+        red.stats.states_stored,
+        base.stats.states_stored
+    );
+    let redi = check(
+        &PromelaSystem::from_source(src).unwrap().with_dead_slot_reduction(),
+        &prop,
+        &opts_dfs(),
+    )
+    .unwrap();
+    assert_eq!(redi.stats.states_stored, red.stats.states_stored);
+
+    // por: minimum-8 has local-only forward stretches (loop initializers)
+    // that serve as singleton ample sets
+    let src = templates::minimum_pml(8, 4, 3);
+    let prop = SafetyLtl::parse("G(!FIN)").unwrap();
+    let por = CheckOptions { por: true, ..opts_dfs() };
+    let base = check(&PromelaVm::from_source(&src).unwrap(), &prop, &opts_dfs()).unwrap();
+    let reduced = check(&PromelaVm::from_source(&src).unwrap(), &prop, &por).unwrap();
+    assert!(
+        reduced.stats.states_stored < base.stats.states_stored,
+        "por must strictly reduce minimum-8 ({} vs {})",
+        reduced.stats.states_stored,
+        base.stats.states_stored
+    );
+    let reduced_i = check(&PromelaSystem::from_source(&src).unwrap(), &prop, &por).unwrap();
+    assert_eq!(reduced_i.stats.states_stored, reduced.stats.states_stored);
+}
+
+// -------------------------------------------------- reduction: optima --
+
+#[test]
+fn reductions_preserve_the_tuning_optimum() {
+    let src = templates::minimum_pml(8, 4, 3);
+    let swarm = SwarmConfig::default();
+    let plain = CheckOptions::default();
+    let por = CheckOptions { por: true, ..CheckOptions::default() };
+
+    let base = tune(
+        &PromelaVm::from_source(&src).unwrap(),
+        Method::Exhaustive,
+        &plain,
+        &swarm,
+        Some(10_000),
+    )
+    .unwrap();
+    let want = (base.optimal.wg, base.optimal.ts, base.t_min);
+
+    for (label, model, opts) in [
+        ("vm+por", PromelaVm::from_source(&src).unwrap(), &por),
+        ("vm+dead-slots", PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction(), &plain),
+    ] {
+        let r = tune(&model, Method::Exhaustive, opts, &swarm, Some(10_000)).unwrap();
+        assert_eq!((r.optimal.wg, r.optimal.ts, r.t_min), want, "{}: optimum", label);
+    }
+    for (label, model, opts) in [
+        ("interp+por", PromelaSystem::from_source(&src).unwrap(), &por),
+        (
+            "interp+dead-slots",
+            PromelaSystem::from_source(&src).unwrap().with_dead_slot_reduction(),
+            &plain,
+        ),
+    ] {
+        let r = tune(&model, Method::Exhaustive, opts, &swarm, Some(10_000)).unwrap();
+        assert_eq!((r.optimal.wg, r.optimal.ts, r.t_min), want, "{}: optimum", label);
+    }
+}
+
+// ------------------------------------------------- default-path guard --
+
+/// With the flag off the analysis is never consulted; with it on, states
+/// whose dead slots are already zero must encode byte-identically — the
+/// canonicalization only ever rewrites nonzero garbage.
+#[test]
+fn default_encodings_are_untouched_and_initial_states_are_canonical() {
+    for (name, src, _) in corpus() {
+        let base = PromelaVm::from_source(&src).unwrap();
+        let red = PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction();
+        let s = base.initial_states().pop().unwrap();
+        let sr = red.initial_states().pop().unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        base.encode(&s, &mut a);
+        red.encode(&sr, &mut b);
+        assert_eq!(a, b, "{}: initial-state locals start zeroed on both paths", name);
+
+        let base = PromelaSystem::from_source(&src).unwrap();
+        let red = PromelaSystem::from_source(&src).unwrap().with_dead_slot_reduction();
+        let s = base.initial_states().pop().unwrap();
+        let sr = red.initial_states().pop().unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        base.encode(&s, &mut a);
+        red.encode(&sr, &mut b);
+        assert_eq!(a, b, "{}: interp initial-state encodings agree", name);
+    }
+}

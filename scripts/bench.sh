@@ -8,8 +8,11 @@
 #   MCAT_BENCH_SIZE=128 scripts/bench.sh # smaller model (CI smoke)
 #
 # JSON format: {bench, model, states, speedup_par4_vs_seq,
+# reduction_por_states_ratio, reduction_deadslots_states_ratio,
 # results: [{name, iters, mean_ns, per_sec}]} — one entry per bench case,
-# sequential + parallel exploration throughput first.
+# sequential + parallel exploration throughput first. The two reduction
+# ratios are reduced/baseline states_stored on the Promela minimum model
+# (1.0 = the reduction degraded to a no-op).
 set -euo pipefail
 if ! command -v cargo >/dev/null 2>&1; then
   echo "error: cargo not found — measuring BENCH_checker.json needs a Rust toolchain" >&2
