@@ -6,7 +6,9 @@
 //! `MCAT_BENCH_SIZE` shrinks the model for smoke runs (CI uses 128);
 //! `MCAT_BENCH_FAST=1` shrinks the measurement budget (see util::bench).
 
-use mcautotune::checker::{check_parallel, check_sequential, CheckOptions, StoreKind, VisitedStore};
+use mcautotune::checker::{
+    check_parallel, check_sequential, CheckOptions, Compression, StoreKind, VisitedStore,
+};
 use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
 use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
 use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
@@ -163,6 +165,47 @@ fn main() {
         pml_base_states, por_states, deadslots_states
     );
 
+    // --- store regimes: COLLAPSE compression + disk spill ----------------
+    // compression_bytes_ratio is collapse/full resident store bytes at
+    // identical coverage (< 1.0 means the component interning pays);
+    // spill_slowdown_ratio is spill/full explore time under a memory
+    // budget low enough to force frozen runs to disk — the I/O price of
+    // completing a search the in-RAM store could not.
+    b.bench_elems("explore/pml-seq", pml_base_states, || {
+        check_sequential(&pml_vm, &pml_prop, &seq_opts).unwrap().stats.states_stored
+    });
+    let full_rep = check_sequential(&pml_vm, &pml_prop, &seq_opts).unwrap();
+    let col_opts = CheckOptions { compress: Compression::Collapse, ..CheckOptions::default() };
+    let col_rep = check_sequential(&pml_vm, &pml_prop, &col_opts).unwrap();
+    assert_eq!(
+        col_rep.stats.states_stored, full_rep.stats.states_stored,
+        "collapse changed coverage"
+    );
+    b.bench_elems("explore/collapse", pml_base_states, || {
+        check_sequential(&pml_vm, &pml_prop, &col_opts).unwrap().stats.states_stored
+    });
+    let spill_dir = std::env::temp_dir().join(format!("mcat_bench_spill_{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).ok();
+    let spill_opts = CheckOptions {
+        store: StoreKind::Spill,
+        spill_dir: Some(spill_dir.clone()),
+        memory_budget: 512 << 10, // watermark 256 KiB: forces runs to disk
+        ..CheckOptions::default()
+    };
+    let spill_rep = check_sequential(&pml_vm, &pml_prop, &spill_opts).unwrap();
+    assert_eq!(
+        spill_rep.stats.states_stored, full_rep.stats.states_stored,
+        "spill changed coverage"
+    );
+    b.bench_elems("explore/spill", pml_base_states, || {
+        check_sequential(&pml_vm, &pml_prop, &spill_opts).unwrap().stats.states_stored
+    });
+    std::fs::remove_dir_all(&spill_dir).ok();
+    println!(
+        "promela store regimes: full {} bytes, collapse {} bytes, spill {} resident bytes",
+        full_rep.stats.bytes_used, col_rep.stats.bytes_used, spill_rep.stats.bytes_used
+    );
+
     // --- arena Full-store inserts (fresh + duplicate probes) ------------
     let items: Vec<[u8; 24]> = (0..100_000u64)
         .map(|i| {
@@ -221,6 +264,20 @@ fn main() {
         "  \"reduction_deadslots_states_ratio\": {:.3},\n",
         ratio(deadslots_states)
     ));
+    let compression_bytes_ratio = if full_rep.stats.bytes_used > 0 {
+        col_rep.stats.bytes_used as f64 / full_rep.stats.bytes_used as f64
+    } else {
+        0.0
+    };
+    let spill_slowdown = match (mean_of("explore/pml-seq"), mean_of("explore/spill")) {
+        (Some(f), Some(s)) if f > 0.0 => s / f,
+        _ => 0.0,
+    };
+    json.push_str(&format!(
+        "  \"compression_bytes_ratio\": {:.3},\n",
+        compression_bytes_ratio
+    ));
+    json.push_str(&format!("  \"spill_slowdown_ratio\": {:.3},\n", spill_slowdown));
     json.push_str("  \"results\": [\n");
     let n = b.results().len();
     for (i, r) in b.results().iter().enumerate() {

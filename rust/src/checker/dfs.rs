@@ -18,10 +18,12 @@
 //! The multi-threaded engine built on the same report types lives in
 //! [`super::parallel`].
 
-use super::store::{StoreKind, VisitedStore};
+use super::store::{Compression, StoreKind, VisitedStore};
 use crate::model::{EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};
 use crate::util::error::Result;
+use crate::util::hash::hash_bytes;
 use crate::util::rng::Xoshiro256;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,13 +76,24 @@ pub struct CheckOptions {
     pub expected_states: u64,
     /// parallel frontier scheduling (see [`Frontier`])
     pub frontier: Frontier,
-    /// opt-in partial-order reduction (ample sets) — sequential DFS only.
-    /// Expansion goes through [`TransitionSystem::reduced_successors`];
-    /// models that do not implement it explore the full space unchanged.
-    /// Safety-preserving for the supported stutter-insensitive property
-    /// fragment (see `promela::analysis`); state counts differ from the
-    /// SPIN-faithful default, which is why this is off unless asked for.
+    /// opt-in partial-order reduction (ample sets) — sequential DFS or
+    /// the deterministic frontier (`--frontier det`), where ample
+    /// selection is itself deterministic. Expansion goes through
+    /// [`TransitionSystem::reduced_successors`]; models that do not
+    /// implement it explore the full space unchanged. Safety-preserving
+    /// for the supported stutter-insensitive property fragment (see
+    /// `promela::analysis`); state counts differ from the SPIN-faithful
+    /// default, which is why this is off unless asked for.
     pub por: bool,
+    /// opt-in state-vector compression on exact stores (`--compress`).
+    /// `Collapse` requires `StoreKind::Full` and models that provide a
+    /// region split (`encode_regions`); verdicts, violation order, and
+    /// trails are unchanged — only `bytes_used` shrinks.
+    pub compress: Compression,
+    /// directory for `StoreKind::Spill` run files (None = system temp
+    /// dir). The store freezes its RAM table there past
+    /// `memory_budget / 2` and keeps searching.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for CheckOptions {
@@ -98,6 +111,8 @@ impl Default for CheckOptions {
             expected_states: 0,
             frontier: Frontier::Async,
             por: false,
+            compress: Compression::None,
+            spill_dir: None,
         }
     }
 }
@@ -126,6 +141,32 @@ impl CheckOptions {
             hint / 2
         } else {
             hint
+        }
+    }
+
+    /// Reject store/compression combinations that have no implementation.
+    pub(super) fn validate_store(&self) -> Result<()> {
+        if self.compress == Compression::Collapse && self.store != StoreKind::Full {
+            crate::bail!("--compress collapse requires --store full");
+        }
+        Ok(())
+    }
+
+    /// Build the visited store this run asked for — the exact tiers honor
+    /// `compress` and `spill_dir`. Callers validate the combination first
+    /// ([`validate_store`](Self::validate_store)).
+    pub(super) fn build_store(&self) -> VisitedStore {
+        match (self.store, self.compress) {
+            (StoreKind::Full, Compression::Collapse) => {
+                VisitedStore::collapsed(self.presize_hint())
+            }
+            (StoreKind::Spill, _) => {
+                let dir = self.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+                // half the budget for the RAM table, the rest for the
+                // search stack / frontier and the per-run RAM residue
+                VisitedStore::spill(&dir, self.memory_budget / 2)
+            }
+            _ => VisitedStore::with_capacity(self.store, self.presize_hint()),
         }
     }
 }
@@ -217,9 +258,10 @@ pub fn check<M: TransitionSystem>(
     opts: &CheckOptions,
 ) -> Result<CheckReport<M::State>> {
     let start = Instant::now();
+    opts.validate_store()?;
     let compiled = prop.compile(model)?;
     let mut scratch = EvalScratch::default();
-    let mut store = VisitedStore::with_capacity(opts.store, opts.presize_hint());
+    let mut store = opts.build_store();
     let mut stats = SearchStats::default();
     let mut violations = Vec::new();
     let mut exhausted = true;
@@ -228,6 +270,10 @@ pub fn check<M: TransitionSystem>(
         Order::InOrder => None,
     };
     let mut enc = Vec::with_capacity(64);
+    // region bounds for collapse compression (unused, and uncomputed,
+    // on every other store)
+    let collapse = opts.compress == Compression::Collapse;
+    let mut bounds: Vec<u32> = Vec::new();
     // telemetry high-water marks; see flush_search_metrics
     let mut flushed = (0u64, 0u64, 0u64);
     // states expanded through a proper ample subset (--por)
@@ -263,7 +309,10 @@ pub fn check<M: TransitionSystem>(
 
     'outer: for init in model.initial_states() {
         model.encode(&init, &mut enc);
-        if !store.insert(&enc) {
+        if collapse {
+            model.encode_regions(&init, &mut bounds);
+        }
+        if !store.insert_regions(&enc, hash_bytes(&enc), &bounds) {
             stats.states_matched += 1;
             continue;
         }
@@ -300,7 +349,10 @@ pub fn check<M: TransitionSystem>(
             };
 
             model.encode(&s, &mut enc);
-            if !store.insert(&enc) {
+            if collapse {
+                model.encode_regions(&s, &mut bounds);
+            }
+            if !store.insert_regions(&enc, hash_bytes(&enc), &bounds) {
                 stats.states_matched += 1;
                 continue;
             }
@@ -559,6 +611,51 @@ mod tests {
         let m = Tree { depth: 3 };
         let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
         assert!(check(&m, &p, &CheckOptions::default()).is_err());
+    }
+
+    #[test]
+    fn collapse_is_exact_even_without_a_region_split() {
+        // Tree keeps the default encode_regions (one region): compression
+        // degrades to indirection but every decision must match Full
+        let m = Tree { depth: 10 };
+        let p = SafetyLtl::parse("G(!leaf)").unwrap();
+        let mut o = CheckOptions::default();
+        o.collect_all = true;
+        let base = check(&m, &p, &o).unwrap();
+        o.compress = Compression::Collapse;
+        let col = check(&m, &p, &o).unwrap();
+        assert_eq!(base.stats.states_stored, col.stats.states_stored);
+        assert_eq!(base.stats.states_matched, col.stats.states_matched);
+        assert_eq!(base.violations.len(), col.violations.len());
+        assert_eq!(base.exhausted, col.exhausted);
+        for (a, b) in base.violations.iter().zip(&col.violations) {
+            assert_eq!(a.trail.states, b.trail.states);
+        }
+    }
+
+    #[test]
+    fn collapse_requires_full_store() {
+        let m = Tree { depth: 3 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.compress = Compression::Collapse;
+        o.store = StoreKind::HashCompact;
+        assert!(check(&m, &p, &o).is_err());
+    }
+
+    #[test]
+    fn spill_survives_a_memory_budget_that_kills_full() {
+        let m = Tree { depth: 14 };
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = CheckOptions::default();
+        o.memory_budget = 1 << 20; // 1 MiB: too small for 32k stored states
+        let full = check(&m, &p, &o).unwrap();
+        assert_eq!(full.stats.abort, Some(Abort::MemoryLimit));
+        assert!(!full.exhausted);
+        o.store = StoreKind::Spill;
+        let sp = check(&m, &p, &o).unwrap();
+        assert!(sp.exhausted, "spill store must absorb the overflow: {:?}", sp.stats.abort);
+        assert_eq!(sp.stats.states_stored, 2u64.pow(15) - 1);
     }
 
     #[test]

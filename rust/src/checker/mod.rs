@@ -22,7 +22,7 @@ pub use dfs::{
     check as check_sequential, Abort, CheckOptions, CheckReport, Frontier, Order, SearchStats,
 };
 pub use parallel::check_parallel;
-pub use store::{StoreKind, VisitedStore};
+pub use store::{Compression, StoreKind, VisitedStore};
 
 use crate::model::{SafetyLtl, TransitionSystem};
 use crate::util::error::Result;
@@ -49,13 +49,21 @@ where
     let parallel_engine =
         opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic;
     if parallel_engine && !matches!(opts.store, StoreKind::Bitstate { .. }) {
-        if opts.por {
-            // ample-set reduction is specified and differentially
-            // validated against the sequential DFS only; keep the
-            // parallel frontier SPIN-faithful until it gets its own
-            // validation suite
+        if opts.por && opts.frontier != Frontier::Deterministic {
+            // ample-set reduction is validated on the two engines whose
+            // exploration (and thus ample selection) is deterministic:
+            // the sequential DFS and the depth-synchronous frontier. The
+            // async work-stealing frontier stays SPIN-faithful — its
+            // schedule-dependent order would make the reduced state count
+            // (and any reduction bug) irreproducible
             crate::bail!(
-                "--por requires the sequential engine (threads=1, async frontier)"
+                "--por requires a deterministic engine (threads=1, or --frontier det)"
+            );
+        }
+        if opts.store == StoreKind::Spill {
+            // the spill store is a single-owner sequential structure
+            crate::bail!(
+                "--store spill requires the sequential engine (threads=1, async frontier)"
             );
         }
         parallel::check_parallel(model, prop, opts)

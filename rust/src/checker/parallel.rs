@@ -11,7 +11,9 @@
 //!   low bits, so shard routing costs no extra hashing and inserts on
 //!   different shards never contend. Supports the exact regimes: `Full`
 //!   (arena store + backlink map) and `HashCompact` (the backlink map's
-//!   key set doubles as the visited set). `Bitstate` is deliberately *not*
+//!   key set doubles as the visited set); under `--compress collapse` the
+//!   `Full` regime swaps in per-shard [`CollapseStore`]s (still exact —
+//!   see [`Shard`]). `Bitstate` is deliberately *not*
 //!   sharded: a shared Bloom filter would make every worker's false
 //!   positives prune every other worker's frontier, destroying the
 //!   independence that gives swarm verification its coverage guarantees —
@@ -43,7 +45,7 @@
 //! count.
 
 use super::dfs::{self, Abort, CheckOptions, CheckReport, Frontier, Order, SearchStats};
-use super::store::{FullStore, StoreKind, VisitedStore};
+use super::store::{CollapseStore, Compression, FullStore, StoreKind, VisitedStore};
 use crate::model::{CompiledProp, EvalScratch, SafetyLtl, Trail, TransitionSystem, Violation};
 use crate::util::error::{Error, Result};
 use crate::util::hash::{hash_bytes, FxHashMap};
@@ -67,6 +69,13 @@ const LOCAL_MAX: usize = 2 * BATCH;
 struct Shard {
     /// exact byte-level dedup (None = HashCompact: dedup by map key)
     full: Option<FullStore>,
+    /// COLLAPSE-compressed dedup (`--compress collapse`): takes the place
+    /// of `full`. Component tables are per-shard, so cross-shard region
+    /// sharing is lost — the compression ratio degrades by at most the
+    /// shard count in the worst case, but dedup stays exact (tuple
+    /// equality ⟺ raw-encoding equality within a shard, and distinct
+    /// shards only ever see distinct hashes).
+    collapse: Option<CollapseStore>,
     parents: FxHashMap<u64, u64>,
 }
 
@@ -86,11 +95,17 @@ impl ShardedStore {
     /// (plus 25% slack for imbalance) and its arena table starts at the
     /// matching power of two — the first inserts never rehash under the
     /// shard lock.
-    fn new(kind: StoreKind, want_shards: usize, expected_states: u64) -> Self {
+    fn new(
+        kind: StoreKind,
+        compress: Compression,
+        want_shards: usize,
+        expected_states: u64,
+    ) -> Self {
         let n = want_shards.max(2).next_power_of_two();
         let per_shard =
             ((expected_states / n as u64).saturating_mul(5) / 4).min(1 << 24) as usize;
-        let full = matches!(kind, StoreKind::Full);
+        let collapsed = compress == Compression::Collapse;
+        let full = matches!(kind, StoreKind::Full) && !collapsed;
         let shards = (0..n)
             .map(|_| {
                 Mutex::new(Shard {
@@ -99,6 +114,13 @@ impl ShardedStore {
                             FullStore::with_capacity(per_shard)
                         } else {
                             FullStore::new()
+                        }
+                    }),
+                    collapse: collapsed.then(|| {
+                        if per_shard > 0 {
+                            CollapseStore::with_capacity(per_shard)
+                        } else {
+                            CollapseStore::new()
                         }
                     }),
                     parents: FxHashMap::with_capacity_and_hasher(per_shard, Default::default()),
@@ -114,32 +136,48 @@ impl ShardedStore {
     }
 
     /// Insert an encoded state (hash precomputed); records the parent
-    /// backlink when new. Returns true when the state was not seen before.
-    fn insert(&self, enc: &[u8], h: u64, parent: u64) -> bool {
+    /// backlink when new. `bounds` is the region split for the collapse
+    /// regime (empty otherwise — an empty split is the exact fallback).
+    /// Returns true when the state was not seen before.
+    fn insert(&self, enc: &[u8], h: u64, bounds: &[u32], parent: u64) -> bool {
         let mut guard = self.shards[self.shard_of(h)].lock().expect("shard poisoned");
-        let sh = &mut *guard; // reborrow so the two fields split cleanly
-        let new = match &mut sh.full {
-            Some(fs) => {
-                if fs.insert_hashed(enc, h) {
-                    // on a (astronomically rare) 64-bit collision keep the
-                    // first backlink so existing chains stay intact
-                    sh.parents.entry(h).or_insert(parent);
-                    true
-                } else {
-                    false
-                }
+        let sh = &mut *guard; // reborrow so the fields split cleanly
+        let new = if let Some(cs) = &mut sh.collapse {
+            if cs.insert_hashed(enc, h, bounds) {
+                sh.parents.entry(h).or_insert(parent);
+                true
+            } else {
+                false
             }
-            None => match sh.parents.entry(h) {
+        } else if let Some(fs) = &mut sh.full {
+            if fs.insert_hashed(enc, h) {
+                // on a (astronomically rare) 64-bit collision keep the
+                // first backlink so existing chains stay intact
+                sh.parents.entry(h).or_insert(parent);
+                true
+            } else {
+                false
+            }
+        } else {
+            match sh.parents.entry(h) {
                 Entry::Occupied(_) => false,
                 Entry::Vacant(v) => {
                     v.insert(parent);
                     true
                 }
-            },
+            }
         };
         if new {
-            // arena bytes + entry + table slot (Full only) + backlink entry
-            let delta = if sh.full.is_some() { enc.len() as u64 + 28 + 24 } else { 24 };
+            // arena bytes + entry + table slot (Full), index tuple + entry
+            // (Collapse: component growth is amortized into the exact
+            // sweep), or just the backlink entry (HashCompact)
+            let delta = if sh.collapse.is_some() {
+                (bounds.len() as u64 + 1) * 4 + 28 + 24
+            } else if sh.full.is_some() {
+                enc.len() as u64 + 28 + 24
+            } else {
+                24
+            };
             self.approx_bytes.fetch_add(delta, Ordering::Relaxed);
         }
         new
@@ -165,6 +203,7 @@ impl ShardedStore {
                 let sh = s.lock().expect("shard poisoned");
                 // ~24 B/entry for the backlink map (key + value + bucket)
                 sh.full.as_ref().map_or(0, |fs| fs.bytes_used())
+                    + sh.collapse.as_ref().map_or(0, |cs| cs.bytes_used())
                     + sh.parents.len() as u64 * 24
             })
             .sum()
@@ -315,10 +354,19 @@ where
     if threads == 1 {
         return dfs::check(model, prop, opts);
     }
+    opts.validate_store()?;
+    if opts.store == StoreKind::Spill {
+        crate::bail!("--store spill requires the sequential engine (threads=1, async frontier)");
+    }
+    if opts.por {
+        crate::bail!("--por requires a deterministic engine (threads=1, or --frontier det)");
+    }
 
     let start = Instant::now();
     let compiled = prop.compile(model)?;
-    let store = ShardedStore::new(opts.store, threads as usize * 8, opts.presize_hint());
+    let collapse = opts.compress == Compression::Collapse;
+    let store =
+        ShardedStore::new(opts.store, opts.compress, threads as usize * 8, opts.presize_hint());
     let ctl = Control {
         stop: AtomicBool::new(false),
         idle: AtomicUsize::new(0),
@@ -334,11 +382,15 @@ where
     let mut seed_tasks: Vec<Task<M::State>> = Vec::new();
     {
         let mut enc = Vec::with_capacity(64);
+        let mut bounds: Vec<u32> = Vec::new();
         let mut scratch = EvalScratch::default();
         for init in model.initial_states() {
             model.encode(&init, &mut enc);
+            if collapse {
+                model.encode_regions(&init, &mut bounds);
+            }
             let h = hash_bytes(&enc);
-            if !store.insert(&enc, h, ROOT) {
+            if !store.insert(&enc, h, &bounds, ROOT) {
                 seed_stats.matched += 1;
                 continue;
             }
@@ -475,6 +527,8 @@ where
     let mut local: Vec<Task<M::State>> = Vec::new();
     let mut succs: Vec<M::State> = Vec::new();
     let mut enc: Vec<u8> = Vec::with_capacity(64);
+    let collapse = opts.compress == Compression::Collapse;
+    let mut bounds: Vec<u32> = Vec::new();
     let mut scratch = EvalScratch::default();
     let mut rng = match opts.order {
         Order::Random(seed) => Some(Xoshiro256::new(
@@ -508,8 +562,11 @@ where
         let child_depth = task.depth + 1;
         for s in succs.drain(..) {
             model.encode(&s, &mut enc);
+            if collapse {
+                model.encode_regions(&s, &mut bounds);
+            }
             let h = hash_bytes(&enc);
-            if !store.insert(&enc, h, task.hash) {
+            if !store.insert(&enc, h, &bounds, task.hash) {
                 stats.matched += 1;
                 continue;
             }
@@ -599,25 +656,52 @@ where
     Ok(stats)
 }
 
+/// Visited-store shard count for the deterministic engine. Fixed (not a
+/// function of the thread count) so store capacities — and therefore the
+/// deterministic `MemoryLimit` abort point — are identical across thread
+/// counts; the dedup pass runs `min(threads, DET_SHARDS)` workers over
+/// contiguous shard ranges.
+const DET_SHARDS: usize = 16;
+
 /// Deterministic-frontier engine ([`Frontier::Deterministic`]): a
 /// depth-synchronous parallel BFS.
 ///
-/// Each level's states are expanded concurrently (contiguous chunks, one
-/// per worker — `successors` is the dominant cost on the Promela engines;
-/// each worker reuses one successor buffer the model fills in place, per
-/// the `TransitionSystem::successors` buffer contract),
-/// but deduplication, property monitoring and violation recording run in
-/// one sequential merge pass in a scheduling-independent order: chunk
-/// order × task order × successor order. Consequences:
+/// Each level runs three phases, all scheduling-independent:
+///
+/// 1. **Expansion** (parallel, contiguous chunks, one per worker —
+///    `successors` is the dominant cost on the Promela engines; each
+///    worker reuses one successor buffer the model fills in place, per
+///    the `TransitionSystem::successors` buffer contract). Workers also
+///    encode and hash every child into a per-chunk arena, and apply
+///    `--por` ample selection (`reduced_successors`) — legal here because
+///    the ample subset is a pure function of the state, so the reduced
+///    graph is the same whichever worker expands it.
+/// 2. **Dedup** (parallel, hash-prefix-sharded): the visited store and
+///    backlink map are split into [`DET_SHARDS`] shards routed by the top
+///    hash bits; each dedup worker owns a contiguous shard range and
+///    walks the *full* child sequence in its global order (chunk order ×
+///    task order × successor order), claiming the children whose hash
+///    routes to it. Same-hash duplicates land in the same shard and are
+///    processed in global order, so every new/duplicate decision and
+///    every surviving backlink is exactly what a single sequential pass
+///    would produce; distinct shards only ever see distinct hashes, so no
+///    decision crosses shards. (This replaces a fully sequential merge
+///    that capped `--frontier det` scaling at Amdahl's bound.)
+/// 3. **Effects** (sequential, global order): counters, property
+///    monitoring, violation recording, frontier building, and the
+///    early-stop cuts (`!collect_all`, `max_states`, `max_errors`).
+///
+/// Consequences:
 ///
 /// - the violation sequence, the *first* violation, and the states-stored
-///   count at every early stop (`!collect_all`, `max_states`,
-///   `max_errors`) are identical run-to-run and across thread counts;
+///   count at every early stop are identical run-to-run and across thread
+///   counts (an early stop leaves post-cutoff states in the store, but
+///   nothing reported reads them);
 /// - `Order::Random(seed)` still diversifies, but the shuffle is keyed by
 ///   `seed ^ parent_hash` instead of per-worker, so it too is
 ///   reproducible;
-/// - parent backlinks are first-come in merge order, so reconstructed
-///   trails are stable as well;
+/// - parent backlinks are first-come in the global order, so
+///   reconstructed trails are stable as well;
 /// - budget aborts (time/memory) are still checked — between levels, so a
 ///   run that aborts does so at a level boundary (wall-clock aborts remain
 ///   inherently timing-dependent).
@@ -633,8 +717,28 @@ where
     M: TransitionSystem + Sync,
     M::State: Send,
 {
-    /// one chunk's expansion: (parent hash, child) pairs + transition count
-    type Expansion<S> = (Vec<(u64, S)>, u64);
+    /// One hash-prefix shard of the visited state space.
+    struct DetShard {
+        store: VisitedStore,
+        parents: FxHashMap<u64, u64>,
+    }
+
+    /// One chunk's expansion: children with encodings and hashes
+    /// precomputed in the parallel phase, so the dedup workers never
+    /// touch the model. Child `i` of a chunk is `children[i]` with
+    /// encoding `enc[offs[i-1]..offs[i]]` (`offs[-1]` = 0) and — under
+    /// collapse — region bounds `bounds[boffs[i-1]..boffs[i]]`.
+    struct Chunk<S> {
+        /// (parent hash, child hash, child state)
+        children: Vec<(u64, u64, S)>,
+        enc: Vec<u8>,
+        offs: Vec<u32>,
+        bounds: Vec<u32>,
+        boffs: Vec<u32>,
+        trans: u64,
+        /// tasks expanded through a proper ample subset (`--por`)
+        reduced: u64,
+    }
 
     /// Dedup + backlink in one step. In the `HashCompact` regime the
     /// backlink map's key set *is* the visited set (as in [`Shard`]), so
@@ -645,6 +749,7 @@ where
         parents: &mut FxHashMap<u64, u64>,
         enc: &[u8],
         h: u64,
+        bounds: &[u32],
         parent: u64,
     ) -> bool {
         if compact {
@@ -655,7 +760,7 @@ where
                     true
                 }
             }
-        } else if store.insert_hashed(enc, h) {
+        } else if store.insert_regions(enc, h, bounds) {
             parents.insert(h, parent);
             true
         } else {
@@ -663,22 +768,40 @@ where
         }
     }
 
+    if opts.store == StoreKind::Spill {
+        crate::bail!("--store spill requires the sequential engine (threads=1, async frontier)");
+    }
+    opts.validate_store()?;
     let start = Instant::now();
     let threads = opts.effective_threads().max(1) as usize;
     let compiled = prop.compile(model)?;
     let compact = matches!(opts.store, StoreKind::HashCompact);
-    let store_hint = if compact { 0 } else { opts.presize_hint() };
-    let mut store = VisitedStore::with_capacity(opts.store, store_hint);
-    let mut parents: FxHashMap<u64, u64> = FxHashMap::with_capacity_and_hasher(
-        opts.presize_hint().min(1 << 24) as usize,
-        Default::default(),
-    );
+    let collapse = opts.compress == Compression::Collapse;
+    let shift = 64 - (DET_SHARDS as u64).trailing_zeros();
+    let shard_hint = (opts.presize_hint() / DET_SHARDS as u64).saturating_mul(5) / 4;
+    let mut shards: Vec<DetShard> = (0..DET_SHARDS)
+        .map(|_| DetShard {
+            store: if compact {
+                VisitedStore::new(StoreKind::HashCompact) // unused; stays empty
+            } else if collapse {
+                VisitedStore::collapsed(shard_hint)
+            } else {
+                VisitedStore::with_capacity(opts.store, shard_hint)
+            },
+            parents: FxHashMap::with_capacity_and_hasher(
+                shard_hint.min(1 << 22) as usize,
+                Default::default(),
+            ),
+        })
+        .collect();
     let mut stats = SearchStats::default();
     let mut pend: Vec<Pending<M::State>> = Vec::new();
     let mut truncated = false;
     let mut stop = false;
+    let mut por_reduced = 0u64;
     let mut scratch = EvalScratch::default();
     let mut enc = Vec::with_capacity(64);
+    let mut seed_bounds: Vec<u32> = Vec::new();
     let mut frontier: Vec<Task<M::State>> = Vec::new();
     // telemetry deltas flush at level boundaries only (see dfs)
     let mut tele_flushed = (0u64, 0u64, 0u64);
@@ -686,8 +809,12 @@ where
     // seed level: monitor the initial states in declaration order
     for init in model.initial_states() {
         model.encode(&init, &mut enc);
+        if collapse {
+            model.encode_regions(&init, &mut seed_bounds);
+        }
         let h = hash_bytes(&enc);
-        if !insert_det(compact, &mut store, &mut parents, &enc, h, ROOT) {
+        let sh = &mut shards[(h >> shift) as usize];
+        if !insert_det(compact, &mut sh.store, &mut sh.parents, &enc, h, &seed_bounds, ROOT) {
             stats.states_matched += 1;
             continue;
         }
@@ -713,27 +840,53 @@ where
     }
 
     while !stop && !frontier.is_empty() {
-        // parallel expansion of the whole level, chunk order preserved
+        // phase 1: parallel expansion + encode/hash, chunk order preserved
         let chunk = frontier.len().div_ceil(threads);
-        let expanded: Vec<Expansion<M::State>> = std::thread::scope(|scope| {
+        let expanded: Vec<Chunk<M::State>> = std::thread::scope(|scope| {
             let handles: Vec<_> = frontier
                 .chunks(chunk)
                 .map(|tasks| {
-                    scope.spawn(move || -> Expansion<M::State> {
-                        let mut out: Vec<(u64, M::State)> = Vec::new();
+                    scope.spawn(move || -> Chunk<M::State> {
+                        let mut ch = Chunk {
+                            children: Vec::new(),
+                            enc: Vec::new(),
+                            offs: Vec::new(),
+                            bounds: Vec::new(),
+                            boffs: Vec::new(),
+                            trans: 0,
+                            reduced: 0,
+                        };
                         let mut succs: Vec<M::State> = Vec::new();
-                        let mut trans = 0u64;
+                        let mut e: Vec<u8> = Vec::with_capacity(64);
+                        let mut b: Vec<u32> = Vec::new();
                         for t in tasks {
-                            model.successors(&t.state, &mut succs);
-                            trans += succs.len() as u64;
+                            if opts.por {
+                                ch.reduced +=
+                                    u64::from(model.reduced_successors(&t.state, &mut succs));
+                            } else {
+                                model.successors(&t.state, &mut succs);
+                            }
+                            ch.trans += succs.len() as u64;
                             if let Order::Random(seed) = opts.order {
                                 // per-state seeding keeps the shuffle
                                 // independent of which worker expands it
                                 Xoshiro256::new(seed ^ t.hash).shuffle(&mut succs);
                             }
-                            out.extend(succs.drain(..).map(|s| (t.hash, s)));
+                            for s in succs.drain(..) {
+                                model.encode(&s, &mut e);
+                                let h = hash_bytes(&e);
+                                ch.enc.extend_from_slice(&e);
+                                debug_assert!(ch.enc.len() <= u32::MAX as usize);
+                                ch.offs.push(ch.enc.len() as u32);
+                                if collapse {
+                                    model.encode_regions(&s, &mut b);
+                                    ch.bounds.extend_from_slice(&b);
+                                    ch.boffs.push(ch.bounds.len() as u32);
+                                }
+                                ch.children.push((t.hash, h, s));
+                            }
                         }
-                        (out, trans)
+                        ch
                     })
                 })
                 .collect();
@@ -743,17 +896,71 @@ where
                 .collect()
         });
 
+        // phase 2: sharded dedup — see the module-level determinism
+        // argument. `fresh[g]` records whether global child `g` was new.
+        let total: usize = expanded.iter().map(|c| c.children.len()).sum();
+        let fresh: Vec<AtomicBool> = (0..total).map(|_| AtomicBool::new(false)).collect();
+        {
+            let n_workers = threads.min(DET_SHARDS).max(1);
+            let per = DET_SHARDS.div_ceil(n_workers);
+            let fresh = &fresh;
+            let expanded = &expanded;
+            std::thread::scope(|scope| {
+                for (wi, shard_range) in shards.chunks_mut(per).enumerate() {
+                    let base = wi * per;
+                    scope.spawn(move || {
+                        let lo_shard = base;
+                        let hi_shard = base + shard_range.len();
+                        let mut g = 0usize;
+                        for c in expanded {
+                            for (i, child) in c.children.iter().enumerate() {
+                                let &(parent, h, _) = child;
+                                let sid = (h >> shift) as usize;
+                                if sid >= lo_shard && sid < hi_shard {
+                                    let e_lo =
+                                        if i == 0 { 0 } else { c.offs[i - 1] as usize };
+                                    let e_hi = c.offs[i] as usize;
+                                    let bs = if collapse {
+                                        let b_lo =
+                                            if i == 0 { 0 } else { c.boffs[i - 1] as usize };
+                                        &c.bounds[b_lo..c.boffs[i] as usize]
+                                    } else {
+                                        &[][..]
+                                    };
+                                    let sh = &mut shard_range[sid - lo_shard];
+                                    if insert_det(
+                                        compact,
+                                        &mut sh.store,
+                                        &mut sh.parents,
+                                        &c.enc[e_lo..e_hi],
+                                        h,
+                                        bs,
+                                        parent,
+                                    ) {
+                                        fresh[g + i].store(true, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            g += c.children.len();
+                        }
+                    });
+                }
+            });
+        }
+
+        // phase 3: sequential effects — counters, monitoring, violations,
+        // frontier and early stops, all in the global child order
         let depth = frontier[0].depth + 1;
         frontier.clear();
-        // sequential merge: dedup, backlinks, monitoring — deterministic
         let mut level_children = 0u64;
-        'merge: for (children, trans) in expanded {
-            level_children += trans;
-            stats.transitions += trans;
-            for (parent, s) in children {
-                model.encode(&s, &mut enc);
-                let h = hash_bytes(&enc);
-                if !insert_det(compact, &mut store, &mut parents, &enc, h, parent) {
+        let mut g = 0usize;
+        'merge: for c in expanded {
+            level_children += c.trans;
+            stats.transitions += c.trans;
+            por_reduced += c.reduced;
+            let n_children = c.children.len();
+            for (i, (_, h, s)) in c.children.into_iter().enumerate() {
+                if !fresh[g + i].load(Ordering::Relaxed) {
                     stats.states_matched += 1;
                     continue;
                 }
@@ -788,21 +995,23 @@ where
                     truncated = true;
                 }
             }
+            g += n_children;
         }
         if stop {
             break;
         }
-        dfs::flush_search_metrics(
-            &stats,
-            &mut tele_flushed,
-            store.bytes_used() + parents.len() as u64 * 24,
-        );
+        let store_bytes: u64 = shards
+            .iter()
+            .map(|sh| sh.store.bytes_used() + sh.parents.len() as u64 * 24)
+            .sum();
+        dfs::flush_search_metrics(&stats, &mut tele_flushed, store_bytes);
         // budgets, at level granularity (~24 B/backlink entry, as in the
         // sharded store's accounting). The frontier and the next level's
         // expansion buffers are resident alongside the stores, so charge
         // them shallowly too — as dfs charges its stack — using this
         // level's child count as the estimate for the next expansion.
-        // All inputs are deterministic, so MemoryLimit aborts stay
+        // All inputs are deterministic (shard count and capacities do not
+        // depend on the thread count), so MemoryLimit aborts stay
         // reproducible across runs and thread counts.
         if let Some(tb) = opts.time_budget {
             if start.elapsed() >= tb {
@@ -814,9 +1023,7 @@ where
             frontier.capacity() as u64 * std::mem::size_of::<Task<M::State>>() as u64;
         let expansion_bytes =
             level_children * std::mem::size_of::<(u64, M::State)>() as u64;
-        if store.bytes_used() + parents.len() as u64 * 24 + frontier_bytes + expansion_bytes
-            >= opts.memory_budget
-        {
+        if store_bytes + frontier_bytes + expansion_bytes >= opts.memory_budget {
             stats.abort = Some(Abort::MemoryLimit);
             break;
         }
@@ -831,10 +1038,20 @@ where
         pend.truncate(1);
     }
     pend.truncate(opts.max_errors);
-    let violations = reconstruct_all(model, |h| parents.get(&h).copied(), &pend);
-    stats.bytes_used = store.bytes_used() + parents.len() as u64 * 24;
+    let violations = reconstruct_all(
+        model,
+        |h| shards[(h >> shift) as usize].parents.get(&h).copied(),
+        &pend,
+    );
+    stats.bytes_used = shards
+        .iter()
+        .map(|sh| sh.store.bytes_used() + sh.parents.len() as u64 * 24)
+        .sum();
     stats.elapsed = start.elapsed();
     dfs::flush_search_metrics(&stats, &mut tele_flushed, stats.bytes_used);
+    if por_reduced > 0 {
+        crate::obs::metrics().por_reduced.add(por_reduced);
+    }
     Ok(CheckReport { violations, stats, exhausted })
 }
 
@@ -997,5 +1214,50 @@ mod tests {
         let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
         let p = SafetyLtl::parse("G(nosuchvar > 0)").unwrap();
         assert!(check_parallel(&m, &p, &popts(4)).is_err());
+    }
+
+    #[test]
+    fn parallel_collapse_matches_full() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let base = check_parallel(&m, &p, &popts(4)).unwrap();
+        let mut o = popts(4);
+        o.compress = Compression::Collapse;
+        let col = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(col.stats.states_stored, base.stats.states_stored);
+        assert_eq!(col.stats.states_matched, base.stats.states_matched);
+        assert_eq!(col.stats.transitions, base.stats.transitions);
+        assert!(col.exhausted);
+    }
+
+    #[test]
+    fn deterministic_collapse_matches_sequential() {
+        let m = AbstractModel::new(64, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let seq = dfs::check(&m, &p, &CheckOptions::default()).unwrap();
+        let mut o = popts(4);
+        o.frontier = Frontier::Deterministic;
+        o.compress = Compression::Collapse;
+        let det = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(det.stats.states_stored, seq.stats.states_stored);
+        assert_eq!(det.stats.states_matched, seq.stats.states_matched);
+        assert_eq!(det.stats.transitions, seq.stats.transitions);
+        assert!(det.exhausted);
+    }
+
+    #[test]
+    fn parallel_async_rejects_por_and_spill() {
+        let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Phase).unwrap();
+        let p = SafetyLtl::parse("G(true)").unwrap();
+        let mut o = popts(4);
+        o.por = true;
+        assert!(check_parallel(&m, &p, &o).is_err(), "async + por must refuse");
+        let mut o = popts(4);
+        o.store = StoreKind::Spill;
+        assert!(check_parallel(&m, &p, &o).is_err(), "async + spill must refuse");
+        let mut o = popts(4);
+        o.frontier = Frontier::Deterministic;
+        o.store = StoreKind::Spill;
+        assert!(check_parallel(&m, &p, &o).is_err(), "det + spill must refuse");
     }
 }

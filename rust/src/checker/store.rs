@@ -12,10 +12,28 @@
 //! - `Bitstate`: Bloom-filter bitstate hashing (SPIN `-DBITSTATE`, the
 //!   basis of swarm verification) — k probes into a 2^log2_bits bit table.
 //!
+//! Two scale tiers extend the exact regime:
+//! - [`CollapseStore`] (SPIN `-DCOLLAPSE`): the encoded state is split
+//!   into regions (globals / per-channel / per-process frame, provided by
+//!   the model as byte offsets), each region is interned once in a shared
+//!   component table, and only the short tuple of component indices is
+//!   stored per state. Exact: tuple equality holds iff the concatenation
+//!   of the components — the raw encoding — is equal;
+//! - [`SpillStore`] (`--store spill`): a [`FullStore`] that, past a
+//!   memory watermark, freezes its contents to hash-sorted runs on disk
+//!   and answers membership via bloom-filter-guarded run lookups, so a
+//!   model bigger than the `--memory-budget` degrades to sequential I/O
+//!   instead of aborting with `MemoryLimit`.
+//!
 //! `insert` returns whether the state was new; `insert_hashed` is the same
 //! with a caller-supplied hash (the parallel engine hashes once for shard
 //! selection and reuses it). `bytes_used` feeds the memory budget that
 //! reproduces the paper's 16 GB exhaustive-mode ceiling (Table 1).
+
+use std::fs::File;
+use std::io::{BufWriter, Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::hash::{hash_bytes, hash_bytes_seeded, FxHashSet};
 
@@ -24,6 +42,9 @@ pub enum StoreKind {
     Full,
     HashCompact,
     Bitstate { log2_bits: u8, hashes: u8 },
+    /// Exact store that overflows to sorted runs on disk past a memory
+    /// watermark (sequential engine only).
+    Spill,
 }
 
 impl StoreKind {
@@ -32,6 +53,25 @@ impl StoreKind {
             StoreKind::Full => "full",
             StoreKind::HashCompact => "hash-compact",
             StoreKind::Bitstate { .. } => "bitstate",
+            StoreKind::Spill => "spill",
+        }
+    }
+}
+
+/// State-vector compression applied on top of an exact store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    #[default]
+    None,
+    /// SPIN `-DCOLLAPSE`: intern state regions, store index tuples.
+    Collapse,
+}
+
+impl Compression {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::Collapse => "collapse",
         }
     }
 }
@@ -94,15 +134,25 @@ impl FullStore {
     /// the start/end indices at the exit points, so the probe loop itself
     /// carries no counting instructions.
     pub(crate) fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
+        self.intern_hashed(enc, h).1
+    }
+
+    /// [`insert_hashed`](Self::insert_hashed) that also returns the entry
+    /// index — [`CollapseStore`] stores these indices as its compressed
+    /// state representation, so the index of a given byte string must be
+    /// stable for the lifetime of the store (it is: entries are append-only
+    /// and `grow()` only rebuilds the probe table).
+    pub(crate) fn intern_hashed(&mut self, enc: &[u8], h: u64) -> (u32, bool) {
         let start = (h as usize) & self.mask;
         let mut i = start;
         loop {
             let slot = self.table[i];
             if slot == 0 {
+                let idx = self.entries.len() as u32;
                 let e = FullEntry { hash: h, pos: self.data.len(), len: enc.len() as u32 };
                 self.data.extend_from_slice(enc);
                 self.entries.push(e);
-                self.table[i] = self.entries.len() as u32;
+                self.table[i] = idx + 1;
                 if crate::obs::enabled() {
                     let probes = (i.wrapping_sub(start) & self.mask) as u64 + 1;
                     crate::obs::metrics().store_probes.add(probes);
@@ -111,7 +161,7 @@ impl FullStore {
                 if self.entries.len() * 8 >= self.table.len() * 7 {
                     self.grow();
                 }
-                return true;
+                return (idx, true);
             }
             let e = self.entries[slot as usize - 1];
             if e.hash == h && e.len as usize == enc.len() && self.entry_bytes(&e) == enc {
@@ -119,10 +169,37 @@ impl FullStore {
                     let probes = (i.wrapping_sub(start) & self.mask) as u64 + 1;
                     crate::obs::metrics().store_probes.add(probes);
                 }
-                return false;
+                return (slot - 1, false);
             }
             i = (i + 1) & self.mask;
         }
+    }
+
+    /// Probe without inserting — the spill store checks RAM residency
+    /// before paying a disk lookup.
+    pub(crate) fn contains_hashed(&self, enc: &[u8], h: u64) -> bool {
+        let mut i = (h as usize) & self.mask;
+        loop {
+            let slot = self.table[i];
+            if slot == 0 {
+                return false;
+            }
+            let e = self.entries[slot as usize - 1];
+            if e.hash == h && e.len as usize == enc.len() && self.entry_bytes(&e) == enc {
+                return true;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Entry view for freezing to disk: (hash, bytes) sorted by hash
+    /// (stable, so equal hashes keep insertion order and freezes are
+    /// deterministic).
+    fn sorted_entries(&self) -> Vec<(u64, &[u8])> {
+        let mut v: Vec<(u64, &[u8])> =
+            self.entries.iter().map(|e| (e.hash, self.entry_bytes(e))).collect();
+        v.sort_by_key(|&(h, _)| h);
+        v
     }
 
     fn grow(&mut self) {
@@ -151,8 +228,290 @@ impl FullStore {
     }
 }
 
+/// SPIN's `-DCOLLAPSE`, recast for flat encodings: the caller supplies
+/// region boundaries (byte offsets: globals / per-channel / per-process
+/// frame), each region is interned once in `components`, and only the
+/// tuple of little-endian component indices is stored per state in
+/// `tuples`.
+///
+/// Exactness: component indices are bijective with region byte strings
+/// (the component table is an exact [`FullStore`]), so two tuples are
+/// equal iff the concatenations of their regions — the raw encodings —
+/// are equal. Dedup decisions therefore match `FullStore` byte-for-byte,
+/// and the raw hash `h` keyed on the uncompressed encoding stays valid
+/// for parent links and shard routing.
+///
+/// Invariant: a given store must see every insert through the same
+/// region-split function (the model's `encode_regions`); mixing splits
+/// for the same state would produce distinct tuples.
+pub struct CollapseStore {
+    components: FullStore,
+    tuples: FullStore,
+    tuple_buf: Vec<u8>,
+}
+
+impl CollapseStore {
+    pub(crate) fn new() -> Self {
+        Self { components: FullStore::new(), tuples: FullStore::new(), tuple_buf: Vec::new() }
+    }
+
+    /// Pre-sized for `expected` states. Tuples dominate (one per state);
+    /// the component table saturates early and grows on demand.
+    pub(crate) fn with_capacity(expected: usize) -> Self {
+        Self {
+            components: FullStore::new(),
+            tuples: FullStore::with_capacity(expected),
+            tuple_buf: Vec::new(),
+        }
+    }
+
+    /// Insert under a region split: `bounds` are ascending region-end byte
+    /// offsets into `enc`; the final region runs to `enc.len()` implicitly
+    /// (an empty list means one region — the uncompressed fallback for
+    /// models without a native split). `h` is the raw encoding's hash.
+    pub(crate) fn insert_hashed(&mut self, enc: &[u8], h: u64, bounds: &[u32]) -> bool {
+        let mut tuple = std::mem::take(&mut self.tuple_buf);
+        tuple.clear();
+        let mut start = 0usize;
+        for &b in bounds {
+            let end = (b as usize).min(enc.len());
+            let region = &enc[start..end];
+            let (idx, _) = self.components.intern_hashed(region, hash_bytes(region));
+            tuple.extend_from_slice(&idx.to_le_bytes());
+            start = end;
+        }
+        if start < enc.len() || bounds.is_empty() {
+            let region = &enc[start..];
+            let (idx, _) = self.components.intern_hashed(region, hash_bytes(region));
+            tuple.extend_from_slice(&idx.to_le_bytes());
+        }
+        let new = self.tuples.insert_hashed(&tuple, h);
+        self.tuple_buf = tuple;
+        new
+    }
+
+    pub(crate) fn len(&self) -> u64 {
+        self.tuples.len()
+    }
+
+    /// Component tables are part of the footprint — `store.bytes_peak`
+    /// must not under-report the compression machinery itself.
+    pub(crate) fn bytes_used(&self) -> u64 {
+        self.components.bytes_used()
+            + self.tuples.bytes_used()
+            + self.tuple_buf.capacity() as u64
+    }
+}
+
+/// Entries per sparse-index block in a frozen run: one (hash, offset)
+/// pair stays in RAM per block, so a disk probe scans at most ~one block.
+const SPILL_BLOCK: usize = 64;
+
+/// Process-wide run-file sequence — two spill stores sharing a directory
+/// (parallel tests, batch workers) must not collide on file names.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One frozen run: states sorted by hash in `[u64 hash][u32 len][bytes]`
+/// records, guarded by a per-run bloom filter and a sparse block index.
+struct SpillRun {
+    path: PathBuf,
+    file: File,
+    bloom: Vec<u64>,
+    bloom_mask: u64,
+    /// (first hash of block, byte offset of block) every `SPILL_BLOCK`
+    /// records.
+    index: Vec<(u64, u64)>,
+}
+
+impl Drop for SpillRun {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn bloom_slots(h: u64, mask: u64) -> [u64; 3] {
+    let a = h;
+    let b = h.rotate_right(21).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let c = h.rotate_right(42).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    [a & mask, b & mask, c & mask]
+}
+
+/// Exact store that degrades to disk instead of dying: new states go to
+/// an in-RAM [`FullStore`]; when that exceeds `watermark` bytes it is
+/// frozen to a hash-sorted run file and replaced with an empty table.
+/// Membership checks probe RAM first, then each run whose bloom filter
+/// admits the hash (binary search on the sparse index, then a short
+/// sequential scan comparing hashes *and* bytes — lookups stay exact).
+///
+/// `bytes_used` reports only the RAM-resident footprint (live table +
+/// blooms + indexes), so the checker's memory-budget abort does not fire
+/// for state that already lives on disk — that is the point.
+pub struct SpillStore {
+    ram: FullStore,
+    runs: Vec<SpillRun>,
+    dir: PathBuf,
+    watermark: u64,
+    spilled: u64,
+}
+
+impl SpillStore {
+    pub(crate) fn new(dir: &Path, watermark: u64) -> Self {
+        Self {
+            ram: FullStore::new(),
+            runs: Vec::new(),
+            dir: dir.to_path_buf(),
+            // a zero watermark would freeze one state per run; clamp to
+            // something that amortizes the freeze cost
+            watermark: watermark.max(1 << 16),
+            spilled: 0,
+        }
+    }
+
+    pub(crate) fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
+        if self.ram.contains_hashed(enc, h) {
+            return false;
+        }
+        if !self.runs.is_empty() && self.on_disk(enc, h) {
+            return false;
+        }
+        self.ram.insert_hashed(enc, h);
+        if self.ram.bytes_used() >= self.watermark {
+            self.freeze();
+        }
+        true
+    }
+
+    /// Exact membership check across all frozen runs.
+    fn on_disk(&self, enc: &[u8], h: u64) -> bool {
+        let mut probes = 0u64;
+        let mut found = false;
+        for r in &self.runs {
+            if bloom_slots(h, r.bloom_mask)
+                .iter()
+                .any(|&bit| r.bloom[(bit / 64) as usize] & (1 << (bit % 64)) == 0)
+            {
+                continue;
+            }
+            probes += 1;
+            if Self::scan_run(r, enc, h) {
+                found = true;
+                break;
+            }
+        }
+        if probes > 0 && crate::obs::enabled() {
+            crate::obs::metrics().spill_probes.add(probes);
+        }
+        found
+    }
+
+    /// Scan one run for (h, enc), starting at the last index block whose
+    /// first hash precedes `h` (equal first-hashes may straddle a block
+    /// boundary, hence the step back).
+    fn scan_run(r: &SpillRun, enc: &[u8], h: u64) -> bool {
+        let i = r.index.partition_point(|&(fh, _)| fh < h);
+        let start = i.saturating_sub(1);
+        if i == 0 && r.index.first().is_some_and(|&(fh, _)| fh > h) {
+            return false; // h precedes every record
+        }
+        let mut f = &r.file;
+        f.seek(SeekFrom::Start(r.index[start].1))
+            .unwrap_or_else(|e| panic!("spill store: seek in {:?} failed: {e}", r.path));
+        let mut hdr = [0u8; 12];
+        let mut buf = Vec::new();
+        loop {
+            match f.read_exact(&mut hdr) {
+                Ok(()) => {}
+                Err(_) => return false, // end of run
+            }
+            let rh = u64::from_le_bytes(hdr[..8].try_into().unwrap());
+            let rlen = u32::from_le_bytes(hdr[8..].try_into().unwrap()) as usize;
+            if rh > h {
+                return false; // sorted: past every candidate
+            }
+            if rh == h && rlen == enc.len() {
+                buf.resize(rlen, 0);
+                f.read_exact(&mut buf)
+                    .unwrap_or_else(|e| panic!("spill store: read in {:?} failed: {e}", r.path));
+                if buf == enc {
+                    return true;
+                }
+            } else {
+                f.seek(SeekFrom::Current(rlen as i64))
+                    .unwrap_or_else(|e| panic!("spill store: seek in {:?} failed: {e}", r.path));
+            }
+        }
+    }
+
+    /// Freeze the in-RAM table to a new sorted run and start fresh.
+    fn freeze(&mut self) {
+        let entries = self.ram.sorted_entries();
+        let n = entries.len();
+        if n == 0 {
+            return;
+        }
+        crate::obs::metrics().spill_runs.add(1);
+        // ~8 bits/state, 3 probes: a few percent false-positive rate —
+        // false positives only cost a disk scan, never correctness
+        let bits = (n as u64 * 8).next_power_of_two().max(64);
+        let mut bloom = vec![0u64; (bits / 64) as usize];
+        let bloom_mask = bits - 1;
+        let path = self.dir.join(format!(
+            "mcat-spill-{}-{}.run",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = File::create(&path)
+            .unwrap_or_else(|e| panic!("spill store: cannot create {:?}: {e}", path));
+        let mut w = BufWriter::new(file);
+        let mut index = Vec::with_capacity(n / SPILL_BLOCK + 1);
+        let mut off = 0u64;
+        for (i, &(h, bytes)) in entries.iter().enumerate() {
+            if i % SPILL_BLOCK == 0 {
+                index.push((h, off));
+            }
+            for bit in bloom_slots(h, bloom_mask) {
+                bloom[(bit / 64) as usize] |= 1 << (bit % 64);
+            }
+            w.write_all(&h.to_le_bytes())
+                .and_then(|_| w.write_all(&(bytes.len() as u32).to_le_bytes()))
+                .and_then(|_| w.write_all(bytes))
+                .unwrap_or_else(|e| panic!("spill store: write to {:?} failed: {e}", path));
+            off += 12 + bytes.len() as u64;
+        }
+        let mut file = w
+            .into_inner()
+            .unwrap_or_else(|e| panic!("spill store: flush of {:?} failed: {e}", path));
+        file.flush()
+            .unwrap_or_else(|e| panic!("spill store: flush of {:?} failed: {e}", path));
+        drop(entries);
+        self.runs.push(SpillRun { path, file, bloom, bloom_mask, index });
+        self.spilled += n as u64;
+        self.ram = FullStore::new();
+    }
+
+    pub(crate) fn len(&self) -> u64 {
+        self.ram.len() + self.spilled
+    }
+
+    pub(crate) fn runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// RAM-resident bytes only: live table + per-run blooms and indexes.
+    pub(crate) fn bytes_used(&self) -> u64 {
+        self.ram.bytes_used()
+            + self
+                .runs
+                .iter()
+                .map(|r| (r.bloom.len() * 8 + r.index.len() * 16) as u64)
+                .sum::<u64>()
+    }
+}
+
 pub enum VisitedStore {
     Full(FullStore),
+    Collapse(CollapseStore),
+    Spill(SpillStore),
     HashCompact { set: FxHashSet<u64> },
     Bitstate { table: Vec<u64>, mask: u64, hashes: u8, set_bits: u64 },
 }
@@ -175,13 +534,37 @@ impl VisitedStore {
             StoreKind::HashCompact => Self::HashCompact {
                 set: FxHashSet::with_capacity_and_hasher(expected, Default::default()),
             },
-            StoreKind::Bitstate { .. } => Self::new(kind),
+            StoreKind::Bitstate { .. } | StoreKind::Spill => Self::new(kind),
         }
+    }
+
+    /// A compressing exact store — see [`CollapseStore`]. Callers must
+    /// feed it through [`insert_regions`](Self::insert_regions) with the
+    /// model's region split.
+    pub fn collapsed(expected: u64) -> Self {
+        let expected = expected.min(PRESIZE_CAP) as usize;
+        Self::Collapse(if expected == 0 {
+            CollapseStore::new()
+        } else {
+            CollapseStore::with_capacity(expected)
+        })
+    }
+
+    /// A disk-spillable exact store — see [`SpillStore`]. `watermark` is
+    /// the RAM ceiling that triggers a freeze (typically half the run's
+    /// memory budget, leaving room for the search stack).
+    pub fn spill(dir: &Path, watermark: u64) -> Self {
+        Self::Spill(SpillStore::new(dir, watermark))
     }
 
     pub fn new(kind: StoreKind) -> Self {
         match kind {
             StoreKind::Full => Self::Full(FullStore::new()),
+            StoreKind::Spill => {
+                // bare construction (no CheckOptions in sight): spill to
+                // the system temp dir past half the default 16 GB budget
+                Self::Spill(SpillStore::new(&std::env::temp_dir(), 8 << 30))
+            }
             StoreKind::HashCompact => Self::HashCompact { set: FxHashSet::default() },
             StoreKind::Bitstate { log2_bits, hashes } => {
                 let log2 = log2_bits.clamp(10, 40);
@@ -202,6 +585,8 @@ impl VisitedStore {
     pub fn insert(&mut self, enc: &[u8]) -> bool {
         match self {
             Self::Full(f) => f.insert_hashed(enc, hash_bytes(enc)),
+            Self::Collapse(c) => c.insert_hashed(enc, hash_bytes(enc), &[]),
+            Self::Spill(s) => s.insert_hashed(enc, hash_bytes(enc)),
             Self::HashCompact { set } => set.insert(hash_bytes(enc)),
             Self::Bitstate { .. } => self.insert_bitstate(enc),
         }
@@ -214,8 +599,22 @@ impl VisitedStore {
     pub fn insert_hashed(&mut self, enc: &[u8], h: u64) -> bool {
         match self {
             Self::Full(f) => f.insert_hashed(enc, h),
+            Self::Collapse(c) => c.insert_hashed(enc, h, &[]),
+            Self::Spill(s) => s.insert_hashed(enc, h),
             Self::HashCompact { set } => set.insert(h),
             Self::Bitstate { .. } => self.insert_bitstate(enc),
+        }
+    }
+
+    /// [`insert_hashed`](Self::insert_hashed) with a region split for the
+    /// collapse store (every other store ignores `bounds`). A collapse
+    /// store must see *all* of its inserts through one split function —
+    /// the engines compute `bounds` via the model's `encode_regions` for
+    /// every insert, including initial states.
+    pub fn insert_regions(&mut self, enc: &[u8], h: u64, bounds: &[u32]) -> bool {
+        match self {
+            Self::Collapse(c) => c.insert_hashed(enc, h, bounds),
+            _ => self.insert_hashed(enc, h),
         }
     }
 
@@ -241,6 +640,8 @@ impl VisitedStore {
     pub fn len(&self) -> u64 {
         match self {
             Self::Full(f) => f.len(),
+            Self::Collapse(c) => c.len(),
+            Self::Spill(s) => s.len(),
             Self::HashCompact { set } => set.len() as u64,
             Self::Bitstate { set_bits, hashes, .. } => set_bits / (*hashes).max(1) as u64,
         }
@@ -253,6 +654,8 @@ impl VisitedStore {
     pub fn bytes_used(&self) -> u64 {
         match self {
             Self::Full(f) => f.bytes_used(),
+            Self::Collapse(c) => c.bytes_used(),
+            Self::Spill(s) => s.bytes_used(),
             Self::HashCompact { set } => set.len() as u64 * 16,
             Self::Bitstate { table, .. } => table.len() as u64 * 8,
         }
@@ -394,5 +797,122 @@ mod tests {
     fn kind_names() {
         assert_eq!(StoreKind::Full.name(), "full");
         assert_eq!(StoreKind::Bitstate { log2_bits: 20, hashes: 3 }.name(), "bitstate");
+        assert_eq!(StoreKind::Spill.name(), "spill");
+        assert_eq!(Compression::None.name(), "none");
+        assert_eq!(Compression::Collapse.name(), "collapse");
+    }
+
+    /// Synthetic "state": three 32-byte regions, each drawn from a small
+    /// component pool — the shape COLLAPSE exploits.
+    fn region_states(n: u64) -> Vec<(Vec<u8>, Vec<u32>)> {
+        (0..n)
+            .map(|i| {
+                let mut enc = Vec::with_capacity(96);
+                for (r, modulo) in [(0u64, 7u64), (1, 11), (2, 13)] {
+                    let tag = (i * (r + 3)) % modulo;
+                    enc.extend_from_slice(&[tag as u8; 24]);
+                    enc.extend_from_slice(&tag.to_le_bytes());
+                }
+                (enc, vec![32, 64])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn collapse_agrees_with_full() {
+        let mut full = VisitedStore::new(StoreKind::Full);
+        let mut col = VisitedStore::collapsed(0);
+        for (enc, bounds) in region_states(4000) {
+            let h = hash_bytes(&enc);
+            assert_eq!(full.insert_hashed(&enc, h), col.insert_regions(&enc, h, &bounds));
+        }
+        for (enc, bounds) in region_states(4000) {
+            assert!(!col.insert_regions(&enc, hash_bytes(&enc), &bounds));
+        }
+        assert_eq!(full.len(), col.len());
+    }
+
+    #[test]
+    fn collapse_handles_boundary_shapes() {
+        // trailing bound == len, empty bounds, and out-of-range bounds all
+        // stay exact
+        let mut col = VisitedStore::collapsed(16);
+        assert!(col.insert_regions(b"abcdef", 1, &[2, 6]));
+        assert!(!col.insert_regions(b"abcdef", 1, &[2, 6]));
+        assert!(col.insert_regions(b"", 2, &[]));
+        assert!(!col.insert_regions(b"", 2, &[]));
+        assert!(col.insert_regions(b"xy", 3, &[9]));
+        assert!(!col.insert_regions(b"xy", 3, &[9]));
+        assert_eq!(col.len(), 3);
+    }
+
+    #[test]
+    fn collapse_shrinks_shared_region_states() {
+        // same dedup decisions, strictly smaller footprint once regions
+        // repeat across states
+        let mut full = VisitedStore::new(StoreKind::Full);
+        let mut col = VisitedStore::collapsed(0);
+        for (enc, bounds) in region_states(20_000) {
+            let h = hash_bytes(&enc);
+            full.insert_hashed(&enc, h);
+            col.insert_regions(&enc, h, &bounds);
+        }
+        assert_eq!(full.len(), col.len());
+        assert!(
+            col.bytes_used() < full.bytes_used(),
+            "collapse must shrink the store: {} vs {}",
+            col.bytes_used(),
+            full.bytes_used()
+        );
+    }
+
+    #[test]
+    fn spill_store_exact_across_freezes() {
+        let dir = std::env::temp_dir().join(format!("mcat-spill-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            // tiny watermark (clamped to 64 KiB) forces several freezes
+            let mut s = VisitedStore::spill(&dir, 1);
+            let items = states(40_000);
+            for st in &items {
+                assert!(s.insert(st), "fresh state reported as seen");
+            }
+            let runs = match &s {
+                VisitedStore::Spill(sp) => sp.runs(),
+                _ => unreachable!(),
+            };
+            assert!(runs >= 2, "watermark never tripped: {runs} runs");
+            for st in &items {
+                assert!(!s.insert(st), "spilled state reported as fresh");
+            }
+            assert_eq!(s.len(), items.len() as u64);
+            // RAM footprint stays near the watermark, not the corpus size
+            assert!(s.bytes_used() < 4 * (1 << 16) + (1 << 20));
+            // fresh states are still accepted after spilling
+            assert!(s.insert(&u64::MAX.to_le_bytes()));
+        }
+        // runs delete themselves with the store
+        let left = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(left, 0, "spill run files leaked");
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn spill_store_equivalent_to_full() {
+        let dir = std::env::temp_dir().join(format!("mcat-spill-eq-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let mut full = VisitedStore::new(StoreKind::Full);
+            let mut sp = VisitedStore::spill(&dir, 1);
+            // interleave fresh and repeated states; decisions must match
+            for round in 0..3u64 {
+                for i in 0..30_000u64 {
+                    let st = (i % (10_000 * (round + 1))).to_le_bytes();
+                    assert_eq!(full.insert(&st), sp.insert(&st), "round {round} state {i}");
+                }
+            }
+            assert_eq!(full.len(), sp.len());
+        }
+        let _ = std::fs::remove_dir(&dir);
     }
 }

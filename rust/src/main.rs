@@ -9,7 +9,7 @@
 //!   exec       run an AOT-compiled Pallas kernel via PJRT     §7.1
 //!   gen-models write the pregenerated Promela models          §4, §7.2
 
-use mcautotune::checker::{check, CheckOptions, Frontier, StoreKind};
+use mcautotune::checker::{check, CheckOptions, Compression, Frontier, StoreKind};
 use mcautotune::coordinator::{
     run_batch, BatchOptions, JobEngine, ModelKind, ResultCache, TaskDir, TuningJob,
 };
@@ -238,10 +238,18 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
             log2_bits: a.get_parsed_or("bits", 27u8)?,
             hashes: 3,
         },
-        s => bail!("unknown store `{}` (full | compact | bitstate)", s),
+        "spill" => StoreKind::Spill,
+        s => bail!("unknown store `{}` (full | compact | bitstate | spill)", s),
+    };
+    let compress = match a.get_or("compress", "none").as_str() {
+        "none" => Compression::None,
+        "collapse" => Compression::Collapse,
+        c => bail!("unknown compression `{}` (none | collapse)", c),
     };
     let opts = CheckOptions {
         store,
+        compress,
+        spill_dir: a.get("spill-dir").map(std::path::PathBuf::from),
         max_depth: a.get_parsed_or("max-depth", d.max_depth)?,
         max_states: a.get_parsed_or("max-states", d.max_states)?,
         memory_budget: a.get_parsed_or("memory-budget", d.memory_budget)?,
@@ -250,15 +258,33 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         por: a.flag("por"),
         ..d
     };
-    if opts.por && (opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic) {
-        bail!("--por requires the sequential engine (threads=1, async frontier)");
+    if opts.compress == Compression::Collapse && opts.store != StoreKind::Full {
+        bail!("--compress collapse requires --store full");
+    }
+    if opts.por && opts.effective_threads() > 1 && opts.frontier != Frontier::Deterministic {
+        bail!("--por requires a deterministic engine (threads=1, or --frontier det)");
+    }
+    if opts.store == StoreKind::Spill
+        && (opts.effective_threads() > 1 || opts.frontier == Frontier::Deterministic)
+    {
+        bail!("--store spill requires the sequential engine (threads=1, async frontier)");
     }
     Ok(opts)
 }
 
 fn store_spec(spec: Spec) -> Spec {
-    spec.opt("store", "full | compact | bitstate (default full)")
+    spec.opt(
+        "store",
+        "full | compact | bitstate | spill (default full; spill: exact store \
+         that freezes to sorted disk runs past the memory watermark)",
+    )
         .opt("bits", "bitstate table log2 bits (default 27)")
+        .opt(
+            "compress",
+            "none | collapse (collapse: SPIN COLLAPSE-style component interning \
+             on the full store — exact, smaller resident state vectors)",
+        )
+        .opt("spill-dir", "directory for --store spill run files (default: temp dir)")
         .opt("max-depth", "search depth bound (spin -m)")
         .opt("max-states", "stored-state budget")
         .opt("memory-budget", "visited-store byte budget (default 16GiB)")
@@ -270,9 +296,9 @@ fn store_spec(spec: Spec) -> Spec {
         )
         .flag(
             "por",
-            "ample-set partial-order reduction (sequential engine only): expand \
-             one statically-invisible process where sound instead of all — same \
-             verdicts and tuning optima, fewer states",
+            "ample-set partial-order reduction (sequential or det-frontier \
+             engines): expand one statically-invisible process where sound \
+             instead of all — same verdicts and tuning optima, fewer states",
         )
 }
 
@@ -440,6 +466,12 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         }
         if parse_reduce(&a)? {
             fields.push(("reduce", Json::Str("dead-slots".into())));
+        }
+        if opts.compress != Compression::None {
+            fields.push(("compress", Json::Str(opts.compress.name().to_string())));
+        }
+        if opts.store == StoreKind::Spill {
+            fields.push(("store", Json::Str("spill".into())));
         }
         rec.det_event("run", fields);
     }
@@ -923,6 +955,12 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
             }
             if parse_reduce(&a)? {
                 fields.push(("reduce", Json::Str("dead-slots".into())));
+            }
+            if opts.compress != Compression::None {
+                fields.push(("compress", Json::Str(opts.compress.name().to_string())));
+            }
+            if opts.store == StoreKind::Spill {
+                fields.push(("store", Json::Str("spill".into())));
             }
             rec.det_event("run", fields);
         }

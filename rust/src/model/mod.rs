@@ -36,6 +36,21 @@ pub trait TransitionSystem {
     /// (cleared first). Used for the visited store and bitstate hashing.
     fn encode(&self, s: &Self::State, out: &mut Vec<u8>);
 
+    /// Region split of [`encode`](Self::encode)'s byte string, for
+    /// COLLAPSE-style store compression: fill `out` (cleared first) with
+    /// ascending region-end byte offsets; the final region runs to the
+    /// encoding's end implicitly. Regions should follow the model's
+    /// natural component structure (globals / per-channel / per-process
+    /// frame), so that components repeat across states and the interning
+    /// store can share them. Must be a pure function of the state — the
+    /// store relies on equal states producing equal splits. The default
+    /// (no offsets) declares the whole encoding one region: compression
+    /// degrades to indirection but stays exact.
+    fn encode_regions(&self, s: &Self::State, out: &mut Vec<u32>) {
+        let _ = s;
+        out.clear();
+    }
+
     /// Observe a named model variable (e.g. "time", "FIN", "WG", "TS").
     /// Booleans are 0/1. Returns None for unknown names.
     fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64>;
@@ -106,6 +121,10 @@ impl<M: TransitionSystem> TransitionSystem for &M {
 
     fn encode(&self, s: &Self::State, out: &mut Vec<u8>) {
         (**self).encode(s, out)
+    }
+
+    fn encode_regions(&self, s: &Self::State, out: &mut Vec<u32>) {
+        (**self).encode_regions(s, out)
     }
 
     fn eval_var(&self, s: &Self::State, name: &str) -> Option<i64> {

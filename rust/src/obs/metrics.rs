@@ -161,6 +161,10 @@ pub struct Metrics {
     /// dead local slots canonicalized to zero before hashing
     /// (`--reduce dead-slots`, both Promela engines)
     pub slots_canonicalized: Counter,
+    /// in-RAM tables frozen to disk runs (`--store spill`)
+    pub spill_runs: Counter,
+    /// disk-run lookups past the bloom filters (`--store spill`)
+    pub spill_probes: Counter,
     /// deepest frontier depth observed
     pub depth: Gauge,
     /// peak visited-store bytes observed
@@ -188,6 +192,8 @@ static METRICS: Metrics = Metrics {
     task_dead_lettered: Counter::new(),
     por_reduced: Counter::new(),
     slots_canonicalized: Counter::new(),
+    spill_runs: Counter::new(),
+    spill_probes: Counter::new(),
     depth: Gauge::new(),
     store_bytes: Gauge::new(),
 };
@@ -223,6 +229,8 @@ impl Metrics {
             ("task.dead_lettered", self.task_dead_lettered.value()),
             ("checker.por_reduced", self.por_reduced.value()),
             ("vm.slots_canonicalized", self.slots_canonicalized.value()),
+            ("spill.runs", self.spill_runs.value()),
+            ("spill.probes", self.spill_probes.value()),
         ]
     }
 
@@ -248,6 +256,8 @@ impl Metrics {
         self.task_dead_lettered.reset();
         self.por_reduced.reset();
         self.slots_canonicalized.reset();
+        self.spill_runs.reset();
+        self.spill_probes.reset();
         self.depth.reset();
         self.store_bytes.reset();
     }

@@ -24,7 +24,10 @@
 //!    sets, no spawns/allocs/dynamic channel handles). A pc is
 //!    *ample-eligible* ([`Analysis::por_safe`]) when every op reachable
 //!    within one observable transition from it is invisible (touches only
-//!    the process's own locals), never enters an `atomic` block (a blocked
+//!    the process's own locals — or, channel-aware: is a send/receive on
+//!    a buffered channel whose send/receive role is *exclusive* to this
+//!    single-instance proctype, see [`exclusive_channel_roles`]), never
+//!    enters an `atomic` block (a blocked
 //!    chain would leave exclusivity set and restrict other processes),
 //!    and only moves the pc strictly forward. Forward-only edges give the
 //!    cycle proviso (C3) for free: any cycle in the reduced graph must
@@ -141,8 +144,13 @@ pub struct Effects {
     /// local slots definitely overwritten (strong kill for liveness)
     pub local_kills: SlotSet,
     /// statically-known channel ids touched (compile folds global channel
-    /// names to `CExpr::Num(id)`)
+    /// names to `CExpr::Num(id)`); always the union of `chan_sends` and
+    /// `chan_recvs`
     pub chans: SlotSet,
+    /// statically-known channel ids this op sends on
+    pub chan_sends: SlotSet,
+    /// statically-known channel ids this op receives from
+    pub chan_recvs: SlotSet,
     /// channel op through a non-constant handle (local `chan` variables)
     pub chan_dynamic: bool,
     pub spawns: bool,
@@ -252,12 +260,22 @@ pub fn op_effects(op: &Op) -> Effects {
         }
         Op::Send(c, args) => {
             chan_effect(c, &mut eff);
+            if let CExpr::Num(id) = c {
+                if *id >= 0 {
+                    eff.chan_sends.insert(*id as u32);
+                }
+            }
             for a in args {
                 read_expr(a, &mut eff);
             }
         }
         Op::Recv(c, args) => {
             chan_effect(c, &mut eff);
+            if let CExpr::Num(id) = c {
+                if *id >= 0 {
+                    eff.chan_recvs.insert(*id as u32);
+                }
+            }
             for a in args {
                 match a {
                     CRecvArg::Bind(lv) => write_lval(lv, &mut eff),
@@ -290,7 +308,12 @@ pub fn op_effects(op: &Op) -> Effects {
 /// processes: they commute and neither enables/disables the other.
 /// Locals are per-process private, so only globals, channels and
 /// structural effects (spawn/alloc/halt) can conflict. Conservative:
-/// any shared channel (even send vs. send) counts as a conflict.
+/// any shared channel (even send vs. send) counts as a conflict — this
+/// context-free relation cannot see channel capacities or per-channel
+/// sender/receiver exclusivity. The channel-aware refinement (an
+/// exclusive send and an exclusive receive on a *buffered* channel
+/// commute) lives in [`Analysis`], which has the whole-program context
+/// to discharge it; see [`ample_eligible`].
 pub fn independent(a: &Effects, b: &Effects) -> bool {
     if a.spawns || b.spawns || a.allocs || b.allocs || a.halts || b.halts {
         return false;
@@ -317,6 +340,12 @@ pub struct Analysis {
     live: Vec<Vec<SlotSet>>,
     /// per (proctype, pc): pc is ample-eligible for POR
     safe: Vec<Vec<bool>>,
+    /// per global channel id: the only proctype that can ever send on it
+    /// (None when senders are plural/dynamic, or that proctype can have
+    /// more than one instance) — see [`exclusive_channel_roles`]
+    excl_sender: Vec<Option<u32>>,
+    /// per global channel id: the only proctype that can ever receive
+    excl_recver: Vec<Option<u32>>,
 }
 
 impl Analysis {
@@ -329,15 +358,36 @@ impl Analysis {
             .zip(&effects)
             .map(|(p, eff)| liveness(&p.code, eff))
             .collect();
+        let (excl_sender, excl_recver) = exclusive_channel_roles(prog, &effects);
         let safe = prog
             .procs
             .iter()
             .zip(&effects)
-            .map(|(p, eff)| {
-                (0..p.code.len() as u32).map(|pc| ample_eligible(&p.code, eff, pc)).collect()
+            .enumerate()
+            .map(|(pi, (p, eff))| {
+                let ctx = ChanCtx {
+                    caps: &prog.global_chans,
+                    excl_sender: &excl_sender,
+                    excl_recver: &excl_recver,
+                    ptype: pi as u32,
+                };
+                (0..p.code.len() as u32)
+                    .map(|pc| ample_eligible(&p.code, eff, pc, &ctx))
+                    .collect()
             })
             .collect();
-        Analysis { effects, live, safe }
+        Analysis { effects, live, safe, excl_sender, excl_recver }
+    }
+
+    /// The single proctype allowed to send on global channel `cid`, when
+    /// sender-exclusivity holds (exposed for lint features and tests).
+    pub fn exclusive_sender(&self, cid: u32) -> Option<u32> {
+        self.excl_sender.get(cid as usize).copied().flatten()
+    }
+
+    /// The single proctype allowed to receive on global channel `cid`.
+    pub fn exclusive_recver(&self, cid: u32) -> Option<u32> {
+        self.excl_recver.get(cid as usize).copied().flatten()
     }
 
     /// Local slots live when `ptype` is at `pc` (dead slots may be
@@ -350,11 +400,109 @@ impl Analysis {
         !self.live_at(ptype, pc).contains(slot)
     }
 
-    /// All transitions from `pc` are invisible, local-only and strictly
-    /// forward — a process resting here may serve as a singleton ample set.
+    /// All transitions from `pc` are invisible, strictly forward, and
+    /// either local-only or exclusive buffered channel ops — a process
+    /// resting here may serve as a singleton ample set.
     pub fn por_safe(&self, ptype: usize, pc: u32) -> bool {
         self.safe.get(ptype).and_then(|s| s.get(pc as usize)).copied().unwrap_or(false)
     }
+}
+
+/// Per-channel sender/receiver exclusivity: channel `c`'s send (receive)
+/// role is *exclusive* when every static send (receive) site on `c` lives
+/// in one proctype, that proctype has exactly one instance for the whole
+/// run (exactly one `active` entry and no `run` site anywhere — spawns
+/// would multiply it), and no dynamic-handle send (receive) exists in the
+/// program (a dynamic handle could alias any channel id). Exclusivity is
+/// what lets a buffered send commute with every transition of every other
+/// process: no other process can alter the channel's tail (resp. head) or
+/// disable the op — see [`ample_eligible`].
+fn exclusive_channel_roles(
+    prog: &Program,
+    effects: &[Vec<Effects>],
+) -> (Vec<Option<u32>>, Vec<Option<u32>>) {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Role {
+        NoSite,
+        One(u32),
+        Many,
+    }
+    fn claim(roles: &mut [Role], cid: u32, ptype: u32) {
+        let r = &mut roles[cid as usize];
+        *r = match *r {
+            Role::NoSite => Role::One(ptype),
+            Role::One(p) if p == ptype => Role::One(p),
+            _ => Role::Many,
+        };
+    }
+
+    let nchans = prog.global_chans.len();
+    // instance count per proctype: initial actives, poisoned by any
+    // `run` site (each execution spawns another instance)
+    let mut instances = vec![0usize; prog.procs.len()];
+    for &pt in &prog.active {
+        if let Some(c) = instances.get_mut(pt as usize) {
+            *c += 1;
+        }
+    }
+    for p in &prog.procs {
+        for ins in &p.code {
+            if let Op::Run(pt, _) = &ins.op {
+                if let Some(c) = instances.get_mut(*pt as usize) {
+                    *c = usize::MAX;
+                }
+            }
+        }
+    }
+    let single: Vec<bool> = instances.iter().map(|&c| c == 1).collect();
+
+    let mut senders = vec![Role::NoSite; nchans];
+    let mut recvers = vec![Role::NoSite; nchans];
+    let (mut dyn_send, mut dyn_recv) = (false, false);
+    for (pi, p) in prog.procs.iter().enumerate() {
+        for (pc, ins) in p.code.iter().enumerate() {
+            let eff = &effects[pi][pc];
+            match ins.op {
+                Op::Send(_, _) => {
+                    dyn_send |= eff.chan_dynamic;
+                    for cid in eff.chan_sends.iter() {
+                        if (cid as usize) < nchans {
+                            claim(&mut senders, cid, pi as u32);
+                        }
+                    }
+                }
+                Op::Recv(_, _) => {
+                    dyn_recv |= eff.chan_dynamic;
+                    for cid in eff.chan_recvs.iter() {
+                        if (cid as usize) < nchans {
+                            claim(&mut recvers, cid, pi as u32);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let resolve = |roles: &[Role], poisoned: bool| -> Vec<Option<u32>> {
+        roles
+            .iter()
+            .map(|r| match *r {
+                Role::One(pt) if !poisoned && single[pt as usize] => Some(pt),
+                _ => None,
+            })
+            .collect()
+    };
+    (resolve(&senders, dyn_send), resolve(&recvers, dyn_recv))
+}
+
+/// Whole-program channel context threaded into [`ample_eligible`].
+struct ChanCtx<'a> {
+    /// (capacity, arity) per global channel id
+    caps: &'a [(u16, u16)],
+    excl_sender: &'a [Option<u32>],
+    excl_recver: &'a [Option<u32>],
+    /// proctype whose automaton is being analyzed
+    ptype: u32,
 }
 
 /// Execution successors of the instruction at `pc` (pc-level control
@@ -402,10 +550,24 @@ fn liveness(code: &[Instr], eff: &[Effects]) -> Vec<SlotSet> {
 /// Ample-eligibility of the transitions leaving `pc`: walk every op a
 /// single observable transition from `pc` can execute (Branch recurses
 /// into its option guards; other ops end the transition at `next`) and
-/// require each to be local-only, non-atomic and strictly
-/// forward-branching. See the module docs for why each clause is load-
-/// bearing for the C1–C3 provisos.
-fn ample_eligible(code: &[Instr], eff: &[Effects], pc: u32) -> bool {
+/// require each to be invisible, non-atomic, strictly forward-branching,
+/// and either local-only or an *exclusive buffered channel op*. See the
+/// module docs for why each clause is load-bearing for the C1–C3
+/// provisos.
+///
+/// The channel arm: a send (receive) on a single statically-known
+/// *buffered* channel qualifies when this proctype is the channel's
+/// exclusive sender (receiver) per [`exclusive_channel_roles`] and the op
+/// touches no globals. Soundness: whenever the op and any transition `t`
+/// of another process are co-enabled, they commute — `t` can only be a
+/// receive (resp. send) on the same channel by exclusivity, co-enabledness
+/// forces `1 <= qlen < cap`, and appending at the tail commutes with
+/// removing the unchanged head — and neither ever disables the other (a
+/// receive only frees send capacity; a send only provides receive data).
+/// Channel state is invisible to `SafetyLtl` (properties read globals
+/// only), so C2 holds; `next > pc` keeps C3; rendezvous (cap 0) is
+/// excluded because it couples two processes in a single step.
+fn ample_eligible(code: &[Instr], eff: &[Effects], pc: u32, ctx: &ChanCtx<'_>) -> bool {
     let mut stack = vec![pc];
     let mut seen = SlotSet::new();
     while let Some(v) = stack.pop() {
@@ -437,8 +599,34 @@ fn ample_eligible(code: &[Instr], eff: &[Effects], pc: u32) -> bool {
                 // landing on Halt inside the transition only flips this
                 // process's own alive bit — local and invisible
             }
-            // Send/Recv/Run/NewChan touch shared structure; Halt as the
-            // *resting* op would shrink the process set mid-reduction
+            Op::Send(_, _) | Op::Recv(_, _) => {
+                let e = &eff[v as usize];
+                let (ids, excl) = if matches!(ins.op, Op::Send(_, _)) {
+                    (&e.chan_sends, ctx.excl_sender)
+                } else {
+                    (&e.chan_recvs, ctx.excl_recver)
+                };
+                if e.chan_dynamic
+                    || !e.global_reads.is_empty()
+                    || !e.global_writes.is_empty()
+                    || ins.atomic_next
+                    || ins.next == NO_PC
+                    || ins.next <= v
+                    || ids.count() != 1
+                {
+                    return false;
+                }
+                let cid = ids.iter().next().expect("count checked") as usize;
+                if ctx.caps.get(cid).is_none_or(|&(cap, _)| cap == 0) {
+                    return false; // rendezvous or out-of-range handle
+                }
+                if excl.get(cid).copied().flatten() != Some(ctx.ptype) {
+                    return false;
+                }
+            }
+            // Run/NewChan mutate shared structure (process table, channel
+            // ids); Halt as the *resting* op would shrink the process set
+            // mid-reduction
             _ => return false,
         }
     }

@@ -87,9 +87,61 @@ const MAX_ATOMIC_CHAIN: u32 = 4096;
 /// words (`[ptype, pc, alive, locals…]`, unused local words zero). All
 /// strides come from the compiled program, so cloning is a single memcpy
 /// and the visited-store encoding is one linear pass over the words.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// Clone and Drop route through a per-thread buffer pool: dropping a
+/// state retires its `Vec<i32>` to a thread-local freelist and cloning
+/// one draws from it, so steady-state exploration (clone a successor,
+/// drop it once deduped) recycles allocations instead of hitting the
+/// allocator once per emitted state. The pool is capacity-bounded and
+/// survives TLS teardown gracefully (`try_with`), and pooled clones are
+/// observably identical to fresh ones — same data, same equality/hash.
+#[derive(Debug, PartialEq, Eq, Hash)]
 pub struct VState {
     pub data: Vec<i32>,
+}
+
+/// Retired state buffers kept per worker thread (see [`VState`] docs).
+/// Bounded so a burst (e.g. a huge frontier dropped at once) cannot pin
+/// unbounded memory in idle freelists.
+const STATE_POOL_CAP: usize = 1024;
+
+thread_local! {
+    static STATE_POOL: std::cell::RefCell<Vec<Vec<i32>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl Clone for VState {
+    fn clone(&self) -> Self {
+        let mut data = STATE_POOL
+            .try_with(|p| p.borrow_mut().pop())
+            .ok()
+            .flatten()
+            .unwrap_or_default();
+        data.clear();
+        data.extend_from_slice(&self.data);
+        VState { data }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        self.data.clear();
+        self.data.extend_from_slice(&source.data);
+    }
+}
+
+impl Drop for VState {
+    fn drop(&mut self) {
+        if self.data.capacity() == 0 {
+            return;
+        }
+        let buf = std::mem::take(&mut self.data);
+        // ignore AccessError during thread teardown — the buffer just frees
+        let _ = STATE_POOL.try_with(|p| {
+            let mut p = p.borrow_mut();
+            if p.len() < STATE_POOL_CAP {
+                p.push(buf);
+            }
+        });
+    }
 }
 
 /// An axis-aligned (WG, TS) sub-lattice baked into a specialized program
@@ -1452,6 +1504,30 @@ impl TransitionSystem for PromelaVm {
         }
     }
 
+    /// COLLAPSE region split: header+globals, one region per channel,
+    /// one per process frame. The packed layout makes every region end a
+    /// word boundary (`encode` writes one LE word per `data` slot), and
+    /// the strides are compile-time constants, so the split is a pure
+    /// function of the state header — exactly what the interning store
+    /// requires. Frames repeat heavily across states (a process that did
+    /// not move keeps its frame bytes), which is where the sharing comes
+    /// from.
+    fn encode_regions(&self, s: &VState, out: &mut Vec<u32>) {
+        out.clear();
+        let d = &s.data[..];
+        let nchans = self.nchans(d);
+        let nprocs = self.nprocs(d);
+        out.reserve(1 + nchans + nprocs);
+        out.push(((HDR + self.nglobals) * 4) as u32);
+        for c in 0..nchans {
+            out.push(((self.chan_off(c) + self.chan_stride) * 4) as u32);
+        }
+        let base = self.procs_base(d);
+        for p in 0..nprocs {
+            out.push(((base + (p + 1) * self.frame_stride) * 4) as u32);
+        }
+    }
+
     fn eval_var(&self, s: &VState, name: &str) -> Option<i64> {
         let v = self.src.global_syms.get(name)?;
         Some(s.data[HDR + v.offset as usize] as i64)
@@ -1695,5 +1771,45 @@ mod tests {
         let mut enc = Vec::new();
         m.encode(&out[0], &mut enc);
         assert_eq!(enc.len(), out[0].data.len() * 4);
+    }
+
+    #[test]
+    fn encode_regions_covers_the_packed_layout() {
+        let m = vm(
+            "int a;\nchan c = [1] of {byte};\n\
+             active proctype main() { c ! 1; run w() }\nproctype w() { skip }",
+        );
+        let init = m.initial_state();
+        let mut enc = Vec::new();
+        m.encode(&init, &mut enc);
+        let mut bounds = Vec::new();
+        m.encode_regions(&init, &mut bounds);
+        // header+globals, one channel region, one frame region
+        assert_eq!(bounds.len(), 3);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "ascending: {:?}", bounds);
+        assert_eq!(*bounds.last().unwrap() as usize, enc.len());
+
+        // the split tracks the state, not the program: run() adds a frame
+        let mut succ = Vec::new();
+        m.successors(&init, &mut succ);
+        let grown = succ.iter().find(|s| s.data[NPROCS] == 2).unwrap();
+        m.encode_regions(grown, &mut bounds);
+        assert_eq!(bounds.len(), 4);
+    }
+
+    #[test]
+    fn pooled_clone_is_observably_identical() {
+        let m = vm("int a; active proctype main() { a = 1 }");
+        let init = m.initial_state();
+        let c = init.clone();
+        assert_eq!(init, c);
+        drop(c); // retires the buffer to the thread-local pool
+        let c2 = init.clone(); // reuses it
+        assert_eq!(init, c2);
+        let mut e1 = Vec::new();
+        let mut e2 = Vec::new();
+        m.encode(&init, &mut e1);
+        m.encode(&c2, &mut e2);
+        assert_eq!(e1, e2);
     }
 }

@@ -459,31 +459,134 @@ fn dead_slot_reduction_preserves_verdicts_on_the_full_corpus() {
 
 #[test]
 fn por_preserves_verdicts_on_the_full_corpus() {
-    // sequential engine only: that is the validated scope of `--por`
-    let base = opts_dfs();
-    let por = CheckOptions { por: true, ..opts_dfs() };
-    for (name, src, prop) in corpus() {
-        let prop = SafetyLtl::parse(prop).unwrap();
-        let interp = PromelaSystem::from_source(&src).unwrap();
-        let vm = PromelaVm::from_source(&src).unwrap();
-        let bi = check(&interp, &prop, &base).unwrap();
-        let pi = check(&interp, &prop, &por).unwrap();
-        let bv = check(&vm, &prop, &base).unwrap();
-        let pv = check(&vm, &prop, &por).unwrap();
-        assert_eq!(bi.found(), pi.found(), "{}: interp verdict under por", name);
-        assert_eq!(bv.found(), pv.found(), "{}: vm verdict under por", name);
-        assert_eq!(bi.exhausted, pi.exhausted, "{}: interp exhausted under por", name);
-        assert_eq!(bv.exhausted, pv.exhausted, "{}: vm exhausted under por", name);
+    // the validated scope of `--por`: the two deterministic engines — the
+    // sequential DFS and the depth-synchronous parallel frontier. The
+    // reduced graph is a pure function of the state (ample selection
+    // reads only the state), so both must store the same count.
+    for (label, base) in [("dfs", opts_dfs()), ("det4", opts_det4())] {
+        let por = CheckOptions { por: true, ..base.clone() };
+        for (name, src, prop) in corpus() {
+            let prop = SafetyLtl::parse(prop).unwrap();
+            let interp = PromelaSystem::from_source(&src).unwrap();
+            let vm = PromelaVm::from_source(&src).unwrap();
+            let bi = check(&interp, &prop, &base).unwrap();
+            let pi = check(&interp, &prop, &por).unwrap();
+            let bv = check(&vm, &prop, &base).unwrap();
+            let pv = check(&vm, &prop, &por).unwrap();
+            assert_eq!(bi.found(), pi.found(), "{}/{}: interp verdict under por", name, label);
+            assert_eq!(bv.found(), pv.found(), "{}/{}: vm verdict under por", name, label);
+            assert_eq!(bi.exhausted, pi.exhausted, "{}/{}: interp exhausted", name, label);
+            assert_eq!(bv.exhausted, pv.exhausted, "{}/{}: vm exhausted", name, label);
+            assert!(
+                pi.stats.states_stored <= bi.stats.states_stored,
+                "{}/{}: por may only shrink the store ({} > {})",
+                name, label, pi.stats.states_stored, bi.stats.states_stored
+            );
+            assert_eq!(
+                pi.stats.states_stored, pv.stats.states_stored,
+                "{}/{}: both reduced engines store the same count",
+                name, label
+            );
+        }
+    }
+}
+
+/// `--por --reduce dead-slots` compose: ample selection reads pcs,
+/// liveness and enabledness from the *raw* state, while dead-slot
+/// canonicalization rewrites only the hashed image in `encode` — the
+/// two reductions touch disjoint machinery, and composing them must
+/// keep every verdict while storing no more states than either alone.
+#[test]
+fn por_composes_with_dead_slot_reduction_on_the_full_corpus() {
+    for (label, base) in [("dfs", opts_dfs()), ("det4", opts_det4())] {
+        let por = CheckOptions { por: true, ..base.clone() };
+        for (name, src, prop) in corpus() {
+            let prop = SafetyLtl::parse(prop).unwrap();
+            let plain_v = PromelaVm::from_source(&src).unwrap();
+            let both_v = PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction();
+            let both_i = PromelaSystem::from_source(&src).unwrap().with_dead_slot_reduction();
+            let b = check(&plain_v, &prop, &base).unwrap();
+            let cv = check(&both_v, &prop, &por).unwrap();
+            let ci = check(&both_i, &prop, &por).unwrap();
+            assert_eq!(b.found(), cv.found(), "{}/{}: verdict under por+dead-slots", name, label);
+            assert_eq!(b.exhausted, cv.exhausted, "{}/{}: exhausted", name, label);
+            assert!(
+                cv.stats.states_stored <= b.stats.states_stored,
+                "{}/{}: combined reduction may only shrink ({} > {})",
+                name, label, cv.stats.states_stored, b.stats.states_stored
+            );
+            assert_eq!(
+                cv.stats.states_stored, ci.stats.states_stored,
+                "{}/{}: both engines agree under the combined reduction",
+                name, label
+            );
+        }
+    }
+}
+
+// ------------------------------------------- channel-aware ample sets --
+
+/// Straight-line exclusive producer/consumer over a buffered channel:
+/// the sends and receives are local-only channel ops, so the
+/// channel-aware eligibility rule makes them singleton ample sets.
+const CHAN_POR_SRC: &str = "chan c = [2] of {byte};\nint got;\n\
+     active proctype prod() { c ! 1; c ! 2 }\n\
+     active proctype cons() { byte x; c ? x; c ? x; got = x }";
+
+#[test]
+fn exclusive_channel_roles_feed_ample_eligibility() {
+    let sys = PromelaSystem::from_source(CHAN_POR_SRC).unwrap();
+    let a = Analysis::of(&sys.prog);
+    // prod is ptype 0, cons ptype 1; channel 0 has one static site each
+    assert_eq!(a.exclusive_sender(0), Some(0));
+    assert_eq!(a.exclusive_recver(0), Some(1));
+    // the sends and the first recv are ample-eligible at their pcs; the
+    // final recv chain ends in a global write, but the recv itself is
+    // still a local-only channel op
+    assert!(a.por_safe(0, 0), "prod's first send is ample");
+    assert!(a.por_safe(1, 0), "cons's first recv is ample");
+
+    // two senders on one channel: sender exclusivity dissolves
+    let two = PromelaSystem::from_source(
+        "chan c = [2] of {byte};\n\
+         active proctype a() { c ! 1 }\nactive proctype b() { c ! 2 }\n\
+         active proctype r() { byte x; c ? x; c ? x }",
+    )
+    .unwrap();
+    let a2 = Analysis::of(&two.prog);
+    assert_eq!(a2.exclusive_sender(0), None, "two senders poison the role");
+    assert_eq!(a2.exclusive_recver(0), Some(2));
+    assert!(!a2.por_safe(0, 0), "non-exclusive send is not ample");
+
+    // rendezvous (cap 0) is excluded regardless of exclusivity
+    let rv = PromelaSystem::from_source(
+        "chan c = [0] of {byte};\n\
+         active proctype s() { c ! 1 }\nactive proctype r() { byte x; c ? x }",
+    )
+    .unwrap();
+    let a3 = Analysis::of(&rv.prog);
+    assert!(!a3.por_safe(0, 0), "rendezvous send is never ample");
+    assert!(!a3.por_safe(1, 0), "rendezvous recv is never ample");
+}
+
+#[test]
+fn channel_por_strictly_reduces_and_preserves_the_verdict() {
+    let prop = SafetyLtl::parse("G(got != 2)").unwrap();
+    for (label, base) in [("dfs", opts_dfs()), ("det4", opts_det4())] {
+        let por = CheckOptions { por: true, ..base.clone() };
+        let b = check(&PromelaVm::from_source(CHAN_POR_SRC).unwrap(), &prop, &base).unwrap();
+        let p = check(&PromelaVm::from_source(CHAN_POR_SRC).unwrap(), &prop, &por).unwrap();
+        assert_eq!(b.found(), p.found(), "{}: verdict preserved", label);
+        assert!(b.found(), "{}: the final recv does commit got=2", label);
+        assert_eq!(b.exhausted, p.exhausted, "{}: exhausted", label);
         assert!(
-            pi.stats.states_stored <= bi.stats.states_stored,
-            "{}: por may only shrink the store ({} > {})",
-            name, pi.stats.states_stored, bi.stats.states_stored
+            p.stats.states_stored < b.stats.states_stored,
+            "{}: channel-aware por must strictly reduce ({} vs {})",
+            label, p.stats.states_stored, b.stats.states_stored
         );
-        assert_eq!(
-            pi.stats.states_stored, pv.stats.states_stored,
-            "{}: both reduced engines store the same count",
-            name
-        );
+        let pi =
+            check(&PromelaSystem::from_source(CHAN_POR_SRC).unwrap(), &prop, &por).unwrap();
+        assert_eq!(pi.stats.states_stored, p.stats.states_stored, "{}: engines agree", label);
     }
 }
 
@@ -557,6 +660,11 @@ fn reductions_preserve_the_tuning_optimum() {
     for (label, model, opts) in [
         ("vm+por", PromelaVm::from_source(&src).unwrap(), &por),
         ("vm+dead-slots", PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction(), &plain),
+        (
+            "vm+por+dead-slots",
+            PromelaVm::from_source(&src).unwrap().with_dead_slot_reduction(),
+            &por,
+        ),
     ] {
         let r = tune(&model, Method::Exhaustive, opts, &swarm, Some(10_000)).unwrap();
         assert_eq!((r.optimal.wg, r.optimal.ts, r.t_min), want, "{}: optimum", label);

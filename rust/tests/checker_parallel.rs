@@ -349,6 +349,49 @@ fn deterministic_frontier_trails_and_budgets() {
 }
 
 #[test]
+fn deterministic_frontier_memory_abort_is_thread_independent() {
+    // the hash-prefix-sharded dedup pass uses a fixed shard count, so
+    // store capacities — and the level at which the budget trips — must
+    // not depend on how many workers scanned the shards
+    let m = Tree { depth: 16 };
+    let p = SafetyLtl::parse("G(true)").unwrap();
+    let run = |threads: u32| {
+        let mut o = dopts(threads);
+        o.memory_budget = 256 * 1024;
+        let r = check_parallel(&m, &p, &o).unwrap();
+        assert_eq!(r.stats.abort, Some(Abort::MemoryLimit));
+        assert!(!r.exhausted);
+        r.stats.states_stored
+    };
+    let four = run(4);
+    assert_eq!(run(2), four, "abort point is thread-count-independent");
+    assert_eq!(run(1), four);
+}
+
+#[test]
+fn deterministic_frontier_por_is_reproducible_across_thread_counts() {
+    // --por on the det frontier: ample selection is a pure function of
+    // the state, so the reduced exploration — counts AND the violation
+    // sequence — must be byte-stable across thread counts
+    let src = mcautotune::promela::templates::minimum_pml(8, 4, 3);
+    let p = SafetyLtl::parse("G(!FIN)").unwrap();
+    let run = |threads: u32| {
+        let m = mcautotune::promela::PromelaVm::from_source(&src).unwrap();
+        let mut o = dopts(threads);
+        o.por = true;
+        o.collect_all = true;
+        let r = check_parallel(&m, &p, &o).unwrap();
+        assert!(r.found());
+        let times: Vec<i64> =
+            r.violations.iter().map(|v| v.trail.final_var(&m, "time").unwrap()).collect();
+        (r.stats.states_stored, r.stats.transitions, times)
+    };
+    let four = run(4);
+    assert_eq!(run(2), four, "por reduction is thread-count-independent");
+    assert_eq!(run(1), four);
+}
+
+#[test]
 fn deterministic_frontier_on_minmodel_matches_sequential() {
     let m = MinModel::paper(64, 4).unwrap();
     let p = SafetyLtl::parse("G(FIN -> result == 1)").unwrap();

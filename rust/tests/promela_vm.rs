@@ -13,7 +13,7 @@
 //! (constant folding, short-circuit jumps, conditional expressions) to
 //! the tree-walk on generated expression trees.
 
-use mcautotune::checker::{check, CheckOptions, Frontier};
+use mcautotune::checker::{check, CheckOptions, Compression, Frontier, StoreKind};
 use mcautotune::coordinator::{
     merge_results, plan_batch, run_batch, BatchOptions, JobEngine, JobModel, ModelKind,
     ResultCache, ShardModel, TuningJob,
@@ -248,6 +248,137 @@ fn vm_matches_interpreter_without_atomic_coalescing() {
     let prop = SafetyLtl::parse("G(x != 2)").unwrap();
     let opts = CheckOptions { collect_all: true, ..CheckOptions::default() };
     assert_engines_agree("atomic-stepwise", "dfs", &interp, &vm, &prop, &opts);
+}
+
+// --------------------------------------------------- exact store regimes --
+
+/// `--compress collapse` and `--store spill` are *exact* store regimes:
+/// on the full corpus each must reproduce the baseline full-store report
+/// — verdict, state counts, violation sequence and every trail — and the
+/// two engines must still agree with each other under the regime.
+/// Collapse additionally runs under the deterministic parallel frontier
+/// (its per-shard component stores); spill is sequential-only.
+#[test]
+fn collapse_and_spill_match_the_baseline_on_the_full_corpus() {
+    let dir = std::env::temp_dir().join(format!("mcat_spill_corpus_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dfs = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let det4 = CheckOptions {
+        collect_all: true,
+        threads: 4,
+        frontier: Frontier::Deterministic,
+        ..CheckOptions::default()
+    };
+    for (name, src, prop) in corpus() {
+        let interp = PromelaSystem::from_source(&src).unwrap();
+        let vm = PromelaVm::from_source(&src).unwrap();
+        let prop = SafetyLtl::parse(prop).unwrap();
+        let base = check(&vm, &prop, &dfs).unwrap();
+        for (label, opts) in [
+            ("collapse", CheckOptions { compress: Compression::Collapse, ..dfs.clone() }),
+            ("collapse-det4", CheckOptions { compress: Compression::Collapse, ..det4.clone() }),
+            (
+                "spill",
+                CheckOptions {
+                    store: StoreKind::Spill,
+                    spill_dir: Some(dir.clone()),
+                    ..dfs.clone()
+                },
+            ),
+        ] {
+            assert_engines_agree(name, label, &interp, &vm, &prop, &opts);
+            let r = check(&vm, &prop, &opts).unwrap();
+            assert_eq!(base.exhausted, r.exhausted, "{}/{}: exhausted", name, label);
+            assert_eq!(
+                base.stats.states_stored, r.stats.states_stored,
+                "{}/{}: states_stored",
+                name, label
+            );
+            assert_eq!(
+                base.stats.states_matched, r.stats.states_matched,
+                "{}/{}: states_matched",
+                name, label
+            );
+            assert_eq!(
+                base.violations.len(),
+                r.violations.len(),
+                "{}/{}: violation count",
+                name,
+                label
+            );
+            for (k, (vb, vr)) in base.violations.iter().zip(&r.violations).enumerate() {
+                assert_eq!(vb.depth, vr.depth, "{}/{}: violation {} depth", name, label, k);
+                assert_eq!(
+                    vb.trail.states.len(),
+                    vr.trail.states.len(),
+                    "{}/{}: violation {} trail length",
+                    name,
+                    label,
+                    k
+                );
+                for (sb, sr) in vb.trail.states.iter().zip(&vr.trail.states) {
+                    assert_eq!(
+                        vm.describe(sb),
+                        vm.describe(sr),
+                        "{}/{}: violation {} trail state",
+                        name,
+                        label,
+                        k
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The regimes also leave the tuner's answer untouched (trail extraction
+/// walks the same violations, so the optimum cannot move).
+#[test]
+fn store_regimes_preserve_the_tuning_optimum() {
+    let src = templates::minimum_pml(8, 4, 3);
+    let swarm = mcautotune::swarm::SwarmConfig::default();
+    let base = tune(
+        &PromelaVm::from_source(&src).unwrap(),
+        Method::Exhaustive,
+        &CheckOptions::default(),
+        &swarm,
+        Some(10_000),
+    )
+    .unwrap();
+    let want = (base.optimal.wg, base.optimal.ts, base.t_min, base.states_explored);
+    let dir = std::env::temp_dir().join(format!("mcat_spill_tune_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (label, opts) in [
+        (
+            "collapse",
+            CheckOptions { compress: Compression::Collapse, ..CheckOptions::default() },
+        ),
+        (
+            "spill",
+            CheckOptions {
+                store: StoreKind::Spill,
+                spill_dir: Some(dir.clone()),
+                ..CheckOptions::default()
+            },
+        ),
+    ] {
+        let r = tune(
+            &PromelaVm::from_source(&src).unwrap(),
+            Method::Exhaustive,
+            &opts,
+            &swarm,
+            Some(10_000),
+        )
+        .unwrap();
+        assert_eq!(
+            (r.optimal.wg, r.optimal.ts, r.t_min, r.states_explored),
+            want,
+            "{}: tuning result",
+            label
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ------------------------------------------------- expression equivalence --

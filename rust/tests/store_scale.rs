@@ -1,0 +1,118 @@
+//! Checker-scale acceptance tests (ISSUE 9): COLLAPSE compression must
+//! strictly shrink the visited-store footprint without changing any
+//! observable result, and the spillable store must complete — with an
+//! identical verdict and trail — a run whose in-RAM twin exceeds the
+//! memory budget (graceful OOM degradation instead of `MemoryLimit`).
+
+use mcautotune::checker::{check, Abort, CheckOptions, Compression, StoreKind};
+use mcautotune::model::{SafetyLtl, TransitionSystem};
+use mcautotune::promela::{templates, PromelaVm};
+
+/// Full corpus-model exploration (property violated at every FIN state,
+/// collect_all so the whole space is swept) under three regimes:
+/// unbounded full store (the baseline), budget-bounded full store (must
+/// die), budget-bounded spill store (must finish and match the baseline).
+#[test]
+fn spill_completes_where_the_in_ram_store_exceeds_the_budget() {
+    let src = templates::minimum_pml(32, 4, 3);
+    let prop = SafetyLtl::parse("G(!FIN)").unwrap();
+    let vm = PromelaVm::from_source(&src).unwrap();
+
+    let unbounded = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let baseline = check(&vm, &prop, &unbounded).unwrap();
+    assert!(baseline.exhausted && baseline.found());
+    // two preconditions for the bounded twin to die: the sweep must
+    // outgrow the budget, and must store enough states for the DFS's
+    // amortized (every-4096-stores) budget check to fire at all
+    assert!(
+        baseline.stats.bytes_used > 512 * 1024,
+        "model must outgrow the bounded budget for this test to bite ({} bytes)",
+        baseline.stats.bytes_used
+    );
+    assert!(
+        baseline.stats.states_stored > 4096,
+        "model must cross the amortized budget checkpoint ({} states)",
+        baseline.stats.states_stored
+    );
+
+    let mut bounded = unbounded.clone();
+    bounded.memory_budget = 512 * 1024;
+    let full = check(&vm, &prop, &bounded).unwrap();
+    assert_eq!(full.stats.abort, Some(Abort::MemoryLimit), "in-RAM twin must die");
+    assert!(!full.exhausted);
+
+    let dir = std::env::temp_dir().join(format!("mcat_oom_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut spill = bounded.clone();
+    spill.store = StoreKind::Spill;
+    spill.spill_dir = Some(dir.clone());
+    let sp = check(&vm, &prop, &spill).unwrap();
+    assert!(sp.exhausted, "spill must absorb the overflow: {:?}", sp.stats.abort);
+    assert_eq!(sp.stats.states_stored, baseline.stats.states_stored);
+    assert_eq!(sp.stats.states_matched, baseline.stats.states_matched);
+    assert_eq!(sp.stats.transitions, baseline.stats.transitions);
+    assert_eq!(sp.violations.len(), baseline.violations.len());
+    for (vb, vs) in baseline.violations.iter().zip(&sp.violations) {
+        assert_eq!(vb.depth, vs.depth, "violation depths match");
+        assert_eq!(vb.trail.states.len(), vs.trail.states.len());
+        for (sb, ss) in vb.trail.states.iter().zip(&vs.trail.states) {
+            assert_eq!(vm.describe(sb), vm.describe(ss), "trail states match");
+        }
+    }
+    // RAM-resident footprint respected the regime: far below the baseline
+    assert!(
+        sp.stats.bytes_used < baseline.stats.bytes_used,
+        "spill resident bytes {} must undercut the full store's {}",
+        sp.stats.bytes_used,
+        baseline.stats.bytes_used
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The anti-no-op pin for `--compress collapse`: on minimum-8 (flat
+/// packed frames repeat heavily across states) the compressed store's
+/// peak footprint must be *strictly* below the full store's, while every
+/// search statistic stays identical. The sequential store only ever
+/// grows, so the end-of-run `bytes_used` is the peak.
+#[test]
+fn collapse_strictly_shrinks_the_store_on_minimum_8() {
+    let src = templates::minimum_pml(8, 4, 3);
+    let prop = SafetyLtl::parse("G(!FIN)").unwrap();
+    let vm = PromelaVm::from_source(&src).unwrap();
+    let base_opts = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let col_opts = CheckOptions { compress: Compression::Collapse, ..base_opts.clone() };
+
+    let base = check(&vm, &prop, &base_opts).unwrap();
+    let col = check(&vm, &prop, &col_opts).unwrap();
+    assert_eq!(base.exhausted, col.exhausted);
+    assert_eq!(base.stats.states_stored, col.stats.states_stored);
+    assert_eq!(base.stats.states_matched, col.stats.states_matched);
+    assert_eq!(base.stats.transitions, col.stats.transitions);
+    assert_eq!(base.violations.len(), col.violations.len());
+    assert!(
+        col.stats.bytes_used < base.stats.bytes_used,
+        "collapse must strictly shrink store.bytes_peak ({} vs {})",
+        col.stats.bytes_used,
+        base.stats.bytes_used
+    );
+}
+
+/// Collapse on a model without a native region split (the default
+/// single-region `encode_regions`) stays exact: same results, and the
+/// indirection overhead is bounded (tuple table + one component per
+/// distinct state).
+#[test]
+fn collapse_without_a_region_split_stays_exact() {
+    let src = "int x;\nactive proctype main() { run a(); run b() }\n\
+               proctype a() { x = 1 }\nproctype b() { x = 2 }";
+    // the interpreter keeps the default encode_regions (one region)
+    let interp = mcautotune::promela::PromelaSystem::from_source(src).unwrap();
+    let prop = SafetyLtl::parse("G(x != 2)").unwrap();
+    let base_opts = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let col_opts = CheckOptions { compress: Compression::Collapse, ..base_opts.clone() };
+    let base = check(&interp, &prop, &base_opts).unwrap();
+    let col = check(&interp, &prop, &col_opts).unwrap();
+    assert_eq!(base.stats.states_stored, col.stats.states_stored);
+    assert_eq!(base.found(), col.found());
+    assert_eq!(base.exhausted, col.exhausted);
+}

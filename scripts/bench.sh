@@ -9,10 +9,15 @@
 #
 # JSON format: {bench, model, states, speedup_par4_vs_seq,
 # reduction_por_states_ratio, reduction_deadslots_states_ratio,
+# compression_bytes_ratio, spill_slowdown_ratio,
 # results: [{name, iters, mean_ns, per_sec}]} — one entry per bench case,
 # sequential + parallel exploration throughput first. The two reduction
 # ratios are reduced/baseline states_stored on the Promela minimum model
-# (1.0 = the reduction degraded to a no-op).
+# (1.0 = the reduction degraded to a no-op). compression_bytes_ratio is
+# the collapse/full resident store footprint at identical coverage
+# (explore/collapse row; < 1.0 = COLLAPSE interning pays), and
+# spill_slowdown_ratio is explore/spill vs explore/pml-seq wall time
+# under a 512 KiB budget that forces frozen runs to disk.
 set -euo pipefail
 if ! command -v cargo >/dev/null 2>&1; then
   echo "error: cargo not found — measuring BENCH_checker.json needs a Rust toolchain" >&2
