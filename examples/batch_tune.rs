@@ -53,6 +53,58 @@ fn main() -> mcautotune::util::error::Result<()> {
     mcautotune::ensure!(warm.cache_hits == jobs.len() as u64, "warm run must hit on every job");
     mcautotune::ensure!(warm.total_states() == 0, "warm run must explore zero states");
 
+    // ---- surrogate warm-start: observations make new sizes cheap -----
+    //
+    // `search=surrogate` jobs harvest per-family observations into the
+    // cache as they complete. A cold batch over three sizes of one family
+    // falls back to exhaustive search (no observations yet) but seeds the
+    // cache; a later job at a *new* size of the same family then rides
+    // the surrogate path — k-NN proposals over the harvested points, an
+    // exact point oracle, and one certificate sweep — and still lands on
+    // the identical optimum. In production:
+    //
+    //   mcautotune batch jobs.spec --search surrogate --cache results.json
+    let surr_cache_path = std::env::temp_dir()
+        .join(format!("mcat_batch_tune_surr_{}.json", std::process::id()));
+    std::fs::remove_file(&surr_cache_path).ok();
+    let warmup = TuningJob::parse_spec(
+        "job minimum size=16 np=4 gmt=3 search=surrogate shards=1\n\
+         job minimum size=32 np=4 gmt=3 search=surrogate shards=1\n\
+         job minimum size=64 np=4 gmt=3 search=surrogate shards=1\n",
+    )?;
+    let mut surr_cache = ResultCache::open(&surr_cache_path)?;
+    let seeded = run_batch(&warmup, &opts, &mut surr_cache)?;
+    for o in &seeded.outcomes {
+        assert_eq!(o.result.t_min, o.job.optimum_time()? as i64, "job {}", o.job.name);
+    }
+    println!(
+        "\n[surrogate] cold batch over sizes 16/32/64 harvested {} observation row(s)",
+        surr_cache.observation_count()
+    );
+    mcautotune::ensure!(
+        surr_cache.observation_count() >= 3,
+        "three completed jobs must harvest enough observations to warm-start"
+    );
+
+    let target =
+        TuningJob::parse_spec("job minimum size=128 np=4 gmt=3 search=surrogate shards=1\n")?;
+    let surr = run_batch(&target, &opts, &mut surr_cache)?;
+    let out = &surr.outcomes[0];
+    assert_eq!(out.result.t_min, out.job.optimum_time()? as i64, "surrogate optimum is exact");
+    mcautotune::ensure!(
+        out.result.log.iter().any(|l| l.contains("certificate:")),
+        "the warm job must take the surrogate path, not the fallback"
+    );
+    for line in out.result.log.iter().filter(|l| l.starts_with("surrogate:")) {
+        println!("[surrogate] size=128: {}", line);
+    }
+    println!(
+        "[surrogate] size=128 optimum WG={} TS={} t_min={} — identical to exhaustive, \
+         in a handful of point evaluations",
+        out.result.optimal.wg, out.result.optimal.ts, out.result.t_min
+    );
+    std::fs::remove_file(&surr_cache_path).ok();
+
     // ---- worker mode: the same batch drained across processes --------
     //
     // In production this is three commands on any machines that share the

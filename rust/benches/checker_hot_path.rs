@@ -10,8 +10,10 @@ use mcautotune::checker::{
     check_parallel, check_sequential, CheckOptions, Compression, StoreKind, VisitedStore,
 };
 use mcautotune::model::{EvalScratch, SafetyLtl, TransitionSystem};
-use mcautotune::platform::{AbstractModel, Granularity, PlatformConfig};
+use mcautotune::platform::{enumerate_tunings, AbstractModel, Granularity, MinModel, PlatformConfig};
 use mcautotune::promela::{templates, PromelaSystem, PromelaVm};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{harvest_observations, surrogate_tune, tune, Method, SurrogateOptions};
 use mcautotune::util::bench::{black_box, Bencher};
 
 fn env_u32(name: &str, default: u32) -> u32 {
@@ -206,6 +208,47 @@ fn main() {
         full_rep.stats.bytes_used, col_rep.stats.bytes_used, spill_rep.stats.bytes_used
     );
 
+    // --- tuner search modes: exhaustive bisection vs surrogate ----------
+    // surrogate_eval_fraction is surrogate/exhaustive checker invocations
+    // on a warm observation store (< 1.0 = the cache-seeded proposer
+    // pays); the certificate guarantees the optima are identical, so the
+    // pair measures pure search-strategy cost at equal answers.
+    let tune_size = 64u32;
+    let tm = MinModel::paper(tune_size, 4).unwrap();
+    let sw = SwarmConfig::default();
+    let t_ini = Some(1i64 << 17);
+    let ex = tune(&tm, Method::Exhaustive, &seq_opts, &sw, t_ini).unwrap();
+    let exhaustive_calls = ex.log.len() as u64; // one log line per Cex(T) query
+    b.bench_elems("tune/exhaustive", exhaustive_calls, || {
+        tune(&tm, Method::Exhaustive, &seq_opts, &sw, t_ini).unwrap().t_min as u64
+    });
+    // warm observation store: harvests from smaller sizes of the family
+    let mut obs_seeds = Vec::new();
+    for s in [16u32, 32] {
+        let m = MinModel::paper(s, 4).unwrap();
+        let r = tune(&m, Method::Exhaustive, &seq_opts, &sw, t_ini).unwrap();
+        obs_seeds.extend(harvest_observations(&r, s));
+    }
+    obs_seeds.extend(harvest_observations(&ex, tune_size));
+    let lattice = enumerate_tunings(tune_size).unwrap();
+    let surr_cfg = SurrogateOptions::default();
+    let rep =
+        surrogate_tune(&tm, &seq_opts, &sw, t_ini, &lattice, tune_size, &obs_seeds, &surr_cfg)
+            .unwrap();
+    assert!(!rep.fell_back, "warm store must take the surrogate path");
+    assert_eq!(rep.result.t_min, ex.t_min, "surrogate changed the optimum");
+    let surrogate_calls = rep.oracle_calls;
+    b.bench_elems("tune/surrogate", surrogate_calls, || {
+        surrogate_tune(&tm, &seq_opts, &sw, t_ini, &lattice, tune_size, &obs_seeds, &surr_cfg)
+            .unwrap()
+            .result
+            .t_min as u64
+    });
+    println!(
+        "tuner search: exhaustive {} Cex queries, surrogate {} oracle calls (t_min {} both)",
+        exhaustive_calls, surrogate_calls, ex.t_min
+    );
+
     // --- arena Full-store inserts (fresh + duplicate probes) ------------
     let items: Vec<[u8; 24]> = (0..100_000u64)
         .map(|i| {
@@ -278,6 +321,15 @@ fn main() {
         compression_bytes_ratio
     ));
     json.push_str(&format!("  \"spill_slowdown_ratio\": {:.3},\n", spill_slowdown));
+    let surrogate_eval_fraction = if exhaustive_calls > 0 {
+        surrogate_calls as f64 / exhaustive_calls as f64
+    } else {
+        0.0
+    };
+    json.push_str(&format!(
+        "  \"surrogate_eval_fraction\": {:.3},\n",
+        surrogate_eval_fraction
+    ));
     json.push_str("  \"results\": [\n");
     let n = b.results().len();
     for (i, r) in b.results().iter().enumerate() {

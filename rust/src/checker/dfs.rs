@@ -146,8 +146,10 @@ impl CheckOptions {
 
     /// Reject store/compression combinations that have no implementation.
     pub(super) fn validate_store(&self) -> Result<()> {
-        if self.compress == Compression::Collapse && self.store != StoreKind::Full {
-            crate::bail!("--compress collapse requires --store full");
+        if self.compress == Compression::Collapse
+            && !matches!(self.store, StoreKind::Full | StoreKind::HashCompact)
+        {
+            crate::bail!("--compress collapse requires --store full or --store compact");
         }
         Ok(())
     }
@@ -159,6 +161,9 @@ impl CheckOptions {
         match (self.store, self.compress) {
             (StoreKind::Full, Compression::Collapse) => {
                 VisitedStore::collapsed(self.presize_hint())
+            }
+            (StoreKind::HashCompact, Compression::Collapse) => {
+                VisitedStore::compact_collapsed(self.presize_hint())
             }
             (StoreKind::Spill, _) => {
                 let dir = self.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
@@ -639,8 +644,15 @@ mod tests {
         let p = SafetyLtl::parse("G(true)").unwrap();
         let mut o = CheckOptions::default();
         o.compress = Compression::Collapse;
-        o.store = StoreKind::HashCompact;
+        o.store = StoreKind::Bitstate { log2_bits: 20, hashes: 3 };
         assert!(check(&m, &p, &o).is_err());
+        // hash-compact gained a region-aware collapse tier — same counts
+        // as the exact run on a collision-free space
+        o.store = StoreKind::HashCompact;
+        let cc = check(&m, &p, &o).unwrap();
+        o.store = StoreKind::Full;
+        let full = check(&m, &p, &o).unwrap();
+        assert_eq!(cc.stats.states_stored, full.stats.states_stored);
     }
 
     #[test]

@@ -775,14 +775,19 @@ where
     let start = Instant::now();
     let threads = opts.effective_threads().max(1) as usize;
     let compiled = prop.compile(model)?;
-    let compact = matches!(opts.store, StoreKind::HashCompact);
     let collapse = opts.compress == Compression::Collapse;
+    // compact+collapse routes through the store (the region-aware tuple
+    // hash differs from the raw-encoding hash the backlink map is keyed
+    // on), so the map-as-visited-set shortcut only applies uncompressed
+    let compact = matches!(opts.store, StoreKind::HashCompact) && !collapse;
     let shift = 64 - (DET_SHARDS as u64).trailing_zeros();
     let shard_hint = (opts.presize_hint() / DET_SHARDS as u64).saturating_mul(5) / 4;
     let mut shards: Vec<DetShard> = (0..DET_SHARDS)
         .map(|_| DetShard {
             store: if compact {
                 VisitedStore::new(StoreKind::HashCompact) // unused; stays empty
+            } else if collapse && matches!(opts.store, StoreKind::HashCompact) {
+                VisitedStore::compact_collapsed(shard_hint)
             } else if collapse {
                 VisitedStore::collapsed(shard_hint)
             } else {

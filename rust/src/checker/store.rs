@@ -511,6 +511,14 @@ impl SpillStore {
 pub enum VisitedStore {
     Full(FullStore),
     Collapse(CollapseStore),
+    /// `--store compact --compress collapse`: region-aware hash
+    /// compaction. Regions are interned exactly (like [`CollapseStore`]),
+    /// but only the hash of the interned index *tuple* is kept per state
+    /// — the per-state footprint of hash-compact with the collision
+    /// behavior keyed on the component split rather than the raw bytes.
+    /// Shared components are stored exactly once, so two states that
+    /// differ in one region can never collide through the shared part.
+    CompactCollapse { components: FullStore, set: FxHashSet<u64>, tuple_buf: Vec<u8> },
     Spill(SpillStore),
     HashCompact { set: FxHashSet<u64> },
     Bitstate { table: Vec<u64>, mask: u64, hashes: u8, set_bits: u64 },
@@ -550,6 +558,22 @@ impl VisitedStore {
         })
     }
 
+    /// A region-aware hash-compact store — see
+    /// [`CompactCollapse`](Self::CompactCollapse). Fed through
+    /// [`insert_regions`](Self::insert_regions) like the collapse store.
+    pub fn compact_collapsed(expected: u64) -> Self {
+        let expected = expected.min(PRESIZE_CAP) as usize;
+        Self::CompactCollapse {
+            components: FullStore::new(),
+            set: if expected == 0 {
+                FxHashSet::default()
+            } else {
+                FxHashSet::with_capacity_and_hasher(expected, Default::default())
+            },
+            tuple_buf: Vec::new(),
+        }
+    }
+
     /// A disk-spillable exact store — see [`SpillStore`]. `watermark` is
     /// the RAM ceiling that triggers a freeze (typically half the run's
     /// memory budget, leaving room for the search stack).
@@ -586,6 +610,7 @@ impl VisitedStore {
         match self {
             Self::Full(f) => f.insert_hashed(enc, hash_bytes(enc)),
             Self::Collapse(c) => c.insert_hashed(enc, hash_bytes(enc), &[]),
+            Self::CompactCollapse { .. } => self.insert_compact_collapsed(enc, &[]),
             Self::Spill(s) => s.insert_hashed(enc, hash_bytes(enc)),
             Self::HashCompact { set } => set.insert(hash_bytes(enc)),
             Self::Bitstate { .. } => self.insert_bitstate(enc),
@@ -600,6 +625,7 @@ impl VisitedStore {
         match self {
             Self::Full(f) => f.insert_hashed(enc, h),
             Self::Collapse(c) => c.insert_hashed(enc, h, &[]),
+            Self::CompactCollapse { .. } => self.insert_compact_collapsed(enc, &[]),
             Self::Spill(s) => s.insert_hashed(enc, h),
             Self::HashCompact { set } => set.insert(h),
             Self::Bitstate { .. } => self.insert_bitstate(enc),
@@ -614,8 +640,37 @@ impl VisitedStore {
     pub fn insert_regions(&mut self, enc: &[u8], h: u64, bounds: &[u32]) -> bool {
         match self {
             Self::Collapse(c) => c.insert_hashed(enc, h, bounds),
+            Self::CompactCollapse { .. } => self.insert_compact_collapsed(enc, bounds),
             _ => self.insert_hashed(enc, h),
         }
+    }
+
+    /// Region-aware hash-compact insert: intern each region exactly, then
+    /// record only the hash of the LE index tuple. Same split contract as
+    /// [`CollapseStore::insert_hashed`]; the raw encoding's hash is not
+    /// used — collisions are keyed on the component tuple.
+    fn insert_compact_collapsed(&mut self, enc: &[u8], bounds: &[u32]) -> bool {
+        let Self::CompactCollapse { components, set, tuple_buf } = self else {
+            unreachable!("insert_compact_collapsed on non-compact-collapse store");
+        };
+        let mut tuple = std::mem::take(tuple_buf);
+        tuple.clear();
+        let mut start = 0usize;
+        for &b in bounds {
+            let end = (b as usize).min(enc.len());
+            let region = &enc[start..end];
+            let (idx, _) = components.intern_hashed(region, hash_bytes(region));
+            tuple.extend_from_slice(&idx.to_le_bytes());
+            start = end;
+        }
+        if start < enc.len() || bounds.is_empty() {
+            let region = &enc[start..];
+            let (idx, _) = components.intern_hashed(region, hash_bytes(region));
+            tuple.extend_from_slice(&idx.to_le_bytes());
+        }
+        let new = set.insert(hash_bytes(&tuple));
+        *tuple_buf = tuple;
+        new
     }
 
     fn insert_bitstate(&mut self, enc: &[u8]) -> bool {
@@ -641,6 +696,7 @@ impl VisitedStore {
         match self {
             Self::Full(f) => f.len(),
             Self::Collapse(c) => c.len(),
+            Self::CompactCollapse { set, .. } => set.len() as u64,
             Self::Spill(s) => s.len(),
             Self::HashCompact { set } => set.len() as u64,
             Self::Bitstate { set_bits, hashes, .. } => set_bits / (*hashes).max(1) as u64,
@@ -655,6 +711,9 @@ impl VisitedStore {
         match self {
             Self::Full(f) => f.bytes_used(),
             Self::Collapse(c) => c.bytes_used(),
+            Self::CompactCollapse { components, set, tuple_buf } => {
+                components.bytes_used() + set.len() as u64 * 16 + tuple_buf.capacity() as u64
+            }
             Self::Spill(s) => s.bytes_used(),
             Self::HashCompact { set } => set.len() as u64 * 16,
             Self::Bitstate { table, .. } => table.len() as u64 * 8,
@@ -830,6 +889,35 @@ mod tests {
             assert!(!col.insert_regions(&enc, hash_bytes(&enc), &bounds));
         }
         assert_eq!(full.len(), col.len());
+    }
+
+    #[test]
+    fn compact_collapse_agrees_with_full_and_shrinks() {
+        // region-aware hash-compact: same dedup decisions as the exact
+        // stores on a collision-free corpus, smaller footprint than full
+        let mut full = VisitedStore::new(StoreKind::Full);
+        let mut cc = VisitedStore::compact_collapsed(0);
+        for (enc, bounds) in region_states(4000) {
+            let h = hash_bytes(&enc);
+            assert_eq!(full.insert_hashed(&enc, h), cc.insert_regions(&enc, h, &bounds));
+        }
+        for (enc, bounds) in region_states(4000) {
+            assert!(!cc.insert_regions(&enc, hash_bytes(&enc), &bounds));
+        }
+        assert_eq!(full.len(), cc.len());
+        assert!(
+            cc.bytes_used() < full.bytes_used(),
+            "compact+collapse must shrink the store: {} vs {}",
+            cc.bytes_used(),
+            full.bytes_used()
+        );
+        // boundary shapes follow the collapse contract
+        let mut cc = VisitedStore::compact_collapsed(16);
+        assert!(cc.insert_regions(b"abcdef", 1, &[2, 6]));
+        assert!(!cc.insert_regions(b"abcdef", 1, &[2, 6]));
+        assert!(cc.insert(b""));
+        assert!(!cc.insert(b""));
+        assert_eq!(cc.len(), 2);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! an unsupported `version` stays a hard error — it belongs to a newer
 //! binary, not to the garbage pile.
 
-use crate::tuner::{CachedTune, Method, TuneCache, TuneResult};
+use crate::tuner::{CachedTune, Method, Observation, TuneCache, TuneResult};
 use crate::util::error::{bail, Context, Result};
 use crate::util::hash::{hash_bytes, FxHashMap};
 use crate::util::manifest::{write_atomic, Json};
@@ -150,6 +150,79 @@ impl ResultCache {
         let mut entries: Vec<&CacheEntry> = self.entries.values().collect();
         entries.sort_by(|a, b| a.desc.cmp(&b.desc));
         entries
+    }
+
+    /// Record one surrogate-training observation as an ordinary cache
+    /// entry (`method="obs"`, desc `obs size=.. wg=.. ts=.. family=..`).
+    /// Observations never collide with job results — `lookup` requires
+    /// a full-description match — and re-recording the same coordinates
+    /// keeps the *best* (lowest) observed time, so a poisoned high value
+    /// is displaced by any real measurement. `family` is the job's
+    /// size-independent identity ([`super::job::TuningJob::obs_family`]):
+    /// all sizes of one (model, platform) share a family, which is what
+    /// makes cross-size neighbor warm-starts possible.
+    pub fn record_observation(&mut self, family: &str, o: Observation) {
+        let desc = format!("obs size={} wg={} ts={} family={}", o.size, o.wg, o.ts, family);
+        let key = hash_bytes(desc.as_bytes());
+        match self.entries.get_mut(&key) {
+            Some(e) if e.desc == desc => e.t_min = e.t_min.min(o.time),
+            Some(_) => {} // hash collision with a foreign entry: keep it
+            None => {
+                self.entries.insert(
+                    key,
+                    CacheEntry {
+                        desc,
+                        wg: o.wg,
+                        ts: o.ts,
+                        t_min: o.time,
+                        steps: 0,
+                        method: "obs".into(),
+                        cold_states: 0,
+                        cold_peak_bytes: 0,
+                        cold_wall_ms: 0,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Scan the observations of one family — **every** input size, so a
+    /// job at a new size (or on a new platform sharing the family) warm-
+    /// starts from its cached near-neighbors. Sorted by (size, wg, ts)
+    /// for deterministic downstream predictions.
+    pub fn observations(&self, family: &str) -> Vec<Observation> {
+        let suffix = format!(" family={}", family);
+        let mut out: Vec<Observation> = self
+            .entries
+            .values()
+            .filter(|e| e.method == "obs" && e.desc.starts_with("obs ") && e.desc.ends_with(&suffix))
+            .filter_map(|e| {
+                let size = e
+                    .desc
+                    .split_whitespace()
+                    .find_map(|tok| tok.strip_prefix("size=")?.parse::<u32>().ok())?;
+                Some(Observation { wg: e.wg, ts: e.ts, size, time: e.t_min })
+            })
+            .collect();
+        out.sort_by_key(|o| (o.size, o.wg, o.ts, o.time));
+        out
+    }
+
+    /// Number of observation rows (vs. [`len`](Self::len) total entries)
+    /// — the `cache ls` column that tells a user whether a surrogate run
+    /// will warm-start.
+    pub fn observation_count(&self) -> usize {
+        self.entries.values().filter(|e| e.method == "obs").count()
+    }
+
+    /// Age of the backing file in whole seconds (mtime-based — entries
+    /// deliberately carry no wall-clock timestamps, so cache files stay
+    /// byte-identical across equivalent runs). `None` for in-memory
+    /// caches or files that do not exist yet.
+    pub fn age_secs(&self) -> Option<u64> {
+        let meta = std::fs::metadata(self.path.as_deref()?).ok()?;
+        let mtime = meta.modified().ok()?;
+        Some(mtime.elapsed().map_or(0, |d| d.as_secs()))
     }
 
     /// Drop every entry whose description contains `needle`, or whose
@@ -414,6 +487,55 @@ mod tests {
         c.store("a", &fake_result(2, 2, 1));
         let descs: Vec<&str> = c.entries_sorted().iter().map(|e| e.desc.as_str()).collect();
         assert_eq!(descs, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn observations_roundtrip_and_keep_the_best_time() {
+        use crate::tuner::Observation;
+        let mut c = ResultCache::in_memory();
+        let fam = "model=minimum nd=16 nu=4 np=4 gmt=3 gran=phase";
+        c.record_observation(fam, Observation { wg: 8, ts: 2, size: 64, time: 40 });
+        c.record_observation(fam, Observation { wg: 2, ts: 2, size: 64, time: 80 });
+        c.record_observation(fam, Observation { wg: 8, ts: 2, size: 32, time: 22 });
+        // re-recording keeps the minimum, ignores a worse measurement
+        c.record_observation(fam, Observation { wg: 8, ts: 2, size: 64, time: 36 });
+        c.record_observation(fam, Observation { wg: 8, ts: 2, size: 64, time: 99 });
+        let obs = c.observations(fam);
+        assert_eq!(obs.len(), 3);
+        assert_eq!(obs[0], Observation { wg: 8, ts: 2, size: 32, time: 22 }, "sorted by size");
+        assert!(obs.contains(&Observation { wg: 8, ts: 2, size: 64, time: 36 }));
+        assert_eq!(c.observation_count(), 3);
+        // a different family sees nothing
+        assert!(c.observations("model=abstract nd=16").is_empty());
+        // observation rows never satisfy a job-result lookup...
+        assert!(c.lookup("model=minimum size=64").is_none());
+        // ...and job results never leak into observation scans
+        c.store("model=minimum size=64", &fake_result(8, 2, 36));
+        assert_eq!(c.observations(fam).len(), 3);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn observations_persist_through_the_json_file() {
+        use crate::tuner::Observation;
+        let path = temp_file("obs");
+        std::fs::remove_file(&path).ok();
+        let fam = "pml=00000000deadbeef";
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.record_observation(fam, Observation { wg: 4, ts: 4, size: 128, time: 500 });
+            c.save().unwrap();
+        }
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.observations(fam), vec![Observation { wg: 4, ts: 4, size: 128, time: 500 }]);
+        assert_eq!(c.observation_count(), 1);
+        assert!(c.age_secs().is_some(), "file-backed caches report an mtime age");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn in_memory_cache_has_no_age() {
+        assert!(ResultCache::in_memory().age_secs().is_none());
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::platform::{
 use crate::promela::{
     source_hash, templates, vm::tuning_committed_at_init, PromelaSystem, PromelaVm, PState,
 };
-use crate::tuner::Method;
+use crate::tuner::{Method, SearchMode};
 use crate::util::error::{bail, ensure, Context, Result};
 
 /// Which of the paper's models a job tunes.
@@ -117,6 +117,12 @@ pub struct TuningJob {
     pub plat: PlatformConfig,
     pub granularity: Granularity,
     pub method: Method,
+    /// how the lattice is searched (`search=` spec key). An *execution*
+    /// knob like [`shards`](Self::shards): surrogate and exhaustive mode
+    /// return the identical optimum (see [`crate::tuner::surrogate`]),
+    /// so the mode is excluded from the cache key and both modes share
+    /// cache entries
+    pub search: SearchMode,
     /// parameter-space shards this job is split into; 0 = "use the batch
     /// runner's default" (see `main.rs batch --shards`)
     pub shards: u32,
@@ -139,8 +145,50 @@ impl TuningJob {
             plat,
             granularity: Granularity::Phase,
             method: Method::Exhaustive,
+            search: SearchMode::Exhaustive,
             shards: 1,
         }
+    }
+
+    /// Surrogate search rides on exhaustive verification (its point
+    /// oracle and certificate are exact `Cex` queries); the probabilistic
+    /// swarm has no exactness to certify, so the combination is rejected
+    /// up front instead of silently degrading.
+    pub fn validate_modes(&self) -> Result<()> {
+        ensure!(
+            !(self.method == Method::Swarm && self.search == SearchMode::Surrogate),
+            "job `{}`: surrogate search requires method=exhaustive (the swarm is probabilistic)",
+            self.name
+        );
+        Ok(())
+    }
+
+    /// The job's size-independent *observation family*: what groups the
+    /// surrogate-training observations this job produces with those of
+    /// its siblings at other input sizes (cross-size neighbor
+    /// warm-start). Native and template-Promela jobs share the
+    /// structural (model, platform, granularity) family — the templates
+    /// are pinned to the native models' times by the equivalence suite —
+    /// while external sources get a content-hash family of their own
+    /// (sizes of an edited model must never mix).
+    pub fn obs_family(&self) -> String {
+        if self.engine == JobEngine::Promela {
+            if let Some(src) = &self.source {
+                return format!("pml={:016x}", source_hash(src));
+            }
+        }
+        format!(
+            "model={} nd={} nu={} np={} gmt={} gran={}",
+            self.model,
+            self.plat.nd,
+            self.plat.nu,
+            self.plat.np,
+            self.plat.gmt,
+            match self.granularity {
+                Granularity::Tick => "tick",
+                Granularity::Phase => "phase",
+            },
+        )
     }
 
     /// The Promela source this job verifies (engine=promela only): the
@@ -443,12 +491,18 @@ impl TuningJob {
                             .parse()
                             .with_context(|| format!("spec line {}", lineno + 1))?
                     }
+                    "search" => {
+                        job.search = value
+                            .parse()
+                            .with_context(|| format!("spec line {}", lineno + 1))?
+                    }
                     other => bail!("spec line {}: unknown key `{}`", lineno + 1, other),
                 }
             }
             if !named {
                 job.name = format!("{}-{}", job.model, job.size);
             }
+            job.validate_modes().with_context(|| format!("spec line {}", lineno + 1))?;
             // fail fast on invalid sizes/platforms instead of mid-batch
             job.build().with_context(|| format!("spec line {}: invalid job", lineno + 1))?;
             jobs.push(job);
@@ -668,6 +722,54 @@ mod tests {
         a.method = Method::Swarm;
         assert_ne!(a.cache_desc(), b.cache_desc());
         assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn cache_desc_excludes_search_mode() {
+        // surrogate results are differential-equal to exhaustive ones, so
+        // the mode is an execution knob: both modes share cache entries
+        let a = TuningJob::new(ModelKind::Minimum, 64);
+        let mut b = a.clone();
+        b.search = SearchMode::Surrogate;
+        assert_eq!(a.cache_desc(), b.cache_desc());
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn spec_parses_search_mode_and_rejects_surrogate_swarm() {
+        let jobs = TuningJob::parse_spec(
+            "job minimum size=64 search=surrogate\n\
+             job minimum size=64 search=exhaustive\n\
+             job minimum size=64\n",
+        )
+        .unwrap();
+        assert_eq!(jobs[0].search, SearchMode::Surrogate);
+        assert_eq!(jobs[1].search, SearchMode::Exhaustive);
+        assert_eq!(jobs[2].search, SearchMode::Exhaustive, "default is exhaustive");
+        assert!(TuningJob::parse_spec("job minimum size=64 search=bayesian\n").is_err());
+        assert!(
+            TuningJob::parse_spec("job minimum size=64 method=swarm search=surrogate\n").is_err(),
+            "surrogate rides on exhaustive verification only"
+        );
+    }
+
+    #[test]
+    fn obs_family_is_size_independent_and_source_addressed() {
+        let a = TuningJob::new(ModelKind::Minimum, 64);
+        let mut b = TuningJob::new(ModelKind::Minimum, 128);
+        assert_eq!(a.obs_family(), b.obs_family(), "sizes share a family");
+        b.plat.gmt = 7;
+        assert_ne!(a.obs_family(), b.obs_family(), "platform changes split the family");
+        // a template-promela job shares its native sibling's family (the
+        // templates are pinned to the native times)...
+        let mut tpl = TuningJob::new(ModelKind::Minimum, 64);
+        tpl.engine = JobEngine::Promela;
+        assert_eq!(tpl.obs_family(), a.obs_family());
+        // ...but an external source is content-addressed on its own
+        let mut ext = tpl.clone();
+        ext.source = Some("int WG; int TS; bool FIN; active proctype main() { FIN = true }".into());
+        assert!(ext.obs_family().starts_with("pml="));
+        assert_ne!(ext.obs_family(), a.obs_family());
     }
 
     #[test]

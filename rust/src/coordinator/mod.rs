@@ -68,7 +68,10 @@ pub use task::{DrainStats, LeaseInfo, LeasedTask, PlanSummary, TaskDir, TaskSpec
 use crate::checker::CheckOptions;
 use crate::platform::Tuning;
 use crate::swarm::SwarmConfig;
-use crate::tuner::{cached_result, tune, TuneCache, TuneResult};
+use crate::tuner::{
+    cached_result, harvest_observations, surrogate_tune, tune, SearchMode, SurrogateOptions,
+    TuneCache, TuneResult,
+};
 use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -179,6 +182,7 @@ pub fn plan_batch(
             continue;
         }
         submitted.insert(desc, ji);
+        job.validate_modes().with_context(|| format!("job `{}`", job.name))?;
         let costs = job.tuning_costs().with_context(|| format!("job `{}`", job.name))?;
         let tunings: Vec<Tuning> = costs.iter().map(|&(t, _)| t).collect();
         let want = if job.shards != 0 {
@@ -193,8 +197,20 @@ pub fn plan_batch(
         if plans.is_empty() {
             bail!("job `{}` has an empty tuning space", job.name);
         }
+        // surrogate jobs warm-start from every same-family observation in
+        // the cache — including observations other jobs recorded at other
+        // input sizes (cross-job neighbor warm-start). Seeds ride on the
+        // shard plans so worker-mode manifests ship them too.
+        let seeds = if job.search == SearchMode::Surrogate {
+            cache.observations(&job.obs_family())
+        } else {
+            Vec::new()
+        };
         shard_counts[ji] = plans.len() as u32;
-        tasks.extend(plans.into_iter().map(|p| (ji, p)));
+        tasks.extend(plans.into_iter().map(|mut p| {
+            p.seeds = seeds.clone();
+            (ji, p)
+        }));
     }
     Ok(BatchPlan { descs, outcomes, tasks, shard_counts, duplicates })
 }
@@ -244,6 +260,51 @@ pub fn run_shard_task_traced(
     run_shard_task_inner(job, plan, swarm, Some(id))
 }
 
+/// Per-shard lattice search, dispatched on the job's [`SearchMode`]:
+/// `Exhaustive` is plain [`tune`]; `Surrogate` runs the
+/// proposer/oracle/certificate loop ([`surrogate_tune`]) over this
+/// shard's sub-lattice, warm-started from the cache observations the
+/// plan carries. Both return the identical optimum (see the tuner module
+/// docs), so cache write-back downstream is mode-agnostic.
+fn search_shard<M>(
+    model: &M,
+    job: &TuningJob,
+    plan: &ShardPlan,
+    swarm: &SwarmConfig,
+) -> Result<TuneResult>
+where
+    M: crate::model::TransitionSystem + Sync,
+    M::State: Send,
+{
+    // t_ini comes from the plan, never from random simulation: a sharded
+    // model can dead-end a simulation walk in a pruned branch (see
+    // ShardPlan::t_ini), and the plan's bound is sound anyway.
+    let t_ini = Some(plan.t_ini);
+    if job.search == SearchMode::Surrogate && job.method == crate::tuner::Method::Exhaustive {
+        // the shard's own sub-lattice; a size outside the power-of-two
+        // enumeration (possible for external sources) has no lattice to
+        // propose over — degrade to exhaustive rather than error
+        let lattice: Vec<Tuning> = match crate::platform::enumerate_tunings(job.size) {
+            Ok(all) => all.into_iter().filter(|&t| plan.shard.contains(t)).collect(),
+            Err(_) => Vec::new(),
+        };
+        if !lattice.is_empty() {
+            let rep = surrogate_tune(
+                model,
+                &plan.check,
+                swarm,
+                t_ini,
+                &lattice,
+                job.size,
+                &plan.seeds,
+                &SurrogateOptions::default(),
+            )?;
+            return Ok(rep.result);
+        }
+    }
+    tune(model, job.method, &plan.check, swarm, t_ini)
+}
+
 fn run_shard_task_inner(
     job: &TuningJob,
     plan: &ShardPlan,
@@ -253,30 +314,26 @@ fn run_shard_task_inner(
     // chaos site: a shard body that errors, panics, hangs (delay) or
     // kills its process before any verification work happens
     crate::util::failpoint::hit("shard.exec")?;
-    // t_ini comes from the plan, never from random simulation: a sharded
-    // model can dead-end a simulation walk in a pruned branch (see
-    // ShardPlan::t_ini), and the plan's bound is sound anyway.
-    let t_ini = Some(plan.t_ini);
     // (generated, pruned) from the Promela VM this task compiled — the
     // per-instance counters are this shard's alone, unlike the globals
     let mut vm_counts: Option<(u64, u64)> = None;
     let result = match job.build_sharded(&plan.shard)? {
         ShardedExec::Abs(m) => {
             let sm = ShardModel::new(&m, plan.shard);
-            tune(&sm, job.method, &plan.check, swarm, t_ini)
+            search_shard(&sm, job, plan, swarm)
         }
         ShardedExec::Min(m) => {
             let sm = ShardModel::new(&m, plan.shard);
-            tune(&sm, job.method, &plan.check, swarm, t_ini)
+            search_shard(&sm, job, plan, swarm)
         }
         ShardedExec::PmlWrapped(vm) => {
             let sm = ShardModel::new(&vm, plan.shard);
-            let r = tune(&sm, job.method, &plan.check, swarm, t_ini);
+            let r = search_shard(&sm, job, plan, swarm);
             vm_counts = Some((vm.generated(), vm.pruned()));
             r
         }
         ShardedExec::PmlSpecialized(vm) => {
-            let r = tune(&vm, job.method, &plan.check, swarm, t_ini);
+            let r = search_shard(&vm, job, plan, swarm);
             vm_counts = Some((vm.generated(), vm.pruned()));
             r
         }
@@ -383,6 +440,15 @@ pub(crate) fn finish_batch(
         let merged = merge_results(parts)?;
         if complete {
             cache.store(&descs[ji], &merged);
+            // surrogate jobs grow the observation store for future
+            // warm-starts (the merged optimum is exact; a distinct first
+            // trail is an achievable upper bound)
+            if jobs[ji].search == SearchMode::Surrogate {
+                let family = jobs[ji].obs_family();
+                for o in harvest_observations(&merged, jobs[ji].size) {
+                    cache.record_observation(&family, o);
+                }
+            }
             completed += 1;
         }
         // queue completion order is nondeterministic; report plans (and

@@ -229,6 +229,13 @@ pub struct ShardPlan {
     /// the shard's verification options — job-level budgets scaled by
     /// `weight / total_weight`, plus `expected_states` for store pre-sizing
     pub check: CheckOptions,
+    /// surrogate warm-start observations harvested from the result cache
+    /// at plan time (`search=surrogate` jobs only; empty otherwise).
+    /// Worker-mode manifests ship them with the plan, so a remote drain
+    /// warm-starts exactly like an in-process run; too few seeds simply
+    /// mean the shard falls back to exhaustive search — never a wrong
+    /// answer (see [`crate::tuner::surrogate`]).
+    pub seeds: Vec<crate::tuner::Observation>,
 }
 
 /// Estimated state-space weight of one shard under `costs`.
@@ -291,7 +298,7 @@ pub fn plan_shards(
                     tb.as_nanos().min(u64::MAX as u128) as u64,
                 )));
             }
-            ShardPlan { shard, weight, t_ini, check }
+            ShardPlan { shard, weight, t_ini, check, seeds: Vec::new() }
         })
         .collect()
 }

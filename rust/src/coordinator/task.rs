@@ -51,10 +51,10 @@ use super::{
     finish_batch, plan_batch, run_shard_task_traced, BatchOptions, BatchReport, DeadTaskInfo,
     JobEngine, JobOutcome, JobQueue, ModelKind, ResultCache, ShardPlan, TuningJob, TuningShard,
 };
-use crate::checker::{CheckOptions, Frontier, Order, StoreKind};
+use crate::checker::{CheckOptions, Compression, Frontier, Order, StoreKind};
 use crate::platform::{Granularity, PlatformConfig};
 use crate::swarm::SwarmConfig;
-use crate::tuner::{Method, TuneResult, TuningWitness};
+use crate::tuner::{Method, Observation, SearchMode, TuneResult, TuningWitness};
 use crate::util::error::{anyhow, bail, ensure, Context, Error, Result};
 use crate::util::manifest::Json;
 use std::collections::HashSet;
@@ -174,6 +174,7 @@ fn check_to_json(c: &CheckOptions) -> Json {
                 StoreKind::Full => "full",
                 StoreKind::HashCompact => "compact",
                 StoreKind::Bitstate { .. } => "bitstate",
+                StoreKind::Spill => "spill",
             }
             .to_string(),
         ),
@@ -210,6 +211,12 @@ fn check_to_json(c: &CheckOptions) -> Json {
             .to_string(),
         ),
     ));
+    fields.push(("por", Json::Bool(c.por)));
+    fields.push(("compress", Json::Str(c.compress.name().to_string())));
+    fields.push((
+        "spill_dir",
+        c.spill_dir.as_ref().map_or(Json::Null, |p| Json::Str(p.display().to_string())),
+    ));
     obj(fields)
 }
 
@@ -221,7 +228,27 @@ fn check_from_json(v: &Json) -> Result<CheckOptions> {
             log2_bits: gu8(v, "store_bits")?,
             hashes: gu8(v, "store_hashes")?,
         },
+        "spill" => StoreKind::Spill,
         s => bail!("unknown store kind `{}`", s),
+    };
+    // optional for manifests written before these knobs existed
+    let por = match v.get("por") {
+        Some(f) => f.as_bool().context("field `por` is not a bool")?,
+        None => false,
+    };
+    let compress = match v.get("compress") {
+        Some(f) => match f.as_str().context("field `compress` is not a string")? {
+            "none" => Compression::None,
+            "collapse" => Compression::Collapse,
+            s => bail!("unknown compression `{}`", s),
+        },
+        None => Compression::None,
+    };
+    let spill_dir = match v.get("spill_dir") {
+        None | Some(Json::Null) => None,
+        Some(f) => {
+            Some(PathBuf::from(f.as_str().context("field `spill_dir` is not a string")?))
+        }
     };
     let order = match gstr(v, "order")?.as_str() {
         "in-order" => Order::InOrder,
@@ -249,6 +276,9 @@ fn check_from_json(v: &Json) -> Result<CheckOptions> {
         threads: gu32(v, "threads")?,
         expected_states: gu64(v, "expected_states")?,
         frontier,
+        por,
+        compress,
+        spill_dir,
     })
 }
 
@@ -301,6 +331,7 @@ fn job_to_json(j: &TuningJob) -> Json {
         ),
         ("method", Json::Str(method_name(j.method).to_string())),
         ("shards", Json::Int(j.shards as i64)),
+        ("search", Json::Str(j.search.to_string())),
     ])
 }
 
@@ -329,6 +360,14 @@ fn job_from_json(v: &Json) -> Result<TuningJob> {
         granularity,
         method: gstr(v, "method")?.parse::<Method>()?,
         shards: gu32(v, "shards")?,
+        // optional for manifests written before surrogate search existed
+        search: match v.get("search") {
+            Some(f) => f
+                .as_str()
+                .context("field `search` is not a string")?
+                .parse::<SearchMode>()?,
+            None => SearchMode::Exhaustive,
+        },
     })
 }
 
@@ -341,6 +380,24 @@ fn plan_to_json(p: &ShardPlan) -> Json {
         ("weight", ju64(p.weight)),
         ("t_ini", Json::Int(p.t_ini)),
         ("check", check_to_json(&p.check)),
+        // surrogate warm-start observations ride the manifest so worker
+        // machines need no access to the planner's cache file
+        (
+            "seeds",
+            Json::Arr(
+                p.seeds
+                    .iter()
+                    .map(|o| {
+                        Json::Arr(vec![
+                            Json::Int(o.wg as i64),
+                            Json::Int(o.ts as i64),
+                            Json::Int(o.size as i64),
+                            Json::Int(o.time),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -355,6 +412,27 @@ fn plan_from_json(v: &Json) -> Result<ShardPlan> {
         weight: gu64(v, "weight")?,
         t_ini: gi64(v, "t_ini")?,
         check: check_from_json(field(v, "check")?)?,
+        seeds: match v.get("seeds") {
+            None => Vec::new(), // pre-surrogate manifests
+            Some(f) => {
+                let rows = f.as_arr().context("field `seeds` is not an array")?;
+                let mut out = Vec::with_capacity(rows.len());
+                for r in rows {
+                    let xs = r.as_arr().context("seed row is not an array")?;
+                    ensure!(xs.len() == 4, "seed row needs [wg, ts, size, time]");
+                    let n = |i: usize, k: &str| {
+                        xs[i].as_i64().with_context(|| format!("seed `{}` is not an integer", k))
+                    };
+                    out.push(Observation {
+                        wg: u32::try_from(n(0, "wg")?).context("seed `wg` overflows u32")?,
+                        ts: u32::try_from(n(1, "ts")?).context("seed `ts` overflows u32")?,
+                        size: u32::try_from(n(2, "size")?).context("seed `size` overflows u32")?,
+                        time: n(3, "time")?,
+                    });
+                }
+                out
+            }
+        },
     })
 }
 
@@ -1757,6 +1835,7 @@ mod tests {
         job.name = "π \"quoted\"\nname".into(); // stress JSON escaping
         job.source = Some("int x;\nactive proctype main() { x = 1 }".into());
         job.engine = JobEngine::Promela;
+        job.search = SearchMode::Surrogate;
         let check = CheckOptions {
             store: StoreKind::Bitstate { log2_bits: 21, hashes: 5 },
             max_states: u64::MAX,
@@ -1764,6 +1843,8 @@ mod tests {
             order: Order::Random(0xDEAD_BEEF_DEAD_BEEF),
             expected_states: 77,
             frontier: Frontier::Deterministic,
+            por: true,
+            spill_dir: Some(PathBuf::from("/tmp/mcat-spill")),
             ..CheckOptions::default()
         };
         TaskSpec {
@@ -1780,6 +1861,10 @@ mod tests {
                 weight: 42,
                 t_ini: 99,
                 check,
+                seeds: vec![
+                    Observation { wg: 4, ts: 2, size: 16, time: 120 },
+                    Observation { wg: 8, ts: 8, size: 64, time: 90 },
+                ],
             },
             swarm: SwarmConfig { seed: u64::MAX - 3, ..SwarmConfig::default() },
         }

@@ -16,13 +16,16 @@ use mcautotune::coordinator::{
 use mcautotune::model::{SafetyLtl, TransitionSystem};
 use mcautotune::obs::{self, ju64, ProgressMeter, Recorder};
 use mcautotune::platform::{
-    simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
+    enumerate_tunings, simulate, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
 };
 use mcautotune::promela::{analysis, templates, PromelaSystem, PromelaVm};
 use mcautotune::report;
 use mcautotune::runtime::Engine;
 use mcautotune::swarm::SwarmConfig;
-use mcautotune::tuner::{tune, tune_cached, Method};
+use mcautotune::tuner::{
+    cached_result, harvest_observations, surrogate_tune, tune, tune_cached, Method, SearchMode,
+    SurrogateOptions, TuneCache,
+};
 use mcautotune::util::cli::{Args, Spec};
 use mcautotune::util::error::{bail, Context, Result};
 use mcautotune::util::fmt::{human_bytes, human_duration};
@@ -258,8 +261,10 @@ fn check_opts(a: &Args) -> Result<CheckOptions> {
         por: a.flag("por"),
         ..d
     };
-    if opts.compress == Compression::Collapse && opts.store != StoreKind::Full {
-        bail!("--compress collapse requires --store full");
+    if opts.compress == Compression::Collapse
+        && !matches!(opts.store, StoreKind::Full | StoreKind::HashCompact)
+    {
+        bail!("--compress collapse requires --store full or --store compact");
     }
     if opts.por && opts.effective_threads() > 1 && opts.frontier != Frontier::Deterministic {
         bail!("--por requires a deterministic engine (threads=1, or --frontier det)");
@@ -282,7 +287,8 @@ fn store_spec(spec: Spec) -> Spec {
         .opt(
             "compress",
             "none | collapse (collapse: SPIN COLLAPSE-style component interning \
-             on the full store — exact, smaller resident state vectors)",
+             on the full or compact store — exact, smaller resident state vectors; \
+             with --store compact the hash covers the interned component tuple)",
         )
         .opt("spill-dir", "directory for --store spill run files (default: temp dir)")
         .opt("max-depth", "search depth bound (spin -m)")
@@ -412,6 +418,13 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         .opt("seed", "swarm seed")
         .opt("budget-ms", "per-swarm-round time budget (default 10000)")
         .opt("t-ini", "initial over-time bound (default: by simulation)")
+        .opt(
+            "search",
+            "exhaustive | surrogate (surrogate: cache-seeded k-NN proposals + \
+             exact point oracle + one certificate sweep — the identical optimum \
+             in a fraction of the checker evaluations; falls back to exhaustive \
+             when the cache holds too few observations)",
+        )
         .opt("cache", "result-cache JSON path: reuse/record the optimum")
         .flag("help", "show options");
     let a = spec.parse(argv)?;
@@ -420,6 +433,10 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let method: Method = a.get_or("method", "exhaustive").parse()?;
+    let search: SearchMode = a.get_or("search", "exhaustive").parse()?;
+    if search == SearchMode::Surrogate && method != Method::Exhaustive {
+        bail!("--search surrogate requires --method exhaustive (the swarm is its own sampler)");
+    }
     let model = build_model(&a)?;
     // refuse degenerate lattices up front: a source that never assigns
     // WG/TS would "tune" the same model at every configuration
@@ -432,19 +449,75 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     let sw = swarm_cfg(&a)?;
     let t_ini = a.get_parsed::<i64>("t-ini")?;
     let session = ObsSession::start(&a, "tune");
+    // the lattice surrogate proposals range over; a size outside the
+    // power-of-two enumeration has none, and the run degrades to the
+    // exhaustive path instead of erroring
+    let size: u32 = a.get_parsed_or("size", 64)?;
+    let lattice = if search == SearchMode::Surrogate {
+        enumerate_tunings(size).unwrap_or_default()
+    } else {
+        Vec::new()
+    };
+    let surrogate = search == SearchMode::Surrogate && !lattice.is_empty();
     let r = if let Some(cache_path) = a.get("cache") {
         let job = job_from_args(&a, method)?;
         // swarm results are configuration-dependent, so the swarm config
         // joins the cache key for Method::Swarm (see TuningJob::cache_desc_with)
         let desc = job.cache_desc_with(&sw);
+        let family = job.obs_family();
         let mut cache = ResultCache::open(Path::new(cache_path))?;
         warn_quarantined(&cache);
-        let (r, hit) = with_model!(model, m, {
-            spanned("tune/search", || tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache))
-        })?;
+        let (r, hit) = if surrogate {
+            if let Some(h) = cache.lookup(&desc) {
+                (cached_result(method, h, &desc), true)
+            } else {
+                let seeds = cache.observations(&family);
+                let rep = with_model!(model, m, {
+                    spanned("tune/search", || {
+                        surrogate_tune(
+                            m,
+                            &opts,
+                            &sw,
+                            t_ini,
+                            &lattice,
+                            size,
+                            &seeds,
+                            &SurrogateOptions::default(),
+                        )
+                    })
+                })?;
+                cache.store(&desc, &rep.result);
+                // this run's exact point evaluations warm future runs
+                for o in &rep.evals {
+                    cache.record_observation(&family, *o);
+                }
+                (rep.result, false)
+            }
+        } else {
+            let (r, hit) = with_model!(model, m, {
+                spanned("tune/search", || {
+                    tune_cached(m, method, &opts, &sw, t_ini, &desc, &mut cache)
+                })
+            })?;
+            // exhaustive optima seed the surrogate observation store too,
+            // so plain cached tunes warm later `--search surrogate` runs
+            if !hit && method == Method::Exhaustive {
+                for o in harvest_observations(&r, job.size) {
+                    cache.record_observation(&family, o);
+                }
+            }
+            (r, hit)
+        };
         cache.save()?;
         outln!("  cache: {} ({})", if hit { "hit" } else { "miss" }, cache_path);
         r
+    } else if surrogate {
+        with_model!(model, m, {
+            spanned("tune/search", || {
+                surrogate_tune(m, &opts, &sw, t_ini, &lattice, size, &[], &SurrogateOptions::default())
+            })
+        })?
+        .result
     } else {
         with_model!(model, m, spanned("tune/search", || tune(m, method, &opts, &sw, t_ini)))?
     };
@@ -472,6 +545,9 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         }
         if opts.store == StoreKind::Spill {
             fields.push(("store", Json::Str("spill".into())));
+        }
+        if surrogate {
+            fields.push(("search", Json::Str("surrogate".into())));
         }
         rec.det_event("run", fields);
     }
@@ -513,6 +589,12 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
             "checker threads per shard (default 1; 0 = all cores; multiplies with --workers)",
         )
         .opt("frontier", "async | det checker frontier (see `verify --help`)")
+        .opt(
+            "search",
+            "exhaustive | surrogate — lattice search for exhaustive-method jobs \
+             (overrides the spec's search=; surrogate warm-starts from cached \
+             observations, see `tune --help`)",
+        )
         .opt("cache", "result-cache JSON path (default mcat_cache.json; `none` disables)")
         .opt("budget-ms", "per-swarm-round time budget for swarm jobs (default 10000)")
         .opt(
@@ -542,6 +624,8 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
              \x20 job minimum size=16 engine=promela\n\
              \nkeys: name size np nd nu gmt gran=tick|phase method=exhaustive|swarm\n\
              \x20     shards engine=native|promela src=<file.pml>\n\
+             \x20     search=exhaustive|surrogate (surrogate: cache-seeded proposals,\n\
+             \x20     exact certificate — identical optimum, fewer checker sweeps)\n\
              \nengine=promela verifies the generated Promela model (full process\n\
              interleaving) instead of the native transition system; src= supplies\n\
              an external .pml source (implies engine=promela). Promela results are\n\
@@ -556,9 +640,16 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     };
     let text = std::fs::read_to_string(spec_path)
         .with_context(|| format!("reading spec file {}", spec_path))?;
-    let jobs = TuningJob::parse_spec(&text)?;
+    let mut jobs = TuningJob::parse_spec(&text)?;
     if jobs.is_empty() {
         bail!("spec file {} contains no jobs", spec_path);
+    }
+    if let Some(s) = a.get("search") {
+        let mode: SearchMode = s.parse()?;
+        // swarm jobs keep their own sampler; the flag governs the rest
+        for job in jobs.iter_mut().filter(|j| j.method == Method::Exhaustive) {
+            job.search = mode;
+        }
     }
     let mut opts = BatchOptions {
         workers: a.get_parsed_or("workers", 4)?,
@@ -794,15 +885,18 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_cache(argv: &[String]) -> Result<()> {
-    let spec = Spec::new().flag("help", "show options");
+    let spec = Spec::new()
+        .flag("json", "with ls: machine-readable output (one JSON object)")
+        .flag("help", "show options");
     let a = spec.parse(argv)?;
     let pos = a.positionals();
     if a.flag("help") || pos.is_empty() {
         outln!("{}", spec.usage("mcautotune cache <ls|rm> <file> [needle]"));
         outln!(
             "\nInspect or edit a result-cache JSON file (cache lifecycle tooling):\n\
-             \x20 ls <file>           list entries: content key, optimum, method,\n\
-             \x20                     cold-run states, canonical description\n\
+             \x20 ls <file> [--json]  list entries: content key, optimum, method,\n\
+             \x20                     cold-run states, canonical description, plus\n\
+             \x20                     the surrogate observation count and file age\n\
              \x20 rm <file> <needle>  drop entries whose description contains <needle>\n\
              \x20                     (or whose 16-hex-digit key equals it) and rewrite\n\
              \x20                     the file atomically"
@@ -812,12 +906,58 @@ fn cmd_cache(argv: &[String]) -> Result<()> {
     match pos[0].as_str() {
         "ls" => {
             let Some(file) = pos.get(1) else {
-                bail!("usage: mcautotune cache ls <file>");
+                bail!("usage: mcautotune cache ls <file> [--json]");
             };
             let cache = ResultCache::open(Path::new(file))?;
             warn_quarantined(&cache);
             let n = cache.len();
-            outln!("{}: {} entr{}", file, n, if n == 1 { "y" } else { "ies" });
+            let obs_n = cache.observation_count();
+            let age = cache.age_secs();
+            if a.flag("json") {
+                let rows: Vec<Json> = cache
+                    .entries_sorted()
+                    .into_iter()
+                    .map(|e| {
+                        Json::Obj(vec![
+                            (
+                                "key".to_string(),
+                                Json::Str(format!(
+                                    "{:016x}",
+                                    mcautotune::util::hash::hash_bytes(e.desc.as_bytes())
+                                )),
+                            ),
+                            ("wg".to_string(), Json::Int(e.wg as i64)),
+                            ("ts".to_string(), Json::Int(e.ts as i64)),
+                            ("t_min".to_string(), Json::Int(e.t_min)),
+                            ("steps".to_string(), ju64(e.steps as u64)),
+                            ("method".to_string(), Json::Str(e.method.clone())),
+                            ("cold_states".to_string(), ju64(e.cold_states)),
+                            ("desc".to_string(), Json::Str(e.desc.clone())),
+                        ])
+                    })
+                    .collect();
+                let top = Json::Obj(vec![
+                    ("file".to_string(), Json::Str(file.to_string())),
+                    ("entries".to_string(), ju64(n as u64)),
+                    ("observations".to_string(), ju64(obs_n as u64)),
+                    ("age_secs".to_string(), age.map_or(Json::Null, ju64)),
+                    ("rows".to_string(), Json::Arr(rows)),
+                ]);
+                outln!("{}", top.render());
+                return Ok(());
+            }
+            outln!(
+                "{}: {} entr{} ({} observation row{}{})",
+                file,
+                n,
+                if n == 1 { "y" } else { "ies" },
+                obs_n,
+                if obs_n == 1 { "" } else { "s" },
+                match age {
+                    Some(s) => format!(", {} old", human_duration(Duration::from_secs(s))),
+                    None => String::new(),
+                }
+            );
             for e in cache.entries_sorted() {
                 outln!(
                     "  {:016x}  WG={} TS={} t_min={} steps={} method={} cold_states={}\n\

@@ -165,6 +165,13 @@ pub struct Metrics {
     pub spill_runs: Counter,
     /// disk-run lookups past the bloom filters (`--store spill`)
     pub spill_probes: Counter,
+    /// candidate configs proposed by the surrogate ranker (`--search surrogate`)
+    pub surrogate_proposals: Counter,
+    /// checker invocations made by surrogate search (point-oracle
+    /// bisections + certificate sweeps, or fallback `Cex` queries)
+    pub surrogate_oracle_calls: Counter,
+    /// cached observations loaded to warm-start surrogate runs
+    pub surrogate_cache_seeds: Counter,
     /// deepest frontier depth observed
     pub depth: Gauge,
     /// peak visited-store bytes observed
@@ -194,6 +201,9 @@ static METRICS: Metrics = Metrics {
     slots_canonicalized: Counter::new(),
     spill_runs: Counter::new(),
     spill_probes: Counter::new(),
+    surrogate_proposals: Counter::new(),
+    surrogate_oracle_calls: Counter::new(),
+    surrogate_cache_seeds: Counter::new(),
     depth: Gauge::new(),
     store_bytes: Gauge::new(),
 };
@@ -231,6 +241,9 @@ impl Metrics {
             ("vm.slots_canonicalized", self.slots_canonicalized.value()),
             ("spill.runs", self.spill_runs.value()),
             ("spill.probes", self.spill_probes.value()),
+            ("surrogate.proposals", self.surrogate_proposals.value()),
+            ("surrogate.oracle_calls", self.surrogate_oracle_calls.value()),
+            ("surrogate.cache_seeds", self.surrogate_cache_seeds.value()),
         ]
     }
 
@@ -258,6 +271,9 @@ impl Metrics {
         self.slots_canonicalized.reset();
         self.spill_runs.reset();
         self.spill_probes.reset();
+        self.surrogate_proposals.reset();
+        self.surrogate_oracle_calls.reset();
+        self.surrogate_cache_seeds.reset();
         self.depth.reset();
         self.store_bytes.reset();
     }

@@ -67,6 +67,13 @@ pub fn validate(text: &str) -> Result<Vec<Json>> {
                         bail!("`shard` events must not carry wall-clock fields");
                     }
                 }
+                "search" => {
+                    // surrogate-search progress: fallback | eval | certificate
+                    str_field(&v, "kind")?;
+                    if v.get("t_ns").is_some() {
+                        bail!("`search` events must not carry wall-clock fields");
+                    }
+                }
                 "lease" => {
                     str_field(&v, "action")?;
                     str_field(&v, "id")?;
@@ -298,6 +305,10 @@ mod tests {
         assert!(validate("{\"k\":\"span\",\"path\":\"x\",\"t_ns\":1}\n").is_err());
         // deterministic kinds must not carry wall-clock fields
         assert!(validate("{\"k\":\"shard\",\"id\":\"a\",\"job\":\"j\",\"est\":1,\"states\":1,\"t_ns\":5}\n").is_err());
+        // surrogate search events: kind required, content-only
+        assert!(validate("{\"k\":\"search\",\"kind\":\"eval\",\"wg\":4,\"ts\":2}\n").is_ok());
+        assert!(validate("{\"k\":\"search\",\"wg\":4}\n").is_err());
+        assert!(validate("{\"k\":\"search\",\"kind\":\"eval\",\"t_ns\":5}\n").is_err());
         // unknown kinds pass
         assert!(validate("{\"k\":\"future-kind\",\"x\":1}\n").is_ok());
         // blank lines are skipped

@@ -57,6 +57,30 @@ where
     Ok(out)
 }
 
+/// Harvest surrogate-training observations from a finished tune: the
+/// exact optimum plus the first-trail witness (an achievable, possibly
+/// sub-optimal time — still a sound regression target). These are what
+/// cache-aware callers persist as `method="obs"` rows for future
+/// [`super::surrogate`] runs; duplicates collapse on the (wg, ts) key.
+pub fn harvest_observations(
+    result: &super::TuneResult,
+    size: u32,
+) -> Vec<super::surrogate::Observation> {
+    use super::surrogate::Observation;
+    let mut out = vec![Observation {
+        wg: result.optimal.wg,
+        ts: result.optimal.ts,
+        size,
+        time: result.optimal.time,
+    }];
+    if let Some((w, _)) = &result.first_trail {
+        if (w.wg, w.ts) != (result.optimal.wg, result.optimal.ts) {
+            out.push(Observation { wg: w.wg, ts: w.ts, size, time: w.time });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +106,31 @@ mod tests {
         for w in ws.windows(2) {
             assert!(w[0].time <= w[1].time);
         }
+    }
+
+    #[test]
+    fn harvest_collects_optimum_and_distinct_first_trail() {
+        use crate::tuner::{TuneResult, TuningWitness};
+        use std::time::Duration;
+        let base = TuneResult {
+            method: crate::tuner::Method::Exhaustive,
+            optimal: TuningWitness { wg: 8, ts: 2, time: 36, steps: 9 },
+            t_min: 36,
+            first_trail: Some((TuningWitness { wg: 2, ts: 2, time: 80, steps: 20 }, Duration::ZERO)),
+            first_trail_optimality: Some(36.0 / 80.0),
+            states_explored: 1,
+            peak_bytes: 1,
+            elapsed: Duration::ZERO,
+            log: Vec::new(),
+        };
+        let obs = harvest_observations(&base, 64);
+        assert_eq!(obs.len(), 2);
+        assert_eq!((obs[0].wg, obs[0].ts, obs[0].size, obs[0].time), (8, 2, 64, 36));
+        assert_eq!((obs[1].wg, obs[1].ts, obs[1].time), (2, 2, 80));
+        // a first trail at the optimal coordinates is not duplicated
+        let mut same = base;
+        same.first_trail = Some((TuningWitness { wg: 8, ts: 2, time: 36, steps: 9 }, Duration::ZERO));
+        assert_eq!(harvest_observations(&same, 64).len(), 1);
     }
 
     #[test]

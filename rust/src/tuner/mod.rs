@@ -5,13 +5,26 @@
 //! `promela::PromelaSystem`); Step 2 is `SafetyLtl::over_time`; Step 3 is
 //! [`bisection`] (Fig. 1) or [`swarm_search`] (Fig. 5); Step 4 is
 //! [`extract`].
+//!
+//! Orthogonal to the *method* is the *search mode* ([`SearchMode`]):
+//! `Exhaustive` runs step 3 directly over the full lattice, while
+//! `Surrogate` ([`surrogate`]) wraps it in a proposer/oracle/certificate
+//! loop — a cached-observation k-NN regressor **proposes** candidate
+//! configs, the checker is invoked as the exact **oracle** only on those
+//! proposals (singleton-shard bisections), and one collect-all
+//! **certificate** sweep pins the exact global optimum; with too few
+//! observations the mode **falls back** to plain exhaustive search.
+//! Either mode returns the identical optimum (same `t_min`, canonical
+//! tie-break), which is why the mode never joins a cache key.
 
 pub mod bisection;
 pub mod extract;
+pub mod surrogate;
 pub mod swarm_search;
 
 pub use bisection::{bisection, BisectionIter, BisectionResult};
-pub use extract::{extract, extract_sorted, TuningWitness};
+pub use extract::{extract, extract_sorted, harvest_observations, TuningWitness};
+pub use surrogate::{surrogate_tune, Observation, SurrogateOptions, SurrogateReport};
 pub use swarm_search::{swarm_search, SwarmIter, SwarmSearchResult};
 
 use crate::checker::CheckOptions;
@@ -38,6 +51,42 @@ impl std::str::FromStr for Method {
             "exhaustive" | "bisection" => Ok(Method::Exhaustive),
             "swarm" => Ok(Method::Swarm),
             _ => crate::bail!("unknown method `{}` (exhaustive|swarm)", s),
+        }
+    }
+}
+
+/// How the tuning lattice is searched (orthogonal to [`Method`]; see the
+/// module docs). An *execution* knob like the shard count: both modes
+/// return the identical optimum, so the mode is excluded from cache
+/// descriptions and a surrogate run may serve — and be served by —
+/// exhaustive cache entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// evaluate the full lattice per `Cex(T)` query (paper Fig. 1)
+    #[default]
+    Exhaustive,
+    /// model-guided proposals + point oracle + exact certificate
+    /// ([`surrogate::surrogate_tune`])
+    Surrogate,
+}
+
+impl std::fmt::Display for SearchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SearchMode::Exhaustive => "exhaustive",
+            SearchMode::Surrogate => "surrogate",
+        })
+    }
+}
+
+impl std::str::FromStr for SearchMode {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "exhaustive" => Ok(SearchMode::Exhaustive),
+            "surrogate" => Ok(SearchMode::Surrogate),
+            _ => crate::bail!("unknown search mode `{}` (exhaustive|surrogate)", s),
         }
     }
 }
@@ -232,5 +281,14 @@ mod tests {
         assert_eq!("exhaustive".parse::<Method>().unwrap(), Method::Exhaustive);
         assert_eq!("swarm".parse::<Method>().unwrap(), Method::Swarm);
         assert!("annealing".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn search_mode_parsing_and_default() {
+        assert_eq!(SearchMode::default(), SearchMode::Exhaustive);
+        assert_eq!("exhaustive".parse::<SearchMode>().unwrap(), SearchMode::Exhaustive);
+        assert_eq!("surrogate".parse::<SearchMode>().unwrap(), SearchMode::Surrogate);
+        assert!("bayesian".parse::<SearchMode>().is_err());
+        assert_eq!(SearchMode::Surrogate.to_string(), "surrogate");
     }
 }

@@ -1,0 +1,560 @@
+//! Surrogate-guided search: near-optimal configs in a fraction of the
+//! checker evaluations.
+//!
+//! Exhaustive tuning ([`super::bisection`]) pays one full-lattice sweep
+//! per `Cex(T)` query — ~log(T_ini) sweeps per job. This module replaces
+//! most of those sweeps with a cheap learned ranking plus a handful of
+//! *point-oracle* evaluations, while keeping the answer exact:
+//!
+//! - **Proposer**: a dependency-free distance-weighted k-NN regressor
+//!   ([`predict`]) over log-scaled (WG, TS, input-size) features, fitted
+//!   to observations harvested from prior runs (the result cache's
+//!   `method="obs"` rows — see `coordinator::cache`). Each round proposes
+//!   the best-predicted unevaluated configs plus one seeded-random
+//!   exploration pick ([`crate::util::rng::Xoshiro256`], fixed seed, so
+//!   runs reproduce).
+//! - **Oracle**: each proposal is evaluated *exactly* by restricting the
+//!   model to that single (WG, TS) — a singleton
+//!   [`TuningShard`] behind [`ShardModel`] — and bisecting; the shard
+//!   state space is one tuning branch, orders of magnitude below a
+//!   full-lattice sweep. The best evaluated time `T*` is achievable by
+//!   construction.
+//! - **Certificate**: one `collect_all` check of `Φo(T*)` over the full
+//!   lattice. `T*` is achievable, so a counterexample always exists, the
+//!   global optimum's run is among the collected violations (its time
+//!   `t_min <= T*`), and [`extract_sorted`]`[0]` is therefore the exact
+//!   optimum under the canonical `(time, steps, WG, TS)` tie-break — the
+//!   differential guarantee against `--search exhaustive` holds no
+//!   matter how wrong the predictions were. Poisoned or stale
+//!   observations can only cost extra point evaluations, never a wrong
+//!   answer.
+//! - **Fallback**: with fewer than [`SurrogateOptions::min_obs`]
+//!   observations or a lattice below [`SurrogateOptions::min_lattice`]
+//!   configs, the search falls back to plain exhaustive [`tune`] (the
+//!   regressor would be noise); the fallback still reports its checker
+//!   invocations through `surrogate.oracle_calls`, so a warm re-run's
+//!   strictly lower count is observable in the trace.
+//!
+//! Point evaluations are capped well below the lattice size
+//! ([`eval_cap`]), so a warm-cache run's `surrogate.oracle_calls` —
+//! point evaluations plus the one certificate sweep — stays strictly
+//! below the lattice size.
+
+use super::bisection::bisection;
+use super::extract::{extract_sorted, TuningWitness};
+use super::{tune, Method, TuneResult};
+use crate::checker::{check, CheckOptions};
+use crate::coordinator::shard::{ShardModel, TuningShard};
+use crate::model::{SafetyLtl, TransitionSystem};
+use crate::platform::Tuning;
+use crate::swarm::SwarmConfig;
+use crate::util::error::{ensure, Context, Result};
+use crate::util::rng::Xoshiro256;
+
+/// One harvested (config, input size) → model-time measurement. `time`
+/// is exact for observations recorded by a point oracle or a completed
+/// tune, and an achievable upper bound for first-trail harvests — either
+/// way a sound regression target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Observation {
+    pub wg: u32,
+    pub ts: u32,
+    /// input size of the run that produced the measurement (cross-size
+    /// neighbor warm-start: same-family observations at other sizes
+    /// still rank candidates for a new size)
+    pub size: u32,
+    pub time: i64,
+}
+
+/// Tunables of the surrogate loop. Defaults keep every knob conservative
+/// enough that the oracle-call cap stays strictly below the lattice size.
+#[derive(Debug, Clone)]
+pub struct SurrogateOptions {
+    /// fewer prior observations than this → fall back to exhaustive
+    pub min_obs: usize,
+    /// fewer lattice configs than this → fall back to exhaustive
+    pub min_lattice: usize,
+    /// k-NN neighborhood size
+    pub k: usize,
+    /// best-predicted proposals per round
+    pub batch: usize,
+    /// seeded-random exploration proposals per round
+    pub explore: usize,
+    /// convergence window: stop proposing after this many consecutive
+    /// rounds without an incumbent improvement
+    pub window: usize,
+    /// hard round cap
+    pub max_rounds: usize,
+    /// deterministic exploration seed
+    pub seed: u64,
+}
+
+impl Default for SurrogateOptions {
+    fn default() -> Self {
+        Self {
+            min_obs: 3,
+            min_lattice: 4,
+            k: 4,
+            batch: 2,
+            explore: 1,
+            window: 2,
+            max_rounds: 8,
+            seed: 0x5ab0_7a6e,
+        }
+    }
+}
+
+/// A [`tune`]-shaped result plus the surrogate bookkeeping callers
+/// persist (exact point evaluations become cache observations) and
+/// assert on (oracle-call accounting).
+#[derive(Debug)]
+pub struct SurrogateReport {
+    pub result: TuneResult,
+    /// exact per-config measurements made by the point oracle this run —
+    /// the caller records them as cache observations for future runs
+    pub evals: Vec<Observation>,
+    /// true when the search degraded to plain exhaustive [`tune`]
+    pub fell_back: bool,
+    /// checker invocations: point-oracle bisections + the certificate
+    /// sweep (or, on fallback, the exhaustive bisection's `Cex` queries)
+    pub oracle_calls: u64,
+    /// candidate configs proposed (0 on fallback)
+    pub proposals: u64,
+}
+
+/// Distance-weighted k-NN prediction of the model time of `t` at `size`
+/// from `obs`. Features are `ln(1 + x)` so the power-of-two lattice axes
+/// and the input size contribute comparable distances. Deterministic:
+/// ties in distance break on (time, wg, ts).
+pub fn predict(obs: &[Observation], t: Tuning, size: u32, k: usize) -> f64 {
+    debug_assert!(!obs.is_empty(), "predict() needs at least one observation");
+    let feat =
+        |wg: u32, ts: u32, sz: u32| [f64::from(wg).ln_1p(), f64::from(ts).ln_1p(), f64::from(sz).ln_1p()];
+    let q = feat(t.wg, t.ts, size);
+    let mut near: Vec<(f64, i64, u32, u32)> = obs
+        .iter()
+        .map(|o| {
+            let f = feat(o.wg, o.ts, o.size);
+            let d2: f64 = (0..3).map(|i| (f[i] - q[i]) * (f[i] - q[i])).sum();
+            (d2, o.time, o.wg, o.ts)
+        })
+        .collect();
+    near.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| (a.1, a.2, a.3).cmp(&(b.1, b.2, b.3))));
+    let k = k.max(1).min(near.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &(d2, time, _, _) in near.iter().take(k) {
+        let w = 1.0 / (d2 + 1e-6);
+        num += w * time as f64;
+        den += w;
+    }
+    num / den
+}
+
+/// Point-evaluation cap: strictly below the lattice size by at least the
+/// certificate sweep (so `oracle_calls = evals + 1 < lattice` holds on
+/// every surrogate-path run), at least one, and roomy enough for one
+/// full proposal round on small lattices.
+pub fn eval_cap(cfg: &SurrogateOptions, lattice: usize) -> usize {
+    (cfg.batch + cfg.explore).max(lattice / 4).min(lattice.saturating_sub(2)).max(1)
+}
+
+/// Exact cost of one config: bisection on the model restricted to the
+/// singleton shard `{t}`. The restricted state space is a single tuning
+/// branch, so each inner `Cex` query is cheap. `hint` (a prediction) is
+/// only a starting bound — bisection doubles its way out of
+/// underestimates, so a poisoned hint cannot change the answer.
+fn point_eval<M>(
+    model: &M,
+    opts: &CheckOptions,
+    t: Tuning,
+    hint: f64,
+) -> Result<(TuningWitness, u64, u64)>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let shard = TuningShard { wg_min: t.wg, wg_max: t.wg, ts_min: t.ts, ts_max: t.ts };
+    let sm = ShardModel::new(model, shard);
+    let t_ini = hint.max(1.0).min((1i64 << 60) as f64) as i64;
+    let r = bisection(&sm, opts, t_ini)
+        .with_context(|| format!("point oracle for WG={} TS={}", t.wg, t.ts))?;
+    Ok((r.witness, r.total_states, r.peak_bytes))
+}
+
+fn witness_better(a: &TuningWitness, b: &TuningWitness) -> bool {
+    (a.time, a.steps, a.wg, a.ts) < (b.time, b.steps, b.wg, b.ts)
+}
+
+fn search_event(fields: Vec<(&str, crate::util::manifest::Json)>) {
+    if let Some(rec) = crate::obs::active() {
+        rec.det_event("search", fields);
+    }
+}
+
+/// Surrogate-guided tuning of `model` over `lattice` (the full (WG, TS)
+/// space, or one batch shard's sub-lattice). `seeds` are prior
+/// observations (cache harvest, cross-size neighbors included); `size`
+/// is the current job's input size (a regressor feature). Exactness does
+/// not depend on the seeds — see the module docs for the
+/// proposer/oracle/certificate/fallback contract.
+///
+/// The returned [`TuneResult`] carries `Method::Exhaustive`: the result
+/// *is* the exhaustive optimum (same value, same canonical tie-break),
+/// so cache entries written from it are interchangeable with exhaustive
+/// ones.
+#[allow(clippy::too_many_arguments)]
+pub fn surrogate_tune<M>(
+    model: &M,
+    check_opts: &CheckOptions,
+    swarm_cfg: &SwarmConfig,
+    t_ini_override: Option<i64>,
+    lattice: &[Tuning],
+    size: u32,
+    seeds: &[Observation],
+    cfg: &SurrogateOptions,
+) -> Result<SurrogateReport>
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    ensure!(!lattice.is_empty(), "surrogate search over an empty tuning lattice");
+    let metrics = crate::obs::metrics();
+    if seeds.len() < cfg.min_obs || lattice.len() < cfg.min_lattice {
+        let mut r = tune(model, Method::Exhaustive, check_opts, swarm_cfg, t_ini_override)?;
+        // one exhaustive log line per Cex(T) query = checker invocations
+        let oracle_calls = r.log.len() as u64;
+        metrics.surrogate_oracle_calls.add(oracle_calls);
+        r.log.insert(
+            0,
+            format!(
+                "surrogate: {} observation(s) < {} or lattice {} < {} — exhaustive fallback",
+                seeds.len(),
+                cfg.min_obs,
+                lattice.len(),
+                cfg.min_lattice
+            ),
+        );
+        search_event(vec![
+            ("kind", crate::util::manifest::Json::Str("fallback".into())),
+            ("obs", crate::obs::ju64(seeds.len() as u64)),
+            ("lattice", crate::obs::ju64(lattice.len() as u64)),
+            ("oracle_calls", crate::obs::ju64(oracle_calls)),
+        ]);
+        let evals = vec![Observation {
+            wg: r.optimal.wg,
+            ts: r.optimal.ts,
+            size,
+            time: r.optimal.time,
+        }];
+        return Ok(SurrogateReport { result: r, evals, fell_back: true, oracle_calls, proposals: 0 });
+    }
+
+    use crate::obs::ju64;
+    use crate::util::manifest::Json;
+    let start = std::time::Instant::now();
+    metrics.surrogate_cache_seeds.add(seeds.len() as u64);
+    let cap = eval_cap(cfg, lattice.len());
+    let mut log = vec![format!(
+        "surrogate: {} observation(s), lattice {} configs, eval cap {}",
+        seeds.len(),
+        lattice.len(),
+        cap
+    )];
+    // the working observation set: cache seeds + this run's exact evals
+    // (exact same-size points quickly dominate the k-NN neighborhoods)
+    let mut obs: Vec<Observation> = seeds.to_vec();
+    let mut evals: Vec<Observation> = Vec::new();
+    let mut incumbent: Option<TuningWitness> = None;
+    let mut first_trail: Option<(TuningWitness, std::time::Duration)> = None;
+    let mut states = 0u64;
+    let mut peak = 0u64;
+    let mut oracle_calls = 0u64;
+    let mut proposals = 0u64;
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut stale = 0usize;
+    let evaluated =
+        |evals: &[Observation], t: Tuning| evals.iter().any(|e| e.wg == t.wg && e.ts == t.ts);
+
+    'rounds: for round in 0..cfg.max_rounds {
+        if evals.len() >= cap {
+            break;
+        }
+        // rank every unevaluated config by predicted time (deterministic
+        // tie-break on the lattice coordinates)
+        let mut cands: Vec<(f64, Tuning)> = lattice
+            .iter()
+            .filter(|&&t| !evaluated(&evals, t))
+            .map(|&t| (predict(&obs, t, size, cfg.k), t))
+            .collect();
+        if cands.is_empty() {
+            break;
+        }
+        cands.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then_with(|| (a.1.wg, a.1.ts).cmp(&(b.1.wg, b.1.ts)))
+        });
+        let mut picks: Vec<(Tuning, f64)> =
+            cands.iter().take(cfg.batch).map(|&(p, t)| (t, p)).collect();
+        for _ in 0..cfg.explore {
+            let rest: Vec<&(f64, Tuning)> = cands
+                .iter()
+                .skip(cfg.batch)
+                .filter(|(_, t)| !picks.iter().any(|(p, _)| p.wg == t.wg && p.ts == t.ts))
+                .collect();
+            if rest.is_empty() {
+                break;
+            }
+            let &(p, t) = rest[rng.below(rest.len() as u64) as usize];
+            picks.push((t, p));
+        }
+        let before = incumbent.map(|w| w.time);
+        for (t, pred) in picks {
+            if evals.len() >= cap {
+                break;
+            }
+            proposals += 1;
+            metrics.surrogate_proposals.add(1);
+            oracle_calls += 1;
+            metrics.surrogate_oracle_calls.add(1);
+            match point_eval(model, check_opts, t, pred) {
+                Ok((w, st, by)) => {
+                    states += st;
+                    peak = peak.max(by);
+                    evals.push(Observation { wg: t.wg, ts: t.ts, size, time: w.time });
+                    obs.push(Observation { wg: t.wg, ts: t.ts, size, time: w.time });
+                    if first_trail.is_none() {
+                        first_trail = Some((w, start.elapsed()));
+                    }
+                    if incumbent.map_or(true, |inc| witness_better(&w, &inc)) {
+                        incumbent = Some(w);
+                    }
+                    log.push(format!(
+                        "round {}: WG={} TS={} predicted {} -> exact {} [{} states]",
+                        round, t.wg, t.ts, pred as i64, w.time, st
+                    ));
+                    search_event(vec![
+                        ("kind", Json::Str("eval".into())),
+                        ("round", ju64(round as u64)),
+                        ("wg", Json::Int(t.wg as i64)),
+                        ("ts", Json::Int(t.ts as i64)),
+                        ("predicted", Json::Int(pred as i64)),
+                        ("actual", Json::Int(w.time)),
+                    ]);
+                }
+                Err(e) => {
+                    // an unachievable config (external sources may never
+                    // reach a lattice point) costs its oracle call but
+                    // cannot poison the result; mark it evaluated so it
+                    // is never re-proposed
+                    evals.push(Observation { wg: t.wg, ts: t.ts, size, time: i64::MAX });
+                    log.push(format!("round {}: WG={} TS={} unachievable ({:#})", round, t.wg, t.ts, e));
+                }
+            }
+        }
+        match (before, incumbent.map(|w| w.time)) {
+            (Some(b), Some(now)) if now >= b => {
+                stale += 1;
+                if stale >= cfg.window {
+                    log.push(format!(
+                        "converged: no improvement for {} round(s), incumbent T={}",
+                        stale, now
+                    ));
+                    break 'rounds;
+                }
+            }
+            _ => stale = 0,
+        }
+    }
+
+    let Some(inc) = incumbent else {
+        // every proposal was unachievable — the predictions told us
+        // nothing; degrade to the exhaustive path rather than guess
+        let mut r = tune(model, Method::Exhaustive, check_opts, swarm_cfg, t_ini_override)?;
+        let fallback_calls = r.log.len() as u64;
+        oracle_calls += fallback_calls;
+        metrics.surrogate_oracle_calls.add(fallback_calls);
+        r.log.insert(0, "surrogate: no proposal was achievable — exhaustive fallback".into());
+        let evals = vec![Observation {
+            wg: r.optimal.wg,
+            ts: r.optimal.ts,
+            size,
+            time: r.optimal.time,
+        }];
+        return Ok(SurrogateReport { result: r, evals, fell_back: true, oracle_calls, proposals });
+    };
+
+    // certificate: one collect-all sweep at the achievable incumbent
+    // bound T*. The optimal run has time <= T*, so it is among the
+    // collected violations and the canonical sort finds it.
+    let mut copts = check_opts.clone();
+    copts.collect_all = true;
+    let prop = SafetyLtl::over_time(inc.time);
+    let rep = check(model, &prop, &copts)
+        .with_context(|| format!("surrogate certificate: verifying {} failed", prop))?;
+    oracle_calls += 1;
+    metrics.surrogate_oracle_calls.add(1);
+    states += rep.stats.states_stored;
+    peak = peak.max(rep.stats.bytes_used);
+    ensure!(
+        rep.found(),
+        "surrogate certificate found no counterexample at achievable T={}",
+        inc.time
+    );
+    let ws = extract_sorted(model, rep.violations.iter())?;
+    let best = ws[0];
+    log.push(format!(
+        "certificate: Cex(T={}) collect-all -> optimum WG={} TS={} time={} [{} states]",
+        inc.time, best.wg, best.ts, best.time, rep.stats.states_stored
+    ));
+    log.push(format!(
+        "surrogate: {} oracle call(s) for a {}-config lattice",
+        oracle_calls,
+        lattice.len()
+    ));
+    search_event(vec![
+        ("kind", Json::Str("certificate".into())),
+        ("wg", Json::Int(best.wg as i64)),
+        ("ts", Json::Int(best.ts as i64)),
+        ("t_min", Json::Int(best.time)),
+        ("oracle_calls", ju64(oracle_calls)),
+        ("lattice", ju64(lattice.len() as u64)),
+    ]);
+    // the certificate's optimum is exact — record it as an observation
+    if !evals.iter().any(|e| e.wg == best.wg && e.ts == best.ts && e.time == best.time) {
+        evals.push(Observation { wg: best.wg, ts: best.ts, size, time: best.time });
+    }
+    evals.retain(|e| e.time != i64::MAX); // drop unachievable markers
+    let result = TuneResult {
+        method: Method::Exhaustive,
+        optimal: best,
+        t_min: best.time,
+        first_trail_optimality: first_trail.as_ref().map(|(w, _)| best.time as f64 / w.time as f64),
+        first_trail,
+        states_explored: states,
+        peak_bytes: peak,
+        elapsed: start.elapsed(),
+        log,
+    };
+    Ok(SurrogateReport { result, evals, fell_back: false, oracle_calls, proposals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{enumerate_tunings, MinModel};
+
+    fn seeds_for(m: &MinModel, size: u32, n: usize) -> Vec<Observation> {
+        // honest observations from the model's closed form
+        m.tunings()
+            .iter()
+            .take(n)
+            .map(|&t| Observation { wg: t.wg, ts: t.ts, size, time: m.predicted_time(t) as i64 })
+            .collect()
+    }
+
+    #[test]
+    fn predict_interpolates_and_is_deterministic() {
+        let obs = vec![
+            Observation { wg: 2, ts: 2, size: 64, time: 100 },
+            Observation { wg: 8, ts: 2, size: 64, time: 40 },
+            Observation { wg: 32, ts: 2, size: 64, time: 90 },
+        ];
+        let t = Tuning { wg: 8, ts: 2 };
+        let p = predict(&obs, t, 64, 2);
+        assert!(p > 0.0 && p.is_finite());
+        // an exact-coordinate observation dominates its own prediction
+        assert!((p - 40.0).abs() < 5.0, "prediction {} far from the exact neighbor", p);
+        assert_eq!(p.to_bits(), predict(&obs, t, 64, 2).to_bits(), "must be deterministic");
+    }
+
+    #[test]
+    fn eval_cap_stays_strictly_below_lattice() {
+        let cfg = SurrogateOptions::default();
+        for l in 4..200 {
+            let cap = eval_cap(&cfg, l);
+            assert!(cap >= 1);
+            assert!(cap + 1 < l || l < 4, "cap {} + certificate not < lattice {}", cap, l);
+        }
+    }
+
+    #[test]
+    fn sparse_observations_fall_back_to_exhaustive() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let (opt_time, _) = m.optimum();
+        let lattice = enumerate_tunings(64).unwrap();
+        let rep = surrogate_tune(
+            &m,
+            &CheckOptions::default(),
+            &SwarmConfig::default(),
+            Some(100_000),
+            &lattice,
+            64,
+            &[],
+            &SurrogateOptions::default(),
+        )
+        .unwrap();
+        assert!(rep.fell_back);
+        assert_eq!(rep.result.t_min, opt_time as i64);
+        assert!(rep.oracle_calls > 0);
+        assert!(!rep.evals.is_empty(), "fallback still harvests the optimum");
+    }
+
+    #[test]
+    fn seeded_surrogate_matches_exhaustive_with_fewer_oracle_calls() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let (opt_time, _) = m.optimum();
+        let lattice = enumerate_tunings(64).unwrap();
+        let seeds = seeds_for(&m, 64, 5);
+        let rep = surrogate_tune(
+            &m,
+            &CheckOptions::default(),
+            &SwarmConfig::default(),
+            Some(100_000),
+            &lattice,
+            64,
+            &seeds,
+            &SurrogateOptions::default(),
+        )
+        .unwrap();
+        assert!(!rep.fell_back);
+        assert_eq!(rep.result.t_min, opt_time as i64);
+        let w = Tuning { wg: rep.result.optimal.wg, ts: rep.result.optimal.ts };
+        assert_eq!(m.predicted_time(w), opt_time, "witness must achieve the optimum");
+        assert!(
+            rep.oracle_calls < lattice.len() as u64,
+            "{} oracle calls not below lattice {}",
+            rep.oracle_calls,
+            lattice.len()
+        );
+        assert!(rep.proposals > 0);
+        assert!(rep.evals.iter().all(|e| e.time != i64::MAX));
+    }
+
+    #[test]
+    fn poisoned_seeds_cannot_change_the_answer() {
+        let m = MinModel::paper(64, 4).unwrap();
+        let (opt_time, _) = m.optimum();
+        let lattice = enumerate_tunings(64).unwrap();
+        // adversarial garbage: absurd times, off-lattice coordinates,
+        // near-duplicates disagreeing with each other
+        let seeds = vec![
+            Observation { wg: 2, ts: 2, size: 64, time: 1 },
+            Observation { wg: 2, ts: 2, size: 64, time: i64::MAX / 2 },
+            Observation { wg: 999, ts: 777, size: 64, time: -5 },
+            Observation { wg: 32, ts: 2, size: 16, time: 0 },
+        ];
+        let rep = surrogate_tune(
+            &m,
+            &CheckOptions::default(),
+            &SwarmConfig::default(),
+            Some(100_000),
+            &lattice,
+            64,
+            &seeds,
+            &SurrogateOptions::default(),
+        )
+        .unwrap();
+        assert!(!rep.fell_back);
+        assert_eq!(rep.result.t_min, opt_time as i64, "certificate must override the poison");
+    }
+}

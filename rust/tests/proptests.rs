@@ -251,9 +251,15 @@ fn prop_task_manifests_roundtrip() {
         job.granularity =
             if r.chance(1, 2) { Granularity::Tick } else { Granularity::Phase };
         job.shards = r.below(9) as u32;
-        let store = match r.below(3) {
+        job.search = if r.chance(1, 2) {
+            mcautotune::tuner::SearchMode::Surrogate
+        } else {
+            mcautotune::tuner::SearchMode::Exhaustive
+        };
+        let store = match r.below(4) {
             0 => StoreKind::Full,
             1 => StoreKind::HashCompact,
+            2 => StoreKind::Spill,
             _ => StoreKind::Bitstate {
                 log2_bits: r.range_i64(10, 30) as u8,
                 hashes: r.range_i64(1, 7) as u8,
@@ -279,6 +285,17 @@ fn prop_task_manifests_roundtrip() {
             threads: r.below(64) as u32,
             expected_states: r.next_u64(),
             frontier: if r.chance(1, 2) { Frontier::Async } else { Frontier::Deterministic },
+            por: r.chance(1, 2),
+            compress: if r.chance(1, 3) {
+                mcautotune::checker::Compression::Collapse
+            } else {
+                mcautotune::checker::Compression::None
+            },
+            spill_dir: if r.chance(1, 2) {
+                None
+            } else {
+                Some(std::path::PathBuf::from(format!("/tmp/spill π {}", r.below(100))))
+            },
         };
         TaskSpec {
             id: format!("j{:03}-s{:03}", r.below(40), r.below(16)),
@@ -296,6 +313,14 @@ fn prop_task_manifests_roundtrip() {
                 weight: r.next_u64(),
                 t_ini: r.range_i64(1, i64::MAX / 2),
                 check,
+                seeds: (0..r.below(4))
+                    .map(|_| mcautotune::tuner::Observation {
+                        wg: r.below(1 << 10) as u32,
+                        ts: r.below(1 << 10) as u32,
+                        size: r.below(1 << 20) as u32,
+                        time: r.range_i64(1, i64::MAX / 4),
+                    })
+                    .collect(),
             },
             swarm: SwarmConfig {
                 workers: r.range_i64(1, 32) as u32,
@@ -349,6 +374,7 @@ fn lease_atomicity_exactly_one_winner_per_task_under_racing_threads() {
                 weight: 1,
                 t_ini: 1,
                 check: CheckOptions::default(),
+                seeds: Vec::new(),
             },
             swarm: SwarmConfig::default(),
         })

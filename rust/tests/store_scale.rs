@@ -97,6 +97,42 @@ fn collapse_strictly_shrinks_the_store_on_minimum_8() {
     );
 }
 
+/// Region-aware hash-compact (`--store compact --compress collapse`):
+/// equivalent verdict and counts to both the full baseline and the exact
+/// collapse store on a collision-free space, with a footprint at or below
+/// the exact collapse store's (it keeps the component tables but replaces
+/// the per-state tuple copy with one 8-byte hash).
+#[test]
+fn compact_collapse_matches_exact_stores_on_minimum_8() {
+    let src = templates::minimum_pml(8, 4, 3);
+    let prop = SafetyLtl::parse("G(!FIN)").unwrap();
+    let vm = PromelaVm::from_source(&src).unwrap();
+    let base_opts = CheckOptions { collect_all: true, ..CheckOptions::default() };
+    let col_opts = CheckOptions { compress: Compression::Collapse, ..base_opts.clone() };
+    let cc_opts = CheckOptions { store: StoreKind::HashCompact, ..col_opts.clone() };
+
+    let base = check(&vm, &prop, &base_opts).unwrap();
+    let col = check(&vm, &prop, &col_opts).unwrap();
+    let cc = check(&vm, &prop, &cc_opts).unwrap();
+    assert_eq!(base.exhausted, cc.exhausted);
+    assert_eq!(base.stats.states_stored, cc.stats.states_stored);
+    assert_eq!(base.stats.states_matched, cc.stats.states_matched);
+    assert_eq!(base.stats.transitions, cc.stats.transitions);
+    assert_eq!(base.violations.len(), cc.violations.len());
+    assert!(
+        cc.stats.bytes_used <= col.stats.bytes_used,
+        "compact+collapse must not exceed exact collapse ({} vs {})",
+        cc.stats.bytes_used,
+        col.stats.bytes_used
+    );
+    assert!(
+        cc.stats.bytes_used < base.stats.bytes_used,
+        "compact+collapse must strictly shrink store.bytes_peak ({} vs {})",
+        cc.stats.bytes_used,
+        base.stats.bytes_used
+    );
+}
+
 /// Collapse on a model without a native region split (the default
 /// single-region `encode_regions`) stays exact: same results, and the
 /// indirection overhead is bounded (tuple table + one component per

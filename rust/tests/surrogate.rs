@@ -1,0 +1,335 @@
+//! Surrogate-guided search acceptance (ISSUE 10): the differential
+//! guarantee (`--search surrogate` returns the *identical* optimum to
+//! exhaustive tuning — cold, warm, or adversarially poisoned), the
+//! oracle-call economy (strictly fewer checker invocations than both the
+//! lattice size and the exhaustive bisection on warm runs), and the
+//! determinism contract (`--frontier det` traces byte-identical across
+//! re-runs and thread counts, search events included).
+
+use mcautotune::checker::CheckOptions;
+use mcautotune::coordinator::{ModelKind, ResultCache, TuningJob};
+use mcautotune::model::TransitionSystem;
+use mcautotune::obs::deterministic_lines;
+use mcautotune::platform::{
+    enumerate_tunings, AbstractModel, DataInit, Granularity, MinModel, PlatformConfig,
+};
+use mcautotune::swarm::SwarmConfig;
+use mcautotune::tuner::{
+    surrogate_tune, tune, Method, Observation, SurrogateOptions, SurrogateReport,
+};
+use mcautotune::util::prop::{forall, Config};
+use mcautotune::{prop_assert, prop_assert_eq};
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+const BIN: &str = env!("CARGO_BIN_EXE_mcautotune");
+const T_INI: Option<i64> = Some(1 << 17);
+
+fn surrogate<M>(m: &M, size: u32, seeds: &[Observation]) -> SurrogateReport
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let lattice = enumerate_tunings(size).unwrap();
+    surrogate_tune(
+        m,
+        &CheckOptions::default(),
+        &SwarmConfig::default(),
+        T_INI,
+        &lattice,
+        size,
+        seeds,
+        &SurrogateOptions::default(),
+    )
+    .unwrap()
+}
+
+/// Adversarial cache contents: absurd times, off-lattice coordinates,
+/// contradicting near-duplicates — enough rows to clear `min_obs`, wrong
+/// enough that a trusting proposer would rank the lattice upside down.
+fn poison(size: u32) -> Vec<Observation> {
+    vec![
+        Observation { wg: 1, ts: 1, size, time: 1 },
+        Observation { wg: 1, ts: 1, size, time: i64::MAX / 4 },
+        Observation { wg: 4096, ts: 4096, size, time: -9 },
+        Observation { wg: 2, ts: 2, size: size.max(2) / 2, time: 0 },
+    ]
+}
+
+/// The core differential: exhaustive once, then surrogate with an empty
+/// cache (must fall back, same optimum) and with a poisoned cache (must
+/// take the surrogate path, certificate must force the same optimum,
+/// oracle calls must stay strictly below the lattice size).
+fn differential<M>(name: &str, m: &M, size: u32)
+where
+    M: TransitionSystem + Sync,
+    M::State: Send,
+{
+    let ex = tune(m, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), T_INI)
+        .unwrap();
+
+    let cold = surrogate(m, size, &[]);
+    assert!(cold.fell_back, "{}: empty cache must fall back", name);
+    assert_eq!(cold.result.t_min, ex.t_min, "{}: fallback t_min", name);
+    assert_eq!(
+        (cold.result.optimal.wg, cold.result.optimal.ts),
+        (ex.optimal.wg, ex.optimal.ts),
+        "{}: fallback witness",
+        name
+    );
+
+    let rep = surrogate(m, size, &poison(size));
+    assert!(!rep.fell_back, "{}: poisoned cache clears min_obs", name);
+    assert_eq!(rep.result.t_min, ex.t_min, "{}: poisoned t_min", name);
+    assert_eq!(
+        (rep.result.optimal.wg, rep.result.optimal.ts),
+        (ex.optimal.wg, ex.optimal.ts),
+        "{}: poisoned witness",
+        name
+    );
+    let lattice = enumerate_tunings(size).unwrap().len() as u64;
+    assert!(
+        rep.oracle_calls < lattice,
+        "{}: {} oracle calls not below the {}-config lattice",
+        name,
+        rep.oracle_calls,
+        lattice
+    );
+    assert!(rep.proposals > 0, "{}: surrogate path must propose", name);
+}
+
+// ------------------------------------------------- differential corpus --
+
+/// 17 tunable models spanning both native families, sizes 16..=128, three
+/// GMT ratios, PE-count variety, and both granularities. Every one must
+/// satisfy the cold and poisoned differential.
+#[test]
+fn surrogate_matches_exhaustive_on_the_17_model_corpus() {
+    let mut n = 0;
+    for &size in &[16u32, 32, 64] {
+        for &gmt in &[2u32, 3, 4] {
+            let m = MinModel::new(size, 4, gmt, DataInit::Descending, Granularity::Phase).unwrap();
+            differential(&format!("min-{}-gmt{}", size, gmt), &m, size);
+            n += 1;
+        }
+    }
+    differential("min-128-paper", &MinModel::paper(128, 4).unwrap(), 128);
+    n += 1;
+    for &(size, np) in &[(16u32, 2u32), (32, 8)] {
+        let m = MinModel::new(size, np, 3, DataInit::Descending, Granularity::Phase).unwrap();
+        differential(&format!("min-{}-np{}", size, np), &m, size);
+        n += 1;
+    }
+    let m = MinModel::new(16, 4, 3, DataInit::Descending, Granularity::Tick).unwrap();
+    differential("min-16-tick", &m, 16);
+    n += 1;
+    for &size in &[16u32, 32, 64] {
+        let m = AbstractModel::new(size, PlatformConfig::default(), Granularity::Phase).unwrap();
+        differential(&format!("abs-{}", size), &m, size);
+        n += 1;
+    }
+    let m = AbstractModel::new(16, PlatformConfig::default(), Granularity::Tick).unwrap();
+    differential("abs-16-tick", &m, 16);
+    n += 1;
+    assert_eq!(n, 17, "the corpus contract is exactly 17 models");
+}
+
+// ------------------------------------------------- oracle-call economy --
+
+/// Warm-start across input sizes of one family: observations harvested
+/// from exhaustive tunes at 16/32/64 drive a surrogate run at 128 that
+/// (a) takes the surrogate path, (b) returns the identical optimum, and
+/// (c) spends strictly fewer checker invocations than both the lattice
+/// and the exhaustive bisection it replaces.
+#[test]
+fn warm_observations_cut_oracle_calls_below_the_exhaustive_count() {
+    use mcautotune::tuner::harvest_observations;
+    let mut seeds = Vec::new();
+    for &size in &[16u32, 32, 64] {
+        let m = MinModel::paper(size, 4).unwrap();
+        let r =
+            tune(&m, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), T_INI)
+                .unwrap();
+        seeds.extend(harvest_observations(&r, size));
+    }
+    assert!(seeds.len() >= 3, "three sizes must harvest >= min_obs rows, got {}", seeds.len());
+
+    let m = MinModel::paper(128, 4).unwrap();
+    let ex = tune(&m, Method::Exhaustive, &CheckOptions::default(), &SwarmConfig::default(), T_INI)
+        .unwrap();
+    let exhaustive_calls = ex.log.len() as u64; // one log line per Cex(T) query
+    let rep = surrogate(&m, 128, &seeds);
+    assert!(!rep.fell_back);
+    assert_eq!(rep.result.t_min, ex.t_min);
+    let lattice = enumerate_tunings(128).unwrap().len() as u64;
+    assert!(rep.oracle_calls < lattice, "{} vs lattice {}", rep.oracle_calls, lattice);
+    assert!(
+        rep.oracle_calls < exhaustive_calls,
+        "warm surrogate must undercut the exhaustive bisection: {} vs {}",
+        rep.oracle_calls,
+        exhaustive_calls
+    );
+}
+
+// ------------------------------------------------------- determinism --
+
+/// Same inputs → the same report, field for field (the exploration RNG
+/// is seeded, k-NN ties break canonically, the oracle is deterministic).
+#[test]
+fn surrogate_reports_are_reproducible_in_process() {
+    let m = MinModel::paper(64, 4).unwrap();
+    let seeds = poison(64);
+    let a = surrogate(&m, 64, &seeds);
+    let b = surrogate(&m, 64, &seeds);
+    assert_eq!(a.result.t_min, b.result.t_min);
+    assert_eq!((a.result.optimal.wg, a.result.optimal.ts), (b.result.optimal.wg, b.result.optimal.ts));
+    assert_eq!(a.oracle_calls, b.oracle_calls);
+    assert_eq!(a.proposals, b.proposals);
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.result.log, b.result.log);
+}
+
+fn temp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "mcat_surr_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn run_bin(args: &[&str]) -> String {
+    let out = Command::new(BIN).args(args).output().expect("spawn mcautotune");
+    assert!(
+        out.status.success(),
+        "mcautotune {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn search_lines(text: &str) -> Vec<String> {
+    text.lines().filter(|l| l.contains("\"k\":\"search\"")).map(String::from).collect()
+}
+
+/// `tune --search surrogate --frontier det`: the run event and every
+/// content-only `search` event must be byte-identical across re-runs and
+/// across thread counts. Each run gets its own copy of an identically
+/// seeded cache (a shared cache would turn the later runs into lookup
+/// hits and erase the search events being compared).
+#[test]
+fn cli_surrogate_det_traces_byte_identical_across_runs_and_threads() {
+    let seed_cache = temp("seedcache");
+    {
+        let job = TuningJob::new(ModelKind::Minimum, 32);
+        let family = job.obs_family();
+        let mut c = ResultCache::open(&seed_cache).unwrap();
+        c.record_observation(&family, Observation { wg: 4, ts: 2, size: 16, time: 300 });
+        c.record_observation(&family, Observation { wg: 8, ts: 2, size: 16, time: 200 });
+        c.record_observation(&family, Observation { wg: 8, ts: 4, size: 64, time: 900 });
+        c.save().unwrap();
+    }
+
+    let mut traces = Vec::new();
+    for (i, threads) in ["1", "1", "4"].iter().enumerate() {
+        let cache = temp(&format!("cache{}", i));
+        std::fs::copy(&seed_cache, &cache).unwrap();
+        let trace = temp(&format!("trace{}", i));
+        run_bin(&[
+            "tune",
+            "--model",
+            "minimum",
+            "--size",
+            "32",
+            "--search",
+            "surrogate",
+            "--cache",
+            cache.to_str().unwrap(),
+            "--frontier",
+            "det",
+            "--threads",
+            threads,
+            "--trace",
+            trace.to_str().unwrap(),
+        ]);
+        let text = std::fs::read_to_string(&trace).unwrap();
+        mcautotune::obs::validate(&text).unwrap();
+        // 3 seeded observations clear min_obs: the surrogate path ran
+        let s = search_lines(&text);
+        assert!(
+            s.iter().any(|l| l.contains("\"kind\":\"certificate\"")),
+            "run {} must reach the certificate (no fallback):\n{}",
+            i,
+            text
+        );
+        assert!(!s.iter().any(|l| l.contains("\"kind\":\"fallback\"")), "run {} fell back", i);
+        // the surrogate run records its exact evals for future warm-starts
+        let c = ResultCache::open(&cache).unwrap();
+        assert!(c.observation_count() > 3, "run {} must add observations", i);
+        traces.push(text);
+        std::fs::remove_file(&cache).ok();
+        std::fs::remove_file(&trace).ok();
+    }
+    let (a, b, c) = (&traces[0], &traces[1], &traces[2]);
+    assert_eq!(deterministic_lines(a), deterministic_lines(b), "re-run changed the run event");
+    assert_eq!(deterministic_lines(a), deterministic_lines(c), "threads changed the run event");
+    let sa = search_lines(a);
+    assert!(!sa.is_empty(), "surrogate runs must emit search events");
+    assert_eq!(sa, search_lines(b), "re-run changed the search events");
+    assert_eq!(sa, search_lines(c), "thread count changed the search events");
+    assert!(
+        deterministic_lines(a)[0].contains("\"search\":\"surrogate\""),
+        "run event must carry the search mode: {}",
+        deterministic_lines(a)[0]
+    );
+    std::fs::remove_file(&seed_cache).ok();
+}
+
+// --------------------------------------------------------- property --
+
+/// Randomized minimum models and randomized (possibly garbage) seed
+/// observations: the surrogate answer always equals the closed-form
+/// optimum, and the oracle-call bound holds whenever the surrogate path
+/// is taken.
+#[test]
+fn prop_surrogate_matches_the_closed_form_optimum() {
+    forall(
+        "surrogate == closed-form optimum",
+        Config { cases: 10, ..Default::default() },
+        |r| {
+            let size = 16u32 << r.below(3); // 16 | 32 | 64
+            let np = 2u32 << r.below(3); // 2 | 4 | 8
+            let gmt = 2 + r.below(4) as u32;
+            let seeds: Vec<Observation> = (0..3 + r.below(4))
+                .map(|_| Observation {
+                    wg: 1u32 << r.below(8),
+                    ts: 1u32 << r.below(8),
+                    size: 16u32 << r.below(3),
+                    time: r.below(1 << 20) as i64 - 1000,
+                })
+                .collect();
+            (size, np, gmt, seeds)
+        },
+        |(size, np, gmt, seeds)| {
+            let m = MinModel::new(*size, *np, *gmt, DataInit::Descending, Granularity::Phase)
+                .map_err(|e| e.to_string())?;
+            let (opt_time, _) = m.optimum();
+            let rep = surrogate(&m, *size, seeds);
+            prop_assert_eq!(rep.result.t_min, opt_time as i64);
+            if !rep.fell_back {
+                let lattice = enumerate_tunings(*size).unwrap().len() as u64;
+                prop_assert!(
+                    rep.oracle_calls < lattice,
+                    "{} oracle calls on a {}-config lattice",
+                    rep.oracle_calls,
+                    lattice
+                );
+            }
+            Ok(())
+        },
+    );
+}

@@ -18,6 +18,10 @@
 # (explore/collapse row; < 1.0 = COLLAPSE interning pays), and
 # spill_slowdown_ratio is explore/spill vs explore/pml-seq wall time
 # under a 512 KiB budget that forces frozen runs to disk.
+# surrogate_eval_fraction is the tune/surrogate vs tune/exhaustive
+# checker-invocation ratio on a warm observation store (< 1.0 = the
+# cache-seeded proposer replaces full-lattice Cex sweeps with point
+# evaluations; both rows tune the same model to the identical optimum).
 set -euo pipefail
 if ! command -v cargo >/dev/null 2>&1; then
   echo "error: cargo not found — measuring BENCH_checker.json needs a Rust toolchain" >&2
